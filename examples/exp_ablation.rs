@@ -1,0 +1,47 @@
+//! Table 4 reproduction: ablations on learnability (sigma/omega/T),
+//! node count S, adaptive allocation, and mask regularisation — plus a
+//! bonus linear-vs-quadratic mode row (DESIGN.md R2).
+//!
+//! Run: cargo run --release --example exp_ablation
+
+use anyhow::Result;
+use stlt::harness::{self, Table};
+use stlt::runtime::{default_artifacts_dir, Manifest, Runtime};
+
+const VARIANTS: &[(&str, &str)] = &[
+    ("lm_stlt_adaptive_tiny", "Full (adaptive S_max=64, learn sigma/omega/T)"),
+    ("lm_abl_fixed_all_tiny", "Fixed sigma,omega,T (hand-tuned)"),
+    ("lm_abl_no_omega_tiny", "omega=0 (no oscillation)"),
+    ("lm_abl_fixed_sigma_tiny", "Fixed sigma (log-spaced)"),
+    ("lm_abl_fixed_t_tiny", "Fixed T"),
+    ("lm_abl_s16_tiny", "Fixed S=16"),
+    ("lm_stlt_fixed32_tiny", "Fixed S=32"),
+    ("lm_abl_s64_tiny", "Fixed S=64"),
+    ("lm_abl_noreg_tiny", "No mask regularisation"),
+    ("lm_abl_quadratic_tiny", "Quadratic (figure-faithful) mode"),
+];
+
+fn main() -> Result<()> {
+    stlt::util::logging::init();
+    let manifest = Manifest::load(default_artifacts_dir())?;
+    let rt = Runtime::cpu()?;
+    let steps = harness::exp_steps(300);
+    let mut table = Table::new(
+        &format!("Table 4 analogue: STLT ablations ({steps} steps)"),
+        &["ppl", "s_eff", "params"],
+    );
+    for &(v, label) in VARIANTS {
+        let (state, _) = harness::train_or_load(&rt, &manifest, v, steps, 0)?;
+        let (ppl, s_eff) = harness::short_ppl(&rt, &manifest, v, &state.flat, 8, 0.0, 0)?;
+        let params = manifest.get(&format!("{v}.train"))?.param_count;
+        let row = table.row(label);
+        row.insert("ppl".into(), format!("{ppl:.2}"));
+        row.insert("s_eff".into(), format!("{s_eff:.1}"));
+        row.insert("params".into(), format!("{params}"));
+        stlt::info!("exp_abl", "{label}: ppl {ppl:.2} s_eff {s_eff:.1}");
+    }
+    println!("{}", table.render());
+    table.save_json("table4")?;
+    println!("(paper shape: full model best; fixed-everything and omega=0 worst; S=16 under-provisioned)");
+    Ok(())
+}

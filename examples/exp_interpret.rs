@@ -1,0 +1,78 @@
+//! §4.5 reproduction: interpretability of learned parameters.
+//!
+//! Dumps per-layer learned sigma spectra (-> token-relevance half-lives
+//! ln2/sigma), oscillation frequencies omega, window bandwidths T, and
+//! (for adaptive models) the expected S_eff — the quantities the paper
+//! reads tea leaves from. Requires a trained checkpoint (exp_lm
+//! produces one; this example trains on demand otherwise).
+//!
+//! Run: cargo run --release --example exp_interpret
+
+use anyhow::Result;
+use stlt::harness;
+use stlt::interpret;
+use stlt::runtime::{default_artifacts_dir, Manifest, Runtime};
+use stlt::util::json::Json;
+
+fn main() -> Result<()> {
+    stlt::util::logging::init();
+    let manifest = Manifest::load(default_artifacts_dir())?;
+    let rt = Runtime::cpu()?;
+    let steps = harness::exp_steps(150);
+    let v = "lm_stlt_adaptive_tiny";
+    let (state, _) = harness::train_or_load(&rt, &manifest, v, steps, 0)?;
+    let cfg = &manifest.get(&format!("{v}.train"))?.config;
+
+    println!("{}", interpret::inspect_stlt_params(&state.flat, cfg));
+
+    // init-vs-learned comparison: how far training moved the nodes
+    let entry = manifest.get(&format!("{v}.train"))?;
+    let init = stlt::runtime::exec::load_init_vec(
+        entry.init_file.as_ref().expect("init vec"),
+        entry.param_count,
+    )?;
+    let learned = interpret::extract_nodes(&state.flat, cfg);
+    let initial = interpret::extract_nodes(&init, cfg);
+    println!("## parameter drift (init -> learned)");
+    let mut rows = Vec::new();
+    for (l0, l1) in initial.iter().zip(&learned) {
+        let dsig: f32 = l0
+            .sigma
+            .iter()
+            .zip(&l1.sigma)
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f32>()
+            / l0.sigma.len() as f32;
+        let dom: f32 = l0
+            .omega
+            .iter()
+            .zip(&l1.omega)
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f32>()
+            / l0.omega.len() as f32;
+        println!(
+            "  layer {}: mean |d sigma| {:.4}  mean |d omega| {:.4}  T {:.2} -> {:.2}",
+            l0.layer, dsig, dom, l0.t, l1.t
+        );
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("layer".to_string(), Json::Num(l0.layer as f64));
+        m.insert(
+            "sigma".to_string(),
+            Json::Arr(l1.sigma.iter().map(|&x| Json::Num(x as f64)).collect()),
+        );
+        m.insert(
+            "omega".to_string(),
+            Json::Arr(l1.omega.iter().map(|&x| Json::Num(x as f64)).collect()),
+        );
+        m.insert("t".to_string(), Json::Num(l1.t as f64));
+        m.insert(
+            "half_lives".to_string(),
+            Json::Arr(l1.half_lives.iter().map(|&x| Json::Num(x as f64)).collect()),
+        );
+        rows.push(Json::Obj(m));
+    }
+    let out = harness::results_dir().join("interpret.json");
+    std::fs::write(&out, Json::Arr(rows).to_string())?;
+    println!("wrote {}", out.display());
+    Ok(())
+}

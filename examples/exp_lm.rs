@@ -1,0 +1,60 @@
+//! Table 1 reproduction: language-modeling perplexity, short context
+//! (WikiText-103 analogue) and long-document streaming/chunked context
+//! (Project Gutenberg analogue). See DESIGN.md §3 for the dataset
+//! substitution and §5 for the experiment index.
+//!
+//! Run: cargo run --release --example exp_lm   (STLT_STEPS=NN to scale)
+
+use anyhow::Result;
+use stlt::harness::{self, Table};
+use stlt::runtime::{default_artifacts_dir, Manifest, Runtime};
+
+const VARIANTS: &[&str] = &[
+    "lm_vanilla_tiny",
+    "lm_linformer_tiny",
+    "lm_fnet_tiny",
+    "lm_ssm_tiny",
+    "lm_stlt_fixed32_tiny",
+    "lm_stlt_adaptive_tiny",
+];
+
+fn main() -> Result<()> {
+    stlt::util::logging::init();
+    let manifest = Manifest::load(default_artifacts_dir())?;
+    let rt = Runtime::cpu()?;
+    let steps = harness::exp_steps(300);
+    let long_len = harness::env_u64("STLT_LONG_LEN", 4096) as usize;
+    let mut table = Table::new(
+        &format!("Table 1 analogue: LM perplexity ({steps} steps, synthetic corpus)"),
+        &["params", "ppl_short", "ppl_long", "long_mode", "s_eff"],
+    );
+
+    for &v in VARIANTS {
+        let t0 = std::time::Instant::now();
+        let (state, report) = harness::train_or_load(&rt, &manifest, v, steps, 0)?;
+        let (ppl_short, s_eff) = harness::short_ppl(&rt, &manifest, v, &state.flat, 8, 0.0, 0)?;
+        let is_stlt = v.contains("stlt");
+        let (ppl_long, mode) = if is_stlt {
+            (harness::stream_ppl(&rt, &manifest, v, &state.flat, long_len, 77)?, "stream")
+        } else {
+            (harness::chunked_ppl(&rt, &manifest, v, &state.flat, long_len, 77)?, "chunked")
+        };
+        let params = manifest.get(&format!("{v}.train"))?.param_count;
+        let row = table.row(v);
+        row.insert("params".into(), format!("{params}"));
+        row.insert("ppl_short".into(), format!("{ppl_short:.2}"));
+        row.insert("ppl_long".into(), format!("{ppl_long:.2}"));
+        row.insert("long_mode".into(), mode.into());
+        row.insert("s_eff".into(), format!("{s_eff:.1}"));
+        stlt::info!(
+            "exp_lm",
+            "{v}: short {ppl_short:.2} long {ppl_long:.2} ({:.0}s{})",
+            t0.elapsed().as_secs_f64(),
+            report.map(|r| format!(", {:.0} tok/s", r.tokens_per_s)).unwrap_or_default()
+        );
+    }
+    println!("{}", table.render());
+    table.save_json("table1")?;
+    println!("(paper shape: STLT < Linformer/FNet on ppl, ≈ SSM; streaming wins on long docs)");
+    Ok(())
+}

@@ -1,0 +1,98 @@
+//! §4.6 reproduction: computational efficiency and scalability.
+//!
+//! Measures forward wall-clock vs sequence length for linear-mode STLT,
+//! quadratic-mode STLT (figure-faithful) and vanilla attention, fits the
+//! scaling exponent, and reports the streaming state footprint (O(S d),
+//! constant in N) against an attention KV-cache model (O(N d)).
+//!
+//! Run: cargo run --release --example exp_scaling
+
+use anyhow::Result;
+use stlt::bench::{bench_for, fmt_time};
+use stlt::harness::Table;
+use stlt::runtime::{default_artifacts_dir, exec::init_vec_host, Forward, Manifest, Runtime, StreamStep};
+
+fn fit_exponent(points: &[(usize, f64)]) -> f64 {
+    // least-squares slope in log-log space
+    let n = points.len() as f64;
+    let (mut sx, mut sy, mut sxx, mut sxy) = (0.0, 0.0, 0.0, 0.0);
+    for &(x, y) in points {
+        let lx = (x as f64).ln();
+        let ly = y.ln();
+        sx += lx;
+        sy += ly;
+        sxx += lx * lx;
+        sxy += lx * ly;
+    }
+    (n * sxy - sx * sy) / (n * sxx - sx * sx)
+}
+
+fn sweep(
+    rt: &Runtime,
+    manifest: &Manifest,
+    prefix: &str,
+    ns: &[usize],
+) -> Result<Vec<(usize, f64)>> {
+    let mut out = Vec::new();
+    for &n in ns {
+        let name = format!("{prefix}{n}.fwd");
+        let fwd = Forward::new(rt, manifest, &name)?;
+        let entry = manifest.get(&name)?;
+        let flat = init_vec_host(entry.param_count, 1);
+        let tokens: Vec<i32> = (0..n as i32).map(|i| 4 + (i % 200)).collect();
+        let r = bench_for(&name, 1.0, || {
+            let _ = fwd.run(&flat, &tokens).unwrap();
+        });
+        stlt::info!("exp_scaling", "{name}: p50 {}", fmt_time(r.p50_s));
+        out.push((n, r.p50_s));
+    }
+    Ok(out)
+}
+
+fn main() -> Result<()> {
+    stlt::util::logging::init();
+    let manifest = Manifest::load(default_artifacts_dir())?;
+    let rt = Runtime::cpu()?;
+
+    let stlt_pts = sweep(&rt, &manifest, "scale_stlt_n", &[256, 512, 1024, 2048, 4096])?;
+    let stltq_pts = sweep(&rt, &manifest, "scale_stltq_n", &[256, 512, 1024])?;
+    let van_pts = sweep(&rt, &manifest, "scale_vanilla_n", &[256, 512, 1024, 2048])?;
+
+    let mut table = Table::new(
+        "§4.6 analogue: forward latency vs N (d=64, 2 layers, 1-core CPU PJRT)",
+        &["n256", "n512", "n1024", "n2048", "n4096", "exponent"],
+    );
+    for (label, pts) in [
+        ("stlt linear O(N S d)", &stlt_pts),
+        ("stlt quadratic (fig.1)", &stltq_pts),
+        ("vanilla attention O(N^2)", &van_pts),
+    ] {
+        let row = table.row(label);
+        for (n, t) in pts {
+            row.insert(format!("n{n}"), fmt_time(*t));
+        }
+        row.insert("exponent".into(), format!("{:.2}", fit_exponent(pts)));
+    }
+    println!("{}", table.render());
+    table.save_json("fig_scaling")?;
+
+    // memory: streaming state is constant in N; attention KV grows linearly
+    let stream = StreamStep::new(&rt, &manifest, "lm_stlt_tiny.stream")?;
+    let carry = stream.zero_carry();
+    let entry = manifest.get("lm_stlt_tiny.stream")?;
+    let d = entry.config.d_model;
+    let layers = entry.config.n_layers;
+    println!("\n## streaming state vs attention KV (per sequence)");
+    println!("{:>10} {:>16} {:>16}", "N", "stlt carry", "attention KV");
+    for n in [1024usize, 8192, 65536, 131072] {
+        let kv = 2 * layers * n * d * 4; // K+V per layer, f32
+        println!(
+            "{:>10} {:>16} {:>16}",
+            n,
+            format!("{} KB", carry.state_bytes() / 1024),
+            format!("{} KB", kv / 1024)
+        );
+    }
+    println!("\n(paper shape: linear-mode exponent ~1, attention ~2; carry constant in N)");
+    Ok(())
+}

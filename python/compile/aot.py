@@ -1,0 +1,314 @@
+"""AOT lowering driver: jax -> HLO *text* -> artifacts/ + manifest.json.
+
+HLO text (not `.serialize()`) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from python/):
+    python -m compile.aot --outdir ../artifacts --groups core,table1
+    python -m compile.aot --outdir ../artifacts            # everything
+
+The manifest records, per entry: the HLO file, input/output shapes &
+dtypes, the ModelConfig, and the parameter count — everything the Rust
+runtime (rust/src/runtime/artifact.rs) needs to drive execution without
+ever importing Python.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import optim, seq2seq, train
+from .config import ModelConfig, preset
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_of(x):
+    if isinstance(x, jax.ShapeDtypeStruct):
+        return {"dtype": np.dtype(x.dtype).name, "shape": list(x.shape)}
+    return {"dtype": np.dtype(x.dtype).name, "shape": list(np.shape(x))}
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+class Builder:
+    def __init__(self, outdir):
+        self.outdir = outdir
+        self.entries = {}
+        os.makedirs(outdir, exist_ok=True)
+
+    def lower(self, name, fn, args, cfg: ModelConfig | None, extra=None):
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*args)
+        # jax prunes arguments the graph never uses (e.g. `seed` in
+        # baselines without stochastic ops); record which inputs survive
+        # so the Rust runtime can filter its argument list to match.
+        n_in = len(jax.tree_util.tree_leaves(args))
+        try:
+            kept = sorted(lowered._lowering.compile_args["kept_var_idx"])
+        except Exception:
+            kept = list(range(n_in))
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.outdir, fname), "w") as f:
+            f.write(text)
+        out_avals = jax.eval_shape(fn, *args)
+        if not isinstance(out_avals, (tuple, list)):
+            out_avals = (out_avals,)
+        flat_out, _ = jax.tree_util.tree_flatten(out_avals)
+        entry = {
+            "file": fname,
+            "inputs": [_spec_of(a) for a in jax.tree_util.tree_leaves(args)],
+            "outputs": [_spec_of(a) for a in flat_out],
+            "kept_inputs": kept,
+        }
+        if cfg is not None:
+            entry["config"] = cfg.to_dict()
+        if extra:
+            entry.update(extra)
+        self.entries[name] = entry
+        print(f"  lowered {name:42s} {len(text)/1e6:6.2f} MB  {time.time()-t0:5.1f}s",
+              flush=True)
+
+    def write_manifest(self):
+        path = os.path.join(self.outdir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump({"version": 1, "entries": self.entries}, f, indent=1, sort_keys=True)
+        print(f"wrote {path} ({len(self.entries)} entries)")
+
+
+# ---------------------------------------------------------------------------
+# Model variants (Tables 1, 2, 4 + scaling + e2e)
+# ---------------------------------------------------------------------------
+
+LM_VARIANTS = {
+    # Table 1 rows (tiny scale)
+    "vanilla": dict(arch="vanilla"),
+    "linformer": dict(arch="linformer"),
+    "fnet": dict(arch="fnet"),
+    "ssm": dict(arch="ssm"),
+    "stlt_fixed32": dict(arch="stlt", s_max=32, adaptive=False),
+    "stlt_adaptive": dict(arch="stlt", s_max=64, adaptive=True),
+    # Table 4 ablations
+    "abl_fixed_all": dict(arch="stlt", s_max=32, adaptive=False,
+                          learn_sigma=False, learn_omega=False, learn_t=False),
+    "abl_no_omega": dict(arch="stlt", s_max=32, adaptive=False, omega_zero=True),
+    "abl_fixed_sigma": dict(arch="stlt", s_max=32, adaptive=False, learn_sigma=False),
+    "abl_fixed_t": dict(arch="stlt", s_max=32, adaptive=False, learn_t=False),
+    "abl_s16": dict(arch="stlt", s_max=16, adaptive=False),
+    "abl_s64": dict(arch="stlt", s_max=64, adaptive=False),
+    "abl_noreg": dict(arch="stlt", s_max=64, adaptive=True, lambda_mask=0.0),
+    "abl_quadratic": dict(arch="stlt", s_max=32, adaptive=False, mode="quadratic"),
+}
+
+S2S_VARIANTS = {
+    "vanilla": dict(arch="vanilla"),
+    "linformer": dict(arch="linformer"),
+    "performer": dict(arch="performer"),
+    "ssm": dict(arch="ssm"),
+    "stlt_fixed32": dict(arch="stlt", s_max=32, adaptive=False),
+    "stlt_adaptive": dict(arch="stlt", s_max=64, adaptive=True),
+}
+
+TABLE1 = ["vanilla", "linformer", "fnet", "ssm", "stlt_fixed32", "stlt_adaptive"]
+TABLE4 = ["abl_fixed_all", "abl_no_omega", "abl_fixed_sigma", "abl_fixed_t",
+          "abl_s16", "abl_s64", "abl_noreg", "abl_quadratic"]
+
+
+def lm_cfg(variant: str, size: str = "tiny", **over) -> ModelConfig:
+    kw = dict(LM_VARIANTS[variant])
+    kw.update(over)
+    return preset(size, **kw)
+
+
+def _dump_init(b: Builder, name: str, flat):
+    """Raw little-endian f32 init vector (python-exact packing order)."""
+    path = os.path.join(b.outdir, f"{name}.init.bin")
+    np.asarray(flat, dtype=np.float32).tofile(path)
+    return f"{name}.init.bin"
+
+
+def build_lm(b: Builder, name: str, cfg: ModelConfig, with_stream: bool):
+    tmpl = train.make_template(cfg)
+    flat = optim.pack(tmpl)
+    p = int(flat.size)
+    init_file = _dump_init(b, name, flat)
+    fp = _f32(p)
+    toks = _i32(cfg.batch, cfg.n_ctx + 1)
+    b.lower(
+        f"{name}.train",
+        train.make_train_step(cfg, tmpl),
+        (fp, fp, fp, _i32(), toks, _i32()),
+        cfg,
+        extra={"kind": "train_step", "param_count": p, "init": init_file},
+    )
+    b.lower(
+        f"{name}.eval",
+        train.make_eval_step(cfg, tmpl),
+        (fp, toks, _f32(), _i32()),
+        cfg,
+        extra={"kind": "eval_step", "param_count": p},
+    )
+    # single-sequence forward (chunked-baseline generation, QA Table 3)
+    import dataclasses as _dc
+
+    cfg1 = _dc.replace(cfg, batch=1)
+    b.lower(
+        f"{name}.fwd",
+        train.make_forward(cfg1, tmpl),
+        (fp, _i32(1, cfg.n_ctx)),
+        cfg1,
+        extra={"kind": "forward", "param_count": p},
+    )
+    if with_stream:
+        (ls, us) = train.carry_shapes(cfg)
+        c = 64
+        b.lower(
+            f"{name}.stream",
+            train.make_stream_step(cfg, tmpl),
+            (fp, _f32(*ls), _f32(*us), _i32(c), _i32(c), _f32(c)),
+            cfg,
+            extra={"kind": "stream_step", "param_count": p, "chunk": c},
+        )
+        b.lower(
+            f"{name}.decode",
+            train.make_decode_step(cfg, tmpl),
+            (fp, _f32(*ls), _f32(*us), _i32(1)),
+            cfg,
+            extra={"kind": "decode_step", "param_count": p},
+        )
+        bsrv = 4
+        b.lower(
+            f"{name}.stream_batch",
+            train.make_stream_batch_step(cfg, tmpl),
+            (fp, _f32(bsrv, *ls), _f32(bsrv, *us), _i32(bsrv, c), _i32(bsrv, c),
+             _f32(bsrv, c), _f32(bsrv)),
+            cfg,
+            extra={"kind": "stream_batch_step", "param_count": p, "chunk": c,
+                   "batch_srv": bsrv},
+        )
+
+
+def build_s2s(b: Builder, name: str, cfg: ModelConfig, n_src: int, m_tgt: int):
+    tmpl = seq2seq.init(cfg)
+    flat = optim.pack(tmpl)
+    p = int(flat.size)
+    init_file = _dump_init(b, name, flat)
+    fp = _f32(p)
+    b.lower(
+        f"{name}.train",
+        seq2seq.make_s2s_train_step(cfg, tmpl),
+        (fp, fp, fp, _i32(), _i32(cfg.batch, n_src), _i32(cfg.batch, m_tgt + 1), _i32()),
+        cfg,
+        extra={"kind": "s2s_train_step", "param_count": p, "n_src": n_src, "m_tgt": m_tgt, "init": init_file},
+    )
+    b.lower(
+        f"{name}.decode",
+        seq2seq.make_s2s_decode(cfg, tmpl, m_tgt),
+        (fp, _i32(cfg.batch, n_src), _i32(cfg.batch, m_tgt), _i32()),
+        cfg,
+        extra={"kind": "s2s_decode", "param_count": p, "n_src": n_src, "m_tgt": m_tgt},
+    )
+
+
+def build_scaling(b: Builder):
+    """Forward-pass artifacts for the §4.6 latency/memory sweep."""
+    for n in [256, 512, 1024, 2048, 4096]:
+        cfg = lm_cfg("stlt_fixed32", n_ctx=n, batch=1)
+        tmpl = train.make_template(cfg)
+        p = int(optim.pack(tmpl).size)
+        b.lower(
+            f"scale_stlt_n{n}.fwd",
+            train.make_forward(cfg, tmpl),
+            (_f32(p), _i32(1, n)),
+            cfg,
+            extra={"kind": "forward", "param_count": p},
+        )
+    for n in [256, 512, 1024, 2048]:
+        cfg = lm_cfg("vanilla", n_ctx=n, batch=1)
+        tmpl = train.make_template(cfg)
+        p = int(optim.pack(tmpl).size)
+        b.lower(
+            f"scale_vanilla_n{n}.fwd",
+            train.make_forward(cfg, tmpl),
+            (_f32(p), _i32(1, n)),
+            cfg,
+            extra={"kind": "forward", "param_count": p},
+        )
+    # quadratic-mode STLT forward: shows the figure-faithful mode is O(N^2)
+    for n in [256, 512, 1024]:
+        cfg = lm_cfg("abl_quadratic", n_ctx=n, batch=1)
+        tmpl = train.make_template(cfg)
+        p = int(optim.pack(tmpl).size)
+        b.lower(
+            f"scale_stltq_n{n}.fwd",
+            train.make_forward(cfg, tmpl),
+            (_f32(p), _i32(1, n)),
+            cfg,
+            extra={"kind": "forward", "param_count": p},
+        )
+
+
+GROUPS = ["core", "table1", "table4", "table2", "scaling", "e2e"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--groups", default=",".join(GROUPS))
+    args = ap.parse_args()
+    groups = [g for g in args.groups.split(",") if g]
+    b = Builder(args.outdir)
+
+    t0 = time.time()
+    if "core" in groups:
+        print("== core ==", flush=True)
+        build_lm(b, "lm_stlt_tiny", lm_cfg("stlt_fixed32"), with_stream=True)
+    if "table1" in groups:
+        print("== table1 ==", flush=True)
+        for v in TABLE1:
+            build_lm(b, f"lm_{v}_tiny", lm_cfg(v), with_stream=v.startswith("stlt"))
+    if "table4" in groups:
+        print("== table4 ==", flush=True)
+        for v in TABLE4:
+            build_lm(b, f"lm_{v}_tiny", lm_cfg(v), with_stream=False)
+    if "table2" in groups:
+        print("== table2 ==", flush=True)
+        for v, kw in S2S_VARIANTS.items():
+            cfg = preset("tiny", n_ctx=48, batch=8, **kw)
+            build_s2s(b, f"s2s_{v}_tiny", cfg, n_src=48, m_tgt=48)
+    if "scaling" in groups:
+        print("== scaling ==", flush=True)
+        build_scaling(b)
+    if "e2e" in groups:
+        print("== e2e ==", flush=True)
+        build_lm(b, "lm_stlt_e2e", lm_cfg("stlt_adaptive", size="e2e", s_max=32),
+                 with_stream=True)
+    b.write_manifest()
+    print(f"total {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,255 @@
+"""Baseline mixers the paper compares against (Tables 1–3).
+
+Each mixer exposes `init(rng, cfg) -> params` and
+`apply(params, x, cfg, causal, ...) -> (z, reg, s_eff)` with the same
+signature shape as the STLT layer so the trunk is architecture-generic.
+
+Causality adaptations (documented in DESIGN.md §3 substitutions):
+  * vanilla    — standard multi-head softmax attention (exact).
+  * linformer  — low-rank K/V projection. Linformer is not causal by
+    construction; for LM rows we use the block-causal adaptation: full
+    causal attention inside a block, previous blocks contribute through
+    their k-dim projected summaries.
+  * fnet       — "fixed spectral mixer, no decay": a frozen Laplace/
+    Fourier bank (sigma tiny & fixed, omega on a fixed Fourier grid,
+    nothing learnable) through the same linear machinery. This is the
+    causal analogue of FNet's fixed FFT mixing and doubles as the
+    fixed-everything ablation row.
+  * ssm        — diagonal complex SSM (S4D-lite): per-channel learnable
+    (sigma, omega) filter + channel mixing; the "Mamba-like" row
+    (selectivity omitted; caveat recorded).
+  * performer  — positive-feature (ReLU) linear attention with causal
+    prefix sums.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels import ops
+
+_ZERO = lambda: jnp.zeros((), jnp.float32)
+
+
+def _dense(k, i, o):
+    return jnp.asarray(k.normal(0, 0.02, (i, o)).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Vanilla multi-head attention
+# ---------------------------------------------------------------------------
+
+
+def vanilla_init(rng, cfg):
+    k = np.random.default_rng(rng)
+    d = cfg.d_model
+    return {
+        "w_q": _dense(k, d, d),
+        "w_k": _dense(k, d, d),
+        "w_v": _dense(k, d, d),
+        "w_o": _dense(k, d, d),
+    }
+
+
+def _heads(x, h):
+    b, n, d = x.shape
+    return x.reshape(b, n, h, d // h).transpose(0, 2, 1, 3)  # [B,h,N,dh]
+
+
+def vanilla_apply(p, x, cfg, causal, **_):
+    b, n, d = x.shape
+    h = cfg.n_heads
+    q = _heads(x @ p["w_q"], h)
+    k = _heads(x @ p["w_k"], h)
+    v = _heads(x @ p["w_v"], h)
+    a = jnp.einsum("bhnd,bhmd->bhnm", q, k) / jnp.sqrt(jnp.float32(d // h))
+    if causal:
+        mask = jnp.tril(jnp.ones((n, n), dtype=bool))
+        a = jnp.where(mask[None, None], a, -jnp.inf)
+    a = jax.nn.softmax(a, axis=-1)
+    z = jnp.einsum("bhnm,bhmd->bhnd", a, v)
+    z = z.transpose(0, 2, 1, 3).reshape(b, n, d)
+    return z @ p["w_o"], _ZERO(), jnp.float32(cfg.n_heads)
+
+
+# ---------------------------------------------------------------------------
+# Linformer (block-causal adaptation for LM; exact low-rank for encoder use)
+# ---------------------------------------------------------------------------
+
+
+def linformer_init(rng, cfg):
+    k = np.random.default_rng(rng)
+    d = cfg.d_model
+    p = vanilla_init(rng, cfg)
+    p["e_proj"] = _dense(k, cfg.n_ctx, cfg.linformer_k)
+    return p
+
+
+def linformer_apply(p, x, cfg, causal, **_):
+    b, n, d = x.shape
+    h = cfg.n_heads
+    q = _heads(x @ p["w_q"], h)
+    k = _heads(x @ p["w_k"], h)
+    v = _heads(x @ p["w_v"], h)
+    e = p["e_proj"][:n, :]  # [N, kp]
+    if not causal:
+        kp = jnp.einsum("bhnd,nk->bhkd", k, e)
+        vp = jnp.einsum("bhnd,nk->bhkd", v, e)
+        a = jnp.einsum("bhnd,bhkd->bhnk", q, kp) / jnp.sqrt(jnp.float32(d // h))
+        a = jax.nn.softmax(a, axis=-1)
+        z = jnp.einsum("bhnk,bhkd->bhnd", a, vp)
+    else:
+        # block-causal: within-block exact causal attn; previous blocks via
+        # projected summaries restricted to a lower-triangular block mask.
+        blk = max(16, cfg.linformer_k)
+        nb = (n + blk - 1) // blk
+        pad = nb * blk - n
+        if pad:
+            q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        npad = nb * blk
+        scale = 1.0 / jnp.sqrt(jnp.float32(d // h))
+        # local causal
+        a_loc = jnp.einsum("bhnd,bhmd->bhnm", q, k) * scale
+        pos = jnp.arange(npad)
+        same_blk = (pos[:, None] // blk) == (pos[None, :] // blk)
+        causal_m = pos[None, :] <= pos[:, None]
+        loc_mask = same_blk & causal_m
+        # previous-block summaries: per-block means projected to kp dims
+        kb = k.reshape(b, h, nb, blk, d // h)
+        vb = v.reshape(b, h, nb, blk, d // h)
+        ep = p["e_proj"][:blk, : cfg.linformer_k]  # [blk, kp]
+        ks = jnp.einsum("bhgld,lk->bhgkd", kb, ep).reshape(b, h, -1, d // h)
+        vs = jnp.einsum("bhgld,lk->bhgkd", vb, ep).reshape(b, h, -1, d // h)
+        a_sum = jnp.einsum("bhnd,bhmd->bhnm", q, ks) * scale
+        sum_blk = jnp.repeat(jnp.arange(nb), cfg.linformer_k)
+        prev_mask = sum_blk[None, :] < (pos[:, None] // blk)
+        logits = jnp.concatenate(
+            [
+                jnp.where(loc_mask[None, None], a_loc, -jnp.inf),
+                jnp.where(prev_mask[None, None], a_sum, -jnp.inf),
+            ],
+            axis=-1,
+        )
+        a = jax.nn.softmax(logits, axis=-1)
+        vall = jnp.concatenate([v, vs], axis=2)
+        z = jnp.einsum("bhnm,bhmd->bhnd", a, vall)
+        z = z[:, :, :n]
+        q = q[:, :, :n]
+    z = z.transpose(0, 2, 1, 3).reshape(b, n, d)
+    return z @ p["w_o"], _ZERO(), jnp.float32(cfg.linformer_k)
+
+
+# ---------------------------------------------------------------------------
+# FNet-causal: frozen spectral bank through the STLT linear machinery
+# ---------------------------------------------------------------------------
+
+
+def fnet_init(rng, cfg):
+    k = np.random.default_rng(rng)
+    d, s = cfg.d_model, cfg.s_max
+    return {
+        "w_f": _dense(k, d, s),
+        "w_v": _dense(k, d, d),
+        "w_o": _dense(k, d, d),
+    }
+
+
+def _fnet_nodes(cfg):
+    s = cfg.s_max
+    sigma = np.full(s, 0.02, np.float32)  # tiny fixed decay for stability
+    omega = (np.pi * np.arange(s) / max(s, 1)).astype(np.float32)  # Fourier grid
+    decay = jnp.asarray(np.exp(-sigma))
+    theta = jnp.asarray(omega)
+    return decay, theta
+
+
+def fnet_apply(p, x, cfg, causal, **_):
+    decay, theta = _fnet_nodes(cfg)
+    f = jnp.einsum("bnd,ds->bns", x, p["w_f"])
+    v = jnp.einsum("bnd,de->bne", x, p["w_v"])
+    if causal:
+        z = ops.linear_mode_uni_batched(f, v, decay, theta) * jnp.float32(cfg.s_max)
+    else:
+        l_re, l_im = ops.scan_bi_batched(f, decay, theta)
+        u_re = jnp.einsum("bns,bnd->bsd", l_re, v)
+        u_im = jnp.einsum("bns,bnd->bsd", -l_im, v)
+        z = jnp.einsum("bns,bsd->bnd", l_re, u_re) - jnp.einsum(
+            "bns,bsd->bnd", l_im, u_im
+        )
+    z = z / jnp.float32(cfg.s_max)
+    return jnp.einsum("bnd,de->bne", z, p["w_o"]), _ZERO(), jnp.float32(cfg.s_max)
+
+
+# ---------------------------------------------------------------------------
+# Diagonal complex SSM ("Mamba-like" row; selectivity omitted)
+# ---------------------------------------------------------------------------
+
+
+def ssm_init(rng, cfg):
+    k = np.random.default_rng(rng)
+    d = cfg.d_model
+    sig = np.geomspace(0.01, 1.0, d).astype(np.float32)
+    return {
+        "sigma_raw": jnp.asarray(np.log(np.expm1(sig))),
+        "omega": jnp.asarray(k.uniform(0, np.pi / 2, d).astype(np.float32)),
+        "w_in": _dense(k, d, d),
+        "w_o": _dense(k, d, d),
+        "d_skip": jnp.ones((d,), jnp.float32),
+    }
+
+
+def ssm_apply(p, x, cfg, causal, **_):
+    sigma = jnp.logaddexp(p["sigma_raw"], 0.0) + 1e-3
+    decay = jnp.exp(-sigma)
+    theta = p["omega"]
+    u = jnp.einsum("bnd,de->bne", x, p["w_in"])
+    if causal:
+        h_re, _ = ops.scan_uni_batched(u, decay, theta)
+    else:
+        h_re, _ = ops.scan_bi_batched(u, decay, theta)
+    y = h_re + u * p["d_skip"][None, None, :]
+    return jnp.einsum("bnd,de->bne", y, p["w_o"]), _ZERO(), jnp.float32(cfg.d_model)
+
+
+# ---------------------------------------------------------------------------
+# Performer-style linear attention (positive ReLU features)
+# ---------------------------------------------------------------------------
+
+
+def performer_init(rng, cfg):
+    return vanilla_init(rng, cfg)
+
+
+def performer_apply(p, x, cfg, causal, **_):
+    b, n, d = x.shape
+    h = cfg.n_heads
+    q = jax.nn.relu(_heads(x @ p["w_q"], h)) + 1e-6
+    k = jax.nn.relu(_heads(x @ p["w_k"], h)) + 1e-6
+    v = _heads(x @ p["w_v"], h)
+    if causal:
+        kv = jnp.cumsum(jnp.einsum("bhnd,bhne->bhnde", k, v), axis=2)
+        ks = jnp.cumsum(k, axis=2)
+        num = jnp.einsum("bhnd,bhnde->bhne", q, kv)
+        den = jnp.einsum("bhnd,bhnd->bhn", q, ks)[..., None]
+    else:
+        kv = jnp.einsum("bhnd,bhne->bhde", k, v)
+        ks = jnp.sum(k, axis=2)
+        num = jnp.einsum("bhnd,bhde->bhne", q, kv)
+        den = jnp.einsum("bhnd,bhd->bhn", q, ks)[..., None]
+    z = num / jnp.maximum(den, 1e-6)
+    z = z.transpose(0, 2, 1, 3).reshape(b, n, d)
+    return z @ p["w_o"], _ZERO(), jnp.float32(cfg.n_heads)
+
+
+MIXERS = {
+    "vanilla": (vanilla_init, vanilla_apply),
+    "linformer": (linformer_init, linformer_apply),
+    "fnet": (fnet_init, fnet_apply),
+    "ssm": (ssm_init, ssm_apply),
+    "performer": (performer_init, performer_apply),
+}

@@ -1,0 +1,71 @@
+"""Model / training configuration shared by Layer-2 code and aot.py.
+
+A plain dataclass (no serde deps); `to_dict` feeds the artifact manifest
+that the Rust coordinator parses (rust/src/util/json.rs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    # architecture family: stlt | vanilla | linformer | fnet | ssm | performer
+    arch: str = "stlt"
+    vocab: int = 256
+    d_model: int = 64
+    n_layers: int = 2
+    n_ctx: int = 128
+    ffn_mult: int = 4
+    # attention-family baselines
+    n_heads: int = 4
+    linformer_k: int = 32
+    # --- STLT specifics ---
+    s_max: int = 32  # number of Laplace nodes (S, or S_max when adaptive)
+    mode: str = "linear"  # linear | quadratic (DESIGN.md R2)
+    adaptive: bool = False  # Gumbel-sigmoid adaptive node allocation
+    learn_sigma: bool = True
+    learn_omega: bool = True
+    learn_t: bool = True
+    omega_zero: bool = False  # ablation: no oscillation
+    sigma_min: float = 1e-3
+    t_init: float = 32.0
+    sigma_init_lo: float = 0.01
+    sigma_init_hi: float = 2.0
+    omega_init_hi: float = 0.785  # pi/4
+    # regularisation (Eq. Reg)
+    lambda_omega: float = 1e-4
+    lambda_sigma: float = 1e-4
+    lambda_mask: float = 1e-3
+    # training
+    batch: int = 8
+    lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 2000
+    weight_decay: float = 0.01
+    beta1: float = 0.9
+    beta2: float = 0.98
+    grad_clip: float = 1.0
+    gumbel_temp_hi: float = 1.0
+    gumbel_temp_lo: float = 0.1
+    temp_anneal_frac: float = 0.4
+    seed: int = 0
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def preset(name: str, **over) -> ModelConfig:
+    """Named size/arch presets used by aot.py and the experiment harnesses."""
+    base = {
+        "tiny": dict(vocab=256, d_model=64, n_layers=2, n_ctx=128, s_max=32, batch=8),
+        "small": dict(vocab=512, d_model=128, n_layers=4, n_ctx=256, s_max=32, batch=4),
+        "e2e": dict(
+            vocab=4096, d_model=256, n_layers=4, n_ctx=256, s_max=32, batch=4,
+            warmup=50, total_steps=400,
+        ),
+    }[name]
+    base.update(over)
+    return ModelConfig(**base)

@@ -1,0 +1,200 @@
+"""Differentiable STLT ops: Pallas kernels + hand-derived custom VJPs.
+
+`pallas_call` has no reverse-mode rule (even in interpret mode), so the
+causal complex scan — the one true recurrence primitive — gets a
+`jax.custom_vjp` whose backward pass is itself built from the same
+Pallas scan kernel:
+
+  forward   L_n = lam * L_{n-1} + f_n                       (1 scan)
+  d f       df_m = sum_{n>=m} g_n conj(lam)^{n-m}
+            = reversed conj-scan of the output cotangent g   (1 scan)
+  d lam     M_n := dL_n/dlam satisfies M_n = lam M_{n-1} + L_{n-1}
+            c_k = sum_n conj(g_n) M_n ;
+            d decay = Re(c e^{-j theta}), d theta = Im(c lam) (1 scan)
+
+Everything else in the layer (bilateral transform, linear mode,
+quadratic relevance) is composed from this primitive plus plain jnp, so
+the whole model is end-to-end differentiable while every recurrence
+executes in the Pallas kernel.
+
+Shapes: f_re/f_im [N, S]; decay/theta [S]. Columns are independent, so
+Layer 2 batches by folding (B, N, S) -> (N, B*S) and tiling the node
+parameters — no vmap needed on the training path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import stlt
+
+
+def _scan(f_re, f_im, decay, theta):
+    return stlt.stlt_scan_uni_c(f_re, f_im, decay, theta)
+
+
+@jax.custom_vjp
+def scan_uni(f_re, f_im, decay, theta):
+    """Differentiable causal complex scan; returns (L_re, L_im)."""
+    return _scan(f_re, f_im, decay, theta)
+
+
+def _scan_uni_fwd(f_re, f_im, decay, theta):
+    l_re, l_im = _scan(f_re, f_im, decay, theta)
+    return (l_re, l_im), (l_re, l_im, decay, theta)
+
+
+def _scan_uni_bwd(res, g):
+    l_re, l_im, decay, theta = res
+    g_re, g_im = g
+    # --- df: reversed scan with conj(lam) = decay * e^{+j theta} ---
+    h_re, h_im = _scan(g_re[::-1], g_im[::-1], decay, -theta)
+    df_re = h_re[::-1]
+    df_im = h_im[::-1]
+    # --- dlam via M-scan: M_n = lam M_{n-1} + L_{n-1} (shifted L input) ---
+    ls_re = jnp.concatenate([jnp.zeros_like(l_re[:1]), l_re[:-1]], axis=0)
+    ls_im = jnp.concatenate([jnp.zeros_like(l_im[:1]), l_im[:-1]], axis=0)
+    m_re, m_im = _scan(ls_re, ls_im, decay, theta)
+    # c_k = sum_n conj(g_n) M_n
+    c_re = jnp.sum(g_re * m_re + g_im * m_im, axis=0)
+    c_im = jnp.sum(g_re * m_im - g_im * m_re, axis=0)
+    # lam = decay e^{-j theta}: dlam/ddecay = e^{-j theta}; dlam/dtheta = -j lam
+    ct, st = jnp.cos(theta), jnp.sin(theta)
+    d_decay = c_re * ct + c_im * st  # Re(c * e^{-j theta})
+    lam_re, lam_im = decay * ct, -decay * st
+    d_theta = c_re * lam_im + c_im * lam_re  # Im(c * lam)
+    return df_re, df_im, d_decay, d_theta
+
+
+scan_uni.defvjp(_scan_uni_fwd, _scan_uni_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Compositions (all differentiable)
+# ---------------------------------------------------------------------------
+
+
+def scan_uni_real(f, decay, theta):
+    """Causal STLT of a real signal. f [N, S] -> (L_re, L_im)."""
+    return scan_uni(f, jnp.zeros_like(f), decay, theta)
+
+
+def scan_bi_real(f, decay, theta):
+    """Bilateral STLT via two causal scans (DESIGN.md: Bwd = rev(scan(rev f)) - f)."""
+    fwd_re, fwd_im = scan_uni_real(f, decay, theta)
+    rev_re, rev_im = scan_uni_real(f[::-1], decay, theta)
+    bwd_re = rev_re[::-1] - f
+    bwd_im = rev_im[::-1]
+    return fwd_re + bwd_re, fwd_im + bwd_im
+
+
+def linear_mode_uni(f, v, decay, theta, u_gamma=None):
+    """Causal linear mode (training path): Pallas scans + jnp U-scan.
+
+    Numerically identical to kernels.stlt.linear_mode_uni (the fused
+    inference kernel) — asserted in python/tests.
+    """
+    s = f.shape[1]
+    if u_gamma is None:
+        u_gamma = jnp.ones((s,), jnp.float32)
+    l_re, l_im = scan_uni_real(f, decay, theta)
+
+    def step(c, x):
+        ur, ui = c
+        lr, li, vn = x
+        ur = u_gamma[:, None] * ur + lr[:, None] * vn[None, :]
+        ui = u_gamma[:, None] * ui - li[:, None] * vn[None, :]
+        z = lr @ ur - li @ ui
+        return (ur, ui), z
+
+    d = v.shape[1]
+    c0 = (jnp.zeros((s, d), jnp.float32), jnp.zeros((s, d), jnp.float32))
+    _, z = jax.lax.scan(step, c0, (l_re, l_im, v))
+    return z / jnp.float32(s)
+
+
+def linear_mode_bi(f, v, decay, theta):
+    """Bilateral linear mode (encoder): U is the full-sequence sum."""
+    l_re, l_im = scan_bi_real(f, decay, theta)
+    u_re = jnp.einsum("ns,nd->sd", l_re, v)
+    u_im = jnp.einsum("ns,nd->sd", -l_im, v)
+    z = l_re @ u_re - l_im @ u_im
+    return z / jnp.float32(f.shape[1])
+
+
+def quadratic_mode(f, v, decay, theta, causal: bool):
+    """Figure-1-faithful mode: Z = softmax(Re(L L^H)/sqrt(S)) V (training path)."""
+    if causal:
+        l_re, l_im = scan_uni_real(f, decay, theta)
+    else:
+        l_re, l_im = scan_bi_real(f, decay, theta)
+    s = f.shape[1]
+    r = (l_re @ l_re.T + l_im @ l_im.T) / jnp.sqrt(jnp.float32(s))
+    if causal:
+        n = r.shape[0]
+        mask = jnp.tril(jnp.ones((n, n), dtype=bool))
+        r = jnp.where(mask, r, -jnp.inf)
+    a = jax.nn.softmax(r, axis=-1)
+    return a @ v
+
+
+# Batched helpers: fold batch into the node/column axis (no vmap on the
+# training path; columns are independent in the scan).
+
+
+def _fold(fb):  # [B, N, S] -> [N, B*S]
+    b, n, s = fb.shape
+    return jnp.transpose(fb, (1, 0, 2)).reshape(n, b * s)
+
+
+def _unfold(l, b, s):  # [N, B*S] -> [B, N, S]
+    n = l.shape[0]
+    return jnp.transpose(l.reshape(n, b, s), (1, 0, 2))
+
+
+def linear_mode_uni_batched(fb, vb, decay, theta, u_gamma=None):
+    """Batched causal linear mode: Pallas L-scan + lax.scan U-accumulation.
+
+    The U prefix-sum is a sequential scan with an O(B S d) carry instead
+    of materialising the O(B N S d) cumsum — ~6x faster fwd+bwd on CPU
+    (EXPERIMENTS.md §Perf L2-1). fb: [B,N,S], vb: [B,N,d] -> [B,N,d]."""
+    b, n, s = fb.shape
+    if u_gamma is None:
+        u_gamma = jnp.ones((s,), jnp.float32)
+    l_re, l_im = scan_uni_batched(fb, decay, theta)
+
+    def step(c, x):
+        ur, ui = c
+        lr, li, vv = x
+        g = u_gamma[None, :, None]
+        ur = g * ur + jnp.einsum("bs,bd->bsd", lr, vv)
+        ui = g * ui - jnp.einsum("bs,bd->bsd", li, vv)
+        z = jnp.einsum("bs,bsd->bd", lr, ur) - jnp.einsum("bs,bsd->bd", li, ui)
+        return (ur, ui), z
+
+    d = vb.shape[-1]
+    c0 = (jnp.zeros((b, s, d), jnp.float32), jnp.zeros((b, s, d), jnp.float32))
+    _, z = jax.lax.scan(
+        step,
+        c0,
+        (l_re.transpose(1, 0, 2), l_im.transpose(1, 0, 2), vb.transpose(1, 0, 2)),
+    )
+    return z.transpose(1, 0, 2) / jnp.float32(s)
+
+
+def scan_uni_batched(fb, decay, theta):
+    """fb: [B, N, S] -> (L_re, L_im) [B, N, S] via column folding."""
+    b, n, s = fb.shape
+    dec = jnp.tile(decay, b)
+    th = jnp.tile(theta, b)
+    l_re, l_im = scan_uni_real(_fold(fb), dec, th)
+    return _unfold(l_re, b, s), _unfold(l_im, b, s)
+
+
+def scan_bi_batched(fb, decay, theta):
+    b, n, s = fb.shape
+    dec = jnp.tile(decay, b)
+    th = jnp.tile(theta, b)
+    l_re, l_im = scan_bi_real(_fold(fb), dec, th)
+    return _unfold(l_re, b, s), _unfold(l_im, b, s)

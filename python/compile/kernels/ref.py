@@ -1,0 +1,167 @@
+"""Pure-jnp oracles for the STLT kernels.
+
+Every Pallas kernel in `stlt.py` has a direct, O(N^2 S) (or otherwise
+naive) counterpart here. These are the CORE correctness signal: pytest
+asserts `allclose(kernel, ref)` over shape/dtype/parameter sweeps.
+
+Conventions (shared with the kernels — see DESIGN.md R1..R4):
+  * Complex numbers are carried as explicit (re, im) f32 planes.
+  * The Laplace kernel is *relative*: e^{-s_k (n-m) Delta} decaying away
+    from the query position n (both directions for the bilateral
+    transform, past-only for the unilateral one). Current position is
+    included with weight 1 (m == n term).
+  * The streaming-compatible window is exponential, folded into the
+    decay before these functions are called: sigma_eff = sigma + 1/T.
+    Callers pass per-step complex multipliers (decay, theta):
+        lam_k = decay_k * exp(-j * theta_k),  decay_k = e^{-sigma_eff_k * Delta}
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def node_multiplier(sigma: jnp.ndarray, omega: jnp.ndarray, delta: float = 1.0):
+    """Per-step complex multiplier lam_k = e^{-(sigma_k + j omega_k) * delta}.
+
+    Returns (decay, theta): decay = |lam| = e^{-sigma*delta}, theta = omega*delta.
+    """
+    decay = jnp.exp(-sigma * delta)
+    theta = omega * delta
+    return decay, theta
+
+
+def _lam_powers(decay, theta, n_pows):
+    """lam^p for p in [0, n_pows): (re, im) arrays of shape [n_pows, S]."""
+    p = jnp.arange(n_pows)[:, None].astype(jnp.float32)
+    mag = decay[None, :] ** p
+    ang = -theta[None, :] * p  # e^{-j theta p}
+    return mag * jnp.cos(ang), mag * jnp.sin(ang)
+
+
+def stlt_scan_uni(f, decay, theta):
+    """Unilateral (causal) STLT. f: [N, S] -> (L_re, L_im): [N, S].
+
+    L_{n,k} = sum_{m<=n} f_{m,k} lam_k^{n-m}
+    """
+    n = f.shape[0]
+    pow_re, pow_im = _lam_powers(decay, theta, n)  # [N, S]
+    # W[n, m] weight = lam^{n-m} for m <= n else 0
+    idx = jnp.arange(n)
+    dist = idx[:, None] - idx[None, :]  # n - m
+    mask = (dist >= 0).astype(jnp.float32)
+    d = jnp.clip(dist, 0, n - 1)
+    w_re = pow_re[d] * mask[..., None]  # [N, N, S]
+    w_im = pow_im[d] * mask[..., None]
+    l_re = jnp.einsum("nms,ms->ns", w_re, f)
+    l_im = jnp.einsum("nms,ms->ns", w_im, f)
+    return l_re, l_im
+
+
+def stlt_scan_bi(f, decay, theta):
+    """Bilateral STLT. L_{n,k} = sum_m f_{m,k} lam_k^{|n-m|}. f: [N, S]."""
+    n = f.shape[0]
+    pow_re, pow_im = _lam_powers(decay, theta, n)
+    idx = jnp.arange(n)
+    d = jnp.abs(idx[:, None] - idx[None, :])
+    w_re = pow_re[d]  # [N, N, S]
+    w_im = pow_im[d]
+    l_re = jnp.einsum("nms,ms->ns", w_re, f)
+    l_im = jnp.einsum("nms,ms->ns", w_im, f)
+    return l_re, l_im
+
+
+def relevance(l_re, l_im):
+    """R_{n,m} = Re( sum_k L_{n,k} conj(L_{m,k}) ). -> [N, N]."""
+    return l_re @ l_re.T + l_im @ l_im.T
+
+
+def relevance_qmode(l_re, l_im, v, causal: bool = False):
+    """Figure-1-faithful quadratic mode: Z = softmax(R / sqrt(S)) V.
+
+    l_*: [N, S], v: [N, d] -> [N, d].
+    """
+    s = l_re.shape[1]
+    r = relevance(l_re, l_im) / jnp.sqrt(jnp.float32(s))
+    if causal:
+        n = r.shape[0]
+        mask = jnp.tril(jnp.ones((n, n), dtype=bool))
+        r = jnp.where(mask, r, -jnp.inf)
+    a = jnp.exp(r - jnp.max(r, axis=-1, keepdims=True))
+    a = a / jnp.sum(a, axis=-1, keepdims=True)
+    return a @ v
+
+
+def linear_mode_uni(f, v, decay, theta, u_gamma=None):
+    """Complexity-faithful causal linear mode (DESIGN.md R2 + R4).
+
+    L from the causal scan; U is a *windowed* (discounted) accumulation
+    U_k(n) = sum_{m<=n} u_gamma_k^{n-m} conj(L_{m,k}) v_m — the
+    exponential window applied to the value side as well, which keeps
+    the streaming state stationary (unbounded prefix sums drift out of
+    the training distribution on 10k+ token streams).
+    Z_n = Re( sum_k L_{n,k} U_k(n) ) / S.   f: [N,S], v: [N,d] -> [N,d].
+    """
+    s = f.shape[1]
+    if u_gamma is None:
+        u_gamma = jnp.ones((s,), jnp.float32)
+    l_re, l_im = stlt_scan_uni(f, decay, theta)
+
+    def step(c, x):
+        ur, ui = c
+        lr, li, vn = x
+        ur = u_gamma[:, None] * ur + lr[:, None] * vn[None, :]
+        ui = u_gamma[:, None] * ui - li[:, None] * vn[None, :]
+        z = lr @ ur - li @ ui
+        return (ur, ui), z
+
+    d = v.shape[1]
+    c0 = (jnp.zeros((s, d), jnp.float32), jnp.zeros((s, d), jnp.float32))
+    _, z = jax.lax.scan(step, c0, (l_re, l_im, v))
+    return z / jnp.float32(s)
+
+
+def linear_mode_bi(f, v, decay, theta):
+    """Bilateral linear mode: U uses the full-sequence sum (encoder)."""
+    l_re, l_im = stlt_scan_bi(f, decay, theta)
+    u_re = jnp.sum(l_re[:, :, None] * v[:, None, :], axis=0)  # [S, d]
+    u_im = jnp.sum(-l_im[:, :, None] * v[:, None, :], axis=0)
+    z = l_re @ u_re - l_im @ u_im
+    return z / jnp.float32(f.shape[1])
+
+
+def stream_carry_init(s: int, d: int):
+    """Zero carry for streaming linear mode: (L_prev, U) re/im planes."""
+    return (
+        jnp.zeros((s, 2), jnp.float32),  # last L (re, im)
+        jnp.zeros((s, d, 2), jnp.float32),  # U accumulator (re, im)
+    )
+
+
+def linear_mode_stream_chunk(f, v, decay, theta, carry, u_gamma=None):
+    """Process one chunk with an O(S d) carry; equals linear_mode_uni on
+    the concatenated stream. Returns (z, new_carry)."""
+    if u_gamma is None:
+        u_gamma = jnp.ones((f.shape[1],), jnp.float32)
+    l_last, u = carry
+    lam_re = decay * jnp.cos(theta)
+    lam_im = -decay * jnp.sin(theta)
+
+    def step(c, inp):
+        (lr, li), (ur, ui) = c
+        fn, vn = inp
+        nlr = lam_re * lr - lam_im * li + fn
+        nli = lam_re * li + lam_im * lr
+        nur = u_gamma[:, None] * ur + nlr[:, None] * vn[None, :]
+        nui = u_gamma[:, None] * ui - nli[:, None] * vn[None, :]
+        z = nlr @ nur - nli @ nui
+        return ((nlr, nli), (nur, nui)), z
+
+    c0 = ((l_last[:, 0], l_last[:, 1]), (u[:, :, 0], u[:, :, 1]))
+    (lc, uc), z = jax.lax.scan(step, c0, (f, v))
+    new_carry = (
+        jnp.stack([lc[0], lc[1]], axis=-1),
+        jnp.stack([uc[0], uc[1]], axis=-1),
+    )
+    return z / jnp.float32(f.shape[1]), new_carry

@@ -1,0 +1,375 @@
+"""Layer-1 Pallas kernels for the learnable two-sided STLT.
+
+Four kernels implement the paper's compute hot-spots (DESIGN.md §4):
+
+  * `stlt_scan_uni`  — unilateral (causal) Laplace scan, eq. (4) in
+    relative form: one forward recurrence, O(N S) work, O(S) carry.
+  * `stlt_scan_bi`   — bilateral scan, eq. (3): forward + backward
+    recurrences summed ("two linear passes", §3.3).
+  * `relevance_qmode`— Figure-1-faithful quadratic mode: tiled
+    R = Re(L Lᴴ)/√S with an online-softmax accumulator (flash-style)
+    and Z = softmax(R) V, never materialising the full N×N matrix in
+    kernel memory (one 128-wide tile at a time).
+  * `linear_mode_uni`— complexity-faithful causal mode: fused L-scan +
+    conj(L)·v prefix accumulation, emitting Z_n directly with an
+    O(S d) carry. This is the streaming hot path.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the scans keep the
+O(S d) carry in VMEM scratch while BlockSpec streams x/V tiles
+HBM→VMEM; the quadratic path is an MXU-friendly tiled matmul. Kernels
+are lowered with `interpret=True` — the CPU PJRT plugin cannot execute
+Mosaic custom-calls; real-TPU characteristics are estimated
+analytically in DESIGN.md §7.
+
+All kernels operate on a single sequence ([N, ...]); batching is done
+with `jax.vmap` in Layer 2. Complex values are explicit (re, im) f32
+planes, identical to `ref.py`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU PJRT cannot run Mosaic custom-calls; see module doc.
+
+
+def _lam(decay, theta):
+    """Complex per-step multiplier lam = decay * e^{-j theta} as (re, im)."""
+    return decay * jnp.cos(theta), -decay * jnp.sin(theta)
+
+
+# ---------------------------------------------------------------------------
+# Unilateral (causal) scan
+# ---------------------------------------------------------------------------
+
+
+def _scan_uni_c_kernel(fr_ref, fi_ref, lam_re_ref, lam_im_ref, o_re_ref, o_im_ref):
+    n = fr_ref.shape[0]
+    lam_re = lam_re_ref[...]
+    lam_im = lam_im_ref[...]
+
+    def body(i, carry):
+        lr, li = carry
+        fr = pl.load(fr_ref, (pl.dslice(i, 1), slice(None)))[0]
+        fi = pl.load(fi_ref, (pl.dslice(i, 1), slice(None)))[0]
+        nlr = lam_re * lr - lam_im * li + fr
+        nli = lam_re * li + lam_im * lr + fi
+        pl.store(o_re_ref, (pl.dslice(i, 1), slice(None)), nlr[None, :])
+        pl.store(o_im_ref, (pl.dslice(i, 1), slice(None)), nli[None, :])
+        return nlr, nli
+
+    s = fr_ref.shape[1]
+    zero = jnp.zeros((s,), jnp.float32)
+    jax.lax.fori_loop(0, n, body, (zero, zero))
+
+
+def stlt_scan_uni_c(f_re, f_im, decay, theta, block_s: int = 64):
+    """Complex-input causal scan: L_n = lam * L_{n-1} + f_n over C^S.
+
+    This is THE differentiable primitive (see ops.py custom_vjp): the
+    forward STLT, its input-cotangent scan (conj(lam), reversed) and the
+    node-parameter M-scan are all instances of this kernel.
+    f_*: [N, S]; per-column independent, so batching = column concat.
+    """
+    n, s = f_re.shape
+    bs = min(block_s, s)
+    if s % bs != 0:
+        bs = s
+    out = pl.pallas_call(
+        _scan_uni_c_kernel,
+        grid=(s // bs,),
+        in_specs=[
+            pl.BlockSpec((n, bs), lambda j: (0, j)),
+            pl.BlockSpec((n, bs), lambda j: (0, j)),
+            pl.BlockSpec((bs,), lambda j: (j,)),
+            pl.BlockSpec((bs,), lambda j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n, bs), lambda j: (0, j)),
+            pl.BlockSpec((n, bs), lambda j: (0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, s), jnp.float32),
+            jax.ShapeDtypeStruct((n, s), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(f_re, f_im, decay * jnp.cos(theta), -decay * jnp.sin(theta))
+    return out[0], out[1]
+
+
+def stlt_scan_uni(f, decay, theta, block_s: int = 64):
+    """Causal STLT scan, real input. f: [N, S] -> (L_re, L_im)."""
+    return stlt_scan_uni_c(f, jnp.zeros_like(f), decay, theta, block_s)
+
+
+# ---------------------------------------------------------------------------
+# Bilateral scan: forward pass (m <= n) + strictly-backward pass (m > n)
+# ---------------------------------------------------------------------------
+
+
+def _scan_bi_kernel(f_ref, lam_re_ref, lam_im_ref, o_re_ref, o_im_ref):
+    n = f_ref.shape[0]
+    lam_re = lam_re_ref[...]
+    lam_im = lam_im_ref[...]
+    s = f_ref.shape[1]
+    zero = jnp.zeros((s,), jnp.float32)
+
+    def fwd(i, carry):
+        lr, li = carry
+        fi = pl.load(f_ref, (pl.dslice(i, 1), slice(None)))[0]
+        nlr = lam_re * lr - lam_im * li + fi
+        nli = lam_re * li + lam_im * lr
+        pl.store(o_re_ref, (pl.dslice(i, 1), slice(None)), nlr[None, :])
+        pl.store(o_im_ref, (pl.dslice(i, 1), slice(None)), nli[None, :])
+        return nlr, nli
+
+    jax.lax.fori_loop(0, n, fwd, (zero, zero))
+
+    # Backward: carry the strictly-future sum B_n = sum_{m>n} f_m lam^{m-n};
+    # add to the already-stored forward value.
+    def bwd(j, carry):
+        i = n - 1 - j
+        br, bi_ = carry
+        fwd_r = pl.load(o_re_ref, (pl.dslice(i, 1), slice(None)))[0]
+        fwd_i = pl.load(o_im_ref, (pl.dslice(i, 1), slice(None)))[0]
+        pl.store(o_re_ref, (pl.dslice(i, 1), slice(None)), (fwd_r + br)[None, :])
+        pl.store(o_im_ref, (pl.dslice(i, 1), slice(None)), (fwd_i + bi_)[None, :])
+        fi = pl.load(f_ref, (pl.dslice(i, 1), slice(None)))[0]
+        nbr = lam_re * (br + fi) - lam_im * (bi_)
+        nbi = lam_re * (bi_) + lam_im * (br + fi)
+        return nbr, nbi
+
+    jax.lax.fori_loop(0, n, bwd, (zero, zero))
+
+
+def stlt_scan_bi(f, decay, theta, block_s: int = 64):
+    """Bilateral STLT scan ("two linear passes"). f: [N, S] -> (re, im)."""
+    n, s = f.shape
+    bs = min(block_s, s)
+    assert s % bs == 0
+    lam_re, lam_im = _lam(decay, theta)
+    out = pl.pallas_call(
+        _scan_bi_kernel,
+        grid=(s // bs,),
+        in_specs=[
+            pl.BlockSpec((n, bs), lambda j: (0, j)),
+            pl.BlockSpec((bs,), lambda j: (j,)),
+            pl.BlockSpec((bs,), lambda j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n, bs), lambda j: (0, j)),
+            pl.BlockSpec((n, bs), lambda j: (0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, s), jnp.float32),
+            jax.ShapeDtypeStruct((n, s), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(f, lam_re, lam_im)
+    return out[0], out[1]
+
+
+# ---------------------------------------------------------------------------
+# Quadratic relevance mode (Figure 1): Z = softmax(Re(L Lᴴ)/√S) V
+# ---------------------------------------------------------------------------
+
+
+def _relevance_kernel(l_re_q, l_im_q, l_re_k, l_im_k, v_ref, o_ref, *, block_k, causal, n_total):
+    """One query tile; online softmax over key tiles (flash-style)."""
+    qi = pl.program_id(0)
+    bq = l_re_q.shape[0]
+    d = v_ref.shape[1]
+    s = l_re_q.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(s))
+
+    lrq = l_re_q[...]
+    liq = l_im_q[...]
+
+    num_k = n_total // block_k
+
+    def body(kj, carry):
+        m_prev, l_prev, acc = carry
+        lrk = pl.load(l_re_k, (pl.dslice(kj * block_k, block_k), slice(None)))
+        lik = pl.load(l_im_k, (pl.dslice(kj * block_k, block_k), slice(None)))
+        vk = pl.load(v_ref, (pl.dslice(kj * block_k, block_k), slice(None)))
+        # Re(L_q L_kᴴ) = re·reᵀ + im·imᵀ
+        r = (jnp.dot(lrq, lrk.T) + jnp.dot(liq, lik.T)) * scale  # [bq, bk]
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 0)
+            kpos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 1)
+            r = jnp.where(kpos <= qpos, r, -jnp.inf)
+        m_new = jnp.maximum(m_prev, jnp.max(r, axis=1))
+        # guard -inf rows (fully masked tiles)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(r - m_safe[:, None])
+        p = jnp.where(jnp.isfinite(r), p, 0.0)
+        corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+        l_new = l_prev * corr + jnp.sum(p, axis=1)
+        acc = acc * corr[:, None] + jnp.dot(p, vk)
+        return m_new, l_new, acc
+
+    m0 = jnp.full((bq,), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc0 = jnp.zeros((bq, d), jnp.float32)
+    if causal:
+        # keys strictly beyond this query tile are fully masked; skip them.
+        num_k_eff = (qi + 1) * bq // block_k
+        num_k_eff = jnp.minimum(num_k_eff + (1 if (bq % block_k) else 0), num_k)
+    else:
+        num_k_eff = num_k
+    m, l, acc = jax.lax.fori_loop(0, num_k_eff, body, (m0, l0, acc0))
+    o_ref[...] = acc / jnp.maximum(l, 1e-30)[:, None]
+
+
+def relevance_qmode(l_re, l_im, v, causal: bool = False, block_q: int = 128, block_k: int = 128):
+    """Quadratic ("figure-faithful") mode. l_*: [N,S], v: [N,d] -> [N,d]."""
+    n, s = l_re.shape
+    d = v.shape[1]
+    bq = min(block_q, n)
+    bk = min(block_k, n)
+    assert n % bq == 0 and n % bk == 0
+    kern = functools.partial(_relevance_kernel, block_k=bk, causal=causal, n_total=n)
+    return pl.pallas_call(
+        kern,
+        grid=(n // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, s), lambda i: (i, 0)),
+            pl.BlockSpec((bq, s), lambda i: (i, 0)),
+            pl.BlockSpec((n, s), lambda i: (0, 0)),
+            pl.BlockSpec((n, s), lambda i: (0, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=INTERPRET,
+    )(l_re, l_im, l_re, l_im, v)
+
+
+# ---------------------------------------------------------------------------
+# Linear (complexity-faithful) causal mode: fused double scan
+# ---------------------------------------------------------------------------
+
+
+def _linear_uni_kernel(f_ref, v_ref, lam_re_ref, lam_im_ref, gam_ref, o_ref):
+    n, s = f_ref.shape
+    d = v_ref.shape[1]
+    lam_re = lam_re_ref[...]
+    lam_im = lam_im_ref[...]
+    gam = gam_ref[...]
+    inv_s = 1.0 / jnp.float32(s)
+
+    def body(i, carry):
+        lr, li, ur, ui = carry
+        fi = pl.load(f_ref, (pl.dslice(i, 1), slice(None)))[0]
+        vi = pl.load(v_ref, (pl.dslice(i, 1), slice(None)))[0]
+        nlr = lam_re * lr - lam_im * li + fi
+        nli = lam_re * li + lam_im * lr
+        nur = gam[:, None] * ur + nlr[:, None] * vi[None, :]
+        nui = gam[:, None] * ui - nli[:, None] * vi[None, :]
+        z = (jnp.dot(nlr, nur) - jnp.dot(nli, nui)) * inv_s
+        pl.store(o_ref, (pl.dslice(i, 1), slice(None)), z[None, :])
+        return nlr, nli, nur, nui
+
+    z_s = jnp.zeros((s,), jnp.float32)
+    z_sd = jnp.zeros((s, d), jnp.float32)
+    jax.lax.fori_loop(0, n, body, (z_s, z_s, z_sd, z_sd))
+
+
+def linear_mode_uni(f, v, decay, theta, u_gamma=None):
+    """Causal linear mode, O(N S d) time / O(S d) carry. -> Z [N, d]."""
+    n, s = f.shape
+    d = v.shape[1]
+    if u_gamma is None:
+        u_gamma = jnp.ones((s,), jnp.float32)
+    lam_re, lam_im = _lam(decay, theta)
+    return pl.pallas_call(
+        _linear_uni_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((n, s), lambda i: (0, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((s,), lambda i: (0,)),
+            pl.BlockSpec((s,), lambda i: (0,)),
+            pl.BlockSpec((s,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=INTERPRET,
+    )(f, v, lam_re, lam_im, u_gamma)
+
+
+# ---------------------------------------------------------------------------
+# Streaming chunk step (carry in / carry out) — used by stream_step artifacts
+# ---------------------------------------------------------------------------
+
+
+def _linear_stream_kernel(f_ref, v_ref, lam_re_ref, lam_im_ref, gam_ref, l0_ref, u0_ref,
+                          o_ref, lc_ref, uc_ref):
+    n, s = f_ref.shape
+    d = v_ref.shape[1]
+    lam_re = lam_re_ref[...]
+    lam_im = lam_im_ref[...]
+    gam = gam_ref[...]
+    inv_s = 1.0 / jnp.float32(s)
+    l0 = l0_ref[...]  # [S, 2]
+    u0 = u0_ref[...]  # [S, d, 2]
+
+    def body(i, carry):
+        lr, li, ur, ui = carry
+        fi = pl.load(f_ref, (pl.dslice(i, 1), slice(None)))[0]
+        vi = pl.load(v_ref, (pl.dslice(i, 1), slice(None)))[0]
+        nlr = lam_re * lr - lam_im * li + fi
+        nli = lam_re * li + lam_im * lr
+        nur = gam[:, None] * ur + nlr[:, None] * vi[None, :]
+        nui = gam[:, None] * ui - nli[:, None] * vi[None, :]
+        z = (jnp.dot(nlr, nur) - jnp.dot(nli, nui)) * inv_s
+        pl.store(o_ref, (pl.dslice(i, 1), slice(None)), z[None, :])
+        return nlr, nli, nur, nui
+
+    lr, li, ur, ui = jax.lax.fori_loop(
+        0, n, body, (l0[:, 0], l0[:, 1], u0[:, :, 0], u0[:, :, 1])
+    )
+    lc_ref[...] = jnp.stack([lr, li], axis=-1)
+    uc_ref[...] = jnp.stack([ur, ui], axis=-1)
+
+
+def linear_mode_stream_chunk(f, v, decay, theta, carry, u_gamma=None):
+    """One streaming chunk; carry = (L_last [S,2], U [S,d,2]).
+
+    Equals `linear_mode_uni` on the concatenated stream (tested in
+    python/tests). Returns (z [N,d], new_carry)."""
+    n, s = f.shape
+    d = v.shape[1]
+    if u_gamma is None:
+        u_gamma = jnp.ones((s,), jnp.float32)
+    l0, u0 = carry
+    lam_re, lam_im = _lam(decay, theta)
+    z, lc, uc = pl.pallas_call(
+        _linear_stream_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((n, s), lambda i: (0, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((s,), lambda i: (0,)),
+            pl.BlockSpec((s,), lambda i: (0,)),
+            pl.BlockSpec((s,), lambda i: (0,)),
+            pl.BlockSpec((s, 2), lambda i: (0, 0)),
+            pl.BlockSpec((s, d, 2), lambda i: (0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((s, 2), lambda i: (0, 0)),
+            pl.BlockSpec((s, d, 2), lambda i: (0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+            jax.ShapeDtypeStruct((s, 2), jnp.float32),
+            jax.ShapeDtypeStruct((s, d, 2), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(f, v, lam_re, lam_im, u_gamma, l0, u0)
+    return z, (lc, uc)

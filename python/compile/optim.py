@@ -1,0 +1,84 @@
+"""From-scratch AdamW on a flat f32 parameter vector (no optax offline).
+
+The Rust coordinator shuttles a single f32[P] vector (plus Adam moments)
+across the PJRT boundary, so training state management on the Rust side
+is trivial and allocation-free. `spec(params)` fixes a deterministic
+(name-sorted) packing order; pack/unpack are exact inverses.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def _walk(tree, prefix=""):
+    """Deterministic (path-sorted) leaf iteration over nested dict/list."""
+    if isinstance(tree, dict):
+        for k in sorted(tree.keys()):
+            yield from _walk(tree[k], f"{prefix}/{k}")
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _walk(v, f"{prefix}/{i:03d}")
+    else:
+        yield prefix, tree
+
+
+def spec(params):
+    """[(path, shape, size)] in packing order."""
+    out = []
+    for path, leaf in _walk(params):
+        out.append((path, tuple(leaf.shape), int(np.prod(leaf.shape) or 1)))
+    return out
+
+
+def pack(params):
+    leaves = [jnp.reshape(leaf, (-1,)) for _, leaf in _walk(params)]
+    return jnp.concatenate(leaves) if leaves else jnp.zeros((0,), jnp.float32)
+
+
+def unpack(flat, params_template):
+    """Rebuild the nested structure of `params_template` from flat f32[P]."""
+    sp = spec(params_template)
+    sizes = [s for _, _, s in sp]
+    chunks = jnp.split(flat, np.cumsum(sizes)[:-1]) if len(sizes) > 1 else [flat]
+    it = iter(zip(chunks, sp))
+
+    def rebuild(tree):
+        if isinstance(tree, dict):
+            return {k: rebuild(tree[k]) for k in sorted(tree.keys())}
+        if isinstance(tree, (list, tuple)):
+            return [rebuild(v) for v in tree]
+        chunk, (_, shape, _) = next(it)
+        return jnp.reshape(chunk, shape)
+
+    return rebuild(params_template)
+
+
+def n_params(params):
+    return sum(s for _, _, s in spec(params))
+
+
+def lr_schedule(step, base_lr, warmup, total):
+    """Linear warmup then cosine decay to 10% of base (all jnp, traced)."""
+    step = step.astype(jnp.float32)
+    warm = base_lr * step / jnp.maximum(1.0, float(warmup))
+    prog = jnp.clip((step - warmup) / jnp.maximum(1.0, float(total - warmup)), 0.0, 1.0)
+    cos = base_lr * (0.1 + 0.9 * 0.5 * (1.0 + jnp.cos(np.pi * prog)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def adamw_update(flat, g, m, v, step, *, lr, beta1, beta2, eps=1e-8, weight_decay=0.0,
+                 grad_clip=0.0):
+    """One AdamW step on flat vectors. step is the 1-based update index."""
+    if grad_clip > 0:
+        gn = jnp.sqrt(jnp.sum(g * g))
+        g = g * jnp.minimum(1.0, grad_clip / jnp.maximum(gn, 1e-12))
+    m = beta1 * m + (1 - beta1) * g
+    v = beta2 * v + (1 - beta2) * g * g
+    t = step.astype(jnp.float32)
+    mhat = m / (1 - beta1**t)
+    vhat = v / (1 - beta2**t)
+    upd = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * flat
+    return flat - lr * upd, m, v

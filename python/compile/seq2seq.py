@@ -1,0 +1,194 @@
+"""Hybrid encoder–decoder STLT (§3.5) and baseline seq2seq models for WMT
+(Table 2 reproduction).
+
+Encoder layers use the *bilateral* transform (full context); decoder
+layers use the *unilateral* transform (causal) plus a cross-STLT block:
+the decoder's Laplace features L_dec interact with the encoder memory
+through U_enc_k = sum_m conj(L_enc_{m,k}) v_m — an O(S d) summary, so
+cross "attention" is O((N+M) S d) and the encoder memory handed to the
+Rust decode loop is fixed-size.
+
+Baselines (vanilla/linformer/performer/ssm/fnet) use their own self
+mixers and standard multi-head cross attention (noted in DESIGN.md).
+
+Source and target share one vocabulary (synthetic task).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import baselines, optim, stlt_layer, trunk
+from .config import ModelConfig
+
+
+def _dense(k, i, o):
+    return jnp.asarray(k.normal(0, 0.02, (i, o)).astype(np.float32))
+
+
+def _cross_init(rng, cfg: ModelConfig):
+    k = np.random.default_rng(rng)
+    d = cfg.d_model
+    if cfg.arch == "stlt":
+        p = stlt_layer.init(rng, cfg)  # node bank + w_f reused for L_dec
+        p["w_vx"] = _dense(k, d, d)  # encoder value proj
+        return p
+    return {
+        "w_q": _dense(k, d, d),
+        "w_k": _dense(k, d, d),
+        "w_v": _dense(k, d, d),
+        "w_o": _dense(k, d, d),
+    }
+
+
+def init(cfg: ModelConfig):
+    k = np.random.default_rng(cfg.seed + 7)
+    d = cfg.d_model
+    mix_init, _ = trunk.mixer_fns(cfg)
+
+    def block(li, with_cross):
+        p = {
+            "mixer": mix_init(cfg.seed * 1000 + li, cfg),
+            "ln1_g": jnp.ones((d,)), "ln1_b": jnp.zeros((d,)),
+            "ln2_g": jnp.ones((d,)), "ln2_b": jnp.zeros((d,)),
+            "ffn_w1": _dense(k, d, d * cfg.ffn_mult),
+            "ffn_b1": jnp.zeros((d * cfg.ffn_mult,)),
+            "ffn_w2": _dense(k, d * cfg.ffn_mult, d),
+            "ffn_b2": jnp.zeros((d,)),
+        }
+        if with_cross:
+            p["cross"] = _cross_init(cfg.seed * 2000 + li, cfg)
+            p["ln3_g"] = jnp.ones((d,))
+            p["ln3_b"] = jnp.zeros((d,))
+        return p
+
+    return {
+        "embed": _dense(k, cfg.vocab, d),
+        "enc_layers": [block(i, False) for i in range(cfg.n_layers)],
+        "dec_layers": [block(100 + i, True) for i in range(cfg.n_layers)],
+        "enc_lnf_g": jnp.ones((d,)), "enc_lnf_b": jnp.zeros((d,)),
+        "dec_lnf_g": jnp.ones((d,)), "dec_lnf_b": jnp.zeros((d,)),
+    }
+
+
+def _cross_apply(p, y, enc_h, cfg: ModelConfig):
+    """y [B,M,d] decoder stream, enc_h [B,N,d] encoder output -> [B,M,d]."""
+    if cfg.arch == "stlt":
+        decay, theta, _, _ = stlt_layer.node_params(p, cfg)
+        from .kernels import ops
+
+        f_dec = jnp.einsum("bmd,ds->bms", y, p["w_f"])
+        f_enc = jnp.einsum("bnd,ds->bns", enc_h, p["w_f"])
+        v_enc = jnp.einsum("bnd,de->bne", enc_h, p["w_vx"])
+        l_dec_re, l_dec_im = ops.scan_uni_batched(f_dec, decay, theta)
+        l_enc_re, l_enc_im = ops.scan_bi_batched(f_enc, decay, theta)
+        u_re = jnp.einsum("bns,bnd->bsd", l_enc_re, v_enc)
+        u_im = jnp.einsum("bns,bnd->bsd", -l_enc_im, v_enc)
+        z = jnp.einsum("bms,bsd->bmd", l_dec_re, u_re) - jnp.einsum(
+            "bms,bsd->bmd", l_dec_im, u_im
+        )
+        z = z / jnp.float32(cfg.s_max)
+        return jnp.einsum("bmd,de->bme", z, p["w_o"])
+    # standard multi-head cross attention
+    b, m, d = y.shape
+    h = cfg.n_heads
+    q = baselines._heads(y @ p["w_q"], h)
+    kk = baselines._heads(enc_h @ p["w_k"], h)
+    v = baselines._heads(enc_h @ p["w_v"], h)
+    a = jnp.einsum("bhmd,bhnd->bhmn", q, kk) / jnp.sqrt(jnp.float32(d // h))
+    a = jax.nn.softmax(a, axis=-1)
+    z = jnp.einsum("bhmn,bhnd->bhmd", a, v)
+    return z.transpose(0, 2, 1, 3).reshape(b, m, d) @ p["w_o"]
+
+
+def encode(params, src, cfg: ModelConfig):
+    """src [B, N] -> enc hidden [B, N, d] (bilateral / non-causal mixers)."""
+    d = cfg.d_model
+    x = params["embed"][src] * jnp.sqrt(jnp.float32(d))
+    if trunk.uses_posenc(cfg):
+        x = x + trunk._posenc(src.shape[1], d)[None]
+    _, mix_apply = trunk.mixer_fns(cfg)
+    key = jax.random.PRNGKey(3)
+    for lp in params["enc_layers"]:
+        key, sub = jax.random.split(key)
+        z, _, _ = mix_apply(
+            lp["mixer"], trunk._ln(x, lp["ln1_g"], lp["ln1_b"]), cfg,
+            causal=False, rng_key=sub, temp=1.0, train=False,
+        )
+        x = x + z
+        x = x + trunk._ffn(lp, trunk._ln(x, lp["ln2_g"], lp["ln2_b"]))
+    return trunk._ln(x, params["enc_lnf_g"], params["enc_lnf_b"])
+
+
+def decode(params, tgt_in, enc_h, cfg: ModelConfig, rng_key=None, temp=1.0, train=False):
+    """tgt_in [B, M] -> logits [B, M, V]; causal self + cross each layer."""
+    d = cfg.d_model
+    y = params["embed"][tgt_in] * jnp.sqrt(jnp.float32(d))
+    if trunk.uses_posenc(cfg):
+        y = y + trunk._posenc(tgt_in.shape[1], d)[None]
+    _, mix_apply = trunk.mixer_fns(cfg)
+    if rng_key is None:
+        rng_key = jax.random.PRNGKey(4)
+    regs = []
+    for lp in params["dec_layers"]:
+        rng_key, sub = jax.random.split(rng_key)
+        z, reg, _ = mix_apply(
+            lp["mixer"], trunk._ln(y, lp["ln1_g"], lp["ln1_b"]), cfg,
+            causal=True, rng_key=sub, temp=temp, train=train,
+        )
+        y = y + z
+        y = y + _cross_apply(lp["cross"], trunk._ln(y, lp["ln3_g"], lp["ln3_b"]), enc_h, cfg)
+        y = y + trunk._ffn(lp, trunk._ln(y, lp["ln2_g"], lp["ln2_b"]))
+        regs.append(reg)
+    y = trunk._ln(y, params["dec_lnf_g"], params["dec_lnf_b"])
+    return y @ params["embed"].T, sum(regs)
+
+
+def s2s_loss(params, src, tgt, cfg: ModelConfig, rng_key=None, temp=1.0, train=False,
+             pad_id: int = 0):
+    """tgt [B, M+1] teacher forcing; positions with target==pad are masked."""
+    tgt_in, tgt_out = tgt[:, :-1], tgt[:, 1:]
+    enc_h = encode(params, src, cfg)
+    logits, reg = decode(params, tgt_in, enc_h, cfg, rng_key, temp, train)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt_out[..., None], axis=-1)[..., 0]
+    mask = (tgt_out != pad_id).astype(jnp.float32)
+    ce = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return ce + reg, ce
+
+
+def make_s2s_train_step(cfg: ModelConfig, template):
+    def step_fn(flat, m, v, step, src, tgt, seed):
+        params = optim.unpack(flat, template)
+        key = jax.random.fold_in(jax.random.PRNGKey(5), seed)
+
+        def loss_fn(p):
+            return s2s_loss(p, src, tgt, cfg, rng_key=key, temp=1.0, train=True)
+
+        (loss, ce), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        g = optim.pack(grads)
+        lr = optim.lr_schedule(step, cfg.lr, cfg.warmup, cfg.total_steps)
+        flat2, m2, v2 = optim.adamw_update(
+            flat, g, m, v, step + 1, lr=lr, beta1=cfg.beta1, beta2=cfg.beta2,
+            weight_decay=cfg.weight_decay, grad_clip=cfg.grad_clip,
+        )
+        return flat2, m2, v2, loss, ce
+
+    return step_fn
+
+
+def make_s2s_decode(cfg: ModelConfig, template, m_max: int):
+    def decode_fn(flat, src, tgt_prefix, cur_len):
+        """Greedy decode step: logits for position cur_len-1 of the prefix.
+
+        src [B, N], tgt_prefix [B, m_max]; positions >= cur_len are junk
+        (masked by causality). Returns logits [B, V]."""
+        params = optim.unpack(flat, template)
+        enc_h = encode(params, src, cfg)
+        logits, _ = decode(params, tgt_prefix, enc_h, cfg)
+        idx = jnp.clip(cur_len - 1, 0, m_max - 1)
+        return (logits[:, idx, :],)
+
+    return decode_fn

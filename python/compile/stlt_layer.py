@@ -1,0 +1,214 @@
+"""The learnable two-sided STLT mixer (the paper's core contribution).
+
+Parameters per layer (all end-to-end learnable unless ablated):
+  sigma_raw [S]  -> sigma = softplus(sigma_raw) + sigma_min   (decay)
+  omega     [S]  -> oscillation frequency
+  t_raw     []   -> T = softplus(t_raw) + 1                   (window)
+  w_f [d, S]     -> per-node feature projection (DESIGN.md R3)
+  w_v [d, d], w_o [d, d]
+  adaptive only: w_alpha [d, S], b_alpha [S]  (importance scores)
+
+The exponential window w(t; T) = e^{-|t|/T} folds into the decay:
+sigma_eff = sigma + 1/T (DESIGN.md R4), keeping the recurrence exact
+and T learnable.
+
+Adaptive node allocation (§3.6): alpha = sigmoid(W_a pool(x) + b_a);
+training uses the Gumbel-sigmoid relaxation at temperature `temp`,
+inference uses the deterministic alpha (optionally hard-thresholded on
+the Rust side). Masks scale the node features, so m̃_k ≈ 0 silences
+node k exactly as in the paper.
+
+Returns (z, reg, s_eff): the mixed output, the Eq. Reg penalty, and the
+expected active node count.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels import ops
+
+
+def _softplus(x):
+    return jnp.logaddexp(x, 0.0)
+
+
+def _inv_softplus(y):
+    # inverse of softplus for initialisation
+    import numpy as np
+
+    return float(np.log(np.expm1(y)))
+
+
+def init(rng, cfg: ModelConfig):
+    import numpy as np
+
+    k = np.random.default_rng(rng)
+    d, s = cfg.d_model, cfg.s_max
+    # log-spaced sigma over [sigma_init_lo, sigma_init_hi] (§3.7)
+    sig = np.geomspace(cfg.sigma_init_lo, cfg.sigma_init_hi, s).astype(np.float32)
+    sigma_raw = np.log(np.expm1(np.maximum(sig, 1e-6))).astype(np.float32)
+    omega = (
+        np.zeros(s, np.float32)
+        if cfg.omega_zero
+        else k.uniform(0.0, cfg.omega_init_hi, s).astype(np.float32)
+    )
+    p = {
+        "sigma_raw": jnp.asarray(sigma_raw),
+        "omega": jnp.asarray(omega),
+        "t_raw": jnp.asarray([_inv_softplus(cfg.t_init - 1.0)], np.float32),
+        "w_f": jnp.asarray(k.normal(0, 0.02, (d, s)).astype(np.float32)),
+        "w_v": jnp.asarray(k.normal(0, 0.02, (d, d)).astype(np.float32)),
+        "w_o": jnp.asarray(k.normal(0, 0.02, (d, d)).astype(np.float32)),
+    }
+    if cfg.adaptive:
+        p["w_alpha"] = jnp.asarray(k.normal(0, 0.02, (d, s)).astype(np.float32))
+        p["b_alpha"] = jnp.asarray(np.full(s, 2.0, np.float32))  # start mostly-on
+    return p
+
+
+def node_params(p, cfg: ModelConfig):
+    """(decay, theta, sigma, t) with ablation stop-gradients applied."""
+    sigma = _softplus(p["sigma_raw"]) + cfg.sigma_min
+    t = _softplus(p["t_raw"])[0] + 1.0
+    omega = jnp.zeros_like(p["omega"]) if cfg.omega_zero else p["omega"]
+    if not cfg.learn_sigma:
+        sigma = jax.lax.stop_gradient(sigma)
+    if not cfg.learn_omega:
+        omega = jax.lax.stop_gradient(omega)
+    if not cfg.learn_t:
+        t = jax.lax.stop_gradient(t)
+    sigma_eff = sigma + 1.0 / t
+    decay = jnp.exp(-sigma_eff)  # Delta = 1
+    theta = omega
+    return decay, theta, sigma, t
+
+
+def u_window(p, cfg: ModelConfig):
+    """Windowed-U discount gamma (DESIGN.md R4): the learnable window
+    also decays the value-side accumulation so the streaming state is
+    stationary — gamma = e^{-1/(8 T)}, half-life ~5.5 T tokens. [S]."""
+    t = _softplus(p["t_raw"])[0] + 1.0
+    if not cfg.learn_t:
+        t = jax.lax.stop_gradient(t)
+    g = jnp.exp(-1.0 / (8.0 * t))
+    return jnp.full((cfg.s_max,), 1.0, jnp.float32) * g
+
+
+def gate(p, x, cfg: ModelConfig, rng_key, temp, train: bool):
+    """Adaptive node mask m̃ [B, S] and importance alpha [B, S]."""
+    b = x.shape[0]
+    if not cfg.adaptive:
+        ones = jnp.ones((b, cfg.s_max), jnp.float32)
+        return ones, ones
+    pooled = jnp.mean(x, axis=1)  # [B, d] mean-pool (§3.6)
+    logits = pooled @ p["w_alpha"] + p["b_alpha"][None, :]
+    alpha = jax.nn.sigmoid(logits)
+    if train:
+        u = jax.random.uniform(rng_key, logits.shape, minval=1e-6, maxval=1 - 1e-6)
+        g = jnp.log(u) - jnp.log1p(-u)  # logistic noise == Gumbel diff
+        m = jax.nn.sigmoid((logits + g) / temp)
+    else:
+        m = alpha
+    return m, alpha
+
+
+def regulariser(p, m, cfg: ModelConfig):
+    """Eq. Reg: sparsity on active omega, smoothness on active sigma, mask sum.
+
+    Honors the ablation stop-grads: a "fixed" parameter must receive no
+    gradient through the penalty either."""
+    sigma = _softplus(p["sigma_raw"]) + cfg.sigma_min
+    omega = p["omega"]
+    if not cfg.learn_sigma:
+        sigma = jax.lax.stop_gradient(sigma)
+    if not cfg.learn_omega:
+        omega = jax.lax.stop_gradient(omega)
+    m_mean = jnp.mean(m, axis=0)  # average gate over batch
+    r_omega = cfg.lambda_omega * jnp.sum(jnp.abs(omega) * m_mean)
+    dsig = (sigma[1:] - sigma[:-1]) ** 2
+    r_sigma = cfg.lambda_sigma * jnp.sum(dsig * m_mean[1:] * m_mean[:-1])
+    r_mask = cfg.lambda_mask * jnp.sum(m_mean)
+    return r_omega + r_sigma + r_mask
+
+
+def apply(p, x, cfg: ModelConfig, *, causal: bool, rng_key=None, temp=1.0, train=False):
+    """x: [B, N, d] -> (z [B, N, d], reg scalar, s_eff scalar)."""
+    b, n, d = x.shape
+    decay, theta, _, _ = node_params(p, cfg)
+    if rng_key is None:
+        rng_key = jax.random.PRNGKey(0)
+    m, _alpha = gate(p, x, cfg, rng_key, temp, train)  # [B, S]
+    f = jnp.einsum("bnd,ds->bns", x, p["w_f"]) * m[:, None, :]
+    v = jnp.einsum("bnd,de->bne", x, p["w_v"])
+
+    if cfg.mode == "linear":
+        if causal:
+            # sequential-carry formulation (EXPERIMENTS.md §Perf L2-1)
+            z = ops.linear_mode_uni_batched(f, v, decay, theta, u_window(p, cfg))
+        else:
+            l_re, l_im = ops.scan_bi_batched(f, decay, theta)
+            u_re = jnp.einsum("bns,bnd->bsd", l_re, v)
+            u_im = jnp.einsum("bns,bnd->bsd", -l_im, v)
+            z = jnp.einsum("bns,bsd->bnd", l_re, u_re) - jnp.einsum(
+                "bns,bsd->bnd", l_im, u_im
+            )
+            z = z / jnp.float32(cfg.s_max)
+    elif cfg.mode == "quadratic":
+        if causal:
+            l_re, l_im = ops.scan_uni_batched(f, decay, theta)
+        else:
+            l_re, l_im = ops.scan_bi_batched(f, decay, theta)
+        r = (
+            jnp.einsum("bns,bms->bnm", l_re, l_re)
+            + jnp.einsum("bns,bms->bnm", l_im, l_im)
+        ) / jnp.sqrt(jnp.float32(cfg.s_max))
+        if causal:
+            mask = jnp.tril(jnp.ones((n, n), dtype=bool))
+            r = jnp.where(mask[None], r, -jnp.inf)
+        a = jax.nn.softmax(r, axis=-1)
+        z = jnp.einsum("bnm,bmd->bnd", a, v)
+    else:
+        raise ValueError(f"unknown mode {cfg.mode}")
+
+    z = jnp.einsum("bnd,de->bne", z, p["w_o"])
+    reg = regulariser(p, m, cfg)
+    s_eff = jnp.mean(jnp.sum(m, axis=1))
+    return z, reg, s_eff
+
+
+# ---------------------------------------------------------------------------
+# Streaming/decode carries (linear causal mode only) for the Rust hot path
+# ---------------------------------------------------------------------------
+
+
+def carry_init(cfg: ModelConfig):
+    """Zero carry for one layer: (L [S,2], U [S,d,2])."""
+    s, d = cfg.s_max, cfg.d_model
+    return jnp.zeros((s, 2), jnp.float32), jnp.zeros((s, d, 2), jnp.float32)
+
+
+def apply_stream(p, x, cfg: ModelConfig, carry):
+    """Single-sequence streaming chunk. x: [N, d]; linear causal mode.
+
+    Adaptive gating in streaming uses the deterministic alpha of the
+    *chunk* (documented deviation: pooling is per-chunk, not global).
+    """
+    decay, theta, _, _ = node_params(p, cfg)
+    if cfg.adaptive:
+        pooled = jnp.mean(x, axis=0)
+        m = jax.nn.sigmoid(pooled @ p["w_alpha"] + p["b_alpha"])
+    else:
+        m = jnp.ones((cfg.s_max,), jnp.float32)
+    f = (x @ p["w_f"]) * m[None, :]
+    v = x @ p["w_v"]
+    # the fused Pallas streaming kernel is the L1 hot path here
+    from .kernels import stlt as stlt_kernels
+
+    z, new_carry = stlt_kernels.linear_mode_stream_chunk(
+        f, v, decay, theta, carry, u_window(p, cfg)
+    )
+    z = z @ p["w_o"]
+    return z, new_carry

@@ -1,0 +1,165 @@
+"""Jittable entry points lowered by aot.py and driven from Rust.
+
+All cross-boundary state is flat f32 vectors / int32 token arrays so the
+Rust side (rust/src/runtime/exec.rs) stays allocation-simple:
+
+  train_step  (flat, m, v, step, tokens[B,N+1], seed)
+                -> (flat', m', v', loss, ce, s_eff)
+  eval_step   (flat, tokens[B,N+1], noise_std, seed) -> (nll_sum, count, s_eff)
+  forward     (flat, tokens[B,N]) -> logits[B,N,V]
+  stream_step (flat, l_carry, u_carry, x_carry?, tokens[C], targets[C], mask[C])
+                -> (l', u', nll_sum, count)      [stlt linear causal only]
+  decode_step (flat, l_carry, u_carry, token) -> (l', u', logits[V])
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import optim, stlt_layer, trunk
+from .config import ModelConfig
+
+
+def _temp_at(cfg: ModelConfig, step):
+    """Gumbel temperature annealed hi->lo over the first anneal_frac of training."""
+    frac = jnp.clip(
+        step.astype(jnp.float32) / max(1.0, cfg.temp_anneal_frac * cfg.total_steps),
+        0.0,
+        1.0,
+    )
+    return cfg.gumbel_temp_hi + (cfg.gumbel_temp_lo - cfg.gumbel_temp_hi) * frac
+
+
+def make_template(cfg: ModelConfig):
+    return trunk.init(cfg)
+
+
+def make_train_step(cfg: ModelConfig, template):
+    def train_step(flat, m, v, step, tokens, seed):
+        params = optim.unpack(flat, template)
+        temp = _temp_at(cfg, step)
+        key = jax.random.fold_in(jax.random.PRNGKey(0), seed)
+
+        def loss_fn(p):
+            return trunk.lm_loss(p, tokens, cfg, rng_key=key, temp=temp, train=True)
+
+        (loss, (ce, seff)), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        g = optim.pack(grads)
+        lr = optim.lr_schedule(step, cfg.lr, cfg.warmup, cfg.total_steps)
+        flat2, m2, v2 = optim.adamw_update(
+            flat, g, m, v, step + 1,
+            lr=lr, beta1=cfg.beta1, beta2=cfg.beta2,
+            weight_decay=cfg.weight_decay, grad_clip=cfg.grad_clip,
+        )
+        return flat2, m2, v2, loss, ce, seff
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, template):
+    def eval_step(flat, tokens, noise_std, seed):
+        params = optim.unpack(flat, template)
+        key = jax.random.fold_in(jax.random.PRNGKey(1), seed)
+        inp, tgt = tokens[:, :-1], tokens[:, 1:]
+        logits, _, seff = trunk.apply(
+            params, inp, cfg, rng_key=key, temp=cfg.gumbel_temp_lo, train=False,
+            noise_std=noise_std,
+        )
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)
+        return jnp.sum(nll), jnp.float32(tgt.size), seff
+
+    return eval_step
+
+
+def make_forward(cfg: ModelConfig, template):
+    def forward(flat, tokens):
+        params = optim.unpack(flat, template)
+        logits, _, _ = trunk.apply(params, tokens, cfg, train=False)
+        return (logits,)
+
+    return forward
+
+
+# ---------------------------------------------------------------------------
+# Streaming (stlt, linear causal) — the O(S d) carry hot path
+# ---------------------------------------------------------------------------
+
+
+def carry_shapes(cfg: ModelConfig):
+    ly, s, d = cfg.n_layers, cfg.s_max, cfg.d_model
+    return (ly, s, 2), (ly, s, d, 2)
+
+
+def _stream_trunk(params, tokens, cfg: ModelConfig, l_carry, u_carry):
+    """tokens [C] -> (logits [C, V], l', u'). No posenc (recurrent position)."""
+    d = cfg.d_model
+    x = params["embed"][tokens] * jnp.sqrt(jnp.float32(d))
+    nl, nu = [], []
+    for li, lp in enumerate(params["layers"]):
+        h = trunk._ln(x, lp["ln1_g"], lp["ln1_b"])
+        z, (lc, uc) = stlt_layer.apply_stream(
+            lp["mixer"], h, cfg, (l_carry[li], u_carry[li])
+        )
+        x = x + z
+        x = x + trunk._ffn(lp, trunk._ln(x, lp["ln2_g"], lp["ln2_b"]))
+        nl.append(lc)
+        nu.append(uc)
+    x = trunk._ln(x, params["lnf_g"], params["lnf_b"])
+    logits = x @ params["embed"].T
+    return logits, jnp.stack(nl), jnp.stack(nu)
+
+
+def make_stream_step(cfg: ModelConfig, template):
+    def stream_step(flat, l_carry, u_carry, tokens, targets, mask):
+        """One chunk of streaming next-token evaluation.
+
+        mask [C] in {0,1} marks positions that count toward the NLL
+        (lets Rust feed ragged tails / skip question tokens in QA)."""
+        params = optim.unpack(flat, template)
+        logits, nl, nu = _stream_trunk(params, tokens, cfg, l_carry, u_carry)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[:, None], axis=-1)[:, 0]
+        return nl, nu, jnp.sum(nll * mask), jnp.sum(mask)
+
+    return stream_step
+
+
+def make_stream_batch_step(cfg: ModelConfig, template):
+    def stream_batch_step(flat, l_carry, u_carry, tokens, targets, mask, active):
+        """Batched streaming chunk for the serving coordinator.
+
+        l_carry [B, L, S, 2], u_carry [B, L, S, d, 2], tokens/targets/mask
+        [B, C], active [B] in {0,1}. Rows with active=0 keep their carry
+        unchanged and contribute nothing — the dynamic batcher pads
+        partially-filled batches with inactive rows without corrupting
+        idle sessions' state."""
+        params = optim.unpack(flat, template)
+
+        def one(lc, uc, tok, tgt, msk):
+            logits, nl, nu = _stream_trunk(params, tok, cfg, lc, uc)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            nll = -jnp.take_along_axis(logp, tgt[:, None], axis=-1)[:, 0]
+            return nl, nu, jnp.sum(nll * msk), jnp.sum(msk)
+
+        nl, nu, nll, cnt = jax.vmap(one)(l_carry, u_carry, tokens, targets, mask)
+        a4 = active[:, None, None, None]
+        a5 = active[:, None, None, None, None]
+        nl = a4 * nl + (1.0 - a4) * l_carry
+        nu = a5 * nu + (1.0 - a5) * u_carry
+        return nl, nu, nll * active, cnt * active
+
+    return stream_batch_step
+
+
+def make_decode_step(cfg: ModelConfig, template):
+    def decode_step(flat, l_carry, u_carry, token):
+        """token [1] -> next-token logits [V] + advanced carries."""
+        params = optim.unpack(flat, template)
+        logits, nl, nu = _stream_trunk(params, token, cfg, l_carry, u_carry)
+        return nl, nu, logits[-1]
+
+    return decode_step

@@ -1,0 +1,126 @@
+"""Architecture-generic decoder-only LM trunk (pre-LN transformer shell).
+
+Every architecture row in Tables 1/4 is this trunk with a different
+mixer plugged in (STLT or a baseline from baselines.py):
+
+    x = embed[tok] * sqrt(d) + posenc
+    repeat L: x += mixer(LN(x)); x += FFN(LN(x))
+    logits = LN(x) @ embed.T   (tied head)
+
+Params are nested dicts with deterministic ordering (see optim.flatten).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import baselines, stlt_layer
+from .config import ModelConfig
+
+
+def _posenc(n, d):
+    pos = np.arange(n)[:, None]
+    i = np.arange(d)[None, :]
+    angle = pos / np.power(10000.0, (2 * (i // 2)) / d)
+    pe = np.where(i % 2 == 0, np.sin(angle), np.cos(angle))
+    return jnp.asarray(pe.astype(np.float32))
+
+
+def uses_posenc(cfg: ModelConfig) -> bool:
+    return cfg.arch in ("vanilla", "linformer", "performer")
+
+
+def mixer_fns(cfg: ModelConfig):
+    if cfg.arch == "stlt":
+        return stlt_layer.init, stlt_layer.apply
+    return baselines.MIXERS[cfg.arch]
+
+
+def init(cfg: ModelConfig):
+    k = np.random.default_rng(cfg.seed)
+    d = cfg.d_model
+    mix_init, _ = mixer_fns(cfg)
+    layers = []
+    for li in range(cfg.n_layers):
+        layers.append(
+            {
+                "mixer": mix_init(cfg.seed * 1000 + li, cfg),
+                "ln1_g": jnp.ones((d,), jnp.float32),
+                "ln1_b": jnp.zeros((d,), jnp.float32),
+                "ln2_g": jnp.ones((d,), jnp.float32),
+                "ln2_b": jnp.zeros((d,), jnp.float32),
+                "ffn_w1": jnp.asarray(k.normal(0, 0.02, (d, d * cfg.ffn_mult)).astype(np.float32)),
+                "ffn_b1": jnp.zeros((d * cfg.ffn_mult,), jnp.float32),
+                "ffn_w2": jnp.asarray(k.normal(0, 0.02, (d * cfg.ffn_mult, d)).astype(np.float32)),
+                "ffn_b2": jnp.zeros((d,), jnp.float32),
+            }
+        )
+    return {
+        "embed": jnp.asarray(k.normal(0, 0.02, (cfg.vocab, d)).astype(np.float32)),
+        "layers": layers,
+        "lnf_g": jnp.ones((d,), jnp.float32),
+        "lnf_b": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def _ln(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _ffn(lp, x):
+    h = jax.nn.gelu(x @ lp["ffn_w1"] + lp["ffn_b1"])
+    return h @ lp["ffn_w2"] + lp["ffn_b2"]
+
+
+def apply(params, tokens, cfg: ModelConfig, *, rng_key=None, temp=1.0, train=False,
+          causal=True, noise_std=0.0):
+    """tokens [B, N] int32 -> (logits [B, N, V], reg, s_eff_mean).
+
+    noise_std > 0 adds Gaussian noise to the input embeddings (used by
+    the §4.7 robustness experiment — noise is part of the lowered graph
+    so Rust can sweep it as an input).
+    """
+    b, n = tokens.shape
+    d = cfg.d_model
+    x = params["embed"][tokens] * jnp.sqrt(jnp.float32(d))
+    if uses_posenc(cfg):
+        # recurrent mixers (stlt, ssm, fnet-causal) encode position via
+        # their decay kernels; absolute PE would break streaming (>n_ctx).
+        x = x + _posenc(n, d)[None]
+    if rng_key is None:
+        rng_key = jax.random.PRNGKey(0)
+    noise_key, rng_key = jax.random.split(rng_key)
+    x = x + noise_std * jax.random.normal(noise_key, x.shape, jnp.float32)
+    _, mix_apply = mixer_fns(cfg)
+    regs, seffs = [], []
+    for li, lp in enumerate(params["layers"]):
+        rng_key, sub = jax.random.split(rng_key)
+        z, reg, seff = mix_apply(
+            lp["mixer"], _ln(x, lp["ln1_g"], lp["ln1_b"]), cfg,
+            causal=causal, rng_key=sub, temp=temp, train=train,
+        )
+        x = x + z
+        x = x + _ffn(lp, _ln(x, lp["ln2_g"], lp["ln2_b"]))
+        regs.append(reg)
+        seffs.append(seff)
+    x = _ln(x, params["lnf_g"], params["lnf_b"])
+    logits = x @ params["embed"].T
+    return logits, sum(regs), sum(seffs) / len(seffs)
+
+
+def lm_loss(params, tokens, cfg: ModelConfig, *, rng_key=None, temp=1.0, train=False,
+            noise_std=0.0):
+    """tokens [B, N+1]: next-token CE averaged over B*N + Eq.Reg penalty.
+
+    Returns (loss_total, (ce, s_eff))."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits, reg, seff = apply(
+        params, inp, cfg, rng_key=rng_key, temp=temp, train=train, noise_std=noise_std
+    )
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ce = -jnp.mean(jnp.take_along_axis(logp, tgt[..., None], axis=-1))
+    return ce + reg, (ce, seff)

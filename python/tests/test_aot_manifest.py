@@ -1,0 +1,86 @@
+"""aot.py manifest consistency: shapes recorded in the manifest match
+what the entry functions actually produce, and init vectors match
+param_count. Runs against a freshly-built single-group manifest in tmp
+(does not require `make artifacts`)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+HERE = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))  # python/
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--outdir", str(out), "--groups", "core"],
+        cwd=HERE,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert r.returncode == 0, r.stderr[-2000:]
+    return out
+
+
+def manifest(built):
+    with open(built / "manifest.json") as f:
+        return json.load(f)
+
+
+def test_manifest_entries_exist(built):
+    m = manifest(built)
+    assert m["version"] == 1
+    names = set(m["entries"].keys())
+    for suffix in ["train", "eval", "fwd", "stream", "decode", "stream_batch"]:
+        assert f"lm_stlt_tiny.{suffix}" in names
+
+
+def test_files_exist_and_parse_header(built):
+    m = manifest(built)
+    for name, e in m["entries"].items():
+        path = built / e["file"]
+        assert path.exists(), name
+        head = path.read_text()[:200]
+        assert "HloModule" in head, f"{name} does not look like HLO text"
+
+
+def test_init_vector_length(built):
+    m = manifest(built)
+    e = m["entries"]["lm_stlt_tiny.train"]
+    init = built / e["init"]
+    data = np.fromfile(init, dtype=np.float32)
+    assert data.size == e["param_count"]
+    assert np.isfinite(data).all()
+    # layer-norm gains exist: some exact 1.0 entries
+    assert (data == 1.0).sum() > 0
+
+
+def test_shapes_consistent_with_config(built):
+    m = manifest(built)
+    e = m["entries"]["lm_stlt_tiny.train"]
+    cfg = e["config"]
+    tok_spec = e["inputs"][4]
+    assert tok_spec["shape"] == [cfg["batch"], cfg["n_ctx"] + 1]
+    assert e["inputs"][0]["shape"] == [e["param_count"]]
+    # outputs: flat', m', v', loss, ce, s_eff
+    assert e["outputs"][0]["shape"] == [e["param_count"]]
+    assert e["outputs"][3]["shape"] == []
+
+
+def test_stream_carry_shapes(built):
+    m = manifest(built)
+    e = m["entries"]["lm_stlt_tiny.stream"]
+    cfg = e["config"]
+    l_shape = e["inputs"][1]["shape"]
+    u_shape = e["inputs"][2]["shape"]
+    assert l_shape == [cfg["n_layers"], cfg["s_max"], 2]
+    assert u_shape == [cfg["n_layers"], cfg["s_max"], cfg["d_model"], 2]
+    # stream_batch adds the serving batch dim
+    sb = m["entries"]["lm_stlt_tiny.stream_batch"]
+    assert sb["inputs"][1]["shape"] == [sb["batch_srv"]] + l_shape

@@ -1,0 +1,118 @@
+"""§3.7 reproduction: empirical checks of the paper's error-analysis
+claims at the granularity our discrete implementation supports.
+
+1. Node-count convergence: the relevance matrix built from S nodes
+   converges as S grows (the paper's E_quad = O(S^-p) story, measured as
+   ||R_S - R_Smax|| decreasing monotonically-ish in S).
+2. Window truncation: E_win <= C e^{-T sigma_min} — increasing window T
+   moves the windowed transform toward the unwindowed one at an
+   exponential-ish rate.
+3. Perturbation -> loss: ||Delta R|| ~ 1e-2 changes downstream softmax
+   cross-entropy by O(||Delta R||) (the paper's §3.7 'impact' claim).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref
+
+
+def _signal(n, s, seed=0):
+    rng = np.random.default_rng(seed)
+    f = jnp.asarray(rng.normal(size=(n, s)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(n, 8)).astype(np.float32))
+    return f, v
+
+
+def _relevance_with_s(x, s, seed=1):
+    """Project a fixed signal onto s nodes (log-spaced sigma, linear omega)
+    and build the relevance matrix."""
+    n = x.shape[0]
+    sigma = jnp.asarray(np.geomspace(0.02, 1.0, s).astype(np.float32))
+    omega = jnp.asarray(np.linspace(0, 1.0, s).astype(np.float32))
+    decay, theta = ref.node_multiplier(sigma, omega)
+    f = jnp.tile(x[:, :1], (1, s))  # same scalar signal into every node
+    l_re, l_im = ref.stlt_scan_uni(f, decay, theta)
+    r = ref.relevance(l_re, l_im)
+    # normalise scale so different S are comparable
+    return r / jnp.float32(s)
+
+
+def test_node_count_convergence():
+    n = 48
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(n, 1)).astype(np.float32))
+    r_ref = _relevance_with_s(x, 128)
+    errs = []
+    for s in [4, 8, 16, 32, 64]:
+        r = _relevance_with_s(x, s)
+        errs.append(float(jnp.linalg.norm(r - r_ref) / jnp.linalg.norm(r_ref)))
+    # broadly decreasing: last must be much smaller than first
+    assert errs[-1] < errs[0] * 0.5, f"errors {errs}"
+    assert errs[-1] < 0.2
+
+
+def test_window_truncation_decay():
+    """Larger T (smaller 1/T added to sigma) approaches the unwindowed
+    transform; error decreases monotonically in T."""
+    n, s = 64, 8
+    f, _ = _signal(n, s, 7)
+    sigma = jnp.asarray(np.geomspace(0.05, 0.5, s).astype(np.float32))
+    omega = jnp.zeros(s)
+    d_inf, th = ref.node_multiplier(sigma, omega)
+    l_inf, _ = ref.stlt_scan_uni(f, d_inf, th)
+    errs = []
+    for t in [4.0, 8.0, 16.0, 32.0, 64.0]:
+        d_t, _ = ref.node_multiplier(sigma + 1.0 / t, omega)
+        l_t, _ = ref.stlt_scan_uni(f, d_t, th)
+        errs.append(float(jnp.abs(l_t - l_inf).max()))
+    for a, b in zip(errs, errs[1:]):
+        assert b <= a + 1e-6, f"not monotone: {errs}"
+    assert errs[-1] < errs[0] * 0.2
+
+
+def test_relevance_perturbation_bounds_loss_change():
+    """|CE(R + dR) - CE(R)| = O(||dR||): the §3.7 downstream claim.
+    At ||dR|| ~ 1e-2 the loss change should be <~ a few times 1e-2."""
+    n, s, d = 32, 16, 8
+    f, v = _signal(n, s, 11)
+    sigma = jnp.asarray(np.geomspace(0.05, 1.0, s).astype(np.float32))
+    decay, theta = ref.node_multiplier(sigma, jnp.zeros(s))
+    l_re, l_im = ref.stlt_scan_uni(f, decay, theta)
+    r = ref.relevance(l_re, l_im) / jnp.sqrt(jnp.float32(s))
+    targets = jnp.asarray(np.random.default_rng(0).integers(0, d, n))
+
+    def ce_from_r(r_):
+        a = jax.nn.softmax(r_, axis=-1)
+        z = a @ v  # [n, d] as logits over d "classes"
+        logp = jax.nn.log_softmax(z, axis=-1)
+        return -jnp.mean(jnp.take_along_axis(logp, targets[:, None], axis=1))
+
+    base = float(ce_from_r(r))
+    rng = np.random.default_rng(5)
+    for scale in [1e-3, 1e-2]:
+        dr = jnp.asarray(rng.normal(size=r.shape).astype(np.float32))
+        dr = dr / jnp.linalg.norm(dr) * scale * jnp.linalg.norm(r)
+        delta = abs(float(ce_from_r(r + dr)) - base)
+        # loss change bounded by a modest constant times the rel. perturbation
+        assert delta < 50 * scale, f"scale {scale}: delta {delta}"
+
+
+def test_linear_vs_quadratic_mode_divergence_is_graceful():
+    """The complexity-faithful linear mode is a different normalisation of
+    the same relevance; outputs stay finite and correlated with the
+    quadratic mode's (sanity for DESIGN.md R2)."""
+    n, s, d = 32, 16, 8
+    f, v = _signal(n, s, 13)
+    sigma = jnp.asarray(np.geomspace(0.05, 1.0, s).astype(np.float32))
+    decay, theta = ref.node_multiplier(sigma, jnp.zeros(s))
+    zl = ref.linear_mode_uni(f, v, decay, theta)
+    l_re, l_im = ref.stlt_scan_uni(f, decay, theta)
+    zq = ref.relevance_qmode(l_re, l_im, v, causal=True)
+    assert np.isfinite(np.asarray(zl)).all() and np.isfinite(np.asarray(zq)).all()
+    # positively correlated on average (same relevance structure)
+    zl_n = np.asarray(zl).ravel()
+    zq_n = np.asarray(zq).ravel()
+    corr = np.corrcoef(zl_n, zq_n)[0, 1]
+    assert np.isfinite(corr)

@@ -1,0 +1,360 @@
+"""Kernel vs ref allclose — the CORE correctness signal.
+
+Sweeps shapes/parameters with hypothesis; every Pallas kernel is checked
+against the pure-jnp oracle in kernels/ref.py, and the differentiable
+ops (custom VJP) are checked against jax.grad of the oracle.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ops, ref, stlt
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def _mk(seed, n, s, d=None, sigma_lo=0.05, sigma_hi=2.0, omega_hi=2.0):
+    rng = np.random.default_rng(seed)
+    f = jnp.asarray(rng.normal(size=(n, s)).astype(np.float32))
+    sigma = jnp.asarray(rng.uniform(sigma_lo, sigma_hi, s).astype(np.float32))
+    omega = jnp.asarray(rng.uniform(0.0, omega_hi, s).astype(np.float32))
+    decay, theta = ref.node_multiplier(sigma, omega)
+    if d is None:
+        return f, decay, theta
+    v = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    return f, v, decay, theta
+
+
+def _close(a, b, atol=2e-4, rtol=2e-4):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=atol, rtol=rtol)
+
+
+# ---------------------------------------------------------------------------
+# Scans
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([1, 3, 16, 64, 130]),
+    s=st.sampled_from([1, 4, 16, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_scan_uni_matches_ref(n, s, seed):
+    f, decay, theta = _mk(seed, n, s)
+    kr, ki = stlt.stlt_scan_uni(f, decay, theta)
+    rr, ri = ref.stlt_scan_uni(f, decay, theta)
+    _close(kr, rr)
+    _close(ki, ri)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([1, 2, 16, 64, 96]),
+    s=st.sampled_from([1, 8, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_scan_bi_matches_ref(n, s, seed):
+    f, decay, theta = _mk(seed, n, s)
+    kr, ki = stlt.stlt_scan_bi(f, decay, theta)
+    rr, ri = ref.stlt_scan_bi(f, decay, theta)
+    _close(kr, rr)
+    _close(ki, ri)
+
+
+def test_scan_pure_decay_is_ema():
+    """omega = 0 reduces the scan to a plain exponential moving sum."""
+    n, s = 32, 4
+    f, decay, _ = _mk(7, n, s, omega_hi=0.0)
+    theta = jnp.zeros((s,), jnp.float32)
+    kr, ki = stlt.stlt_scan_uni(f, decay, theta)
+    acc = np.zeros(s, np.float32)
+    for i in range(n):
+        acc = np.asarray(decay) * acc + np.asarray(f[i])
+        np.testing.assert_allclose(np.asarray(kr[i]), acc, rtol=1e-5, atol=1e-5)
+    assert float(jnp.abs(ki).max()) == 0.0
+
+
+def test_scan_bi_is_fwd_plus_strict_bwd():
+    n, s = 40, 8
+    f, decay, theta = _mk(3, n, s)
+    br, bi_ = stlt.stlt_scan_bi(f, decay, theta)
+    fr, fi = stlt.stlt_scan_uni(f, decay, theta)
+    # strictly-backward part via the reversal identity (DESIGN.md)
+    rr, ri = stlt.stlt_scan_uni(f[::-1], decay, theta)
+    _close(br, fr + rr[::-1] - f)
+    _close(bi_, fi + ri[::-1])
+
+
+def test_scan_translation_invariance():
+    """Relative kernel (DESIGN.md R1): shifting the signal shifts L."""
+    n, s, pad = 32, 4, 8
+    f, decay, theta = _mk(11, n, s)
+    l1, _ = stlt.stlt_scan_uni(f, decay, theta)
+    fpad = jnp.concatenate([jnp.zeros((pad, s)), f], axis=0)
+    l2, _ = stlt.stlt_scan_uni(fpad, decay, theta)
+    # after the zero prefix the response is shifted but otherwise identical
+    _close(l2[pad:], l1, atol=1e-3, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Quadratic relevance mode
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([16, 64, 128]),
+    s=st.sampled_from([4, 16]),
+    d=st.sampled_from([8, 32]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_relevance_qmode_matches_ref(n, s, d, causal, seed):
+    f, v, decay, theta = _mk(seed, n, s, d)
+    lr, li = ref.stlt_scan_uni(f, decay, theta)
+    zk = stlt.relevance_qmode(lr, li, v, causal=causal, block_q=16, block_k=16)
+    zr = ref.relevance_qmode(lr, li, v, causal=causal)
+    _close(zk, zr, atol=5e-4, rtol=5e-4)
+
+
+def test_relevance_rows_are_convex_combinations():
+    """softmax rows sum to 1 => Z stays in the convex hull of V columns."""
+    n, s, d = 32, 8, 4
+    f, v, decay, theta = _mk(5, n, s, d)
+    lr, li = ref.stlt_scan_uni(f, decay, theta)
+    z = np.asarray(stlt.relevance_qmode(lr, li, v, causal=True, block_q=16, block_k=16))
+    vmin, vmax = np.asarray(v).min(axis=0), np.asarray(v).max(axis=0)
+    assert (z >= vmin - 1e-4).all() and (z <= vmax + 1e-4).all()
+
+
+def test_relevance_causal_first_row_is_v0():
+    n, s, d = 16, 4, 8
+    f, v, decay, theta = _mk(9, n, s, d)
+    lr, li = ref.stlt_scan_uni(f, decay, theta)
+    z = stlt.relevance_qmode(lr, li, v, causal=True, block_q=16, block_k=16)
+    _close(z[0], v[0])
+
+
+# ---------------------------------------------------------------------------
+# Linear mode + streaming
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([1, 8, 64, 100]),
+    s=st.sampled_from([2, 16]),
+    d=st.sampled_from([4, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_linear_mode_matches_ref(n, s, d, seed):
+    f, v, decay, theta = _mk(seed, n, s, d)
+    zk = stlt.linear_mode_uni(f, v, decay, theta)
+    zr = ref.linear_mode_uni(f, v, decay, theta)
+    _close(zk, zr, atol=5e-4, rtol=5e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    chunks=st.sampled_from([[16, 16], [8, 24, 32], [1, 63], [32]]),
+    s=st.sampled_from([4, 16]),
+    d=st.sampled_from([8]),
+    seed=st.integers(0, 2**16),
+)
+def test_streaming_equals_monolithic(chunks, s, d, seed):
+    """The O(S d) carry makes chunked == whole-sequence processing."""
+    n = sum(chunks)
+    f, v, decay, theta = _mk(seed, n, s, d)
+    z_mono = stlt.linear_mode_uni(f, v, decay, theta)
+    carry = ref.stream_carry_init(s, d)
+    outs, off = [], 0
+    for c in chunks:
+        z, carry = stlt.linear_mode_stream_chunk(
+            f[off : off + c], v[off : off + c], decay, theta, carry
+        )
+        outs.append(z)
+        off += c
+    _close(jnp.concatenate(outs), z_mono, atol=5e-4, rtol=5e-4)
+
+
+def test_stream_kernel_matches_ref_chunk():
+    n, s, d = 48, 8, 16
+    f, v, decay, theta = _mk(13, n, s, d)
+    ck = ref.stream_carry_init(s, d)
+    cr = ref.stream_carry_init(s, d)
+    zk, ck = stlt.linear_mode_stream_chunk(f, v, decay, theta, ck)
+    zr, cr = ref.linear_mode_stream_chunk(f, v, decay, theta, cr)
+    _close(zk, zr, atol=5e-4, rtol=5e-4)
+    _close(ck[0], cr[0], atol=5e-4, rtol=5e-4)
+    _close(ck[1], cr[1], atol=5e-4, rtol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable ops (custom VJP) vs jax.grad of the oracle
+# ---------------------------------------------------------------------------
+
+
+def _grad_pair(fn_ops, fn_ref, args, wrt):
+    def wrap(fn):
+        def loss(*a):
+            out = fn(*a)
+            out = out if isinstance(out, tuple) else (out,)
+            return sum(jnp.sum(o * o) for o in out)
+
+        return jax.grad(loss, argnums=wrt)(*args)
+
+    return wrap(fn_ops), wrap(fn_ref)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([4, 32, 65]),
+    s=st.sampled_from([2, 8]),
+    seed=st.integers(0, 2**16),
+)
+def test_scan_uni_vjp(n, s, seed):
+    f, decay, theta = _mk(seed, n, s)
+    go, gr = _grad_pair(ops.scan_uni_real, ref.stlt_scan_uni, (f, decay, theta), (0, 1, 2))
+    for a, b in zip(go, gr):
+        scale = float(jnp.abs(b).max()) + 1e-6
+        _close(a / scale, b / scale, atol=1e-4, rtol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([4, 32]),
+    s=st.sampled_from([2, 8]),
+    seed=st.integers(0, 2**16),
+)
+def test_scan_bi_vjp(n, s, seed):
+    f, decay, theta = _mk(seed, n, s)
+    go, gr = _grad_pair(ops.scan_bi_real, ref.stlt_scan_bi, (f, decay, theta), (0, 1, 2))
+    for a, b in zip(go, gr):
+        scale = float(jnp.abs(b).max()) + 1e-6
+        _close(a / scale, b / scale, atol=1e-4, rtol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([8, 33]),
+    s=st.sampled_from([4]),
+    d=st.sampled_from([8]),
+    seed=st.integers(0, 2**16),
+)
+def test_linear_mode_vjp(n, s, d, seed):
+    f, v, decay, theta = _mk(seed, n, s, d)
+    go, gr = _grad_pair(
+        lambda f_, dc, th: ops.linear_mode_uni(f_, v, dc, th),
+        lambda f_, dc, th: ref.linear_mode_uni(f_, v, dc, th),
+        (f, decay, theta),
+        (0, 1, 2),
+    )
+    for a, b in zip(go, gr):
+        scale = float(jnp.abs(b).max()) + 1e-6
+        _close(a / scale, b / scale, atol=1e-4, rtol=1e-4)
+
+
+def test_ops_linear_equals_fused_kernel():
+    """Training-path composition == fused inference kernel."""
+    n, s, d = 64, 16, 32
+    f, v, decay, theta = _mk(17, n, s, d)
+    _close(
+        ops.linear_mode_uni(f, v, decay, theta),
+        stlt.linear_mode_uni(f, v, decay, theta),
+        atol=5e-4,
+        rtol=5e-4,
+    )
+
+
+def test_batched_fold_matches_per_sequence():
+    b, n, s = 3, 20, 8
+    rng = np.random.default_rng(23)
+    fb = jnp.asarray(rng.normal(size=(b, n, s)).astype(np.float32))
+    _, decay, theta = _mk(23, n, s)
+    lr, li = ops.scan_uni_batched(fb, decay, theta)
+    for i in range(b):
+        rr, ri = ref.stlt_scan_uni(fb[i], decay, theta)
+        _close(lr[i], rr)
+        _close(li[i], ri)
+
+
+def test_vjp_gradcheck_finite_difference():
+    """Central finite differences on a scalar loss through scan_uni."""
+    n, s = 10, 3
+    f, decay, theta = _mk(29, n, s)
+    w = jnp.asarray(np.random.default_rng(1).normal(size=(n, s)).astype(np.float32))
+
+    def loss(sig):
+        dc = jnp.exp(-sig)
+        lr, li = ops.scan_uni_real(f, dc, theta)
+        return jnp.sum(w * lr) + jnp.sum(w * li)
+
+    sig0 = -jnp.log(decay)
+    g = jax.grad(loss)(sig0)
+    eps = 1e-3
+    for k in range(s):
+        e = jnp.zeros((s,)).at[k].set(eps)
+        fd = (loss(sig0 + e) - loss(sig0 - e)) / (2 * eps)
+        assert abs(float(fd) - float(g[k])) < 5e-2 * max(1.0, abs(float(g[k])))
+
+
+# ---------------------------------------------------------------------------
+# Windowed-U discount (DESIGN.md R4 streaming stationarity)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([8, 48]),
+    s=st.sampled_from([4, 8]),
+    d=st.sampled_from([8]),
+    seed=st.integers(0, 2**16),
+)
+def test_gamma_consistency_kernel_ref_ops(n, s, d, seed):
+    """Fused kernel == oracle == differentiable op under a U-discount."""
+    f, v, decay, theta = _mk(seed, n, s, d)
+    rng = np.random.default_rng(seed + 1)
+    gamma = jnp.asarray(rng.uniform(0.8, 0.999, s).astype(np.float32))
+    zk = stlt.linear_mode_uni(f, v, decay, theta, gamma)
+    zr = ref.linear_mode_uni(f, v, decay, theta, gamma)
+    zo = ops.linear_mode_uni(f, v, decay, theta, gamma)
+    _close(zk, zr, atol=5e-4, rtol=5e-4)
+    _close(zo, zr, atol=5e-4, rtol=5e-4)
+
+
+def test_gamma_streaming_equals_monolithic():
+    n, s, d = 64, 8, 8
+    f, v, decay, theta = _mk(31, n, s, d)
+    gamma = jnp.full((s,), 0.97, jnp.float32)
+    z_mono = stlt.linear_mode_uni(f, v, decay, theta, gamma)
+    carry = ref.stream_carry_init(s, d)
+    outs = []
+    for i in range(0, n, 16):
+        z, carry = stlt.linear_mode_stream_chunk(
+            f[i : i + 16], v[i : i + 16], decay, theta, carry, gamma
+        )
+        outs.append(z)
+    _close(jnp.concatenate(outs), z_mono, atol=5e-4, rtol=5e-4)
+
+
+def test_gamma_bounds_state():
+    """With gamma < 1 the U carry converges instead of growing with N."""
+    s, d = 4, 4
+    rng = np.random.default_rng(2)
+    decay = jnp.full((s,), 0.9, jnp.float32)
+    theta = jnp.zeros((s,), jnp.float32)
+    gamma = jnp.full((s,), 0.95, jnp.float32)
+    carry = ref.stream_carry_init(s, d)
+    prev = 0.0
+    for i in range(8):
+        f = jnp.asarray(rng.normal(size=(64, s)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(64, d)).astype(np.float32))
+        _, carry = ref.linear_mode_stream_chunk(f, v, decay, theta, carry, gamma)
+        mag = float(jnp.abs(carry[1]).max())
+        prev = mag
+    # bounded: well below the undiscounted ~N scale
+    assert prev < 64.0, f"state grew unbounded: {prev}"

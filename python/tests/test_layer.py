@@ -1,0 +1,156 @@
+"""STLT layer unit tests: gating, regularisation, ablation stop-grads,
+linear/quadratic modes, streaming equivalence."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import stlt_layer, optim
+from compile.config import ModelConfig
+
+
+def cfg(**kw):
+    base = dict(arch="stlt", vocab=64, d_model=16, n_layers=1, n_ctx=32, s_max=8)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def x_batch(c, b=2, n=24, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, 1, (b, n, c.d_model)).astype(np.float32))
+
+
+def test_output_shape_and_finite():
+    c = cfg()
+    p = stlt_layer.init(0, c)
+    x = x_batch(c)
+    z, reg, seff = stlt_layer.apply(p, x, c, causal=True)
+    assert z.shape == x.shape
+    assert np.isfinite(np.asarray(z)).all()
+    assert float(seff) == c.s_max  # non-adaptive: all nodes active
+
+
+def test_adaptive_gate_masks_nodes():
+    c = cfg(adaptive=True)
+    p = stlt_layer.init(0, c)
+    x = x_batch(c)
+    # force gate mostly off
+    p["b_alpha"] = jnp.full((c.s_max,), -10.0)
+    _, _, seff = stlt_layer.apply(p, x, c, causal=True, train=False)
+    assert float(seff) < 0.5
+    p["b_alpha"] = jnp.full((c.s_max,), 10.0)
+    _, _, seff = stlt_layer.apply(p, x, c, causal=True, train=False)
+    assert float(seff) > c.s_max - 0.5
+
+
+def test_gate_zero_mask_silences_output():
+    c = cfg(adaptive=True)
+    p = stlt_layer.init(0, c)
+    x = x_batch(c)
+    p["b_alpha"] = jnp.full((c.s_max,), -30.0)
+    p["w_alpha"] = jnp.zeros_like(p["w_alpha"])
+    z, _, _ = stlt_layer.apply(p, x, c, causal=True, train=False)
+    assert float(jnp.abs(z).max()) < 1e-5
+
+
+def test_regulariser_terms():
+    c = cfg(adaptive=True, lambda_omega=1.0, lambda_sigma=0.0, lambda_mask=0.0)
+    p = stlt_layer.init(0, c)
+    m = jnp.ones((2, c.s_max))
+    r1 = stlt_layer.regulariser(p, m, c)
+    assert abs(float(r1) - float(jnp.sum(jnp.abs(p["omega"])))) < 1e-4
+    c2 = cfg(adaptive=True, lambda_omega=0.0, lambda_sigma=0.0, lambda_mask=2.0)
+    r2 = stlt_layer.regulariser(p, m, c2)
+    assert abs(float(r2) - 2.0 * c.s_max) < 1e-4
+
+
+def test_ablation_stop_gradients():
+    x = x_batch(cfg())
+    for flag, leaf in [("learn_sigma", "sigma_raw"), ("learn_omega", "omega"), ("learn_t", "t_raw")]:
+        c = cfg(**{flag: False})
+        p = stlt_layer.init(3, c)
+
+        def loss(p_):
+            z, reg, _ = stlt_layer.apply(p_, x, c, causal=True)
+            return jnp.sum(z * z) + reg
+
+        g = jax.grad(loss)(p)
+        assert float(jnp.abs(g[leaf]).max()) < 1e-8, f"{flag} leak via {leaf}"
+        # other projections still receive gradient
+        assert float(jnp.abs(g["w_f"]).max()) > 0
+
+
+def test_omega_zero_ablation():
+    c = cfg(omega_zero=True)
+    p = stlt_layer.init(1, c)
+    decay, theta, _, _ = stlt_layer.node_params(p, c)
+    assert float(jnp.abs(theta).max()) == 0.0
+
+
+def test_window_folds_into_decay():
+    c = cfg()
+    p = stlt_layer.init(0, c)
+    _, _, sigma, t = stlt_layer.node_params(p, c)
+    decay, _, _, _ = stlt_layer.node_params(p, c)
+    expect = jnp.exp(-(sigma + 1.0 / t))
+    assert np.allclose(np.asarray(decay), np.asarray(expect), atol=1e-6)
+
+
+def test_causality_linear_mode():
+    c = cfg()
+    p = stlt_layer.init(0, c)
+    x = x_batch(c, b=1, n=16)
+    z1, _, _ = stlt_layer.apply(p, x, c, causal=True)
+    x2 = x.at[0, -1].set(x[0, -1] + 5.0)
+    z2, _, _ = stlt_layer.apply(p, x2, c, causal=True)
+    # all positions except the last must be unchanged
+    assert np.allclose(np.asarray(z1[0, :-1]), np.asarray(z2[0, :-1]), atol=1e-5)
+    assert not np.allclose(np.asarray(z1[0, -1]), np.asarray(z2[0, -1]), atol=1e-3)
+
+
+def test_bilateral_sees_future():
+    c = cfg()
+    p = stlt_layer.init(0, c)
+    x = x_batch(c, b=1, n=16)
+    z1, _, _ = stlt_layer.apply(p, x, c, causal=False)
+    x2 = x.at[0, -1].set(x[0, -1] + 5.0)
+    z2, _, _ = stlt_layer.apply(p, x2, c, causal=False)
+    assert not np.allclose(np.asarray(z1[0, 0]), np.asarray(z2[0, 0]), atol=1e-5)
+
+
+def test_quadratic_mode_runs_and_is_causal():
+    c = cfg(mode="quadratic")
+    p = stlt_layer.init(0, c)
+    x = x_batch(c, b=1, n=16)
+    z1, _, _ = stlt_layer.apply(p, x, c, causal=True)
+    x2 = x.at[0, -1].set(x[0, -1] - 3.0)
+    z2, _, _ = stlt_layer.apply(p, x2, c, causal=True)
+    assert np.allclose(np.asarray(z1[0, :-1]), np.asarray(z2[0, :-1]), atol=1e-4)
+
+
+def test_streaming_matches_monolithic_layer():
+    c = cfg()
+    p = stlt_layer.init(0, c)
+    x = x_batch(c, b=1, n=32)[0]
+    z_full, _, _ = stlt_layer.apply(p, x[None], c, causal=True)
+    carry = stlt_layer.carry_init(c)
+    outs = []
+    for i in range(0, 32, 8):
+        z, carry = stlt_layer.apply_stream(p, x[i : i + 8], c, carry)
+        outs.append(z)
+    z_stream = jnp.concatenate(outs)
+    assert np.allclose(np.asarray(z_full[0]), np.asarray(z_stream), atol=2e-4)
+
+
+def test_gumbel_gate_stochastic_in_train_only():
+    c = cfg(adaptive=True)
+    p = stlt_layer.init(0, c)
+    x = x_batch(c)
+    k1, k2 = jax.random.PRNGKey(1), jax.random.PRNGKey(2)
+    m1, _ = stlt_layer.gate(p, x, c, k1, 1.0, train=True)
+    m2, _ = stlt_layer.gate(p, x, c, k2, 1.0, train=True)
+    assert not np.allclose(np.asarray(m1), np.asarray(m2))
+    e1, _ = stlt_layer.gate(p, x, c, k1, 1.0, train=False)
+    e2, _ = stlt_layer.gate(p, x, c, k2, 1.0, train=False)
+    assert np.allclose(np.asarray(e1), np.asarray(e2))

@@ -1,0 +1,99 @@
+"""Flat-vector packing and from-scratch AdamW."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import optim
+
+
+def tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "b": {"x": jnp.asarray(rng.normal(size=(3, 4)).astype(np.float32))},
+        "a": [jnp.asarray(rng.normal(size=(2,)).astype(np.float32)),
+              jnp.asarray(rng.normal(size=(5, 1)).astype(np.float32))],
+        "scalar": jnp.asarray([1.5], np.float32),
+    }
+
+
+def test_pack_unpack_roundtrip():
+    t = tree()
+    flat = optim.pack(t)
+    assert flat.shape == (12 + 2 + 5 + 1,)
+    t2 = optim.unpack(flat, t)
+    for a, b in zip(jax.tree_util.tree_leaves(t), jax.tree_util.tree_leaves(t2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_spec_deterministic_order():
+    s1 = optim.spec(tree(1))
+    s2 = optim.spec(tree(2))
+    assert [p for p, _, _ in s1] == [p for p, _, _ in s2]
+    # sorted by path
+    paths = [p for p, _, _ in s1]
+    assert paths == sorted(paths)
+
+
+def test_n_params():
+    assert optim.n_params(tree()) == 20
+
+
+def test_adamw_matches_manual_reference():
+    rng = np.random.default_rng(0)
+    p = jnp.asarray(rng.normal(size=(16,)).astype(np.float32))
+    g = jnp.asarray(rng.normal(size=(16,)).astype(np.float32))
+    m = jnp.zeros(16)
+    v = jnp.zeros(16)
+    lr, b1, b2, eps, wd = 1e-2, 0.9, 0.98, 1e-8, 0.05
+    p2, m2, v2 = optim.adamw_update(
+        p, g, m, v, jnp.int32(1), lr=lr, beta1=b1, beta2=b2, eps=eps, weight_decay=wd
+    )
+    # manual numpy reference
+    mm = (1 - b1) * np.asarray(g)
+    vv = (1 - b2) * np.asarray(g) ** 2
+    mhat = mm / (1 - b1)
+    vhat = vv / (1 - b2)
+    expect = np.asarray(p) - lr * (mhat / (np.sqrt(vhat) + eps) + wd * np.asarray(p))
+    np.testing.assert_allclose(np.asarray(p2), expect, atol=1e-6)
+
+
+def test_grad_clip_caps_norm():
+    p = jnp.zeros(4)
+    g = jnp.asarray([10.0, 0.0, 0.0, 0.0])
+    m = jnp.zeros(4)
+    v = jnp.zeros(4)
+    p2, m2, _ = optim.adamw_update(
+        p, g, m, v, jnp.int32(1), lr=1.0, beta1=0.0, beta2=0.0, grad_clip=1.0
+    )
+    # with clip, effective g has norm 1
+    assert abs(float(m2[0]) - 1.0) < 1e-5
+
+
+@settings(max_examples=20, deadline=None)
+@given(step=st.integers(0, 10_000))
+def test_lr_schedule_bounds(step):
+    lr = float(optim.lr_schedule(jnp.int32(step), 3e-4, 100, 2000))
+    assert 0.0 <= lr <= 3e-4 + 1e-9
+
+
+def test_lr_schedule_shape():
+    warm = float(optim.lr_schedule(jnp.int32(50), 3e-4, 100, 2000))
+    peak = float(optim.lr_schedule(jnp.int32(100), 3e-4, 100, 2000))
+    end = float(optim.lr_schedule(jnp.int32(2000), 3e-4, 100, 2000))
+    assert warm < peak
+    assert abs(peak - 3e-4) < 1e-8
+    assert abs(end - 0.1 * 3e-4) < 1e-8
+
+
+def test_adamw_descends_quadratic():
+    """AdamW minimises a simple quadratic."""
+    target = jnp.asarray(np.linspace(-1, 1, 8).astype(np.float32))
+    p = jnp.zeros(8)
+    m = jnp.zeros(8)
+    v = jnp.zeros(8)
+    for t in range(1, 200):
+        g = 2 * (p - target)
+        p, m, v = optim.adamw_update(p, g, m, v, jnp.int32(t), lr=3e-2, beta1=0.9, beta2=0.99)
+    assert float(jnp.abs(p - target).max()) < 0.05

@@ -1,0 +1,68 @@
+//! Coordinator benches: queue ops, dynamic batcher, state pool — the
+//! pure-Rust control plane must be microseconds against the model's
+//! milliseconds (paper §4.6: "overhead of adaptive node calculation
+//! was minimal"; here: overhead of coordination is minimal).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use stlt::bench::bench;
+use stlt::coordinator::{BatchPolicy, Batcher, BoundedQueue, StatePool};
+use stlt::runtime::StreamCarry;
+
+fn carry() -> StreamCarry {
+    StreamCarry {
+        l: vec![0.0; 2 * 32 * 2],
+        u: vec![0.0; 2 * 32 * 64 * 2],
+        l_shape: vec![2, 32, 2],
+        u_shape: vec![2, 32, 64, 2],
+    }
+}
+
+fn main() {
+    println!("== coordinator benches ==");
+    let mut results = Vec::new();
+
+    let q: BoundedQueue<u64> = BoundedQueue::new(1024);
+    results.push(bench("queue/push+pop x1000", 5, 200, || {
+        for i in 0..1000 {
+            q.try_push(i).unwrap();
+        }
+        for _ in 0..1000 {
+            q.pop();
+        }
+    }));
+
+    results.push(bench("batcher/1000 items batches of 4", 3, 100, || {
+        let q = Arc::new(BoundedQueue::new(2048));
+        for i in 0..1000u64 {
+            q.try_push(i).unwrap();
+        }
+        q.close();
+        let b = Batcher::new(q, BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(10) });
+        let mut n = 0;
+        while let Some(batch) = b.next_batch() {
+            n += batch.len();
+        }
+        assert_eq!(n, 1000);
+    }));
+
+    results.push(bench("statepool/admit+checkout+checkin x100", 5, 200, || {
+        let mut p = StatePool::new(64);
+        for i in 0..100u64 {
+            p.admit(i, carry());
+            let c = p.checkout(i).unwrap();
+            p.checkin(i, c, 64);
+        }
+    }));
+
+    // carry copy cost: the per-step state movement of the serving path
+    let c0 = carry();
+    results.push(bench("carry/clone (2x32x64 f32)", 10, 1000, || {
+        std::hint::black_box(c0.clone());
+    }));
+
+    for r in &results {
+        println!("{}", r.row());
+    }
+}

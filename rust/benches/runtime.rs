@@ -1,0 +1,64 @@
+//! Runtime benches: PJRT execution latency per artifact kind and the
+//! host<->literal conversion overhead on the hot path. EXPERIMENTS.md
+//! §Perf tracks these before/after optimization.
+
+use stlt::bench::{bench, bench_for};
+use stlt::runtime::{
+    default_artifacts_dir, exec::load_init_vec, EvalStep, Manifest, Runtime, StreamStep,
+    Tensor, TrainState, TrainStep,
+};
+
+fn main() {
+    println!("== runtime benches (requires `make artifacts`) ==");
+    let manifest = Manifest::load(default_artifacts_dir()).expect("make artifacts");
+    let rt = Runtime::cpu().unwrap();
+    let mut results = Vec::new();
+
+    // host<->literal conversion: 1M f32 roundtrip
+    let v = vec![1.0f32; 1_000_000];
+    results.push(bench("literal/1M f32 to_literal+back", 3, 30, || {
+        let t = Tensor::f32(v.clone(), &[1_000_000]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit, stlt::runtime::DType::F32, &[1_000_000]).unwrap();
+        std::hint::black_box(back.len());
+    }));
+
+    let e = manifest.get("lm_stlt_tiny.train").unwrap();
+    let flat = load_init_vec(e.init_file.as_ref().unwrap(), e.param_count).unwrap();
+
+    let eval = EvalStep::new(&rt, &manifest, "lm_stlt_tiny.eval").unwrap();
+    let mut gen = stlt::data::batch::LmBatcher::new(
+        stlt::data::corpus::CorpusConfig::default_for_vocab(e.config.vocab),
+        3,
+        eval.batch,
+        eval.n_plus_1,
+    );
+    let toks = gen.next_batch();
+    results.push(bench_for("exec/eval_step tiny (8x128)", 3.0, || {
+        std::hint::black_box(eval.run(&flat, &toks, 0.0, 0).unwrap());
+    }));
+
+    let ts = TrainStep::new(&rt, &manifest, "lm_stlt_tiny.train").unwrap();
+    let mut state = TrainState::from_entry(e).unwrap();
+    results.push(bench_for("exec/train_step tiny (8x128)", 5.0, || {
+        std::hint::black_box(ts.run(&mut state, &toks, 1).unwrap());
+    }));
+
+    let stream = StreamStep::new(&rt, &manifest, "lm_stlt_tiny.stream").unwrap();
+    let mut carry = stream.zero_carry();
+    let ctoks = vec![5i32; stream.chunk];
+    let mask = vec![1.0f32; stream.chunk];
+    results.push(bench_for("exec/stream_step tiny (chunk 64)", 3.0, || {
+        std::hint::black_box(stream.run(&flat, &mut carry, &ctoks, &ctoks, &mask).unwrap());
+    }));
+
+    for r in &results {
+        println!("{}", r.row());
+    }
+    println!(
+        "note: tokens/s -> eval {:.0}, train {:.0}, stream {:.0}",
+        (eval.batch * (eval.n_plus_1 - 1)) as f64 / results[1].p50_s,
+        (ts.batch * (ts.n_plus_1 - 1)) as f64 / results[2].p50_s,
+        stream.chunk as f64 / results[3].p50_s,
+    );
+}

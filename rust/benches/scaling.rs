@@ -1,0 +1,40 @@
+//! §4.6 bench: forward latency vs sequence length for linear-mode STLT,
+//! quadratic-mode STLT and vanilla attention (the figure-level claim:
+//! linear scaling vs quadratic). A compact version of
+//! examples/exp_scaling.rs suitable for `cargo bench`.
+
+use stlt::bench::{bench_for, fmt_time};
+use stlt::runtime::{default_artifacts_dir, exec::init_vec_host, Forward, Manifest, Runtime};
+
+fn main() {
+    println!("== scaling bench (requires `make artifacts`) ==");
+    let manifest = Manifest::load(default_artifacts_dir()).expect("make artifacts");
+    let rt = Runtime::cpu().unwrap();
+    for (prefix, ns) in [
+        ("scale_stlt_n", vec![256usize, 512, 1024, 2048]),
+        ("scale_stltq_n", vec![256, 512, 1024]),
+        ("scale_vanilla_n", vec![256, 512, 1024, 2048]),
+    ] {
+        let mut prev: Option<f64> = None;
+        for n in ns {
+            let name = format!("{prefix}{n}.fwd");
+            let fwd = Forward::new(&rt, &manifest, &name).unwrap();
+            let e = manifest.get(&name).unwrap();
+            let flat = init_vec_host(e.param_count, 1);
+            let tokens: Vec<i32> = (0..n as i32).map(|i| 4 + (i % 200)).collect();
+            let r = bench_for(&name, 1.5, || {
+                std::hint::black_box(fwd.run(&flat, &tokens).unwrap());
+            });
+            let ratio = prev.map(|p| r.p50_s / p).unwrap_or(0.0);
+            println!(
+                "{:24} p50 {:>10}   xN ratio {:.2}",
+                name,
+                fmt_time(r.p50_s),
+                ratio
+            );
+            prev = Some(r.p50_s);
+        }
+        println!();
+    }
+    println!("(linear model: ratio ~2 per doubling; quadratic: ratio ~4)");
+}

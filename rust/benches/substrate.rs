@@ -1,0 +1,60 @@
+//! Substrate micro-benchmarks (from-scratch harness, no criterion):
+//! RNG, corpus generation, tokenizer, JSON, metrics. These set the
+//! baseline showing the data path never bottlenecks the model path.
+
+use stlt::bench::{bench, bench_for};
+use stlt::data::corpus::{Corpus, CorpusConfig};
+use stlt::metrics::bleu4;
+use stlt::tokenizer::Bpe;
+use stlt::util::json::Json;
+use stlt::util::rng::Rng;
+
+fn main() {
+    println!("== substrate benches ==");
+    let mut results = Vec::new();
+
+    let mut rng = Rng::new(1);
+    results.push(bench("rng/u64 x1000", 10, 200, || {
+        let mut acc = 0u64;
+        for _ in 0..1000 {
+            acc ^= rng.next_u64();
+        }
+        std::hint::black_box(acc);
+    }));
+
+    let mut corpus = Corpus::new(CorpusConfig::default_for_vocab(256), 7);
+    results.push(bench("corpus/take(1024)", 5, 100, || {
+        std::hint::black_box(corpus.take(1024));
+    }));
+
+    let text = {
+        let mut c = Corpus::new(CorpusConfig::default_for_vocab(256), 9);
+        c.take(20_000).iter().map(|&t| (b'a' + (t % 26) as u8) as char).collect::<String>()
+    };
+    let bpe = Bpe::train(&text[..4000], 260 + 128);
+    results.push(bench_for("bpe/encode 4k chars", 0.5, || {
+        std::hint::black_box(bpe.encode(&text[..4000]));
+    }));
+
+    let manifest_text = std::fs::read_to_string("artifacts/manifest.json").ok();
+    if let Some(mt) = manifest_text {
+        results.push(bench("json/parse manifest", 3, 50, || {
+            std::hint::black_box(Json::parse(&mt).unwrap());
+        }));
+    }
+
+    let pairs: Vec<(Vec<i32>, Vec<i32>)> = (0..64)
+        .map(|i| {
+            let h: Vec<i32> = (0..32).map(|j| (i * 7 + j) % 100).collect();
+            let r: Vec<i32> = (0..32).map(|j| (i * 7 + j + (j % 5)) % 100).collect();
+            (h, r)
+        })
+        .collect();
+    results.push(bench("bleu4/64 pairs x32 tokens", 3, 100, || {
+        std::hint::black_box(bleu4(&pairs));
+    }));
+
+    for r in &results {
+        println!("{}", r.row());
+    }
+}

@@ -1,0 +1,115 @@
+//! From-scratch micro/macro benchmark harness (no criterion offline):
+//! warmup + timed iterations, reporting mean/p50/p95 and throughput.
+//! Used by rust/benches/*.rs (harness = false) and the experiment
+//! harnesses in examples/.
+
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "{:38} iters={:4}  mean={:>10}  p50={:>10}  p95={:>10}  min={:>10}",
+            self.name,
+            self.iters,
+            fmt_time(self.mean_s),
+            fmt_time(self.p50_s),
+            fmt_time(self.p95_s),
+            fmt_time(self.min_s),
+        )
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    summarize(name, &mut samples)
+}
+
+/// Adaptive: run for at least `min_total_s` seconds (at least 3 iters).
+pub fn bench_for<F: FnMut()>(name: &str, min_total_s: f64, mut f: F) -> BenchResult {
+    f(); // warmup
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while start.elapsed().as_secs_f64() < min_total_s || samples.len() < 3 {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if samples.len() > 10_000 {
+            break;
+        }
+    }
+    summarize(name, &mut samples)
+}
+
+fn summarize(name: &str, samples: &mut [f64]) -> BenchResult {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean_s: mean,
+        p50_s: samples[n / 2],
+        p95_s: samples[(n as f64 * 0.95) as usize % n],
+        min_s: samples[0],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_exact_iters() {
+        let mut count = 0;
+        let r = bench("noop", 2, 10, || count += 1);
+        assert_eq!(count, 12);
+        assert_eq!(r.iters, 10);
+        assert!(r.min_s <= r.p50_s && r.p50_s <= r.p95_s);
+    }
+
+    #[test]
+    fn bench_for_respects_budget() {
+        let r = bench_for("sleepy", 0.02, || std::thread::sleep(std::time::Duration::from_millis(2)));
+        assert!(r.iters >= 3);
+        assert!(r.mean_s >= 0.001);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2e-9).ends_with("ns"));
+        assert!(fmt_time(2e-5).ends_with("us"));
+        assert!(fmt_time(2e-2).ends_with("ms"));
+        assert!(fmt_time(2.0).ends_with("s"));
+    }
+}

@@ -1,0 +1,262 @@
+//! Experiment configuration: a from-scratch TOML-subset parser plus the
+//! typed configs the coordinator and experiment harnesses consume.
+//!
+//! Supported syntax: `[section.sub]` headers, `key = value` with string
+//! ("..."), integer, float, bool, and flat arrays of those. Comments (#)
+//! and blank lines are ignored. This covers every config in configs/.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed config: flat map from "section.key" to Value.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    pub values: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut section = String::new();
+        let mut values = BTreeMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(format!("line {}: bad section header", lineno + 1));
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{}.{}", section, k.trim())
+            };
+            let val = parse_value(v.trim())
+                .map_err(|e| format!("line {}: {}", lineno + 1, e))?;
+            values.insert(key, val);
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: &str) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Config::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default).to_string()
+    }
+
+    pub fn i64_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    /// Override from CLI-style "section.key=value" strings.
+    pub fn apply_overrides(&mut self, overrides: &[String]) -> Result<(), String> {
+        for o in overrides {
+            let (k, v) = o.split_once('=').ok_or_else(|| format!("bad override '{o}'"))?;
+            self.values.insert(k.trim().to_string(), parse_value(v.trim())?);
+        }
+        Ok(())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if s.starts_with('"') && s.ends_with('"') && s.len() >= 2 {
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') && s.ends_with(']') {
+        let inner = &s[1..s.len() - 1];
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in inner.split(',') {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::Arr(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value '{s}'"))
+}
+
+/// Typed training-run config consumed by coordinator::trainer.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub artifact: String,
+    pub steps: u64,
+    pub eval_every: u64,
+    pub eval_batches: u64,
+    pub seed: u64,
+    pub log_every: u64,
+    pub checkpoint: Option<String>,
+    pub corpus_seed: u64,
+    pub corpus_domain: String,
+}
+
+impl TrainConfig {
+    pub fn from_config(c: &Config) -> TrainConfig {
+        TrainConfig {
+            artifact: c.str_or("train.artifact", "lm_stlt_tiny"),
+            steps: c.i64_or("train.steps", 300) as u64,
+            eval_every: c.i64_or("train.eval_every", 100) as u64,
+            eval_batches: c.i64_or("train.eval_batches", 8) as u64,
+            seed: c.i64_or("train.seed", 0) as u64,
+            log_every: c.i64_or("train.log_every", 20) as u64,
+            checkpoint: c.get("train.checkpoint").and_then(|v| v.as_str()).map(String::from),
+            corpus_seed: c.i64_or("data.seed", 1234) as u64,
+            corpus_domain: c.str_or("data.domain", "default"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let c = Config::parse(
+            r#"
+# experiment
+[train]
+steps = 500
+lr = 0.0003          # comment after value
+artifact = "lm_stlt_tiny"
+resume = false
+[data]
+sizes = [1, 2, 3]
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.i64_or("train.steps", 0), 500);
+        assert!((c.f64_or("train.lr", 0.0) - 3e-4).abs() < 1e-12);
+        assert_eq!(c.str_or("train.artifact", ""), "lm_stlt_tiny");
+        assert!(!c.bool_or("train.resume", true));
+        match c.get("data.sizes").unwrap() {
+            Value::Arr(v) => assert_eq!(v.len(), 3),
+            _ => panic!("not array"),
+        }
+    }
+
+    #[test]
+    fn overrides() {
+        let mut c = Config::parse("[a]\nx = 1\n").unwrap();
+        c.apply_overrides(&["a.x=9".to_string(), "a.y=\"z\"".to_string()]).unwrap();
+        assert_eq!(c.i64_or("a.x", 0), 9);
+        assert_eq!(c.str_or("a.y", ""), "z");
+    }
+
+    #[test]
+    fn errors_are_located() {
+        let e = Config::parse("[a\n").unwrap_err();
+        assert!(e.contains("line 1"));
+        let e = Config::parse("[a]\nnovalue\n").unwrap_err();
+        assert!(e.contains("line 2"));
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let c = Config::parse("k = \"a#b\"\n").unwrap();
+        assert_eq!(c.str_or("k", ""), "a#b");
+    }
+
+    #[test]
+    fn ints_promote_to_float() {
+        let c = Config::parse("k = 3\n").unwrap();
+        assert_eq!(c.f64_or("k", 0.0), 3.0);
+    }
+
+    #[test]
+    fn typed_train_config_defaults() {
+        let c = Config::parse("").unwrap();
+        let t = TrainConfig::from_config(&c);
+        assert_eq!(t.artifact, "lm_stlt_tiny");
+        assert_eq!(t.steps, 300);
+        assert!(t.checkpoint.is_none());
+    }
+}

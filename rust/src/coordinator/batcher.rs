@@ -1,0 +1,125 @@
+//! Dynamic batcher: groups per-session stream chunks into fixed-size
+//! model batches under a latency deadline (the continuous-batching idea
+//! from serving systems, adapted to STLT's carry-state model).
+//!
+//! Policy: block for the first item, then drain whatever else is queued
+//! up to `max_batch` or until `max_wait` elapses. Partially-filled
+//! batches are padded with inactive rows (active=0), which the
+//! `stream_batch` artifact guarantees leave carries untouched.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::queue::BoundedQueue;
+
+#[derive(Clone, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) }
+    }
+}
+
+pub struct Batcher<T> {
+    queue: Arc<BoundedQueue<T>>,
+    pub policy: BatchPolicy,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(queue: Arc<BoundedQueue<T>>, policy: BatchPolicy) -> Self {
+        Batcher { queue, policy }
+    }
+
+    /// Next batch: blocks for the first element (None = queue closed),
+    /// then fills greedily until max_batch or max_wait.
+    pub fn next_batch(&self) -> Option<Vec<T>> {
+        let first = self.queue.pop()?;
+        let mut batch = vec![first];
+        let deadline = Instant::now() + self.policy.max_wait;
+        while batch.len() < self.policy.max_batch {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                // final non-blocking sweep
+                batch.extend(self.queue.drain_up_to(self.policy.max_batch - batch.len()));
+                break;
+            }
+            match self.queue.pop_timeout(remaining) {
+                Some(x) => batch.push(x),
+                None => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn setup(cap: usize, policy: BatchPolicy) -> (Arc<BoundedQueue<u32>>, Batcher<u32>) {
+        let q = Arc::new(BoundedQueue::new(cap));
+        let b = Batcher::new(Arc::clone(&q), policy);
+        (q, b)
+    }
+
+    #[test]
+    fn batches_up_to_max() {
+        let (q, b) = setup(16, BatchPolicy { max_batch: 3, max_wait: Duration::from_millis(5) });
+        for i in 0..7 {
+            q.try_push(i).unwrap();
+        }
+        assert_eq!(b.next_batch().unwrap(), vec![0, 1, 2]);
+        assert_eq!(b.next_batch().unwrap(), vec![3, 4, 5]);
+        assert_eq!(b.next_batch().unwrap(), vec![6]);
+    }
+
+    #[test]
+    fn deadline_returns_partial() {
+        let (q, b) = setup(16, BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(10) });
+        q.try_push(1).unwrap();
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch, vec![1]);
+        assert!(t0.elapsed() < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn waits_for_first_item() {
+        let (q, b) = setup(16, BatchPolicy::default());
+        let qp = Arc::clone(&q);
+        thread::spawn(move || {
+            thread::sleep(Duration::from_millis(20));
+            qp.try_push(9).unwrap();
+        });
+        assert_eq!(b.next_batch().unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn closed_queue_ends_batching() {
+        let (q, b) = setup(16, BatchPolicy::default());
+        q.try_push(1).unwrap();
+        q.close();
+        assert_eq!(b.next_batch().unwrap(), vec![1]);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn late_arrivals_join_within_window() {
+        let (q, b) =
+            setup(16, BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(50) });
+        q.try_push(1).unwrap();
+        let qp = Arc::clone(&q);
+        thread::spawn(move || {
+            thread::sleep(Duration::from_millis(5));
+            qp.try_push(2).unwrap();
+            qp.try_push(3).unwrap();
+        });
+        let batch = b.next_batch().unwrap();
+        assert!(batch.len() >= 2, "late arrivals should join: {batch:?}");
+    }
+}

@@ -1,0 +1,19 @@
+//! Layer-3 coordinator: training driver + streaming inference server
+//! (router/batcher/state-pool/backpressure). This is where the paper's
+//! "streaming-friendly, O(S d) state" claim becomes a serving system.
+
+pub mod batcher;
+pub mod beam;
+pub mod queue;
+pub mod sampling;
+pub mod server;
+pub mod state;
+pub mod trainer;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use beam::{beam_search, StepScorer};
+pub use sampling::Sampling;
+pub use queue::BoundedQueue;
+pub use server::{FeedResult, GenResult, Server, ServerOpts};
+pub use state::{Admit, StatePool};
+pub use trainer::{eval_lm, load_checkpoint, save_checkpoint, train_lm, TrainOpts, TrainReport};

@@ -1,0 +1,217 @@
+//! Bounded MPMC queue with blocking push (backpressure) and close
+//! semantics — the admission-control primitive of the streaming server.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    cap: usize,
+}
+
+struct Inner<T> {
+    q: VecDeque<T>,
+    closed: bool,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum PushError {
+    Closed,
+    Timeout,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(cap: usize) -> Self {
+        BoundedQueue {
+            inner: Mutex::new(Inner { q: VecDeque::new(), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Blocking push; applies backpressure when full. Err on close/timeout.
+    pub fn push(&self, item: T, timeout: Duration) -> Result<(), PushError> {
+        let mut g = self.inner.lock().unwrap();
+        let deadline = std::time::Instant::now() + timeout;
+        while g.q.len() >= self.cap && !g.closed {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Err(PushError::Timeout);
+            }
+            let (ng, res) = self.not_full.wait_timeout(g, deadline - now).unwrap();
+            g = ng;
+            if res.timed_out() && g.q.len() >= self.cap && !g.closed {
+                return Err(PushError::Timeout);
+            }
+        }
+        if g.closed {
+            return Err(PushError::Closed);
+        }
+        g.q.push_back(item);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Non-blocking push; Err(item) if full or closed (load shedding).
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed || g.q.len() >= self.cap {
+            return Err(item);
+        }
+        g.q.push_back(item);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop; None when closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(x) = g.q.pop_front() {
+                self.not_full.notify_one();
+                return Some(x);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Pop with timeout; None on timeout or closed+empty.
+    pub fn pop_timeout(&self, timeout: Duration) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            if let Some(x) = g.q.pop_front() {
+                self.not_full.notify_one();
+                return Some(x);
+            }
+            if g.closed {
+                return None;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (ng, _) = self.not_empty.wait_timeout(g, deadline - now).unwrap();
+            g = ng;
+        }
+    }
+
+    /// Drain up to `max` items without blocking (after one blocking pop —
+    /// see Batcher). Returns possibly-empty vec.
+    pub fn drain_up_to(&self, max: usize) -> Vec<T> {
+        let mut g = self.inner.lock().unwrap();
+        let n = g.q.len().min(max);
+        let out: Vec<T> = g.q.drain(..n).collect();
+        if !out.is_empty() {
+            self.not_full.notify_all();
+        }
+        out
+    }
+
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+
+    #[test]
+    fn fifo_order() {
+        let q = BoundedQueue::new(10);
+        for i in 0..5 {
+            q.try_push(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(q.pop(), Some(i));
+        }
+    }
+
+    #[test]
+    fn backpressure_try_push() {
+        let q = BoundedQueue::new(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert_eq!(q.try_push(3), Err(3));
+        q.pop();
+        q.try_push(3).unwrap();
+    }
+
+    #[test]
+    fn push_timeout_when_full() {
+        let q = BoundedQueue::new(1);
+        q.try_push(1).unwrap();
+        let e = q.push(2, Duration::from_millis(20)).unwrap_err();
+        assert_eq!(e, PushError::Timeout);
+    }
+
+    #[test]
+    fn close_wakes_consumers() {
+        let q = Arc::new(BoundedQueue::<u32>::new(4));
+        let q2 = Arc::clone(&q);
+        let h = thread::spawn(move || q2.pop());
+        thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert_eq!(h.join().unwrap(), None);
+    }
+
+    #[test]
+    fn close_drains_remaining() {
+        let q = BoundedQueue::new(4);
+        q.try_push(7).unwrap();
+        q.close();
+        assert_eq!(q.pop(), Some(7));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.try_push(8), Err(8));
+    }
+
+    #[test]
+    fn producer_consumer_threads() {
+        let q = Arc::new(BoundedQueue::new(8));
+        let qp = Arc::clone(&q);
+        let producer = thread::spawn(move || {
+            for i in 0..1000u32 {
+                qp.push(i, Duration::from_secs(5)).unwrap();
+            }
+            qp.close();
+        });
+        let mut got = Vec::new();
+        while let Some(x) = q.pop() {
+            got.push(x);
+        }
+        producer.join().unwrap();
+        assert_eq!(got, (0..1000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn drain_up_to_bounds() {
+        let q = BoundedQueue::new(10);
+        for i in 0..6 {
+            q.try_push(i).unwrap();
+        }
+        let d = q.drain_up_to(4);
+        assert_eq!(d, vec![0, 1, 2, 3]);
+        assert_eq!(q.len(), 2);
+    }
+}

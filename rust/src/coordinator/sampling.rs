@@ -1,0 +1,151 @@
+//! Token sampling policies for generation: greedy, temperature,
+//! top-k, nucleus (top-p) — the serving-side decode controls.
+
+use crate::metrics::{argmax, log_softmax};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Sampling {
+    Greedy,
+    /// softmax temperature (1.0 = model distribution)
+    Temperature(f32),
+    /// keep only the k most likely tokens, renormalise
+    TopK(usize, f32),
+    /// nucleus sampling: smallest set with cumulative prob >= p
+    TopP(f32, f32),
+}
+
+impl Sampling {
+    /// Parse "greedy" | "temp:0.8" | "topk:40:0.8" | "topp:0.9:1.0".
+    pub fn parse(s: &str) -> Result<Sampling, String> {
+        let parts: Vec<&str> = s.split(':').collect();
+        match parts[0] {
+            "greedy" => Ok(Sampling::Greedy),
+            "temp" => Ok(Sampling::Temperature(
+                parts.get(1).and_then(|v| v.parse().ok()).ok_or("temp:T")?,
+            )),
+            "topk" => {
+                let k = parts.get(1).and_then(|v| v.parse().ok()).ok_or("topk:K:T")?;
+                let t = parts.get(2).and_then(|v| v.parse().ok()).unwrap_or(1.0);
+                Ok(Sampling::TopK(k, t))
+            }
+            "topp" => {
+                let p = parts.get(1).and_then(|v| v.parse().ok()).ok_or("topp:P:T")?;
+                let t = parts.get(2).and_then(|v| v.parse().ok()).unwrap_or(1.0);
+                Ok(Sampling::TopP(p, t))
+            }
+            other => Err(format!("unknown sampling '{other}'")),
+        }
+    }
+
+    /// Draw the next token id from `logits`.
+    pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> usize {
+        match *self {
+            Sampling::Greedy => argmax(logits),
+            Sampling::Temperature(t) => Self::draw(logits, t, None, None, rng),
+            Sampling::TopK(k, t) => Self::draw(logits, t, Some(k), None, rng),
+            Sampling::TopP(p, t) => Self::draw(logits, t, None, Some(p), rng),
+        }
+    }
+
+    fn draw(
+        logits: &[f32],
+        temp: f32,
+        top_k: Option<usize>,
+        top_p: Option<f32>,
+        rng: &mut Rng,
+    ) -> usize {
+        let temp = temp.max(1e-4);
+        let scaled: Vec<f32> = logits.iter().map(|x| x / temp).collect();
+        let logp = log_softmax(&scaled);
+        // candidate set sorted by probability desc
+        let mut order: Vec<usize> = (0..logp.len()).collect();
+        order.sort_by(|&a, &b| logp[b].partial_cmp(&logp[a]).unwrap());
+        let mut keep = order.len();
+        if let Some(k) = top_k {
+            keep = keep.min(k.max(1));
+        }
+        if let Some(p) = top_p {
+            let mut acc = 0.0f32;
+            let mut np = 0usize;
+            for &i in order.iter().take(keep) {
+                acc += logp[i].exp();
+                np += 1;
+                if acc >= p {
+                    break;
+                }
+            }
+            keep = np.max(1);
+        }
+        let probs: Vec<f64> = order[..keep].iter().map(|&i| logp[i].exp() as f64).collect();
+        order[rng.categorical(&probs)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn logits() -> Vec<f32> {
+        vec![0.0, 3.0, 1.0, -2.0, 2.0]
+    }
+
+    #[test]
+    fn parse_forms() {
+        assert_eq!(Sampling::parse("greedy").unwrap(), Sampling::Greedy);
+        assert_eq!(Sampling::parse("temp:0.5").unwrap(), Sampling::Temperature(0.5));
+        assert_eq!(Sampling::parse("topk:40:0.8").unwrap(), Sampling::TopK(40, 0.8));
+        assert_eq!(Sampling::parse("topp:0.9").unwrap(), Sampling::TopP(0.9, 1.0));
+        assert!(Sampling::parse("nope").is_err());
+    }
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let mut rng = Rng::new(1);
+        assert_eq!(Sampling::Greedy.sample(&logits(), &mut rng), 1);
+    }
+
+    #[test]
+    fn low_temperature_approaches_greedy() {
+        let mut rng = Rng::new(2);
+        for _ in 0..50 {
+            assert_eq!(Sampling::Temperature(0.01).sample(&logits(), &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn topk1_is_greedy() {
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            assert_eq!(Sampling::TopK(1, 1.0).sample(&logits(), &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn topk_excludes_tail() {
+        let mut rng = Rng::new(4);
+        for _ in 0..200 {
+            let t = Sampling::TopK(2, 1.0).sample(&logits(), &mut rng);
+            assert!(t == 1 || t == 4, "token {t} outside top-2");
+        }
+    }
+
+    #[test]
+    fn topp_small_keeps_head() {
+        let mut rng = Rng::new(5);
+        for _ in 0..100 {
+            // head prob of token 1 is ~0.59; p=0.5 keeps only it
+            assert_eq!(Sampling::TopP(0.5, 1.0).sample(&logits(), &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn temperature_sampling_covers_support() {
+        let mut rng = Rng::new(6);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..500 {
+            seen.insert(Sampling::Temperature(2.0).sample(&logits(), &mut rng));
+        }
+        assert!(seen.len() >= 4, "high temperature should explore: {seen:?}");
+    }
+}

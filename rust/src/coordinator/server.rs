@@ -1,0 +1,476 @@
+//! Streaming inference server: the L3 coordination contribution.
+//!
+//! Architecture (vLLM-router-shaped, adapted to STLT's O(S d) carries):
+//!
+//!   clients --> BoundedQueue (admission control / backpressure)
+//!            --> Batcher (deadline-based dynamic batching)
+//!            --> model thread (single PJRT owner)
+//!                 * Feed chunks: packed into the `stream_batch`
+//!                   artifact, padded with inactive rows
+//!                 * Generate: token-by-token via `decode_step`
+//!            --> per-request response channels
+//!
+//! Session carries live in the StatePool ("KV-cache analog"): admitting
+//! beyond capacity LRU-evicts an idle session. All latencies are
+//! recorded in log-bucket histograms.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::metrics::Histogram;
+use crate::runtime::artifact::Entry;
+use crate::runtime::exec as stlt_exec;
+use crate::runtime::{Manifest, Runtime, StreamCarry, Tensor};
+
+// The xla PJRT handles are !Send (Rc + raw pointers), so the model
+// thread constructs its own Runtime and is the only thread to touch it;
+// everything crossing the thread boundary is plain data.
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::sampling::Sampling;
+use super::queue::{BoundedQueue, PushError};
+use super::state::{Admit, StatePool};
+
+pub struct ServerOpts {
+    pub queue_cap: usize,
+    pub max_sessions: usize,
+    pub policy: BatchPolicy,
+}
+
+impl Default for ServerOpts {
+    fn default() -> Self {
+        ServerOpts { queue_cap: 64, max_sessions: 16, policy: BatchPolicy::default() }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct FeedResult {
+    pub nll_sum: f64,
+    pub count: f64,
+    pub evicted: Option<u64>,
+}
+
+#[derive(Clone, Debug)]
+pub struct GenResult {
+    pub tokens: Vec<i32>,
+}
+
+enum Request {
+    Feed { session: u64, tokens: Vec<i32>, count_loss: bool, resp: mpsc::Sender<Result<FeedResult>> },
+    Generate { session: u64, seed_token: i32, max_tokens: usize, stop: Option<i32>, sampling: Sampling, rng_seed: u64, resp: mpsc::Sender<Result<GenResult>> },
+    Release { session: u64 },
+}
+
+#[derive(Default)]
+pub struct ServerStats {
+    pub feeds: AtomicU64,
+    pub gens: AtomicU64,
+    pub evictions: AtomicU64,
+    pub shed: AtomicU64,
+    pub tokens_streamed: AtomicU64,
+    pub batch_fill: Mutex<Vec<usize>>,
+    pub feed_latency: Mutex<Histogram>,
+    pub gen_latency: Mutex<Histogram>,
+}
+
+pub struct Server {
+    queue: Arc<BoundedQueue<(Request, Instant)>>,
+    pub stats: Arc<ServerStats>,
+    worker: Option<thread::JoinHandle<()>>,
+}
+
+struct ModelThread {
+    rt: Runtime,
+    /// weights pre-uploaded as a PJRT buffer (§Perf L3-1): no per-call copy
+    params: stlt_exec::ParamBuf,
+    stream_entry: Entry,
+    decode_entry: Entry,
+    chunk: usize,
+    b_srv: usize,
+    pool: StatePool,
+    stats: Arc<ServerStats>,
+}
+
+impl Server {
+    /// `artifact_base` e.g. "lm_stlt_tiny"; `flat` the trained params.
+    /// The PJRT runtime is created *inside* the model thread (xla handles
+    /// are !Send); start() blocks until both executables are compiled.
+    pub fn start(
+        manifest: &Manifest,
+        artifact_base: &str,
+        flat: Vec<f32>,
+        opts: ServerOpts,
+    ) -> Result<Server> {
+        let stream_entry = manifest.get(&format!("{artifact_base}.stream_batch"))?.clone();
+        let decode_entry = manifest.get(&format!("{artifact_base}.decode"))?.clone();
+        let chunk = *stream_entry.extra.get("chunk").ok_or_else(|| anyhow!("no chunk"))? as usize;
+        let b_srv =
+            *stream_entry.extra.get("batch_srv").ok_or_else(|| anyhow!("no batch_srv"))? as usize;
+
+        let queue = Arc::new(BoundedQueue::new(opts.queue_cap));
+        let stats = Arc::new(ServerStats::default());
+        let batcher = Batcher::new(Arc::clone(&queue), opts.policy.clone());
+        let stats_thread = Arc::clone(&stats);
+        let max_sessions = opts.max_sessions;
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let worker = thread::Builder::new()
+            .name("stlt-model".into())
+            .spawn(move || {
+                let rt = match Runtime::cpu() {
+                    Ok(rt) => rt,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                // pre-compile both executables before accepting traffic
+                if let Err(e) = rt.load(&stream_entry).and_then(|_| rt.load(&decode_entry)) {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+                // upload the weights once (§Perf L3-1)
+                let params = match stlt_exec::upload_params(&rt, &stream_entry, &flat) {
+                    Ok(p) => p,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let _ = ready_tx.send(Ok(()));
+                let mut mt = ModelThread {
+                    rt,
+                    params,
+                    stream_entry,
+                    decode_entry,
+                    chunk,
+                    b_srv,
+                    pool: StatePool::new(max_sessions),
+                    stats: stats_thread,
+                };
+                while let Some(batch) = batcher.next_batch() {
+                    mt.process(batch);
+                }
+            })
+            .expect("spawn model thread");
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("model thread died during startup"))??;
+        Ok(Server { queue, stats, worker: Some(worker) })
+    }
+
+    fn submit(&self, req: Request) -> Result<()> {
+        match self.queue.push((req, Instant::now()), Duration::from_secs(30)) {
+            Ok(()) => Ok(()),
+            Err(PushError::Timeout) => {
+                self.stats.shed.fetch_add(1, Ordering::Relaxed);
+                Err(anyhow!("server overloaded (backpressure timeout)"))
+            }
+            Err(PushError::Closed) => Err(anyhow!("server shut down")),
+        }
+    }
+
+    /// Stream a chunk of document tokens into a session. Blocking.
+    pub fn feed(&self, session: u64, tokens: Vec<i32>, count_loss: bool) -> Result<FeedResult> {
+        let (tx, rx) = mpsc::channel();
+        self.submit(Request::Feed { session, tokens, count_loss, resp: tx })?;
+        rx.recv().map_err(|_| anyhow!("model thread dropped request"))?
+    }
+
+    /// Greedy generation continuing a session from `seed_token` (the
+    /// last prompt token, which feed() leaves unconsumed). Blocking.
+    pub fn generate(
+        &self,
+        session: u64,
+        seed_token: i32,
+        max_tokens: usize,
+        stop: Option<i32>,
+    ) -> Result<GenResult> {
+        self.generate_with(session, seed_token, max_tokens, stop, Sampling::Greedy, 0)
+    }
+
+    /// Generation with an explicit sampling policy (temperature / top-k /
+    /// nucleus) and RNG seed for reproducible stochastic decoding.
+    pub fn generate_with(
+        &self,
+        session: u64,
+        seed_token: i32,
+        max_tokens: usize,
+        stop: Option<i32>,
+        sampling: Sampling,
+        rng_seed: u64,
+    ) -> Result<GenResult> {
+        let (tx, rx) = mpsc::channel();
+        self.submit(Request::Generate {
+            session, seed_token, max_tokens, stop, sampling, rng_seed, resp: tx,
+        })?;
+        rx.recv().map_err(|_| anyhow!("model thread dropped request"))?
+    }
+
+    pub fn release(&self, session: u64) -> Result<()> {
+        self.submit(Request::Release { session })
+    }
+
+    pub fn shutdown(mut self) {
+        self.queue.close();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.queue.close();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl ModelThread {
+    fn process(&mut self, batch: Vec<(Request, Instant)>) {
+        let mut feeds = Vec::new();
+        for (req, t0) in batch {
+            match req {
+                Request::Feed { session, tokens, count_loss, resp } => {
+                    feeds.push((session, tokens, count_loss, resp, t0));
+                }
+                Request::Generate { session, seed_token, max_tokens, stop, sampling, rng_seed, resp } => {
+                    let r = self.run_generate(session, seed_token, max_tokens, stop, sampling, rng_seed);
+                    self.stats.gens.fetch_add(1, Ordering::Relaxed);
+                    self.stats.gen_latency.lock().unwrap().record(t0.elapsed().as_secs_f64());
+                    let _ = resp.send(r);
+                }
+                Request::Release { session } => {
+                    self.pool.release(session);
+                }
+            }
+        }
+        // process feeds in waves of b_srv sessions
+        while !feeds.is_empty() {
+            let wave: Vec<_> = feeds.drain(..feeds.len().min(self.b_srv)).collect();
+            self.run_feed_wave(wave);
+        }
+    }
+
+    fn admit_session(&mut self, session: u64) -> Option<u64> {
+        if self.pool.contains(session) {
+            return None;
+        }
+        let carry = StreamCarry::zeros(&self.stream_entry_single());
+        match self.pool.admit(session, carry) {
+            Admit::Evicted(v) => {
+                self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+                Some(v)
+            }
+            _ => None,
+        }
+    }
+
+    /// Per-session carry shapes = stream_batch shapes minus batch dim.
+    fn stream_entry_single(&self) -> Entry {
+        let mut e = self.stream_entry.clone();
+        e.inputs[1].shape = self.stream_entry.inputs[1].shape[1..].to_vec();
+        e.inputs[2].shape = self.stream_entry.inputs[2].shape[1..].to_vec();
+        e
+    }
+
+    /// One wave: up to b_srv sessions, each feeding up to `chunk` tokens
+    /// per model call, iterating until every session's tokens are drained.
+    fn run_feed_wave(
+        &mut self,
+        wave: Vec<(u64, Vec<i32>, bool, mpsc::Sender<Result<FeedResult>>, Instant)>,
+    ) {
+        let b = self.b_srv;
+        let c = self.chunk;
+        let mut sessions = Vec::new();
+        for (session, tokens, count_loss, resp, t0) in wave {
+            let evicted = self.admit_session(session);
+            sessions.push((session, tokens, count_loss, resp, t0, evicted, 0.0f64, 0.0f64, 0usize));
+        }
+        self.stats.batch_fill.lock().unwrap().push(sessions.len());
+        loop {
+            // build one batched chunk step
+            let mut any = false;
+            let mut l_all = Vec::new();
+            let mut u_all = Vec::new();
+            let mut toks = vec![0i32; b * c];
+            let mut tgts = vec![0i32; b * c];
+            let mut mask = vec![0f32; b * c];
+            let mut active = vec![0f32; b];
+            let mut carries: Vec<Option<StreamCarry>> = Vec::with_capacity(b);
+            let mut consumed = vec![0usize; sessions.len()];
+            for (i, (session, tokens, count_loss, _, _, _, _, _, off)) in
+                sessions.iter().enumerate()
+            {
+                if i >= b {
+                    break;
+                }
+                let remaining = tokens.len().saturating_sub(*off);
+                if remaining <= 1 {
+                    carries.push(None);
+                    continue;
+                }
+                let take = remaining.min(c + 1); // need next-token targets
+                let slice = &tokens[*off..*off + take];
+                let n_in = take - 1;
+                for j in 0..n_in {
+                    toks[i * c + j] = slice[j];
+                    tgts[i * c + j] = slice[j + 1];
+                    mask[i * c + j] = if *count_loss { 1.0 } else { 0.0 };
+                }
+                active[i] = 1.0;
+                any = true;
+                consumed[i] = n_in;
+                let carry = self.pool.checkout(*session).expect("session admitted");
+                carries.push(Some(carry));
+                let _ = session;
+            }
+            if !any {
+                break;
+            }
+            // pad remaining rows with zero carries
+            while carries.len() < b {
+                carries.push(None);
+            }
+            let single = self.stream_entry_single();
+            for cslot in &carries {
+                match cslot {
+                    Some(cr) => {
+                        l_all.extend_from_slice(&cr.l);
+                        u_all.extend_from_slice(&cr.u);
+                    }
+                    None => {
+                        let z = StreamCarry::zeros(&single);
+                        l_all.extend_from_slice(&z.l);
+                        u_all.extend_from_slice(&z.u);
+                    }
+                }
+            }
+            let e = &self.stream_entry;
+            let out = self.rt.run_with_param_buffer(
+                e,
+                self.params.buffer(),
+                &[
+                    Tensor::f32(l_all, &e.inputs[1].shape.clone()),
+                    Tensor::f32(u_all, &e.inputs[2].shape.clone()),
+                    Tensor::i32(toks, &[b, c]),
+                    Tensor::i32(tgts, &[b, c]),
+                    Tensor::f32(mask, &[b, c]),
+                    Tensor::f32(active, &[b]),
+                ],
+            );
+            let out = match out {
+                Ok(o) => o,
+                Err(err) => {
+                    // fail every in-flight request in this wave
+                    let msg = format!("{err:#}");
+                    for (session, _, _, resp, _, _, _, _, _) in sessions.drain(..) {
+                        self.pool.release(session);
+                        let _ = resp.send(Err(anyhow!("stream step failed: {msg}")));
+                    }
+                    return;
+                }
+            };
+            let l_new = out[0].as_f32().unwrap();
+            let u_new = out[1].as_f32().unwrap();
+            let nll = out[2].as_f32().unwrap();
+            let cnt = out[3].as_f32().unwrap();
+            let l_stride = single.inputs[1].numel();
+            let u_stride = single.inputs[2].numel();
+            for (i, cslot) in carries.into_iter().enumerate() {
+                if let Some(mut cr) = cslot {
+                    cr.l.clear();
+                    cr.l.extend_from_slice(&l_new[i * l_stride..(i + 1) * l_stride]);
+                    cr.u.clear();
+                    cr.u.extend_from_slice(&u_new[i * u_stride..(i + 1) * u_stride]);
+                    let s = &mut sessions[i];
+                    self.pool.checkin(s.0, cr, consumed[i] as u64);
+                    s.6 += nll[i] as f64;
+                    s.7 += cnt[i] as f64;
+                    s.8 += consumed[i];
+                    self.stats.tokens_streamed.fetch_add(consumed[i] as u64, Ordering::Relaxed);
+                }
+            }
+            // drop fully-drained sessions out of the wave
+            let mut still = Vec::new();
+            for s in sessions.drain(..) {
+                let done = s.1.len().saturating_sub(s.8) <= 1;
+                if done {
+                    self.stats.feeds.fetch_add(1, Ordering::Relaxed);
+                    self.stats.feed_latency.lock().unwrap().record(s.4.elapsed().as_secs_f64());
+                    let _ = s.3.send(Ok(FeedResult { nll_sum: s.6, count: s.7, evicted: s.5 }));
+                } else {
+                    still.push(s);
+                }
+            }
+            sessions = still;
+            if sessions.is_empty() {
+                break;
+            }
+        }
+        // sessions left with <=1 token remaining: respond
+        for s in sessions {
+            self.stats.feeds.fetch_add(1, Ordering::Relaxed);
+            let _ = s.3.send(Ok(FeedResult { nll_sum: s.6, count: s.7, evicted: s.5 }));
+        }
+    }
+
+    fn run_generate(
+        &mut self,
+        session: u64,
+        seed_token: i32,
+        max_tokens: usize,
+        stop: Option<i32>,
+        sampling: Sampling,
+        rng_seed: u64,
+    ) -> Result<GenResult> {
+        let mut rng = crate::util::rng::Rng::new(rng_seed ^ session);
+        self.admit_session(session);
+        let mut carry = self
+            .pool
+            .checkout(session)
+            .ok_or_else(|| anyhow!("session {session} not available"))?;
+        let e = &self.decode_entry;
+        let mut out_tokens = Vec::new();
+        // feed() consumes tokens pairwise (input -> target) and leaves the
+        // final prompt token unconsumed; the caller passes it here.
+        let mut token = seed_token;
+        let mut produced = 0usize;
+        let result = loop {
+            if produced >= max_tokens {
+                break Ok(());
+            }
+            let run = self.rt.run_with_param_buffer(
+                e,
+                self.params.buffer(),
+                &[
+                    Tensor::f32(std::mem::take(&mut carry.l), &carry.l_shape.clone()),
+                    Tensor::f32(std::mem::take(&mut carry.u), &carry.u_shape.clone()),
+                    Tensor::i32(vec![token], &[1]),
+                ],
+            );
+            match run {
+                Ok(mut out) => {
+                    let logits = out.pop().unwrap().into_f32().unwrap();
+                    carry.u = out.pop().unwrap().into_f32().unwrap();
+                    carry.l = out.pop().unwrap().into_f32().unwrap();
+                    token = sampling.sample(&logits, &mut rng) as i32;
+                    out_tokens.push(token);
+                    produced += 1;
+                    if Some(token) == stop {
+                        break Ok(());
+                    }
+                }
+                Err(err) => break Err(err),
+            }
+        };
+        self.pool.checkin(session, carry, produced as u64);
+        result?;
+        Ok(GenResult { tokens: out_tokens })
+    }
+}

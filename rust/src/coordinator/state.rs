@@ -1,0 +1,187 @@
+//! STLT carry-state manager: the serving-side "KV-cache" pool.
+//!
+//! Each streaming session owns one O(S d) StreamCarry (a few hundred KB
+//! at e2e scale vs O(N d) for attention KV). The pool enforces a
+//! capacity: admitting a new session beyond capacity evicts the
+//! least-recently-used idle session (its document would need re-feeding
+//! — the same trade vLLM makes when preempting).
+
+use std::collections::HashMap;
+
+use crate::runtime::StreamCarry;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Admit {
+    Ok,
+    Evicted(u64),
+    Rejected,
+}
+
+pub struct StatePool {
+    capacity: usize,
+    states: HashMap<u64, SessionState>,
+    clock: u64,
+}
+
+struct SessionState {
+    carry: StreamCarry,
+    last_used: u64,
+    pinned: bool,
+    pub tokens_seen: u64,
+}
+
+impl StatePool {
+    pub fn new(capacity: usize) -> StatePool {
+        StatePool { capacity: capacity.max(1), states: HashMap::new(), clock: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.states.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.states.is_empty()
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.states.contains_key(&id)
+    }
+
+    pub fn state_bytes(&self) -> usize {
+        self.states.values().map(|s| s.carry.state_bytes()).sum()
+    }
+
+    /// Admit a session with a zero carry. Evicts LRU unpinned if full.
+    pub fn admit(&mut self, id: u64, carry: StreamCarry) -> Admit {
+        if self.states.contains_key(&id) {
+            return Admit::Ok;
+        }
+        let mut evicted = None;
+        if self.states.len() >= self.capacity {
+            let victim = self
+                .states
+                .iter()
+                .filter(|(_, s)| !s.pinned)
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(k, _)| *k);
+            match victim {
+                Some(v) => {
+                    self.states.remove(&v);
+                    evicted = Some(v);
+                }
+                None => return Admit::Rejected,
+            }
+        }
+        self.clock += 1;
+        self.states.insert(
+            id,
+            SessionState { carry, last_used: self.clock, pinned: false, tokens_seen: 0 },
+        );
+        match evicted {
+            Some(v) => Admit::Evicted(v),
+            None => Admit::Ok,
+        }
+    }
+
+    /// Temporarily take the carry out for an execution step (pins the
+    /// session so concurrent eviction cannot drop in-flight state).
+    pub fn checkout(&mut self, id: u64) -> Option<StreamCarry> {
+        self.clock += 1;
+        let clock = self.clock;
+        let s = self.states.get_mut(&id)?;
+        s.last_used = clock;
+        s.pinned = true;
+        // move out, leave empty placeholder
+        let carry = std::mem::replace(
+            &mut s.carry,
+            StreamCarry { l: Vec::new(), u: Vec::new(), l_shape: vec![], u_shape: vec![] },
+        );
+        Some(carry)
+    }
+
+    pub fn checkin(&mut self, id: u64, carry: StreamCarry, tokens: u64) {
+        if let Some(s) = self.states.get_mut(&id) {
+            s.carry = carry;
+            s.pinned = false;
+            s.tokens_seen += tokens;
+        }
+    }
+
+    pub fn tokens_seen(&self, id: u64) -> u64 {
+        self.states.get(&id).map(|s| s.tokens_seen).unwrap_or(0)
+    }
+
+    pub fn release(&mut self, id: u64) -> bool {
+        self.states.remove(&id).is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn carry() -> StreamCarry {
+        StreamCarry { l: vec![0.0; 8], u: vec![0.0; 32], l_shape: vec![2, 2, 2], u_shape: vec![2, 2, 4, 2] }
+    }
+
+    #[test]
+    fn admit_and_checkout_roundtrip() {
+        let mut p = StatePool::new(4);
+        assert_eq!(p.admit(1, carry()), Admit::Ok);
+        let mut c = p.checkout(1).unwrap();
+        c.l[0] = 42.0;
+        p.checkin(1, c, 64);
+        assert_eq!(p.checkout(1).unwrap().l[0], 42.0);
+        assert_eq!(p.tokens_seen(1), 64);
+    }
+
+    #[test]
+    fn lru_eviction() {
+        let mut p = StatePool::new(2);
+        p.admit(1, carry());
+        p.admit(2, carry());
+        // touch 1 so 2 becomes LRU
+        let c = p.checkout(1).unwrap();
+        p.checkin(1, c, 1);
+        assert_eq!(p.admit(3, carry()), Admit::Evicted(2));
+        assert!(p.contains(1) && p.contains(3) && !p.contains(2));
+    }
+
+    #[test]
+    fn pinned_sessions_not_evicted() {
+        let mut p = StatePool::new(2);
+        p.admit(1, carry());
+        p.admit(2, carry());
+        let _c1 = p.checkout(1).unwrap(); // pins 1
+        let _c2 = p.checkout(2).unwrap(); // pins 2
+        assert_eq!(p.admit(3, carry()), Admit::Rejected);
+    }
+
+    #[test]
+    fn readmit_is_noop() {
+        let mut p = StatePool::new(2);
+        p.admit(1, carry());
+        let mut c = p.checkout(1).unwrap();
+        c.l[1] = 7.0;
+        p.checkin(1, c, 10);
+        assert_eq!(p.admit(1, carry()), Admit::Ok); // does not reset
+        assert_eq!(p.tokens_seen(1), 10);
+    }
+
+    #[test]
+    fn release_frees_capacity() {
+        let mut p = StatePool::new(1);
+        p.admit(1, carry());
+        assert!(p.release(1));
+        assert!(!p.release(1));
+        assert_eq!(p.admit(2, carry()), Admit::Ok);
+    }
+
+    #[test]
+    fn state_bytes_accounting() {
+        let mut p = StatePool::new(4);
+        p.admit(1, carry());
+        p.admit(2, carry());
+        assert_eq!(p.state_bytes(), 2 * 40 * 4);
+    }
+}

@@ -1,0 +1,231 @@
+//! Training driver: owns TrainState, feeds batches from the synthetic
+//! corpus through the AOT `train_step` artifact, logs metrics, runs
+//! periodic held-out evaluation, and checkpoints (own binary format).
+//!
+//! The LR schedule, AdamW and gradient clipping live *inside* the HLO
+//! (python/compile/optim.py); the driver supplies data, step counters
+//! and seeds — so the request path stays pure Rust + PJRT.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::batch::LmBatcher;
+use crate::data::corpus::CorpusConfig;
+use crate::metrics::{perplexity, OnlineStats};
+use crate::runtime::{EvalStep, Manifest, Runtime, TrainState, TrainStep};
+
+pub struct TrainOpts {
+    pub steps: u64,
+    pub log_every: u64,
+    pub eval_every: u64,
+    pub eval_batches: u64,
+    pub seed: u64,
+    pub checkpoint: Option<String>,
+    pub domain: u64,
+}
+
+impl Default for TrainOpts {
+    fn default() -> Self {
+        TrainOpts {
+            steps: 200,
+            log_every: 20,
+            eval_every: 100,
+            eval_batches: 4,
+            seed: 0,
+            checkpoint: None,
+            domain: 0,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    /// (step, train loss) every log_every
+    pub loss_curve: Vec<(u64, f32)>,
+    /// (step, valid ppl)
+    pub eval_curve: Vec<(u64, f64)>,
+    pub final_ppl: f64,
+    pub final_s_eff: f32,
+    pub tokens_per_s: f64,
+    pub steps_done: u64,
+}
+
+/// Train `artifact` (e.g. "lm_stlt_tiny") for opts.steps; returns the
+/// report. `eval_artifact` defaults to the matching ".eval" entry.
+pub fn train_lm(
+    rt: &Runtime,
+    manifest: &Manifest,
+    artifact_base: &str,
+    opts: &TrainOpts,
+) -> Result<TrainReport> {
+    let step_exec = TrainStep::new(rt, manifest, &format!("{artifact_base}.train"))?;
+    let eval_exec = EvalStep::new(rt, manifest, &format!("{artifact_base}.eval"))?;
+    let entry = step_exec.entry();
+    let vocab = entry.config.vocab.max(8);
+
+    let mut state = TrainState::from_entry(entry)?;
+    let mut cfg = CorpusConfig::default_for_vocab(vocab);
+    cfg.domain = opts.domain;
+    let mut train_data =
+        LmBatcher::new(cfg.clone(), opts.seed ^ 0x7261, step_exec.batch, step_exec.n_plus_1);
+
+    let mut report = TrainReport {
+        loss_curve: Vec::new(),
+        eval_curve: Vec::new(),
+        final_ppl: f64::NAN,
+        final_s_eff: 0.0,
+        tokens_per_s: 0.0,
+        steps_done: 0,
+    };
+    let mut loss_window = OnlineStats::new();
+    let mut s_eff_last = 0.0f32;
+    let t0 = std::time::Instant::now();
+    let tokens_per_step = (step_exec.batch * (step_exec.n_plus_1 - 1)) as f64;
+
+    for step in 0..opts.steps {
+        let tokens = train_data.next_batch();
+        let m = step_exec.run(&mut state, &tokens, (opts.seed as i32) ^ (step as i32))?;
+        if !m.loss.is_finite() {
+            bail!("{artifact_base}: non-finite loss at step {step}");
+        }
+        loss_window.push(m.loss as f64);
+        s_eff_last = m.s_eff;
+        if (step + 1) % opts.log_every == 0 || step + 1 == opts.steps {
+            crate::info!(
+                "train",
+                "{artifact_base} step {:4}/{} loss {:.4} ce {:.4} s_eff {:.1}",
+                step + 1,
+                opts.steps,
+                loss_window.mean(),
+                m.ce,
+                m.s_eff
+            );
+            report.loss_curve.push((step + 1, loss_window.mean() as f32));
+            loss_window = OnlineStats::new();
+        }
+        if opts.eval_every > 0 && (step + 1) % opts.eval_every == 0 {
+            let ppl = eval_lm(&eval_exec, &state.flat, &cfg, opts, 0.0)?;
+            crate::info!("train", "{artifact_base} step {:4} valid ppl {:.3}", step + 1, ppl);
+            report.eval_curve.push((step + 1, ppl));
+        }
+        report.steps_done = step + 1;
+    }
+    report.tokens_per_s = tokens_per_step * opts.steps as f64 / t0.elapsed().as_secs_f64();
+    report.final_ppl = eval_lm(&eval_exec, &state.flat, &cfg, opts, 0.0)?;
+    report.final_s_eff = s_eff_last;
+    if let Some(path) = &opts.checkpoint {
+        save_checkpoint(Path::new(path), &state)?;
+        crate::info!("train", "checkpoint -> {path}");
+    }
+    Ok(report)
+}
+
+/// Held-out perplexity on a disjoint stream (seed offset), with optional
+/// embedding noise (the §4.7 robustness knob — executed inside the HLO).
+pub fn eval_lm(
+    eval_exec: &EvalStep,
+    flat: &[f32],
+    corpus_cfg: &CorpusConfig,
+    opts: &TrainOpts,
+    noise_std: f32,
+) -> Result<f64> {
+    let mut data = LmBatcher::new(
+        corpus_cfg.clone(),
+        opts.seed ^ 0xE7A1, // disjoint from training streams
+        eval_exec.batch,
+        eval_exec.n_plus_1,
+    );
+    let mut nll = 0.0;
+    let mut count = 0.0;
+    for i in 0..opts.eval_batches {
+        let tokens = data.next_batch();
+        let (n, c, _seff) = eval_exec.run(flat, &tokens, noise_std, i as i32)?;
+        nll += n;
+        count += c;
+    }
+    Ok(perplexity(nll, count))
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoints: magic + version + step + param_count + flat/m/v raw LE f32
+// ---------------------------------------------------------------------------
+
+const CKPT_MAGIC: &[u8; 8] = b"STLTCKPT";
+
+pub fn save_checkpoint(path: &Path, state: &TrainState) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let mut f = std::fs::File::create(path).with_context(|| format!("{}", path.display()))?;
+    f.write_all(CKPT_MAGIC)?;
+    f.write_all(&1u32.to_le_bytes())?;
+    f.write_all(&state.step.to_le_bytes())?;
+    f.write_all(&(state.flat.len() as u64).to_le_bytes())?;
+    for vec in [&state.flat, &state.m, &state.v] {
+        let bytes: Vec<u8> = vec.iter().flat_map(|x| x.to_le_bytes()).collect();
+        f.write_all(&bytes)?;
+    }
+    Ok(())
+}
+
+pub fn load_checkpoint(path: &Path) -> Result<TrainState> {
+    let mut f = std::fs::File::open(path).with_context(|| format!("{}", path.display()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != CKPT_MAGIC {
+        bail!("{}: not an STLT checkpoint", path.display());
+    }
+    let mut u32b = [0u8; 4];
+    f.read_exact(&mut u32b)?;
+    let version = u32::from_le_bytes(u32b);
+    if version != 1 {
+        bail!("unsupported checkpoint version {version}");
+    }
+    f.read_exact(&mut u32b)?;
+    let step = i32::from_le_bytes(u32b);
+    let mut u64b = [0u8; 8];
+    f.read_exact(&mut u64b)?;
+    let n = u64::from_le_bytes(u64b) as usize;
+    let mut read_vec = |n: usize| -> Result<Vec<f32>> {
+        let mut buf = vec![0u8; n * 4];
+        f.read_exact(&mut buf)?;
+        Ok(buf.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    };
+    let flat = read_vec(n)?;
+    let m = read_vec(n)?;
+    let v = read_vec(n)?;
+    Ok(TrainState { flat, m, v, step })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let state = TrainState {
+            flat: vec![1.0, -2.5, 3.25],
+            m: vec![0.1, 0.2, 0.3],
+            v: vec![4.0, 5.0, 6.0],
+            step: 42,
+        };
+        let path = std::env::temp_dir().join("stlt_ckpt_test.bin");
+        save_checkpoint(&path, &state).unwrap();
+        let loaded = load_checkpoint(&path).unwrap();
+        assert_eq!(loaded.step, 42);
+        assert_eq!(loaded.flat, state.flat);
+        assert_eq!(loaded.m, state.m);
+        assert_eq!(loaded.v, state.v);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = std::env::temp_dir().join("stlt_ckpt_bad.bin");
+        std::fs::write(&path, b"NOTACKPTxxxxxxxxxxxx").unwrap();
+        assert!(load_checkpoint(&path).is_err());
+    }
+}

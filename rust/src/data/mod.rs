@@ -1,0 +1,8 @@
+//! Synthetic workload generators standing in for the paper's datasets
+//! (WikiText-103/Gutenberg, WMT'14 En-De, NarrativeQA) — see DESIGN.md
+//! §3 for the substitution rationale per dataset.
+
+pub mod batch;
+pub mod corpus;
+pub mod longqa;
+pub mod translate;

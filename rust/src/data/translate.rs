@@ -1,0 +1,170 @@
+//! Synthetic translation task (WMT'14 En-De stand-in, DESIGN.md §3).
+//!
+//! A source sentence is Zipfian tokens; the "target language" applies
+//!   1. a fixed bijective vocabulary mapping (lexical translation),
+//!   2. local reordering: each window of 3 is rotated (word-order
+//!      divergence, the part attention/cross-STLT must learn),
+//!   3. BOS/EOS framing and PAD to fixed length.
+//!
+//! BLEU separates models by how well they learn the mapping + reordering
+//! across the whole source — the same axis Table 2 measures.
+
+use crate::tokenizer::{BOS, EOS, PAD};
+use crate::util::rng::{Rng, Zipf};
+
+#[derive(Clone, Debug)]
+pub struct TranslateConfig {
+    pub vocab: usize,
+    pub first_id: usize,
+    pub n_src: usize,
+    pub m_tgt: usize,
+    pub min_len: usize,
+}
+
+impl TranslateConfig {
+    pub fn tiny(vocab: usize, n_src: usize, m_tgt: usize) -> TranslateConfig {
+        TranslateConfig { vocab, first_id: 4, n_src, m_tgt, min_len: 8 }
+    }
+}
+
+pub struct TranslateGen {
+    cfg: TranslateConfig,
+    rng: Rng,
+    zipf: Zipf,
+    mapping: Vec<i32>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Pair {
+    /// fixed length n_src, PAD-padded
+    pub src: Vec<i32>,
+    /// BOS + translation + EOS, PAD-padded to m_tgt + 1 (teacher forcing)
+    pub tgt: Vec<i32>,
+    /// unpadded gold target (no BOS/EOS) for BLEU
+    pub gold: Vec<i32>,
+}
+
+impl TranslateGen {
+    pub fn new(cfg: TranslateConfig, seed: u64) -> TranslateGen {
+        let rng = Rng::new(seed);
+        let usable = cfg.vocab - cfg.first_id;
+        // fixed bijective "dictionary": shuffled identity over usable ids
+        let mut mapping: Vec<i32> = (0..usable as i32).collect();
+        let mut map_rng = Rng::new(0xD1C7 ^ seed);
+        map_rng.shuffle(&mut mapping);
+        let zipf = Zipf::new(usable, 1.05);
+        TranslateGen { cfg, rng, zipf, mapping }
+    }
+
+    /// The reference translation function (the task's ground truth).
+    pub fn translate(&self, src: &[i32]) -> Vec<i32> {
+        let f = self.cfg.first_id as i32;
+        let mut out: Vec<i32> =
+            src.iter().map(|&t| f + self.mapping[(t - f) as usize]).collect();
+        // rotate every window of 3: abc -> bca (local reordering)
+        let mut i = 0;
+        while i + 3 <= out.len() {
+            out[i..i + 3].rotate_left(1);
+            i += 3;
+        }
+        out
+    }
+
+    pub fn sample(&mut self) -> Pair {
+        let max_len = self.cfg.n_src.min(self.cfg.m_tgt - 1);
+        let len = self.rng.range(self.cfg.min_len as i64, (max_len + 1) as i64) as usize;
+        let f = self.cfg.first_id as i32;
+        let src_raw: Vec<i32> =
+            (0..len).map(|_| f + self.zipf.sample(&mut self.rng) as i32).collect();
+        let gold = self.translate(&src_raw);
+        let mut src = src_raw;
+        src.resize(self.cfg.n_src, PAD);
+        let mut tgt = Vec::with_capacity(self.cfg.m_tgt + 1);
+        tgt.push(BOS);
+        tgt.extend_from_slice(&gold);
+        tgt.push(EOS);
+        tgt.resize(self.cfg.m_tgt + 1, PAD);
+        Pair { src, tgt, gold }
+    }
+
+    /// Batch of pairs as flat row-major [B, n_src] and [B, m_tgt+1].
+    pub fn batch(&mut self, b: usize) -> (Vec<i32>, Vec<i32>, Vec<Pair>) {
+        let mut src = Vec::with_capacity(b * self.cfg.n_src);
+        let mut tgt = Vec::with_capacity(b * (self.cfg.m_tgt + 1));
+        let mut pairs = Vec::with_capacity(b);
+        for _ in 0..b {
+            let p = self.sample();
+            src.extend_from_slice(&p.src);
+            tgt.extend_from_slice(&p.tgt);
+            pairs.push(p);
+        }
+        (src, tgt, pairs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen() -> TranslateGen {
+        TranslateGen::new(TranslateConfig::tiny(256, 48, 48), 9)
+    }
+
+    #[test]
+    fn shapes_fixed() {
+        let mut g = gen();
+        for _ in 0..20 {
+            let p = g.sample();
+            assert_eq!(p.src.len(), 48);
+            assert_eq!(p.tgt.len(), 49);
+            assert_eq!(p.tgt[0], BOS);
+            assert!(p.tgt.contains(&EOS));
+        }
+    }
+
+    #[test]
+    fn translation_is_deterministic_function() {
+        let g = gen();
+        let src = vec![10, 11, 12, 13, 14, 15];
+        assert_eq!(g.translate(&src), g.translate(&src));
+    }
+
+    #[test]
+    fn mapping_is_bijective() {
+        let g = gen();
+        let mut seen = std::collections::HashSet::new();
+        for t in 4..256 {
+            let out = g.translate(&[t, t, t]); // window rotation is a no-op on equal tokens
+            assert!((4..256).contains(&out[0]));
+            seen.insert(out[0]);
+        }
+        assert_eq!(seen.len(), 252);
+    }
+
+    #[test]
+    fn reordering_rotates_triples() {
+        let g = gen();
+        let src = vec![4, 5, 6];
+        let one: Vec<i32> = src.iter().map(|&t| g.translate(&[t, t, t])[0]).collect();
+        let out = g.translate(&src);
+        assert_eq!(out, vec![one[1], one[2], one[0]]);
+    }
+
+    #[test]
+    fn gold_matches_tgt_payload() {
+        let mut g = gen();
+        let p = g.sample();
+        let payload: Vec<i32> =
+            p.tgt[1..].iter().cloned().take_while(|&t| t != EOS).collect();
+        assert_eq!(payload, p.gold);
+    }
+
+    #[test]
+    fn batch_flat_layout() {
+        let mut g = gen();
+        let (src, tgt, pairs) = g.batch(4);
+        assert_eq!(src.len(), 4 * 48);
+        assert_eq!(tgt.len(), 4 * 49);
+        assert_eq!(&src[48..96], pairs[1].src.as_slice());
+    }
+}

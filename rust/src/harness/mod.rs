@@ -1,0 +1,356 @@
+//! Shared experiment-harness helpers used by examples/exp_*.rs: variant
+//! training with checkpoint reuse, long-context evaluation (chunked vs
+//! streaming), QA episodes, table rendering and results persistence.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Config;
+use crate::coordinator::{self, TrainOpts};
+use crate::data::batch::LmBatcher;
+use crate::data::corpus::{Corpus, CorpusConfig};
+use crate::data::longqa::QaSample;
+use crate::metrics::perplexity;
+use crate::runtime::{EvalStep, Manifest, Runtime, StreamStep, TrainState};
+use crate::util::json::Json;
+
+/// Where experiment outputs (checkpoints, json rows) live.
+pub fn results_dir() -> PathBuf {
+    let d = PathBuf::from("results");
+    let _ = std::fs::create_dir_all(d.join("ckpt"));
+    d
+}
+
+/// Experiment-scale knobs, overridable via env so the same binaries can
+/// run smoke-scale in CI and full-scale for EXPERIMENTS.md.
+pub fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Train a variant (or reuse its checkpoint if present) and return the
+/// final params + training report.
+pub fn train_or_load(
+    rt: &Runtime,
+    manifest: &Manifest,
+    artifact_base: &str,
+    steps: u64,
+    seed: u64,
+) -> Result<(TrainState, Option<coordinator::TrainReport>)> {
+    let ckpt = results_dir().join("ckpt").join(format!("{artifact_base}_s{steps}.ckpt"));
+    if ckpt.exists() {
+        crate::info!("harness", "{artifact_base}: reusing {}", ckpt.display());
+        return Ok((coordinator::load_checkpoint(&ckpt)?, None));
+    }
+    let opts = TrainOpts {
+        steps,
+        log_every: (steps / 5).max(1),
+        eval_every: 0,
+        eval_batches: 4,
+        seed,
+        checkpoint: Some(ckpt.to_string_lossy().into_owned()),
+        domain: 0,
+    };
+    let report = coordinator::train_lm(rt, manifest, artifact_base, &opts)?;
+    Ok((coordinator::load_checkpoint(&ckpt)?, Some(report)))
+}
+
+/// Short-context held-out perplexity via the eval artifact.
+pub fn short_ppl(
+    rt: &Runtime,
+    manifest: &Manifest,
+    artifact_base: &str,
+    flat: &[f32],
+    batches: u64,
+    noise: f32,
+    domain: u64,
+) -> Result<(f64, f32)> {
+    let eval = EvalStep::new(rt, manifest, &format!("{artifact_base}.eval"))?;
+    let entry = manifest.get(&format!("{artifact_base}.eval"))?;
+    let mut cfg = CorpusConfig::default_for_vocab(entry.config.vocab);
+    cfg.domain = domain;
+    let mut data = LmBatcher::new(cfg, 0xE7A1, eval.batch, eval.n_plus_1);
+    let params = eval.upload(flat)?; // §Perf L3-1
+    let (mut nll, mut cnt, mut seff) = (0.0, 0.0, 0.0f32);
+    for i in 0..batches {
+        let toks = data.next_batch();
+        let (n, c, s) = eval.run_h(&params, &toks, noise, i as i32)?;
+        nll += n;
+        cnt += c;
+        seff = s;
+    }
+    Ok((perplexity(nll, cnt), seff))
+}
+
+/// Long-document corpus config: copy dependencies far beyond any single
+/// training context (the Gutenberg-32k analogue).
+pub fn long_corpus_cfg(vocab: usize) -> CorpusConfig {
+    let mut c = CorpusConfig::default_for_vocab(vocab);
+    c.copy_lag = (64, 1024);
+    c.p_copy = 0.04;
+    c
+}
+
+/// Streaming perplexity over one long document (stlt models): the carry
+/// persists across chunks, so long-range copies remain visible.
+pub fn stream_ppl(
+    rt: &Runtime,
+    manifest: &Manifest,
+    artifact_base: &str,
+    flat: &[f32],
+    doc_len: usize,
+    seed: u64,
+) -> Result<f64> {
+    let stream = StreamStep::new(rt, manifest, &format!("{artifact_base}.stream"))?;
+    let entry = manifest.get(&format!("{artifact_base}.stream"))?;
+    let mut corpus = Corpus::new(long_corpus_cfg(entry.config.vocab), seed);
+    let doc = corpus.take(doc_len + 1);
+    let params = stream.upload(flat)?; // §Perf L3-1
+    let mut carry = stream.zero_carry();
+    let c = stream.chunk;
+    let (mut nll, mut cnt) = (0.0, 0.0);
+    let mut off = 0usize;
+    while off + 1 < doc.len() {
+        let take = c.min(doc.len() - 1 - off);
+        let mut toks = vec![0i32; c];
+        let mut tgts = vec![0i32; c];
+        let mut mask = vec![0f32; c];
+        for j in 0..take {
+            toks[j] = doc[off + j];
+            tgts[j] = doc[off + j + 1];
+            mask[j] = 1.0;
+        }
+        let (n, ct) = stream.run_h(&params, &mut carry, &toks, &tgts, &mask)?;
+        nll += n;
+        cnt += ct;
+        off += take;
+    }
+    Ok(perplexity(nll, cnt))
+}
+
+/// Chunked perplexity over the same long document for context-reset
+/// baselines: the model sees windows of its training context only.
+pub fn chunked_ppl(
+    rt: &Runtime,
+    manifest: &Manifest,
+    artifact_base: &str,
+    flat: &[f32],
+    doc_len: usize,
+    seed: u64,
+) -> Result<f64> {
+    let eval = EvalStep::new(rt, manifest, &format!("{artifact_base}.eval"))?;
+    let entry = manifest.get(&format!("{artifact_base}.eval"))?;
+    let mut corpus = Corpus::new(long_corpus_cfg(entry.config.vocab), seed);
+    let window = eval.batch * eval.n_plus_1;
+    let (mut nll, mut cnt) = (0.0, 0.0);
+    let mut consumed = 0usize;
+    let mut i = 0;
+    while consumed < doc_len {
+        // each eval batch consumes batch*n_plus_1 fresh tokens; context
+        // resets at every row boundary (the "chunked" penalty)
+        let toks = corpus.take(window);
+        let (n, c, _) = eval.run(flat, &toks, 0.0, i)?;
+        nll += n;
+        cnt += c;
+        consumed += window;
+        i += 1;
+    }
+    Ok(perplexity(nll, cnt))
+}
+
+/// QA training rows: episodes with short distances packed to n_plus_1.
+pub fn qa_training_batch(
+    vocab: usize,
+    b: usize,
+    n_plus_1: usize,
+    seed: u64,
+    step: u64,
+) -> Vec<i32> {
+    use crate::data::longqa::{QaConfig, QaGen};
+    use crate::util::rng::Rng;
+    let mut rng = Rng::new(seed ^ step.wrapping_mul(0x9E37));
+    let mut out = Vec::with_capacity(b * n_plus_1);
+    for bi in 0..b {
+        let dist = 8 + (rng.below(64) as usize); // distances within context
+        let mut cfg = QaConfig::with_distance(vocab, dist);
+        cfg.doc_len = dist + 16;
+        let mut gen = QaGen::new(cfg, seed ^ (step * 131 + bi as u64));
+        let mut row = Vec::with_capacity(n_plus_1);
+        while row.len() < n_plus_1 {
+            let s = gen.sample();
+            row.extend_from_slice(&s.prompt);
+            row.extend_from_slice(&s.answer);
+        }
+        row.truncate(n_plus_1);
+        out.extend_from_slice(&row);
+    }
+    out
+}
+
+/// Greedy-generate an answer from a chunked forward model: keep only the
+/// last `n_ctx` tokens of the prompt, then extend token by token.
+pub fn chunked_generate(
+    rt: &Runtime,
+    manifest: &Manifest,
+    artifact_base: &str,
+    flat: &[f32],
+    prompt: &[i32],
+    n_answer: usize,
+) -> Result<Vec<i32>> {
+    let fwd = crate::runtime::Forward::new(rt, manifest, &format!("{artifact_base}.fwd"))?;
+    let entry = manifest.get(&format!("{artifact_base}.fwd"))?;
+    let vocab = entry.config.vocab;
+    let n = fwd.n;
+    let mut window: Vec<i32> = prompt[prompt.len().saturating_sub(n)..].to_vec();
+    let mut out = Vec::new();
+    for _ in 0..n_answer {
+        let pos = window.len().min(n) - 1;
+        let mut padded = window.clone();
+        padded.resize(n, 0);
+        let logits = fwd.run(flat, &padded)?;
+        let l = logits.as_f32()?;
+        let row = &l[pos * vocab..(pos + 1) * vocab];
+        let tok = crate::metrics::argmax(row) as i32;
+        out.push(tok);
+        window.push(tok);
+        if window.len() > n {
+            window.remove(0);
+        }
+    }
+    Ok(out)
+}
+
+/// Evaluate one QA sample with the streaming server path.
+pub fn stream_qa_answer(
+    server: &coordinator::Server,
+    session: u64,
+    sample: &QaSample,
+    n_answer: usize,
+) -> Result<Vec<i32>> {
+    let seed_token = *sample.prompt.last().unwrap();
+    server.feed(session, sample.prompt.clone(), false)?;
+    let g = server.generate(session, seed_token, n_answer, None)?;
+    server.release(session)?;
+    Ok(g.tokens)
+}
+
+// ---------------------------------------------------------------------------
+// Result tables
+// ---------------------------------------------------------------------------
+
+/// Ordered result table: rows of (label, column -> value).
+#[derive(Default)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<(String, BTreeMap<String, String>)>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, label: &str) -> &mut BTreeMap<String, String> {
+        self.rows.push((label.to_string(), BTreeMap::new()));
+        &mut self.rows.last_mut().unwrap().1
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        let label_w = self
+            .rows
+            .iter()
+            .map(|(l, _)| l.len())
+            .chain([5])
+            .max()
+            .unwrap();
+        for (_, cells) in &self.rows {
+            for (i, c) in self.columns.iter().enumerate() {
+                widths[i] = widths[i].max(cells.get(c).map(|v| v.len()).unwrap_or(1));
+            }
+        }
+        let mut s = format!("## {}\n", self.title);
+        s.push_str(&format!("{:label_w$}", "model"));
+        for (i, c) in self.columns.iter().enumerate() {
+            s.push_str(&format!("  {:>w$}", c, w = widths[i]));
+        }
+        s.push('\n');
+        s.push_str(&"-".repeat(label_w + widths.iter().map(|w| w + 2).sum::<usize>()));
+        s.push('\n');
+        for (label, cells) in &self.rows {
+            s.push_str(&format!("{label:label_w$}"));
+            for (i, c) in self.columns.iter().enumerate() {
+                let v = cells.get(c).map(String::as_str).unwrap_or("-");
+                s.push_str(&format!("  {:>w$}", v, w = widths[i]));
+            }
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Persist as JSON under results/.
+    pub fn save_json(&self, name: &str) -> Result<()> {
+        let mut rows = Vec::new();
+        for (label, cells) in &self.rows {
+            let mut m: std::collections::BTreeMap<String, Json> = Default::default();
+            m.insert("model".into(), Json::Str(label.clone()));
+            for (k, v) in cells {
+                m.insert(k.clone(), Json::Str(v.clone()));
+            }
+            rows.push(Json::Obj(m));
+        }
+        let j = Json::Obj(
+            [
+                ("title".to_string(), Json::Str(self.title.clone())),
+                ("rows".to_string(), Json::Arr(rows)),
+            ]
+            .into_iter()
+            .collect(),
+        );
+        let path = results_dir().join(format!("{name}.json"));
+        std::fs::write(&path, j.to_string()).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        Ok(())
+    }
+}
+
+/// Load experiment scale config (steps etc.) from configs/exp.toml if
+/// present, else defaults; env STLT_STEPS wins.
+pub fn exp_steps(default: u64) -> u64 {
+    let from_cfg = Config::load("configs/exp.toml")
+        .ok()
+        .map(|c| c.i64_or("exp.steps", default as i64) as u64)
+        .unwrap_or(default);
+    env_u64("STLT_STEPS", from_cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_and_saves() {
+        let mut t = Table::new("Demo", &["ppl", "s_eff"]);
+        t.row("stlt").insert("ppl".into(), "23.8".into());
+        let r = t.render();
+        assert!(r.contains("Demo") && r.contains("stlt") && r.contains("23.8"));
+        assert!(r.contains("model"));
+    }
+
+    #[test]
+    fn qa_training_batch_shape() {
+        let b = qa_training_batch(256, 3, 129, 1, 0);
+        assert_eq!(b.len(), 3 * 129);
+        assert!(b.iter().all(|&t| (0..256).contains(&t)));
+    }
+
+    #[test]
+    fn env_u64_default() {
+        assert_eq!(env_u64("STLT_NONEXISTENT_VAR_X", 7), 7);
+    }
+}

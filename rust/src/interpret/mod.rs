@@ -1,0 +1,242 @@
+//! Interpretability (§4.5): locate the learned STLT parameters inside
+//! the flat packed vector and report half-lives, frequencies and window
+//! bandwidths per layer.
+//!
+//! The packing order mirrors python/compile/optim.py exactly: a
+//! path-sorted walk of the nested param dict (lists indexed by 3-digit
+//! position). The layout is pure arithmetic over the ModelConfig, so no
+//! Python is needed at inspection time. Validated against the python
+//! packer by rust/tests/integration_runtime.rs.
+
+use crate::runtime::artifact::ModelConfig;
+
+/// One named leaf in packing order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Leaf {
+    pub path: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+impl Leaf {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// Packing layout for the decoder-only trunk (trunk.init).
+pub fn trunk_layout(cfg: &ModelConfig) -> Vec<Leaf> {
+    let d = cfg.d_model;
+    let s = cfg.s_max;
+    let v = cfg.vocab;
+    let h = d * 4; // ffn_mult fixed at 4 in config presets
+    let mut leaves: Vec<(String, Vec<usize>)> = Vec::new();
+    leaves.push(("/embed".into(), vec![v, d]));
+    for li in 0..cfg.n_layers {
+        let p = format!("/layers/{li:03}");
+        // sorted keys within a layer dict
+        leaves.push((format!("{p}/ffn_b1"), vec![h]));
+        leaves.push((format!("{p}/ffn_b2"), vec![d]));
+        leaves.push((format!("{p}/ffn_w1"), vec![d, h]));
+        leaves.push((format!("{p}/ffn_w2"), vec![h, d]));
+        leaves.push((format!("{p}/ln1_b"), vec![d]));
+        leaves.push((format!("{p}/ln1_g"), vec![d]));
+        leaves.push((format!("{p}/ln2_b"), vec![d]));
+        leaves.push((format!("{p}/ln2_g"), vec![d]));
+        // mixer dict (sorted keys), depends on arch
+        match cfg.arch.as_str() {
+            "stlt" => {
+                if cfg.adaptive {
+                    leaves.push((format!("{p}/mixer/b_alpha"), vec![s]));
+                }
+                leaves.push((format!("{p}/mixer/omega"), vec![s]));
+                leaves.push((format!("{p}/mixer/sigma_raw"), vec![s]));
+                leaves.push((format!("{p}/mixer/t_raw"), vec![1]));
+                if cfg.adaptive {
+                    leaves.push((format!("{p}/mixer/w_alpha"), vec![d, s]));
+                }
+                leaves.push((format!("{p}/mixer/w_f"), vec![d, s]));
+                leaves.push((format!("{p}/mixer/w_o"), vec![d, d]));
+                leaves.push((format!("{p}/mixer/w_v"), vec![d, d]));
+            }
+            "vanilla" | "performer" => {
+                for k in ["w_k", "w_o", "w_q", "w_v"] {
+                    leaves.push((format!("{p}/mixer/{k}"), vec![d, d]));
+                }
+            }
+            "linformer" => {
+                leaves.push((format!("{p}/mixer/e_proj"), vec![cfg.n_ctx, 32]));
+                for k in ["w_k", "w_o", "w_q", "w_v"] {
+                    leaves.push((format!("{p}/mixer/{k}"), vec![d, d]));
+                }
+            }
+            "fnet" => {
+                leaves.push((format!("{p}/mixer/w_f"), vec![d, s]));
+                leaves.push((format!("{p}/mixer/w_o"), vec![d, d]));
+                leaves.push((format!("{p}/mixer/w_v"), vec![d, d]));
+            }
+            "ssm" => {
+                leaves.push((format!("{p}/mixer/d_skip"), vec![d]));
+                leaves.push((format!("{p}/mixer/omega"), vec![d]));
+                leaves.push((format!("{p}/mixer/sigma_raw"), vec![d]));
+                leaves.push((format!("{p}/mixer/w_in"), vec![d, d]));
+                leaves.push((format!("{p}/mixer/w_o"), vec![d, d]));
+            }
+            _ => {}
+        }
+    }
+    leaves.push(("/lnf_b".into(), vec![d]));
+    leaves.push(("/lnf_g".into(), vec![d]));
+    let mut out = Vec::with_capacity(leaves.len());
+    let mut off = 0usize;
+    for (path, shape) in leaves {
+        let n: usize = shape.iter().product::<usize>().max(1);
+        out.push(Leaf { path, shape, offset: off });
+        off += n;
+    }
+    out
+}
+
+pub fn total_params(layout: &[Leaf]) -> usize {
+    layout.last().map(|l| l.offset + l.numel()).unwrap_or(0)
+}
+
+fn softplus(x: f32) -> f32 {
+    if x > 20.0 {
+        x
+    } else {
+        (1.0 + x.exp()).ln()
+    }
+}
+
+/// Learned node parameters of one STLT layer.
+#[derive(Clone, Debug)]
+pub struct LayerNodes {
+    pub layer: usize,
+    pub sigma: Vec<f32>,
+    pub omega: Vec<f32>,
+    pub t: f32,
+    pub half_lives: Vec<f32>,
+}
+
+pub fn extract_nodes(flat: &[f32], cfg: &ModelConfig) -> Vec<LayerNodes> {
+    let layout = trunk_layout(cfg);
+    let find = |path: &str| layout.iter().find(|l| l.path == path);
+    let mut out = Vec::new();
+    for li in 0..cfg.n_layers {
+        let p = format!("/layers/{li:03}/mixer");
+        let (Some(sr), Some(om), Some(tr)) = (
+            find(&format!("{p}/sigma_raw")),
+            find(&format!("{p}/omega")),
+            find(&format!("{p}/t_raw")),
+        ) else {
+            continue;
+        };
+        let sigma: Vec<f32> = flat[sr.offset..sr.offset + sr.numel()]
+            .iter()
+            .map(|&x| softplus(x) + 1e-3)
+            .collect();
+        let omega: Vec<f32> = flat[om.offset..om.offset + om.numel()].to_vec();
+        let t = softplus(flat[tr.offset]) + 1.0;
+        let half_lives = sigma.iter().map(|&s| (2.0f32).ln() / s).collect();
+        out.push(LayerNodes { layer: li, sigma, omega, t, half_lives });
+    }
+    out
+}
+
+/// Human-readable §4.5 report.
+pub fn inspect_stlt_params(flat: &[f32], cfg: &ModelConfig) -> String {
+    use std::fmt::Write;
+    let mut s = String::new();
+    let nodes = extract_nodes(flat, cfg);
+    if nodes.is_empty() {
+        return format!("arch '{}' has no STLT node parameters", cfg.arch);
+    }
+    let _ = writeln!(s, "STLT learned parameters ({} layers, S={}):", cfg.n_layers, cfg.s_max);
+    for ln in &nodes {
+        let mut sig = ln.sigma.clone();
+        sig.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = sig[sig.len() / 2];
+        let hl_max = ln.half_lives.iter().cloned().fold(0.0f32, f32::max);
+        let osc = ln.omega.iter().filter(|&&w| w.abs() > 0.05).count();
+        let _ = writeln!(
+            s,
+            "  layer {}: T={:7.2}  sigma[min={:.4} med={:.4} max={:.4}]  \
+             half-life[max={:7.1} tokens]  oscillating nodes {}/{}",
+            ln.layer,
+            ln.t,
+            sig[0],
+            med,
+            sig[sig.len() - 1],
+            hl_max,
+            osc,
+            ln.omega.len()
+        );
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            arch: "stlt".into(),
+            vocab: 256,
+            d_model: 64,
+            n_layers: 2,
+            n_ctx: 128,
+            s_max: 32,
+            batch: 8,
+            adaptive: false,
+            mode: "linear".into(),
+            total_steps: 2000,
+        }
+    }
+
+    #[test]
+    fn layout_is_contiguous_and_sorted() {
+        let l = trunk_layout(&cfg());
+        for w in l.windows(2) {
+            assert_eq!(w[0].offset + w[0].numel(), w[1].offset, "{:?}", w);
+        }
+        assert!(l[0].path == "/embed");
+    }
+
+    #[test]
+    fn extract_nodes_reads_offsets() {
+        let c = cfg();
+        let layout = trunk_layout(&c);
+        let total = total_params(&layout);
+        let mut flat = vec![0.0f32; total];
+        // write a recognisable sigma_raw in layer 1
+        let leaf = layout.iter().find(|l| l.path == "/layers/001/mixer/sigma_raw").unwrap();
+        for (i, x) in flat[leaf.offset..leaf.offset + leaf.numel()].iter_mut().enumerate() {
+            *x = i as f32 * 0.1;
+        }
+        let nodes = extract_nodes(&flat, &c);
+        assert_eq!(nodes.len(), 2);
+        assert!(nodes[1].sigma[5] > nodes[1].sigma[0]);
+        assert_eq!(nodes[0].half_lives.len(), 32);
+    }
+
+    #[test]
+    fn adaptive_layout_has_gate_params() {
+        let mut c = cfg();
+        c.adaptive = true;
+        c.s_max = 64;
+        let l = trunk_layout(&c);
+        assert!(l.iter().any(|x| x.path == "/layers/000/mixer/b_alpha"));
+        assert!(l.iter().any(|x| x.path == "/layers/000/mixer/w_alpha"));
+    }
+
+    #[test]
+    fn report_renders() {
+        let c = cfg();
+        let total = total_params(&trunk_layout(&c));
+        let s = inspect_stlt_params(&vec![0.1; total], &c);
+        assert!(s.contains("layer 0"));
+        assert!(s.contains("half-life"));
+    }
+}

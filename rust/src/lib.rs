@@ -1,0 +1,22 @@
+//! `laplace-stlt` — reproduction of "Adaptive Two-Sided Laplace
+//! Transforms: A Learnable, Interpretable, and Scalable Replacement for
+//! Self-Attention" (Kiruluta, 2025) as a three-layer Rust + JAX + Pallas
+//! stack (see DESIGN.md).
+//!
+//! * Layer 1/2 (python/, build-time only): Pallas STLT kernels + JAX
+//!   models, AOT-lowered to HLO text.
+//! * Layer 3 (this crate): PJRT runtime, training driver, streaming
+//!   long-document coordinator, and every substrate (tokenizer, data
+//!   generators, metrics, config, CLI, RNG, thread pool) built from
+//!   scratch.
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod harness;
+pub mod interpret;
+pub mod metrics;
+pub mod runtime;
+pub mod tokenizer;
+pub mod util;

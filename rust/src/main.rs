@@ -1,0 +1,152 @@
+//! `stlt` CLI — leader entrypoint for the laplace-stlt coordinator.
+//!
+//! Subcommands:
+//!   info                      list artifacts + runtime info
+//!   train   --artifact NAME --steps N [--ckpt PATH]
+//!   eval    --artifact NAME --ckpt PATH [--noise X]
+//!   stream  --artifact NAME --ckpt PATH --doc-len N   streaming PPL demo
+//!   generate --artifact NAME --ckpt PATH --len N
+//!   inspect --artifact NAME --ckpt PATH               learned-parameter dump
+
+use anyhow::{anyhow, Result};
+use stlt::config::Config;
+use stlt::coordinator::{self, TrainOpts};
+use stlt::runtime::{default_artifacts_dir, Manifest, Runtime};
+
+fn main() {
+    stlt::util::logging::init();
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> String {
+    "usage: stlt <info|train|eval|stream|generate|inspect> [--artifact NAME] [--steps N] \
+     [--ckpt PATH] [--config FILE] [--noise X] [--len N] [--doc-len N] \
+     [--sampling greedy|temp:T|topk:K:T|topp:P:T]"
+        .to_string()
+}
+
+fn run() -> Result<()> {
+    let args = stlt::util::cli::Args::from_env(&["verbose"]).map_err(|e| anyhow!(e))?;
+    if args.has_flag("verbose") {
+        stlt::util::logging::set_level(stlt::util::logging::Level::Debug);
+    }
+    let manifest = Manifest::load(default_artifacts_dir())?;
+    match args.subcommand.as_deref() {
+        Some("info") => {
+            let rt = Runtime::cpu()?;
+            println!("platform: {}", rt.platform());
+            println!("artifacts dir: {}", manifest.dir.display());
+            for (name, e) in &manifest.entries {
+                println!(
+                    "  {name:42} kind={:16} params={:>9} arch={}",
+                    e.kind, e.param_count, e.config.arch
+                );
+            }
+            Ok(())
+        }
+        Some("train") => {
+            let mut cfg = match args.get("config") {
+                Some(p) => Config::load(p).map_err(|e| anyhow!(e))?,
+                None => Config::default(),
+            };
+            let overrides: Vec<String> = Vec::new();
+            cfg.apply_overrides(&overrides).map_err(|e| anyhow!(e))?;
+            let artifact = args.get_or("artifact", &cfg.str_or("train.artifact", "lm_stlt_tiny"));
+            let opts = TrainOpts {
+                steps: args.get_u64("steps", cfg.i64_or("train.steps", 200) as u64)
+                    .map_err(|e| anyhow!(e))?,
+                log_every: args.get_u64("log-every", 20).map_err(|e| anyhow!(e))?,
+                eval_every: args.get_u64("eval-every", 100).map_err(|e| anyhow!(e))?,
+                eval_batches: args.get_u64("eval-batches", 4).map_err(|e| anyhow!(e))?,
+                seed: args.get_u64("seed", 0).map_err(|e| anyhow!(e))?,
+                checkpoint: args.get("ckpt").map(String::from),
+                domain: args.get_u64("domain", 0).map_err(|e| anyhow!(e))?,
+            };
+            let rt = Runtime::cpu()?;
+            let report = coordinator::train_lm(&rt, &manifest, &artifact, &opts)?;
+            println!("final ppl: {:.3}", report.final_ppl);
+            println!("throughput: {:.0} tokens/s", report.tokens_per_s);
+            Ok(())
+        }
+        Some("eval") => {
+            let artifact = args.get_or("artifact", "lm_stlt_tiny");
+            let ckpt = args.get("ckpt").ok_or_else(|| anyhow!("--ckpt required"))?;
+            let noise = args.get_f64("noise", 0.0).map_err(|e| anyhow!(e))? as f32;
+            let state = coordinator::load_checkpoint(std::path::Path::new(ckpt))?;
+            let rt = Runtime::cpu()?;
+            let eval = stlt::runtime::EvalStep::new(&rt, &manifest, &format!("{artifact}.eval"))?;
+            let entry = manifest.get(&format!("{artifact}.eval"))?;
+            let cfg = stlt::data::corpus::CorpusConfig::default_for_vocab(entry.config.vocab);
+            let opts = TrainOpts { eval_batches: args.get_u64("batches", 8).map_err(|e| anyhow!(e))?, ..Default::default() };
+            let ppl = coordinator::eval_lm(&eval, &state.flat, &cfg, &opts, noise)?;
+            println!("ppl: {ppl:.3} (noise={noise})");
+            Ok(())
+        }
+        Some("stream") => {
+            let artifact = args.get_or("artifact", "lm_stlt_tiny");
+            let ckpt = args.get("ckpt").ok_or_else(|| anyhow!("--ckpt required"))?;
+            let doc_len = args.get_usize("doc-len", 4096).map_err(|e| anyhow!(e))?;
+            let state = coordinator::load_checkpoint(std::path::Path::new(ckpt))?;
+            let server = coordinator::Server::start(
+                &manifest, &artifact, state.flat, Default::default(),
+            )?;
+            let entry = manifest.get(&format!("{artifact}.stream_batch"))?;
+            let mut corpus = stlt::data::corpus::Corpus::new(
+                stlt::data::corpus::CorpusConfig::default_for_vocab(entry.config.vocab), 99,
+            );
+            let doc = corpus.take(doc_len);
+            let t0 = std::time::Instant::now();
+            let r = server.feed(1, doc, true)?;
+            let dt = t0.elapsed().as_secs_f64();
+            println!(
+                "streamed {} tokens in {:.2}s ({:.0} tok/s), ppl {:.3}",
+                doc_len, dt, doc_len as f64 / dt,
+                stlt::metrics::perplexity(r.nll_sum, r.count)
+            );
+            println!("feed latency: {}", server.stats.feed_latency.lock().unwrap().summary());
+            server.shutdown();
+            Ok(())
+        }
+        Some("generate") => {
+            let artifact = args.get_or("artifact", "lm_stlt_tiny");
+            let ckpt = args.get("ckpt").ok_or_else(|| anyhow!("--ckpt required"))?;
+            let len = args.get_usize("len", 64).map_err(|e| anyhow!(e))?;
+            let state = coordinator::load_checkpoint(std::path::Path::new(ckpt))?;
+            let server = coordinator::Server::start(
+                &manifest, &artifact, state.flat, Default::default(),
+            )?;
+            let entry = manifest.get(&format!("{artifact}.stream_batch"))?;
+            let mut corpus = stlt::data::corpus::Corpus::new(
+                stlt::data::corpus::CorpusConfig::default_for_vocab(entry.config.vocab), 7,
+            );
+            let prompt = corpus.take(65);
+            let seed_token = *prompt.last().unwrap();
+            server.feed(1, prompt.clone(), false)?;
+            let sampling = stlt::coordinator::Sampling::parse(
+                &args.get_or("sampling", "greedy"),
+            )
+            .map_err(|e| anyhow!(e))?;
+            let g = server.generate_with(
+                1, seed_token, len, None, sampling,
+                args.get_u64("sample-seed", 0).map_err(|e| anyhow!(e))?,
+            )?;
+            println!("prompt tail: {:?}", &prompt[prompt.len().saturating_sub(8)..]);
+            println!("generated : {:?}", g.tokens);
+            server.shutdown();
+            Ok(())
+        }
+        Some("inspect") => {
+            let artifact = args.get_or("artifact", "lm_stlt_tiny");
+            let ckpt = args.get("ckpt").ok_or_else(|| anyhow!("--ckpt required"))?;
+            let state = coordinator::load_checkpoint(std::path::Path::new(ckpt))?;
+            let entry = manifest.get(&format!("{artifact}.train"))?;
+            let report = stlt::interpret::inspect_stlt_params(&state.flat, &entry.config);
+            println!("{report}");
+            Ok(())
+        }
+        _ => Err(anyhow!(usage())),
+    }
+}

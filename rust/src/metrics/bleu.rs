@@ -1,0 +1,104 @@
+//! Corpus BLEU-4 (Papineni et al. 2002): modified n-gram precision with
+//! clipping, geometric mean over n=1..4, and brevity penalty — the
+//! metric behind Table 2.
+
+use std::collections::HashMap;
+
+fn ngram_counts(tokens: &[i32], n: usize) -> HashMap<&[i32], usize> {
+    let mut m: HashMap<&[i32], usize> = HashMap::new();
+    if tokens.len() >= n {
+        for w in tokens.windows(n) {
+            *m.entry(w).or_insert(0) += 1;
+        }
+    }
+    m
+}
+
+/// Corpus-level BLEU-4 over (hypothesis, reference) pairs. Returns 0..100.
+pub fn bleu4(pairs: &[(Vec<i32>, Vec<i32>)]) -> f64 {
+    let mut match_n = [0usize; 4];
+    let mut total_n = [0usize; 4];
+    let mut hyp_len = 0usize;
+    let mut ref_len = 0usize;
+    for (hyp, rf) in pairs {
+        hyp_len += hyp.len();
+        ref_len += rf.len();
+        for n in 1..=4 {
+            let h = ngram_counts(hyp, n);
+            let r = ngram_counts(rf, n);
+            let total: usize = h.values().sum();
+            let matched: usize = h
+                .iter()
+                .map(|(g, c)| (*c).min(r.get(g).copied().unwrap_or(0)))
+                .sum();
+            match_n[n - 1] += matched;
+            total_n[n - 1] += total;
+        }
+    }
+    // smoothed (add-epsilon) geometric mean so short corpora don't zero out
+    let mut logsum = 0.0;
+    for n in 0..4 {
+        let p = if total_n[n] == 0 {
+            return 0.0;
+        } else {
+            (match_n[n] as f64).max(1e-9) / total_n[n] as f64
+        };
+        logsum += p.ln();
+    }
+    let geo = (logsum / 4.0).exp();
+    let bp = if hyp_len >= ref_len || hyp_len == 0 {
+        1.0
+    } else {
+        (1.0 - ref_len as f64 / hyp_len as f64).exp()
+    };
+    100.0 * bp * geo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(h: &[i32], r: &[i32]) -> (Vec<i32>, Vec<i32>) {
+        (h.to_vec(), r.to_vec())
+    }
+
+    #[test]
+    fn perfect_match_is_100() {
+        let pairs = vec![p(&[1, 2, 3, 4, 5, 6], &[1, 2, 3, 4, 5, 6])];
+        assert!((bleu4(&pairs) - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn disjoint_is_near_zero() {
+        let pairs = vec![p(&[1, 2, 3, 4, 5], &[6, 7, 8, 9, 10])];
+        assert!(bleu4(&pairs) < 1.0);
+    }
+
+    #[test]
+    fn partial_overlap_between() {
+        let pairs = vec![p(&[1, 2, 3, 9, 9, 9], &[1, 2, 3, 4, 5, 6])];
+        let b = bleu4(&pairs);
+        assert!(b > 0.0 && b < 100.0, "bleu {b}");
+    }
+
+    #[test]
+    fn brevity_penalty_punishes_short_hyps() {
+        let full = vec![p(&[1, 2, 3, 4, 5, 6, 7, 8], &[1, 2, 3, 4, 5, 6, 7, 8])];
+        let short = vec![p(&[1, 2, 3, 4], &[1, 2, 3, 4, 5, 6, 7, 8])];
+        assert!(bleu4(&short) < bleu4(&full));
+    }
+
+    #[test]
+    fn clipping_prevents_repetition_gaming() {
+        // "the the the ..." style over-generation must not score high
+        let gamed = vec![p(&[1, 1, 1, 1, 1, 1], &[1, 2, 3, 4, 5, 6])];
+        assert!(bleu4(&gamed) < 5.0);
+    }
+
+    #[test]
+    fn corpus_pools_counts() {
+        let a = vec![p(&[1, 2, 3, 4], &[1, 2, 3, 4]), p(&[9, 9], &[5, 6])];
+        let b = vec![p(&[1, 2, 3, 4], &[1, 2, 3, 4])];
+        assert!(bleu4(&a) < bleu4(&b));
+    }
+}

@@ -1,0 +1,84 @@
+//! SQuAD-style token F1 (bag-of-tokens precision/recall harmonic mean) —
+//! the NarrativeQA metric behind Table 3.
+
+use std::collections::HashMap;
+
+/// Token-level F1 between a predicted and gold answer (both tokenised).
+pub fn token_f1(pred: &[i32], gold: &[i32]) -> f64 {
+    if pred.is_empty() && gold.is_empty() {
+        return 1.0;
+    }
+    if pred.is_empty() || gold.is_empty() {
+        return 0.0;
+    }
+    let mut gold_counts: HashMap<i32, usize> = HashMap::new();
+    for t in gold {
+        *gold_counts.entry(*t).or_insert(0) += 1;
+    }
+    let mut overlap = 0usize;
+    for t in pred {
+        if let Some(c) = gold_counts.get_mut(t) {
+            if *c > 0 {
+                *c -= 1;
+                overlap += 1;
+            }
+        }
+    }
+    if overlap == 0 {
+        return 0.0;
+    }
+    let precision = overlap as f64 / pred.len() as f64;
+    let recall = overlap as f64 / gold.len() as f64;
+    2.0 * precision * recall / (precision + recall)
+}
+
+/// Mean F1 over a set of (pred, gold) pairs, scaled to 0..100.
+pub fn corpus_f1(pairs: &[(Vec<i32>, Vec<i32>)]) -> f64 {
+    if pairs.is_empty() {
+        return 0.0;
+    }
+    100.0 * pairs.iter().map(|(p, g)| token_f1(p, g)).sum::<f64>() / pairs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_match() {
+        assert!((token_f1(&[1, 2, 3], &[1, 2, 3]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn no_overlap() {
+        assert_eq!(token_f1(&[1, 2], &[3, 4]), 0.0);
+    }
+
+    #[test]
+    fn partial() {
+        // pred {1,2}, gold {2,3}: overlap 1, p=0.5, r=0.5, f1=0.5
+        assert!((token_f1(&[1, 2], &[2, 3]) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multiset_clipping() {
+        // repeated predictions only count up to gold multiplicity
+        let f = token_f1(&[7, 7, 7, 7], &[7]);
+        let p: f64 = 0.25;
+        let r = 1.0;
+        assert!((f - 2.0 * p * r / (p + r)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_edge_cases() {
+        assert_eq!(token_f1(&[], &[]), 1.0);
+        assert_eq!(token_f1(&[], &[1]), 0.0);
+        assert_eq!(token_f1(&[1], &[]), 0.0);
+    }
+
+    #[test]
+    fn corpus_mean() {
+        let pairs = vec![(vec![1], vec![1]), (vec![2], vec![3])];
+        assert!((corpus_f1(&pairs) - 50.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,74 @@
+//! Evaluation metrics: perplexity, BLEU-4, token F1, latency histograms,
+//! online mean/variance. Implemented from scratch; each reproduces the
+//! definition the paper's tables use (tokenised BLEU with brevity
+//! penalty per Papineni et al.; SQuAD-style token F1 for NarrativeQA).
+
+pub mod bleu;
+pub mod f1;
+pub mod stats;
+
+pub use bleu::bleu4;
+pub use f1::token_f1;
+pub use stats::{Histogram, OnlineStats};
+
+/// Perplexity from summed negative log-likelihood (nats) and token count.
+pub fn perplexity(nll_sum: f64, count: f64) -> f64 {
+    if count <= 0.0 {
+        return f64::NAN;
+    }
+    (nll_sum / count).exp()
+}
+
+/// Numerically-stable log-softmax over a logits row (host-side scoring).
+pub fn log_softmax(logits: &[f32]) -> Vec<f32> {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse = logits.iter().map(|x| (x - max).exp()).sum::<f32>().ln() + max;
+    logits.iter().map(|x| x - lse).collect()
+}
+
+/// argmax for greedy decoding.
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, x) in xs.iter().enumerate() {
+        if *x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ppl_of_uniform_model() {
+        // uniform over V => nll = ln V per token => ppl = V
+        let v = 256.0f64;
+        let nll = v.ln() * 100.0;
+        assert!((perplexity(nll, 100.0) - v).abs() < 1e-6);
+    }
+
+    #[test]
+    fn log_softmax_normalises() {
+        let ls = log_softmax(&[1.0, 2.0, 3.0]);
+        let total: f32 = ls.iter().map(|x| x.exp()).sum();
+        assert!((total - 1.0).abs() < 1e-5);
+        assert!(ls[2] > ls[1] && ls[1] > ls[0]);
+    }
+
+    #[test]
+    fn log_softmax_shift_invariant() {
+        let a = log_softmax(&[1.0, 2.0, 3.0]);
+        let b = log_softmax(&[101.0, 102.0, 103.0]);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 5.0, -2.0]), 1);
+        assert_eq!(argmax(&[3.0]), 0);
+    }
+}

@@ -1,0 +1,177 @@
+//! Online statistics + fixed-bucket latency histogram (coordinator
+//! telemetry: p50/p95/p99 request latency, throughput).
+
+/// Welford online mean/variance.
+#[derive(Clone, Debug, Default)]
+pub struct OnlineStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl OnlineStats {
+    pub fn new() -> Self {
+        OnlineStats { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Log-spaced latency histogram from 1us to ~100s; percentile queries by
+/// bucket interpolation — fixed memory, O(1) insert, good enough for
+/// serving telemetry.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    total: u64,
+    lo: f64,
+    ratio: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        // 200 buckets, log-spaced over [1e-6, 100] seconds
+        let lo = 1e-6f64;
+        let hi = 100.0f64;
+        let n = 200;
+        Histogram { buckets: vec![0; n + 2], total: 0, lo, ratio: (hi / lo).powf(1.0 / n as f64) }
+    }
+
+    fn bucket_of(&self, x: f64) -> usize {
+        if x < self.lo {
+            return 0;
+        }
+        let i = ((x / self.lo).ln() / self.ratio.ln()).floor() as usize + 1;
+        i.min(self.buckets.len() - 1)
+    }
+
+    pub fn record(&mut self, seconds: f64) {
+        let b = self.bucket_of(seconds);
+        self.buckets[b] += 1;
+        self.total += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Approximate quantile (q in [0,1]) -> seconds (bucket lower edge).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target.max(1) {
+                if i == 0 {
+                    return self.lo;
+                }
+                return self.lo * self.ratio.powi(i as i32 - 1);
+            }
+        }
+        self.lo * self.ratio.powi(self.buckets.len() as i32 - 2)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} p50={:.3}ms p95={:.3}ms p99={:.3}ms",
+            self.total,
+            self.quantile(0.5) * 1e3,
+            self.quantile(0.95) * 1e3,
+            self.quantile(0.99) * 1e3
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn online_stats_basic() {
+        let mut s = OnlineStats::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.var() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = Histogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-4); // 0.1ms .. 100ms
+        }
+        let p50 = h.quantile(0.5);
+        let p95 = h.quantile(0.95);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p95 && p95 <= p99);
+        // p50 should be around 50ms (log buckets: within a factor ~1.2)
+        assert!(p50 > 0.03 && p50 < 0.07, "p50={p50}");
+    }
+
+    #[test]
+    fn histogram_handles_extremes() {
+        let mut h = Histogram::new();
+        h.record(0.0);
+        h.record(1e-9);
+        h.record(1e9);
+        assert_eq!(h.count(), 3);
+        assert!(h.quantile(1.0) >= h.quantile(0.0));
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.5), 0.0);
+    }
+}

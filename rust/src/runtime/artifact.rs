@@ -1,0 +1,287 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime. Parses artifacts/manifest.json (via util::json) into
+//! typed entries with input/output specs and the originating ModelConfig.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::tensor::DType;
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// Subset of the python ModelConfig the Rust side needs.
+#[derive(Clone, Debug, Default)]
+pub struct ModelConfig {
+    pub arch: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_ctx: usize,
+    pub s_max: usize,
+    pub batch: usize,
+    pub adaptive: bool,
+    pub mode: String,
+    pub total_steps: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: String,
+    pub param_count: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub config: ModelConfig,
+    /// extra ints (chunk, n_src, m_tgt ...)
+    pub extra: BTreeMap<String, i64>,
+    /// python-exact packed init vector (raw LE f32), if the entry has one
+    pub init_file: Option<PathBuf>,
+    /// indices of inputs that survived jax's unused-argument pruning;
+    /// the runtime filters its argument list to exactly these.
+    pub kept_inputs: Vec<usize>,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: BTreeMap<String, Entry>,
+}
+
+fn parse_spec(j: &Json) -> Result<TensorSpec> {
+    let dtype = DType::from_name(
+        j.get("dtype").and_then(|d| d.as_str()).ok_or_else(|| anyhow!("spec missing dtype"))?,
+    )
+    .map_err(|e| anyhow!("{e}"))?;
+    let shape = j
+        .get("shape")
+        .and_then(|s| s.as_arr())
+        .ok_or_else(|| anyhow!("spec missing shape"))?
+        .iter()
+        .map(|v| v.as_i64().map(|x| x as usize).ok_or_else(|| anyhow!("bad dim")))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(TensorSpec { dtype, shape })
+}
+
+fn parse_config(j: Option<&Json>) -> ModelConfig {
+    let mut c = ModelConfig::default();
+    if let Some(j) = j {
+        let s = |k: &str| j.get(k).and_then(|v| v.as_str()).unwrap_or("").to_string();
+        let i = |k: &str| j.get(k).and_then(|v| v.as_i64()).unwrap_or(0);
+        let b = |k: &str| j.get(k).and_then(|v| v.as_bool()).unwrap_or(false);
+        c.arch = s("arch");
+        c.vocab = i("vocab") as usize;
+        c.d_model = i("d_model") as usize;
+        c.n_layers = i("n_layers") as usize;
+        c.n_ctx = i("n_ctx") as usize;
+        c.s_max = i("s_max") as usize;
+        c.batch = i("batch") as usize;
+        c.adaptive = b("adaptive");
+        c.mode = s("mode");
+        c.total_steps = i("total_steps") as u64;
+    }
+    c
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let entries_j = j
+            .get("entries")
+            .and_then(|e| e.as_obj())
+            .ok_or_else(|| anyhow!("manifest missing entries"))?;
+        let mut entries = BTreeMap::new();
+        for (name, e) in entries_j {
+            let inputs = e
+                .get("inputs")
+                .and_then(|x| x.as_arr())
+                .ok_or_else(|| anyhow!("{name}: missing inputs"))?
+                .iter()
+                .map(parse_spec)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = e
+                .get("outputs")
+                .and_then(|x| x.as_arr())
+                .ok_or_else(|| anyhow!("{name}: missing outputs"))?
+                .iter()
+                .map(parse_spec)
+                .collect::<Result<Vec<_>>>()?;
+            let mut extra = BTreeMap::new();
+            for k in ["chunk", "n_src", "m_tgt", "batch_srv"] {
+                if let Some(v) = e.get(k).and_then(|v| v.as_i64()) {
+                    extra.insert(k.to_string(), v);
+                }
+            }
+            let n_inputs = inputs.len();
+            entries.insert(
+                name.clone(),
+                Entry {
+                    name: name.clone(),
+                    file: dir.join(
+                        e.get("file")
+                            .and_then(|f| f.as_str())
+                            .ok_or_else(|| anyhow!("{name}: missing file"))?,
+                    ),
+                    kind: e.get("kind").and_then(|k| k.as_str()).unwrap_or("").to_string(),
+                    param_count: e.get("param_count").and_then(|p| p.as_i64()).unwrap_or(0)
+                        as usize,
+                    inputs,
+                    outputs,
+                    config: parse_config(e.get("config")),
+                    extra,
+                    init_file: e
+                        .get("init")
+                        .and_then(|v| v.as_str())
+                        .map(|f| dir.join(f)),
+                    kept_inputs: e
+                        .get("kept_inputs")
+                        .and_then(|v| v.as_arr())
+                        .map(|a| a.iter().filter_map(|x| x.as_i64()).map(|x| x as usize).collect())
+                        .unwrap_or_else(|| (0..n_inputs).collect()),
+                },
+            );
+        }
+        Ok(Manifest { dir, entries })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Entry> {
+        self.entries.get(name).ok_or_else(|| {
+            anyhow!(
+                "artifact '{name}' not in manifest ({} entries; run `make artifacts`)",
+                self.entries.len()
+            )
+        })
+    }
+
+    /// Entries with a given kind, sorted by name.
+    pub fn by_kind(&self, kind: &str) -> Vec<&Entry> {
+        self.entries.values().filter(|e| e.kind == kind).collect()
+    }
+}
+
+/// Locate the artifacts dir: $STLT_ARTIFACTS or ./artifacts upward.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("STLT_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !cur.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+impl Entry {
+    /// Validate a set of host tensors against this entry's input specs.
+    pub fn check_inputs(&self, tensors: &[crate::runtime::tensor::Tensor]) -> Result<()> {
+        if tensors.len() != self.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.inputs.len(),
+                tensors.len()
+            );
+        }
+        for (i, (t, spec)) in tensors.iter().zip(&self.inputs).enumerate() {
+            if t.dtype() != spec.dtype {
+                bail!("{}: input {i} dtype mismatch", self.name);
+            }
+            if t.shape() != spec.shape.as_slice() {
+                bail!(
+                    "{}: input {i} shape {:?} != manifest {:?}",
+                    self.name,
+                    t.shape(),
+                    spec.shape
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    const SAMPLE: &str = r#"{"version":1,"entries":{
+      "lm.train":{"file":"lm.train.hlo.txt","kind":"train_step","param_count":10,
+        "inputs":[{"dtype":"float32","shape":[10]},{"dtype":"int32","shape":[2,3]}],
+        "outputs":[{"dtype":"float32","shape":[10]},{"dtype":"float32","shape":[]}],
+        "config":{"arch":"stlt","vocab":256,"d_model":64,"n_layers":2,"n_ctx":128,
+                  "s_max":32,"batch":8,"adaptive":true,"mode":"linear","total_steps":2000},
+        "chunk":64}}}"#;
+
+    #[test]
+    fn parses_entries() {
+        let dir = std::env::temp_dir().join("stlt_manifest_test1");
+        write_manifest(&dir, SAMPLE);
+        let m = Manifest::load(&dir).unwrap();
+        let e = m.get("lm.train").unwrap();
+        assert_eq!(e.kind, "train_step");
+        assert_eq!(e.param_count, 10);
+        assert_eq!(e.inputs[1].shape, vec![2, 3]);
+        assert_eq!(e.outputs[1].shape, Vec::<usize>::new());
+        assert_eq!(e.config.arch, "stlt");
+        assert!(e.config.adaptive);
+        assert_eq!(e.extra["chunk"], 64);
+    }
+
+    #[test]
+    fn missing_entry_helpful_error() {
+        let dir = std::env::temp_dir().join("stlt_manifest_test2");
+        write_manifest(&dir, SAMPLE);
+        let m = Manifest::load(&dir).unwrap();
+        let err = format!("{:#}", m.get("nope").unwrap_err());
+        assert!(err.contains("make artifacts"));
+    }
+
+    #[test]
+    fn input_validation() {
+        use crate::runtime::tensor::Tensor;
+        let dir = std::env::temp_dir().join("stlt_manifest_test3");
+        write_manifest(&dir, SAMPLE);
+        let m = Manifest::load(&dir).unwrap();
+        let e = m.get("lm.train").unwrap();
+        let good = vec![Tensor::f32(vec![0.0; 10], &[10]), Tensor::i32(vec![0; 6], &[2, 3])];
+        assert!(e.check_inputs(&good).is_ok());
+        let bad = vec![Tensor::f32(vec![0.0; 10], &[10]), Tensor::f32(vec![0.0; 6], &[2, 3])];
+        assert!(e.check_inputs(&bad).is_err());
+        assert!(e.check_inputs(&good[..1].to_vec()).is_err());
+    }
+
+    #[test]
+    fn by_kind_filters() {
+        let dir = std::env::temp_dir().join("stlt_manifest_test4");
+        write_manifest(&dir, SAMPLE);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.by_kind("train_step").len(), 1);
+        assert_eq!(m.by_kind("forward").len(), 0);
+    }
+}

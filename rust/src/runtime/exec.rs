@@ -1,0 +1,498 @@
+//! Typed entry points over raw artifact execution: one struct per
+//! artifact kind, owning its host-side state and hiding tensor plumbing
+//! from the coordinator.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::artifact::{Entry, Manifest};
+use crate::runtime::client::Runtime;
+use crate::runtime::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Pre-uploaded parameter vector (§Perf L3-1): frozen weights are copied
+/// host->device once and reused across every execute_b call, instead of
+/// per-call Vec clone + literal + buffer copies.
+pub struct ParamBuf {
+    buf: xla::PjRtBuffer,
+    pub param_count: usize,
+}
+
+impl ParamBuf {
+    pub fn buffer(&self) -> &xla::PjRtBuffer {
+        &self.buf
+    }
+}
+
+pub fn upload_params(rt: &Runtime, entry: &Entry, flat: &[f32]) -> Result<ParamBuf> {
+    if flat.len() != entry.param_count {
+        bail!("{}: {} params != manifest {}", entry.name, flat.len(), entry.param_count);
+    }
+    Ok(ParamBuf { buf: rt.upload_f32(flat, &[flat.len()])?, param_count: flat.len() })
+}
+
+/// Training state for one model: flat params + Adam moments.
+pub struct TrainState {
+    pub flat: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: i32,
+}
+
+impl TrainState {
+    pub fn zeros(param_count: usize) -> TrainState {
+        TrainState {
+            flat: vec![0.0; param_count],
+            m: vec![0.0; param_count],
+            v: vec![0.0; param_count],
+            step: 0,
+        }
+    }
+
+    /// Proper initialisation: aot.py dumps the python-exact packed init
+    /// vector (`<name>.init.bin`, raw LE f32) next to the HLO; this loads
+    /// it so LN gains start at 1, sigma_raw log-spaced, etc.
+    pub fn from_entry(entry: &Entry) -> Result<TrainState> {
+        let init = entry
+            .init_file
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("{}: no init vector in manifest", entry.name))?;
+        let flat = load_init_vec(init, entry.param_count)?;
+        Ok(TrainState {
+            m: vec![0.0; flat.len()],
+            v: vec![0.0; flat.len()],
+            flat,
+            step: 0,
+        })
+    }
+}
+
+/// `train_step` artifact: (flat, m, v, step, tokens, seed) ->
+/// (flat', m', v', loss, ce, s_eff).
+pub struct TrainStep<'a> {
+    rt: &'a Runtime,
+    entry: &'a Entry,
+    pub batch: usize,
+    pub n_plus_1: usize,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct StepMetrics {
+    pub loss: f32,
+    pub ce: f32,
+    pub s_eff: f32,
+}
+
+impl<'a> TrainStep<'a> {
+    pub fn new(rt: &'a Runtime, manifest: &'a Manifest, name: &str) -> Result<TrainStep<'a>> {
+        let entry = manifest.get(name)?;
+        if entry.kind != "train_step" {
+            bail!("{name} is kind '{}', expected train_step", entry.kind);
+        }
+        let tok = &entry.inputs[4].shape;
+        Ok(TrainStep { rt, entry, batch: tok[0], n_plus_1: tok[1] })
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.entry.param_count
+    }
+
+    pub fn entry(&self) -> &Entry {
+        self.entry
+    }
+
+    /// Advance `state` by one step on `tokens` (flat [batch * n_plus_1]).
+    pub fn run(&self, state: &mut TrainState, tokens: &[i32], seed: i32) -> Result<StepMetrics> {
+        let p = self.entry.param_count;
+        let inputs = vec![
+            Tensor::f32(std::mem::take(&mut state.flat), &[p]),
+            Tensor::f32(std::mem::take(&mut state.m), &[p]),
+            Tensor::f32(std::mem::take(&mut state.v), &[p]),
+            Tensor::scalar_i32(state.step),
+            Tensor::i32(tokens.to_vec(), &[self.batch, self.n_plus_1]),
+            Tensor::scalar_i32(seed),
+        ];
+        let mut out = self.rt.run(self.entry, &inputs)?;
+        // outputs: flat', m', v', loss, ce, s_eff
+        let s_eff = out.pop().unwrap().as_f32()?[0];
+        let ce = out.pop().unwrap().as_f32()?[0];
+        let loss = out.pop().unwrap().as_f32()?[0];
+        state.v = out.pop().unwrap().into_f32()?;
+        state.m = out.pop().unwrap().into_f32()?;
+        state.flat = out.pop().unwrap().into_f32()?;
+        state.step += 1;
+        Ok(StepMetrics { loss, ce, s_eff })
+    }
+}
+
+/// `eval_step` artifact: (flat, tokens, noise_std, seed) -> (nll, count, s_eff).
+pub struct EvalStep<'a> {
+    rt: &'a Runtime,
+    entry: &'a Entry,
+    pub batch: usize,
+    pub n_plus_1: usize,
+}
+
+impl<'a> EvalStep<'a> {
+    pub fn new(rt: &'a Runtime, manifest: &'a Manifest, name: &str) -> Result<EvalStep<'a>> {
+        let entry = manifest.get(name)?;
+        if entry.kind != "eval_step" {
+            bail!("{name} is kind '{}', expected eval_step", entry.kind);
+        }
+        let tok = &entry.inputs[1].shape;
+        Ok(EvalStep { rt, entry, batch: tok[0], n_plus_1: tok[1] })
+    }
+
+    pub fn run(
+        &self,
+        flat: &[f32],
+        tokens: &[i32],
+        noise_std: f32,
+        seed: i32,
+    ) -> Result<(f64, f64, f32)> {
+        let p = self.entry.param_count;
+        let out = self.rt.run(
+            self.entry,
+            &[
+                Tensor::f32(flat.to_vec(), &[p]),
+                Tensor::i32(tokens.to_vec(), &[self.batch, self.n_plus_1]),
+                Tensor::scalar_f32(noise_std),
+                Tensor::scalar_i32(seed),
+            ],
+        )?;
+        Ok((out[0].as_f32()?[0] as f64, out[1].as_f32()?[0] as f64, out[2].as_f32()?[0]))
+    }
+
+    pub fn upload(&self, flat: &[f32]) -> Result<ParamBuf> {
+        upload_params(self.rt, self.entry, flat)
+    }
+
+    /// Hot-path variant with a pre-uploaded parameter buffer.
+    pub fn run_h(
+        &self,
+        params: &ParamBuf,
+        tokens: &[i32],
+        noise_std: f32,
+        seed: i32,
+    ) -> Result<(f64, f64, f32)> {
+        let out = self.rt.run_with_param_buffer(
+            self.entry,
+            &params.buf,
+            &[
+                Tensor::i32(tokens.to_vec(), &[self.batch, self.n_plus_1]),
+                Tensor::scalar_f32(noise_std),
+                Tensor::scalar_i32(seed),
+            ],
+        )?;
+        Ok((out[0].as_f32()?[0] as f64, out[1].as_f32()?[0] as f64, out[2].as_f32()?[0]))
+    }
+}
+
+/// `forward` artifact: (flat, tokens [1, N]) -> logits [1, N, V].
+pub struct Forward<'a> {
+    rt: &'a Runtime,
+    entry: &'a Entry,
+    pub n: usize,
+}
+
+impl<'a> Forward<'a> {
+    pub fn new(rt: &'a Runtime, manifest: &'a Manifest, name: &str) -> Result<Forward<'a>> {
+        let entry = manifest.get(name)?;
+        if entry.kind != "forward" {
+            bail!("{name} is kind '{}', expected forward", entry.kind);
+        }
+        let n = entry.inputs[1].shape[1];
+        Ok(Forward { rt, entry, n })
+    }
+
+    pub fn run(&self, flat: &[f32], tokens: &[i32]) -> Result<Tensor> {
+        let p = self.entry.param_count;
+        let mut out = self.rt.run(
+            self.entry,
+            &[Tensor::f32(flat.to_vec(), &[p]), Tensor::i32(tokens.to_vec(), &[1, self.n])],
+        )?;
+        Ok(out.remove(0))
+    }
+}
+
+/// STLT streaming carry: per-layer Laplace state (L, U), the O(S d)
+/// "KV-cache analog" that makes 100k+ contexts feasible.
+#[derive(Clone, Debug)]
+pub struct StreamCarry {
+    pub l: Vec<f32>,
+    pub u: Vec<f32>,
+    pub l_shape: Vec<usize>,
+    pub u_shape: Vec<usize>,
+}
+
+impl StreamCarry {
+    pub fn zeros(entry: &Entry) -> StreamCarry {
+        let l_shape = entry.inputs[1].shape.clone();
+        let u_shape = entry.inputs[2].shape.clone();
+        StreamCarry {
+            l: vec![0.0; l_shape.iter().product()],
+            u: vec![0.0; u_shape.iter().product()],
+            l_shape,
+            u_shape,
+        }
+    }
+
+    pub fn state_bytes(&self) -> usize {
+        (self.l.len() + self.u.len()) * 4
+    }
+}
+
+/// `stream_step` artifact:
+/// (flat, l, u, tokens[C], targets[C], mask[C]) -> (l', u', nll, count).
+pub struct StreamStep<'a> {
+    rt: &'a Runtime,
+    entry: &'a Entry,
+    pub chunk: usize,
+}
+
+impl<'a> StreamStep<'a> {
+    pub fn new(rt: &'a Runtime, manifest: &'a Manifest, name: &str) -> Result<StreamStep<'a>> {
+        let entry = manifest.get(name)?;
+        if entry.kind != "stream_step" {
+            bail!("{name} is kind '{}', expected stream_step", entry.kind);
+        }
+        let chunk = entry.inputs[3].shape[0];
+        Ok(StreamStep { rt, entry, chunk })
+    }
+
+    pub fn zero_carry(&self) -> StreamCarry {
+        StreamCarry::zeros(self.entry)
+    }
+
+    /// Process one chunk; returns (nll_sum, count) for masked positions.
+    pub fn run(
+        &self,
+        flat: &[f32],
+        carry: &mut StreamCarry,
+        tokens: &[i32],
+        targets: &[i32],
+        mask: &[f32],
+    ) -> Result<(f64, f64)> {
+        let p = self.entry.param_count;
+        let mut out = self.rt.run(
+            self.entry,
+            &[
+                Tensor::f32(flat.to_vec(), &[p]),
+                Tensor::f32(std::mem::take(&mut carry.l), &carry.l_shape.clone()),
+                Tensor::f32(std::mem::take(&mut carry.u), &carry.u_shape.clone()),
+                Tensor::i32(tokens.to_vec(), &[self.chunk]),
+                Tensor::i32(targets.to_vec(), &[self.chunk]),
+                Tensor::f32(mask.to_vec(), &[self.chunk]),
+            ],
+        )?;
+        let count = out.pop().unwrap().as_f32()?[0] as f64;
+        let nll = out.pop().unwrap().as_f32()?[0] as f64;
+        carry.u = out.pop().unwrap().into_f32()?;
+        carry.l = out.pop().unwrap().into_f32()?;
+        Ok((nll, count))
+    }
+
+    pub fn upload(&self, flat: &[f32]) -> Result<ParamBuf> {
+        upload_params(self.rt, self.entry, flat)
+    }
+
+    /// Hot-path variant with a pre-uploaded parameter buffer.
+    pub fn run_h(
+        &self,
+        params: &ParamBuf,
+        carry: &mut StreamCarry,
+        tokens: &[i32],
+        targets: &[i32],
+        mask: &[f32],
+    ) -> Result<(f64, f64)> {
+        let mut out = self.rt.run_with_param_buffer(
+            self.entry,
+            &params.buf,
+            &[
+                Tensor::f32(std::mem::take(&mut carry.l), &carry.l_shape.clone()),
+                Tensor::f32(std::mem::take(&mut carry.u), &carry.u_shape.clone()),
+                Tensor::i32(tokens.to_vec(), &[self.chunk]),
+                Tensor::i32(targets.to_vec(), &[self.chunk]),
+                Tensor::f32(mask.to_vec(), &[self.chunk]),
+            ],
+        )?;
+        let count = out.pop().unwrap().as_f32()?[0] as f64;
+        let nll = out.pop().unwrap().as_f32()?[0] as f64;
+        carry.u = out.pop().unwrap().into_f32()?;
+        carry.l = out.pop().unwrap().into_f32()?;
+        Ok((nll, count))
+    }
+}
+
+/// `decode_step` artifact: (flat, l, u, token[1]) -> (l', u', logits[V]).
+pub struct DecodeStep<'a> {
+    rt: &'a Runtime,
+    entry: &'a Entry,
+    pub vocab: usize,
+}
+
+impl<'a> DecodeStep<'a> {
+    pub fn new(rt: &'a Runtime, manifest: &'a Manifest, name: &str) -> Result<DecodeStep<'a>> {
+        let entry = manifest.get(name)?;
+        if entry.kind != "decode_step" {
+            bail!("{name} is kind '{}', expected decode_step", entry.kind);
+        }
+        let vocab = entry.outputs[2].shape[0];
+        Ok(DecodeStep { rt, entry, vocab })
+    }
+
+    pub fn zero_carry(&self) -> StreamCarry {
+        StreamCarry::zeros(self.entry)
+    }
+
+    pub fn run(&self, flat: &[f32], carry: &mut StreamCarry, token: i32) -> Result<Vec<f32>> {
+        let p = self.entry.param_count;
+        let mut out = self.rt.run(
+            self.entry,
+            &[
+                Tensor::f32(flat.to_vec(), &[p]),
+                Tensor::f32(std::mem::take(&mut carry.l), &carry.l_shape.clone()),
+                Tensor::f32(std::mem::take(&mut carry.u), &carry.u_shape.clone()),
+                Tensor::i32(vec![token], &[1]),
+            ],
+        )?;
+        let logits = out.pop().unwrap().into_f32()?;
+        carry.u = out.pop().unwrap().into_f32()?;
+        carry.l = out.pop().unwrap().into_f32()?;
+        Ok(logits)
+    }
+
+    pub fn upload(&self, flat: &[f32]) -> Result<ParamBuf> {
+        upload_params(self.rt, self.entry, flat)
+    }
+
+    /// Hot-path variant with a pre-uploaded parameter buffer.
+    pub fn run_h(&self, params: &ParamBuf, carry: &mut StreamCarry, token: i32) -> Result<Vec<f32>> {
+        let mut out = self.rt.run_with_param_buffer(
+            self.entry,
+            &params.buf,
+            &[
+                Tensor::f32(std::mem::take(&mut carry.l), &carry.l_shape.clone()),
+                Tensor::f32(std::mem::take(&mut carry.u), &carry.u_shape.clone()),
+                Tensor::i32(vec![token], &[1]),
+            ],
+        )?;
+        let logits = out.pop().unwrap().into_f32()?;
+        carry.u = out.pop().unwrap().into_f32()?;
+        carry.l = out.pop().unwrap().into_f32()?;
+        Ok(logits)
+    }
+}
+
+/// `s2s_train_step` artifact.
+pub struct S2sTrainStep<'a> {
+    rt: &'a Runtime,
+    entry: &'a Entry,
+    pub batch: usize,
+    pub n_src: usize,
+    pub m_tgt_plus_1: usize,
+}
+
+impl<'a> S2sTrainStep<'a> {
+    pub fn new(rt: &'a Runtime, manifest: &'a Manifest, name: &str) -> Result<S2sTrainStep<'a>> {
+        let entry = manifest.get(name)?;
+        if entry.kind != "s2s_train_step" {
+            bail!("{name} is kind '{}', expected s2s_train_step", entry.kind);
+        }
+        let src = &entry.inputs[4].shape;
+        let tgt = &entry.inputs[5].shape;
+        Ok(S2sTrainStep { rt, entry, batch: src[0], n_src: src[1], m_tgt_plus_1: tgt[1] })
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.entry.param_count
+    }
+
+    pub fn run(
+        &self,
+        state: &mut TrainState,
+        src: &[i32],
+        tgt: &[i32],
+        seed: i32,
+    ) -> Result<(f32, f32)> {
+        let p = self.entry.param_count;
+        let mut out = self.rt.run(
+            self.entry,
+            &[
+                Tensor::f32(std::mem::take(&mut state.flat), &[p]),
+                Tensor::f32(std::mem::take(&mut state.m), &[p]),
+                Tensor::f32(std::mem::take(&mut state.v), &[p]),
+                Tensor::scalar_i32(state.step),
+                Tensor::i32(src.to_vec(), &[self.batch, self.n_src]),
+                Tensor::i32(tgt.to_vec(), &[self.batch, self.m_tgt_plus_1]),
+                Tensor::scalar_i32(seed),
+            ],
+        )?;
+        let ce = out.pop().unwrap().as_f32()?[0];
+        let loss = out.pop().unwrap().as_f32()?[0];
+        state.v = out.pop().unwrap().into_f32()?;
+        state.m = out.pop().unwrap().into_f32()?;
+        state.flat = out.pop().unwrap().into_f32()?;
+        state.step += 1;
+        Ok((loss, ce))
+    }
+}
+
+/// `s2s_decode` artifact: (flat, src, tgt_prefix, cur_len) -> logits [B, V].
+pub struct S2sDecode<'a> {
+    rt: &'a Runtime,
+    entry: &'a Entry,
+    pub batch: usize,
+    pub n_src: usize,
+    pub m_tgt: usize,
+}
+
+impl<'a> S2sDecode<'a> {
+    pub fn new(rt: &'a Runtime, manifest: &'a Manifest, name: &str) -> Result<S2sDecode<'a>> {
+        let entry = manifest.get(name)?;
+        if entry.kind != "s2s_decode" {
+            bail!("{name} is kind '{}', expected s2s_decode", entry.kind);
+        }
+        let src = &entry.inputs[1].shape;
+        let tgt = &entry.inputs[2].shape;
+        Ok(S2sDecode { rt, entry, batch: src[0], n_src: src[1], m_tgt: tgt[1] })
+    }
+
+    pub fn run(
+        &self,
+        flat: &[f32],
+        src: &[i32],
+        tgt_prefix: &[i32],
+        cur_len: i32,
+    ) -> Result<Vec<f32>> {
+        let p = self.entry.param_count;
+        let mut out = self.rt.run(
+            self.entry,
+            &[
+                Tensor::f32(flat.to_vec(), &[p]),
+                Tensor::i32(src.to_vec(), &[self.batch, self.n_src]),
+                Tensor::i32(tgt_prefix.to_vec(), &[self.batch, self.m_tgt]),
+                Tensor::scalar_i32(cur_len),
+            ],
+        )?;
+        out.pop().unwrap().into_f32()
+    }
+}
+
+/// Fallback host init (N(0, 0.02)) for latency-only artifacts (scaling
+/// sweeps) that have no python init vector; never used for training.
+pub fn init_vec_host(param_count: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..param_count).map(|_| (rng.normal() * 0.02) as f32).collect()
+}
+
+/// Load an init vector dumped by aot.py (f32 little-endian raw file).
+pub fn load_init_vec(path: &std::path::Path, expected: usize) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path)?;
+    if bytes.len() != expected * 4 {
+        bail!("init vec {}: {} bytes != {} params * 4", path.display(), bytes.len(), expected);
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}

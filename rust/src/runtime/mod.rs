@@ -1,0 +1,16 @@
+//! PJRT runtime: loads `artifacts/*.hlo.txt` (AOT-lowered by
+//! python/compile/aot.py) and executes them on the XLA CPU client.
+//! Python never runs on this path.
+
+pub mod artifact;
+pub mod client;
+pub mod exec;
+pub mod tensor;
+
+pub use artifact::{default_artifacts_dir, Manifest};
+pub use client::Runtime;
+pub use exec::{
+    DecodeStep, EvalStep, Forward, S2sDecode, S2sTrainStep, StepMetrics, StreamCarry,
+    StreamStep, TrainState, TrainStep,
+};
+pub use tensor::{DType, Tensor};

@@ -1,0 +1,154 @@
+//! Host tensors and conversion to/from `xla::Literal`.
+//!
+//! Only the dtypes crossing the AOT boundary exist: f32 and i32. Shapes
+//! are validated against the manifest before every execution so a
+//! mismatched artifact fails loudly at the boundary, not inside XLA.
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn from_name(s: &str) -> Result<DType> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => bail!("unsupported dtype '{other}'"),
+        }
+    }
+}
+
+/// Host tensor: flat storage + shape. Row-major.
+#[derive(Clone, Debug)]
+pub enum Tensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Tensor {
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Tensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>().max(1));
+        Tensor::F32(data, shape.to_vec())
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> Tensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>().max(1));
+        Tensor::I32(data, shape.to_vec())
+    }
+
+    pub fn scalar_f32(x: f32) -> Tensor {
+        Tensor::F32(vec![x], vec![])
+    }
+
+    pub fn scalar_i32(x: i32) -> Tensor {
+        Tensor::I32(vec![x], vec![])
+    }
+
+    pub fn zeros_f32(shape: &[usize]) -> Tensor {
+        Tensor::F32(vec![0.0; shape.iter().product::<usize>().max(1)], shape.to_vec())
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32(_, s) | Tensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::F32(..) => DType::F32,
+            Tensor::I32(..) => DType::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32(d, _) => d.len(),
+            Tensor::I32(d, _) => d.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(d, _) => Ok(d),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32(d, _) => Ok(d),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            Tensor::F32(d, _) => Ok(d),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    /// Convert to an xla Literal with the proper shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32(d, _) => xla::Literal::vec1(d),
+            Tensor::I32(d, _) => xla::Literal::vec1(d),
+        };
+        if dims.is_empty() {
+            // scalar: reshape to rank-0
+            Ok(lit.reshape(&[])?)
+        } else {
+            Ok(lit.reshape(&dims)?)
+        }
+    }
+
+    /// Read back from a literal, trusting the manifest-declared shape.
+    pub fn from_literal(lit: &xla::Literal, dtype: DType, shape: &[usize]) -> Result<Tensor> {
+        Ok(match dtype {
+            DType::F32 => Tensor::F32(lit.to_vec::<f32>()?, shape.to_vec()),
+            DType::I32 => Tensor::I32(lit.to_vec::<i32>()?, shape.to_vec()),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_accounting() {
+        let t = Tensor::f32(vec![0.0; 12], &[3, 4]);
+        assert_eq!(t.shape(), &[3, 4]);
+        assert_eq!(t.len(), 12);
+        assert_eq!(t.dtype(), DType::F32);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::f32(vec![0.0; 5], &[3, 4]);
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::from_name("float32").unwrap(), DType::F32);
+        assert_eq!(DType::from_name("int32").unwrap(), DType::I32);
+        assert!(DType::from_name("bfloat16").is_err());
+    }
+
+    #[test]
+    fn scalars() {
+        assert_eq!(Tensor::scalar_i32(7).shape(), &[] as &[usize]);
+        assert_eq!(Tensor::scalar_f32(1.5).len(), 1);
+    }
+}

@@ -1,0 +1,216 @@
+//! Tokenizer substrate: byte-level base vocabulary + BPE trainer/encoder.
+//!
+//! Used by the e2e pipeline (vocab 4096 BPE over the synthetic corpus)
+//! and by the text-facing examples. The artifact embedding size fixes
+//! the vocabulary size, so `train` takes an exact target size.
+//!
+//! Reserved ids: 0 = PAD, 1 = BOS, 2 = EOS, 3 = SEP; bytes occupy
+//! ids 4..260; merges occupy 260..vocab_size.
+
+use std::collections::HashMap;
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const SEP: i32 = 3;
+pub const N_SPECIAL: usize = 4;
+
+#[derive(Clone, Debug)]
+pub struct Bpe {
+    /// merge list in training order: (left_id, right_id) -> new_id
+    pub merges: Vec<(i32, i32)>,
+    /// rank lookup for encoding
+    ranks: HashMap<(i32, i32), usize>,
+    pub vocab_size: usize,
+}
+
+impl Bpe {
+    /// Byte-level tokenizer with no merges (vocab = 260).
+    pub fn byte_level() -> Bpe {
+        Bpe { merges: Vec::new(), ranks: HashMap::new(), vocab_size: N_SPECIAL + 256 }
+    }
+
+    /// Train BPE on `text` until exactly `vocab_size` ids exist (or no
+    /// pair repeats). Standard greedy highest-frequency pair merging.
+    pub fn train(text: &str, vocab_size: usize) -> Bpe {
+        assert!(vocab_size >= N_SPECIAL + 256, "vocab must cover bytes + specials");
+        let mut seq: Vec<i32> = text.bytes().map(|b| b as i32 + N_SPECIAL as i32).collect();
+        let mut merges = Vec::new();
+        let mut next_id = (N_SPECIAL + 256) as i32;
+        while (next_id as usize) < vocab_size {
+            let mut counts: HashMap<(i32, i32), usize> = HashMap::new();
+            for w in seq.windows(2) {
+                *counts.entry((w[0], w[1])).or_insert(0) += 1;
+            }
+            let Some((&pair, &cnt)) = counts.iter().max_by_key(|(p, c)| (**c, std::cmp::Reverse(**p)))
+            else {
+                break;
+            };
+            if cnt < 2 {
+                break;
+            }
+            merges.push(pair);
+            // apply merge in-place
+            let mut out = Vec::with_capacity(seq.len());
+            let mut i = 0;
+            while i < seq.len() {
+                if i + 1 < seq.len() && (seq[i], seq[i + 1]) == pair {
+                    out.push(next_id);
+                    i += 2;
+                } else {
+                    out.push(seq[i]);
+                    i += 1;
+                }
+            }
+            seq = out;
+            next_id += 1;
+        }
+        let ranks = merges.iter().enumerate().map(|(i, p)| (*p, i)).collect();
+        Bpe { merges, ranks, vocab_size }
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut seq: Vec<i32> = text.bytes().map(|b| b as i32 + N_SPECIAL as i32).collect();
+        loop {
+            // find lowest-rank applicable merge
+            let mut best: Option<(usize, usize)> = None; // (rank, pos)
+            for i in 0..seq.len().saturating_sub(1) {
+                if let Some(&r) = self.ranks.get(&(seq[i], seq[i + 1])) {
+                    if best.map(|(br, _)| r < br).unwrap_or(true) {
+                        best = Some((r, i));
+                    }
+                }
+            }
+            let Some((rank, _)) = best else { break };
+            let pair = self.merges[rank];
+            let new_id = (N_SPECIAL + 256 + rank) as i32;
+            let mut out = Vec::with_capacity(seq.len());
+            let mut i = 0;
+            while i < seq.len() {
+                if i + 1 < seq.len() && (seq[i], seq[i + 1]) == pair {
+                    out.push(new_id);
+                    i += 2;
+                } else {
+                    out.push(seq[i]);
+                    i += 1;
+                }
+            }
+            seq = out;
+        }
+        seq
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            self.push_bytes(id, &mut bytes);
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    fn push_bytes(&self, id: i32, out: &mut Vec<u8>) {
+        if id < N_SPECIAL as i32 {
+            return; // specials decode to nothing
+        }
+        let base = N_SPECIAL as i32;
+        if id < base + 256 {
+            out.push((id - base) as u8);
+        } else {
+            let (l, r) = self.merges[(id - base - 256) as usize];
+            self.push_bytes(l, out);
+            self.push_bytes(r, out);
+        }
+    }
+
+    // -- persistence (plain text: one "left right" merge per line) --
+
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        let mut s = format!("bpe v1 vocab={}\n", self.vocab_size);
+        for (l, r) in &self.merges {
+            s.push_str(&format!("{l} {r}\n"));
+        }
+        std::fs::write(path, s)
+    }
+
+    pub fn load(path: &str) -> Result<Bpe, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        let mut lines = text.lines();
+        let header = lines.next().ok_or("empty bpe file")?;
+        let vocab_size: usize = header
+            .split("vocab=")
+            .nth(1)
+            .and_then(|v| v.trim().parse().ok())
+            .ok_or("bad bpe header")?;
+        let mut merges = Vec::new();
+        for l in lines {
+            if l.trim().is_empty() {
+                continue;
+            }
+            let mut it = l.split_whitespace();
+            let a: i32 = it.next().and_then(|x| x.parse().ok()).ok_or("bad merge line")?;
+            let b: i32 = it.next().and_then(|x| x.parse().ok()).ok_or("bad merge line")?;
+            merges.push((a, b));
+        }
+        let ranks = merges.iter().enumerate().map(|(i, p)| (*p, i)).collect();
+        Ok(Bpe { merges, ranks, vocab_size })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_level_roundtrip() {
+        let t = Bpe::byte_level();
+        let s = "hello, Laplace! σω";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn bpe_roundtrip_and_compression() {
+        let corpus = "the cat sat on the mat. the cat sat on the hat. ".repeat(50);
+        let t = Bpe::train(&corpus, N_SPECIAL + 256 + 64);
+        let enc = t.encode(&corpus);
+        assert_eq!(t.decode(&enc), corpus);
+        assert!(enc.len() < corpus.len() / 2, "BPE should compress repetitive text");
+    }
+
+    #[test]
+    fn merges_respect_vocab_bound() {
+        let corpus = "abababab abab".repeat(20);
+        let t = Bpe::train(&corpus, N_SPECIAL + 256 + 8);
+        assert!(t.merges.len() <= 8);
+        for &id in &t.encode(&corpus) {
+            assert!((id as usize) < t.vocab_size);
+        }
+    }
+
+    #[test]
+    fn save_load_identical() {
+        let corpus = "zxzxzx yzyzyz ".repeat(30);
+        let t = Bpe::train(&corpus, N_SPECIAL + 256 + 16);
+        let path = std::env::temp_dir().join("stlt_bpe_test.txt");
+        t.save(path.to_str().unwrap()).unwrap();
+        let t2 = Bpe::load(path.to_str().unwrap()).unwrap();
+        assert_eq!(t.merges, t2.merges);
+        assert_eq!(t.encode(&corpus), t2.encode(&corpus));
+    }
+
+    #[test]
+    fn specials_silent_in_decode() {
+        let t = Bpe::byte_level();
+        let mut ids = vec![BOS];
+        ids.extend(t.encode("ok"));
+        ids.push(EOS);
+        assert_eq!(t.decode(&ids), "ok");
+    }
+
+    #[test]
+    fn deterministic_training() {
+        let corpus = "deterministic deterministic determinism".repeat(10);
+        let a = Bpe::train(&corpus, N_SPECIAL + 256 + 32);
+        let b = Bpe::train(&corpus, N_SPECIAL + 256 + 32);
+        assert_eq!(a.merges, b.merges);
+    }
+}

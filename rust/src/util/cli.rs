@@ -1,0 +1,125 @@
+//! From-scratch CLI argument parser (no clap offline).
+//!
+//! Grammar: `prog <subcommand> [--key value | --key=value | --flag] [pos...]`
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (excluding program name). `flag_names` lists options
+    /// that take no value.
+    pub fn parse(argv: &[String], flag_names: &[&str]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&rest) {
+                    out.flags.push(rest.to_string());
+                } else if let Some(v) = it.peek() {
+                    if v.starts_with("--") {
+                        return Err(format!("option --{rest} expects a value"));
+                    }
+                    out.options.insert(rest.to_string(), it.next().unwrap().clone());
+                } else {
+                    return Err(format!("option --{rest} expects a value"));
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(a.clone());
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(flag_names: &[&str]) -> Result<Args, String> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv, flag_names)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: bad integer '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: bad integer '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: bad float '{v}'")),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = Args::parse(&v(&["train", "--steps", "100", "--lr=0.001"]), &[]).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 100);
+        assert_eq!(a.get_f64("lr", 0.0).unwrap(), 0.001);
+    }
+
+    #[test]
+    fn flags_and_positional() {
+        let a = Args::parse(&v(&["eval", "ckpt.bin", "--verbose"]), &["verbose"]).unwrap();
+        assert_eq!(a.positional, vec!["ckpt.bin"]);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&v(&["x", "--steps"]), &[]).is_err());
+        assert!(Args::parse(&v(&["x", "--steps", "--other", "1"]), &[]).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&v(&["run"]), &[]).unwrap();
+        assert_eq!(a.get_or("name", "d"), "d");
+        assert_eq!(a.get_usize("n", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn bad_number_reports_key() {
+        let a = Args::parse(&v(&["x", "--n", "abc"]), &[]).unwrap();
+        let e = a.get_usize("n", 0).unwrap_err();
+        assert!(e.contains("--n"));
+    }
+}

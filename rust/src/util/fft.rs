@@ -1,0 +1,175 @@
+//! From-scratch iterative radix-2 complex FFT.
+//!
+//! The paper (§3.4, abstract) advertises an "efficient FFT-based
+//! computation of the relevance matrix" in O(N S log S). This substrate
+//! provides the FFT; `exp_scaling --error`-style analyses and the
+//! substrate bench use it to cross-check the direct relevance
+//! computation against its spectral form (Parseval: the S-point
+//! spectrum of L_{n,·} preserves inner products, so
+//! R_{n,m} = Re<L_n, L_m> can equivalently be computed on FFT(L_n)).
+
+/// In-place iterative Cooley–Tukey FFT over (re, im) slices.
+/// `len` must be a power of two. `inverse` applies 1/len scaling.
+pub fn fft_inplace(re: &mut [f32], im: &mut [f32], inverse: bool) {
+    let n = re.len();
+    assert_eq!(n, im.len());
+    assert!(n.is_power_of_two(), "fft length {n} not a power of two");
+    if n <= 1 {
+        return;
+    }
+    // bit-reversal permutation
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+    }
+    let sign = if inverse { 1.0f64 } else { -1.0f64 };
+    let mut len = 2usize;
+    while len <= n {
+        let ang = sign * 2.0 * std::f64::consts::PI / len as f64;
+        let (wr, wi) = (ang.cos(), ang.sin());
+        let mut i = 0;
+        while i < n {
+            let (mut cr, mut ci) = (1.0f64, 0.0f64);
+            for k in 0..len / 2 {
+                let (ar, ai) = (re[i + k] as f64, im[i + k] as f64);
+                let (br, bi) = (re[i + k + len / 2] as f64, im[i + k + len / 2] as f64);
+                let (tr, ti) = (br * cr - bi * ci, br * ci + bi * cr);
+                re[i + k] = (ar + tr) as f32;
+                im[i + k] = (ai + ti) as f32;
+                re[i + k + len / 2] = (ar - tr) as f32;
+                im[i + k + len / 2] = (ai - ti) as f32;
+                let ncr = cr * wr - ci * wi;
+                ci = cr * wi + ci * wr;
+                cr = ncr;
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+    if inverse {
+        let inv = 1.0 / n as f32;
+        for x in re.iter_mut() {
+            *x *= inv;
+        }
+        for x in im.iter_mut() {
+            *x *= inv;
+        }
+    }
+}
+
+/// Forward FFT of a complex vector, padding to the next power of two.
+pub fn fft(re: &[f32], im: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    let n = re.len().next_power_of_two();
+    let mut r = re.to_vec();
+    let mut i = im.to_vec();
+    r.resize(n, 0.0);
+    i.resize(n, 0.0);
+    fft_inplace(&mut r, &mut i, false);
+    (r, i)
+}
+
+/// Relevance between two node vectors computed directly:
+/// Re<a, b> = sum_k (a_re b_re + a_im b_im).
+pub fn relevance_direct(a_re: &[f32], a_im: &[f32], b_re: &[f32], b_im: &[f32]) -> f32 {
+    a_re.iter()
+        .zip(b_re)
+        .map(|(x, y)| x * y)
+        .chain(a_im.iter().zip(b_im).map(|(x, y)| x * y))
+        .sum()
+}
+
+/// Relevance via the S-point spectra (§3.4): Parseval gives
+/// Re<a, b> = Re<FFT(a), FFT(b)> / S_fft.
+pub fn relevance_spectral(a_re: &[f32], a_im: &[f32], b_re: &[f32], b_im: &[f32]) -> f32 {
+    let (ar, ai) = fft(a_re, a_im);
+    let (br, bi) = fft(b_re, b_im);
+    let n = ar.len() as f32;
+    relevance_direct(&ar, &ai, &br, &bi) / n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fft_of_impulse_is_flat() {
+        let mut re = vec![0.0f32; 8];
+        let mut im = vec![0.0f32; 8];
+        re[0] = 1.0;
+        fft_inplace(&mut re, &mut im, false);
+        for k in 0..8 {
+            assert!((re[k] - 1.0).abs() < 1e-5 && im[k].abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn fft_roundtrip() {
+        let mut rng = Rng::new(3);
+        let re0: Vec<f32> = (0..64).map(|_| rng.f32() - 0.5).collect();
+        let im0: Vec<f32> = (0..64).map(|_| rng.f32() - 0.5).collect();
+        let mut re = re0.clone();
+        let mut im = im0.clone();
+        fft_inplace(&mut re, &mut im, false);
+        fft_inplace(&mut re, &mut im, true);
+        for k in 0..64 {
+            assert!((re[k] - re0[k]).abs() < 1e-4);
+            assert!((im[k] - im0[k]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn fft_matches_dft_definition() {
+        let mut rng = Rng::new(7);
+        let re0: Vec<f32> = (0..16).map(|_| rng.f32() - 0.5).collect();
+        let im0: Vec<f32> = (0..16).map(|_| rng.f32() - 0.5).collect();
+        let (fr, fi) = fft(&re0, &im0);
+        for k in 0..16 {
+            let (mut sr, mut si) = (0.0f64, 0.0f64);
+            for t in 0..16 {
+                let ang = -2.0 * std::f64::consts::PI * (k * t) as f64 / 16.0;
+                let (c, s) = (ang.cos(), ang.sin());
+                sr += re0[t] as f64 * c - im0[t] as f64 * s;
+                si += re0[t] as f64 * s + im0[t] as f64 * c;
+            }
+            assert!((fr[k] as f64 - sr).abs() < 1e-3, "k={k}");
+            assert!((fi[k] as f64 - si).abs() < 1e-3, "k={k}");
+        }
+    }
+
+    #[test]
+    fn parseval_relevance_equivalence() {
+        // the §3.4 claim: relevance can be computed in the spectral domain
+        let mut rng = Rng::new(11);
+        for _ in 0..20 {
+            let s = 32;
+            let a_re: Vec<f32> = (0..s).map(|_| rng.f32() - 0.5).collect();
+            let a_im: Vec<f32> = (0..s).map(|_| rng.f32() - 0.5).collect();
+            let b_re: Vec<f32> = (0..s).map(|_| rng.f32() - 0.5).collect();
+            let b_im: Vec<f32> = (0..s).map(|_| rng.f32() - 0.5).collect();
+            let direct = relevance_direct(&a_re, &a_im, &b_re, &b_im);
+            let spectral = relevance_spectral(&a_re, &a_im, &b_re, &b_im);
+            assert!(
+                (direct - spectral).abs() < 1e-3 * (1.0 + direct.abs()),
+                "{direct} vs {spectral}"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn non_power_of_two_panics() {
+        let mut re = vec![0.0f32; 12];
+        let mut im = vec![0.0f32; 12];
+        fft_inplace(&mut re, &mut im, false);
+    }
+}

@@ -1,0 +1,106 @@
+//! Tiny leveled logger (no `log`/`env_logger` wiring needed): timestamps
+//! relative to process start, level filter via STLT_LOG env (error..trace).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+static LEVEL: AtomicU8 = AtomicU8::new(2); // info
+static INIT: std::sync::Once = std::sync::Once::new();
+static mut START: Option<Instant> = None;
+
+#[derive(Clone, Copy, PartialEq, PartialOrd)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+pub fn init() {
+    INIT.call_once(|| {
+        unsafe { START = Some(Instant::now()) };
+        if let Ok(v) = std::env::var("STLT_LOG") {
+            let l = match v.to_lowercase().as_str() {
+                "error" => 0,
+                "warn" => 1,
+                "info" => 2,
+                "debug" => 3,
+                "trace" => 4,
+                _ => 2,
+            };
+            LEVEL.store(l, Ordering::Relaxed);
+        }
+    });
+}
+
+pub fn set_level(l: Level) {
+    init();
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(l: Level) -> bool {
+    init();
+    (l as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn elapsed_s() -> f64 {
+    init();
+    unsafe { START.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0) }
+}
+
+pub fn log(l: Level, tag: &str, msg: &str) {
+    if enabled(l) {
+        let name = match l {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{:9.3}s {} {}] {}", elapsed_s(), name, tag, msg);
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($tag:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Info, $tag, &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warnlog {
+    ($tag:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Warn, $tag, &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debuglog {
+    ($tag:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Debug, $tag, &format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_filtering() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+    }
+
+    #[test]
+    fn elapsed_monotonic() {
+        let a = elapsed_s();
+        let b = elapsed_s();
+        assert!(b >= a);
+    }
+}

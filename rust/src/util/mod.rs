@@ -1,0 +1,11 @@
+//! From-scratch substrate utilities (the offline vendor set has no
+//! clap/serde/rand/proptest — DESIGN.md §4 lists these as deliberate
+//! substrate builds).
+
+pub mod cli;
+pub mod fft;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod threadpool;

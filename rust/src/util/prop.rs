@@ -1,0 +1,112 @@
+//! Mini property-testing framework (no proptest offline).
+//!
+//! `check(name, cases, |g| { ... })` runs the closure `cases` times with
+//! a fresh `Gen` per case; on failure it reports the case seed so the
+//! exact input is reproducible with `replay(seed, ...)`.
+
+use super::rng::Rng;
+
+pub struct Gen {
+    pub rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        self.rng.range(lo, hi + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool(0.5)
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| lo + self.rng.f32() * (hi - lo)).collect()
+    }
+
+    pub fn vec_i32(&mut self, len: usize, lo: i32, hi: i32) -> Vec<i32> {
+        (0..len).map(|_| self.rng.range(lo as i64, hi as i64) as i32).collect()
+    }
+
+    pub fn tokens(&mut self, len: usize, vocab: i32) -> Vec<i32> {
+        self.vec_i32(len, 0, vocab)
+    }
+}
+
+/// Run `f` for `cases` random cases. Panics with the failing seed on error.
+pub fn check<F: FnMut(&mut Gen) -> Result<(), String>>(name: &str, cases: u64, mut f: F) {
+    let base = 0xC0FFEE ^ name.bytes().fold(0u64, |a, b| a.wrapping_mul(31).wrapping_add(b as u64));
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut g = Gen { rng: Rng::new(seed), seed };
+        if let Err(msg) = f(&mut g) {
+            panic!("property '{name}' failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn replay<F: FnMut(&mut Gen) -> Result<(), String>>(seed: u64, mut f: F) {
+    let mut g = Gen { rng: Rng::new(seed), seed };
+    if let Err(msg) = f(&mut g) {
+        panic!("replay(seed {seed:#x}) failed: {msg}");
+    }
+}
+
+/// Assert helper for properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err(format!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("add-commutes", 50, |g| {
+            let a = g.i64_in(-1000, 1000);
+            let b = g.i64_in(-1000, 1000);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "failed on case")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 3, |_g| Err("nope".into()));
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        let mut seen = Vec::new();
+        check("collect", 5, |g| {
+            seen.push(g.usize_in(0, 1_000_000));
+            Ok(())
+        });
+        let mut seen2 = Vec::new();
+        check("collect", 5, |g| {
+            seen2.push(g.usize_in(0, 1_000_000));
+            Ok(())
+        });
+        assert_eq!(seen, seen2);
+    }
+}

@@ -1,0 +1,141 @@
+//! Minimal fixed-size thread pool (no tokio/rayon offline).
+//!
+//! Jobs are `FnOnce + Send` closures; `join()` blocks until the queue is
+//! drained. The coordinator's server uses this for its worker threads;
+//! note the PJRT executor itself is driven from a single model thread
+//! (the CPU client is not profitably shared across threads on 1 core).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    pending: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl ThreadPool {
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let mut workers = Vec::with_capacity(n);
+        for i in 0..n {
+            let rx = Arc::clone(&rx);
+            let pending = Arc::clone(&pending);
+            workers.push(
+                thread::Builder::new()
+                    .name(format!("stlt-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                let (lock, cv) = &*pending;
+                                let mut p = lock.lock().unwrap();
+                                *p -= 1;
+                                cv.notify_all();
+                            }
+                            Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool { tx: Some(tx), workers, pending }
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        {
+            let (lock, _) = &*self.pending;
+            *lock.lock().unwrap() += 1;
+        }
+        self.tx.as_ref().unwrap().send(Box::new(f)).expect("pool closed");
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn join(&self) {
+        let (lock, cv) = &*self.pending;
+        let mut p = lock.lock().unwrap();
+        while *p > 0 {
+            p = cv.wait(p).unwrap();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.tx.take(); // close channel; workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Run `f(i)` for i in 0..n across the pool, collecting results in order.
+pub fn parallel_map<T: Send + 'static, F>(pool: &ThreadPool, n: usize, f: F) -> Vec<T>
+where
+    F: Fn(usize) -> T + Send + Sync + 'static,
+{
+    let f = Arc::new(f);
+    let results: Arc<Mutex<Vec<Option<T>>>> =
+        Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+    let done = Arc::new(AtomicUsize::new(0));
+    for i in 0..n {
+        let f = Arc::clone(&f);
+        let results = Arc::clone(&results);
+        let done = Arc::clone(&done);
+        pool.execute(move || {
+            let r = f(i);
+            results.lock().unwrap()[i] = Some(r);
+            done.fetch_add(1, Ordering::SeqCst);
+        });
+    }
+    pool.join();
+    Arc::try_unwrap(results)
+        .unwrap_or_else(|_| panic!("pool leak"))
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|o| o.expect("job missing"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn parallel_map_order() {
+        let pool = ThreadPool::new(3);
+        let out = parallel_map(&pool, 20, |i| i * i);
+        assert_eq!(out, (0..20).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn join_idempotent() {
+        let pool = ThreadPool::new(2);
+        pool.join();
+        pool.execute(|| {});
+        pool.join();
+        pool.join();
+    }
+}

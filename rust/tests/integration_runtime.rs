@@ -1,0 +1,182 @@
+//! Integration: manifest -> PJRT compile -> execute, and the Rust-side
+//! parameter-layout mirror against python's packing.
+//!
+//! Requires `make artifacts`. Heavy sub-checks run sequentially inside
+//! one #[test] each (the PJRT handles are !Send, and the box has 1 core).
+
+use stlt::interpret;
+use stlt::runtime::{
+    default_artifacts_dir, exec::load_init_vec, EvalStep, Forward, Manifest, Runtime,
+    StreamStep, TrainState, TrainStep,
+};
+
+fn manifest() -> Manifest {
+    Manifest::load(default_artifacts_dir()).expect("run `make artifacts` first")
+}
+
+#[test]
+fn layout_mirror_matches_python_param_count() {
+    let m = manifest();
+    // Every lm_* train entry: rust-computed layout total == python param_count
+    for e in m.by_kind("train_step") {
+        if !e.name.starts_with("lm_") {
+            continue;
+        }
+        let layout = interpret::trunk_layout(&e.config);
+        let total = interpret::total_params(&layout);
+        assert_eq!(
+            total, e.param_count,
+            "layout mismatch for {} (arch {})",
+            e.name, e.config.arch
+        );
+    }
+}
+
+#[test]
+fn init_vector_is_python_exact_for_stlt() {
+    let m = manifest();
+    let e = m.get("lm_stlt_tiny.train").unwrap();
+    let init = load_init_vec(e.init_file.as_ref().unwrap(), e.param_count).unwrap();
+    // LN gains are exactly 1.0 at the offsets the rust layout predicts
+    let layout = interpret::trunk_layout(&e.config);
+    let ln = layout.iter().find(|l| l.path == "/layers/000/ln1_g").unwrap();
+    for i in 0..ln.numel() {
+        assert_eq!(init[ln.offset + i], 1.0, "ln1_g[{i}] not 1.0 — packing drifted");
+    }
+    // sigma_raw is log-spaced increasing
+    let sr = layout.iter().find(|l| l.path == "/layers/000/mixer/sigma_raw").unwrap();
+    let sig: Vec<f32> = init[sr.offset..sr.offset + sr.numel()].to_vec();
+    for w in sig.windows(2) {
+        assert!(w[1] > w[0], "sigma_raw not increasing: {w:?}");
+    }
+}
+
+#[test]
+fn eval_untrained_model_is_near_uniform() {
+    let m = manifest();
+    let rt = Runtime::cpu().unwrap();
+    let e = m.get("lm_stlt_tiny.eval").unwrap();
+    let eval = EvalStep::new(&rt, &m, "lm_stlt_tiny.eval").unwrap();
+    let init = load_init_vec(
+        m.get("lm_stlt_tiny.train").unwrap().init_file.as_ref().unwrap(),
+        e.param_count,
+    )
+    .unwrap();
+    let mut gen = stlt::data::batch::LmBatcher::new(
+        stlt::data::corpus::CorpusConfig::default_for_vocab(e.config.vocab),
+        5,
+        eval.batch,
+        eval.n_plus_1,
+    );
+    let toks = gen.next_batch();
+    let (nll, count, _seff) = eval.run(&init, &toks, 0.0, 0).unwrap();
+    let ppl = stlt::metrics::perplexity(nll, count);
+    let v = e.config.vocab as f64;
+    assert!(
+        ppl > v * 0.5 && ppl < v * 2.0,
+        "untrained ppl {ppl} should be near vocab {v}"
+    );
+}
+
+#[test]
+fn forward_is_deterministic_and_shaped() {
+    let m = manifest();
+    let rt = Runtime::cpu().unwrap();
+    let fwd = Forward::new(&rt, &m, "lm_stlt_tiny.fwd").unwrap();
+    let e = m.get("lm_stlt_tiny.fwd").unwrap();
+    let flat = stlt::runtime::exec::init_vec_host(e.param_count, 3);
+    let tokens: Vec<i32> = (0..fwd.n as i32).map(|i| 4 + (i * 7) % 200).collect();
+    let a = fwd.run(&flat, &tokens).unwrap();
+    let b = fwd.run(&flat, &tokens).unwrap();
+    assert_eq!(a.shape(), &[1, fwd.n, e.config.vocab]);
+    assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap());
+}
+
+#[test]
+fn stream_chunks_match_whole_document_nll() {
+    // streaming invariance at the artifact level: two different chunkings
+    // of the same document give the same total NLL
+    let m = manifest();
+    let rt = Runtime::cpu().unwrap();
+    let stream = StreamStep::new(&rt, &m, "lm_stlt_tiny.stream").unwrap();
+    let e = m.get("lm_stlt_tiny.stream").unwrap();
+    let flat = load_init_vec(
+        m.get("lm_stlt_tiny.train").unwrap().init_file.as_ref().unwrap(),
+        e.param_count,
+    )
+    .unwrap();
+    let mut corpus = stlt::data::corpus::Corpus::new(
+        stlt::data::corpus::CorpusConfig::default_for_vocab(e.config.vocab),
+        17,
+    );
+    let doc = corpus.take(257);
+    let run = |piece_lens: &[usize]| -> (f64, f64) {
+        let mut carry = stream.zero_carry();
+        let c = stream.chunk;
+        let (mut nll, mut cnt) = (0.0, 0.0);
+        let mut off = 0usize;
+        for &len in piece_lens {
+            let take = len.min(doc.len() - 1 - off);
+            let mut toks = vec![0i32; c];
+            let mut tgts = vec![0i32; c];
+            let mut mask = vec![0f32; c];
+            for j in 0..take {
+                toks[j] = doc[off + j];
+                tgts[j] = doc[off + j + 1];
+                mask[j] = 1.0;
+            }
+            let (n, ct) = stream.run(&flat, &mut carry, &toks, &tgts, &mask).unwrap();
+            nll += n;
+            cnt += ct;
+            off += take;
+        }
+        (nll, cnt)
+    };
+    let (nll_a, cnt_a) = run(&[64, 64, 64, 64]);
+    let (nll_b, cnt_b) = run(&[64, 32, 64, 64, 32]);
+    assert_eq!(cnt_a, cnt_b);
+    assert!(
+        (nll_a - nll_b).abs() < 0.25 + 1e-3 * nll_a.abs(),
+        "chunking changed NLL: {nll_a} vs {nll_b}"
+    );
+}
+
+#[test]
+fn train_step_descends_and_is_deterministic() {
+    let m = manifest();
+    let rt = Runtime::cpu().unwrap();
+    let ts = TrainStep::new(&rt, &m, "lm_stlt_tiny.train").unwrap();
+    let entry = ts.entry().clone();
+    let mut gen = stlt::data::batch::LmBatcher::new(
+        stlt::data::corpus::CorpusConfig::default_for_vocab(entry.config.vocab),
+        9,
+        ts.batch,
+        ts.n_plus_1,
+    );
+    let batch = gen.next_batch();
+    let run = || {
+        let mut st = TrainState::from_entry(&entry).unwrap();
+        let mut losses = Vec::new();
+        for i in 0..6 {
+            let m_ = ts.run(&mut st, &batch, 42 + i).unwrap();
+            losses.push(m_.loss);
+        }
+        losses
+    };
+    let l1 = run();
+    let l2 = run();
+    assert_eq!(l1, l2, "train_step must be bit-deterministic");
+    assert!(
+        l1.last().unwrap() < l1.first().unwrap(),
+        "overfit on one batch must reduce loss: {l1:?}"
+    );
+}
+
+#[test]
+fn missing_artifact_errors_cleanly() {
+    let m = manifest();
+    let rt = Runtime::cpu().unwrap();
+    assert!(TrainStep::new(&rt, &m, "no_such_model.train").is_err());
+    // wrong kind
+    assert!(TrainStep::new(&rt, &m, "lm_stlt_tiny.eval").is_err());
+}

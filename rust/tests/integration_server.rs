@@ -1,0 +1,217 @@
+//! Integration: the streaming server end-to-end — concurrent sessions,
+//! batched execution correctness vs the single-session path, eviction,
+//! and generation determinism.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use stlt::coordinator::{BatchPolicy, Server, ServerOpts};
+use stlt::data::corpus::{Corpus, CorpusConfig};
+use stlt::runtime::{default_artifacts_dir, exec::load_init_vec, Manifest, Runtime, StreamStep};
+
+fn manifest() -> Manifest {
+    Manifest::load(default_artifacts_dir()).expect("run `make artifacts` first")
+}
+
+fn init_flat(m: &Manifest) -> Vec<f32> {
+    let e = m.get("lm_stlt_tiny.train").unwrap();
+    load_init_vec(e.init_file.as_ref().unwrap(), e.param_count).unwrap()
+}
+
+fn doc(vocab: usize, seed: u64, len: usize) -> Vec<i32> {
+    Corpus::new(CorpusConfig::default_for_vocab(vocab), seed).take(len)
+}
+
+#[test]
+fn concurrent_sessions_match_single_session_reference() {
+    let m = manifest();
+    let flat = init_flat(&m);
+    let vocab = m.get("lm_stlt_tiny.eval").unwrap().config.vocab;
+
+    // reference NLLs via the single-sequence stream artifact
+    let rt = Runtime::cpu().unwrap();
+    let stream = StreamStep::new(&rt, &m, "lm_stlt_tiny.stream").unwrap();
+    let mut refs = Vec::new();
+    for s in 0..3u64 {
+        let d = doc(vocab, 100 + s, 300);
+        let mut carry = stream.zero_carry();
+        let c = stream.chunk;
+        let (mut nll, mut cnt) = (0.0, 0.0);
+        let mut off = 0;
+        while off + 1 < d.len() {
+            let take = c.min(d.len() - 1 - off);
+            let mut toks = vec![0i32; c];
+            let mut tgts = vec![0i32; c];
+            let mut mask = vec![0f32; c];
+            for j in 0..take {
+                toks[j] = d[off + j];
+                tgts[j] = d[off + j + 1];
+                mask[j] = 1.0;
+            }
+            let (n, ct) = stream.run(&flat, &mut carry, &toks, &tgts, &mask).unwrap();
+            nll += n;
+            cnt += ct;
+            off += take;
+        }
+        refs.push((nll, cnt));
+    }
+
+    // the same three documents through the batched server, concurrently
+    let server = Arc::new(
+        Server::start(&m, "lm_stlt_tiny", flat.clone(), ServerOpts::default()).unwrap(),
+    );
+    let mut handles = Vec::new();
+    for s in 0..3u64 {
+        let server = Arc::clone(&server);
+        let d = doc(vocab, 100 + s, 300);
+        handles.push(std::thread::spawn(move || server.feed(s + 1, d, true).unwrap()));
+    }
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for (s, r) in results.iter().enumerate() {
+        let (rn, rc) = refs[s];
+        assert_eq!(r.count, rc, "session {s} token count");
+        assert!(
+            (r.nll_sum - rn).abs() < 0.25 + 1e-3 * rn.abs(),
+            "session {s}: batched nll {} vs reference {}",
+            r.nll_sum,
+            rn
+        );
+    }
+    // batching actually happened (batch_fill recorded >1 at least once,
+    // or at minimum all feeds completed)
+    assert_eq!(server.stats.feeds.load(Ordering::Relaxed), 3);
+    assert!(server.stats.tokens_streamed.load(Ordering::Relaxed) >= 3 * 299);
+}
+
+#[test]
+fn eviction_under_session_pressure() {
+    let m = manifest();
+    let flat = init_flat(&m);
+    let vocab = m.get("lm_stlt_tiny.eval").unwrap().config.vocab;
+    let opts = ServerOpts {
+        queue_cap: 32,
+        max_sessions: 2,
+        policy: BatchPolicy::default(),
+    };
+    let server = Server::start(&m, "lm_stlt_tiny", flat, opts).unwrap();
+    for s in 0..5u64 {
+        server.feed(s, doc(vocab, s, 150), false).unwrap();
+    }
+    assert!(
+        server.stats.evictions.load(Ordering::Relaxed) >= 3,
+        "expected LRU evictions with max_sessions=2"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn generation_is_deterministic_and_session_scoped() {
+    let m = manifest();
+    let flat = init_flat(&m);
+    let vocab = m.get("lm_stlt_tiny.eval").unwrap().config.vocab;
+    let server = Server::start(&m, "lm_stlt_tiny", flat, ServerOpts::default()).unwrap();
+    let prompt = doc(vocab, 7, 100);
+    let seed_tok = *prompt.last().unwrap();
+
+    server.feed(1, prompt.clone(), false).unwrap();
+    let g1 = server.generate(1, seed_tok, 16, None).unwrap();
+    server.release(1).unwrap();
+
+    server.feed(2, prompt.clone(), false).unwrap();
+    let g2 = server.generate(2, seed_tok, 16, None).unwrap();
+    server.release(2).unwrap();
+
+    assert_eq!(g1.tokens, g2.tokens, "same prompt+params must generate identically");
+    assert_eq!(g1.tokens.len(), 16);
+    assert!(g1.tokens.iter().all(|&t| (0..vocab as i32).contains(&t)));
+
+    // a session with a different prompt generates differently (untrained
+    // models are near-uniform, so allow equality only if both short)
+    server.feed(3, doc(vocab, 99, 100), false).unwrap();
+    let g3 = server.generate(3, seed_tok, 16, None).unwrap();
+    // not asserting inequality strictly (could coincide), but lengths hold
+    assert_eq!(g3.tokens.len(), 16);
+    server.shutdown();
+}
+
+#[test]
+fn stop_token_halts_generation() {
+    let m = manifest();
+    let flat = init_flat(&m);
+    let vocab = m.get("lm_stlt_tiny.eval").unwrap().config.vocab;
+    let server = Server::start(&m, "lm_stlt_tiny", flat, ServerOpts::default()).unwrap();
+    server.feed(1, doc(vocab, 3, 80), false).unwrap();
+    let free = server.generate(1, 5, 24, None).unwrap();
+    server.release(1).unwrap();
+    // pick the first emitted token as the stop token; a fresh identical
+    // session must then stop at length 1
+    let stop = free.tokens[0];
+    server.feed(2, doc(vocab, 3, 80), false).unwrap();
+    let stopped = server.generate(2, 5, 24, Some(stop)).unwrap();
+    assert_eq!(stopped.tokens.len(), 1);
+    assert_eq!(stopped.tokens[0], stop);
+    server.shutdown();
+}
+
+#[test]
+fn backpressure_sheds_load_not_correctness() {
+    let m = manifest();
+    let flat = init_flat(&m);
+    let vocab = m.get("lm_stlt_tiny.eval").unwrap().config.vocab;
+    let opts = ServerOpts {
+        queue_cap: 2, // tiny queue to force backpressure
+        max_sessions: 8,
+        policy: BatchPolicy { max_batch: 4, max_wait: std::time::Duration::from_millis(1) },
+    };
+    let server = Arc::new(Server::start(&m, "lm_stlt_tiny", flat, opts).unwrap());
+    let mut handles = Vec::new();
+    for s in 0..6u64 {
+        let server = Arc::clone(&server);
+        let d = doc(vocab, s, 120);
+        handles.push(std::thread::spawn(move || server.feed(s, d, true)));
+    }
+    let mut ok = 0;
+    for h in handles {
+        if h.join().unwrap().is_ok() {
+            ok += 1;
+        }
+    }
+    // with a 30s push timeout everything should eventually get through
+    assert_eq!(ok, 6, "all feeds should complete under backpressure");
+}
+
+#[test]
+fn sampling_policies_through_server() {
+    let m = manifest();
+    let flat = init_flat(&m);
+    let vocab = m.get("lm_stlt_tiny.eval").unwrap().config.vocab;
+    let server = Server::start(&m, "lm_stlt_tiny", flat, ServerOpts::default()).unwrap();
+    let prompt = doc(vocab, 21, 80);
+    let seed_tok = *prompt.last().unwrap();
+    use stlt::coordinator::Sampling;
+    // greedy twice: identical
+    server.feed(1, prompt.clone(), false).unwrap();
+    let a = server
+        .generate_with(1, seed_tok, 12, None, Sampling::Greedy, 7)
+        .unwrap();
+    server.release(1).unwrap();
+    server.feed(2, prompt.clone(), false).unwrap();
+    let b = server
+        .generate_with(2, seed_tok, 12, None, Sampling::Greedy, 8)
+        .unwrap();
+    server.release(2).unwrap();
+    assert_eq!(a.tokens, b.tokens);
+    // same temperature + same seed: reproducible; tokens stay in vocab
+    server.feed(3, prompt.clone(), false).unwrap();
+    let c = server
+        .generate_with(3, seed_tok, 12, None, Sampling::Temperature(1.5), 7)
+        .unwrap();
+    server.release(3).unwrap();
+    server.feed(3, prompt.clone(), false).unwrap();
+    let d = server
+        .generate_with(3, seed_tok, 12, None, Sampling::Temperature(1.5), 7)
+        .unwrap();
+    assert_eq!(c.tokens, d.tokens, "same (policy, seed, session) must reproduce");
+    assert!(c.tokens.iter().all(|&t| (0..vocab as i32).contains(&t)));
+    server.shutdown();
+}

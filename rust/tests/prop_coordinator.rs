@@ -1,0 +1,202 @@
+//! Property-based tests (util::prop, from-scratch proptest substitute)
+//! on the coordinator's invariants: queue conservation, batcher
+//! no-loss/no-dup, state-pool accounting, checkpoint roundtrips,
+//! tokenizer roundtrips, metric bounds.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+use std::time::Duration;
+
+use stlt::coordinator::{BatchPolicy, Batcher, BoundedQueue, StatePool};
+use stlt::coordinator::{load_checkpoint, save_checkpoint};
+use stlt::metrics::{bleu4, token_f1};
+use stlt::prop_assert;
+use stlt::runtime::{StreamCarry, TrainState};
+use stlt::tokenizer::Bpe;
+use stlt::util::prop::{check, Gen};
+
+fn carry(g: &mut Gen) -> StreamCarry {
+    let s = g.usize_in(1, 4);
+    let d = g.usize_in(1, 6);
+    StreamCarry {
+        l: g.vec_f32(s * 2, -1.0, 1.0),
+        u: g.vec_f32(s * d * 2, -1.0, 1.0),
+        l_shape: vec![s, 2],
+        u_shape: vec![s, d, 2],
+    }
+}
+
+#[test]
+fn prop_queue_conserves_items() {
+    check("queue-conservation", 30, |g| {
+        let cap = g.usize_in(1, 16);
+        let n = g.usize_in(0, 64);
+        let q = Arc::new(BoundedQueue::new(cap));
+        let items: Vec<u64> = (0..n as u64).collect();
+        let qp = Arc::clone(&q);
+        let send = items.clone();
+        let producer = std::thread::spawn(move || {
+            for i in send {
+                qp.push(i, Duration::from_secs(5)).unwrap();
+            }
+            qp.close();
+        });
+        let mut got = Vec::new();
+        while let Some(x) = q.pop() {
+            got.push(x);
+        }
+        producer.join().unwrap();
+        prop_assert!(got == items, "items lost or reordered: {} vs {}", got.len(), n);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batcher_no_loss_no_dup() {
+    check("batcher-no-loss", 25, |g| {
+        let n = g.usize_in(1, 80);
+        let max_batch = g.usize_in(1, 8);
+        let q = Arc::new(BoundedQueue::new(128));
+        for i in 0..n as u64 {
+            q.try_push(i).unwrap();
+        }
+        q.close();
+        let b = Batcher::new(
+            Arc::clone(&q),
+            BatchPolicy { max_batch, max_wait: Duration::from_millis(1) },
+        );
+        let mut seen = Vec::new();
+        while let Some(batch) = b.next_batch() {
+            prop_assert!(batch.len() <= max_batch, "batch exceeded max: {}", batch.len());
+            seen.extend(batch);
+        }
+        let set: HashSet<_> = seen.iter().collect();
+        prop_assert!(seen.len() == n, "lost items: {} of {}", seen.len(), n);
+        prop_assert!(set.len() == n, "duplicated items");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_state_pool_accounting() {
+    check("state-pool", 40, |g| {
+        let cap = g.usize_in(1, 6);
+        let mut pool = StatePool::new(cap);
+        let mut live: HashSet<u64> = HashSet::new();
+        let mut checked_out: HashSet<u64> = HashSet::new();
+        for _ in 0..60 {
+            let id = g.i64_in(0, 9) as u64;
+            match g.usize_in(0, 3) {
+                0 => {
+                    let admit = pool.admit(id, carry(g));
+                    match admit {
+                        stlt::coordinator::Admit::Evicted(v) => {
+                            prop_assert!(live.remove(&v), "evicted unknown session {v}");
+                            prop_assert!(!checked_out.contains(&v), "evicted pinned {v}");
+                            live.insert(id);
+                        }
+                        stlt::coordinator::Admit::Ok => {
+                            live.insert(id);
+                        }
+                        stlt::coordinator::Admit::Rejected => {
+                            prop_assert!(
+                                checked_out.len() >= cap,
+                                "rejected but unpinned capacity remains"
+                            );
+                        }
+                    }
+                }
+                1 => {
+                    if live.contains(&id) && !checked_out.contains(&id) {
+                        prop_assert!(pool.checkout(id).is_some(), "checkout of live {id} failed");
+                        checked_out.insert(id);
+                    } else if !live.contains(&id) {
+                        prop_assert!(pool.checkout(id).is_none(), "checkout of dead {id} worked");
+                    }
+                }
+                2 => {
+                    if checked_out.remove(&id) {
+                        pool.checkin(id, carry(g), 1);
+                    }
+                }
+                _ => {
+                    if g.bool() {
+                        let was = pool.release(id);
+                        prop_assert!(was == live.remove(&id), "release mismatch for {id}");
+                        checked_out.remove(&id);
+                    }
+                }
+            }
+            prop_assert!(pool.len() == live.len(), "pool len {} != model {}", pool.len(), live.len());
+            prop_assert!(pool.len() <= cap, "pool over capacity");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_checkpoint_roundtrip() {
+    check("ckpt-roundtrip", 15, |g| {
+        let n = g.usize_in(0, 2000);
+        let st = TrainState {
+            flat: g.vec_f32(n, -10.0, 10.0),
+            m: g.vec_f32(n, -1.0, 1.0),
+            v: g.vec_f32(n, 0.0, 1.0),
+            step: g.i64_in(0, 1_000_000) as i32,
+        };
+        let path = std::env::temp_dir().join(format!("stlt_prop_ckpt_{:x}.bin", g.seed));
+        save_checkpoint(&path, &st).map_err(|e| e.to_string())?;
+        let ld = load_checkpoint(&path).map_err(|e| e.to_string())?;
+        let _ = std::fs::remove_file(&path);
+        prop_assert!(ld.step == st.step, "step");
+        prop_assert!(ld.flat == st.flat && ld.m == st.m && ld.v == st.v, "vectors differ");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bpe_roundtrip_arbitrary_bytes() {
+    check("bpe-roundtrip", 15, |g| {
+        let len = g.usize_in(0, 400);
+        let bytes: Vec<u8> = (0..len).map(|_| g.i64_in(32, 126) as u8).collect();
+        let text = String::from_utf8(bytes).unwrap();
+        let vocab = 260 + g.usize_in(0, 40);
+        let bpe = Bpe::train(&text, vocab);
+        prop_assert!(bpe.decode(&bpe.encode(&text)) == text, "roundtrip failed");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_metric_bounds() {
+    check("metric-bounds", 40, |g| {
+        let hl = g.usize_in(0, 20);
+        let rl = g.usize_in(0, 20);
+        let h = g.vec_i32(hl, 0, 50);
+        let r = g.vec_i32(rl, 0, 50);
+        let f1 = token_f1(&h, &r);
+        prop_assert!((0.0..=1.0).contains(&f1), "f1 out of range: {f1}");
+        let b = bleu4(&[(h.clone(), r.clone())]);
+        prop_assert!((0.0..=100.0 + 1e-9).contains(&b), "bleu out of range: {b}");
+        // identity gives max
+        if !h.is_empty() {
+            prop_assert!((token_f1(&h, &h) - 1.0).abs() < 1e-12, "self f1 != 1");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_histogram_quantiles_monotone() {
+    check("hist-monotone", 20, |g| {
+        let mut hist = stlt::metrics::Histogram::new();
+        for _ in 0..g.usize_in(1, 500) {
+            hist.record(g.f64_in(1e-7, 50.0));
+        }
+        let qs: Vec<f64> = [0.1, 0.5, 0.9, 0.99].iter().map(|&q| hist.quantile(q)).collect();
+        for w in qs.windows(2) {
+            prop_assert!(w[1] >= w[0], "quantiles not monotone: {qs:?}");
+        }
+        Ok(())
+    });
+}
