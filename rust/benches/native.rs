@@ -1,0 +1,44 @@
+//! Native-backend engine bench: tokens/s of the pure-Rust STLT forward,
+//! streaming and decode paths at the "tiny" scale (runs with default
+//! features — no artifacts, no XLA).
+
+use std::sync::Arc;
+
+use stlt::bench::bench_for;
+use stlt::runtime::artifact::ModelConfig;
+use stlt::runtime::native_stlt::{host_init, StltModel};
+
+fn main() {
+    println!("== native engine bench (no artifacts needed) ==");
+    let cfg = ModelConfig {
+        arch: "stlt".into(),
+        vocab: 256,
+        d_model: 64,
+        n_layers: 2,
+        n_ctx: 128,
+        s_max: 32,
+        batch: 8,
+        mode: "linear".into(),
+        ..ModelConfig::default()
+    };
+    let model = StltModel::new(&cfg, Arc::new(host_init(&cfg, 1))).unwrap();
+    let tokens: Vec<i32> = (0..128).map(|i| 4 + (i * 7) % 200).collect();
+
+    let r = bench_for("native/forward 128 tok (d=64 S=32 L=2)", 3.0, || {
+        std::hint::black_box(model.forward_logits(&tokens).unwrap());
+    });
+    println!("{}   ({:.0} tok/s)", r.row(), 128.0 / r.p50_s);
+
+    let chunk: Vec<i32> = tokens[..64].to_vec();
+    let (mut l, mut u) = model.zero_carry();
+    let r = bench_for("native/stream chunk 64 tok", 3.0, || {
+        std::hint::black_box(model.trunk_chunk(&mut l, &mut u, &chunk, 0.0, None).unwrap());
+    });
+    println!("{}   ({:.0} tok/s)", r.row(), 64.0 / r.p50_s);
+
+    let (mut l, mut u) = model.zero_carry();
+    let r = bench_for("native/decode 1 tok", 2.0, || {
+        std::hint::black_box(model.trunk_chunk(&mut l, &mut u, &tokens[..1], 0.0, None).unwrap());
+    });
+    println!("{}   ({:.0} tok/s)", r.row(), 1.0 / r.p50_s);
+}

@@ -5,7 +5,7 @@
 use stlt::bench::{bench, bench_for};
 use stlt::runtime::{
     default_artifacts_dir, exec::load_init_vec, EvalStep, Manifest, Runtime, StreamStep,
-    Tensor, TrainState, TrainStep,
+    TrainState, TrainStep,
 };
 
 fn main() {
@@ -14,13 +14,11 @@ fn main() {
     let rt = Runtime::cpu().unwrap();
     let mut results = Vec::new();
 
-    // host<->literal conversion: 1M f32 roundtrip
+    // host->device upload: 1M f32 through the backend buffer path
     let v = vec![1.0f32; 1_000_000];
-    results.push(bench("literal/1M f32 to_literal+back", 3, 30, || {
-        let t = Tensor::f32(v.clone(), &[1_000_000]);
-        let lit = t.to_literal().unwrap();
-        let back = Tensor::from_literal(&lit, stlt::runtime::DType::F32, &[1_000_000]).unwrap();
-        std::hint::black_box(back.len());
+    results.push(bench("upload/1M f32 host->device", 3, 30, || {
+        let buf = rt.upload_f32(&v, &[1_000_000]).unwrap();
+        std::hint::black_box(buf.len());
     }));
 
     let e = manifest.get("lm_stlt_tiny.train").unwrap();

@@ -24,11 +24,12 @@ use anyhow::{anyhow, Result};
 use crate::metrics::Histogram;
 use crate::runtime::artifact::Entry;
 use crate::runtime::exec as stlt_exec;
-use crate::runtime::{Manifest, Runtime, StreamCarry, Tensor};
+use crate::runtime::{BackendKind, Manifest, Runtime, StreamCarry, Tensor};
 
-// The xla PJRT handles are !Send (Rc + raw pointers), so the model
-// thread constructs its own Runtime and is the only thread to touch it;
-// everything crossing the thread boundary is plain data.
+// Backend device handles may be !Send (xla's PJRT wraps Rc + raw
+// pointers), so the model thread constructs its own Runtime and is the
+// only thread to touch it; everything crossing the thread boundary is
+// plain data (BackendKind is Copy + Send).
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::sampling::Sampling;
@@ -39,11 +40,18 @@ pub struct ServerOpts {
     pub queue_cap: usize,
     pub max_sessions: usize,
     pub policy: BatchPolicy,
+    /// Execution substrate for the model thread (default: native).
+    pub backend: BackendKind,
 }
 
 impl Default for ServerOpts {
     fn default() -> Self {
-        ServerOpts { queue_cap: 64, max_sessions: 16, policy: BatchPolicy::default() }
+        ServerOpts {
+            queue_cap: 64,
+            max_sessions: 16,
+            policy: BatchPolicy::default(),
+            backend: BackendKind::default(),
+        }
     }
 }
 
@@ -97,8 +105,9 @@ struct ModelThread {
 
 impl Server {
     /// `artifact_base` e.g. "lm_stlt_tiny"; `flat` the trained params.
-    /// The PJRT runtime is created *inside* the model thread (xla handles
-    /// are !Send); start() blocks until both executables are compiled.
+    /// The runtime is created *inside* the model thread (backend device
+    /// handles may be !Send); start() blocks until both executables are
+    /// loaded (compiled, on the xla backend).
     pub fn start(
         manifest: &Manifest,
         artifact_base: &str,
@@ -116,11 +125,12 @@ impl Server {
         let batcher = Batcher::new(Arc::clone(&queue), opts.policy.clone());
         let stats_thread = Arc::clone(&stats);
         let max_sessions = opts.max_sessions;
+        let backend = opts.backend;
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let worker = thread::Builder::new()
             .name("stlt-model".into())
             .spawn(move || {
-                let rt = match Runtime::cpu() {
+                let rt = match Runtime::new(backend) {
                     Ok(rt) => rt,
                     Err(e) => {
                         let _ = ready_tx.send(Err(e));

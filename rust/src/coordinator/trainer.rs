@@ -3,8 +3,10 @@
 //! periodic held-out evaluation, and checkpoints (own binary format).
 //!
 //! The LR schedule, AdamW and gradient clipping live *inside* the HLO
-//! (python/compile/optim.py); the driver supplies data, step counters
-//! and seeds — so the request path stays pure Rust + PJRT.
+//! (python/compile/optim.py), so training requires an xla-backed
+//! [`Runtime`] (`--features xla`); the driver itself is backend-agnostic
+//! and fails fast with a clear error on backends without `train_step`
+//! support.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -60,6 +62,13 @@ pub fn train_lm(
     artifact_base: &str,
     opts: &TrainOpts,
 ) -> Result<TrainReport> {
+    if rt.backend_kind() == crate::runtime::BackendKind::Native {
+        bail!(
+            "training executes the AOT optimiser graph and requires the \
+             xla backend (run with --backend xla on a build with \
+             --features xla)"
+        );
+    }
     let step_exec = TrainStep::new(rt, manifest, &format!("{artifact_base}.train"))?;
     let eval_exec = EvalStep::new(rt, manifest, &format!("{artifact_base}.eval"))?;
     let entry = step_exec.entry();
@@ -137,11 +146,14 @@ pub fn eval_lm(
         eval_exec.batch,
         eval_exec.n_plus_1,
     );
+    // upload the frozen weights once (§Perf L3-1) instead of copying the
+    // full parameter vector on every batch
+    let params = eval_exec.upload(flat)?;
     let mut nll = 0.0;
     let mut count = 0.0;
     for i in 0..opts.eval_batches {
         let tokens = data.next_batch();
-        let (n, c, _seff) = eval_exec.run(flat, &tokens, noise_std, i as i32)?;
+        let (n, c, _seff) = eval_exec.run_h(&params, &tokens, noise_std, i as i32)?;
         nll += n;
         count += c;
     }

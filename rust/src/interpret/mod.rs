@@ -29,7 +29,7 @@ pub fn trunk_layout(cfg: &ModelConfig) -> Vec<Leaf> {
     let d = cfg.d_model;
     let s = cfg.s_max;
     let v = cfg.vocab;
-    let h = d * 4; // ffn_mult fixed at 4 in config presets
+    let h = d * cfg.ffn_mult.max(1); // python default ffn_mult = 4
     let mut leaves: Vec<(String, Vec<usize>)> = Vec::new();
     leaves.push(("/embed".into(), vec![v, d]));
     for li in 0..cfg.n_layers {
@@ -192,6 +192,7 @@ mod tests {
             adaptive: false,
             mode: "linear".into(),
             total_steps: 2000,
+            ..ModelConfig::default()
         }
     }
 

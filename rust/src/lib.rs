@@ -1,14 +1,37 @@
-//! `laplace-stlt` — reproduction of "Adaptive Two-Sided Laplace
-//! Transforms: A Learnable, Interpretable, and Scalable Replacement for
-//! Self-Attention" (Kiruluta, 2025) as a three-layer Rust + JAX + Pallas
-//! stack (see DESIGN.md).
+//! `stlt` — reproduction of "Adaptive Two-Sided Laplace Transforms: A
+//! Learnable, Interpretable, and Scalable Replacement for Self-Attention"
+//! (Kiruluta, 2025) as a backend-agnostic Rust serving system.
 //!
-//! * Layer 1/2 (python/, build-time only): Pallas STLT kernels + JAX
-//!   models, AOT-lowered to HLO text.
-//! * Layer 3 (this crate): PJRT runtime, training driver, streaming
-//!   long-document coordinator, and every substrate (tokenizer, data
-//!   generators, metrics, config, CLI, RNG, thread pool) built from
-//!   scratch.
+//! The runtime executes manifest entries (`artifacts/manifest.json`)
+//! through a pluggable [`runtime::Backend`]:
+//!
+//! * **native** (default): STLT token mixing is an O(N·S·d) recursive
+//!   convolution with O(S·d) streaming carries, so inference needs no
+//!   XLA compiler — [`runtime::native_stlt`] runs forward, streaming,
+//!   decode and CE-eval directly in Rust from the flat parameter
+//!   vector. `stlt eval|stream|generate|inspect --backend native` work
+//!   with zero external dependencies.
+//! * **xla** (feature `xla`): AOT-lowered HLO artifacts (Pallas STLT
+//!   kernels + JAX models, lowered by python/compile/aot.py at build
+//!   time) executed on the PJRT CPU client. Training — whose AdamW /
+//!   LR-schedule graph lives inside the HLO — runs here.
+//!
+//! Layered on top: the training driver, the streaming long-document
+//! coordinator (router / dynamic batcher / carry state-pool /
+//! backpressure), and every substrate (tokenizer, data generators,
+//! metrics, config, CLI, RNG, FFT, thread pool) built from scratch.
+//!
+//! See rust/README.md for the Backend trait contract, the manifest /
+//! flat-parameter layout the native backend consumes, and the
+//! per-backend CLI support matrix.
+
+// The crate predates clippy enforcement; these lints are stylistic and
+// pervasive in the numeric kernels (index loops mirror the math) and
+// the coordinator (wide tuples on the wire protocol).
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+#![allow(clippy::type_complexity)]
+#![allow(clippy::manual_memcpy)]
 
 pub mod bench;
 pub mod config;

@@ -2,16 +2,25 @@
 //!
 //! Subcommands:
 //!   info                      list artifacts + runtime info
-//!   train   --artifact NAME --steps N [--ckpt PATH]
-//!   eval    --artifact NAME --ckpt PATH [--noise X]
-//!   stream  --artifact NAME --ckpt PATH --doc-len N   streaming PPL demo
-//!   generate --artifact NAME --ckpt PATH --len N
-//!   inspect --artifact NAME --ckpt PATH               learned-parameter dump
+//!   train   --artifact NAME --steps N [--ckpt PATH] [--set k=v ...]   (xla only)
+//!   eval    --artifact NAME [--ckpt PATH] [--noise X]
+//!   stream  --artifact NAME [--ckpt PATH] --doc-len N   streaming PPL demo
+//!   generate --artifact NAME [--ckpt PATH] --len N
+//!   inspect --artifact NAME [--ckpt PATH]               learned-parameter dump
+//!
+//! `--backend native|xla` selects the execution substrate (default:
+//! native — pure Rust, no XLA/PJRT needed). eval/stream/generate/inspect
+//! run on either backend; train executes the AOT optimiser graph and
+//! requires `--backend xla` on a build with `--features xla`.
+//!
+//! When `--ckpt` is omitted, inference subcommands fall back to the
+//! artifact's python-exact `.init.bin` vector (untrained weights).
 
 use anyhow::{anyhow, Result};
 use stlt::config::Config;
-use stlt::coordinator::{self, TrainOpts};
-use stlt::runtime::{default_artifacts_dir, Manifest, Runtime};
+use stlt::coordinator::{self, ServerOpts, TrainOpts};
+use stlt::runtime::{default_artifacts_dir, BackendKind, Manifest, Runtime};
+use stlt::util::cli::Args;
 
 fn main() {
     stlt::util::logging::init();
@@ -22,22 +31,45 @@ fn main() {
 }
 
 fn usage() -> String {
-    "usage: stlt <info|train|eval|stream|generate|inspect> [--artifact NAME] [--steps N] \
-     [--ckpt PATH] [--config FILE] [--noise X] [--len N] [--doc-len N] \
-     [--sampling greedy|temp:T|topk:K:T|topp:P:T]"
+    "usage: stlt <info|train|eval|stream|generate|inspect> [--backend native|xla] \
+     [--artifact NAME] [--steps N] [--ckpt PATH] [--config FILE] [--set key=value ...] \
+     [--noise X] [--len N] [--doc-len N] [--sampling greedy|temp:T|topk:K:T|topp:P:T]"
         .to_string()
 }
 
+/// Trained weights from --ckpt, else any `{artifact}.*` entry's init
+/// vector (aot.py attaches one to the train entry, but inference-only
+/// manifests are legal — search them all).
+fn load_flat(manifest: &Manifest, artifact: &str, args: &Args) -> Result<Vec<f32>> {
+    if let Some(ckpt) = args.get("ckpt") {
+        return Ok(coordinator::load_checkpoint(std::path::Path::new(ckpt))?.flat);
+    }
+    let prefix = format!("{artifact}.");
+    let entry = manifest
+        .entries
+        .values()
+        .find(|e| e.name.starts_with(&prefix) && e.init_file.is_some())
+        .ok_or_else(|| {
+            anyhow!(
+                "{artifact}: no --ckpt given and no '{artifact}.*' manifest entry \
+                 carries an init vector"
+            )
+        })?;
+    stlt::info!("cli", "{artifact}: no --ckpt, using untrained init vector");
+    stlt::runtime::exec::load_init_vec(entry.init_file.as_ref().unwrap(), entry.param_count)
+}
+
 fn run() -> Result<()> {
-    let args = stlt::util::cli::Args::from_env(&["verbose"]).map_err(|e| anyhow!(e))?;
+    let args = Args::from_env(&["verbose"]).map_err(|e| anyhow!(e))?;
     if args.has_flag("verbose") {
         stlt::util::logging::set_level(stlt::util::logging::Level::Debug);
     }
+    let backend = BackendKind::parse(&args.get_or("backend", "native"))?;
     let manifest = Manifest::load(default_artifacts_dir())?;
     match args.subcommand.as_deref() {
         Some("info") => {
-            let rt = Runtime::cpu()?;
-            println!("platform: {}", rt.platform());
+            let rt = Runtime::new(backend)?;
+            println!("backend: {} (platform: {})", backend.name(), rt.platform());
             println!("artifacts dir: {}", manifest.dir.display());
             for (name, e) in &manifest.entries {
                 println!(
@@ -52,20 +84,30 @@ fn run() -> Result<()> {
                 Some(p) => Config::load(p).map_err(|e| anyhow!(e))?,
                 None => Config::default(),
             };
-            let overrides: Vec<String> = Vec::new();
+            // repeated --set section.key=value overrides, applied in order
+            let overrides = args.get_all("set");
             cfg.apply_overrides(&overrides).map_err(|e| anyhow!(e))?;
             let artifact = args.get_or("artifact", &cfg.str_or("train.artifact", "lm_stlt_tiny"));
             let opts = TrainOpts {
                 steps: args.get_u64("steps", cfg.i64_or("train.steps", 200) as u64)
                     .map_err(|e| anyhow!(e))?,
-                log_every: args.get_u64("log-every", 20).map_err(|e| anyhow!(e))?,
-                eval_every: args.get_u64("eval-every", 100).map_err(|e| anyhow!(e))?,
-                eval_batches: args.get_u64("eval-batches", 4).map_err(|e| anyhow!(e))?,
-                seed: args.get_u64("seed", 0).map_err(|e| anyhow!(e))?,
-                checkpoint: args.get("ckpt").map(String::from),
-                domain: args.get_u64("domain", 0).map_err(|e| anyhow!(e))?,
+                log_every: args.get_u64("log-every", cfg.i64_or("train.log_every", 20) as u64)
+                    .map_err(|e| anyhow!(e))?,
+                eval_every: args.get_u64("eval-every", cfg.i64_or("train.eval_every", 100) as u64)
+                    .map_err(|e| anyhow!(e))?,
+                eval_batches: args
+                    .get_u64("eval-batches", cfg.i64_or("train.eval_batches", 4) as u64)
+                    .map_err(|e| anyhow!(e))?,
+                seed: args.get_u64("seed", cfg.i64_or("train.seed", 0) as u64)
+                    .map_err(|e| anyhow!(e))?,
+                checkpoint: args
+                    .get("ckpt")
+                    .map(String::from)
+                    .or_else(|| cfg.get("train.checkpoint").and_then(|v| v.as_str()).map(String::from)),
+                domain: args.get_u64("domain", cfg.i64_or("data.domain", 0) as u64)
+                    .map_err(|e| anyhow!(e))?,
             };
-            let rt = Runtime::cpu()?;
+            let rt = Runtime::new(backend)?;
             let report = coordinator::train_lm(&rt, &manifest, &artifact, &opts)?;
             println!("final ppl: {:.3}", report.final_ppl);
             println!("throughput: {:.0} tokens/s", report.tokens_per_s);
@@ -73,25 +115,29 @@ fn run() -> Result<()> {
         }
         Some("eval") => {
             let artifact = args.get_or("artifact", "lm_stlt_tiny");
-            let ckpt = args.get("ckpt").ok_or_else(|| anyhow!("--ckpt required"))?;
             let noise = args.get_f64("noise", 0.0).map_err(|e| anyhow!(e))? as f32;
-            let state = coordinator::load_checkpoint(std::path::Path::new(ckpt))?;
-            let rt = Runtime::cpu()?;
+            let flat = load_flat(&manifest, &artifact, &args)?;
+            let rt = Runtime::new(backend)?;
             let eval = stlt::runtime::EvalStep::new(&rt, &manifest, &format!("{artifact}.eval"))?;
             let entry = manifest.get(&format!("{artifact}.eval"))?;
             let cfg = stlt::data::corpus::CorpusConfig::default_for_vocab(entry.config.vocab);
-            let opts = TrainOpts { eval_batches: args.get_u64("batches", 8).map_err(|e| anyhow!(e))?, ..Default::default() };
-            let ppl = coordinator::eval_lm(&eval, &state.flat, &cfg, &opts, noise)?;
-            println!("ppl: {ppl:.3} (noise={noise})");
+            let opts = TrainOpts {
+                eval_batches: args.get_u64("batches", 8).map_err(|e| anyhow!(e))?,
+                ..Default::default()
+            };
+            let ppl = coordinator::eval_lm(&eval, &flat, &cfg, &opts, noise)?;
+            println!("ppl: {ppl:.3} (noise={noise}, backend={})", backend.name());
             Ok(())
         }
         Some("stream") => {
             let artifact = args.get_or("artifact", "lm_stlt_tiny");
-            let ckpt = args.get("ckpt").ok_or_else(|| anyhow!("--ckpt required"))?;
             let doc_len = args.get_usize("doc-len", 4096).map_err(|e| anyhow!(e))?;
-            let state = coordinator::load_checkpoint(std::path::Path::new(ckpt))?;
+            let flat = load_flat(&manifest, &artifact, &args)?;
             let server = coordinator::Server::start(
-                &manifest, &artifact, state.flat, Default::default(),
+                &manifest,
+                &artifact,
+                flat,
+                ServerOpts { backend, ..Default::default() },
             )?;
             let entry = manifest.get(&format!("{artifact}.stream_batch"))?;
             let mut corpus = stlt::data::corpus::Corpus::new(
@@ -102,8 +148,8 @@ fn run() -> Result<()> {
             let r = server.feed(1, doc, true)?;
             let dt = t0.elapsed().as_secs_f64();
             println!(
-                "streamed {} tokens in {:.2}s ({:.0} tok/s), ppl {:.3}",
-                doc_len, dt, doc_len as f64 / dt,
+                "streamed {} tokens in {:.2}s ({:.0} tok/s, backend {}), ppl {:.3}",
+                doc_len, dt, doc_len as f64 / dt, backend.name(),
                 stlt::metrics::perplexity(r.nll_sum, r.count)
             );
             println!("feed latency: {}", server.stats.feed_latency.lock().unwrap().summary());
@@ -112,11 +158,13 @@ fn run() -> Result<()> {
         }
         Some("generate") => {
             let artifact = args.get_or("artifact", "lm_stlt_tiny");
-            let ckpt = args.get("ckpt").ok_or_else(|| anyhow!("--ckpt required"))?;
             let len = args.get_usize("len", 64).map_err(|e| anyhow!(e))?;
-            let state = coordinator::load_checkpoint(std::path::Path::new(ckpt))?;
+            let flat = load_flat(&manifest, &artifact, &args)?;
             let server = coordinator::Server::start(
-                &manifest, &artifact, state.flat, Default::default(),
+                &manifest,
+                &artifact,
+                flat,
+                ServerOpts { backend, ..Default::default() },
             )?;
             let entry = manifest.get(&format!("{artifact}.stream_batch"))?;
             let mut corpus = stlt::data::corpus::Corpus::new(
@@ -140,10 +188,16 @@ fn run() -> Result<()> {
         }
         Some("inspect") => {
             let artifact = args.get_or("artifact", "lm_stlt_tiny");
-            let ckpt = args.get("ckpt").ok_or_else(|| anyhow!("--ckpt required"))?;
-            let state = coordinator::load_checkpoint(std::path::Path::new(ckpt))?;
-            let entry = manifest.get(&format!("{artifact}.train"))?;
-            let report = stlt::interpret::inspect_stlt_params(&state.flat, &entry.config);
+            let flat = load_flat(&manifest, &artifact, &args)?;
+            // any entry of the artifact carries the ModelConfig; don't
+            // require a '.train' entry (inference-only manifests are legal)
+            let prefix = format!("{artifact}.");
+            let entry = manifest
+                .entries
+                .values()
+                .find(|e| e.name.starts_with(&prefix))
+                .ok_or_else(|| anyhow!("no '{artifact}.*' entries in manifest"))?;
+            let report = stlt::interpret::inspect_stlt_params(&flat, &entry.config);
             println!("{report}");
             Ok(())
         }

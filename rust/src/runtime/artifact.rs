@@ -22,8 +22,11 @@ impl TensorSpec {
     }
 }
 
-/// Subset of the python ModelConfig the Rust side needs.
-#[derive(Clone, Debug, Default)]
+/// Subset of the python ModelConfig the Rust side needs. The native
+/// backend additionally consumes the STLT numeric hyperparameters
+/// (ffn_mult, sigma_min, t_init, omega_zero); they default to the
+/// python `ModelConfig` defaults when absent from older manifests.
+#[derive(Clone, Debug)]
 pub struct ModelConfig {
     pub arch: String,
     pub vocab: usize,
@@ -35,6 +38,32 @@ pub struct ModelConfig {
     pub adaptive: bool,
     pub mode: String,
     pub total_steps: u64,
+    pub ffn_mult: usize,
+    pub sigma_min: f32,
+    pub t_init: f32,
+    pub omega_zero: bool,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        ModelConfig {
+            arch: String::new(),
+            vocab: 0,
+            d_model: 0,
+            n_layers: 0,
+            n_ctx: 0,
+            s_max: 0,
+            batch: 0,
+            adaptive: false,
+            mode: String::new(),
+            total_steps: 0,
+            // python config.py defaults
+            ffn_mult: 4,
+            sigma_min: 1e-3,
+            t_init: 32.0,
+            omega_zero: false,
+        }
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -92,6 +121,20 @@ fn parse_config(j: Option<&Json>) -> ModelConfig {
         c.adaptive = b("adaptive");
         c.mode = s("mode");
         c.total_steps = i("total_steps") as u64;
+        if let Some(fm) = j.get("ffn_mult").and_then(|v| v.as_i64()) {
+            if fm > 0 {
+                c.ffn_mult = fm as usize;
+            }
+        }
+        if let Some(sm) = j.get("sigma_min").and_then(|v| v.as_f64()) {
+            c.sigma_min = sm as f32;
+        }
+        if let Some(ti) = j.get("t_init").and_then(|v| v.as_f64()) {
+            c.t_init = ti as f32;
+        }
+        if let Some(oz) = j.get("omega_zero").and_then(|v| v.as_bool()) {
+            c.omega_zero = oz;
+        }
     }
     c
 }

@@ -1,0 +1,117 @@
+//! Backend abstraction: the structural seam every execution substrate
+//! plugs into (native Rust, XLA/PJRT today; GPU PJRT, sharded or remote
+//! executors tomorrow).
+//!
+//! Three object-safe traits cross the boundary:
+//!
+//!   * [`Backend`]    — load a manifest [`Entry`] into an executable and
+//!                      upload long-lived device buffers.
+//!   * [`Executable`] — run with host tensors, or with the first input
+//!                      (the frozen parameter vector) device-resident.
+//!   * [`DeviceBuffer`] — an opaque device-resident tensor; backends
+//!                      downcast via `as_any` at execution time.
+//!
+//! Everything above this module ([`crate::runtime::Runtime`], the typed
+//! entry points in `exec.rs`, the coordinator) is backend-agnostic: no
+//! `xla::` type appears in any public API outside `backend/xla.rs`.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::artifact::Entry;
+use crate::runtime::tensor::Tensor;
+
+#[cfg(feature = "native")]
+pub mod native;
+#[cfg(feature = "xla")]
+pub mod xla;
+
+#[cfg(feature = "native")]
+pub use self::native::NativeBackend;
+#[cfg(feature = "xla")]
+pub use self::xla::XlaBackend;
+
+/// Which execution substrate a [`crate::runtime::Runtime`] drives.
+///
+/// Both variants always exist so CLI parsing and configs stay uniform;
+/// constructing an XLA runtime in a build without the `xla` feature
+/// fails at [`crate::runtime::Runtime::new`] with a clear error.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust STLT execution (`runtime/native_stlt.rs`): forward,
+    /// streaming, decode and CE-eval with zero external dependencies.
+    #[default]
+    Native,
+    /// AOT-lowered HLO artifacts executed through PJRT (`--features xla`).
+    Xla,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s {
+            "native" => Ok(BackendKind::Native),
+            "xla" => Ok(BackendKind::Xla),
+            other => bail!("unknown backend '{other}' (expected native|xla)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Xla => "xla",
+        }
+    }
+}
+
+/// Opaque device-resident buffer (the pre-uploaded parameter vector on
+/// the hot path). Backends downcast through `as_any`.
+pub trait DeviceBuffer {
+    /// Number of elements in the buffer.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any;
+}
+
+/// A loaded (compiled, for XLA) manifest entry ready to execute.
+///
+/// Inputs are validated against the manifest by the caller
+/// ([`crate::runtime::Runtime`]) before either method is invoked.
+pub trait Executable {
+    /// Execute with host tensors; returns outputs in manifest order.
+    fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
+
+    /// Execute with the first manifest input (the parameter vector)
+    /// taken from a pre-uploaded buffer and the rest from host tensors.
+    fn run_with_params(&self, params: &dyn DeviceBuffer, rest: &[Tensor]) -> Result<Vec<Tensor>>;
+}
+
+/// An execution substrate: turns manifest entries into executables.
+pub trait Backend {
+    /// Human-readable platform name (e.g. "native", "Host" for PJRT CPU).
+    fn platform(&self) -> String;
+
+    /// Load (and for XLA, compile) a manifest entry.
+    fn load(&self, entry: &Entry) -> Result<Arc<dyn Executable>>;
+
+    /// Upload a long-lived f32 tensor once; reused across executions.
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<Box<dyn DeviceBuffer>>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("xla").unwrap(), BackendKind::Xla);
+        assert!(BackendKind::parse("tpu").is_err());
+        assert_eq!(BackendKind::default(), BackendKind::Native);
+        assert_eq!(BackendKind::Native.name(), "native");
+    }
+}

@@ -1,0 +1,267 @@
+//! Native backend: executes STLT manifest entries directly in Rust via
+//! [`crate::runtime::native_stlt`] — no XLA, no PJRT, no Python.
+//!
+//! Supported entry kinds: `eval_step`, `forward`, `stream_step`,
+//! `stream_batch_step`, `decode_step` (the full inference/serving
+//! surface). Training kinds (`train_step`, `s2s_*`) carry their
+//! optimiser inside the lowered HLO and require the `xla` feature.
+//!
+//! Batch rows are independent in every supported kind, so they fan out
+//! across [`crate::util::threadpool::ThreadPool`].
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::artifact::Entry;
+use crate::runtime::backend::{Backend, DeviceBuffer, Executable};
+use crate::runtime::native_stlt::{nll_of, StltModel, StltPlan};
+use crate::runtime::tensor::Tensor;
+use crate::util::threadpool::{parallel_map, ThreadPool};
+
+/// Host-resident "device" buffer: the native device *is* the host.
+pub struct NativeBuffer {
+    data: Arc<Vec<f32>>,
+}
+
+impl NativeBuffer {
+    pub fn data(&self) -> &Arc<Vec<f32>> {
+        &self.data
+    }
+}
+
+impl DeviceBuffer for NativeBuffer {
+    fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+pub struct NativeBackend {
+    pool: Arc<ThreadPool>,
+}
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        NativeBackend { pool: Arc::new(ThreadPool::new(threads)) }
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        NativeBackend::new()
+    }
+}
+
+const SUPPORTED: &[&str] =
+    &["eval_step", "forward", "stream_step", "stream_batch_step", "decode_step"];
+
+impl Backend for NativeBackend {
+    fn platform(&self) -> String {
+        "native".to_string()
+    }
+
+    fn load(&self, entry: &Entry) -> Result<Arc<dyn Executable>> {
+        if !SUPPORTED.contains(&entry.kind.as_str()) {
+            bail!(
+                "{}: kind '{}' is not supported by the native backend \
+                 (supported: {SUPPORTED:?}; training requires --features xla)",
+                entry.name,
+                entry.kind
+            );
+        }
+        // resolve the execution plan once here: dispatch only binds the
+        // parameter vector, keeping the per-token decode path allocation-lean
+        let plan = StltPlan::new(&entry.config)
+            .with_context(|| format!("{}: unsupported by the native backend", entry.name))?;
+        Ok(Arc::new(NativeExec { entry: entry.clone(), plan, pool: Arc::clone(&self.pool) }))
+    }
+
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<Box<dyn DeviceBuffer>> {
+        let numel: usize = dims.iter().product::<usize>().max(1);
+        if data.len() != numel {
+            bail!("upload_f32: {} elements vs dims {:?}", data.len(), dims);
+        }
+        Ok(Box::new(NativeBuffer { data: Arc::new(data.to_vec()) }))
+    }
+}
+
+pub struct NativeExec {
+    entry: Entry,
+    plan: StltPlan,
+    pool: Arc<ThreadPool>,
+}
+
+impl Executable for NativeExec {
+    fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.is_empty() {
+            bail!("{}: no inputs", self.entry.name);
+        }
+        let flat = Arc::new(inputs[0].as_f32()?.to_vec());
+        self.dispatch(flat, &inputs[1..])
+    }
+
+    fn run_with_params(&self, params: &dyn DeviceBuffer, rest: &[Tensor]) -> Result<Vec<Tensor>> {
+        let buf = params
+            .as_any()
+            .downcast_ref::<NativeBuffer>()
+            .context("parameter buffer was not uploaded by the native backend")?;
+        self.dispatch(Arc::clone(buf.data()), rest)
+    }
+}
+
+impl NativeExec {
+    /// `rest` holds the manifest inputs after the parameter vector.
+    fn dispatch(&self, flat: Arc<Vec<f32>>, rest: &[Tensor]) -> Result<Vec<Tensor>> {
+        let model = self
+            .plan
+            .bind(flat)
+            .with_context(|| format!("binding params for {}", self.entry.name))?;
+        match self.entry.kind.as_str() {
+            "eval_step" => self.eval_step(model, rest),
+            "forward" => self.forward(model, rest),
+            "stream_step" => self.stream_step(model, rest),
+            "stream_batch_step" => self.stream_batch_step(model, rest),
+            "decode_step" => self.decode_step(model, rest),
+            other => bail!("{}: unsupported kind '{other}'", self.entry.name),
+        }
+    }
+
+    /// (tokens [B,N+1], noise_std, seed) -> (nll_sum, count, s_eff).
+    fn eval_step(&self, model: StltModel, rest: &[Tensor]) -> Result<Vec<Tensor>> {
+        let shape = rest[0].shape().to_vec();
+        let (b, n1) = (shape[0], shape[1]);
+        let tokens = Arc::new(rest[0].as_i32()?.to_vec());
+        let noise_std = rest[1].as_f32()?[0];
+        let seed = rest[2].as_i32()?[0];
+        let rows = parallel_map(&self.pool, b, move |i| {
+            let row = &tokens[i * n1..(i + 1) * n1];
+            model.eval_row(row, noise_std, (seed as u64) ^ ((i as u64) << 32))
+        });
+        let (mut nll, mut cnt, mut seff) = (0.0f64, 0.0f64, 0.0f32);
+        for r in rows {
+            let (n, c, s) = r?;
+            nll += n;
+            cnt += c;
+            seff += s;
+        }
+        Ok(vec![
+            Tensor::scalar_f32(nll as f32),
+            Tensor::scalar_f32(cnt as f32),
+            Tensor::scalar_f32(seff / b.max(1) as f32),
+        ])
+    }
+
+    /// (tokens [B,N]) -> logits [B,N,V].
+    fn forward(&self, model: StltModel, rest: &[Tensor]) -> Result<Vec<Tensor>> {
+        let shape = rest[0].shape().to_vec();
+        let (b, n) = (shape[0], shape[1]);
+        let v = model.cfg.vocab;
+        let tokens = Arc::new(rest[0].as_i32()?.to_vec());
+        let rows = parallel_map(&self.pool, b, move |i| {
+            model.forward_logits(&tokens[i * n..(i + 1) * n])
+        });
+        let mut logits = Vec::with_capacity(b * n * v);
+        for r in rows {
+            logits.extend(r?);
+        }
+        Ok(vec![Tensor::f32(logits, &[b, n, v])])
+    }
+
+    /// (l, u, tokens[C], targets[C], mask[C]) -> (l', u', nll, count).
+    fn stream_step(&self, model: StltModel, rest: &[Tensor]) -> Result<Vec<Tensor>> {
+        let mut l = rest[0].as_f32()?.to_vec();
+        let mut u = rest[1].as_f32()?.to_vec();
+        let tokens = rest[2].as_i32()?;
+        let targets = rest[3].as_i32()?;
+        let mask = rest[4].as_f32()?;
+        let (logits, _) = model.trunk_chunk(&mut l, &mut u, tokens, 0.0, None)?;
+        let (nll, cnt) = masked_nll(&logits, model.cfg.vocab, targets, mask)?;
+        Ok(vec![
+            Tensor::f32(l, rest[0].shape()),
+            Tensor::f32(u, rest[1].shape()),
+            Tensor::scalar_f32(nll as f32),
+            Tensor::scalar_f32(cnt as f32),
+        ])
+    }
+
+    /// Batched serving chunk with inactive-row passthrough, matching
+    /// `train.make_stream_batch_step`: rows with active=0 keep their
+    /// carry and contribute nothing.
+    fn stream_batch_step(&self, model: StltModel, rest: &[Tensor]) -> Result<Vec<Tensor>> {
+        let l_all = Arc::new(rest[0].as_f32()?.to_vec());
+        let u_all = Arc::new(rest[1].as_f32()?.to_vec());
+        let tokens = Arc::new(rest[2].as_i32()?.to_vec());
+        let targets = Arc::new(rest[3].as_i32()?.to_vec());
+        let mask = Arc::new(rest[4].as_f32()?.to_vec());
+        let active = rest[5].as_f32()?.to_vec();
+        let b = rest[5].shape()[0];
+        let c = rest[2].shape()[1];
+        let l_stride = l_all.len() / b.max(1);
+        let u_stride = u_all.len() / b.max(1);
+        let vocab = model.cfg.vocab;
+        let act = Arc::new(active);
+        let act2 = Arc::clone(&act);
+        let rows = parallel_map(&self.pool, b, move |i| {
+            let mut l = l_all[i * l_stride..(i + 1) * l_stride].to_vec();
+            let mut u = u_all[i * u_stride..(i + 1) * u_stride].to_vec();
+            if act2[i] <= 0.5 {
+                return Ok((l, u, 0.0f64, 0.0f64));
+            }
+            let toks = &tokens[i * c..(i + 1) * c];
+            let tgts = &targets[i * c..(i + 1) * c];
+            let msk = &mask[i * c..(i + 1) * c];
+            let (logits, _) = model.trunk_chunk(&mut l, &mut u, toks, 0.0, None)?;
+            let (nll, cnt) = masked_nll(&logits, vocab, tgts, msk)?;
+            Ok::<_, anyhow::Error>((l, u, nll, cnt))
+        });
+        let mut l_out = Vec::with_capacity(b * l_stride);
+        let mut u_out = Vec::with_capacity(b * u_stride);
+        let mut nll_out = Vec::with_capacity(b);
+        let mut cnt_out = Vec::with_capacity(b);
+        for r in rows {
+            let (l, u, nll, cnt) = r?;
+            l_out.extend(l);
+            u_out.extend(u);
+            nll_out.push(nll as f32);
+            cnt_out.push(cnt as f32);
+        }
+        Ok(vec![
+            Tensor::f32(l_out, rest[0].shape()),
+            Tensor::f32(u_out, rest[1].shape()),
+            Tensor::f32(nll_out, &[b]),
+            Tensor::f32(cnt_out, &[b]),
+        ])
+    }
+
+    /// (l, u, token[1]) -> (l', u', logits[V]).
+    fn decode_step(&self, model: StltModel, rest: &[Tensor]) -> Result<Vec<Tensor>> {
+        let mut l = rest[0].as_f32()?.to_vec();
+        let mut u = rest[1].as_f32()?.to_vec();
+        let token = rest[2].as_i32()?;
+        let v = model.cfg.vocab;
+        let (logits, _) = model.trunk_chunk(&mut l, &mut u, token, 0.0, None)?;
+        let last = logits[logits.len() - v..].to_vec();
+        Ok(vec![
+            Tensor::f32(l, rest[0].shape()),
+            Tensor::f32(u, rest[1].shape()),
+            Tensor::f32(last, &[v]),
+        ])
+    }
+}
+
+fn masked_nll(logits: &[f32], vocab: usize, targets: &[i32], mask: &[f32]) -> Result<(f64, f64)> {
+    let (mut nll, mut cnt) = (0.0f64, 0.0f64);
+    for (t, (&tgt, &m)) in targets.iter().zip(mask).enumerate() {
+        if m == 0.0 {
+            continue;
+        }
+        nll += m as f64 * nll_of(&logits[t * vocab..(t + 1) * vocab], tgt)?;
+        cnt += m as f64;
+    }
+    Ok((nll, cnt))
+}

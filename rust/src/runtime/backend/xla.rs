@@ -1,0 +1,179 @@
+//! XLA/PJRT backend (`--features xla`): loads `artifacts/*.hlo.txt`
+//! (AOT-lowered by python/compile/aot.py) and executes them on the XLA
+//! CPU client. Python never runs on this path.
+//!
+//! This is the only module in the crate that touches `xla::` types; the
+//! public API above it is backend-agnostic.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO *text* interchange,
+//! `return_tuple=True` on the python side -> tuple literal unwrap here.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::artifact::Entry;
+use crate::runtime::backend::{Backend, DeviceBuffer, Executable};
+use crate::runtime::tensor::{DType, Tensor};
+
+pub struct XlaBackend {
+    client: xla::PjRtClient,
+}
+
+impl XlaBackend {
+    pub fn cpu() -> Result<XlaBackend> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(XlaBackend { client })
+    }
+}
+
+/// Device-resident PJRT buffer plus its element count (PJRT does not
+/// expose one cheaply).
+pub struct XlaBuffer {
+    buf: xla::PjRtBuffer,
+    len: usize,
+}
+
+impl XlaBuffer {
+    pub fn buffer(&self) -> &xla::PjRtBuffer {
+        &self.buf
+    }
+}
+
+impl DeviceBuffer for XlaBuffer {
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+impl Backend for XlaBackend {
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn load(&self, entry: &Entry) -> Result<Arc<dyn Executable>> {
+        let path = entry
+            .file
+            .to_str()
+            .context("artifact path not utf-8")?
+            .to_string();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("XLA compile of {}", entry.name))?;
+        Ok(Arc::new(XlaExec {
+            exe,
+            client: self.client.clone(),
+            entry: entry.clone(),
+        }))
+    }
+
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<Box<dyn DeviceBuffer>> {
+        let buf = self.client.buffer_from_host_buffer(data, dims, None)?;
+        Ok(Box::new(XlaBuffer { buf, len: data.len() }))
+    }
+}
+
+pub struct XlaExec {
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+    entry: Entry,
+}
+
+/// Convert a host tensor to an xla Literal with the proper shape.
+fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    let lit = match t {
+        Tensor::F32(d, _) => xla::Literal::vec1(d),
+        Tensor::I32(d, _) => xla::Literal::vec1(d),
+    };
+    if dims.is_empty() {
+        // scalar: reshape to rank-0
+        Ok(lit.reshape(&[])?)
+    } else {
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+/// Read back from a literal, trusting the manifest-declared shape.
+fn from_literal(lit: &xla::Literal, dtype: DType, shape: &[usize]) -> Result<Tensor> {
+    Ok(match dtype {
+        DType::F32 => Tensor::F32(lit.to_vec::<f32>()?, shape.to_vec()),
+        DType::I32 => Tensor::I32(lit.to_vec::<i32>()?, shape.to_vec()),
+    })
+}
+
+impl XlaExec {
+    fn untuple(&self, lit: xla::Literal) -> Result<Vec<Tensor>> {
+        // python lowered with return_tuple=True -> tuple of outputs
+        let parts = lit.to_tuple().context("untupling result")?;
+        if parts.len() != self.entry.outputs.len() {
+            bail!(
+                "{}: got {} outputs, manifest says {}",
+                self.entry.name,
+                parts.len(),
+                self.entry.outputs.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&self.entry.outputs)
+            .map(|(l, spec)| from_literal(l, spec.dtype, &spec.shape))
+            .collect()
+    }
+}
+
+impl Executable for XlaExec {
+    fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        // drop arguments jax pruned from the lowered program (kept_inputs)
+        let literals: Vec<xla::Literal> = self
+            .entry
+            .kept_inputs
+            .iter()
+            .map(|&i| to_literal(&inputs[i]))
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        self.untuple(lit)
+    }
+
+    fn run_with_params(&self, params: &dyn DeviceBuffer, rest: &[Tensor]) -> Result<Vec<Tensor>> {
+        let params = params
+            .as_any()
+            .downcast_ref::<XlaBuffer>()
+            .context("parameter buffer was not uploaded by the xla backend")?;
+        if !self.entry.kept_inputs.contains(&0) {
+            bail!(
+                "{}: parameter vector was pruned from the program",
+                self.entry.name
+            );
+        }
+        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(rest.len());
+        for (i, t) in rest.iter().enumerate() {
+            if !self.entry.kept_inputs.contains(&(i + 1)) {
+                continue; // jax pruned this argument
+            }
+            let b = match t {
+                Tensor::F32(d, s) => self.client.buffer_from_host_buffer(d, s, None)?,
+                Tensor::I32(d, s) => self.client.buffer_from_host_buffer(d, s, None)?,
+            };
+            bufs.push(b);
+        }
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&params.buf];
+        args.extend(bufs.iter());
+        let result = self.exe.execute_b(&args)?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        self.untuple(lit)
+    }
+}

@@ -1,57 +1,88 @@
-//! PJRT execution: load HLO text -> compile -> run, with a per-process
-//! executable cache (XLA compilation is seconds; every experiment reuses
-//! compiled artifacts across steps).
-//!
-//! Pattern follows /opt/xla-example/load_hlo: HLO *text* interchange,
-//! `return_tuple=True` on the python side -> tuple literal unwrap here.
+//! Backend-agnostic runtime: validates manifest inputs, dispatches to
+//! the selected [`Backend`], and keeps a per-process executable cache
+//! (XLA compilation is seconds; every experiment reuses loaded
+//! artifacts across steps — native loads are cheap but cached too so
+//! both backends share one code path).
 
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Result};
 
 use crate::runtime::artifact::Entry;
+use crate::runtime::backend::{Backend, BackendKind, DeviceBuffer, Executable};
 use crate::runtime::tensor::Tensor;
 
 pub struct Runtime {
-    client: xla::PjRtClient,
-    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    backend: Box<dyn Backend>,
+    kind: BackendKind,
+    cache: Mutex<HashMap<String, Arc<dyn Executable>>>,
+    /// cumulative seconds spent loading/compiling executables
     pub compile_seconds: Mutex<f64>,
 }
 
 impl Runtime {
+    /// Construct a runtime over the requested execution substrate.
+    pub fn new(kind: BackendKind) -> Result<Runtime> {
+        let backend: Box<dyn Backend> = match kind {
+            #[cfg(feature = "native")]
+            BackendKind::Native => {
+                Box::new(crate::runtime::backend::native::NativeBackend::new())
+            }
+            #[cfg(not(feature = "native"))]
+            BackendKind::Native => {
+                bail!("this build has no native backend (rebuild with --features native)")
+            }
+            #[cfg(feature = "xla")]
+            BackendKind::Xla => Box::new(crate::runtime::backend::xla::XlaBackend::cpu()?),
+            #[cfg(not(feature = "xla"))]
+            BackendKind::Xla => {
+                bail!("this build has no XLA support (rebuild with --features xla)")
+            }
+        };
+        Ok(Runtime {
+            backend,
+            kind,
+            cache: Mutex::new(HashMap::new()),
+            compile_seconds: Mutex::new(0.0),
+        })
+    }
+
+    /// Pure-Rust native runtime (default feature `native`).
+    #[cfg(feature = "native")]
+    pub fn native() -> Result<Runtime> {
+        Runtime::new(BackendKind::Native)
+    }
+
+    /// XLA CPU runtime (back-compat constructor for xla-gated tests,
+    /// benches and the experiment harnesses).
+    #[cfg(feature = "xla")]
     pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client, cache: Mutex::new(HashMap::new()), compile_seconds: Mutex::new(0.0) })
+        Runtime::new(BackendKind::Xla)
+    }
+
+    pub fn backend_kind(&self) -> BackendKind {
+        self.kind
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.backend.platform()
     }
 
-    /// Compile (or fetch cached) executable for a manifest entry.
-    pub fn load(&self, entry: &Entry) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+    /// Load (compile for XLA, resolve for native) a manifest entry,
+    /// or fetch it from the per-process cache.
+    pub fn load(&self, entry: &Entry) -> Result<Arc<dyn Executable>> {
         if let Some(e) = self.cache.lock().unwrap().get(&entry.name) {
             return Ok(e.clone());
         }
         let t0 = Instant::now();
-        let path = entry
-            .file
-            .to_str()
-            .context("artifact path not utf-8")?
-            .to_string();
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parsing HLO text {path}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("XLA compile of {}", entry.name))?;
-        let exe = std::sync::Arc::new(exe);
+        let exe = self.backend.load(entry)?;
         let dt = t0.elapsed().as_secs_f64();
         *self.compile_seconds.lock().unwrap() += dt;
-        crate::info!("runtime", "compiled {} in {:.2}s", entry.name, dt);
+        if dt > 0.05 {
+            crate::info!("runtime", "loaded {} in {:.2}s", entry.name, dt);
+        }
         self.cache.lock().unwrap().insert(entry.name.clone(), exe.clone());
         Ok(exe)
     }
@@ -61,43 +92,15 @@ impl Runtime {
     pub fn run(&self, entry: &Entry, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         entry.check_inputs(inputs)?;
         let exe = self.load(entry)?;
-        // drop arguments jax pruned from the lowered program (kept_inputs)
-        let literals: Vec<xla::Literal> = entry
-            .kept_inputs
-            .iter()
-            .map(|&i| inputs[i].to_literal())
-            .collect::<Result<_>>()?;
-        let result = exe.execute::<xla::Literal>(&literals)?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        // python lowered with return_tuple=True -> tuple of outputs
-        let parts = lit.to_tuple().context("untupling result")?;
-        if parts.len() != entry.outputs.len() {
-            anyhow::bail!(
-                "{}: got {} outputs, manifest says {}",
-                entry.name,
-                parts.len(),
-                entry.outputs.len()
-            );
-        }
-        parts
-            .iter()
-            .zip(&entry.outputs)
-            .map(|(l, spec)| Tensor::from_literal(l, spec.dtype, &spec.shape))
-            .collect()
+        exe.run(inputs)
     }
 
-    /// Upload a static tensor once; reuse across execute_b calls.
-    /// (§Perf L3-1: skips the per-call host->literal->buffer copies of
-    /// the parameter vector, which dominates input bytes on every path
-    /// with frozen weights — eval/forward/stream/decode/serving.)
-    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
-    }
-
-    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    /// Upload a static tensor once; reuse across run_with_param_buffer
+    /// calls. (§Perf L3-1: skips the per-call host->device copies of the
+    /// parameter vector, which dominates input bytes on every path with
+    /// frozen weights — eval/forward/stream/decode/serving.)
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<Box<dyn DeviceBuffer>> {
+        self.backend.upload_f32(data, dims)
     }
 
     /// Execute with the first input taken from a pre-uploaded buffer and
@@ -106,50 +109,32 @@ impl Runtime {
     pub fn run_with_param_buffer(
         &self,
         entry: &Entry,
-        params: &xla::PjRtBuffer,
+        params: &dyn DeviceBuffer,
         rest: &[Tensor],
     ) -> Result<Vec<Tensor>> {
         if rest.len() + 1 != entry.inputs.len() {
-            anyhow::bail!(
+            bail!(
                 "{}: expected {} inputs, got 1 buffer + {}",
                 entry.name,
                 entry.inputs.len(),
                 rest.len()
             );
         }
+        if !entry.inputs.is_empty() && params.len() != entry.inputs[0].numel() {
+            bail!(
+                "{}: param buffer has {} elements, manifest says {}",
+                entry.name,
+                params.len(),
+                entry.inputs[0].numel()
+            );
+        }
         for (i, (t, spec)) in rest.iter().zip(&entry.inputs[1..]).enumerate() {
             if t.dtype() != spec.dtype || t.shape() != spec.shape.as_slice() {
-                anyhow::bail!("{}: input {} mismatch vs manifest", entry.name, i + 1);
+                bail!("{}: input {} mismatch vs manifest", entry.name, i + 1);
             }
         }
         let exe = self.load(entry)?;
-        if !entry.kept_inputs.contains(&0) {
-            anyhow::bail!("{}: parameter vector was pruned from the program", entry.name);
-        }
-        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(rest.len());
-        for (i, t) in rest.iter().enumerate() {
-            if !entry.kept_inputs.contains(&(i + 1)) {
-                continue; // jax pruned this argument
-            }
-            let b = match t {
-                Tensor::F32(d, s) => self.client.buffer_from_host_buffer(d, s, None)?,
-                Tensor::I32(d, s) => self.client.buffer_from_host_buffer(d, s, None)?,
-            };
-            bufs.push(b);
-        }
-        let mut args: Vec<&xla::PjRtBuffer> = vec![params];
-        args.extend(bufs.iter());
-        let result = exe.execute_b(&args)?;
-        let lit = result[0][0].to_literal_sync().context("fetching result literal")?;
-        let parts = lit.to_tuple().context("untupling result")?;
-        if parts.len() != entry.outputs.len() {
-            anyhow::bail!("{}: output arity mismatch", entry.name);
-        }
-        parts
-            .iter()
-            .zip(&entry.outputs)
-            .map(|(l, spec)| Tensor::from_literal(l, spec.dtype, &spec.shape))
-            .collect()
+        exe.run_with_params(params, rest)
     }
 
     /// Drop a cached executable (frees compiled program memory).

@@ -5,21 +5,23 @@
 use anyhow::{bail, Result};
 
 use crate::runtime::artifact::{Entry, Manifest};
+use crate::runtime::backend::DeviceBuffer;
 use crate::runtime::client::Runtime;
 use crate::runtime::tensor::Tensor;
 use crate::util::rng::Rng;
 
 /// Pre-uploaded parameter vector (§Perf L3-1): frozen weights are copied
-/// host->device once and reused across every execute_b call, instead of
-/// per-call Vec clone + literal + buffer copies.
+/// host->device once and reused across every execution, instead of
+/// per-call Vec clone + upload copies. Backend-opaque: the buffer was
+/// produced by whichever backend the [`Runtime`] drives.
 pub struct ParamBuf {
-    buf: xla::PjRtBuffer,
+    buf: Box<dyn DeviceBuffer>,
     pub param_count: usize,
 }
 
 impl ParamBuf {
-    pub fn buffer(&self) -> &xla::PjRtBuffer {
-        &self.buf
+    pub fn buffer(&self) -> &dyn DeviceBuffer {
+        self.buf.as_ref()
     }
 }
 
@@ -176,7 +178,7 @@ impl<'a> EvalStep<'a> {
     ) -> Result<(f64, f64, f32)> {
         let out = self.rt.run_with_param_buffer(
             self.entry,
-            &params.buf,
+            params.buffer(),
             &[
                 Tensor::i32(tokens.to_vec(), &[self.batch, self.n_plus_1]),
                 Tensor::scalar_f32(noise_std),
@@ -306,7 +308,7 @@ impl<'a> StreamStep<'a> {
     ) -> Result<(f64, f64)> {
         let mut out = self.rt.run_with_param_buffer(
             self.entry,
-            &params.buf,
+            params.buffer(),
             &[
                 Tensor::f32(std::mem::take(&mut carry.l), &carry.l_shape.clone()),
                 Tensor::f32(std::mem::take(&mut carry.u), &carry.u_shape.clone()),
@@ -369,7 +371,7 @@ impl<'a> DecodeStep<'a> {
     pub fn run_h(&self, params: &ParamBuf, carry: &mut StreamCarry, token: i32) -> Result<Vec<f32>> {
         let mut out = self.rt.run_with_param_buffer(
             self.entry,
-            &params.buf,
+            params.buffer(),
             &[
                 Tensor::f32(std::mem::take(&mut carry.l), &carry.l_shape.clone()),
                 Tensor::f32(std::mem::take(&mut carry.u), &carry.u_shape.clone()),

@@ -1,16 +1,29 @@
-//! PJRT runtime: loads `artifacts/*.hlo.txt` (AOT-lowered by
-//! python/compile/aot.py) and executes them on the XLA CPU client.
-//! Python never runs on this path.
+//! Backend-agnostic runtime: loads `artifacts/manifest.json` entries and
+//! executes them on a pluggable [`backend::Backend`].
+//!
+//! * [`backend::NativeBackend`] (default feature `native`): the STLT
+//!   forward / streaming / decode / CE-eval paths run directly in Rust
+//!   ([`native_stlt`]) from the flat parameter vector — no XLA, no
+//!   Python at run time.
+//! * `backend::XlaBackend` (feature `xla`): executes the AOT-lowered
+//!   HLO text (`python/compile/aot.py`) on the PJRT CPU client; the
+//!   only module touching `xla::` types.
 
 pub mod artifact;
+pub mod backend;
 pub mod client;
 pub mod exec;
+#[cfg(feature = "native")]
+pub mod native_stlt;
 pub mod tensor;
 
 pub use artifact::{default_artifacts_dir, Manifest};
+pub use backend::{Backend, BackendKind, DeviceBuffer, Executable};
 pub use client::Runtime;
 pub use exec::{
     DecodeStep, EvalStep, Forward, S2sDecode, S2sTrainStep, StepMetrics, StreamCarry,
     StreamStep, TrainState, TrainStep,
 };
+#[cfg(feature = "native")]
+pub use native_stlt::StltModel;
 pub use tensor::{DType, Tensor};

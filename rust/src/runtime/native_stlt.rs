@@ -1,0 +1,820 @@
+//! Pure-Rust STLT execution engine: the paper's central claim — token
+//! mixing is an O(N·S·d) recursive convolution with an O(S·d) streaming
+//! carry — means inference needs no XLA compiler at all. This module
+//! executes the decoder-only STLT trunk (embedding, per-node recursive
+//! Laplace convolution with learnable (sigma_s, omega_s, T), FFN,
+//! LayerNorm, tied logits head) directly from the same flat parameter
+//! vector and manifest `ModelConfig` the AOT artifacts consume.
+//!
+//! Semantics mirror `python/compile/{trunk,stlt_layer}.py` and the
+//! kernel oracles in `python/compile/kernels/ref.py`:
+//!
+//!   sigma   = softplus(sigma_raw) + sigma_min
+//!   T       = softplus(t_raw) + 1
+//!   lam_k   = e^{-(sigma_k + 1/T)} * e^{-j omega_k}      (window folded)
+//!   gamma   = e^{-1/(8 T)}                               (U discount)
+//!   L_n     = lam * L_{n-1} + f_n                        (O(S) carry)
+//!   U_n     = gamma * U_{n-1} + conj(L_n) (x) v_n        (O(S d) carry)
+//!   z_n     = Re<L_n, U_n> / S
+//!
+//! A naive O(N^2 S) relevance-matrix oracle ([`MixerImpl::ReferenceN2`])
+//! and FFT-based spectral relevance cross-checks (via [`crate::util::fft`],
+//! the paper's SS3.4 claim) keep the recurrence honest in tests.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::interpret::{total_params, trunk_layout, Leaf};
+use crate::runtime::artifact::ModelConfig;
+use crate::util::rng::Rng;
+
+fn softplus(x: f32) -> f32 {
+    if x > 20.0 {
+        x
+    } else {
+        (1.0 + x.exp()).ln()
+    }
+}
+
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// tanh-approximated GELU, matching `jax.nn.gelu` (approximate=True).
+fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044_715 * x * x * x)).tanh())
+}
+
+/// Which mixer implementation [`StltModel::forward_logits`] uses.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum MixerImpl {
+    /// The O(N·S·d) recursive convolution (production path).
+    #[default]
+    Recurrence,
+    /// Naive O(N^2·S·d) relevance-style oracle recomputing every
+    /// discounted prefix sum from scratch — test-only cross-check;
+    /// only valid from a zero carry (full-sequence forward).
+    ReferenceN2,
+}
+
+/// Resolved offsets of one trunk layer inside the flat vector.
+#[derive(Clone, Debug)]
+struct LayerOffsets {
+    ln1_g: usize,
+    ln1_b: usize,
+    ln2_g: usize,
+    ln2_b: usize,
+    ffn_w1: usize,
+    ffn_b1: usize,
+    ffn_w2: usize,
+    ffn_b2: usize,
+    w_f: usize,
+    w_v: usize,
+    w_o: usize,
+    sigma_raw: usize,
+    omega: usize,
+    t_raw: usize,
+    /// adaptive node-allocation gate (SS3.6), if cfg.adaptive
+    w_alpha: Option<usize>,
+    b_alpha: Option<usize>,
+}
+
+/// Per-layer node constants derived from the learnable parameters.
+struct NodeParams {
+    lam_re: Vec<f32>,
+    lam_im: Vec<f32>,
+    gamma: f32,
+}
+
+/// Resolved execution plan for one config: validated arch/mode plus
+/// every parameter offset. Built once (per backend `load`), then bound
+/// to concrete parameter vectors cheaply via [`StltPlan::bind`] — the
+/// decode serving path binds once per call, so plan resolution (string
+/// path lookups over the layout) must not sit on it.
+#[derive(Clone)]
+pub struct StltPlan {
+    pub cfg: Arc<ModelConfig>,
+    layers: Arc<Vec<LayerOffsets>>,
+    embed: usize,
+    lnf_g: usize,
+    lnf_b: usize,
+    total: usize,
+}
+
+/// The native STLT model: a plan bound to a flat packed parameter
+/// vector.
+///
+/// Cheap to clone (the parameters are behind an `Arc`), `Send + Sync`,
+/// so batch rows parallelise across [`crate::util::threadpool`].
+#[derive(Clone)]
+pub struct StltModel {
+    /// shared with the plan — `model.cfg.field` reads through the Arc
+    pub cfg: Arc<ModelConfig>,
+    flat: Arc<Vec<f32>>,
+    layers: Arc<Vec<LayerOffsets>>,
+    embed: usize,
+    lnf_g: usize,
+    lnf_b: usize,
+    pub mixer: MixerImpl,
+}
+
+fn find(layout: &[Leaf], path: &str) -> Result<usize> {
+    layout
+        .iter()
+        .find(|l| l.path == path)
+        .map(|l| l.offset)
+        .ok_or_else(|| anyhow!("param layout missing '{path}'"))
+}
+
+impl StltPlan {
+    /// Validate the config and resolve all parameter offsets.
+    pub fn new(cfg: &ModelConfig) -> Result<StltPlan> {
+        if cfg.arch != "stlt" {
+            bail!(
+                "native backend executes arch 'stlt' only (got '{}'); \
+                 use the xla backend for baseline architectures",
+                cfg.arch
+            );
+        }
+        if cfg.mode != "linear" {
+            bail!(
+                "native backend executes mode 'linear' only (got '{}')",
+                cfg.mode
+            );
+        }
+        if cfg.d_model == 0 || cfg.s_max == 0 || cfg.n_layers == 0 || cfg.vocab == 0 {
+            bail!("degenerate ModelConfig: {cfg:?}");
+        }
+        let layout = trunk_layout(cfg);
+        let total = total_params(&layout);
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for li in 0..cfg.n_layers {
+            let p = format!("/layers/{li:03}");
+            layers.push(LayerOffsets {
+                ln1_g: find(&layout, &format!("{p}/ln1_g"))?,
+                ln1_b: find(&layout, &format!("{p}/ln1_b"))?,
+                ln2_g: find(&layout, &format!("{p}/ln2_g"))?,
+                ln2_b: find(&layout, &format!("{p}/ln2_b"))?,
+                ffn_w1: find(&layout, &format!("{p}/ffn_w1"))?,
+                ffn_b1: find(&layout, &format!("{p}/ffn_b1"))?,
+                ffn_w2: find(&layout, &format!("{p}/ffn_w2"))?,
+                ffn_b2: find(&layout, &format!("{p}/ffn_b2"))?,
+                w_f: find(&layout, &format!("{p}/mixer/w_f"))?,
+                w_v: find(&layout, &format!("{p}/mixer/w_v"))?,
+                w_o: find(&layout, &format!("{p}/mixer/w_o"))?,
+                sigma_raw: find(&layout, &format!("{p}/mixer/sigma_raw"))?,
+                omega: find(&layout, &format!("{p}/mixer/omega"))?,
+                t_raw: find(&layout, &format!("{p}/mixer/t_raw"))?,
+                w_alpha: find(&layout, &format!("{p}/mixer/w_alpha")).ok(),
+                b_alpha: find(&layout, &format!("{p}/mixer/b_alpha")).ok(),
+            });
+        }
+        Ok(StltPlan {
+            cfg: Arc::new(cfg.clone()),
+            embed: find(&layout, "/embed")?,
+            lnf_g: find(&layout, "/lnf_g")?,
+            lnf_b: find(&layout, "/lnf_b")?,
+            total,
+            layers: Arc::new(layers),
+        })
+    }
+
+    /// Bind a parameter vector to the plan: a length check plus two Arc
+    /// clones — no allocation, safe on the per-token decode path.
+    pub fn bind(&self, flat: Arc<Vec<f32>>) -> Result<StltModel> {
+        if flat.len() != self.total {
+            bail!(
+                "flat param vector has {} elements, layout for '{}' needs {}",
+                flat.len(),
+                self.cfg.arch,
+                self.total
+            );
+        }
+        Ok(StltModel {
+            cfg: Arc::clone(&self.cfg),
+            flat,
+            layers: Arc::clone(&self.layers),
+            embed: self.embed,
+            lnf_g: self.lnf_g,
+            lnf_b: self.lnf_b,
+            mixer: MixerImpl::Recurrence,
+        })
+    }
+}
+
+impl StltModel {
+    /// Validate the config/param-vector pair and resolve all offsets.
+    pub fn new(cfg: &ModelConfig, flat: Arc<Vec<f32>>) -> Result<StltModel> {
+        StltPlan::new(cfg)?.bind(flat)
+    }
+
+    /// Zero streaming carry: (L [n_layers*S*2], U [n_layers*S*d*2]).
+    pub fn zero_carry(&self) -> (Vec<f32>, Vec<f32>) {
+        let (ly, s, d) = (self.cfg.n_layers, self.cfg.s_max, self.cfg.d_model);
+        (vec![0.0; ly * s * 2], vec![0.0; ly * s * d * 2])
+    }
+
+    fn node_params(&self, lo: &LayerOffsets) -> NodeParams {
+        let s = self.cfg.s_max;
+        let f = &self.flat[..];
+        let t = softplus(f[lo.t_raw]) + 1.0;
+        let gamma = (-1.0 / (8.0 * t)).exp();
+        let mut lam_re = Vec::with_capacity(s);
+        let mut lam_im = Vec::with_capacity(s);
+        for k in 0..s {
+            let sigma = softplus(f[lo.sigma_raw + k]) + self.cfg.sigma_min;
+            let decay = (-(sigma + 1.0 / t)).exp();
+            let theta = if self.cfg.omega_zero { 0.0 } else { f[lo.omega + k] };
+            lam_re.push(decay * theta.cos());
+            lam_im.push(-decay * theta.sin());
+        }
+        NodeParams { lam_re, lam_im, gamma }
+    }
+
+    /// Adaptive node mask m [S] from mean-pooled pre-mixer activations
+    /// (deterministic inference alpha, SS3.6). All-ones when not adaptive.
+    fn gate(&self, lo: &LayerOffsets, h: &[f32], n: usize) -> Vec<f32> {
+        let (s, d) = (self.cfg.s_max, self.cfg.d_model);
+        if !self.cfg.adaptive {
+            return vec![1.0; s];
+        }
+        let (wa, ba) = match (lo.w_alpha, lo.b_alpha) {
+            (Some(w), Some(b)) => (w, b),
+            _ => return vec![1.0; s],
+        };
+        let f = &self.flat[..];
+        let mut pooled = vec![0.0f32; d];
+        for row in h.chunks_exact(d) {
+            for (p, &x) in pooled.iter_mut().zip(row) {
+                *p += x;
+            }
+        }
+        let inv_n = 1.0 / n as f32;
+        for p in pooled.iter_mut() {
+            *p *= inv_n;
+        }
+        (0..s)
+            .map(|k| {
+                let mut logit = f[ba + k];
+                for (i, p) in pooled.iter().enumerate() {
+                    logit += p * f[wa + i * s + k];
+                }
+                sigmoid(logit)
+            })
+            .collect()
+    }
+
+    /// One mixer chunk: h [n*d] (LayerNormed input) -> z [n*d], advancing
+    /// the layer carry (l [S*2], u [S*d*2]) in place. Returns (z, s_eff).
+    fn mixer_chunk(
+        &self,
+        lo: &LayerOffsets,
+        h: &[f32],
+        n: usize,
+        l: &mut [f32],
+        u: &mut [f32],
+    ) -> (Vec<f32>, f32) {
+        let (s, d) = (self.cfg.s_max, self.cfg.d_model);
+        let flat = &self.flat[..];
+        let np = self.node_params(lo);
+        let m = self.gate(lo, h, n);
+        let s_eff: f32 = m.iter().sum();
+
+        // projections: fproj [n*s] gated, v [n*d]
+        let mut fproj = vec![0.0f32; n * s];
+        let mut v = vec![0.0f32; n * d];
+        for t in 0..n {
+            let hr = &h[t * d..(t + 1) * d];
+            let fo = &mut fproj[t * s..(t + 1) * s];
+            for (i, &hx) in hr.iter().enumerate() {
+                if hx == 0.0 {
+                    continue;
+                }
+                let wrow = &flat[lo.w_f + i * s..lo.w_f + (i + 1) * s];
+                for (k, &w) in wrow.iter().enumerate() {
+                    fo[k] += hx * w;
+                }
+            }
+            for (k, fk) in fo.iter_mut().enumerate() {
+                *fk *= m[k];
+            }
+            let vo = &mut v[t * d..(t + 1) * d];
+            for (i, &hx) in hr.iter().enumerate() {
+                if hx == 0.0 {
+                    continue;
+                }
+                let wrow = &flat[lo.w_v + i * d..lo.w_v + (i + 1) * d];
+                for (e, &w) in wrow.iter().enumerate() {
+                    vo[e] += hx * w;
+                }
+            }
+        }
+
+        let zmix = match self.mixer {
+            MixerImpl::Recurrence => self.mix_recurrence(&np, &fproj, &v, n, l, u),
+            MixerImpl::ReferenceN2 => self.mix_reference_n2(&np, &fproj, &v, n, l, u),
+        };
+
+        // output projection z @ w_o
+        let mut z = vec![0.0f32; n * d];
+        for t in 0..n {
+            let zr = &zmix[t * d..(t + 1) * d];
+            let zo = &mut z[t * d..(t + 1) * d];
+            for (i, &zx) in zr.iter().enumerate() {
+                if zx == 0.0 {
+                    continue;
+                }
+                let wrow = &flat[lo.w_o + i * d..lo.w_o + (i + 1) * d];
+                for (e, &w) in wrow.iter().enumerate() {
+                    zo[e] += zx * w;
+                }
+            }
+        }
+        (z, s_eff)
+    }
+
+    /// The production O(n·S·d) path: sequential L/U recurrences.
+    fn mix_recurrence(
+        &self,
+        np: &NodeParams,
+        fproj: &[f32],
+        v: &[f32],
+        n: usize,
+        l: &mut [f32],
+        u: &mut [f32],
+    ) -> Vec<f32> {
+        let (s, d) = (self.cfg.s_max, self.cfg.d_model);
+        let inv_s = 1.0 / s as f32;
+        let mut z = vec![0.0f32; n * d];
+        for t in 0..n {
+            let fr = &fproj[t * s..(t + 1) * s];
+            let vr = &v[t * d..(t + 1) * d];
+            let zr = &mut z[t * d..(t + 1) * d];
+            for k in 0..s {
+                let (lr, li) = (l[k * 2], l[k * 2 + 1]);
+                let nlr = np.lam_re[k] * lr - np.lam_im[k] * li + fr[k];
+                let nli = np.lam_re[k] * li + np.lam_im[k] * lr;
+                l[k * 2] = nlr;
+                l[k * 2 + 1] = nli;
+                let ub = &mut u[k * d * 2..(k + 1) * d * 2];
+                for (e, &ve) in vr.iter().enumerate() {
+                    let ur = np.gamma * ub[e * 2] + nlr * ve;
+                    let ui = np.gamma * ub[e * 2 + 1] - nli * ve;
+                    ub[e * 2] = ur;
+                    ub[e * 2 + 1] = ui;
+                    zr[e] += nlr * ur - nli * ui;
+                }
+            }
+            for ze in zr.iter_mut() {
+                *ze *= inv_s;
+            }
+        }
+        z
+    }
+
+    /// Naive O(n^2·S·d) oracle: materialises L via explicit lam powers
+    /// (the relevance-matrix view) and recomputes every discounted U
+    /// prefix sum. Only valid from a zero carry; still advances the
+    /// carry to the post-chunk state so callers can cross-check both.
+    fn mix_reference_n2(
+        &self,
+        np: &NodeParams,
+        fproj: &[f32],
+        v: &[f32],
+        n: usize,
+        l: &mut [f32],
+        u: &mut [f32],
+    ) -> Vec<f32> {
+        let (s, d) = (self.cfg.s_max, self.cfg.d_model);
+        let inv_s = 1.0 / s as f32;
+        // lam^p for p in [0, n): [n][s]
+        let mut pow_re = vec![0.0f32; n.max(1) * s];
+        let mut pow_im = vec![0.0f32; n.max(1) * s];
+        for k in 0..s {
+            pow_re[k] = 1.0;
+            pow_im[k] = 0.0;
+        }
+        for p in 1..n {
+            for k in 0..s {
+                let (ar, ai) = (pow_re[(p - 1) * s + k], pow_im[(p - 1) * s + k]);
+                pow_re[p * s + k] = ar * np.lam_re[k] - ai * np.lam_im[k];
+                pow_im[p * s + k] = ar * np.lam_im[k] + ai * np.lam_re[k];
+            }
+        }
+        // L[t,k] = sum_{m<=t} f[m,k] lam^{t-m}
+        let mut l_re = vec![0.0f32; n * s];
+        let mut l_im = vec![0.0f32; n * s];
+        for t in 0..n {
+            for mm in 0..=t {
+                let p = t - mm;
+                for k in 0..s {
+                    let f = fproj[mm * s + k];
+                    l_re[t * s + k] += f * pow_re[p * s + k];
+                    l_im[t * s + k] += f * pow_im[p * s + k];
+                }
+            }
+        }
+        // z_t = Re<L_t, U_t>/S with U_t = sum_{m<=t} gamma^{t-m} conj(L_m) (x) v_m
+        let mut z = vec![0.0f32; n * d];
+        for t in 0..n {
+            for k in 0..s {
+                let (ltr, lti) = (l_re[t * s + k], l_im[t * s + k]);
+                let mut g = 1.0f32;
+                for mm in (0..=t).rev() {
+                    let (lmr, lmi) = (l_re[mm * s + k], l_im[mm * s + k]);
+                    for e in 0..d {
+                        let ve = v[mm * d + e];
+                        // ur += g*lmr*ve ; ui += -g*lmi*ve ; z += ltr*ur - lti*ui
+                        z[t * d + e] += (ltr * lmr + lti * lmi) * g * ve;
+                    }
+                    g *= np.gamma;
+                }
+            }
+            for e in 0..d {
+                z[t * d + e] *= inv_s;
+            }
+        }
+        // advance the carry to the end-of-chunk state for parity checks
+        if n > 0 {
+            for k in 0..s {
+                l[k * 2] = l_re[(n - 1) * s + k];
+                l[k * 2 + 1] = l_im[(n - 1) * s + k];
+                let ub = &mut u[k * d * 2..(k + 1) * d * 2];
+                for e in 0..d {
+                    let (mut ur, mut ui) = (0.0f32, 0.0f32);
+                    let mut g = 1.0f32;
+                    for mm in (0..n).rev() {
+                        ur += g * l_re[mm * s + k] * v[mm * d + e];
+                        ui -= g * l_im[mm * s + k] * v[mm * d + e];
+                        g *= np.gamma;
+                    }
+                    ub[e * 2] = ur;
+                    ub[e * 2 + 1] = ui;
+                }
+            }
+        }
+        z
+    }
+
+    fn layer_norm(&self, x: &[f32], g_off: usize, b_off: usize, out: &mut [f32]) {
+        let d = self.cfg.d_model;
+        let f = &self.flat[..];
+        for (row, orow) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+            let mu = row.iter().sum::<f32>() / d as f32;
+            let var = row.iter().map(|&x| (x - mu) * (x - mu)).sum::<f32>() / d as f32;
+            let inv = 1.0 / (var + 1e-5).sqrt();
+            for (i, (&x, o)) in row.iter().zip(orow.iter_mut()).enumerate() {
+                *o = (x - mu) * inv * f[g_off + i] + f[b_off + i];
+            }
+        }
+    }
+
+    fn ffn_add(&self, lo: &LayerOffsets, h: &[f32], x: &mut [f32]) {
+        let d = self.cfg.d_model;
+        let hd = d * self.cfg.ffn_mult.max(1);
+        let f = &self.flat[..];
+        let n = h.len() / d;
+        let mut hid = vec![0.0f32; hd];
+        for t in 0..n {
+            let hr = &h[t * d..(t + 1) * d];
+            hid.copy_from_slice(&f[lo.ffn_b1..lo.ffn_b1 + hd]);
+            for (i, &hx) in hr.iter().enumerate() {
+                if hx == 0.0 {
+                    continue;
+                }
+                let wrow = &f[lo.ffn_w1 + i * hd..lo.ffn_w1 + (i + 1) * hd];
+                for (j, &w) in wrow.iter().enumerate() {
+                    hid[j] += hx * w;
+                }
+            }
+            for hj in hid.iter_mut() {
+                *hj = gelu(*hj);
+            }
+            let xr = &mut x[t * d..(t + 1) * d];
+            for (e, xe) in xr.iter_mut().enumerate() {
+                *xe += f[lo.ffn_b2 + e];
+            }
+            for (j, &hj) in hid.iter().enumerate() {
+                if hj == 0.0 {
+                    continue;
+                }
+                let wrow = &f[lo.ffn_w2 + j * d..lo.ffn_w2 + (j + 1) * d];
+                for (e, &w) in wrow.iter().enumerate() {
+                    xr[e] += hj * w;
+                }
+            }
+        }
+    }
+
+    /// Run one chunk of tokens through the full trunk, advancing the
+    /// stacked carry. Returns (logits [n*vocab], mean-over-layers s_eff).
+    ///
+    /// With a zero carry and the whole sequence as one chunk this is the
+    /// `forward` / `eval` semantics; with persistent carries it is the
+    /// `stream`/`decode` semantics (gate pooled per chunk, the documented
+    /// streaming deviation of `stlt_layer.apply_stream`).
+    pub fn trunk_chunk(
+        &self,
+        l_carry: &mut [f32],
+        u_carry: &mut [f32],
+        tokens: &[i32],
+        noise_std: f32,
+        noise_rng: Option<&mut Rng>,
+    ) -> Result<(Vec<f32>, f32)> {
+        let (s, d, vcb) = (self.cfg.s_max, self.cfg.d_model, self.cfg.vocab);
+        let n = tokens.len();
+        let f = &self.flat[..];
+        if l_carry.len() != self.cfg.n_layers * s * 2
+            || u_carry.len() != self.cfg.n_layers * s * d * 2
+        {
+            bail!(
+                "carry shape mismatch: l={} u={} for {} layers S={} d={}",
+                l_carry.len(),
+                u_carry.len(),
+                self.cfg.n_layers,
+                s,
+                d
+            );
+        }
+        let scale = (d as f32).sqrt();
+        let mut x = vec![0.0f32; n * d];
+        for (t, &tok) in tokens.iter().enumerate() {
+            let tok = tok as usize;
+            if tok >= vcb {
+                bail!("token {tok} out of vocab {vcb}");
+            }
+            let er = &f[self.embed + tok * d..self.embed + (tok + 1) * d];
+            for (i, &e) in er.iter().enumerate() {
+                x[t * d + i] = e * scale;
+            }
+        }
+        if noise_std > 0.0 {
+            if let Some(rng) = noise_rng {
+                for xe in x.iter_mut() {
+                    *xe += noise_std * rng.normal() as f32;
+                }
+            }
+        }
+        let mut h = vec![0.0f32; n * d];
+        let mut s_eff_sum = 0.0f32;
+        for (li, lo) in self.layers.iter().enumerate() {
+            self.layer_norm(&x, lo.ln1_g, lo.ln1_b, &mut h);
+            let lsl = &mut l_carry[li * s * 2..(li + 1) * s * 2];
+            let usl = &mut u_carry[li * s * d * 2..(li + 1) * s * d * 2];
+            let (z, s_eff) = self.mixer_chunk(lo, &h, n, lsl, usl);
+            s_eff_sum += s_eff;
+            for (xe, ze) in x.iter_mut().zip(&z) {
+                *xe += ze;
+            }
+            self.layer_norm(&x, lo.ln2_g, lo.ln2_b, &mut h);
+            self.ffn_add(lo, &h, &mut x);
+        }
+        let mut xf = vec![0.0f32; n * d];
+        self.layer_norm(&x, self.lnf_g, self.lnf_b, &mut xf);
+        // tied head: logits = x @ embed.T
+        let mut logits = vec![0.0f32; n * vcb];
+        for t in 0..n {
+            let xr = &xf[t * d..(t + 1) * d];
+            let lr = &mut logits[t * vcb..(t + 1) * vcb];
+            for (tokv, le) in lr.iter_mut().enumerate() {
+                let er = &f[self.embed + tokv * d..self.embed + (tokv + 1) * d];
+                let mut acc = 0.0f32;
+                for (xe, ee) in xr.iter().zip(er) {
+                    acc += xe * ee;
+                }
+                *le = acc;
+            }
+        }
+        Ok((logits, s_eff_sum / self.cfg.n_layers as f32))
+    }
+
+    /// Full-sequence forward from a zero carry: logits [n*vocab].
+    pub fn forward_logits(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let (mut l, mut u) = self.zero_carry();
+        Ok(self.trunk_chunk(&mut l, &mut u, tokens, 0.0, None)?.0)
+    }
+
+    /// Next-token NLL of one row: tokens [n+1] -> (nll_sum, count, s_eff).
+    ///
+    /// `noise_std > 0` adds Gaussian embedding noise from the given seed
+    /// (the SS4.7 robustness knob). The native noise stream is its own
+    /// RNG — statistically, not bitwise, equivalent to the XLA backend's.
+    pub fn eval_row(&self, tokens: &[i32], noise_std: f32, seed: u64) -> Result<(f64, f64, f32)> {
+        if tokens.len() < 2 {
+            bail!("eval row needs at least 2 tokens");
+        }
+        let n = tokens.len() - 1;
+        let (mut l, mut u) = self.zero_carry();
+        let mut rng = Rng::new(seed ^ 0x51A7_E2F0);
+        let (logits, s_eff) =
+            self.trunk_chunk(&mut l, &mut u, &tokens[..n], noise_std, Some(&mut rng))?;
+        let mut nll = 0.0f64;
+        for t in 0..n {
+            nll += nll_of(&logits[t * self.cfg.vocab..(t + 1) * self.cfg.vocab], tokens[t + 1])?;
+        }
+        Ok((nll, n as f64, s_eff))
+    }
+}
+
+/// -log softmax(logits)[target], accumulated in f64 like the XLA path's
+/// f32 sum but stabler for long documents.
+pub fn nll_of(logits: &[f32], target: i32) -> Result<f64> {
+    let t = target as usize;
+    if t >= logits.len() {
+        bail!("target {t} out of vocab {}", logits.len());
+    }
+    let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut denom = 0.0f64;
+    for &x in logits {
+        denom += ((x - mx) as f64).exp();
+    }
+    Ok(denom.ln() - (logits[t] - mx) as f64)
+}
+
+/// Host-side random init mirroring `python/compile/trunk.init` shapes
+/// and magnitudes (LN gains 1, log-spaced sigma, T = t_init, mostly-on
+/// adaptive gates). Not bitwise python-equal — used for native-only
+/// smoke paths and tests when no `.init.bin` artifact exists.
+pub fn host_init(cfg: &ModelConfig, seed: u64) -> Vec<f32> {
+    let layout = trunk_layout(cfg);
+    let total = total_params(&layout);
+    let mut flat = vec![0.0f32; total];
+    let mut rng = Rng::new(seed);
+    let s = cfg.s_max;
+    let inv_softplus = |y: f32| (y.exp() - 1.0).max(1e-6).ln();
+    for leaf in &layout {
+        let out = &mut flat[leaf.offset..leaf.offset + leaf.numel()];
+        let name = leaf.path.rsplit('/').next().unwrap_or("");
+        match name {
+            "ln1_g" | "ln2_g" | "lnf_g" => out.fill(1.0),
+            "ln1_b" | "ln2_b" | "lnf_b" | "ffn_b1" | "ffn_b2" => out.fill(0.0),
+            "sigma_raw" => {
+                let (lo, hi) = (0.01f32, 2.0f32);
+                for (k, o) in out.iter_mut().enumerate() {
+                    let frac = if s > 1 { k as f32 / (s - 1) as f32 } else { 0.0 };
+                    let sig = lo * (hi / lo).powf(frac);
+                    *o = inv_softplus(sig);
+                }
+            }
+            "omega" => {
+                for o in out.iter_mut() {
+                    *o = if cfg.omega_zero { 0.0 } else { rng.f32() * 0.785 };
+                }
+            }
+            "t_raw" => out.fill(inv_softplus(cfg.t_init.max(1.5) - 1.0)),
+            "b_alpha" => out.fill(2.0),
+            _ => {
+                for o in out.iter_mut() {
+                    *o = (rng.normal() * 0.02) as f32;
+                }
+            }
+        }
+    }
+    flat
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::fft::{relevance_direct, relevance_spectral};
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            arch: "stlt".into(),
+            vocab: 17,
+            d_model: 8,
+            n_layers: 2,
+            n_ctx: 16,
+            s_max: 4,
+            batch: 2,
+            mode: "linear".into(),
+            ..ModelConfig::default()
+        }
+    }
+
+    fn model(cfg: &ModelConfig, seed: u64) -> StltModel {
+        StltModel::new(cfg, Arc::new(host_init(cfg, seed))).unwrap()
+    }
+
+    #[test]
+    fn rejects_wrong_arch_and_size() {
+        let mut cfg = tiny_cfg();
+        cfg.arch = "vanilla".into();
+        assert!(StltModel::new(&cfg, Arc::new(vec![])).is_err());
+        let cfg = tiny_cfg();
+        assert!(StltModel::new(&cfg, Arc::new(vec![0.0; 3])).is_err());
+    }
+
+    #[test]
+    fn recurrence_matches_n2_reference() {
+        // the tentpole correctness seam: O(N S d) recurrence == O(N^2)
+        // relevance-matrix oracle on full-sequence forwards
+        for seed in [1u64, 9] {
+            let cfg = tiny_cfg();
+            let mut m = model(&cfg, seed);
+            let tokens: Vec<i32> = (0..12).map(|i| (i * 5 + 3) % cfg.vocab as i32).collect();
+            let fast = m.forward_logits(&tokens).unwrap();
+            m.mixer = MixerImpl::ReferenceN2;
+            let slow = m.forward_logits(&tokens).unwrap();
+            for (a, b) in fast.iter().zip(&slow) {
+                assert!((a - b).abs() < 1e-3 * (1.0 + a.abs()), "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunking_is_invariant() {
+        let cfg = tiny_cfg();
+        let m = model(&cfg, 3);
+        let tokens: Vec<i32> = (0..15).map(|i| (i * 7 + 1) % cfg.vocab as i32).collect();
+        let whole = m.forward_logits(&tokens).unwrap();
+        let (mut l, mut u) = m.zero_carry();
+        let mut pieces = Vec::new();
+        for chunk in [5usize, 1, 6, 3] {
+            let off = pieces.len() / cfg.vocab;
+            let (lg, _) =
+                m.trunk_chunk(&mut l, &mut u, &tokens[off..off + chunk], 0.0, None).unwrap();
+            pieces.extend(lg);
+        }
+        assert_eq!(whole.len(), pieces.len());
+        for (a, b) in whole.iter().zip(&pieces) {
+            assert!((a - b).abs() < 1e-4 * (1.0 + a.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn adaptive_gate_thins_nodes() {
+        let mut cfg = tiny_cfg();
+        cfg.adaptive = true;
+        let m = model(&cfg, 5);
+        let tokens: Vec<i32> = (0..10).map(|i| i % cfg.vocab as i32).collect();
+        let (mut l, mut u) = m.zero_carry();
+        let (_, s_eff) = m.trunk_chunk(&mut l, &mut u, &tokens, 0.0, None).unwrap();
+        assert!(s_eff > 0.0 && s_eff < cfg.s_max as f32, "s_eff {s_eff}");
+    }
+
+    #[test]
+    fn eval_row_near_uniform_for_random_params() {
+        let cfg = tiny_cfg();
+        let m = model(&cfg, 11);
+        let tokens: Vec<i32> = (0..13).map(|i| (3 * i) % cfg.vocab as i32).collect();
+        let (nll, cnt, _) = m.eval_row(&tokens, 0.0, 0).unwrap();
+        let ppl = (nll / cnt).exp();
+        let v = cfg.vocab as f64;
+        assert!(ppl > 0.5 * v && ppl < 2.0 * v, "ppl {ppl} vs vocab {v}");
+    }
+
+    #[test]
+    fn noise_changes_nll_deterministically() {
+        let cfg = tiny_cfg();
+        let m = model(&cfg, 2);
+        let tokens: Vec<i32> = (0..9).map(|i| i % cfg.vocab as i32).collect();
+        let (a, _, _) = m.eval_row(&tokens, 0.5, 7).unwrap();
+        let (b, _, _) = m.eval_row(&tokens, 0.5, 7).unwrap();
+        let (c, _, _) = m.eval_row(&tokens, 0.0, 7).unwrap();
+        assert_eq!(a, b, "same seed must reproduce");
+        assert!((a - c).abs() > 1e-9, "noise should perturb the NLL");
+    }
+
+    #[test]
+    fn relevance_of_laplace_rows_matches_spectral_form() {
+        // SS3.4 cross-check, reusing util::fft: the relevance between two
+        // transform rows computed directly equals the Parseval/spectral
+        // form on the native backend's own L values.
+        let cfg = tiny_cfg();
+        let m = model(&cfg, 13);
+        let lo = &m.layers[0];
+        let np = m.node_params(lo);
+        let s = cfg.s_max;
+        let mut rng = Rng::new(4);
+        let n = 6usize;
+        let f: Vec<f32> = (0..n * s).map(|_| rng.f32() - 0.5).collect();
+        // build L rows via the recurrence
+        let mut l_rows_re = vec![0.0f32; n * s];
+        let mut l_rows_im = vec![0.0f32; n * s];
+        let (mut lr, mut li) = (vec![0.0f32; s], vec![0.0f32; s]);
+        for t in 0..n {
+            for k in 0..s {
+                let (a, b) = (lr[k], li[k]);
+                lr[k] = np.lam_re[k] * a - np.lam_im[k] * b + f[t * s + k];
+                li[k] = np.lam_re[k] * b + np.lam_im[k] * a;
+            }
+            l_rows_re[t * s..(t + 1) * s].copy_from_slice(&lr);
+            l_rows_im[t * s..(t + 1) * s].copy_from_slice(&li);
+        }
+        for a in 0..n {
+            for b in 0..n {
+                let (ar, ai) = (&l_rows_re[a * s..(a + 1) * s], &l_rows_im[a * s..(a + 1) * s]);
+                let (br, bi) = (&l_rows_re[b * s..(b + 1) * s], &l_rows_im[b * s..(b + 1) * s]);
+                let direct = relevance_direct(ar, ai, br, bi);
+                let spectral = relevance_spectral(ar, ai, br, bi);
+                assert!(
+                    (direct - spectral).abs() < 1e-3 * (1.0 + direct.abs()),
+                    "R[{a},{b}]: {direct} vs {spectral}"
+                );
+            }
+        }
+    }
+}

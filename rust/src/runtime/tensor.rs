@@ -1,8 +1,10 @@
-//! Host tensors and conversion to/from `xla::Literal`.
+//! Host tensors — the backend-agnostic data interchange type.
 //!
-//! Only the dtypes crossing the AOT boundary exist: f32 and i32. Shapes
-//! are validated against the manifest before every execution so a
-//! mismatched artifact fails loudly at the boundary, not inside XLA.
+//! Only the dtypes crossing the execution boundary exist: f32 and i32.
+//! Shapes are validated against the manifest before every execution so
+//! a mismatched artifact fails loudly at the boundary, not inside the
+//! backend. Conversion to/from `xla::Literal` lives in
+//! `runtime/backend/xla.rs` (the only module that may touch `xla::`).
 
 use anyhow::{bail, Result};
 
@@ -95,29 +97,6 @@ impl Tensor {
             Tensor::F32(d, _) => Ok(d),
             _ => bail!("tensor is not f32"),
         }
-    }
-
-    /// Convert to an xla Literal with the proper shape.
-    pub fn to_literal(&self) -> Result<xla::Literal> {
-        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
-        let lit = match self {
-            Tensor::F32(d, _) => xla::Literal::vec1(d),
-            Tensor::I32(d, _) => xla::Literal::vec1(d),
-        };
-        if dims.is_empty() {
-            // scalar: reshape to rank-0
-            Ok(lit.reshape(&[])?)
-        } else {
-            Ok(lit.reshape(&dims)?)
-        }
-    }
-
-    /// Read back from a literal, trusting the manifest-declared shape.
-    pub fn from_literal(lit: &xla::Literal, dtype: DType, shape: &[usize]) -> Result<Tensor> {
-        Ok(match dtype {
-            DType::F32 => Tensor::F32(lit.to_vec::<f32>()?, shape.to_vec()),
-            DType::I32 => Tensor::I32(lit.to_vec::<i32>()?, shape.to_vec()),
-        })
     }
 }
 

@@ -8,7 +8,11 @@ use std::collections::BTreeMap;
 pub struct Args {
     pub subcommand: Option<String>,
     pub positional: Vec<String>,
+    /// last occurrence wins (lookup via `get`/`get_or`)
     pub options: BTreeMap<String, String>,
+    /// every `--key value` occurrence in argv order (lookup via `get_all`
+    /// for repeatable options like `--set section.key=value`)
+    pub occurrences: Vec<(String, String)>,
     pub flags: Vec<String>,
 }
 
@@ -21,6 +25,7 @@ impl Args {
         while let Some(a) = it.next() {
             if let Some(rest) = a.strip_prefix("--") {
                 if let Some((k, v)) = rest.split_once('=') {
+                    out.occurrences.push((k.to_string(), v.to_string()));
                     out.options.insert(k.to_string(), v.to_string());
                 } else if flag_names.contains(&rest) {
                     out.flags.push(rest.to_string());
@@ -28,7 +33,9 @@ impl Args {
                     if v.starts_with("--") {
                         return Err(format!("option --{rest} expects a value"));
                     }
-                    out.options.insert(rest.to_string(), it.next().unwrap().clone());
+                    let val = it.next().unwrap().clone();
+                    out.occurrences.push((rest.to_string(), val.clone()));
+                    out.options.insert(rest.to_string(), val);
                 } else {
                     return Err(format!("option --{rest} expects a value"));
                 }
@@ -52,6 +59,16 @@ impl Args {
 
     pub fn get_or(&self, key: &str, default: &str) -> String {
         self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Every value given for a repeatable option, in argv order
+    /// (e.g. `--set a.x=1 --set a.y=2` -> ["a.x=1", "a.y=2"]).
+    pub fn get_all(&self, key: &str) -> Vec<String> {
+        self.occurrences
+            .iter()
+            .filter(|(k, _)| k == key)
+            .map(|(_, v)| v.clone())
+            .collect()
     }
 
     pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
@@ -114,6 +131,19 @@ mod tests {
         let a = Args::parse(&v(&["run"]), &[]).unwrap();
         assert_eq!(a.get_or("name", "d"), "d");
         assert_eq!(a.get_usize("n", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn repeated_options_accumulate() {
+        let a = Args::parse(
+            &v(&["train", "--set", "train.steps=5", "--set=data.seed=9", "--steps", "3"]),
+            &[],
+        )
+        .unwrap();
+        assert_eq!(a.get_all("set"), vec!["train.steps=5", "data.seed=9"]);
+        // last-wins map still sees the final occurrence
+        assert_eq!(a.get_or("set", ""), "data.seed=9");
+        assert!(a.get_all("nope").is_empty());
     }
 
     #[test]

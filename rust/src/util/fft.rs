@@ -166,6 +166,52 @@ mod tests {
     }
 
     #[test]
+    fn fft_wrapper_zero_pads_non_power_of_two() {
+        // the fft() wrapper pads to the next power of two; its output
+        // must equal the DFT of the explicitly zero-padded signal
+        let mut rng = Rng::new(19);
+        for len in [1usize, 3, 5, 12, 17] {
+            let re0: Vec<f32> = (0..len).map(|_| rng.f32() - 0.5).collect();
+            let im0: Vec<f32> = (0..len).map(|_| rng.f32() - 0.5).collect();
+            let (fr, fi) = fft(&re0, &im0);
+            let n = len.next_power_of_two();
+            assert_eq!(fr.len(), n, "padded length for input {len}");
+            assert_eq!(fi.len(), n);
+            for k in 0..n {
+                let (mut sr, mut si) = (0.0f64, 0.0f64);
+                for t in 0..len {
+                    // terms t >= len are zero padding
+                    let ang = -2.0 * std::f64::consts::PI * (k * t) as f64 / n as f64;
+                    let (c, s) = (ang.cos(), ang.sin());
+                    sr += re0[t] as f64 * c - im0[t] as f64 * s;
+                    si += re0[t] as f64 * s + im0[t] as f64 * c;
+                }
+                assert!((fr[k] as f64 - sr).abs() < 1e-3, "len={len} k={k}");
+                assert!((fi[k] as f64 - si).abs() < 1e-3, "len={len} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn spectral_relevance_handles_padded_lengths() {
+        // relevance_spectral goes through the zero-padding wrapper for
+        // non-power-of-two node counts; Parseval must still hold
+        let mut rng = Rng::new(23);
+        for s in [3usize, 7, 12] {
+            let a_re: Vec<f32> = (0..s).map(|_| rng.f32() - 0.5).collect();
+            let a_im: Vec<f32> = (0..s).map(|_| rng.f32() - 0.5).collect();
+            let b_re: Vec<f32> = (0..s).map(|_| rng.f32() - 0.5).collect();
+            let b_im: Vec<f32> = (0..s).map(|_| rng.f32() - 0.5).collect();
+            let direct = relevance_direct(&a_re, &a_im, &b_re, &b_im);
+            let spectral = relevance_spectral(&a_re, &a_im, &b_re, &b_im);
+            assert!(
+                (direct - spectral).abs() < 1e-3 * (1.0 + direct.abs()),
+                "S={s}: {direct} vs {spectral}"
+            );
+        }
+    }
+
+    #[test]
     #[should_panic(expected = "power of two")]
     fn non_power_of_two_panics() {
         let mut re = vec![0.0f32; 12];

@@ -1,8 +1,11 @@
 //! Integration: manifest -> PJRT compile -> execute, and the Rust-side
 //! parameter-layout mirror against python's packing.
 //!
-//! Requires `make artifacts`. Heavy sub-checks run sequentially inside
-//! one #[test] each (the PJRT handles are !Send, and the box has 1 core).
+//! Requires `make artifacts` and a build with `--features xla`; the
+//! native-backend equivalents live in tests/native_parity.rs. Heavy
+//! sub-checks run sequentially inside one #[test] each (the PJRT
+//! handles are !Send, and the box has 1 core).
+#![cfg(feature = "xla")]
 
 use stlt::interpret;
 use stlt::runtime::{

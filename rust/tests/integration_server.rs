@@ -1,13 +1,22 @@
 //! Integration: the streaming server end-to-end — concurrent sessions,
 //! batched execution correctness vs the single-session path, eviction,
-//! and generation determinism.
+//! and generation determinism. Pinned to the xla backend (requires
+//! `make artifacts` + `--features xla`); the native-backend server
+//! tests live in tests/native_parity.rs.
+#![cfg(feature = "xla")]
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 use stlt::coordinator::{BatchPolicy, Server, ServerOpts};
 use stlt::data::corpus::{Corpus, CorpusConfig};
-use stlt::runtime::{default_artifacts_dir, exec::load_init_vec, Manifest, Runtime, StreamStep};
+use stlt::runtime::{
+    default_artifacts_dir, exec::load_init_vec, BackendKind, Manifest, Runtime, StreamStep,
+};
+
+fn xla_opts() -> ServerOpts {
+    ServerOpts { backend: BackendKind::Xla, ..ServerOpts::default() }
+}
 
 fn manifest() -> Manifest {
     Manifest::load(default_artifacts_dir()).expect("run `make artifacts` first")
@@ -58,7 +67,7 @@ fn concurrent_sessions_match_single_session_reference() {
 
     // the same three documents through the batched server, concurrently
     let server = Arc::new(
-        Server::start(&m, "lm_stlt_tiny", flat.clone(), ServerOpts::default()).unwrap(),
+        Server::start(&m, "lm_stlt_tiny", flat.clone(), xla_opts()).unwrap(),
     );
     let mut handles = Vec::new();
     for s in 0..3u64 {
@@ -92,6 +101,7 @@ fn eviction_under_session_pressure() {
         queue_cap: 32,
         max_sessions: 2,
         policy: BatchPolicy::default(),
+        backend: BackendKind::Xla,
     };
     let server = Server::start(&m, "lm_stlt_tiny", flat, opts).unwrap();
     for s in 0..5u64 {
@@ -109,7 +119,7 @@ fn generation_is_deterministic_and_session_scoped() {
     let m = manifest();
     let flat = init_flat(&m);
     let vocab = m.get("lm_stlt_tiny.eval").unwrap().config.vocab;
-    let server = Server::start(&m, "lm_stlt_tiny", flat, ServerOpts::default()).unwrap();
+    let server = Server::start(&m, "lm_stlt_tiny", flat, xla_opts()).unwrap();
     let prompt = doc(vocab, 7, 100);
     let seed_tok = *prompt.last().unwrap();
 
@@ -139,7 +149,7 @@ fn stop_token_halts_generation() {
     let m = manifest();
     let flat = init_flat(&m);
     let vocab = m.get("lm_stlt_tiny.eval").unwrap().config.vocab;
-    let server = Server::start(&m, "lm_stlt_tiny", flat, ServerOpts::default()).unwrap();
+    let server = Server::start(&m, "lm_stlt_tiny", flat, xla_opts()).unwrap();
     server.feed(1, doc(vocab, 3, 80), false).unwrap();
     let free = server.generate(1, 5, 24, None).unwrap();
     server.release(1).unwrap();
@@ -162,6 +172,7 @@ fn backpressure_sheds_load_not_correctness() {
         queue_cap: 2, // tiny queue to force backpressure
         max_sessions: 8,
         policy: BatchPolicy { max_batch: 4, max_wait: std::time::Duration::from_millis(1) },
+        backend: BackendKind::Xla,
     };
     let server = Arc::new(Server::start(&m, "lm_stlt_tiny", flat, opts).unwrap());
     let mut handles = Vec::new();
@@ -185,7 +196,7 @@ fn sampling_policies_through_server() {
     let m = manifest();
     let flat = init_flat(&m);
     let vocab = m.get("lm_stlt_tiny.eval").unwrap().config.vocab;
-    let server = Server::start(&m, "lm_stlt_tiny", flat, ServerOpts::default()).unwrap();
+    let server = Server::start(&m, "lm_stlt_tiny", flat, xla_opts()).unwrap();
     let prompt = doc(vocab, 21, 80);
     let seed_tok = *prompt.last().unwrap();
     use stlt::coordinator::Sampling;
