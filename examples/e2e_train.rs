@@ -2,28 +2,37 @@
 //! parameter STLT LM for a few hundred steps on the synthetic corpus,
 //! log the loss curve, then exercise the full serving path (streaming a
 //! long document + greedy generation) with the trained weights — every
-//! layer of the stack composing: Pallas kernels inside JAX-lowered HLO,
-//! executed via PJRT from the Rust coordinator.
+//! layer of the stack composing.
+//!
+//! Backend-agnostic since the native `train_step` landed: the default
+//! build runs the whole pipeline in pure Rust (hand-derived backward +
+//! AdamW + data-parallel accumulation in `stlt::train`);
+//! `STLT_BACKEND=xla` (with `--features xla` + `make artifacts`) runs
+//! the Pallas-kernel HLO through PJRT instead.
 //!
 //! Run: cargo run --release --example e2e_train
 //! Scale: STLT_E2E_STEPS (default 300), STLT_E2E_DOC (default 8192).
 
 use anyhow::Result;
-use stlt::coordinator::{Server, TrainOpts};
+use stlt::coordinator::{Server, ServerOpts, TrainOpts};
 use stlt::data::corpus::Corpus;
 use stlt::harness;
 use stlt::metrics::perplexity;
-use stlt::runtime::{default_artifacts_dir, Manifest, Runtime};
+use stlt::runtime::{default_artifacts_dir, BackendKind, Manifest, Runtime};
 
 fn main() -> Result<()> {
     stlt::util::logging::init();
+    let backend = BackendKind::parse(
+        &std::env::var("STLT_BACKEND").unwrap_or_else(|_| "native".into()),
+    )?;
     let manifest = Manifest::load(default_artifacts_dir())?;
     let artifact = "lm_stlt_e2e";
     let steps = harness::env_u64("STLT_E2E_STEPS", 300);
     let doc_len = harness::env_u64("STLT_E2E_DOC", 8192) as usize;
     let entry = manifest.get(&format!("{artifact}.train"))?;
     println!(
-        "== e2e: {} params, d={}, {} layers, S={}, vocab={}, {} steps ==",
+        "== e2e[{}]: {} params, d={}, {} layers, S={}, vocab={}, {} steps ==",
+        backend.name(),
         entry.param_count,
         entry.config.d_model,
         entry.config.n_layers,
@@ -32,7 +41,7 @@ fn main() -> Result<()> {
         steps
     );
     let ckpt = harness::results_dir().join("ckpt/e2e.ckpt");
-    let rt = Runtime::cpu()?;
+    let rt = Runtime::new(backend)?;
     let t0 = std::time::Instant::now();
     let opts = TrainOpts {
         steps,
@@ -41,6 +50,7 @@ fn main() -> Result<()> {
         eval_batches: 2,
         seed: 0,
         checkpoint: Some(ckpt.to_string_lossy().into_owned()),
+        resume: None,
         domain: 0,
     };
     let report = stlt::coordinator::train_lm(&rt, &manifest, artifact, &opts)?;
@@ -61,7 +71,12 @@ fn main() -> Result<()> {
 
     // serving path with trained weights
     let state = stlt::coordinator::load_checkpoint(&ckpt)?;
-    let server = Server::start(&manifest, artifact, state.flat, Default::default())?;
+    let server = Server::start(
+        &manifest,
+        artifact,
+        state.flat,
+        ServerOpts { backend, ..Default::default() },
+    )?;
     let mut corpus = Corpus::new(
         harness::long_corpus_cfg(entry.config.vocab),
         31337,

@@ -45,7 +45,7 @@ fn train_s2s(
             stlt::info!("exp_mt", "{base} step {}/{steps} loss {loss:.4} ce {ce:.4}", step + 1);
         }
     }
-    stlt::coordinator::save_checkpoint(&ckpt, &state)?;
+    stlt::coordinator::save_checkpoint(&ckpt, &state, base)?;
     Ok(state)
 }
 

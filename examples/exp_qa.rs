@@ -42,7 +42,7 @@ fn train_qa_lm(
             stlt::info!("exp_qa", "{base} step {}/{steps} loss {:.4}", step + 1, m.loss);
         }
     }
-    stlt::coordinator::save_checkpoint(&ckpt, &state)?;
+    stlt::coordinator::save_checkpoint(&ckpt, &state, base)?;
     Ok(state)
 }
 

@@ -1,29 +1,39 @@
 //! Quickstart: the whole stack in one file.
 //!
-//!   1. train a tiny STLT LM for a few steps (PJRT train_step artifact),
+//!   1. train a tiny STLT LM for a few steps,
 //!   2. evaluate held-out perplexity,
 //!   3. stream a long document through the serving coordinator with the
 //!      O(S d) carry,
 //!   4. greedy-generate a continuation.
 //!
-//! Run: `make artifacts && cargo run --release --example quickstart`
+//! Runs on the default pure-Rust backend with zero external deps — the
+//! committed `artifacts/manifest.json` metadata is all it needs:
+//!
+//!   cargo run --release --example quickstart
+//!
+//! `STLT_BACKEND=xla` switches to the AOT/PJRT path (requires
+//! `--features xla` and `make artifacts`); `STLT_STEPS=N` scales.
 
 use anyhow::Result;
-use stlt::coordinator::{Server, TrainOpts};
+use stlt::coordinator::{Server, ServerOpts, TrainOpts};
 use stlt::data::corpus::{Corpus, CorpusConfig};
 use stlt::metrics::perplexity;
-use stlt::runtime::{default_artifacts_dir, Manifest, Runtime};
+use stlt::runtime::{default_artifacts_dir, BackendKind, Manifest, Runtime};
 
 fn main() -> Result<()> {
     stlt::util::logging::init();
+    let backend = BackendKind::parse(
+        &std::env::var("STLT_BACKEND").unwrap_or_else(|_| "native".into()),
+    )?;
     let manifest = Manifest::load(default_artifacts_dir())?;
     let artifact = "lm_stlt_tiny";
     let steps = stlt::harness::env_u64("STLT_STEPS", 60);
     let ckpt = stlt::harness::results_dir().join("ckpt/quickstart.ckpt");
 
-    // 1. train (LR schedule + AdamW run inside the AOT HLO)
-    let rt = Runtime::cpu()?;
-    println!("== training {artifact} for {steps} steps on the synthetic corpus ==");
+    // 1. train: native = hand-derived backward + pure-Rust AdamW
+    //    (stlt::train); xla = the optimiser graph inside the AOT HLO
+    let rt = Runtime::new(backend)?;
+    println!("== training {artifact} for {steps} steps on the {} backend ==", backend.name());
     let opts = TrainOpts {
         steps,
         log_every: 20,
@@ -39,7 +49,12 @@ fn main() -> Result<()> {
 
     // 3+4. serve: stream a 2k-token document, then generate
     let state = stlt::coordinator::load_checkpoint(&ckpt)?;
-    let server = Server::start(&manifest, artifact, state.flat, Default::default())?;
+    let server = Server::start(
+        &manifest,
+        artifact,
+        state.flat,
+        ServerOpts { backend, ..Default::default() },
+    )?;
     let vocab = manifest.get(&format!("{artifact}.eval"))?.config.vocab;
     let mut corpus = Corpus::new(CorpusConfig::default_for_vocab(vocab), 2024);
     let doc = corpus.take(2048);

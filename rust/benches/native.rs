@@ -1,15 +1,28 @@
 //! Native-backend engine bench: tokens/s of the pure-Rust STLT forward,
-//! streaming and decode paths at the "tiny" scale (runs with default
-//! features — no artifacts, no XLA).
+//! streaming, decode and train_step paths at the "tiny" scale (runs
+//! with default features — no artifacts, no XLA).
+//!
+//! STLT_BENCH_SMOKE=1 shortens every measurement window so CI can run
+//! this as a visibility smoke (perf regressions in the backward pass
+//! show up in the logged tokens/s) without burning minutes.
 
 use std::sync::Arc;
 
 use stlt::bench::bench_for;
 use stlt::runtime::artifact::ModelConfig;
 use stlt::runtime::native_stlt::{host_init, StltModel};
+use stlt::train::{batch_loss_and_grad, native_train_step};
+use stlt::util::threadpool::ThreadPool;
 
 fn main() {
-    println!("== native engine bench (no artifacts needed) ==");
+    let smoke = std::env::var("STLT_BENCH_SMOKE")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    let secs = if smoke { 0.3 } else { 3.0 };
+    println!(
+        "== native engine bench (no artifacts needed{}) ==",
+        if smoke { ", smoke mode" } else { "" }
+    );
     let cfg = ModelConfig {
         arch: "stlt".into(),
         vocab: 256,
@@ -21,24 +34,51 @@ fn main() {
         mode: "linear".into(),
         ..ModelConfig::default()
     };
-    let model = StltModel::new(&cfg, Arc::new(host_init(&cfg, 1))).unwrap();
+    let flat = host_init(&cfg, 1);
+    let model = StltModel::new(&cfg, Arc::new(flat.clone())).unwrap();
     let tokens: Vec<i32> = (0..128).map(|i| 4 + (i * 7) % 200).collect();
 
-    let r = bench_for("native/forward 128 tok (d=64 S=32 L=2)", 3.0, || {
+    let r = bench_for("native/forward 128 tok (d=64 S=32 L=2)", secs, || {
         std::hint::black_box(model.forward_logits(&tokens).unwrap());
     });
     println!("{}   ({:.0} tok/s)", r.row(), 128.0 / r.p50_s);
 
     let chunk: Vec<i32> = tokens[..64].to_vec();
     let (mut l, mut u) = model.zero_carry();
-    let r = bench_for("native/stream chunk 64 tok", 3.0, || {
+    let r = bench_for("native/stream chunk 64 tok", secs, || {
         std::hint::black_box(model.trunk_chunk(&mut l, &mut u, &chunk, 0.0, None).unwrap());
     });
     println!("{}   ({:.0} tok/s)", r.row(), 64.0 / r.p50_s);
 
     let (mut l, mut u) = model.zero_carry();
-    let r = bench_for("native/decode 1 tok", 2.0, || {
+    let r = bench_for("native/decode 1 tok", secs.min(2.0), || {
         std::hint::black_box(model.trunk_chunk(&mut l, &mut u, &tokens[..1], 0.0, None).unwrap());
     });
     println!("{}   ({:.0} tok/s)", r.row(), 1.0 / r.p50_s);
+
+    // training: gradient accumulation alone, then the full optimiser step
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let pool = ThreadPool::new(threads);
+    let (b, n1) = (cfg.batch, 33usize); // short rows keep the smoke cheap
+    let mut rng = stlt::util::rng::Rng::new(5);
+    let batch: Vec<i32> = (0..b * n1).map(|_| rng.below(cfg.vocab as u64) as i32).collect();
+    let train_tokens = (b * (n1 - 1)) as f64;
+
+    let r = bench_for("native/grad batch 8x32 tok", secs, || {
+        std::hint::black_box(batch_loss_and_grad(&model, &batch, b, n1, &pool).unwrap());
+    });
+    println!("{}   ({:.0} tok/s)", r.row(), train_tokens / r.p50_s);
+
+    let mut fl = flat.clone();
+    let mut m = vec![0.0f32; fl.len()];
+    let mut v = vec![0.0f32; fl.len()];
+    let mut step = 0i32;
+    let r = bench_for("native/train_step 8x32 tok", secs, || {
+        std::hint::black_box(
+            native_train_step(&model, &mut fl, &mut m, &mut v, step, &batch, b, n1, &pool)
+                .unwrap(),
+        );
+        step += 1;
+    });
+    println!("{}   ({:.0} tok/s)", r.row(), train_tokens / r.p50_s);
 }

@@ -16,4 +16,7 @@ pub use sampling::Sampling;
 pub use queue::BoundedQueue;
 pub use server::{FeedResult, GenResult, Server, ServerOpts};
 pub use state::{Admit, StatePool};
-pub use trainer::{eval_lm, load_checkpoint, save_checkpoint, train_lm, TrainOpts, TrainReport};
+pub use trainer::{
+    eval_lm, load_checkpoint, load_checkpoint_for, load_checkpoint_meta, save_checkpoint,
+    save_checkpoint_for_run, train_lm, CkptMeta, TrainOpts, TrainReport,
+};

@@ -1,12 +1,19 @@
 //! Training driver: owns TrainState, feeds batches from the synthetic
-//! corpus through the AOT `train_step` artifact, logs metrics, runs
+//! corpus through a `train_step` executable, logs metrics, runs
 //! periodic held-out evaluation, and checkpoints (own binary format).
 //!
-//! The LR schedule, AdamW and gradient clipping live *inside* the HLO
-//! (python/compile/optim.py), so training requires an xla-backed
-//! [`Runtime`] (`--features xla`); the driver itself is backend-agnostic
-//! and fails fast with a clear error on backends without `train_step`
-//! support.
+//! The driver is backend-agnostic: on the xla backend the LR schedule,
+//! AdamW and gradient clipping live *inside* the lowered HLO
+//! (python/compile/optim.py); on the native backend the same contract
+//! is implemented by [`crate::train`] (hand-derived backward pass +
+//! pure-Rust AdamW + data-parallel gradient accumulation), so
+//! `train_lm` runs unchanged on either.
+//!
+//! Checkpoints record the artifact name and parameter count (format
+//! v2); `load_checkpoint_for` fails fast instead of silently binding a
+//! wrong-shaped flat vector. Resuming is exact: the batch stream is
+//! fast-forwarded to the checkpoint step, so a resumed run is bitwise
+//! identical to an uninterrupted one.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -19,12 +26,15 @@ use crate::metrics::{perplexity, OnlineStats};
 use crate::runtime::{EvalStep, Manifest, Runtime, TrainState, TrainStep};
 
 pub struct TrainOpts {
+    /// target total step count (a resumed run continues up to this)
     pub steps: u64,
     pub log_every: u64,
     pub eval_every: u64,
     pub eval_batches: u64,
     pub seed: u64,
     pub checkpoint: Option<String>,
+    /// checkpoint to resume from (validated against the artifact)
+    pub resume: Option<String>,
     pub domain: u64,
 }
 
@@ -37,6 +47,7 @@ impl Default for TrainOpts {
             eval_batches: 4,
             seed: 0,
             checkpoint: None,
+            resume: None,
             domain: 0,
         }
     }
@@ -62,23 +73,49 @@ pub fn train_lm(
     artifact_base: &str,
     opts: &TrainOpts,
 ) -> Result<TrainReport> {
-    if rt.backend_kind() == crate::runtime::BackendKind::Native {
-        bail!(
-            "training executes the AOT optimiser graph and requires the \
-             xla backend (run with --backend xla on a build with \
-             --features xla)"
-        );
-    }
     let step_exec = TrainStep::new(rt, manifest, &format!("{artifact_base}.train"))?;
     let eval_exec = EvalStep::new(rt, manifest, &format!("{artifact_base}.eval"))?;
     let entry = step_exec.entry();
     let vocab = entry.config.vocab.max(8);
 
-    let mut state = TrainState::from_entry(entry)?;
+    let mut state = match &opts.resume {
+        Some(path) => {
+            let p = Path::new(path);
+            let (st, meta) = load_checkpoint_meta(p)?;
+            validate_ckpt(p, &st, &meta, artifact_base, entry.param_count)?;
+            // a resumed run replays the original batch stream; a different
+            // seed/domain would silently train on different data
+            if let Some((seed, domain)) = meta.as_ref().and_then(|m| m.train_stream) {
+                if (seed, domain) != (opts.seed, opts.domain) {
+                    bail!(
+                        "{path}: checkpoint was trained with --seed {seed} --domain \
+                         {domain}; resume with those (got --seed {} --domain {})",
+                        opts.seed,
+                        opts.domain
+                    );
+                }
+            }
+            crate::info!("train", "{artifact_base}: resumed {path} at step {}", st.step);
+            st
+        }
+        None => TrainState::init_for(entry, opts.seed)?,
+    };
+    let start = state.step.max(0) as u64;
+    if start > opts.steps {
+        bail!(
+            "{artifact_base}: checkpoint is at step {start}, beyond --steps {}",
+            opts.steps
+        );
+    }
     let mut cfg = CorpusConfig::default_for_vocab(vocab);
     cfg.domain = opts.domain;
     let mut train_data =
         LmBatcher::new(cfg.clone(), opts.seed ^ 0x7261, step_exec.batch, step_exec.n_plus_1);
+    // fast-forward the deterministic batch stream so a resumed run sees
+    // exactly the batches an uninterrupted run would
+    for _ in 0..start {
+        train_data.next_batch();
+    }
 
     let mut report = TrainReport {
         loss_curve: Vec::new(),
@@ -93,7 +130,7 @@ pub fn train_lm(
     let t0 = std::time::Instant::now();
     let tokens_per_step = (step_exec.batch * (step_exec.n_plus_1 - 1)) as f64;
 
-    for step in 0..opts.steps {
+    for step in start..opts.steps {
         let tokens = train_data.next_batch();
         let m = step_exec.run(&mut state, &tokens, (opts.seed as i32) ^ (step as i32))?;
         if !m.loss.is_finite() {
@@ -101,7 +138,7 @@ pub fn train_lm(
         }
         loss_window.push(m.loss as f64);
         s_eff_last = m.s_eff;
-        if (step + 1) % opts.log_every == 0 || step + 1 == opts.steps {
+        if (opts.log_every > 0 && (step + 1) % opts.log_every == 0) || step + 1 == opts.steps {
             crate::info!(
                 "train",
                 "{artifact_base} step {:4}/{} loss {:.4} ce {:.4} s_eff {:.1}",
@@ -121,11 +158,12 @@ pub fn train_lm(
         }
         report.steps_done = step + 1;
     }
-    report.tokens_per_s = tokens_per_step * opts.steps as f64 / t0.elapsed().as_secs_f64();
+    report.tokens_per_s =
+        tokens_per_step * (opts.steps - start) as f64 / t0.elapsed().as_secs_f64();
     report.final_ppl = eval_lm(&eval_exec, &state.flat, &cfg, opts, 0.0)?;
     report.final_s_eff = s_eff_last;
     if let Some(path) = &opts.checkpoint {
-        save_checkpoint(Path::new(path), &state)?;
+        save_checkpoint_for_run(Path::new(path), &state, artifact_base, opts.seed, opts.domain)?;
         crate::info!("train", "checkpoint -> {path}");
     }
     Ok(report)
@@ -161,12 +199,26 @@ pub fn eval_lm(
 }
 
 // ---------------------------------------------------------------------------
-// Checkpoints: magic + version + step + param_count + flat/m/v raw LE f32
+// Checkpoints: magic + version + step + param_count + artifact name +
+// optional training-stream (seed, domain) (v2), then flat/m/v raw LE
+// f32. v1 files (no metadata) still load; validation then only covers
+// the parameter count.
 // ---------------------------------------------------------------------------
 
 const CKPT_MAGIC: &[u8; 8] = b"STLTCKPT";
 
-pub fn save_checkpoint(path: &Path, state: &TrainState) -> Result<()> {
+/// Metadata recorded alongside a checkpoint (format v2).
+#[derive(Clone, Debug)]
+pub struct CkptMeta {
+    /// artifact base name the state was trained for
+    pub artifact: String,
+    /// (seed, domain) of the training data stream when the writer was
+    /// `train_lm`; resume validates these so the "bitwise identical to
+    /// an uninterrupted run" guarantee cannot be silently broken
+    pub train_stream: Option<(u64, u64)>,
+}
+
+fn write_checkpoint(path: &Path, state: &TrainState, meta: &CkptMeta) -> Result<()> {
     if let Some(parent) = path.parent() {
         if !parent.as_os_str().is_empty() {
             std::fs::create_dir_all(parent)?;
@@ -174,9 +226,19 @@ pub fn save_checkpoint(path: &Path, state: &TrainState) -> Result<()> {
     }
     let mut f = std::fs::File::create(path).with_context(|| format!("{}", path.display()))?;
     f.write_all(CKPT_MAGIC)?;
-    f.write_all(&1u32.to_le_bytes())?;
+    f.write_all(&2u32.to_le_bytes())?;
     f.write_all(&state.step.to_le_bytes())?;
     f.write_all(&(state.flat.len() as u64).to_le_bytes())?;
+    let name = meta.artifact.as_bytes();
+    f.write_all(&(name.len() as u32).to_le_bytes())?;
+    f.write_all(name)?;
+    let (has_stream, seed, domain) = match meta.train_stream {
+        Some((s, d)) => (1u8, s, d),
+        None => (0u8, 0, 0),
+    };
+    f.write_all(&[has_stream])?;
+    f.write_all(&seed.to_le_bytes())?;
+    f.write_all(&domain.to_le_bytes())?;
     for vec in [&state.flat, &state.m, &state.v] {
         let bytes: Vec<u8> = vec.iter().flat_map(|x| x.to_le_bytes()).collect();
         f.write_all(&bytes)?;
@@ -184,7 +246,34 @@ pub fn save_checkpoint(path: &Path, state: &TrainState) -> Result<()> {
     Ok(())
 }
 
-pub fn load_checkpoint(path: &Path) -> Result<TrainState> {
+/// Save a checkpoint with no training-stream metadata (generic writers:
+/// experiment harnesses, seq2seq loops). `train_lm` uses
+/// [`save_checkpoint_for_run`] so resume can be validated.
+pub fn save_checkpoint(path: &Path, state: &TrainState, artifact: &str) -> Result<()> {
+    write_checkpoint(
+        path,
+        state,
+        &CkptMeta { artifact: artifact.to_string(), train_stream: None },
+    )
+}
+
+/// Save a checkpoint recording the training-stream (seed, domain).
+pub fn save_checkpoint_for_run(
+    path: &Path,
+    state: &TrainState,
+    artifact: &str,
+    seed: u64,
+    domain: u64,
+) -> Result<()> {
+    write_checkpoint(
+        path,
+        state,
+        &CkptMeta { artifact: artifact.to_string(), train_stream: Some((seed, domain)) },
+    )
+}
+
+/// Load a checkpoint plus its recorded metadata (None for v1 files).
+pub fn load_checkpoint_meta(path: &Path) -> Result<(TrainState, Option<CkptMeta>)> {
     let mut f = std::fs::File::open(path).with_context(|| format!("{}", path.display()))?;
     let mut magic = [0u8; 8];
     f.read_exact(&mut magic)?;
@@ -194,7 +283,7 @@ pub fn load_checkpoint(path: &Path) -> Result<TrainState> {
     let mut u32b = [0u8; 4];
     f.read_exact(&mut u32b)?;
     let version = u32::from_le_bytes(u32b);
-    if version != 1 {
+    if version != 1 && version != 2 {
         bail!("unsupported checkpoint version {version}");
     }
     f.read_exact(&mut u32b)?;
@@ -202,6 +291,27 @@ pub fn load_checkpoint(path: &Path) -> Result<TrainState> {
     let mut u64b = [0u8; 8];
     f.read_exact(&mut u64b)?;
     let n = u64::from_le_bytes(u64b) as usize;
+    let meta = if version >= 2 {
+        f.read_exact(&mut u32b)?;
+        let len = u32::from_le_bytes(u32b) as usize;
+        if len > 4096 {
+            bail!("{}: corrupt checkpoint (artifact name {len} bytes)", path.display());
+        }
+        let mut name = vec![0u8; len];
+        f.read_exact(&mut name)?;
+        let artifact =
+            String::from_utf8(name).context("checkpoint artifact name not UTF-8")?;
+        let mut flag = [0u8; 1];
+        f.read_exact(&mut flag)?;
+        f.read_exact(&mut u64b)?;
+        let seed = u64::from_le_bytes(u64b);
+        f.read_exact(&mut u64b)?;
+        let domain = u64::from_le_bytes(u64b);
+        let train_stream = if flag[0] == 1 { Some((seed, domain)) } else { None };
+        Some(CkptMeta { artifact, train_stream })
+    } else {
+        None
+    };
     let mut read_vec = |n: usize| -> Result<Vec<f32>> {
         let mut buf = vec![0u8; n * 4];
         f.read_exact(&mut buf)?;
@@ -210,7 +320,52 @@ pub fn load_checkpoint(path: &Path) -> Result<TrainState> {
     let flat = read_vec(n)?;
     let m = read_vec(n)?;
     let v = read_vec(n)?;
-    Ok(TrainState { flat, m, v, step })
+    Ok((TrainState { flat, m, v, step }, meta))
+}
+
+pub fn load_checkpoint(path: &Path) -> Result<TrainState> {
+    Ok(load_checkpoint_meta(path)?.0)
+}
+
+fn validate_ckpt(
+    path: &Path,
+    state: &TrainState,
+    meta: &Option<CkptMeta>,
+    artifact: &str,
+    param_count: usize,
+) -> Result<()> {
+    if let Some(meta) = meta {
+        if meta.artifact != artifact {
+            bail!(
+                "{}: checkpoint was trained for artifact '{}', not '{artifact}' \
+                 (pass the matching --artifact, or retrain)",
+                path.display(),
+                meta.artifact
+            );
+        }
+    }
+    if state.flat.len() != param_count {
+        bail!(
+            "{}: checkpoint has {} params but artifact '{artifact}' needs {param_count} \
+             (model shape changed since this checkpoint was written?)",
+            path.display(),
+            state.flat.len()
+        );
+    }
+    Ok(())
+}
+
+/// Load a checkpoint for a specific artifact, failing with a clear
+/// error when the recorded artifact name or the parameter count does
+/// not match — instead of silently binding a wrong-shaped flat vector.
+pub fn load_checkpoint_for(
+    path: &Path,
+    artifact: &str,
+    param_count: usize,
+) -> Result<TrainState> {
+    let (state, meta) = load_checkpoint_meta(path)?;
+    validate_ckpt(path, &state, &meta, artifact, param_count)?;
+    Ok(state)
 }
 
 #[cfg(test)]
@@ -226,12 +381,62 @@ mod tests {
             step: 42,
         };
         let path = std::env::temp_dir().join("stlt_ckpt_test.bin");
-        save_checkpoint(&path, &state).unwrap();
+        save_checkpoint(&path, &state, "lm_demo").unwrap();
         let loaded = load_checkpoint(&path).unwrap();
         assert_eq!(loaded.step, 42);
         assert_eq!(loaded.flat, state.flat);
         assert_eq!(loaded.m, state.m);
         assert_eq!(loaded.v, state.v);
+        let (_, meta) = load_checkpoint_meta(&path).unwrap();
+        let meta = meta.unwrap();
+        assert_eq!(meta.artifact, "lm_demo");
+        assert_eq!(meta.train_stream, None);
+
+        save_checkpoint_for_run(&path, &state, "lm_demo", 7, 3).unwrap();
+        let (_, meta) = load_checkpoint_meta(&path).unwrap();
+        assert_eq!(meta.unwrap().train_stream, Some((7, 3)));
+    }
+
+    #[test]
+    fn checkpoint_for_rejects_mismatches() {
+        let state = TrainState {
+            flat: vec![1.0, 2.0],
+            m: vec![0.0; 2],
+            v: vec![0.0; 2],
+            step: 1,
+        };
+        let path = std::env::temp_dir().join("stlt_ckpt_mismatch.bin");
+        save_checkpoint(&path, &state, "lm_a").unwrap();
+        assert!(load_checkpoint_for(&path, "lm_a", 2).is_ok());
+        let err = format!("{:#}", load_checkpoint_for(&path, "lm_b", 2).unwrap_err());
+        assert!(err.contains("lm_a") && err.contains("lm_b"), "unhelpful: {err}");
+        let err = format!("{:#}", load_checkpoint_for(&path, "lm_a", 3).unwrap_err());
+        assert!(err.contains('3') && err.contains('2'), "unhelpful: {err}");
+    }
+
+    #[test]
+    fn loads_v1_checkpoints_without_metadata() {
+        // PR-1-era format: magic, version=1, step, n, flat/m/v — no
+        // artifact name or stream block. Pin backward compatibility.
+        let path = std::env::temp_dir().join("stlt_ckpt_v1.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"STLTCKPT");
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&7i32.to_le_bytes());
+        bytes.extend_from_slice(&2u64.to_le_bytes());
+        for v in [1.5f32, -2.0, 0.1, 0.2, 3.0, 4.0] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&path, bytes).unwrap();
+        let (st, meta) = load_checkpoint_meta(&path).unwrap();
+        assert!(meta.is_none(), "v1 files carry no metadata");
+        assert_eq!(st.step, 7);
+        assert_eq!(st.flat, vec![1.5, -2.0]);
+        assert_eq!(st.m, vec![0.1, 0.2]);
+        assert_eq!(st.v, vec![3.0, 4.0]);
+        // *_for validation on a v1 file only checks the param count
+        assert!(load_checkpoint_for(&path, "anything", 2).is_ok());
+        assert!(load_checkpoint_for(&path, "anything", 3).is_err());
     }
 
     #[test]

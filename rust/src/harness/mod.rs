@@ -38,10 +38,16 @@ pub fn train_or_load(
     steps: u64,
     seed: u64,
 ) -> Result<(TrainState, Option<coordinator::TrainReport>)> {
-    let ckpt = results_dir().join("ckpt").join(format!("{artifact_base}_s{steps}.ckpt"));
+    // the seed is part of the cache key: a cached checkpoint from a
+    // different seed must not silently masquerade as this run's result
+    let ckpt = results_dir()
+        .join("ckpt")
+        .join(format!("{artifact_base}_s{steps}_seed{seed}.ckpt"));
     if ckpt.exists() {
         crate::info!("harness", "{artifact_base}: reusing {}", ckpt.display());
-        return Ok((coordinator::load_checkpoint(&ckpt)?, None));
+        let param_count = manifest.get(&format!("{artifact_base}.train"))?.param_count;
+        let state = coordinator::load_checkpoint_for(&ckpt, artifact_base, param_count)?;
+        return Ok((state, None));
     }
     let opts = TrainOpts {
         steps,
@@ -50,6 +56,7 @@ pub fn train_or_load(
         eval_batches: 4,
         seed,
         checkpoint: Some(ckpt.to_string_lossy().into_owned()),
+        resume: None,
         domain: 0,
     };
     let report = coordinator::train_lm(rt, manifest, artifact_base, &opts)?;

@@ -6,15 +6,18 @@
 //! through a pluggable [`runtime::Backend`]:
 //!
 //! * **native** (default): STLT token mixing is an O(N·S·d) recursive
-//!   convolution with O(S·d) streaming carries, so inference needs no
-//!   XLA compiler — [`runtime::native_stlt`] runs forward, streaming,
-//!   decode and CE-eval directly in Rust from the flat parameter
-//!   vector. `stlt eval|stream|generate|inspect --backend native` work
-//!   with zero external dependencies.
+//!   convolution with O(S·d) streaming carries, so neither inference
+//!   nor training needs an XLA compiler — [`runtime::native_stlt`]
+//!   runs forward, streaming, decode and CE-eval directly in Rust from
+//!   the flat parameter vector, and [`train`] adds a hand-derived
+//!   exact backward pass, a pure-Rust AdamW (optim.py semantics) and
+//!   multi-threaded data-parallel gradient accumulation. The full
+//!   `stlt train|eval|stream|generate|inspect --backend native`
+//!   surface works with zero external dependencies.
 //! * **xla** (feature `xla`): AOT-lowered HLO artifacts (Pallas STLT
 //!   kernels + JAX models, lowered by python/compile/aot.py at build
-//!   time) executed on the PJRT CPU client. Training — whose AdamW /
-//!   LR-schedule graph lives inside the HLO — runs here.
+//!   time) executed on the PJRT CPU client, including the baseline
+//!   architectures, quadratic mode and seq2seq training.
 //!
 //! Layered on top: the training driver, the streaming long-document
 //! coordinator (router / dynamic batcher / carry state-pool /
@@ -42,4 +45,6 @@ pub mod interpret;
 pub mod metrics;
 pub mod runtime;
 pub mod tokenizer;
+#[cfg(feature = "native")]
+pub mod train;
 pub mod util;

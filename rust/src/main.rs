@@ -2,19 +2,22 @@
 //!
 //! Subcommands:
 //!   info                      list artifacts + runtime info
-//!   train   --artifact NAME --steps N [--ckpt PATH] [--set k=v ...]   (xla only)
+//!   train   --artifact NAME --steps N [--ckpt PATH] [--resume PATH] [--set k=v ...]
 //!   eval    --artifact NAME [--ckpt PATH] [--noise X]
 //!   stream  --artifact NAME [--ckpt PATH] --doc-len N   streaming PPL demo
 //!   generate --artifact NAME [--ckpt PATH] --len N
 //!   inspect --artifact NAME [--ckpt PATH]               learned-parameter dump
 //!
 //! `--backend native|xla` selects the execution substrate (default:
-//! native — pure Rust, no XLA/PJRT needed). eval/stream/generate/inspect
-//! run on either backend; train executes the AOT optimiser graph and
-//! requires `--backend xla` on a build with `--features xla`.
+//! native — pure Rust, no XLA/PJRT needed). Every subcommand including
+//! `train` runs on either backend: the native path differentiates the
+//! STLT stack by hand and runs a pure-Rust AdamW (`stlt::train`), the
+//! xla path executes the AOT optimiser graph inside the lowered HLO.
 //!
-//! When `--ckpt` is omitted, inference subcommands fall back to the
-//! artifact's python-exact `.init.bin` vector (untrained weights).
+//! Checkpoints record the artifact they were trained for; loading one
+//! against a different artifact or parameter count fails with a clear
+//! error. When `--ckpt` is omitted, inference subcommands fall back to
+//! the artifact's init vector (untrained weights).
 
 use anyhow::{anyhow, Result};
 use stlt::config::Config;
@@ -32,31 +35,50 @@ fn main() {
 
 fn usage() -> String {
     "usage: stlt <info|train|eval|stream|generate|inspect> [--backend native|xla] \
-     [--artifact NAME] [--steps N] [--ckpt PATH] [--config FILE] [--set key=value ...] \
-     [--noise X] [--len N] [--doc-len N] [--sampling greedy|temp:T|topk:K:T|topp:P:T]"
+     [--artifact NAME] [--steps N] [--ckpt PATH] [--resume PATH] [--config FILE] \
+     [--set key=value ...] [--noise X] [--len N] [--doc-len N] \
+     [--sampling greedy|temp:T|topk:K:T|topp:P:T]"
         .to_string()
 }
 
-/// Trained weights from --ckpt, else any `{artifact}.*` entry's init
-/// vector (aot.py attaches one to the train entry, but inference-only
-/// manifests are legal — search them all).
+/// Trained weights from --ckpt (validated against the artifact's name
+/// and parameter count), else any `{artifact}.*` entry's init vector.
 fn load_flat(manifest: &Manifest, artifact: &str, args: &Args) -> Result<Vec<f32>> {
-    if let Some(ckpt) = args.get("ckpt") {
-        return Ok(coordinator::load_checkpoint(std::path::Path::new(ckpt))?.flat);
-    }
     let prefix = format!("{artifact}.");
-    let entry = manifest
+    if let Some(ckpt) = args.get("ckpt") {
+        let entry = manifest
+            .entries
+            .values()
+            .find(|e| e.name.starts_with(&prefix))
+            .ok_or_else(|| anyhow!("no '{artifact}.*' entries in manifest"))?;
+        let state = coordinator::load_checkpoint_for(
+            std::path::Path::new(ckpt),
+            artifact,
+            entry.param_count,
+        )?;
+        return Ok(state.flat);
+    }
+    // no --ckpt: fall back to an init vector. aot.py attaches a
+    // python-exact .init.bin to the train entry; native-only manifests
+    // carry none, so synthesize the host init from the config instead.
+    if let Some(entry) = manifest
         .entries
         .values()
         .find(|e| e.name.starts_with(&prefix) && e.init_file.is_some())
-        .ok_or_else(|| {
-            anyhow!(
-                "{artifact}: no --ckpt given and no '{artifact}.*' manifest entry \
-                 carries an init vector"
-            )
-        })?;
-    stlt::info!("cli", "{artifact}: no --ckpt, using untrained init vector");
-    stlt::runtime::exec::load_init_vec(entry.init_file.as_ref().unwrap(), entry.param_count)
+    {
+        stlt::info!("cli", "{artifact}: no --ckpt, using untrained init vector");
+        return stlt::runtime::exec::load_init_vec(
+            entry.init_file.as_ref().unwrap(),
+            entry.param_count,
+        );
+    }
+    let entry = manifest
+        .entries
+        .values()
+        .find(|e| e.name.starts_with(&prefix))
+        .ok_or_else(|| anyhow!("no '{artifact}.*' entries in manifest"))?;
+    stlt::info!("cli", "{artifact}: no --ckpt, using untrained host init");
+    Ok(stlt::runtime::TrainState::init_for(entry, 0)?.flat)
 }
 
 fn run() -> Result<()> {
@@ -104,6 +126,7 @@ fn run() -> Result<()> {
                     .get("ckpt")
                     .map(String::from)
                     .or_else(|| cfg.get("train.checkpoint").and_then(|v| v.as_str()).map(String::from)),
+                resume: args.get("resume").map(String::from),
                 domain: args.get_u64("domain", cfg.i64_or("data.domain", 0) as u64)
                     .map_err(|e| anyhow!(e))?,
             };

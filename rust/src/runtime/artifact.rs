@@ -24,8 +24,11 @@ impl TensorSpec {
 
 /// Subset of the python ModelConfig the Rust side needs. The native
 /// backend additionally consumes the STLT numeric hyperparameters
-/// (ffn_mult, sigma_min, t_init, omega_zero); they default to the
-/// python `ModelConfig` defaults when absent from older manifests.
+/// (ffn_mult, sigma_min, t_init, omega_zero) and — since the native
+/// `train_step` landed — the optimiser/regulariser hyperparameters
+/// (lr, warmup, betas, weight_decay, grad_clip, lambda_*, learn_*);
+/// all default to the python `ModelConfig` defaults when absent from
+/// older manifests.
 #[derive(Clone, Debug)]
 pub struct ModelConfig {
     pub arch: String,
@@ -42,6 +45,21 @@ pub struct ModelConfig {
     pub sigma_min: f32,
     pub t_init: f32,
     pub omega_zero: bool,
+    // --- ablation stop-gradients (python: learn_sigma/learn_omega/learn_t)
+    pub learn_sigma: bool,
+    pub learn_omega: bool,
+    pub learn_t: bool,
+    // --- Eq. Reg penalty weights
+    pub lambda_omega: f32,
+    pub lambda_sigma: f32,
+    pub lambda_mask: f32,
+    // --- optimiser (python/compile/optim.py semantics)
+    pub lr: f32,
+    pub warmup: u64,
+    pub weight_decay: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub grad_clip: f32,
 }
 
 impl Default for ModelConfig {
@@ -56,12 +74,24 @@ impl Default for ModelConfig {
             batch: 0,
             adaptive: false,
             mode: String::new(),
-            total_steps: 0,
             // python config.py defaults
+            total_steps: 2000,
             ffn_mult: 4,
             sigma_min: 1e-3,
             t_init: 32.0,
             omega_zero: false,
+            learn_sigma: true,
+            learn_omega: true,
+            learn_t: true,
+            lambda_omega: 1e-4,
+            lambda_sigma: 1e-4,
+            lambda_mask: 1e-3,
+            lr: 3e-4,
+            warmup: 100,
+            weight_decay: 0.01,
+            beta1: 0.9,
+            beta2: 0.98,
+            grad_clip: 1.0,
         }
     }
 }
@@ -120,7 +150,9 @@ fn parse_config(j: Option<&Json>) -> ModelConfig {
         c.batch = i("batch") as usize;
         c.adaptive = b("adaptive");
         c.mode = s("mode");
-        c.total_steps = i("total_steps") as u64;
+        if let Some(ts) = j.get("total_steps").and_then(|v| v.as_i64()) {
+            c.total_steps = ts as u64;
+        }
         if let Some(fm) = j.get("ffn_mult").and_then(|v| v.as_i64()) {
             if fm > 0 {
                 c.ffn_mult = fm as usize;
@@ -134,6 +166,32 @@ fn parse_config(j: Option<&Json>) -> ModelConfig {
         }
         if let Some(oz) = j.get("omega_zero").and_then(|v| v.as_bool()) {
             c.omega_zero = oz;
+        }
+        // optional keys default to the python values, so absent keys must
+        // not clobber them (notably learn_* default to true)
+        let bopt = |k: &str, dst: &mut bool| {
+            if let Some(v) = j.get(k).and_then(|v| v.as_bool()) {
+                *dst = v;
+            }
+        };
+        bopt("learn_sigma", &mut c.learn_sigma);
+        bopt("learn_omega", &mut c.learn_omega);
+        bopt("learn_t", &mut c.learn_t);
+        let fopt = |k: &str, dst: &mut f32| {
+            if let Some(v) = j.get(k).and_then(|v| v.as_f64()) {
+                *dst = v as f32;
+            }
+        };
+        fopt("lambda_omega", &mut c.lambda_omega);
+        fopt("lambda_sigma", &mut c.lambda_sigma);
+        fopt("lambda_mask", &mut c.lambda_mask);
+        fopt("lr", &mut c.lr);
+        fopt("weight_decay", &mut c.weight_decay);
+        fopt("beta1", &mut c.beta1);
+        fopt("beta2", &mut c.beta2);
+        fopt("grad_clip", &mut c.grad_clip);
+        if let Some(w) = j.get("warmup").and_then(|v| v.as_i64()) {
+            c.warmup = w as u64;
         }
     }
     c

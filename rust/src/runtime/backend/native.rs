@@ -2,11 +2,13 @@
 //! [`crate::runtime::native_stlt`] — no XLA, no PJRT, no Python.
 //!
 //! Supported entry kinds: `eval_step`, `forward`, `stream_step`,
-//! `stream_batch_step`, `decode_step` (the full inference/serving
-//! surface). Training kinds (`train_step`, `s2s_*`) carry their
-//! optimiser inside the lowered HLO and require the `xla` feature.
+//! `stream_batch_step`, `decode_step` (the inference/serving surface)
+//! and `train_step` (the [`crate::train`] subsystem: hand-derived
+//! backward pass + pure-Rust AdamW + data-parallel gradient
+//! accumulation). Seq2seq kinds (`s2s_*`) remain xla-only.
 //!
-//! Batch rows are independent in every supported kind, so they fan out
+//! Batch rows are independent in every supported kind (training rows
+//! couple only through the final gradient mean), so they fan out
 //! across [`crate::util::threadpool::ThreadPool`].
 
 use std::sync::Arc;
@@ -58,7 +60,7 @@ impl Default for NativeBackend {
 }
 
 const SUPPORTED: &[&str] =
-    &["eval_step", "forward", "stream_step", "stream_batch_step", "decode_step"];
+    &["eval_step", "forward", "stream_step", "stream_batch_step", "decode_step", "train_step"];
 
 impl Backend for NativeBackend {
     fn platform(&self) -> String {
@@ -69,7 +71,7 @@ impl Backend for NativeBackend {
         if !SUPPORTED.contains(&entry.kind.as_str()) {
             bail!(
                 "{}: kind '{}' is not supported by the native backend \
-                 (supported: {SUPPORTED:?}; training requires --features xla)",
+                 (supported: {SUPPORTED:?}; seq2seq requires --features xla)",
                 entry.name,
                 entry.kind
             );
@@ -127,8 +129,56 @@ impl NativeExec {
             "stream_step" => self.stream_step(model, rest),
             "stream_batch_step" => self.stream_batch_step(model, rest),
             "decode_step" => self.decode_step(model, rest),
+            "train_step" => self.train_step(model, rest),
             other => bail!("{}: unsupported kind '{other}'", self.entry.name),
         }
+    }
+
+    /// (m, v, step, tokens [B,N+1], seed) with device-resident flat ->
+    /// (flat', m', v', loss, ce, s_eff) — the XLA `train_step` contract,
+    /// implemented by [`crate::train`]. The `seed` input exists for
+    /// artifact-shape parity; the native gate is deterministic (no
+    /// Gumbel-sigmoid relaxation), so it is unused.
+    fn train_step(&self, model: StltModel, rest: &[Tensor]) -> Result<Vec<Tensor>> {
+        if rest.len() != 5 {
+            bail!(
+                "{}: train_step expects 5 inputs after the device-resident \
+                 parameter vector — (m, v, step, tokens, seed); got {}",
+                self.entry.name,
+                rest.len()
+            );
+        }
+        let mut flat = model.flat_params().to_vec();
+        let mut m = rest[0].as_f32()?.to_vec();
+        let mut v = rest[1].as_f32()?.to_vec();
+        let step = rest[2].as_i32()?[0];
+        let shape = rest[3].shape().to_vec();
+        if shape.len() != 2 {
+            bail!("{}: train_step tokens must be [B, N+1], got {shape:?}", self.entry.name);
+        }
+        let (b, n1) = (shape[0], shape[1]);
+        let tokens = rest[3].as_i32()?;
+        if m.len() != flat.len() || v.len() != flat.len() {
+            bail!(
+                "{}: moment vectors ({}, {}) do not match {} params",
+                self.entry.name,
+                m.len(),
+                v.len(),
+                flat.len()
+            );
+        }
+        let metrics = crate::train::native_train_step(
+            &model, &mut flat, &mut m, &mut v, step, tokens, b, n1, &self.pool,
+        )?;
+        let p = flat.len();
+        Ok(vec![
+            Tensor::f32(flat, &[p]),
+            Tensor::f32(m, &[p]),
+            Tensor::f32(v, &[p]),
+            Tensor::scalar_f32(metrics.loss),
+            Tensor::scalar_f32(metrics.ce),
+            Tensor::scalar_f32(metrics.s_eff),
+        ])
     }
 
     /// (tokens [B,N+1], noise_std, seed) -> (nll_sum, count, s_eff).

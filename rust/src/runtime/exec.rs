@@ -66,6 +66,41 @@ impl TrainState {
             step: 0,
         })
     }
+
+    /// [`TrainState::from_entry`], falling back to the native host init
+    /// (same shapes/magnitudes as `trunk.init`, not bitwise python-equal)
+    /// for manifests that ship no `.init.bin` — the normal case for the
+    /// native backend, whose artifacts are pure metadata.
+    pub fn init_for(entry: &Entry, seed: u64) -> Result<TrainState> {
+        if entry.init_file.is_some() {
+            return TrainState::from_entry(entry);
+        }
+        #[cfg(feature = "native")]
+        if entry.config.arch == "stlt" {
+            let flat = crate::runtime::native_stlt::host_init(&entry.config, seed);
+            if flat.len() != entry.param_count {
+                anyhow::bail!(
+                    "{}: host init produced {} params, manifest says {} \
+                     (config/manifest mismatch)",
+                    entry.name,
+                    flat.len(),
+                    entry.param_count
+                );
+            }
+            return Ok(TrainState {
+                m: vec![0.0; flat.len()],
+                v: vec![0.0; flat.len()],
+                flat,
+                step: 0,
+            });
+        }
+        let _ = seed;
+        anyhow::bail!(
+            "{}: no init vector in manifest (run `make artifacts`, or use an \
+             stlt-arch entry on the native backend)",
+            entry.name
+        )
+    }
 }
 
 /// `train_step` artifact: (flat, m, v, step, tokens, seed) ->

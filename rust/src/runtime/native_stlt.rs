@@ -29,7 +29,11 @@ use crate::interpret::{total_params, trunk_layout, Leaf};
 use crate::runtime::artifact::ModelConfig;
 use crate::util::rng::Rng;
 
-fn softplus(x: f32) -> f32 {
+/// sqrt(2/pi), the tanh-GELU constant. Shared with [`crate::train`] so
+/// forward and backward can never disagree on the approximation.
+pub(crate) const GELU_C: f32 = 0.797_884_6;
+
+pub(crate) fn softplus(x: f32) -> f32 {
     if x > 20.0 {
         x
     } else {
@@ -37,14 +41,13 @@ fn softplus(x: f32) -> f32 {
     }
 }
 
-fn sigmoid(x: f32) -> f32 {
+pub(crate) fn sigmoid(x: f32) -> f32 {
     1.0 / (1.0 + (-x).exp())
 }
 
 /// tanh-approximated GELU, matching `jax.nn.gelu` (approximate=True).
-fn gelu(x: f32) -> f32 {
-    const C: f32 = 0.797_884_6; // sqrt(2/pi)
-    0.5 * x * (1.0 + (C * (x + 0.044_715 * x * x * x)).tanh())
+pub(crate) fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + (GELU_C * (x + 0.044_715 * x * x * x)).tanh())
 }
 
 /// Which mixer implementation [`StltModel::forward_logits`] uses.
@@ -60,32 +63,34 @@ pub enum MixerImpl {
 }
 
 /// Resolved offsets of one trunk layer inside the flat vector.
+/// `pub(crate)` so the hand-derived backward pass in [`crate::train`]
+/// can address the same parameter slices the forward reads.
 #[derive(Clone, Debug)]
-struct LayerOffsets {
-    ln1_g: usize,
-    ln1_b: usize,
-    ln2_g: usize,
-    ln2_b: usize,
-    ffn_w1: usize,
-    ffn_b1: usize,
-    ffn_w2: usize,
-    ffn_b2: usize,
-    w_f: usize,
-    w_v: usize,
-    w_o: usize,
-    sigma_raw: usize,
-    omega: usize,
-    t_raw: usize,
+pub(crate) struct LayerOffsets {
+    pub(crate) ln1_g: usize,
+    pub(crate) ln1_b: usize,
+    pub(crate) ln2_g: usize,
+    pub(crate) ln2_b: usize,
+    pub(crate) ffn_w1: usize,
+    pub(crate) ffn_b1: usize,
+    pub(crate) ffn_w2: usize,
+    pub(crate) ffn_b2: usize,
+    pub(crate) w_f: usize,
+    pub(crate) w_v: usize,
+    pub(crate) w_o: usize,
+    pub(crate) sigma_raw: usize,
+    pub(crate) omega: usize,
+    pub(crate) t_raw: usize,
     /// adaptive node-allocation gate (SS3.6), if cfg.adaptive
-    w_alpha: Option<usize>,
-    b_alpha: Option<usize>,
+    pub(crate) w_alpha: Option<usize>,
+    pub(crate) b_alpha: Option<usize>,
 }
 
 /// Per-layer node constants derived from the learnable parameters.
-struct NodeParams {
-    lam_re: Vec<f32>,
-    lam_im: Vec<f32>,
-    gamma: f32,
+pub(crate) struct NodeParams {
+    pub(crate) lam_re: Vec<f32>,
+    pub(crate) lam_im: Vec<f32>,
+    pub(crate) gamma: f32,
 }
 
 /// Resolved execution plan for one config: validated arch/mode plus
@@ -216,7 +221,22 @@ impl StltModel {
         (vec![0.0; ly * s * 2], vec![0.0; ly * s * d * 2])
     }
 
-    fn node_params(&self, lo: &LayerOffsets) -> NodeParams {
+    /// Per-layer parameter offsets, in layer order ([`crate::train`]).
+    pub(crate) fn layer_offsets(&self) -> &[LayerOffsets] {
+        &self.layers
+    }
+
+    /// The bound flat parameter vector ([`crate::train`]).
+    pub(crate) fn flat_params(&self) -> &[f32] {
+        &self.flat
+    }
+
+    /// (embed, lnf_g, lnf_b) offsets inside the flat vector.
+    pub(crate) fn head_offsets(&self) -> (usize, usize, usize) {
+        (self.embed, self.lnf_g, self.lnf_b)
+    }
+
+    pub(crate) fn node_params(&self, lo: &LayerOffsets) -> NodeParams {
         let s = self.cfg.s_max;
         let f = &self.flat[..];
         let t = softplus(f[lo.t_raw]) + 1.0;

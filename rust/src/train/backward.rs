@@ -1,0 +1,649 @@
+//! Hand-derived reverse-mode differentiation of the native STLT trunk.
+//!
+//! The forward ([`row_loss_and_grad`]) replays the exact semantics of
+//! [`StltModel::trunk_chunk`] on one row (full sequence, zero carry,
+//! deterministic gate) while recording a tape of activations; the
+//! backward sweep then produces the gradient of
+//!
+//!   loss_row = ce_scale · Σ_t nll_t + reg_scale · reg_row
+//!
+//! with respect to the *entire* flat parameter vector — embeddings,
+//! LayerNorms, FFN and mixer projections, the adaptive gate, and the
+//! Laplace-node parameters (sigma_raw, omega, t_raw).
+//!
+//! The interesting part is the recurrence. Per node k (lam = lam_re +
+//! j·lam_im, discount gamma, all derived from sigma/omega/T):
+//!
+//!   L_t = lam · L_{t-1} + f_t
+//!   U_t = gamma · U_{t-1} + conj(L_t) ⊗ v_t
+//!   z_t = Re⟨L_t, U_t⟩ / S
+//!
+//! Running the adjoints GL_t = ∂loss/∂L_t and GU_t = ∂loss/∂U_t
+//! *backwards* in t gives an exact O(N·S·d) gradient — the same
+//! linear-attention trick (Katharopoulos et al.) the forward exploits,
+//! transposed in time. No autograd framework is involved; correctness
+//! is pinned by finite-difference checks against an independent f64
+//! oracle in `tests/native_train.rs`.
+//!
+//! Ablation flags mirror `stlt_layer.node_params`/`regulariser`:
+//! `learn_sigma=false` (resp. omega, t) zeroes that group's gradient
+//! from both the model path and the Eq. Reg penalty.
+//!
+//! Training-vs-python deviations (documented in rust/README.md):
+//! adaptive gating uses the deterministic sigmoid alpha (no
+//! Gumbel-sigmoid noise), and the Eq. Reg mask coupling is per-row
+//! (python couples through the batch-mean gate); for non-adaptive
+//! configs both reductions are identical.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::native_stlt::{gelu, sigmoid, softplus, StltModel, GELU_C};
+
+/// d/dx of the tanh-approximated GELU (same constant as the forward).
+fn gelu_grad(x: f32) -> f32 {
+    let th = (GELU_C * (x + 0.044_715 * x * x * x)).tanh();
+    0.5 * (1.0 + th) + 0.5 * x * (1.0 - th * th) * GELU_C * (1.0 + 3.0 * 0.044_715 * x * x)
+}
+
+/// Gradient + loss terms of one row. `grad` has the full flat length.
+pub struct RowOut {
+    pub nll_sum: f64,
+    /// unscaled Eq. Reg penalty of this row (sum over layers)
+    pub reg: f32,
+    /// mean over layers of the active node count Σ_k m_k
+    pub s_eff: f32,
+    pub grad: Vec<f32>,
+}
+
+/// Activations of one layer recorded during the tape forward.
+struct LayerTape {
+    x_in: Vec<f32>,  // [n,d] residual stream entering the layer
+    mu1: Vec<f32>,   // [n] LN1 means
+    inv1: Vec<f32>,  // [n] LN1 inverse stddevs
+    h1: Vec<f32>,    // [n,d] LN1 output (mixer input)
+    pooled: Vec<f32>, // [d] mean-pooled h1 (adaptive only, else empty)
+    m: Vec<f32>,     // [S] node gate
+    fraw: Vec<f32>,  // [n,S] pre-gate feature projection h1 @ w_f
+    v: Vec<f32>,     // [n,d] value projection h1 @ w_v
+    l_all: Vec<f32>, // [n,S,2] L_t for every t
+    u_all: Vec<f32>, // [n,S,d,2] U_t for every t (the O(N·S·d) tape)
+    zmix: Vec<f32>,  // [n,d] mixed output pre-w_o
+    x_mid: Vec<f32>, // [n,d] residual stream after the mixer
+    mu2: Vec<f32>,
+    inv2: Vec<f32>,
+    h2: Vec<f32>,    // [n,d] LN2 output (FFN input)
+    hpre: Vec<f32>,  // [n,hd] FFN pre-GELU activations
+}
+
+/// LayerNorm forward recording (mu, inv) per row for the backward.
+fn ln_fwd(
+    flat: &[f32],
+    x: &[f32],
+    g_off: usize,
+    b_off: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let n = x.len() / d;
+    let mut y = vec![0.0f32; n * d];
+    let mut mus = vec![0.0f32; n];
+    let mut invs = vec![0.0f32; n];
+    for t in 0..n {
+        let row = &x[t * d..(t + 1) * d];
+        let mu = row.iter().sum::<f32>() / d as f32;
+        let var = row.iter().map(|&x| (x - mu) * (x - mu)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        mus[t] = mu;
+        invs[t] = inv;
+        let orow = &mut y[t * d..(t + 1) * d];
+        for i in 0..d {
+            orow[i] = (row[i] - mu) * inv * flat[g_off + i] + flat[b_off + i];
+        }
+    }
+    (y, mus, invs)
+}
+
+/// LayerNorm backward: returns dx; accumulates dgain/dbias into `grad`.
+fn ln_bwd(
+    flat: &[f32],
+    grad: &mut [f32],
+    dy: &[f32],
+    x: &[f32],
+    mus: &[f32],
+    invs: &[f32],
+    g_off: usize,
+    b_off: usize,
+    d: usize,
+) -> Vec<f32> {
+    let n = x.len() / d;
+    let mut dx = vec![0.0f32; n * d];
+    for t in 0..n {
+        let (mu, inv) = (mus[t], invs[t]);
+        let xr = &x[t * d..(t + 1) * d];
+        let dyr = &dy[t * d..(t + 1) * d];
+        let mut mq = 0.0f32; // mean of q = dy * gain
+        let mut mqx = 0.0f32; // mean of q * xhat
+        for i in 0..d {
+            let xhat = (xr[i] - mu) * inv;
+            let q = dyr[i] * flat[g_off + i];
+            grad[g_off + i] += dyr[i] * xhat;
+            grad[b_off + i] += dyr[i];
+            mq += q;
+            mqx += q * xhat;
+        }
+        mq /= d as f32;
+        mqx /= d as f32;
+        let dxr = &mut dx[t * d..(t + 1) * d];
+        for i in 0..d {
+            let xhat = (xr[i] - mu) * inv;
+            let q = dyr[i] * flat[g_off + i];
+            dxr[i] = (q - mq - xhat * mqx) * inv;
+        }
+    }
+    dx
+}
+
+/// out[t,j] (n x k) += x[t,i] (n x d) @ w[i,j] (d x k at w_off)
+fn matmul(flat: &[f32], x: &[f32], w_off: usize, d: usize, k: usize, out: &mut [f32]) {
+    let n = x.len() / d;
+    for t in 0..n {
+        let xr = &x[t * d..(t + 1) * d];
+        let or = &mut out[t * k..(t + 1) * k];
+        for (i, &xi) in xr.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let wrow = &flat[w_off + i * k..w_off + (i + 1) * k];
+            for (j, &w) in wrow.iter().enumerate() {
+                or[j] += xi * w;
+            }
+        }
+    }
+}
+
+/// dW[i,j] += x[t,i]ᵀ dy[t,j]; dx[t,i] += dy[t,j] W[i,j]ᵀ
+fn matmul_bwd(
+    flat: &[f32],
+    grad: &mut [f32],
+    x: &[f32],
+    dy: &[f32],
+    w_off: usize,
+    d: usize,
+    k: usize,
+    dx: &mut [f32],
+) {
+    let n = x.len() / d;
+    for t in 0..n {
+        let xr = &x[t * d..(t + 1) * d];
+        let dyr = &dy[t * k..(t + 1) * k];
+        let dxr = &mut dx[t * d..(t + 1) * d];
+        for i in 0..d {
+            let wrow = &flat[w_off + i * k..w_off + (i + 1) * k];
+            let gwrow = &mut grad[w_off + i * k..w_off + (i + 1) * k];
+            let xi = xr[i];
+            let mut acc = 0.0f32;
+            for j in 0..k {
+                acc += dyr[j] * wrow[j];
+                gwrow[j] += xi * dyr[j];
+            }
+            dxr[i] += acc;
+        }
+    }
+}
+
+/// Per-row loss + full-flat-vector gradient (see module docs).
+///
+/// `tokens` is one `[n+1]` next-token row; the loss is
+/// `ce_scale · Σ nll + reg_scale · reg_row`, so a caller accumulating a
+/// `[B, N+1]` batch passes `ce_scale = 1/(B·N)` and `reg_scale = 1/B`
+/// to reproduce `trunk.lm_loss` exactly (for non-adaptive configs).
+pub fn row_loss_and_grad(
+    model: &StltModel,
+    tokens: &[i32],
+    ce_scale: f32,
+    reg_scale: f32,
+) -> Result<RowOut> {
+    if tokens.len() < 2 {
+        bail!("training row needs at least 2 tokens");
+    }
+    let cfg = &model.cfg;
+    let (s, d, vcb) = (cfg.s_max, cfg.d_model, cfg.vocab);
+    let hd = d * cfg.ffn_mult.max(1);
+    let n = tokens.len() - 1;
+    let flat = model.flat_params();
+    let (embed_off, lnf_g, lnf_b) = model.head_offsets();
+    let scale = (d as f32).sqrt();
+
+    // ---------------- forward with tape ----------------
+    let mut x = vec![0.0f32; n * d];
+    for (t, &tok) in tokens[..n].iter().enumerate() {
+        let tok = tok as usize;
+        if tok >= vcb {
+            bail!("token {tok} out of vocab {vcb}");
+        }
+        let er = &flat[embed_off + tok * d..embed_off + (tok + 1) * d];
+        for (i, &e) in er.iter().enumerate() {
+            x[t * d + i] = e * scale;
+        }
+    }
+
+    let mut tapes: Vec<LayerTape> = Vec::with_capacity(cfg.n_layers);
+    for lo in model.layer_offsets() {
+        let (h1, mu1, inv1) = ln_fwd(flat, &x, lo.ln1_g, lo.ln1_b, d);
+
+        // gate (deterministic alpha; all-ones when not adaptive)
+        let (m, pooled) = match (cfg.adaptive, lo.w_alpha, lo.b_alpha) {
+            (true, Some(wa), Some(ba)) => {
+                let mut pooled = vec![0.0f32; d];
+                for row in h1.chunks_exact(d) {
+                    for (p, &h) in pooled.iter_mut().zip(row) {
+                        *p += h;
+                    }
+                }
+                let inv_n = 1.0 / n as f32;
+                for p in pooled.iter_mut() {
+                    *p *= inv_n;
+                }
+                let m: Vec<f32> = (0..s)
+                    .map(|k| {
+                        let mut logit = flat[ba + k];
+                        for (i, &p) in pooled.iter().enumerate() {
+                            logit += p * flat[wa + i * s + k];
+                        }
+                        sigmoid(logit)
+                    })
+                    .collect();
+                (m, pooled)
+            }
+            _ => (vec![1.0f32; s], Vec::new()),
+        };
+
+        let mut fraw = vec![0.0f32; n * s];
+        matmul(flat, &h1, lo.w_f, d, s, &mut fraw);
+        let mut v = vec![0.0f32; n * d];
+        matmul(flat, &h1, lo.w_v, d, d, &mut v);
+
+        // recurrence with full L/U tape
+        let np = model.node_params(lo);
+        let inv_s = 1.0 / s as f32;
+        let mut l_all = vec![0.0f32; n * s * 2];
+        let mut u_all = vec![0.0f32; n * s * d * 2];
+        let mut zmix = vec![0.0f32; n * d];
+        {
+            let mut l = vec![0.0f32; s * 2];
+            let mut u = vec![0.0f32; s * d * 2];
+            for t in 0..n {
+                let vr = &v[t * d..(t + 1) * d];
+                let zr = &mut zmix[t * d..(t + 1) * d];
+                for k in 0..s {
+                    let f_tk = fraw[t * s + k] * m[k];
+                    let (lr, li) = (l[k * 2], l[k * 2 + 1]);
+                    let nlr = np.lam_re[k] * lr - np.lam_im[k] * li + f_tk;
+                    let nli = np.lam_re[k] * li + np.lam_im[k] * lr;
+                    l[k * 2] = nlr;
+                    l[k * 2 + 1] = nli;
+                    let ub = &mut u[k * d * 2..(k + 1) * d * 2];
+                    for (e, &ve) in vr.iter().enumerate() {
+                        let ur = np.gamma * ub[e * 2] + nlr * ve;
+                        let ui = np.gamma * ub[e * 2 + 1] - nli * ve;
+                        ub[e * 2] = ur;
+                        ub[e * 2 + 1] = ui;
+                        zr[e] += nlr * ur - nli * ui;
+                    }
+                }
+                for ze in zr.iter_mut() {
+                    *ze *= inv_s;
+                }
+                l_all[t * s * 2..(t + 1) * s * 2].copy_from_slice(&l);
+                u_all[t * s * d * 2..(t + 1) * s * d * 2].copy_from_slice(&u);
+            }
+        }
+
+        let mut x_mid = x.clone();
+        matmul(flat, &zmix, lo.w_o, d, d, &mut x_mid);
+
+        let (h2, mu2, inv2) = ln_fwd(flat, &x_mid, lo.ln2_g, lo.ln2_b, d);
+        let mut hpre = vec![0.0f32; n * hd];
+        for t in 0..n {
+            hpre[t * hd..(t + 1) * hd].copy_from_slice(&flat[lo.ffn_b1..lo.ffn_b1 + hd]);
+        }
+        matmul(flat, &h2, lo.ffn_w1, d, hd, &mut hpre);
+        let mut x_out = x_mid.clone();
+        for t in 0..n {
+            let xr = &mut x_out[t * d..(t + 1) * d];
+            for (e, xe) in xr.iter_mut().enumerate() {
+                *xe += flat[lo.ffn_b2 + e];
+            }
+            let hr = &hpre[t * hd..(t + 1) * hd];
+            for (j, &hj) in hr.iter().enumerate() {
+                let g = gelu(hj);
+                if g == 0.0 {
+                    continue;
+                }
+                let wrow = &flat[lo.ffn_w2 + j * d..lo.ffn_w2 + (j + 1) * d];
+                for (e, &w) in wrow.iter().enumerate() {
+                    xr[e] += g * w;
+                }
+            }
+        }
+
+        tapes.push(LayerTape {
+            x_in: std::mem::replace(&mut x, x_out),
+            mu1,
+            inv1,
+            h1,
+            pooled,
+            m,
+            fraw,
+            v,
+            l_all,
+            u_all,
+            zmix,
+            x_mid,
+            mu2,
+            inv2,
+            h2,
+            hpre,
+        });
+    }
+
+    let x_last = x;
+    let (xf, muf, invf) = ln_fwd(flat, &x_last, lnf_g, lnf_b, d);
+
+    // tied head + softmax CE; dlogits computed in the same pass
+    let mut nll_sum = 0.0f64;
+    let mut dlogits = vec![0.0f32; n * vcb];
+    {
+        let mut logits = vec![0.0f32; vcb];
+        for t in 0..n {
+            let xr = &xf[t * d..(t + 1) * d];
+            for (tokv, le) in logits.iter_mut().enumerate() {
+                let er = &flat[embed_off + tokv * d..embed_off + (tokv + 1) * d];
+                let mut acc = 0.0f32;
+                for (xe, ee) in xr.iter().zip(er) {
+                    acc += xe * ee;
+                }
+                *le = acc;
+            }
+            let tgt = tokens[t + 1] as usize;
+            if tgt >= vcb {
+                bail!("target {tgt} out of vocab {vcb}");
+            }
+            let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut denom = 0.0f64;
+            for &l in &logits {
+                denom += ((l - mx) as f64).exp();
+            }
+            nll_sum += denom.ln() - (logits[tgt] - mx) as f64;
+            let dl = &mut dlogits[t * vcb..(t + 1) * vcb];
+            let inv_denom = (1.0 / denom) as f32;
+            for (v0, l) in dl.iter_mut().zip(&logits) {
+                *v0 = ce_scale * ((l - mx) as f64).exp() as f32 * inv_denom;
+            }
+            dl[tgt] -= ce_scale;
+        }
+    }
+
+    // ---------------- backward sweep ----------------
+    let mut grad = vec![0.0f32; flat.len()];
+
+    // tied head: logits = xf @ embed.T
+    let mut dxf = vec![0.0f32; n * d];
+    for t in 0..n {
+        let dlr = &dlogits[t * vcb..(t + 1) * vcb];
+        let xr = &xf[t * d..(t + 1) * d];
+        let dxr = &mut dxf[t * d..(t + 1) * d];
+        for (tokv, &dl) in dlr.iter().enumerate() {
+            if dl == 0.0 {
+                continue;
+            }
+            let er = &flat[embed_off + tokv * d..embed_off + (tokv + 1) * d];
+            let ger = &mut grad[embed_off + tokv * d..embed_off + (tokv + 1) * d];
+            for i in 0..d {
+                dxr[i] += dl * er[i];
+                ger[i] += dl * xr[i];
+            }
+        }
+    }
+    let mut dx = ln_bwd(flat, &mut grad, &dxf, &x_last, &muf, &invf, lnf_g, lnf_b, d);
+
+    let mut reg_total = 0.0f32;
+    let mut s_eff_sum = 0.0f32;
+    for (lo, tape) in model.layer_offsets().iter().zip(&tapes).rev() {
+        let np = model.node_params(lo);
+        s_eff_sum += tape.m.iter().sum::<f32>();
+
+        // --- FFN block: x_out = x_mid + gelu(h2 @ w1 + b1) @ w2 + b2
+        let mut dhpre = vec![0.0f32; n * hd];
+        for t in 0..n {
+            let dxr = &dx[t * d..(t + 1) * d];
+            let hr = &tape.hpre[t * hd..(t + 1) * hd];
+            let dhr = &mut dhpre[t * hd..(t + 1) * hd];
+            for (e, &dxe) in dxr.iter().enumerate() {
+                grad[lo.ffn_b2 + e] += dxe;
+            }
+            for j in 0..hd {
+                let wrow = &flat[lo.ffn_w2 + j * d..lo.ffn_w2 + (j + 1) * d];
+                let gwrow = &mut grad[lo.ffn_w2 + j * d..lo.ffn_w2 + (j + 1) * d];
+                let hj = gelu(hr[j]);
+                let mut acc = 0.0f32;
+                for (e, &dxe) in dxr.iter().enumerate() {
+                    acc += dxe * wrow[e];
+                    gwrow[e] += hj * dxe;
+                }
+                dhr[j] = acc * gelu_grad(hr[j]);
+            }
+            for (j, &dh) in dhr.iter().enumerate() {
+                grad[lo.ffn_b1 + j] += dh;
+            }
+        }
+        let mut dh2 = vec![0.0f32; n * d];
+        matmul_bwd(flat, &mut grad, &tape.h2, &dhpre, lo.ffn_w1, d, hd, &mut dh2);
+        let mut dx_mid = ln_bwd(
+            flat, &mut grad, &dh2, &tape.x_mid, &tape.mu2, &tape.inv2, lo.ln2_g, lo.ln2_b, d,
+        );
+        for (a, b) in dx_mid.iter_mut().zip(&dx) {
+            *a += b; // residual branch
+        }
+
+        // --- mixer block: x_mid = x_in + (zmix @ w_o)
+        let mut dzmix = vec![0.0f32; n * d];
+        matmul_bwd(flat, &mut grad, &tape.zmix, &dx_mid, lo.w_o, d, d, &mut dzmix);
+
+        // recurrence adjoints
+        let inv_s = 1.0 / s as f32;
+        let mut gl = vec![0.0f32; s * 2];
+        let mut gu = vec![0.0f32; s * d * 2];
+        let mut da = vec![0.0f32; s];
+        let mut db = vec![0.0f32; s];
+        let mut dgamma = 0.0f64;
+        let mut dfp = vec![0.0f32; n * s];
+        let mut dv = vec![0.0f32; n * d];
+        for t in (0..n).rev() {
+            let lrow = &tape.l_all[t * s * 2..(t + 1) * s * 2];
+            let urow = &tape.u_all[t * s * d * 2..(t + 1) * s * d * 2];
+            let uprev = if t > 0 {
+                Some(&tape.u_all[(t - 1) * s * d * 2..t * s * d * 2])
+            } else {
+                None
+            };
+            let lprev = if t > 0 {
+                Some(&tape.l_all[(t - 1) * s * 2..t * s * 2])
+            } else {
+                None
+            };
+            let vr = &tape.v[t * d..(t + 1) * d];
+            let dvr = &mut dv[t * d..(t + 1) * d];
+            let zg = &dzmix[t * d..(t + 1) * d];
+            for k in 0..s {
+                let (ltr, lti) = (lrow[k * 2], lrow[k * 2 + 1]);
+                let ub = &urow[k * d * 2..(k + 1) * d * 2];
+                let gub = &mut gu[k * d * 2..(k + 1) * d * 2];
+                let (mut glr, mut gli) = (gl[k * 2], gl[k * 2 + 1]);
+                let mut dg_loc = 0.0f64;
+                for e in 0..d {
+                    let g_te = zg[e] * inv_s;
+                    // z_t = Σ_k Re(L_t · U_t)/S
+                    let gur = gub[e * 2] + g_te * ltr;
+                    let gui = gub[e * 2 + 1] - g_te * lti;
+                    glr += g_te * ub[e * 2];
+                    gli -= g_te * ub[e * 2 + 1];
+                    // U_t = gamma U_{t-1} + conj(L_t) v_t
+                    if let Some(up) = uprev {
+                        dg_loc += (gur * up[k * d * 2 + e * 2]) as f64
+                            + (gui * up[k * d * 2 + e * 2 + 1]) as f64;
+                    }
+                    let ve = vr[e];
+                    dvr[e] += gur * ltr - gui * lti;
+                    glr += gur * ve;
+                    gli -= gui * ve;
+                    gub[e * 2] = np.gamma * gur;
+                    gub[e * 2 + 1] = np.gamma * gui;
+                }
+                dgamma += dg_loc;
+                // L_t = lam L_{t-1} + f_t
+                dfp[t * s + k] += glr;
+                let (lpr, lpi) = match lprev {
+                    Some(lp) => (lp[k * 2], lp[k * 2 + 1]),
+                    None => (0.0, 0.0),
+                };
+                da[k] += glr * lpr + gli * lpi;
+                db[k] += -glr * lpi + gli * lpr;
+                let (a, b) = (np.lam_re[k], np.lam_im[k]);
+                gl[k * 2] = a * glr + b * gli;
+                gl[k * 2 + 1] = -b * glr + a * gli;
+            }
+        }
+
+        // f = fraw ⊙ m
+        let mut dm = vec![0.0f32; s];
+        let mut dfraw = vec![0.0f32; n * s];
+        for t in 0..n {
+            for k in 0..s {
+                let dfp_tk = dfp[t * s + k];
+                dfraw[t * s + k] = dfp_tk * tape.m[k];
+                dm[k] += dfp_tk * tape.fraw[t * s + k];
+            }
+        }
+
+        // Eq. Reg penalty (per-row gate; identical to python for m = 1)
+        let f = flat;
+        let t_val = softplus(f[lo.t_raw]) + 1.0;
+        let sigma: Vec<f32> = (0..s)
+            .map(|k| softplus(f[lo.sigma_raw + k]) + cfg.sigma_min)
+            .collect();
+        let omega: Vec<f32> = (0..s).map(|k| f[lo.omega + k]).collect();
+        let mut reg = 0.0f32;
+        for k in 0..s {
+            reg += cfg.lambda_omega * omega[k].abs() * tape.m[k];
+            reg += cfg.lambda_mask * tape.m[k];
+            dm[k] += reg_scale * (cfg.lambda_omega * omega[k].abs() + cfg.lambda_mask);
+            if cfg.learn_omega {
+                grad[lo.omega + k] +=
+                    reg_scale * cfg.lambda_omega * abs_grad(omega[k]) * tape.m[k];
+            }
+        }
+        let mut dsigma = vec![0.0f32; s];
+        for k in 1..s {
+            let dsig = sigma[k] - sigma[k - 1];
+            reg += cfg.lambda_sigma * dsig * dsig * tape.m[k] * tape.m[k - 1];
+            dm[k] += reg_scale * cfg.lambda_sigma * dsig * dsig * tape.m[k - 1];
+            dm[k - 1] += reg_scale * cfg.lambda_sigma * dsig * dsig * tape.m[k];
+            if cfg.learn_sigma {
+                let c = reg_scale * cfg.lambda_sigma * 2.0 * dsig * tape.m[k] * tape.m[k - 1];
+                dsigma[k] += c;
+                dsigma[k - 1] -= c;
+            }
+        }
+        reg_total += reg;
+
+        // projections back to h1
+        let mut dh1 = vec![0.0f32; n * d];
+        matmul_bwd(flat, &mut grad, &tape.h1, &dfraw, lo.w_f, d, s, &mut dh1);
+        matmul_bwd(flat, &mut grad, &tape.h1, &dv, lo.w_v, d, d, &mut dh1);
+
+        // adaptive gate backward: m = sigmoid(pooled @ w_a + b_a)
+        if cfg.adaptive {
+            if let (Some(wa), Some(ba)) = (lo.w_alpha, lo.b_alpha) {
+                let mut dpooled = vec![0.0f32; d];
+                for k in 0..s {
+                    let dlogit = dm[k] * tape.m[k] * (1.0 - tape.m[k]);
+                    grad[ba + k] += dlogit;
+                    for i in 0..d {
+                        grad[wa + i * s + k] += tape.pooled[i] * dlogit;
+                        dpooled[i] += flat[wa + i * s + k] * dlogit;
+                    }
+                }
+                let inv_n = 1.0 / n as f32;
+                for t in 0..n {
+                    let dhr = &mut dh1[t * d..(t + 1) * d];
+                    for (i, &dp) in dpooled.iter().enumerate() {
+                        dhr[i] += dp * inv_n;
+                    }
+                }
+            }
+        }
+
+        // node parameters: lam = e^{-(sigma+1/T)} e^{-j omega}, gamma = e^{-1/(8T)}.
+        // With lam_re = decay·cosθ, lam_im = -decay·sinθ:
+        //   ∂loss/∂decay · decay = da·lam_re + db·lam_im
+        //   ∂decay/∂sigma = -decay,   ∂decay/∂T = decay/T²
+        //   ∂lam_re/∂θ = lam_im,      ∂lam_im/∂θ = -lam_re
+        let mut dt = dgamma as f32 * np.gamma / (8.0 * t_val * t_val);
+        for k in 0..s {
+            let dot = da[k] * np.lam_re[k] + db[k] * np.lam_im[k];
+            if cfg.learn_sigma {
+                dsigma[k] += -dot;
+            }
+            dt += dot / (t_val * t_val);
+            if cfg.learn_omega && !cfg.omega_zero {
+                grad[lo.omega + k] += da[k] * np.lam_im[k] - db[k] * np.lam_re[k];
+            }
+        }
+        if cfg.learn_sigma {
+            for k in 0..s {
+                grad[lo.sigma_raw + k] += dsigma[k] * sigmoid(f[lo.sigma_raw + k]);
+            }
+        }
+        if cfg.learn_t {
+            grad[lo.t_raw] += dt * sigmoid(f[lo.t_raw]);
+        }
+
+        // LN1 + residual into the layer input
+        let mut dx_in = ln_bwd(
+            flat, &mut grad, &dh1, &tape.x_in, &tape.mu1, &tape.inv1, lo.ln1_g, lo.ln1_b, d,
+        );
+        for (a, b) in dx_in.iter_mut().zip(&dx_mid) {
+            *a += b;
+        }
+        dx = dx_in;
+    }
+
+    // embedding input: x0 = embed[tok] * sqrt(d)
+    for (t, &tok) in tokens[..n].iter().enumerate() {
+        let tok = tok as usize;
+        let ger = &mut grad[embed_off + tok * d..embed_off + (tok + 1) * d];
+        let dxr = &dx[t * d..(t + 1) * d];
+        for (g, &dxe) in ger.iter_mut().zip(dxr) {
+            *g += dxe * scale;
+        }
+    }
+
+    Ok(RowOut {
+        nll_sum,
+        reg: reg_total,
+        s_eff: s_eff_sum / cfg.n_layers as f32,
+        grad,
+    })
+}
+
+/// d|x|/dx with the subgradient 1 at x = 0 — jax's `abs` convention, so
+/// the omega Eq. Reg gradient matches the reference (and the lowered
+/// HLO the xla backend executes) even at exactly-zero omega, the
+/// omega_zero init. Verified against jax.value_and_grad in-session.
+fn abs_grad(x: f32) -> f32 {
+    if x >= 0.0 {
+        1.0
+    } else {
+        -1.0
+    }
+}

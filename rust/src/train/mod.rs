@@ -1,0 +1,135 @@
+//! Native training subsystem: hand-derived reverse-mode gradients for
+//! the pure-Rust STLT stack ([`backward`]), a pure-Rust AdamW with the
+//! `python/compile/optim.py` warmup+cosine schedule and global-norm
+//! clipping ([`optim`]), and multi-threaded data-parallel gradient
+//! accumulation ([`batch_loss_and_grad`]).
+//!
+//! Together these make `stlt train --backend native` a first-class
+//! path: the same `train_step` contract the AOT-lowered HLO exposes —
+//! `(flat, m, v, step, tokens[B,N+1], seed) -> (flat', m', v', loss,
+//! ce, s_eff)` — is implemented by [`native_train_step`] and plugged
+//! into the [`crate::runtime::Backend`] seam by
+//! `runtime/backend/native.rs`, so `coordinator::train_lm` and the CLI
+//! drive either backend unchanged.
+//!
+//! ## Data-parallel accumulation
+//!
+//! Unlike PJRT, the native backend has no device parallelism of its
+//! own, so the batch is sharded across worker threads: each row's
+//! gradient is computed independently (rows only couple through the
+//! final mean), and the per-row gradients are summed **in row order on
+//! the calling thread**. The reduction order is therefore independent
+//! of the worker count — gradients from a 1-thread pool and an
+//! N-thread pool are bitwise identical (`tests/native_train.rs`).
+//!
+//! Memory: the backward tape stores the per-timestep U carry, i.e.
+//! O(N·S·d) floats per layer per in-flight row — the classic
+//! activation-memory cost of exact reverse mode. Rows not yet picked up
+//! by a worker hold no tape.
+
+pub mod backward;
+pub mod optim;
+
+use anyhow::{bail, Result};
+
+pub use backward::{row_loss_and_grad, RowOut};
+pub use optim::{adamw_step, AdamHp};
+
+use crate::runtime::native_stlt::StltModel;
+use crate::util::threadpool::{parallel_map, ThreadPool};
+
+/// Scalar outputs of one batch gradient / training step.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchMetrics {
+    /// ce + mean-over-rows Eq. Reg penalty (the quantity differentiated)
+    pub loss: f32,
+    /// next-token cross-entropy, mean over B·N positions
+    pub ce: f32,
+    /// mean active node count (Σ_k m_k averaged over layers and rows)
+    pub s_eff: f32,
+    /// pre-clip global gradient norm (0 until the optimiser runs)
+    pub grad_norm: f32,
+}
+
+/// Gradient of the batch loss `mean_B·N nll + mean_B reg` for a flat
+/// `[batch, n_plus_1]` token array, data-parallel over rows.
+///
+/// Row gradients are computed on `pool` workers and reduced in row
+/// order on the calling thread, so the result is bitwise independent
+/// of the pool size.
+pub fn batch_loss_and_grad(
+    model: &StltModel,
+    tokens: &[i32],
+    batch: usize,
+    n_plus_1: usize,
+    pool: &ThreadPool,
+) -> Result<(Vec<f32>, BatchMetrics)> {
+    if batch == 0 || n_plus_1 < 2 || tokens.len() != batch * n_plus_1 {
+        bail!(
+            "bad batch shape: {} tokens for [{batch}, {n_plus_1}]",
+            tokens.len()
+        );
+    }
+    let n = n_plus_1 - 1;
+    let ce_scale = 1.0 / (batch * n) as f32;
+    let reg_scale = 1.0 / batch as f32;
+    let model_c = model.clone();
+    let tokens_c: std::sync::Arc<Vec<i32>> = std::sync::Arc::new(tokens.to_vec());
+    let rows = parallel_map(pool, batch, move |i| {
+        row_loss_and_grad(
+            &model_c,
+            &tokens_c[i * n_plus_1..(i + 1) * n_plus_1],
+            ce_scale,
+            reg_scale,
+        )
+    });
+    let mut grad: Option<Vec<f32>> = None;
+    let (mut nll, mut reg, mut s_eff) = (0.0f64, 0.0f32, 0.0f32);
+    for r in rows {
+        let r = r?;
+        nll += r.nll_sum;
+        reg += r.reg;
+        s_eff += r.s_eff;
+        match &mut grad {
+            None => grad = Some(r.grad),
+            Some(g) => {
+                for (a, b) in g.iter_mut().zip(&r.grad) {
+                    *a += b;
+                }
+            }
+        }
+    }
+    let ce = (nll as f32) * ce_scale;
+    let metrics = BatchMetrics {
+        loss: ce + reg * reg_scale,
+        ce,
+        s_eff: s_eff * reg_scale,
+        grad_norm: 0.0,
+    };
+    Ok((grad.unwrap(), metrics))
+}
+
+/// One full native training step matching the XLA `train_step` artifact
+/// contract: gradients (data-parallel), LR schedule, global-norm clip,
+/// AdamW — all from `python/compile/{train,optim}.py` semantics.
+///
+/// `flat`/`m`/`v` are updated in place; `step` is the pre-update
+/// counter (the scalar the driver feeds the artifact). Returns the step
+/// metrics; the caller increments its own step counter, exactly like
+/// the XLA path.
+pub fn native_train_step(
+    model: &StltModel,
+    flat: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    step: i32,
+    tokens: &[i32],
+    batch: usize,
+    n_plus_1: usize,
+    pool: &ThreadPool,
+) -> Result<BatchMetrics> {
+    let (mut grad, mut metrics) = batch_loss_and_grad(model, tokens, batch, n_plus_1, pool)?;
+    let hp = AdamHp::from_config(&model.cfg);
+    metrics.grad_norm = adamw_step(&hp, step, flat, m, v, &mut grad);
+    Ok(metrics)
+}

@@ -262,9 +262,9 @@ fn unsupported_kinds_and_arches_fail_cleanly() {
     let flat = host_init(&c, 1);
     let p = flat.len();
     let rt = Runtime::native().unwrap();
-    // train_step is xla-only
-    let train = entry("nat.train", "train_step", p, vec![f32s(&[p])], vec![], &[]);
-    let err = format!("{:#}", rt.run(&train, &[stlt::runtime::Tensor::f32(flat, &[p])]).unwrap_err());
+    // seq2seq training is xla-only
+    let s2s = entry("nat.s2s", "s2s_train_step", p, vec![f32s(&[p])], vec![], &[]);
+    let err = format!("{:#}", rt.run(&s2s, &[stlt::runtime::Tensor::f32(flat, &[p])]).unwrap_err());
     assert!(err.contains("native"), "unhelpful error: {err}");
     // baseline arches are xla-only
     let mut fwd = entry("van.fwd", "forward", 4, vec![f32s(&[4]), i32s(&[1, 4])], vec![], &[]);

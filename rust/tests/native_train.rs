@@ -1,0 +1,660 @@
+//! Native training subsystem integration tests.
+//!
+//! Correctness of the hand-derived backward pass is pinned by central
+//! finite differences against an *independent f64 oracle*: a from-
+//! scratch double-precision transcription of the forward loss (module
+//! [`oracle`]) that shares no code with `train/backward.rs`. The oracle
+//! is noise-free (f64), so the FD comparison isolates the analytic f32
+//! gradient's error; the 1e-3 acceptance tolerance sits ~100x above the
+//! observed f32 rounding floor.
+//!
+//! Also here: the data-parallel bitwise-reduction guarantee, a native
+//! `train_lm` smoke (NLL must decrease), bit-identical checkpoint
+//! resume, and a drift check that the committed native manifest's
+//! parameter counts match `interpret::trunk_layout`.
+#![cfg(feature = "native")]
+// index loops in the f64 oracle mirror the math on purpose
+#![allow(clippy::needless_range_loop)]
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use stlt::coordinator::{load_checkpoint_meta, TrainOpts};
+use stlt::interpret::{total_params, trunk_layout};
+use stlt::runtime::artifact::{Entry, ModelConfig, TensorSpec};
+use stlt::runtime::native_stlt::{host_init, StltModel};
+use stlt::runtime::{Manifest, Runtime, TrainState, TrainStep};
+use stlt::train::{batch_loss_and_grad, row_loss_and_grad};
+use stlt::util::rng::Rng;
+use stlt::util::threadpool::ThreadPool;
+
+/// Independent double-precision loss oracle (math transcribed from the
+/// paper/python semantics, not from backward.rs).
+mod oracle {
+    use stlt::interpret::trunk_layout;
+    use stlt::runtime::artifact::ModelConfig;
+
+    fn softplus(x: f64) -> f64 {
+        if x > 20.0 {
+            x
+        } else {
+            (1.0 + x.exp()).ln()
+        }
+    }
+
+    fn sigmoid(x: f64) -> f64 {
+        1.0 / (1.0 + (-x).exp())
+    }
+
+    fn gelu(x: f64) -> f64 {
+        const C: f64 = 0.797_884_6;
+        0.5 * x * (1.0 + (C * (x + 0.044_715 * x * x * x)).tanh())
+    }
+
+    fn ln(x: &[f64], g: &[f64], b: &[f64], d: usize) -> Vec<f64> {
+        let n = x.len() / d;
+        let mut y = vec![0.0; n * d];
+        for t in 0..n {
+            let r = &x[t * d..(t + 1) * d];
+            let mu = r.iter().sum::<f64>() / d as f64;
+            let var = r.iter().map(|&v| (v - mu) * (v - mu)).sum::<f64>() / d as f64;
+            let inv = 1.0 / (var + 1e-5).sqrt();
+            for i in 0..d {
+                y[t * d + i] = (r[i] - mu) * inv * g[i] + b[i];
+            }
+        }
+        y
+    }
+
+    /// loss = ce_scale * Σ nll + reg_scale * reg for one token row.
+    pub fn row_loss(
+        cfg: &ModelConfig,
+        flat: &[f32],
+        tokens: &[i32],
+        ce_scale: f64,
+        reg_scale: f64,
+    ) -> f64 {
+        let layout = trunk_layout(cfg);
+        let off = |p: &str| layout.iter().find(|l| l.path == p).map(|l| l.offset);
+        let take = |o: usize, n: usize| -> Vec<f64> {
+            flat[o..o + n].iter().map(|&v| v as f64).collect()
+        };
+        let (d, s, vcb) = (cfg.d_model, cfg.s_max, cfg.vocab);
+        let hd = d * cfg.ffn_mult.max(1);
+        let n = tokens.len() - 1;
+        let embed = take(off("/embed").unwrap(), vcb * d);
+        let scale = (d as f64).sqrt();
+        let mut x = vec![0.0; n * d];
+        for t in 0..n {
+            let tok = tokens[t] as usize;
+            for i in 0..d {
+                x[t * d + i] = embed[tok * d + i] * scale;
+            }
+        }
+        let mut reg_total = 0.0;
+        for li in 0..cfg.n_layers {
+            let p = format!("/layers/{li:03}");
+            let o = |k: &str| off(&format!("{p}/{k}")).unwrap();
+            let om = |k: &str| off(&format!("{p}/mixer/{k}"));
+            let h1 = ln(&x, &take(o("ln1_g"), d), &take(o("ln1_b"), d), d);
+            // gate
+            let m: Vec<f64> = match (cfg.adaptive, om("w_alpha"), om("b_alpha")) {
+                (true, Some(wa), Some(ba)) => {
+                    let mut pooled = vec![0.0; d];
+                    for t in 0..n {
+                        for i in 0..d {
+                            pooled[i] += h1[t * d + i];
+                        }
+                    }
+                    for pv in pooled.iter_mut() {
+                        *pv /= n as f64;
+                    }
+                    (0..s)
+                        .map(|k| {
+                            let mut logit = flat[ba + k] as f64;
+                            for (i, pv) in pooled.iter().enumerate() {
+                                logit += pv * flat[wa + i * s + k] as f64;
+                            }
+                            sigmoid(logit)
+                        })
+                        .collect()
+                }
+                _ => vec![1.0; s],
+            };
+            let w_f = take(om("w_f").unwrap(), d * s);
+            let w_v = take(om("w_v").unwrap(), d * d);
+            let w_o = take(om("w_o").unwrap(), d * d);
+            let t_val = softplus(flat[om("t_raw").unwrap()] as f64) + 1.0;
+            let gamma = (-1.0 / (8.0 * t_val)).exp();
+            let sigma: Vec<f64> = (0..s)
+                .map(|k| softplus(flat[om("sigma_raw").unwrap() + k] as f64) + cfg.sigma_min as f64)
+                .collect();
+            let omega: Vec<f64> = (0..s).map(|k| flat[om("omega").unwrap() + k] as f64).collect();
+            let theta: Vec<f64> = if cfg.omega_zero { vec![0.0; s] } else { omega.clone() };
+            // recurrence
+            let mut l = vec![0.0; s * 2];
+            let mut u = vec![0.0; s * d * 2];
+            let mut z = vec![0.0; n * d];
+            for t in 0..n {
+                for k in 0..s {
+                    let decay = (-(sigma[k] + 1.0 / t_val)).exp();
+                    let (a, b) = (decay * theta[k].cos(), -decay * theta[k].sin());
+                    let mut f_tk = 0.0;
+                    for i in 0..d {
+                        f_tk += h1[t * d + i] * w_f[i * s + k];
+                    }
+                    f_tk *= m[k];
+                    let (lr, li2) = (l[k * 2], l[k * 2 + 1]);
+                    let nlr = a * lr - b * li2 + f_tk;
+                    let nli = a * li2 + b * lr;
+                    l[k * 2] = nlr;
+                    l[k * 2 + 1] = nli;
+                    for e in 0..d {
+                        let mut ve = 0.0;
+                        for i in 0..d {
+                            ve += h1[t * d + i] * w_v[i * d + e];
+                        }
+                        let ur = gamma * u[(k * d + e) * 2] + nlr * ve;
+                        let ui = gamma * u[(k * d + e) * 2 + 1] - nli * ve;
+                        u[(k * d + e) * 2] = ur;
+                        u[(k * d + e) * 2 + 1] = ui;
+                        z[t * d + e] += (nlr * ur - nli * ui) / s as f64;
+                    }
+                }
+            }
+            // x += z @ w_o ; FFN block
+            let mut x_mid = x.clone();
+            for t in 0..n {
+                for e in 0..d {
+                    let mut acc = 0.0;
+                    for i in 0..d {
+                        acc += z[t * d + i] * w_o[i * d + e];
+                    }
+                    x_mid[t * d + e] += acc;
+                }
+            }
+            let h2 = ln(&x_mid, &take(o("ln2_g"), d), &take(o("ln2_b"), d), d);
+            let w1 = take(o("ffn_w1"), d * hd);
+            let b1 = take(o("ffn_b1"), hd);
+            let w2 = take(o("ffn_w2"), hd * d);
+            let b2 = take(o("ffn_b2"), d);
+            let mut x_out = x_mid.clone();
+            for t in 0..n {
+                for e in 0..d {
+                    x_out[t * d + e] += b2[e];
+                }
+                for j in 0..hd {
+                    let mut hj = b1[j];
+                    for i in 0..d {
+                        hj += h2[t * d + i] * w1[i * hd + j];
+                    }
+                    let g = gelu(hj);
+                    for e in 0..d {
+                        x_out[t * d + e] += g * w2[j * d + e];
+                    }
+                }
+            }
+            x = x_out;
+            // Eq. Reg (per-row gate)
+            for k in 0..s {
+                reg_total += cfg.lambda_omega as f64 * omega[k].abs() * m[k];
+                reg_total += cfg.lambda_mask as f64 * m[k];
+            }
+            for k in 1..s {
+                let ds = sigma[k] - sigma[k - 1];
+                reg_total += cfg.lambda_sigma as f64 * ds * ds * m[k] * m[k - 1];
+            }
+        }
+        let xf = ln(
+            &x,
+            &take(off("/lnf_g").unwrap(), d),
+            &take(off("/lnf_b").unwrap(), d),
+            d,
+        );
+        let mut nll_sum = 0.0;
+        for t in 0..n {
+            let mut logits = vec![0.0; vcb];
+            for (v, le) in logits.iter_mut().enumerate() {
+                let mut acc = 0.0;
+                for i in 0..d {
+                    acc += xf[t * d + i] * embed[v * d + i];
+                }
+                *le = acc;
+            }
+            let mx = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let denom: f64 = logits.iter().map(|&l| (l - mx).exp()).sum();
+            nll_sum += denom.ln() - (logits[tokens[t + 1] as usize] - mx);
+        }
+        ce_scale * nll_sum + reg_scale * reg_total
+    }
+}
+
+fn grad_cfg() -> ModelConfig {
+    ModelConfig {
+        arch: "stlt".into(),
+        vocab: 17,
+        d_model: 8,
+        n_layers: 2,
+        n_ctx: 16,
+        s_max: 4,
+        batch: 2,
+        adaptive: true,
+        mode: "linear".into(),
+        ffn_mult: 2,
+        t_init: 1.6,
+        lambda_omega: 1e-3,
+        lambda_sigma: 1e-3,
+        lambda_mask: 1e-3,
+        ..ModelConfig::default()
+    }
+}
+
+/// host_init moved off the tiny-weight regime so every parameter group
+/// carries a healthy gradient signal (validated: all group directional
+/// derivatives >= 2e-4 at this perturbation).
+fn perturbed_init(cfg: &ModelConfig, seed: u64) -> Vec<f32> {
+    let mut flat = host_init(cfg, seed);
+    let mut rng = Rng::new(seed ^ 0xBEEF);
+    for x in flat.iter_mut() {
+        *x += (rng.normal() * 0.25) as f32;
+    }
+    flat
+}
+
+fn fd_tokens(cfg: &ModelConfig, seed: u64, n: usize) -> Vec<i32> {
+    let mut rng = Rng::new(seed);
+    let mut toks: Vec<i32> = (0..n + 1).map(|_| rng.below(cfg.vocab as u64) as i32).collect();
+    for t in (0..toks.len()).step_by(3) {
+        toks[t] = 5; // periodic structure boosts the node-parameter grads
+    }
+    toks
+}
+
+/// Directional finite-difference check of one parameter group against
+/// the f64 oracle: best error over eps in {1e-3, 1e-4}.
+fn group_fd_rel_err(
+    cfg: &ModelConfig,
+    flat: &[f32],
+    grad: &[f32],
+    tokens: &[i32],
+    spans: &[(usize, usize)],
+    dir_seed: u64,
+    ce_scale: f64,
+    reg_scale: f64,
+) -> (f64, f64) {
+    let mut rng = Rng::new(dir_seed);
+    let total: usize = spans.iter().map(|&(_, n)| n).sum();
+    let norm = (total as f64).sqrt();
+    let mut u = vec![0.0f64; flat.len()];
+    for &(off, n) in spans {
+        for x in u[off..off + n].iter_mut() {
+            *x = if rng.below(2) == 0 { 1.0 } else { -1.0 } / norm;
+        }
+    }
+    let analytic: f64 = u.iter().zip(grad).map(|(&ui, &g)| ui * g as f64).sum();
+    let mut best = f64::INFINITY;
+    for eps in [1e-3f64, 1e-4] {
+        let shift = |sgn: f64| -> Vec<f32> {
+            flat.iter()
+                .zip(&u)
+                .map(|(&f, &ui)| (f as f64 + sgn * eps * ui) as f32)
+                .collect()
+        };
+        let lp = oracle::row_loss(cfg, &shift(1.0), tokens, ce_scale, reg_scale);
+        let lm = oracle::row_loss(cfg, &shift(-1.0), tokens, ce_scale, reg_scale);
+        let fd = (lp - lm) / (2.0 * eps);
+        let err = (fd - analytic).abs() / fd.abs().max(analytic.abs()).max(1e-6);
+        best = best.min(err);
+    }
+    (best, analytic)
+}
+
+/// Parameter groups (leaf-name -> [(offset, numel)]) of a config.
+fn param_groups(cfg: &ModelConfig) -> BTreeMap<String, Vec<(usize, usize)>> {
+    let mut groups: BTreeMap<String, Vec<(usize, usize)>> = BTreeMap::new();
+    for leaf in trunk_layout(cfg) {
+        let name = leaf.path.rsplit('/').next().unwrap().to_string();
+        groups.entry(name).or_default().push((leaf.offset, leaf.numel()));
+    }
+    groups
+}
+
+#[test]
+fn tape_forward_matches_engine_nll() {
+    // ties the training-tape forward to the inference engine
+    // (StltModel::eval_row -> trunk_chunk): a semantic edit to either
+    // forward that is not mirrored in the other fails here, so training
+    // can never silently optimise a different network than eval/serving
+    // executes. Tolerance covers fp summation-order differences only.
+    for adaptive in [false, true] {
+        let mut cfg = grad_cfg();
+        cfg.adaptive = adaptive;
+        let flat = perturbed_init(&cfg, 17);
+        let tokens = fd_tokens(&cfg, 23, 12);
+        let model = StltModel::new(&cfg, Arc::new(flat)).unwrap();
+        let out = row_loss_and_grad(&model, &tokens, 1.0, 0.0).unwrap();
+        let (nll, cnt, _) = model.eval_row(&tokens, 0.0, 0).unwrap();
+        assert_eq!(cnt, (tokens.len() - 1) as f64);
+        assert!(
+            (out.nll_sum - nll).abs() < 1e-4 * (1.0 + nll.abs()),
+            "adaptive={adaptive}: tape nll {} vs engine {nll}",
+            out.nll_sum
+        );
+    }
+}
+
+#[test]
+fn fd_gradient_checks_every_param_group() {
+    // the tentpole acceptance seam: rel-err <= 1e-3 for every parameter
+    // group, including the Laplace-node sigma_raw / omega / t_raw and
+    // the adaptive-gate w_alpha / b_alpha
+    let cfg = grad_cfg();
+    let flat = perturbed_init(&cfg, 11);
+    let tokens = fd_tokens(&cfg, 42, 12);
+    let n = tokens.len() - 1;
+    let (ce_scale, reg_scale) = (1.0 / n as f64, 1.0);
+    let model = StltModel::new(&cfg, Arc::new(flat.clone())).unwrap();
+    let out = row_loss_and_grad(&model, &tokens, ce_scale as f32, reg_scale as f32).unwrap();
+
+    // the f32 loss itself must agree with the f64 oracle
+    let loss = ce_scale * out.nll_sum + reg_scale * out.reg as f64;
+    let oracle_loss = oracle::row_loss(&cfg, &flat, &tokens, ce_scale, reg_scale);
+    assert!(
+        (loss - oracle_loss).abs() < 1e-4 * (1.0 + oracle_loss.abs()),
+        "loss {loss} vs oracle {oracle_loss}"
+    );
+
+    for (dir_seed, (name, spans)) in param_groups(&cfg).iter().enumerate() {
+        let (err, analytic) = group_fd_rel_err(
+            &cfg, &flat, &out.grad, &tokens, spans, 1000 + dir_seed as u64, ce_scale, reg_scale,
+        );
+        assert!(
+            err <= 1e-3,
+            "group '{name}': FD rel err {err:.2e} (directional derivative {analytic:.3e})"
+        );
+    }
+}
+
+#[test]
+fn fd_gradient_checks_non_adaptive_and_omega_zero() {
+    for (seed, omega_zero) in [(3u64, false), (4, true)] {
+        let mut cfg = grad_cfg();
+        cfg.adaptive = false;
+        cfg.omega_zero = omega_zero;
+        let flat = perturbed_init(&cfg, seed);
+        let tokens = fd_tokens(&cfg, seed * 7 + 1, 10);
+        let n = tokens.len() - 1;
+        let (ce_scale, reg_scale) = (1.0 / n as f64, 1.0);
+        let model = StltModel::new(&cfg, Arc::new(flat.clone())).unwrap();
+        let out = row_loss_and_grad(&model, &tokens, ce_scale as f32, reg_scale as f32).unwrap();
+        for (i, (name, spans)) in param_groups(&cfg).iter().enumerate() {
+            let (err, analytic) = group_fd_rel_err(
+                &cfg, &flat, &out.grad, &tokens, spans, 2000 + i as u64, ce_scale, reg_scale,
+            );
+            assert!(
+                err <= 1e-3,
+                "omega_zero={omega_zero} group '{name}': rel err {err:.2e} (deriv {analytic:.3e})"
+            );
+        }
+    }
+}
+
+#[test]
+fn ablation_stop_grads_zero_the_right_groups() {
+    // learn_sigma/learn_omega/learn_t = false must produce exactly-zero
+    // gradients for their groups (python stop_gradient semantics: the
+    // model AND the Eq. Reg penalty both stop)
+    for fixed in ["sigma", "omega", "t"] {
+        let mut cfg = grad_cfg();
+        cfg.adaptive = false;
+        match fixed {
+            "sigma" => cfg.learn_sigma = false,
+            "omega" => cfg.learn_omega = false,
+            _ => cfg.learn_t = false,
+        }
+        let flat = perturbed_init(&cfg, 8);
+        let tokens = fd_tokens(&cfg, 9, 8);
+        let model = StltModel::new(&cfg, Arc::new(flat.clone())).unwrap();
+        let out = row_loss_and_grad(&model, &tokens, 0.1, 1.0).unwrap();
+        let groups = param_groups(&cfg);
+        let frozen = match fixed {
+            "sigma" => "sigma_raw",
+            "omega" => "omega",
+            _ => "t_raw",
+        };
+        for &(off, n) in &groups[frozen] {
+            for i in off..off + n {
+                assert_eq!(out.grad[i], 0.0, "{fixed}: grad[{i}] not stopped");
+            }
+        }
+        // a non-frozen group must still have signal
+        assert!(
+            groups["embed"].iter().any(|&(off, n)| out.grad[off..off + n]
+                .iter()
+                .any(|&g| g != 0.0)),
+            "{fixed}: embedding grads vanished"
+        );
+    }
+}
+
+#[test]
+fn data_parallel_grads_bitwise_equal_across_pool_sizes() {
+    let mut cfg = grad_cfg();
+    cfg.adaptive = false;
+    let flat = perturbed_init(&cfg, 21);
+    let model = StltModel::new(&cfg, Arc::new(flat)).unwrap();
+    let (b, n1) = (6usize, 13usize);
+    let mut rng = Rng::new(77);
+    let tokens: Vec<i32> = (0..b * n1).map(|_| rng.below(cfg.vocab as u64) as i32).collect();
+    let pool1 = ThreadPool::new(1);
+    let pool4 = ThreadPool::new(4);
+    let (g1, m1) = batch_loss_and_grad(&model, &tokens, b, n1, &pool1).unwrap();
+    let (g4, m4) = batch_loss_and_grad(&model, &tokens, b, n1, &pool4).unwrap();
+    assert_eq!(g1, g4, "row-ordered reduction must be pool-size invariant");
+    assert_eq!(m1.loss.to_bits(), m4.loss.to_bits());
+    assert_eq!(m1.ce.to_bits(), m4.ce.to_bits());
+}
+
+// ---------------------------------------------------------------------------
+// train_lm smoke + checkpoint resume on synthesized native manifest entries
+// ---------------------------------------------------------------------------
+
+fn smoke_cfg() -> ModelConfig {
+    ModelConfig {
+        arch: "stlt".into(),
+        vocab: 32,
+        d_model: 16,
+        n_layers: 2,
+        n_ctx: 24,
+        s_max: 8,
+        batch: 4,
+        mode: "linear".into(),
+        ffn_mult: 2,
+        total_steps: 60,
+        lr: 1e-2,
+        warmup: 5,
+        ..ModelConfig::default()
+    }
+}
+
+fn f32s(shape: &[usize]) -> TensorSpec {
+    TensorSpec { dtype: stlt::runtime::DType::F32, shape: shape.to_vec() }
+}
+
+fn i32s(shape: &[usize]) -> TensorSpec {
+    TensorSpec { dtype: stlt::runtime::DType::I32, shape: shape.to_vec() }
+}
+
+fn smoke_manifest(cfg: &ModelConfig) -> Manifest {
+    let p = total_params(&trunk_layout(cfg));
+    let (b, n1) = (cfg.batch, cfg.n_ctx + 1);
+    let mk = |name: &str, kind: &str, inputs: Vec<TensorSpec>, outputs: Vec<TensorSpec>| {
+        let n_inputs = inputs.len();
+        Entry {
+            name: name.to_string(),
+            file: PathBuf::from("native-synthetic"),
+            kind: kind.to_string(),
+            param_count: p,
+            inputs,
+            outputs,
+            config: cfg.clone(),
+            extra: BTreeMap::new(),
+            init_file: None,
+            kept_inputs: (0..n_inputs).collect(),
+        }
+    };
+    let mut entries = BTreeMap::new();
+    for e in [
+        mk(
+            "smoke.train",
+            "train_step",
+            vec![f32s(&[p]), f32s(&[p]), f32s(&[p]), i32s(&[]), i32s(&[b, n1]), i32s(&[])],
+            vec![f32s(&[p]), f32s(&[p]), f32s(&[p]), f32s(&[]), f32s(&[]), f32s(&[])],
+        ),
+        mk(
+            "smoke.eval",
+            "eval_step",
+            vec![f32s(&[p]), i32s(&[b, n1]), f32s(&[]), i32s(&[])],
+            vec![f32s(&[]), f32s(&[]), f32s(&[])],
+        ),
+    ] {
+        entries.insert(e.name.clone(), e);
+    }
+    Manifest { dir: PathBuf::from("."), entries }
+}
+
+#[test]
+fn native_train_lm_smoke_nll_decreases() {
+    let cfg = smoke_cfg();
+    let manifest = smoke_manifest(&cfg);
+    let rt = Runtime::native().unwrap();
+    let opts = TrainOpts {
+        steps: 60,
+        log_every: 10,
+        eval_every: 0,
+        eval_batches: 2,
+        seed: 1,
+        checkpoint: None,
+        resume: None,
+        domain: 0,
+    };
+    let report = stlt::coordinator::train_lm(&rt, &manifest, "smoke", &opts).unwrap();
+    assert_eq!(report.steps_done, 60);
+    let first = report.loss_curve.first().unwrap().1;
+    let last = report.loss_curve.last().unwrap().1;
+    assert!(
+        last < first - 0.05,
+        "train NLL must decrease: first window {first:.4}, last {last:.4}"
+    );
+    assert!(report.final_ppl.is_finite() && report.final_ppl > 1.0);
+}
+
+#[test]
+fn checkpoint_roundtrip_resumes_bit_identically() {
+    let cfg = smoke_cfg();
+    let manifest = smoke_manifest(&cfg);
+    let dir = std::env::temp_dir().join("stlt_native_train_test");
+    let _ = std::fs::create_dir_all(&dir);
+    let full = dir.join("full.ckpt");
+    let half = dir.join("half.ckpt");
+    let resumed = dir.join("resumed.ckpt");
+
+    let run = |steps: u64, ckpt: &std::path::Path, resume: Option<&std::path::Path>| {
+        let rt = Runtime::native().unwrap();
+        let opts = TrainOpts {
+            steps,
+            log_every: 100,
+            eval_every: 0,
+            eval_batches: 1,
+            seed: 3,
+            checkpoint: Some(ckpt.to_string_lossy().into_owned()),
+            resume: resume.map(|r| r.to_string_lossy().into_owned()),
+            domain: 0,
+        };
+        stlt::coordinator::train_lm(&rt, &manifest, "smoke", &opts).unwrap();
+    };
+    run(12, &full, None);
+    run(6, &half, None);
+    run(12, &resumed, Some(&half));
+
+    let (a, meta_a) = load_checkpoint_meta(&full).unwrap();
+    let (c, meta_c) = load_checkpoint_meta(&resumed).unwrap();
+    let meta_a = meta_a.unwrap();
+    assert_eq!(meta_a.artifact, "smoke");
+    assert_eq!(meta_a.train_stream, Some((3, 0)));
+    assert_eq!(meta_c.unwrap().artifact, "smoke");
+    assert_eq!(a.step, 12);
+    assert_eq!(c.step, 12);
+    assert_eq!(a.flat, c.flat, "resumed params must be bit-identical");
+    assert_eq!(a.m, c.m, "resumed first moment must be bit-identical");
+    assert_eq!(a.v, c.v, "resumed second moment must be bit-identical");
+
+    // resuming with a different seed would train on a different batch
+    // stream — the recorded (seed, domain) must make that a hard error
+    let rt = Runtime::native().unwrap();
+    let opts = TrainOpts {
+        steps: 12,
+        eval_every: 0,
+        seed: 99,
+        resume: Some(half.to_string_lossy().into_owned()),
+        ..Default::default()
+    };
+    let err = format!(
+        "{:#}",
+        stlt::coordinator::train_lm(&rt, &manifest, "smoke", &opts).unwrap_err()
+    );
+    assert!(err.contains("--seed 3"), "unhelpful resume-mismatch error: {err}");
+}
+
+#[test]
+fn train_step_entry_runs_through_typed_runtime() {
+    // the Backend-seam contract: TrainStep::run drives the native
+    // train_step exactly like the XLA artifact
+    let cfg = smoke_cfg();
+    let manifest = smoke_manifest(&cfg);
+    let rt = Runtime::native().unwrap();
+    let step = TrainStep::new(&rt, &manifest, "smoke.train").unwrap();
+    assert_eq!(step.batch, cfg.batch);
+    assert_eq!(step.n_plus_1, cfg.n_ctx + 1);
+    let mut state = TrainState::init_for(step.entry(), 0).unwrap();
+    let before = state.flat.clone();
+    let mut rng = Rng::new(5);
+    let tokens: Vec<i32> = (0..step.batch * step.n_plus_1)
+        .map(|_| rng.below(cfg.vocab as u64) as i32)
+        .collect();
+    let m0 = step.run(&mut state, &tokens, 0).unwrap();
+    assert!(m0.loss.is_finite() && m0.ce.is_finite());
+    assert!((m0.s_eff - cfg.s_max as f32).abs() < 1e-4, "non-adaptive s_eff == S");
+    assert_eq!(state.step, 1);
+    // step 0 is inside warmup with lr 0 -> params unchanged; moments move
+    assert_eq!(state.flat, before, "warmup step 0 has lr=0");
+    assert!(state.m.iter().any(|&x| x != 0.0));
+    let m1 = step.run(&mut state, &tokens, 1).unwrap();
+    assert!(m1.loss.is_finite());
+    assert_ne!(state.flat, before, "params must move once lr > 0");
+}
+
+#[test]
+fn committed_manifest_param_counts_match_layout() {
+    // drift check for the checked-in native metadata manifest
+    let dir = stlt::runtime::default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        return; // repo layout not available (e.g. packaged test run)
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let mut checked = 0;
+    for entry in manifest.entries.values() {
+        if entry.config.arch != "stlt" {
+            continue;
+        }
+        let p = total_params(&trunk_layout(&entry.config));
+        assert_eq!(
+            p, entry.param_count,
+            "{}: manifest param_count {} != layout {}",
+            entry.name, entry.param_count, p
+        );
+        checked += 1;
+    }
+    assert!(checked >= 2, "expected stlt entries in the committed manifest");
+}

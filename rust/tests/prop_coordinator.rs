@@ -145,7 +145,7 @@ fn prop_checkpoint_roundtrip() {
             step: g.i64_in(0, 1_000_000) as i32,
         };
         let path = std::env::temp_dir().join(format!("stlt_prop_ckpt_{:x}.bin", g.seed));
-        save_checkpoint(&path, &st).map_err(|e| e.to_string())?;
+        save_checkpoint(&path, &st, "prop_artifact").map_err(|e| e.to_string())?;
         let ld = load_checkpoint(&path).map_err(|e| e.to_string())?;
         let _ = std::fs::remove_file(&path);
         prop_assert!(ld.step == st.step, "step");
