@@ -12,7 +12,45 @@ use stlt::bench::bench_for;
 use stlt::runtime::artifact::ModelConfig;
 use stlt::runtime::native_stlt::{host_init, StltModel};
 use stlt::train::{batch_loss_and_grad, native_train_step};
+use stlt::util::linalg;
 use stlt::util::threadpool::ThreadPool;
+
+/// Blocked-kernel micro rows: GFLOP/s of the shared linalg kernels at
+/// the tied-head shape (n × d × vocab, the single largest matmul) so
+/// kernel regressions are visible independently of the full engine.
+fn bench_kernels(secs: f64) {
+    let (n, d, k) = (128usize, 64usize, 256usize);
+    let mut rng = stlt::util::rng::Rng::new(7);
+    let mut fill = |len: usize| -> Vec<f32> { (0..len).map(|_| rng.f32() - 0.5).collect() };
+    let a = fill(n * d);
+    let b = fill(d * k);
+    let bt = linalg::transpose(&b, d, k);
+    let gflop = 2.0 * (n * d * k) as f64 / 1e9;
+
+    let mut out = vec![0.0f32; n * k];
+    let r = bench_for("linalg/gemm_at 128x64x256 (packed)", secs.min(1.0), || {
+        out.fill(0.0);
+        linalg::gemm_at(&a, &bt, &mut out, n, d, k);
+        std::hint::black_box(&out);
+    });
+    println!("{}   ({:.2} GFLOP/s)", r.row(), gflop / r.p50_s);
+
+    let r = bench_for("linalg/gemm    128x64x256 (axpy)", secs.min(1.0), || {
+        out.fill(0.0);
+        linalg::gemm(&a, &b, &mut out, n, d, k);
+        std::hint::black_box(&out);
+    });
+    println!("{}   ({:.2} GFLOP/s)", r.row(), gflop / r.p50_s);
+
+    let mut dw = vec![0.0f32; d * k];
+    let dy = fill(n * k);
+    let r = bench_for("linalg/gemm_ta 128x64x256 (dW)", secs.min(1.0), || {
+        dw.fill(0.0);
+        linalg::gemm_ta(&a, &dy, &mut dw, n, d, k);
+        std::hint::black_box(&dw);
+    });
+    println!("{}   ({:.2} GFLOP/s)", r.row(), gflop / r.p50_s);
+}
 
 fn main() {
     let smoke = std::env::var("STLT_BENCH_SMOKE")
@@ -23,6 +61,7 @@ fn main() {
         "== native engine bench (no artifacts needed{}) ==",
         if smoke { ", smoke mode" } else { "" }
     );
+    bench_kernels(secs);
     let cfg = ModelConfig {
         arch: "stlt".into(),
         vocab: 256,

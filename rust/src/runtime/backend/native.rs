@@ -19,7 +19,7 @@ use crate::runtime::artifact::Entry;
 use crate::runtime::backend::{Backend, DeviceBuffer, Executable};
 use crate::runtime::native_stlt::{nll_of, StltModel, StltPlan};
 use crate::runtime::tensor::Tensor;
-use crate::util::threadpool::{parallel_map, ThreadPool};
+use crate::util::threadpool::{self, parallel_map, ThreadPool};
 
 /// Host-resident "device" buffer: the native device *is* the host.
 pub struct NativeBuffer {
@@ -43,13 +43,15 @@ impl DeviceBuffer for NativeBuffer {
 }
 
 pub struct NativeBackend {
-    pool: Arc<ThreadPool>,
+    /// The process-wide shared pool — per-backend pools would stack on
+    /// top of the row-parallel kernel paths and oversubscribe the
+    /// cores; nested fan-outs run inline (`threadpool::in_worker`).
+    pool: &'static ThreadPool,
 }
 
 impl NativeBackend {
     pub fn new() -> NativeBackend {
-        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        NativeBackend { pool: Arc::new(ThreadPool::new(threads)) }
+        NativeBackend { pool: threadpool::global() }
     }
 }
 
@@ -80,7 +82,7 @@ impl Backend for NativeBackend {
         // parameter vector, keeping the per-token decode path allocation-lean
         let plan = StltPlan::new(&entry.config)
             .with_context(|| format!("{}: unsupported by the native backend", entry.name))?;
-        Ok(Arc::new(NativeExec { entry: entry.clone(), plan, pool: Arc::clone(&self.pool) }))
+        Ok(Arc::new(NativeExec { entry: entry.clone(), plan, pool: self.pool }))
     }
 
     fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<Box<dyn DeviceBuffer>> {
@@ -95,7 +97,7 @@ impl Backend for NativeBackend {
 pub struct NativeExec {
     entry: Entry,
     plan: StltPlan,
-    pool: Arc<ThreadPool>,
+    pool: &'static ThreadPool,
 }
 
 impl Executable for NativeExec {

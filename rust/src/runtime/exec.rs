@@ -138,6 +138,13 @@ impl<'a> TrainStep<'a> {
     }
 
     /// Advance `state` by one step on `tokens` (flat [batch * n_plus_1]).
+    ///
+    /// The state vectors are *moved* (not copied) into the input
+    /// tensors; on any failure — backend error or output mismatch —
+    /// they are moved back and `state` is assigned only from a fully
+    /// parsed output set, so a failed step leaves `state` exactly as
+    /// it was and is retryable (previously an error left a silently
+    /// zero-length TrainState).
     pub fn run(&self, state: &mut TrainState, tokens: &[i32], seed: i32) -> Result<StepMetrics> {
         let p = self.entry.param_count;
         let inputs = vec![
@@ -148,17 +155,58 @@ impl<'a> TrainStep<'a> {
             Tensor::i32(tokens.to_vec(), &[self.batch, self.n_plus_1]),
             Tensor::scalar_i32(seed),
         ];
-        let mut out = self.rt.run(self.entry, &inputs)?;
-        // outputs: flat', m', v', loss, ce, s_eff
-        let s_eff = out.pop().unwrap().as_f32()?[0];
-        let ce = out.pop().unwrap().as_f32()?[0];
-        let loss = out.pop().unwrap().as_f32()?[0];
-        state.v = out.pop().unwrap().into_f32()?;
-        state.m = out.pop().unwrap().into_f32()?;
-        state.flat = out.pop().unwrap().into_f32()?;
-        state.step += 1;
-        Ok(StepMetrics { loss, ce, s_eff })
+        match parse_train_out(self.rt.run(self.entry, &inputs)) {
+            Ok((flat, m, v, metrics)) => {
+                state.flat = flat;
+                state.m = m;
+                state.v = v;
+                state.step += 1;
+                Ok(metrics)
+            }
+            Err(e) => {
+                restore_train_state(state, inputs);
+                Err(e)
+            }
+        }
     }
+}
+
+/// Parse `(flat', m', v', metrics)` from a train_step result —
+/// outputs are flat', m', v', loss, ce, s_eff — without touching the
+/// caller's TrainState, so a partial/mismatched output set cannot
+/// corrupt it.
+fn parse_train_out(
+    run: Result<Vec<Tensor>>,
+) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, StepMetrics)> {
+    let mut out = run?;
+    let s_eff = out.pop().unwrap().as_f32()?[0];
+    let ce = out.pop().unwrap().as_f32()?[0];
+    let loss = out.pop().unwrap().as_f32()?[0];
+    let v = out.pop().unwrap().into_f32()?;
+    let m = out.pop().unwrap().into_f32()?;
+    let flat = out.pop().unwrap().into_f32()?;
+    Ok((flat, m, v, StepMetrics { loss, ce, s_eff }))
+}
+
+/// [`parse_train_out`] for the s2s contract — outputs are flat', m',
+/// v', loss, ce.
+fn parse_s2s_out(run: Result<Vec<Tensor>>) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, f32, f32)> {
+    let mut out = run?;
+    let ce = out.pop().unwrap().as_f32()?[0];
+    let loss = out.pop().unwrap().as_f32()?[0];
+    let v = out.pop().unwrap().into_f32()?;
+    let m = out.pop().unwrap().into_f32()?;
+    let flat = out.pop().unwrap().into_f32()?;
+    Ok((flat, m, v, loss, ce))
+}
+
+/// Move taken (flat, m, v) training-state vectors back out of the input
+/// tensors after a failed execution or output parse.
+fn restore_train_state(state: &mut TrainState, inputs: Vec<Tensor>) {
+    let mut it = inputs.into_iter();
+    state.flat = it.next().unwrap().into_f32().expect("restore flat");
+    state.m = it.next().unwrap().into_f32().expect("restore m");
+    state.v = it.next().unwrap().into_f32().expect("restore v");
 }
 
 /// `eval_step` artifact: (flat, tokens, noise_std, seed) -> (nll, count, s_eff).
@@ -301,6 +349,10 @@ impl<'a> StreamStep<'a> {
     }
 
     /// Process one chunk; returns (nll_sum, count) for masked positions.
+    ///
+    /// The carry is moved into the inputs and moved back on any
+    /// failure (backend error or output mismatch), so a failed chunk
+    /// leaves the stream resumable instead of silently zero-length.
     pub fn run(
         &self,
         flat: &[f32],
@@ -310,22 +362,25 @@ impl<'a> StreamStep<'a> {
         mask: &[f32],
     ) -> Result<(f64, f64)> {
         let p = self.entry.param_count;
-        let mut out = self.rt.run(
-            self.entry,
-            &[
-                Tensor::f32(flat.to_vec(), &[p]),
-                Tensor::f32(std::mem::take(&mut carry.l), &carry.l_shape.clone()),
-                Tensor::f32(std::mem::take(&mut carry.u), &carry.u_shape.clone()),
-                Tensor::i32(tokens.to_vec(), &[self.chunk]),
-                Tensor::i32(targets.to_vec(), &[self.chunk]),
-                Tensor::f32(mask.to_vec(), &[self.chunk]),
-            ],
-        )?;
-        let count = out.pop().unwrap().as_f32()?[0] as f64;
-        let nll = out.pop().unwrap().as_f32()?[0] as f64;
-        carry.u = out.pop().unwrap().into_f32()?;
-        carry.l = out.pop().unwrap().into_f32()?;
-        Ok((nll, count))
+        let inputs = vec![
+            Tensor::f32(flat.to_vec(), &[p]),
+            Tensor::f32(std::mem::take(&mut carry.l), &carry.l_shape.clone()),
+            Tensor::f32(std::mem::take(&mut carry.u), &carry.u_shape.clone()),
+            Tensor::i32(tokens.to_vec(), &[self.chunk]),
+            Tensor::i32(targets.to_vec(), &[self.chunk]),
+            Tensor::f32(mask.to_vec(), &[self.chunk]),
+        ];
+        match parse_stream_out(self.rt.run(self.entry, &inputs)) {
+            Ok((l, u, nll, count)) => {
+                carry.l = l;
+                carry.u = u;
+                Ok((nll, count))
+            }
+            Err(e) => {
+                restore_carry(carry, inputs, 1);
+                Err(e)
+            }
+        }
     }
 
     pub fn upload(&self, flat: &[f32]) -> Result<ParamBuf> {
@@ -341,23 +396,58 @@ impl<'a> StreamStep<'a> {
         targets: &[i32],
         mask: &[f32],
     ) -> Result<(f64, f64)> {
-        let mut out = self.rt.run_with_param_buffer(
-            self.entry,
-            params.buffer(),
-            &[
-                Tensor::f32(std::mem::take(&mut carry.l), &carry.l_shape.clone()),
-                Tensor::f32(std::mem::take(&mut carry.u), &carry.u_shape.clone()),
-                Tensor::i32(tokens.to_vec(), &[self.chunk]),
-                Tensor::i32(targets.to_vec(), &[self.chunk]),
-                Tensor::f32(mask.to_vec(), &[self.chunk]),
-            ],
-        )?;
-        let count = out.pop().unwrap().as_f32()?[0] as f64;
-        let nll = out.pop().unwrap().as_f32()?[0] as f64;
-        carry.u = out.pop().unwrap().into_f32()?;
-        carry.l = out.pop().unwrap().into_f32()?;
-        Ok((nll, count))
+        let inputs = vec![
+            Tensor::f32(std::mem::take(&mut carry.l), &carry.l_shape.clone()),
+            Tensor::f32(std::mem::take(&mut carry.u), &carry.u_shape.clone()),
+            Tensor::i32(tokens.to_vec(), &[self.chunk]),
+            Tensor::i32(targets.to_vec(), &[self.chunk]),
+            Tensor::f32(mask.to_vec(), &[self.chunk]),
+        ];
+        let run = self.rt.run_with_param_buffer(self.entry, params.buffer(), &inputs);
+        match parse_stream_out(run) {
+            Ok((l, u, nll, count)) => {
+                carry.l = l;
+                carry.u = u;
+                Ok((nll, count))
+            }
+            Err(e) => {
+                restore_carry(carry, inputs, 0);
+                Err(e)
+            }
+        }
     }
+}
+
+/// Parse `(l', u', nll, count)` from a stream_step result without
+/// touching the caller's carry, so a partial/mismatched output set
+/// cannot corrupt it.
+fn parse_stream_out(run: Result<Vec<Tensor>>) -> Result<(Vec<f32>, Vec<f32>, f64, f64)> {
+    let mut out = run?;
+    let count = out.pop().unwrap().as_f32()?[0] as f64;
+    let nll = out.pop().unwrap().as_f32()?[0] as f64;
+    let u = out.pop().unwrap().into_f32()?;
+    let l = out.pop().unwrap().into_f32()?;
+    Ok((l, u, nll, count))
+}
+
+/// Parse `(l', u', logits)` from a decode_step result without touching
+/// the caller's carry.
+fn parse_decode_out(run: Result<Vec<Tensor>>) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+    let mut out = run?;
+    let logits = out.pop().unwrap().into_f32()?;
+    let u = out.pop().unwrap().into_f32()?;
+    let l = out.pop().unwrap().into_f32()?;
+    Ok((l, u, logits))
+}
+
+/// Move a taken (l, u) carry back out of the input tensors after a
+/// failed execution or output parse; `skip` is the number of inputs
+/// before the carry pair (the flat parameter vector, when it is passed
+/// by value).
+fn restore_carry(carry: &mut StreamCarry, inputs: Vec<Tensor>, skip: usize) {
+    let mut it = inputs.into_iter().skip(skip);
+    carry.l = it.next().unwrap().into_f32().expect("restore carry l");
+    carry.u = it.next().unwrap().into_f32().expect("restore carry u");
 }
 
 /// `decode_step` artifact: (flat, l, u, token[1]) -> (l', u', logits[V]).
@@ -383,19 +473,23 @@ impl<'a> DecodeStep<'a> {
 
     pub fn run(&self, flat: &[f32], carry: &mut StreamCarry, token: i32) -> Result<Vec<f32>> {
         let p = self.entry.param_count;
-        let mut out = self.rt.run(
-            self.entry,
-            &[
-                Tensor::f32(flat.to_vec(), &[p]),
-                Tensor::f32(std::mem::take(&mut carry.l), &carry.l_shape.clone()),
-                Tensor::f32(std::mem::take(&mut carry.u), &carry.u_shape.clone()),
-                Tensor::i32(vec![token], &[1]),
-            ],
-        )?;
-        let logits = out.pop().unwrap().into_f32()?;
-        carry.u = out.pop().unwrap().into_f32()?;
-        carry.l = out.pop().unwrap().into_f32()?;
-        Ok(logits)
+        let inputs = vec![
+            Tensor::f32(flat.to_vec(), &[p]),
+            Tensor::f32(std::mem::take(&mut carry.l), &carry.l_shape.clone()),
+            Tensor::f32(std::mem::take(&mut carry.u), &carry.u_shape.clone()),
+            Tensor::i32(vec![token], &[1]),
+        ];
+        match parse_decode_out(self.rt.run(self.entry, &inputs)) {
+            Ok((l, u, logits)) => {
+                carry.l = l;
+                carry.u = u;
+                Ok(logits)
+            }
+            Err(e) => {
+                restore_carry(carry, inputs, 1);
+                Err(e)
+            }
+        }
     }
 
     pub fn upload(&self, flat: &[f32]) -> Result<ParamBuf> {
@@ -404,19 +498,23 @@ impl<'a> DecodeStep<'a> {
 
     /// Hot-path variant with a pre-uploaded parameter buffer.
     pub fn run_h(&self, params: &ParamBuf, carry: &mut StreamCarry, token: i32) -> Result<Vec<f32>> {
-        let mut out = self.rt.run_with_param_buffer(
-            self.entry,
-            params.buffer(),
-            &[
-                Tensor::f32(std::mem::take(&mut carry.l), &carry.l_shape.clone()),
-                Tensor::f32(std::mem::take(&mut carry.u), &carry.u_shape.clone()),
-                Tensor::i32(vec![token], &[1]),
-            ],
-        )?;
-        let logits = out.pop().unwrap().into_f32()?;
-        carry.u = out.pop().unwrap().into_f32()?;
-        carry.l = out.pop().unwrap().into_f32()?;
-        Ok(logits)
+        let inputs = vec![
+            Tensor::f32(std::mem::take(&mut carry.l), &carry.l_shape.clone()),
+            Tensor::f32(std::mem::take(&mut carry.u), &carry.u_shape.clone()),
+            Tensor::i32(vec![token], &[1]),
+        ];
+        let run = self.rt.run_with_param_buffer(self.entry, params.buffer(), &inputs);
+        match parse_decode_out(run) {
+            Ok((l, u, logits)) => {
+                carry.l = l;
+                carry.u = u;
+                Ok(logits)
+            }
+            Err(e) => {
+                restore_carry(carry, inputs, 0);
+                Err(e)
+            }
+        }
     }
 }
 
@@ -444,6 +542,9 @@ impl<'a> S2sTrainStep<'a> {
         self.entry.param_count
     }
 
+    /// Like [`TrainStep::run`], the moved state vectors are restored on
+    /// any failure (backend error or output mismatch) so a failed step
+    /// is retryable.
     pub fn run(
         &self,
         state: &mut TrainState,
@@ -452,25 +553,28 @@ impl<'a> S2sTrainStep<'a> {
         seed: i32,
     ) -> Result<(f32, f32)> {
         let p = self.entry.param_count;
-        let mut out = self.rt.run(
-            self.entry,
-            &[
-                Tensor::f32(std::mem::take(&mut state.flat), &[p]),
-                Tensor::f32(std::mem::take(&mut state.m), &[p]),
-                Tensor::f32(std::mem::take(&mut state.v), &[p]),
-                Tensor::scalar_i32(state.step),
-                Tensor::i32(src.to_vec(), &[self.batch, self.n_src]),
-                Tensor::i32(tgt.to_vec(), &[self.batch, self.m_tgt_plus_1]),
-                Tensor::scalar_i32(seed),
-            ],
-        )?;
-        let ce = out.pop().unwrap().as_f32()?[0];
-        let loss = out.pop().unwrap().as_f32()?[0];
-        state.v = out.pop().unwrap().into_f32()?;
-        state.m = out.pop().unwrap().into_f32()?;
-        state.flat = out.pop().unwrap().into_f32()?;
-        state.step += 1;
-        Ok((loss, ce))
+        let inputs = vec![
+            Tensor::f32(std::mem::take(&mut state.flat), &[p]),
+            Tensor::f32(std::mem::take(&mut state.m), &[p]),
+            Tensor::f32(std::mem::take(&mut state.v), &[p]),
+            Tensor::scalar_i32(state.step),
+            Tensor::i32(src.to_vec(), &[self.batch, self.n_src]),
+            Tensor::i32(tgt.to_vec(), &[self.batch, self.m_tgt_plus_1]),
+            Tensor::scalar_i32(seed),
+        ];
+        match parse_s2s_out(self.rt.run(self.entry, &inputs)) {
+            Ok((flat, m, v, loss, ce)) => {
+                state.flat = flat;
+                state.m = m;
+                state.v = v;
+                state.step += 1;
+                Ok((loss, ce))
+            }
+            Err(e) => {
+                restore_train_state(state, inputs);
+                Err(e)
+            }
+        }
     }
 }
 

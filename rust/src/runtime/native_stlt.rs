@@ -17,21 +17,35 @@
 //!   U_n     = gamma * U_{n-1} + conj(L_n) (x) v_n        (O(S d) carry)
 //!   z_n     = Re<L_n, U_n> / S
 //!
+//! Every projection around that recurrence — mixer w_f/w_v/w_o, the
+//! FFN, and the n×vocab×d tied logits head — runs on the shared
+//! blocked-GEMM kernels in [`crate::util::linalg`], against weight
+//! panels pre-transposed once per bound parameter vector
+//! ([`StltPlan::bind`] memoizes the packing by parameter-vector
+//! identity, so the per-token decode serving path never re-packs).
+//! The tied head and FFN additionally fan out over token rows via
+//! [`crate::util::threadpool::scatter_rows`]. The training tape in
+//! [`crate::train`] calls the same kernels on the same panels, so the
+//! forward and backward can never drift numerically.
+//!
 //! A naive O(N^2 S) relevance-matrix oracle ([`MixerImpl::ReferenceN2`])
 //! and FFT-based spectral relevance cross-checks (via [`crate::util::fft`],
 //! the paper's SS3.4 claim) keep the recurrence honest in tests.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, Weak};
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::interpret::{total_params, trunk_layout, Leaf};
 use crate::runtime::artifact::ModelConfig;
+use crate::util::linalg;
 use crate::util::rng::Rng;
+use crate::util::threadpool::scatter_rows;
 
-/// sqrt(2/pi), the tanh-GELU constant. Shared with [`crate::train`] so
-/// forward and backward can never disagree on the approximation.
-pub(crate) const GELU_C: f32 = 0.797_884_6;
+/// Row count below which the row-parallel head/FFN paths run inline —
+/// the decode path (n = 1) and the server's small chunks never pay
+/// thread-fanout overhead.
+const MIN_PAR_ROWS: usize = 16;
 
 pub(crate) fn softplus(x: f32) -> f32 {
     if x > 20.0 {
@@ -45,11 +59,6 @@ pub(crate) fn sigmoid(x: f32) -> f32 {
     1.0 / (1.0 + (-x).exp())
 }
 
-/// tanh-approximated GELU, matching `jax.nn.gelu` (approximate=True).
-pub(crate) fn gelu(x: f32) -> f32 {
-    0.5 * x * (1.0 + (GELU_C * (x + 0.044_715 * x * x * x)).tanh())
-}
-
 /// Which mixer implementation [`StltModel::forward_logits`] uses.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum MixerImpl {
@@ -58,7 +67,8 @@ pub enum MixerImpl {
     Recurrence,
     /// Naive O(N^2·S·d) relevance-style oracle recomputing every
     /// discounted prefix sum from scratch — test-only cross-check;
-    /// only valid from a zero carry (full-sequence forward).
+    /// only valid from a zero carry (full-sequence forward), enforced
+    /// by [`StltModel::trunk_chunk`].
     ReferenceN2,
 }
 
@@ -86,6 +96,48 @@ pub(crate) struct LayerOffsets {
     pub(crate) b_alpha: Option<usize>,
 }
 
+/// Pre-transposed ("packed") weight panels of one layer: every matrix
+/// the forward multiplies by, stored output-major so each output
+/// element is one contiguous [`linalg::dot`] over the shared dimension
+/// (the [`linalg::gemm_at`]/[`linalg::gemv`] layout).
+pub(crate) struct LayerPanels {
+    pub(crate) w_f_t: Vec<f32>,    // [S, d]
+    pub(crate) w_v_t: Vec<f32>,    // [d, d]
+    pub(crate) w_o_t: Vec<f32>,    // [d, d]
+    pub(crate) ffn_w1_t: Vec<f32>, // [hd, d]
+    pub(crate) ffn_w2_t: Vec<f32>, // [d, hd]
+    pub(crate) w_alpha_t: Option<Vec<f32>>, // [S, d]
+}
+
+/// All layers' packed panels for one bound parameter vector. The tied
+/// head needs no panel: the `[vocab, d]` embedding matrix is already
+/// output-major for `logits = xf @ embedᵀ`.
+pub(crate) struct Panels {
+    pub(crate) layers: Vec<LayerPanels>,
+}
+
+fn pack_panels(cfg: &ModelConfig, layers: &[LayerOffsets], flat: &[f32]) -> Panels {
+    let (s, d) = (cfg.s_max, cfg.d_model);
+    let hd = d * cfg.ffn_mult.max(1);
+    let layers = layers
+        .iter()
+        .map(|lo| LayerPanels {
+            w_f_t: linalg::transpose(&flat[lo.w_f..lo.w_f + d * s], d, s),
+            w_v_t: linalg::transpose(&flat[lo.w_v..lo.w_v + d * d], d, d),
+            w_o_t: linalg::transpose(&flat[lo.w_o..lo.w_o + d * d], d, d),
+            ffn_w1_t: linalg::transpose(&flat[lo.ffn_w1..lo.ffn_w1 + d * hd], d, hd),
+            ffn_w2_t: linalg::transpose(&flat[lo.ffn_w2..lo.ffn_w2 + hd * d], hd, d),
+            w_alpha_t: lo.w_alpha.map(|wa| linalg::transpose(&flat[wa..wa + d * s], d, s)),
+        })
+        .collect();
+    Panels { layers }
+}
+
+/// Memoized packing: (identity of the last-bound parameter vector, its
+/// panels). `Weak` so the cache never keeps a stale vector alive, and a
+/// recycled allocation address can never alias a dead entry.
+type PanelCache = Mutex<Option<(Weak<Vec<f32>>, Arc<Panels>)>>;
+
 /// Per-layer node constants derived from the learnable parameters.
 pub(crate) struct NodeParams {
     pub(crate) lam_re: Vec<f32>,
@@ -97,7 +149,10 @@ pub(crate) struct NodeParams {
 /// every parameter offset. Built once (per backend `load`), then bound
 /// to concrete parameter vectors cheaply via [`StltPlan::bind`] — the
 /// decode serving path binds once per call, so plan resolution (string
-/// path lookups over the layout) must not sit on it.
+/// path lookups over the layout) must not sit on it, and the weight
+/// panel packing is memoized by parameter-vector identity so repeat
+/// binds of the same (Arc) vector are two Arc clones plus a pointer
+/// compare.
 #[derive(Clone)]
 pub struct StltPlan {
     pub cfg: Arc<ModelConfig>,
@@ -106,19 +161,22 @@ pub struct StltPlan {
     lnf_g: usize,
     lnf_b: usize,
     total: usize,
+    panel_cache: Arc<PanelCache>,
 }
 
 /// The native STLT model: a plan bound to a flat packed parameter
-/// vector.
+/// vector (plus that vector's packed weight panels).
 ///
-/// Cheap to clone (the parameters are behind an `Arc`), `Send + Sync`,
-/// so batch rows parallelise across [`crate::util::threadpool`].
+/// Cheap to clone (parameters and panels are behind `Arc`s),
+/// `Send + Sync`, so batch rows parallelise across
+/// [`crate::util::threadpool`].
 #[derive(Clone)]
 pub struct StltModel {
     /// shared with the plan — `model.cfg.field` reads through the Arc
     pub cfg: Arc<ModelConfig>,
     flat: Arc<Vec<f32>>,
     layers: Arc<Vec<LayerOffsets>>,
+    panels: Arc<Panels>,
     embed: usize,
     lnf_g: usize,
     lnf_b: usize,
@@ -183,11 +241,16 @@ impl StltPlan {
             lnf_b: find(&layout, "/lnf_b")?,
             total,
             layers: Arc::new(layers),
+            panel_cache: Arc::new(Mutex::new(None)),
         })
     }
 
-    /// Bind a parameter vector to the plan: a length check plus two Arc
-    /// clones — no allocation, safe on the per-token decode path.
+    /// Bind a parameter vector to the plan. The first bind of a given
+    /// vector packs its pre-transposed weight panels (one pass over the
+    /// weights); every repeat bind of the *same* `Arc` — the per-token
+    /// decode serving path, which re-binds the uploaded parameter
+    /// buffer on every step — hits the memo and costs a length check
+    /// plus Arc clones.
     pub fn bind(&self, flat: Arc<Vec<f32>>) -> Result<StltModel> {
         if flat.len() != self.total {
             bail!(
@@ -197,10 +260,27 @@ impl StltPlan {
                 self.total
             );
         }
+        let panels = {
+            let mut cache = self.panel_cache.lock().unwrap_or_else(|e| e.into_inner());
+            let hit = cache.as_ref().and_then(|(prev, p)| {
+                prev.upgrade()
+                    .filter(|prev| Arc::ptr_eq(prev, &flat))
+                    .map(|_| Arc::clone(p))
+            });
+            match hit {
+                Some(p) => p,
+                None => {
+                    let p = Arc::new(pack_panels(&self.cfg, &self.layers, &flat));
+                    *cache = Some((Arc::downgrade(&flat), Arc::clone(&p)));
+                    p
+                }
+            }
+        };
         Ok(StltModel {
             cfg: Arc::clone(&self.cfg),
             flat,
             layers: Arc::clone(&self.layers),
+            panels,
             embed: self.embed,
             lnf_g: self.lnf_g,
             lnf_b: self.lnf_b,
@@ -224,6 +304,12 @@ impl StltModel {
     /// Per-layer parameter offsets, in layer order ([`crate::train`]).
     pub(crate) fn layer_offsets(&self) -> &[LayerOffsets] {
         &self.layers
+    }
+
+    /// The packed weight panels of the bound vector ([`crate::train`]
+    /// runs its tape forward on the same panels the engine uses).
+    pub(crate) fn panels(&self) -> &Panels {
+        &self.panels
     }
 
     /// The bound flat parameter vector ([`crate::train`]).
@@ -253,16 +339,25 @@ impl StltModel {
         NodeParams { lam_re, lam_im, gamma }
     }
 
-    /// Adaptive node mask m [S] from mean-pooled pre-mixer activations
-    /// (deterministic inference alpha, SS3.6). All-ones when not adaptive.
-    fn gate(&self, lo: &LayerOffsets, h: &[f32], n: usize) -> Vec<f32> {
+    /// Adaptive node gate m [S] plus the mean-pooled pre-mixer
+    /// activations it was computed from (deterministic inference alpha,
+    /// SS3.6) — shared by the engine and the training tape so the gate
+    /// logits are computed by the same kernel on both sides. All-ones
+    /// (and an empty pooled vector) when not adaptive.
+    pub(crate) fn gate_full(
+        &self,
+        lo: &LayerOffsets,
+        lp: &LayerPanels,
+        h: &[f32],
+        n: usize,
+    ) -> (Vec<f32>, Vec<f32>) {
         let (s, d) = (self.cfg.s_max, self.cfg.d_model);
         if !self.cfg.adaptive {
-            return vec![1.0; s];
+            return (vec![1.0; s], Vec::new());
         }
-        let (wa, ba) = match (lo.w_alpha, lo.b_alpha) {
-            (Some(w), Some(b)) => (w, b),
-            _ => return vec![1.0; s],
+        let (ba, wat) = match (lo.b_alpha, &lp.w_alpha_t) {
+            (Some(b), Some(w)) => (b, w),
+            _ => return (vec![1.0; s], Vec::new()),
         };
         let f = &self.flat[..];
         let mut pooled = vec![0.0f32; d];
@@ -275,15 +370,10 @@ impl StltModel {
         for p in pooled.iter_mut() {
             *p *= inv_n;
         }
-        (0..s)
-            .map(|k| {
-                let mut logit = f[ba + k];
-                for (i, p) in pooled.iter().enumerate() {
-                    logit += p * f[wa + i * s + k];
-                }
-                sigmoid(logit)
-            })
-            .collect()
+        let m = (0..s)
+            .map(|k| sigmoid(f[ba + k] + linalg::dot(&pooled, &wat[k * d..(k + 1) * d])))
+            .collect();
+        (m, pooled)
     }
 
     /// One mixer chunk: h [n*d] (LayerNormed input) -> z [n*d], advancing
@@ -291,67 +381,36 @@ impl StltModel {
     fn mixer_chunk(
         &self,
         lo: &LayerOffsets,
+        lp: &LayerPanels,
         h: &[f32],
         n: usize,
         l: &mut [f32],
         u: &mut [f32],
     ) -> (Vec<f32>, f32) {
         let (s, d) = (self.cfg.s_max, self.cfg.d_model);
-        let flat = &self.flat[..];
         let np = self.node_params(lo);
-        let m = self.gate(lo, h, n);
+        let (m, _pooled) = self.gate_full(lo, lp, h, n);
         let s_eff: f32 = m.iter().sum();
 
-        // projections: fproj [n*s] gated, v [n*d]
+        // projections on the shared kernels: fproj [n*S] (gated), v [n*d]
         let mut fproj = vec![0.0f32; n * s];
-        let mut v = vec![0.0f32; n * d];
-        for t in 0..n {
-            let hr = &h[t * d..(t + 1) * d];
-            let fo = &mut fproj[t * s..(t + 1) * s];
-            for (i, &hx) in hr.iter().enumerate() {
-                if hx == 0.0 {
-                    continue;
-                }
-                let wrow = &flat[lo.w_f + i * s..lo.w_f + (i + 1) * s];
-                for (k, &w) in wrow.iter().enumerate() {
-                    fo[k] += hx * w;
-                }
-            }
-            for (k, fk) in fo.iter_mut().enumerate() {
-                *fk *= m[k];
-            }
-            let vo = &mut v[t * d..(t + 1) * d];
-            for (i, &hx) in hr.iter().enumerate() {
-                if hx == 0.0 {
-                    continue;
-                }
-                let wrow = &flat[lo.w_v + i * d..lo.w_v + (i + 1) * d];
-                for (e, &w) in wrow.iter().enumerate() {
-                    vo[e] += hx * w;
-                }
+        linalg::gemm_at(h, &lp.w_f_t, &mut fproj, n, d, s);
+        for row in fproj.chunks_exact_mut(s) {
+            for (fk, &mk) in row.iter_mut().zip(&m) {
+                *fk *= mk;
             }
         }
+        let mut v = vec![0.0f32; n * d];
+        linalg::gemm_at(h, &lp.w_v_t, &mut v, n, d, d);
 
         let zmix = match self.mixer {
             MixerImpl::Recurrence => self.mix_recurrence(&np, &fproj, &v, n, l, u),
             MixerImpl::ReferenceN2 => self.mix_reference_n2(&np, &fproj, &v, n, l, u),
         };
 
-        // output projection z @ w_o
+        // output projection z = zmix @ w_o
         let mut z = vec![0.0f32; n * d];
-        for t in 0..n {
-            let zr = &zmix[t * d..(t + 1) * d];
-            let zo = &mut z[t * d..(t + 1) * d];
-            for (i, &zx) in zr.iter().enumerate() {
-                if zx == 0.0 {
-                    continue;
-                }
-                let wrow = &flat[lo.w_o + i * d..lo.w_o + (i + 1) * d];
-                for (e, &w) in wrow.iter().enumerate() {
-                    zo[e] += zx * w;
-                }
-            }
-        }
+        linalg::gemm_at(&zmix, &lp.w_o_t, &mut z, n, d, d);
         (z, s_eff)
     }
 
@@ -396,8 +455,9 @@ impl StltModel {
 
     /// Naive O(n^2·S·d) oracle: materialises L via explicit lam powers
     /// (the relevance-matrix view) and recomputes every discounted U
-    /// prefix sum. Only valid from a zero carry; still advances the
-    /// carry to the post-chunk state so callers can cross-check both.
+    /// prefix sum. Only valid from a zero carry (enforced by
+    /// [`StltModel::trunk_chunk`]); still advances the carry to the
+    /// post-chunk state so callers can cross-check both.
     fn mix_reference_n2(
         &self,
         np: &NodeParams,
@@ -491,41 +551,75 @@ impl StltModel {
         }
     }
 
-    fn ffn_add(&self, lo: &LayerOffsets, h: &[f32], x: &mut [f32]) {
+    /// FFN forward shared by the engine and the training tape (one
+    /// implementation, one set of kernels — the backward can never
+    /// differentiate a different network than the engine serves):
+    /// `hgelu = gelu(h @ w1 + b1)`, `out = b2 + hgelu @ w2`, row-
+    /// parallel via [`scatter_rows`]. Returns `(hpre, hgelu, out)`.
+    ///
+    /// With `want_pre` (the training tape) the pre-GELU activations and
+    /// `hgelu` are materialised for the backward sweep; without it (the
+    /// engine) both stay chunk-local inside one fused scatter — half
+    /// the fan-outs, no O(n·hd) buffers — and `hpre`/`hgelu` come back
+    /// empty. The fused and split epilogues are element-identical, so
+    /// the two modes produce bitwise-equal `out`.
+    pub(crate) fn ffn_parts(
+        &self,
+        lo: &LayerOffsets,
+        lp: &LayerPanels,
+        h: &[f32],
+        n: usize,
+        want_pre: bool,
+    ) -> (Option<Vec<f32>>, Vec<f32>, Vec<f32>) {
         let d = self.cfg.d_model;
         let hd = d * self.cfg.ffn_mult.max(1);
         let f = &self.flat[..];
-        let n = h.len() / d;
-        let mut hid = vec![0.0f32; hd];
-        for t in 0..n {
-            let hr = &h[t * d..(t + 1) * d];
-            hid.copy_from_slice(&f[lo.ffn_b1..lo.ffn_b1 + hd]);
-            for (i, &hx) in hr.iter().enumerate() {
-                if hx == 0.0 {
-                    continue;
+        let b1 = &f[lo.ffn_b1..lo.ffn_b1 + hd];
+        let b2 = &f[lo.ffn_b2..lo.ffn_b2 + d];
+        let mut out = vec![0.0f32; n * d];
+        if !want_pre {
+            scatter_rows(n, d, &mut out, MIN_PAR_ROWS, |t0, t1, chunk| {
+                let rows = t1 - t0;
+                let mut hid = vec![0.0f32; rows * hd];
+                linalg::gemm_at(&h[t0 * d..t1 * d], &lp.ffn_w1_t, &mut hid, rows, d, hd);
+                linalg::bias_gelu(&mut hid, b1);
+                for row in chunk.chunks_exact_mut(d) {
+                    row.copy_from_slice(b2);
                 }
-                let wrow = &f[lo.ffn_w1 + i * hd..lo.ffn_w1 + (i + 1) * hd];
-                for (j, &w) in wrow.iter().enumerate() {
-                    hid[j] += hx * w;
-                }
-            }
-            for hj in hid.iter_mut() {
-                *hj = gelu(*hj);
-            }
-            let xr = &mut x[t * d..(t + 1) * d];
-            for (e, xe) in xr.iter_mut().enumerate() {
-                *xe += f[lo.ffn_b2 + e];
-            }
-            for (j, &hj) in hid.iter().enumerate() {
-                if hj == 0.0 {
-                    continue;
-                }
-                let wrow = &f[lo.ffn_w2 + j * d..lo.ffn_w2 + (j + 1) * d];
-                for (e, &w) in wrow.iter().enumerate() {
-                    xr[e] += hj * w;
-                }
-            }
+                linalg::gemm_at(&hid, &lp.ffn_w2_t, chunk, rows, hd, d);
+            });
+            return (None, Vec::new(), out);
         }
+        let mut hid = vec![0.0f32; n * hd];
+        scatter_rows(n, hd, &mut hid, MIN_PAR_ROWS, |t0, t1, chunk| {
+            linalg::gemm_at(&h[t0 * d..t1 * d], &lp.ffn_w1_t, chunk, t1 - t0, d, hd);
+            linalg::add_bias(chunk, b1);
+        });
+        let hpre = hid.clone();
+        for v in hid.iter_mut() {
+            *v = linalg::gelu(*v);
+        }
+        scatter_rows(n, d, &mut out, MIN_PAR_ROWS, |t0, t1, chunk| {
+            for row in chunk.chunks_exact_mut(d) {
+                row.copy_from_slice(b2);
+            }
+            linalg::gemm_at(&hid[t0 * hd..t1 * hd], &lp.ffn_w2_t, chunk, t1 - t0, hd, d);
+        });
+        (Some(hpre), hid, out)
+    }
+
+    /// Tied logits head `logits = xf @ embedᵀ` — the single largest
+    /// matmul of the trunk (n × vocab × d) — row-parallel via
+    /// [`scatter_rows`]. The `[vocab, d]` embedding matrix is already
+    /// in the packed (output-major) layout, so no panel is needed.
+    pub(crate) fn head_logits(&self, xf: &[f32], n: usize) -> Vec<f32> {
+        let (d, vcb) = (self.cfg.d_model, self.cfg.vocab);
+        let embed = &self.flat[self.embed..self.embed + vcb * d];
+        let mut logits = vec![0.0f32; n * vcb];
+        scatter_rows(n, vcb, &mut logits, MIN_PAR_ROWS, |t0, t1, out| {
+            linalg::gemm_at(&xf[t0 * d..t1 * d], embed, out, t1 - t0, d, vcb);
+        });
+        logits
     }
 
     /// Run one chunk of tokens through the full trunk, advancing the
@@ -558,6 +652,16 @@ impl StltModel {
                 d
             );
         }
+        if self.mixer == MixerImpl::ReferenceN2
+            && (l_carry.iter().any(|&x| x != 0.0) || u_carry.iter().any(|&x| x != 0.0))
+        {
+            bail!(
+                "MixerImpl::ReferenceN2 recomputes every prefix sum from scratch \
+                 and is only valid from a zero carry (full-sequence forward); \
+                 streaming mid-sequence would silently produce wrong logits — \
+                 use MixerImpl::Recurrence for chunked/streamed execution"
+            );
+        }
         let scale = (d as f32).sqrt();
         let mut x = vec![0.0f32; n * d];
         for (t, &tok) in tokens.iter().enumerate() {
@@ -579,34 +683,24 @@ impl StltModel {
         }
         let mut h = vec![0.0f32; n * d];
         let mut s_eff_sum = 0.0f32;
-        for (li, lo) in self.layers.iter().enumerate() {
+        for (li, (lo, lp)) in self.layers.iter().zip(&self.panels.layers).enumerate() {
             self.layer_norm(&x, lo.ln1_g, lo.ln1_b, &mut h);
             let lsl = &mut l_carry[li * s * 2..(li + 1) * s * 2];
             let usl = &mut u_carry[li * s * d * 2..(li + 1) * s * d * 2];
-            let (z, s_eff) = self.mixer_chunk(lo, &h, n, lsl, usl);
+            let (z, s_eff) = self.mixer_chunk(lo, lp, &h, n, lsl, usl);
             s_eff_sum += s_eff;
             for (xe, ze) in x.iter_mut().zip(&z) {
                 *xe += ze;
             }
             self.layer_norm(&x, lo.ln2_g, lo.ln2_b, &mut h);
-            self.ffn_add(lo, &h, &mut x);
+            let (_, _, f_out) = self.ffn_parts(lo, lp, &h, n, false);
+            for (xe, fe) in x.iter_mut().zip(&f_out) {
+                *xe += fe;
+            }
         }
         let mut xf = vec![0.0f32; n * d];
         self.layer_norm(&x, self.lnf_g, self.lnf_b, &mut xf);
-        // tied head: logits = x @ embed.T
-        let mut logits = vec![0.0f32; n * vcb];
-        for t in 0..n {
-            let xr = &xf[t * d..(t + 1) * d];
-            let lr = &mut logits[t * vcb..(t + 1) * vcb];
-            for (tokv, le) in lr.iter_mut().enumerate() {
-                let er = &f[self.embed + tokv * d..self.embed + (tokv + 1) * d];
-                let mut acc = 0.0f32;
-                for (xe, ee) in xr.iter().zip(er) {
-                    acc += xe * ee;
-                }
-                *le = acc;
-            }
-        }
+        let logits = self.head_logits(&xf, n);
         Ok((logits, s_eff_sum / self.cfg.n_layers as f32))
     }
 
@@ -663,7 +757,17 @@ pub fn host_init(cfg: &ModelConfig, seed: u64) -> Vec<f32> {
     let mut flat = vec![0.0f32; total];
     let mut rng = Rng::new(seed);
     let s = cfg.s_max;
-    let inv_softplus = |y: f32| (y.exp() - 1.0).max(1e-6).ln();
+    // softplus⁻¹(y) = ln(e^y − 1): the naive form overflows f32 to inf
+    // for y ≳ 89 (e.g. a manifest with t_init ≳ 90), seeding non-finite
+    // t_raw. Above the knee use the log1p-stable y + ln(1 − e⁻ʸ), which
+    // round-trips exactly through the matching `softplus` branch.
+    let inv_softplus = |y: f32| {
+        if y > 20.0 {
+            y + (-(-y).exp()).ln_1p()
+        } else {
+            y.exp_m1().max(1e-6).ln()
+        }
+    };
     for leaf in &layout {
         let out = &mut flat[leaf.offset..leaf.offset + leaf.numel()];
         let name = leaf.path.rsplit('/').next().unwrap_or("");
@@ -745,6 +849,20 @@ mod tests {
     }
 
     #[test]
+    fn reference_n2_rejects_nonzero_carry() {
+        // the oracle is documented zero-carry-only; streaming it
+        // mid-sequence must be a hard error, not silently-wrong logits
+        let cfg = tiny_cfg();
+        let mut m = model(&cfg, 1);
+        m.mixer = MixerImpl::ReferenceN2;
+        let tokens: Vec<i32> = (0..6).map(|i| i % cfg.vocab as i32).collect();
+        let (mut l, mut u) = m.zero_carry();
+        m.trunk_chunk(&mut l, &mut u, &tokens, 0.0, None).unwrap();
+        let err = m.trunk_chunk(&mut l, &mut u, &tokens, 0.0, None).unwrap_err();
+        assert!(format!("{err:#}").contains("zero carry"), "unhelpful error: {err:#}");
+    }
+
+    #[test]
     fn chunking_is_invariant() {
         let cfg = tiny_cfg();
         let m = model(&cfg, 3);
@@ -761,6 +879,29 @@ mod tests {
         assert_eq!(whole.len(), pieces.len());
         for (a, b) in whole.iter().zip(&pieces) {
             assert!((a - b).abs() < 1e-4 * (1.0 + a.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn panel_cache_hits_on_same_params_only() {
+        // the bind-seam memo: same Arc -> same packed panels; different
+        // params -> fresh panels (never stale weights)
+        let cfg = tiny_cfg();
+        let plan = StltPlan::new(&cfg).unwrap();
+        let flat = Arc::new(host_init(&cfg, 1));
+        let m1 = plan.bind(Arc::clone(&flat)).unwrap();
+        let m2 = plan.bind(Arc::clone(&flat)).unwrap();
+        assert!(Arc::ptr_eq(&m1.panels, &m2.panels), "repeat bind must hit the memo");
+        let m3 = plan.bind(Arc::new(host_init(&cfg, 2))).unwrap();
+        assert!(!Arc::ptr_eq(&m1.panels, &m3.panels), "new params must re-pack");
+        // and the packed panels are really the transposed weights
+        let lo = &m1.layers[0];
+        let lp = &m1.panels.layers[0];
+        let (d, s) = (cfg.d_model, cfg.s_max);
+        for i in 0..d {
+            for k in 0..s {
+                assert_eq!(lp.w_f_t[k * d + i], m1.flat[lo.w_f + i * s + k]);
+            }
         }
     }
 
@@ -796,6 +937,28 @@ mod tests {
         let (c, _, _) = m.eval_row(&tokens, 0.0, 7).unwrap();
         assert_eq!(a, b, "same seed must reproduce");
         assert!((a - c).abs() > 1e-9, "noise should perturb the NLL");
+    }
+
+    #[test]
+    fn host_init_stable_for_large_t_init() {
+        // the naive softplus-inverse overflowed f32 here, seeding
+        // t_raw = inf and a non-finite forward
+        let mut cfg = tiny_cfg();
+        cfg.t_init = 5000.0;
+        let flat = host_init(&cfg, 1);
+        assert!(flat.iter().all(|x| x.is_finite()), "init must be finite");
+        let m = StltModel::new(&cfg, Arc::new(flat)).unwrap();
+        let np = m.node_params(&m.layers[0]);
+        // T must round-trip: gamma = e^{-1/(8 T)} with T = t_init
+        let want = (-1.0f32 / (8.0 * cfg.t_init)).exp();
+        assert!(
+            (np.gamma - want).abs() < 1e-5 && np.gamma < 1.0,
+            "gamma {} vs {want}",
+            np.gamma
+        );
+        let tokens: Vec<i32> = (0..8).map(|i| i % cfg.vocab as i32).collect();
+        let logits = m.forward_logits(&tokens).unwrap();
+        assert!(logits.iter().all(|x| x.is_finite()), "forward must stay finite");
     }
 
     #[test]

@@ -11,6 +11,16 @@
 //! LayerNorms, FFN and mixer projections, the adaptive gate, and the
 //! Laplace-node parameters (sigma_raw, omega, t_raw).
 //!
+//! Every matmul here — the tape forward's projections (run on the same
+//! pre-transposed weight panels as the engine, via the shared
+//! [`StltModel::gate_full`]/[`StltModel::ffn_parts`]/
+//! [`StltModel::head_logits`] helpers) and the backward sweep's
+//! `dy @ Wᵀ` / `xᵀ dy` adjoint products — goes through the blocked
+//! kernels in [`crate::util::linalg`]. One kernel family on both sides
+//! of the tape means the gradient can never be taken of a subtly
+//! different network than the engine serves (`tests/native_train.rs`
+//! pins tape-vs-engine NLL parity).
+//!
 //! The interesting part is the recurrence. Per node k (lam = lam_re +
 //! j·lam_im, discount gamma, all derived from sigma/omega/T):
 //!
@@ -37,13 +47,8 @@
 
 use anyhow::{bail, Result};
 
-use crate::runtime::native_stlt::{gelu, sigmoid, softplus, StltModel, GELU_C};
-
-/// d/dx of the tanh-approximated GELU (same constant as the forward).
-fn gelu_grad(x: f32) -> f32 {
-    let th = (GELU_C * (x + 0.044_715 * x * x * x)).tanh();
-    0.5 * (1.0 + th) + 0.5 * x * (1.0 - th * th) * GELU_C * (1.0 + 3.0 * 0.044_715 * x * x)
-}
+use crate::runtime::native_stlt::{sigmoid, softplus, StltModel};
+use crate::util::linalg::{self, gelu_grad};
 
 /// Gradient + loss terms of one row. `grad` has the full flat length.
 pub struct RowOut {
@@ -57,22 +62,23 @@ pub struct RowOut {
 
 /// Activations of one layer recorded during the tape forward.
 struct LayerTape {
-    x_in: Vec<f32>,  // [n,d] residual stream entering the layer
-    mu1: Vec<f32>,   // [n] LN1 means
-    inv1: Vec<f32>,  // [n] LN1 inverse stddevs
-    h1: Vec<f32>,    // [n,d] LN1 output (mixer input)
+    x_in: Vec<f32>,   // [n,d] residual stream entering the layer
+    mu1: Vec<f32>,    // [n] LN1 means
+    inv1: Vec<f32>,   // [n] LN1 inverse stddevs
+    h1: Vec<f32>,     // [n,d] LN1 output (mixer input)
     pooled: Vec<f32>, // [d] mean-pooled h1 (adaptive only, else empty)
-    m: Vec<f32>,     // [S] node gate
-    fraw: Vec<f32>,  // [n,S] pre-gate feature projection h1 @ w_f
-    v: Vec<f32>,     // [n,d] value projection h1 @ w_v
-    l_all: Vec<f32>, // [n,S,2] L_t for every t
-    u_all: Vec<f32>, // [n,S,d,2] U_t for every t (the O(N·S·d) tape)
-    zmix: Vec<f32>,  // [n,d] mixed output pre-w_o
-    x_mid: Vec<f32>, // [n,d] residual stream after the mixer
+    m: Vec<f32>,      // [S] node gate
+    fraw: Vec<f32>,   // [n,S] pre-gate feature projection h1 @ w_f
+    v: Vec<f32>,      // [n,d] value projection h1 @ w_v
+    l_all: Vec<f32>,  // [n,S,2] L_t for every t
+    u_all: Vec<f32>,  // [n,S,d,2] U_t for every t (the O(N·S·d) tape)
+    zmix: Vec<f32>,   // [n,d] mixed output pre-w_o
+    x_mid: Vec<f32>,  // [n,d] residual stream after the mixer
     mu2: Vec<f32>,
     inv2: Vec<f32>,
     h2: Vec<f32>,    // [n,d] LN2 output (FFN input)
     hpre: Vec<f32>,  // [n,hd] FFN pre-GELU activations
+    hgelu: Vec<f32>, // [n,hd] gelu(hpre), reused for the w2 gradient
 }
 
 /// LayerNorm forward recording (mu, inv) per row for the backward.
@@ -142,54 +148,6 @@ fn ln_bwd(
     dx
 }
 
-/// out[t,j] (n x k) += x[t,i] (n x d) @ w[i,j] (d x k at w_off)
-fn matmul(flat: &[f32], x: &[f32], w_off: usize, d: usize, k: usize, out: &mut [f32]) {
-    let n = x.len() / d;
-    for t in 0..n {
-        let xr = &x[t * d..(t + 1) * d];
-        let or = &mut out[t * k..(t + 1) * k];
-        for (i, &xi) in xr.iter().enumerate() {
-            if xi == 0.0 {
-                continue;
-            }
-            let wrow = &flat[w_off + i * k..w_off + (i + 1) * k];
-            for (j, &w) in wrow.iter().enumerate() {
-                or[j] += xi * w;
-            }
-        }
-    }
-}
-
-/// dW[i,j] += x[t,i]ᵀ dy[t,j]; dx[t,i] += dy[t,j] W[i,j]ᵀ
-fn matmul_bwd(
-    flat: &[f32],
-    grad: &mut [f32],
-    x: &[f32],
-    dy: &[f32],
-    w_off: usize,
-    d: usize,
-    k: usize,
-    dx: &mut [f32],
-) {
-    let n = x.len() / d;
-    for t in 0..n {
-        let xr = &x[t * d..(t + 1) * d];
-        let dyr = &dy[t * k..(t + 1) * k];
-        let dxr = &mut dx[t * d..(t + 1) * d];
-        for i in 0..d {
-            let wrow = &flat[w_off + i * k..w_off + (i + 1) * k];
-            let gwrow = &mut grad[w_off + i * k..w_off + (i + 1) * k];
-            let xi = xr[i];
-            let mut acc = 0.0f32;
-            for j in 0..k {
-                acc += dyr[j] * wrow[j];
-                gwrow[j] += xi * dyr[j];
-            }
-            dxr[i] += acc;
-        }
-    }
-}
-
 /// Per-row loss + full-flat-vector gradient (see module docs).
 ///
 /// `tokens` is one `[n+1]` next-token row; the loss is
@@ -210,6 +168,7 @@ pub fn row_loss_and_grad(
     let hd = d * cfg.ffn_mult.max(1);
     let n = tokens.len() - 1;
     let flat = model.flat_params();
+    let panels = model.panels();
     let (embed_off, lnf_g, lnf_b) = model.head_offsets();
     let scale = (d as f32).sqrt();
 
@@ -227,40 +186,17 @@ pub fn row_loss_and_grad(
     }
 
     let mut tapes: Vec<LayerTape> = Vec::with_capacity(cfg.n_layers);
-    for lo in model.layer_offsets() {
+    for (lo, lp) in model.layer_offsets().iter().zip(&panels.layers) {
         let (h1, mu1, inv1) = ln_fwd(flat, &x, lo.ln1_g, lo.ln1_b, d);
 
-        // gate (deterministic alpha; all-ones when not adaptive)
-        let (m, pooled) = match (cfg.adaptive, lo.w_alpha, lo.b_alpha) {
-            (true, Some(wa), Some(ba)) => {
-                let mut pooled = vec![0.0f32; d];
-                for row in h1.chunks_exact(d) {
-                    for (p, &h) in pooled.iter_mut().zip(row) {
-                        *p += h;
-                    }
-                }
-                let inv_n = 1.0 / n as f32;
-                for p in pooled.iter_mut() {
-                    *p *= inv_n;
-                }
-                let m: Vec<f32> = (0..s)
-                    .map(|k| {
-                        let mut logit = flat[ba + k];
-                        for (i, &p) in pooled.iter().enumerate() {
-                            logit += p * flat[wa + i * s + k];
-                        }
-                        sigmoid(logit)
-                    })
-                    .collect();
-                (m, pooled)
-            }
-            _ => (vec![1.0f32; s], Vec::new()),
-        };
+        // gate (deterministic alpha; all-ones when not adaptive) —
+        // the engine's own kernel, so tape and serving gates agree
+        let (m, pooled) = model.gate_full(lo, lp, &h1, n);
 
         let mut fraw = vec![0.0f32; n * s];
-        matmul(flat, &h1, lo.w_f, d, s, &mut fraw);
+        linalg::gemm_at(&h1, &lp.w_f_t, &mut fraw, n, d, s);
         let mut v = vec![0.0f32; n * d];
-        matmul(flat, &h1, lo.w_v, d, d, &mut v);
+        linalg::gemm_at(&h1, &lp.w_v_t, &mut v, n, d, d);
 
         // recurrence with full L/U tape
         let np = model.node_params(lo);
@@ -299,31 +235,13 @@ pub fn row_loss_and_grad(
         }
 
         let mut x_mid = x.clone();
-        matmul(flat, &zmix, lo.w_o, d, d, &mut x_mid);
+        linalg::gemm_at(&zmix, &lp.w_o_t, &mut x_mid, n, d, d);
 
         let (h2, mu2, inv2) = ln_fwd(flat, &x_mid, lo.ln2_g, lo.ln2_b, d);
-        let mut hpre = vec![0.0f32; n * hd];
-        for t in 0..n {
-            hpre[t * hd..(t + 1) * hd].copy_from_slice(&flat[lo.ffn_b1..lo.ffn_b1 + hd]);
-        }
-        matmul(flat, &h2, lo.ffn_w1, d, hd, &mut hpre);
+        let (hpre, hgelu, f_out) = model.ffn_parts(lo, lp, &h2, n, true);
         let mut x_out = x_mid.clone();
-        for t in 0..n {
-            let xr = &mut x_out[t * d..(t + 1) * d];
-            for (e, xe) in xr.iter_mut().enumerate() {
-                *xe += flat[lo.ffn_b2 + e];
-            }
-            let hr = &hpre[t * hd..(t + 1) * hd];
-            for (j, &hj) in hr.iter().enumerate() {
-                let g = gelu(hj);
-                if g == 0.0 {
-                    continue;
-                }
-                let wrow = &flat[lo.ffn_w2 + j * d..lo.ffn_w2 + (j + 1) * d];
-                for (e, &w) in wrow.iter().enumerate() {
-                    xr[e] += g * w;
-                }
-            }
+        for (xe, fe) in x_out.iter_mut().zip(&f_out) {
+            *xe += fe;
         }
 
         tapes.push(LayerTape {
@@ -342,102 +260,81 @@ pub fn row_loss_and_grad(
             mu2,
             inv2,
             h2,
-            hpre,
+            hpre: hpre.expect("ffn_parts(want_pre) returns the pre-GELU tape"),
+            hgelu,
         });
     }
 
     let x_last = x;
     let (xf, muf, invf) = ln_fwd(flat, &x_last, lnf_g, lnf_b, d);
 
-    // tied head + softmax CE; dlogits computed in the same pass
+    // tied head (the engine's shared kernel) + softmax CE; dlogits
+    // computed from the same logits in the same pass
+    let logits = model.head_logits(&xf, n);
     let mut nll_sum = 0.0f64;
     let mut dlogits = vec![0.0f32; n * vcb];
-    {
-        let mut logits = vec![0.0f32; vcb];
-        for t in 0..n {
-            let xr = &xf[t * d..(t + 1) * d];
-            for (tokv, le) in logits.iter_mut().enumerate() {
-                let er = &flat[embed_off + tokv * d..embed_off + (tokv + 1) * d];
-                let mut acc = 0.0f32;
-                for (xe, ee) in xr.iter().zip(er) {
-                    acc += xe * ee;
-                }
-                *le = acc;
-            }
-            let tgt = tokens[t + 1] as usize;
-            if tgt >= vcb {
-                bail!("target {tgt} out of vocab {vcb}");
-            }
-            let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            let mut denom = 0.0f64;
-            for &l in &logits {
-                denom += ((l - mx) as f64).exp();
-            }
-            nll_sum += denom.ln() - (logits[tgt] - mx) as f64;
-            let dl = &mut dlogits[t * vcb..(t + 1) * vcb];
-            let inv_denom = (1.0 / denom) as f32;
-            for (v0, l) in dl.iter_mut().zip(&logits) {
-                *v0 = ce_scale * ((l - mx) as f64).exp() as f32 * inv_denom;
-            }
-            dl[tgt] -= ce_scale;
+    for t in 0..n {
+        let lr = &logits[t * vcb..(t + 1) * vcb];
+        let tgt = tokens[t + 1] as usize;
+        if tgt >= vcb {
+            bail!("target {tgt} out of vocab {vcb}");
         }
+        let mx = lr.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0.0f64;
+        for &l in lr {
+            denom += ((l - mx) as f64).exp();
+        }
+        nll_sum += denom.ln() - (lr[tgt] - mx) as f64;
+        let dl = &mut dlogits[t * vcb..(t + 1) * vcb];
+        let inv_denom = (1.0 / denom) as f32;
+        for (v0, l) in dl.iter_mut().zip(lr) {
+            *v0 = ce_scale * ((l - mx) as f64).exp() as f32 * inv_denom;
+        }
+        dl[tgt] -= ce_scale;
     }
 
     // ---------------- backward sweep ----------------
     let mut grad = vec![0.0f32; flat.len()];
 
-    // tied head: logits = xf @ embed.T
+    // tied head: logits = xf @ embedᵀ, so
+    //   dxf += dlogits @ embed ; dembed += dlogitsᵀ @ xf
+    let embed = &flat[embed_off..embed_off + vcb * d];
     let mut dxf = vec![0.0f32; n * d];
-    for t in 0..n {
-        let dlr = &dlogits[t * vcb..(t + 1) * vcb];
-        let xr = &xf[t * d..(t + 1) * d];
-        let dxr = &mut dxf[t * d..(t + 1) * d];
-        for (tokv, &dl) in dlr.iter().enumerate() {
-            if dl == 0.0 {
-                continue;
-            }
-            let er = &flat[embed_off + tokv * d..embed_off + (tokv + 1) * d];
-            let ger = &mut grad[embed_off + tokv * d..embed_off + (tokv + 1) * d];
-            for i in 0..d {
-                dxr[i] += dl * er[i];
-                ger[i] += dl * xr[i];
-            }
-        }
-    }
+    linalg::gemm(&dlogits, embed, &mut dxf, n, vcb, d);
+    linalg::gemm_ta(&dlogits, &xf, &mut grad[embed_off..embed_off + vcb * d], n, vcb, d);
     let mut dx = ln_bwd(flat, &mut grad, &dxf, &x_last, &muf, &invf, lnf_g, lnf_b, d);
 
     let mut reg_total = 0.0f32;
     let mut s_eff_sum = 0.0f32;
+    // the sweep needs no panels: the `dy @ Wᵀ` products read the
+    // original (input-major) weights, which are already in the gemm_at
+    // layout for the transposed direction
     for (lo, tape) in model.layer_offsets().iter().zip(&tapes).rev() {
         let np = model.node_params(lo);
         s_eff_sum += tape.m.iter().sum::<f32>();
 
-        // --- FFN block: x_out = x_mid + gelu(h2 @ w1 + b1) @ w2 + b2
-        let mut dhpre = vec![0.0f32; n * hd];
-        for t in 0..n {
-            let dxr = &dx[t * d..(t + 1) * d];
-            let hr = &tape.hpre[t * hd..(t + 1) * hd];
-            let dhr = &mut dhpre[t * hd..(t + 1) * hd];
+        // --- FFN block: x_out = x_mid + (b2 + gelu(h2 @ w1 + b1) @ w2)
+        //   dhid = dx @ w2ᵀ ; dW2 += hgeluᵀ dx ; db2 += Σ_t dx
+        let mut dhid = vec![0.0f32; n * hd];
+        linalg::gemm_at(&dx, &flat[lo.ffn_w2..lo.ffn_w2 + hd * d], &mut dhid, n, d, hd);
+        linalg::gemm_ta(&tape.hgelu, &dx, &mut grad[lo.ffn_w2..lo.ffn_w2 + hd * d], n, hd, d);
+        for dxr in dx.chunks_exact(d) {
             for (e, &dxe) in dxr.iter().enumerate() {
                 grad[lo.ffn_b2 + e] += dxe;
             }
-            for j in 0..hd {
-                let wrow = &flat[lo.ffn_w2 + j * d..lo.ffn_w2 + (j + 1) * d];
-                let gwrow = &mut grad[lo.ffn_w2 + j * d..lo.ffn_w2 + (j + 1) * d];
-                let hj = gelu(hr[j]);
-                let mut acc = 0.0f32;
-                for (e, &dxe) in dxr.iter().enumerate() {
-                    acc += dxe * wrow[e];
-                    gwrow[e] += hj * dxe;
-                }
-                dhr[j] = acc * gelu_grad(hr[j]);
-            }
+        }
+        // dhpre = dhid ⊙ gelu'(hpre) (in place); db1 += Σ_t dhpre
+        for (dh, &hp) in dhid.iter_mut().zip(&tape.hpre) {
+            *dh *= gelu_grad(hp);
+        }
+        for dhr in dhid.chunks_exact(hd) {
             for (j, &dh) in dhr.iter().enumerate() {
                 grad[lo.ffn_b1 + j] += dh;
             }
         }
         let mut dh2 = vec![0.0f32; n * d];
-        matmul_bwd(flat, &mut grad, &tape.h2, &dhpre, lo.ffn_w1, d, hd, &mut dh2);
+        linalg::gemm_at(&dhid, &flat[lo.ffn_w1..lo.ffn_w1 + d * hd], &mut dh2, n, hd, d);
+        linalg::gemm_ta(&tape.h2, &dhid, &mut grad[lo.ffn_w1..lo.ffn_w1 + d * hd], n, d, hd);
         let mut dx_mid = ln_bwd(
             flat, &mut grad, &dh2, &tape.x_mid, &tape.mu2, &tape.inv2, lo.ln2_g, lo.ln2_b, d,
         );
@@ -447,7 +344,8 @@ pub fn row_loss_and_grad(
 
         // --- mixer block: x_mid = x_in + (zmix @ w_o)
         let mut dzmix = vec![0.0f32; n * d];
-        matmul_bwd(flat, &mut grad, &tape.zmix, &dx_mid, lo.w_o, d, d, &mut dzmix);
+        linalg::gemm_at(&dx_mid, &flat[lo.w_o..lo.w_o + d * d], &mut dzmix, n, d, d);
+        linalg::gemm_ta(&tape.zmix, &dx_mid, &mut grad[lo.w_o..lo.w_o + d * d], n, d, d);
 
         // recurrence adjoints
         let inv_s = 1.0 / s as f32;
@@ -556,10 +454,13 @@ pub fn row_loss_and_grad(
         }
         reg_total += reg;
 
-        // projections back to h1
+        // projections back to h1:
+        //   dh1 += dfraw @ w_fᵀ + dv @ w_vᵀ ; dW += h1ᵀ dy
         let mut dh1 = vec![0.0f32; n * d];
-        matmul_bwd(flat, &mut grad, &tape.h1, &dfraw, lo.w_f, d, s, &mut dh1);
-        matmul_bwd(flat, &mut grad, &tape.h1, &dv, lo.w_v, d, d, &mut dh1);
+        linalg::gemm_at(&dfraw, &flat[lo.w_f..lo.w_f + d * s], &mut dh1, n, s, d);
+        linalg::gemm_ta(&tape.h1, &dfraw, &mut grad[lo.w_f..lo.w_f + d * s], n, d, s);
+        linalg::gemm_at(&dv, &flat[lo.w_v..lo.w_v + d * d], &mut dh1, n, d, d);
+        linalg::gemm_ta(&tape.h1, &dv, &mut grad[lo.w_v..lo.w_v + d * d], n, d, d);
 
         // adaptive gate backward: m = sigmoid(pooled @ w_a + b_a)
         if cfg.adaptive {

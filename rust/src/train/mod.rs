@@ -4,6 +4,13 @@
 //! clipping ([`optim`]), and multi-threaded data-parallel gradient
 //! accumulation ([`batch_loss_and_grad`]).
 //!
+//! Every matmul on both sides of the tape runs on the shared blocked
+//! kernels in [`crate::util::linalg`] — the tape forward additionally
+//! reuses the engine's packed weight panels and its
+//! `gate_full`/`ffn_parts`/`head_logits` helpers — so training can
+//! never optimise a subtly different network than eval/serving
+//! executes.
+//!
 //! Together these make `stlt train --backend native` a first-class
 //! path: the same `train_step` contract the AOT-lowered HLO exposes —
 //! `(flat, m, v, step, tokens[B,N+1], seed) -> (flat', m', v', loss,

@@ -1,0 +1,404 @@
+//! Shared blocked-GEMM kernel layer for every native hot path.
+//!
+//! The paper's pitch is that the O(N·S·d) recursive STLT makes
+//! attention-free execution *hardware*-bound, not algorithm-bound — but
+//! that only holds if the projections around the linear-time core run
+//! at GEMM speed (the same observation LATTE and the linear-attention
+//! line make about their wall-clock claims). This module is the one
+//! place matrix kernels live: the forward engine
+//! ([`crate::runtime::native_stlt`]), the hand-derived backward pass
+//! ([`crate::train::backward`]) and the benches all call these exact
+//! functions, so the two sides of training can never drift numerically.
+//!
+//! Design (dependency-free f32, no SIMD intrinsics):
+//!
+//! * **8-wide unrolled micro-kernels** — [`dot`] keeps eight
+//!   independent accumulators and [`axpy`] updates eight lanes per
+//!   step, giving the ILP (and autovectorization surface) the naive
+//!   scalar triple loops with per-element `== 0.0` branches never had.
+//! * **Cache blocking** — [`gemm_at`] tiles the packed operand so a
+//!   panel of output rows stays in L1/L2 while the activation rows
+//!   stream; [`gemm`]/[`gemm_ta`] block the shared/output dimension so
+//!   the accumulator panel stays hot.
+//! * **Determinism across chunking** — every `out[t, j]` of
+//!   [`gemm_at`] is exactly `dot(a_t, bt_j)`, independent of `n` and of
+//!   the blocking, so streaming a sequence in chunks produces bitwise
+//!   the same projections as one whole-sequence call. [`gemm`] and
+//!   [`gemm_ta`] accumulate their shared dimension in increasing index
+//!   order regardless of block boundaries, for the same reason.
+//! * **Packed panels** — weights are stored input-major (`[d, k]`) in
+//!   the flat parameter vector; [`transpose`] repacks them
+//!   output-major (`[k, d]`) once per bound parameter vector (see
+//!   `StltPlan::bind`), so the `n = 1` decode path is `k` contiguous
+//!   dot products instead of `d` strided broadcasts, and never
+//!   re-packs per token.
+//!
+//! The tanh-GELU pair ([`gelu`], [`gelu_grad`]) lives here for the same
+//! single-source reason; [`bias_gelu`] is the fused FFN epilogue.
+
+/// sqrt(2/pi), the tanh-GELU constant — shared by the forward engine
+/// and the backward pass so the approximation can never disagree.
+pub const GELU_C: f32 = 0.797_884_6;
+
+/// tanh-approximated GELU, matching `jax.nn.gelu` (approximate=True).
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + (GELU_C * (x + 0.044_715 * x * x * x)).tanh())
+}
+
+/// d/dx of [`gelu`] (same constant, same approximation).
+#[inline]
+pub fn gelu_grad(x: f32) -> f32 {
+    let th = (GELU_C * (x + 0.044_715 * x * x * x)).tanh();
+    0.5 * (1.0 + th) + 0.5 * x * (1.0 - th * th) * GELU_C * (1.0 + 3.0 * 0.044_715 * x * x)
+}
+
+/// Shared-dimension block size in f32 elements: tiles are sized so an
+/// operand panel of `BLOCK_ELEMS` floats (32 KiB) fits L1 with room for
+/// the streaming side.
+const BLOCK_ELEMS: usize = 8192;
+
+fn block_rows(row_len: usize) -> usize {
+    (BLOCK_ELEMS / row_len.max(1)).clamp(8, 512)
+}
+
+/// Dot product with eight independent accumulators. The lane layout —
+/// and therefore the floating-point summation order — depends only on
+/// the vector length, never on the caller or any blocking, which is
+/// what makes chunked and whole-sequence forwards bitwise identical.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 8];
+    let ca = a.chunks_exact(8);
+    let cb = b.chunks_exact(8);
+    let (ta, tb) = (ca.remainder(), cb.remainder());
+    for (xa, xb) in ca.zip(cb) {
+        let xa: &[f32; 8] = xa.try_into().unwrap();
+        let xb: &[f32; 8] = xb.try_into().unwrap();
+        for l in 0..8 {
+            acc[l] += xa[l] * xb[l];
+        }
+    }
+    let mut tail = 0.0f32;
+    for (x, y) in ta.iter().zip(tb) {
+        tail += x * y;
+    }
+    (((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]))) + tail
+}
+
+/// `y += alpha * x`, 8-wide unrolled. No zero-skip branch: the kernels
+/// are branchless by design (the old per-element `== 0.0` tests cost
+/// more than they saved on dense activations).
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let cx = x.chunks_exact(8);
+    let tx = cx.remainder();
+    for (ya, xa) in y.chunks_exact_mut(8).zip(cx) {
+        let xa: &[f32; 8] = xa.try_into().unwrap();
+        let ya: &mut [f32; 8] = ya.try_into().unwrap();
+        for l in 0..8 {
+            ya[l] += alpha * xa[l];
+        }
+    }
+    let head = x.len() - tx.len();
+    for (yv, xv) in y[head..].iter_mut().zip(tx) {
+        *yv += alpha * xv;
+    }
+}
+
+/// Repack a row-major `[rows, cols]` matrix as `[cols, rows]` — the
+/// "packed panel" layout [`gemm_at`]/[`gemv`] consume, built once per
+/// bound parameter vector.
+pub fn transpose(src: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    debug_assert_eq!(src.len(), rows * cols);
+    let mut out = vec![0.0f32; rows * cols];
+    for (r, row) in src.chunks_exact(cols.max(1)).enumerate() {
+        for (c, &v) in row.iter().enumerate() {
+            out[c * rows + r] = v;
+        }
+    }
+    out
+}
+
+/// `out [n, k] += a [n, d] @ B` with `B` supplied **pre-transposed** as
+/// `bt [k, d]` (each output column one contiguous row — the packed
+/// panel layout, which the tied head's `[vocab, d]` embedding matrix
+/// already has naturally).
+///
+/// Blocked over `bt` rows so a panel stays in cache while the `a` rows
+/// stream; `out[t, j]` is exactly `dot(a_t, bt_j)` for any `n` and any
+/// blocking.
+pub fn gemm_at(a: &[f32], bt: &[f32], out: &mut [f32], n: usize, d: usize, k: usize) {
+    debug_assert!(a.len() >= n * d && bt.len() >= k * d && out.len() >= n * k);
+    if n == 1 {
+        // the decode shape: skip the tiling bookkeeping entirely
+        return gemv(&a[..d], bt, &mut out[..k], d, k);
+    }
+    let jb = block_rows(d);
+    let mut j0 = 0;
+    while j0 < k {
+        let j1 = (j0 + jb).min(k);
+        for t in 0..n {
+            let ar = &a[t * d..(t + 1) * d];
+            let or = &mut out[t * k + j0..t * k + j1];
+            for (o, j) in or.iter_mut().zip(j0..j1) {
+                *o += dot(ar, &bt[j * d..(j + 1) * d]);
+            }
+        }
+        j0 = j1;
+    }
+}
+
+/// `out [n, k] += a [n, d] @ b [d, k]` with `b` in its natural
+/// input-major layout (used where no packed panel exists, e.g. the
+/// `dy @ Wᵀ`-style adjoint products in the backward pass, where the
+/// original weight rows are already contiguous in the needed order).
+///
+/// Blocked over the shared dimension so a `b` panel stays hot across
+/// rows; within one output row the `i`-terms accumulate in increasing
+/// order, so blocking never reorders the sum.
+pub fn gemm(a: &[f32], b: &[f32], out: &mut [f32], n: usize, d: usize, k: usize) {
+    debug_assert!(a.len() >= n * d && b.len() >= d * k && out.len() >= n * k);
+    let ib = block_rows(k);
+    let mut i0 = 0;
+    while i0 < d {
+        let i1 = (i0 + ib).min(d);
+        for t in 0..n {
+            let ar = &a[t * d..(t + 1) * d];
+            let or = &mut out[t * k..(t + 1) * k];
+            for i in i0..i1 {
+                axpy(ar[i], &b[i * k..(i + 1) * k], or);
+            }
+        }
+        i0 = i1;
+    }
+}
+
+/// `out [d, k] += aᵀ @ b` for `a [n, d]`, `b [n, k]` — the
+/// weight-gradient shape (`dW += xᵀ dy`). Blocked over output rows so
+/// the accumulator panel stays in cache while the `b` rows stream; per
+/// output element the `t`-terms accumulate in increasing order.
+pub fn gemm_ta(a: &[f32], b: &[f32], out: &mut [f32], n: usize, d: usize, k: usize) {
+    debug_assert!(a.len() >= n * d && b.len() >= n * k && out.len() >= d * k);
+    let ib = block_rows(k);
+    let mut i0 = 0;
+    while i0 < d {
+        let i1 = (i0 + ib).min(d);
+        for t in 0..n {
+            let ar = &a[t * d..(t + 1) * d];
+            let br = &b[t * k..(t + 1) * k];
+            for i in i0..i1 {
+                axpy(ar[i], br, &mut out[i * k..(i + 1) * k]);
+            }
+        }
+        i0 = i1;
+    }
+}
+
+/// `out [k] += x [d] @ B` with `B` pre-transposed as `bt [k, d]`: the
+/// single-token decode projection, `k` contiguous dot products over the
+/// packed panel. [`gemm_at`] delegates its `n = 1` case here, so the
+/// decode path takes this kernel through every projection.
+pub fn gemv(x: &[f32], bt: &[f32], out: &mut [f32], d: usize, k: usize) {
+    debug_assert!(x.len() >= d && bt.len() >= k * d && out.len() >= k);
+    for (j, o) in out.iter_mut().enumerate().take(k) {
+        *o += dot(&x[..d], &bt[j * d..(j + 1) * d]);
+    }
+}
+
+/// Add `bias` to every `bias.len()`-wide row of `h` (the pre-GELU FFN
+/// activations the training tape records).
+pub fn add_bias(h: &mut [f32], bias: &[f32]) {
+    for row in h.chunks_exact_mut(bias.len().max(1)) {
+        for (v, &b) in row.iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+/// Fused FFN epilogue: `h[t, :] = gelu(h[t, :] + bias)` in one pass.
+/// Element-for-element identical to [`add_bias`] followed by a GELU
+/// map, so the engine (fused) and the tape (split, to keep the
+/// pre-GELU activations) stay bitwise equal.
+pub fn bias_gelu(h: &mut [f32], bias: &[f32]) {
+    for row in h.chunks_exact_mut(bias.len().max(1)) {
+        for (v, &b) in row.iter_mut().zip(bias) {
+            *v = gelu(*v + b);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect()
+    }
+
+    fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!(
+                (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+                "{what}[{i}]: {x} vs {y}"
+            );
+        }
+    }
+
+    /// Scalar triple-loop oracle: out += a @ b, b input-major [d, k].
+    fn naive_gemm(a: &[f32], b: &[f32], out: &mut [f32], n: usize, d: usize, k: usize) {
+        for t in 0..n {
+            for i in 0..d {
+                for j in 0..k {
+                    out[t * k + j] += a[t * d + i] * b[i * k + j];
+                }
+            }
+        }
+    }
+
+    // odd shapes, the n=1 decode shape, and sizes crossing block edges
+    const SHAPES: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (1, 64, 256),  // decode: one token against a packed panel
+        (3, 7, 13),
+        (5, 8, 8),
+        (12, 17, 5),
+        (2, 1024, 3),   // shared dim crosses BLOCK_ELEMS/k tiling
+        (70, 65, 130),  // everything off the 8-lane boundary
+        (16, 256, 600), // bt tile count > 1 at d=256 (block_rows = 32)
+    ];
+
+    #[test]
+    fn gemm_matches_naive_oracle() {
+        for &(n, d, k) in SHAPES {
+            let a = randv(n * d, 1);
+            let b = randv(d * k, 2);
+            let mut want = randv(n * k, 3); // nonzero init: += semantics
+            let mut got = want.clone();
+            naive_gemm(&a, &b, &mut want, n, d, k);
+            gemm(&a, &b, &mut got, n, d, k);
+            assert_close(&got, &want, 1e-5, &format!("gemm {n}x{d}x{k}"));
+        }
+    }
+
+    #[test]
+    fn gemm_at_matches_naive_oracle_via_transpose() {
+        for &(n, d, k) in SHAPES {
+            let a = randv(n * d, 4);
+            let b = randv(d * k, 5);
+            let bt = transpose(&b, d, k);
+            let mut want = randv(n * k, 6);
+            let mut got = want.clone();
+            naive_gemm(&a, &b, &mut want, n, d, k);
+            gemm_at(&a, &bt, &mut got, n, d, k);
+            assert_close(&got, &want, 1e-5, &format!("gemm_at {n}x{d}x{k}"));
+        }
+    }
+
+    #[test]
+    fn gemm_ta_matches_naive_oracle() {
+        for &(n, d, k) in SHAPES {
+            let a = randv(n * d, 7);
+            let b = randv(n * k, 8);
+            let mut want = randv(d * k, 9);
+            let mut got = want.clone();
+            for t in 0..n {
+                for i in 0..d {
+                    for j in 0..k {
+                        want[i * k + j] += a[t * d + i] * b[t * k + j];
+                    }
+                }
+            }
+            gemm_ta(&a, &b, &mut got, n, d, k);
+            assert_close(&got, &want, 1e-5, &format!("gemm_ta {n}x{d}x{k}"));
+        }
+    }
+
+    #[test]
+    fn gemv_matches_naive_oracle() {
+        // gemm_at(n = 1) delegates here, so this pins the decode shape
+        // against the scalar oracle directly
+        for &(_, d, k) in SHAPES {
+            let x = randv(d, 10);
+            let b = randv(d * k, 11);
+            let bt = transpose(&b, d, k);
+            let mut want = randv(k, 20);
+            let mut got = want.clone();
+            naive_gemm(&x, &b, &mut want, 1, d, k);
+            gemv(&x, &bt, &mut got, d, k);
+            assert_close(&got, &want, 1e-5, &format!("gemv {d}x{k}"));
+        }
+    }
+
+    #[test]
+    fn gemm_at_is_chunk_invariant_bitwise() {
+        // the streaming guarantee: projecting rows in chunks must equal
+        // one whole-sequence call bit-for-bit
+        let (n, d, k) = (23, 40, 50);
+        let a = randv(n * d, 12);
+        let bt = randv(k * d, 13);
+        let mut whole = vec![0.0f32; n * k];
+        gemm_at(&a, &bt, &mut whole, n, d, k);
+        let mut pieces = vec![0.0f32; n * k];
+        let mut t0 = 0;
+        for step in [1usize, 7, 2, 13] {
+            let t1 = (t0 + step).min(n);
+            gemm_at(&a[t0 * d..t1 * d], &bt, &mut pieces[t0 * k..t1 * k], t1 - t0, d, k);
+            t0 = t1;
+        }
+        assert_eq!(whole, pieces, "chunked gemm_at must be bitwise whole-call");
+    }
+
+    #[test]
+    fn transpose_round_trips() {
+        let (r, c) = (9, 14);
+        let src = randv(r * c, 14);
+        let t = transpose(&src, r, c);
+        assert_eq!(transpose(&t, c, r), src);
+        assert_eq!(t[3 * r + 2], src[2 * c + 3]);
+    }
+
+    #[test]
+    fn bias_gelu_matches_split_form() {
+        let (n, k) = (6, 21);
+        let bias = randv(k, 15);
+        let mut fused = randv(n * k, 16);
+        let mut split = fused.clone();
+        bias_gelu(&mut fused, &bias);
+        add_bias(&mut split, &bias);
+        for v in split.iter_mut() {
+            *v = gelu(*v);
+        }
+        assert_eq!(fused, split, "fused epilogue must be bitwise the split form");
+    }
+
+    #[test]
+    fn dot_and_axpy_handle_tails() {
+        for len in [0usize, 1, 7, 8, 9, 16, 31] {
+            let a = randv(len, 17);
+            let b = randv(len, 18);
+            let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - want).abs() < 1e-5 * (1.0 + want.abs()), "dot len {len}");
+            let mut y = randv(len, 19);
+            let y0 = y.clone();
+            axpy(0.5, &a, &mut y);
+            for i in 0..len {
+                assert!((y[i] - (y0[i] + 0.5 * a[i])).abs() < 1e-6, "axpy len {len} at {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn gelu_grad_matches_finite_difference() {
+        for x in [-3.0f32, -0.7, 0.0, 0.3, 2.5] {
+            let eps = 1e-3f32;
+            let fd = (gelu(x + eps) - gelu(x - eps)) / (2.0 * eps);
+            assert!((gelu_grad(x) - fd).abs() < 1e-3, "gelu'({x}): {} vs {fd}", gelu_grad(x));
+        }
+    }
+}

@@ -5,6 +5,7 @@
 pub mod cli;
 pub mod fft;
 pub mod json;
+pub mod linalg;
 pub mod logging;
 pub mod prop;
 pub mod rng;

@@ -1,20 +1,99 @@
 //! Minimal fixed-size thread pool (no tokio/rayon offline).
 //!
-//! Jobs are `FnOnce + Send` closures; `join()` blocks until the queue is
-//! drained. The coordinator's server uses this for its worker threads;
-//! note the PJRT executor itself is driven from a single model thread
-//! (the CPU client is not profitably shared across threads on 1 core).
+//! Jobs are `FnOnce + Send` closures; `join()` blocks until the queue
+//! is drained. Panic-safe: a panicking job decrements the pending
+//! counter through a drop guard and its unwind is caught on the worker,
+//! so the worker thread survives, the mutex is never poisoned, and the
+//! panic message is surfaced by the next `join`/[`ThreadPool::try_join`]
+//! instead of deadlocking the coordinator (the old implementation left
+//! `pending` stuck forever and poisoned the lock).
+//!
+//! [`global`] is the process-wide pool the native backend and the
+//! row-parallel kernels share; [`in_worker`] marks pool worker threads
+//! so nested fan-outs ([`parallel_map`] from inside a job) run inline
+//! instead of parking a worker in `join()` on its own queue — the
+//! classic self-join deadlock. [`scatter_rows`] is the borrowing
+//! (scoped) row-parallel primitive the STLT engine uses for the tied
+//! head and FFN.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::any::Any;
+use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, OnceLock};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+thread_local! {
+    static IN_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// True on any [`ThreadPool`] worker thread (of any pool). Nested
+/// parallel primitives consult this to run inline rather than enqueue
+/// work a blocked worker would wait on.
+pub fn in_worker() -> bool {
+    IN_WORKER.with(|w| w.get())
+}
+
+/// The process-wide shared pool, lazily sized to the available
+/// parallelism. The native backend and the row-parallel eval/train
+/// paths all draw from this one pool so the machine is never
+/// oversubscribed by stacked per-component pools.
+pub fn global() -> &'static ThreadPool {
+    static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+    GLOBAL.get_or_init(|| {
+        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        ThreadPool::new(n)
+    })
+}
+
+#[derive(Default)]
+struct PoolState {
+    pending: usize,
+    panics: Vec<String>,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    cv: Condvar,
+}
+
+impl Shared {
+    /// The state critical sections are panic-free, but never propagate
+    /// a poison either way — a poisoned pool must still drain.
+    fn lock_state(&self) -> MutexGuard<'_, PoolState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// Decrements `pending` and wakes joiners on drop, so the accounting
+/// survives a panicking job (satellite fix: the old pool decremented
+/// only on the success path).
+struct PendingGuard<'a> {
+    shared: &'a Shared,
+}
+
+impl Drop for PendingGuard<'_> {
+    fn drop(&mut self) {
+        self.shared.lock_state().pending -= 1;
+        self.shared.cv.notify_all();
+    }
+}
+
+fn panic_message(payload: &(dyn Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 pub struct ThreadPool {
     tx: Option<mpsc::Sender<Job>>,
     workers: Vec<thread::JoinHandle<()>>,
-    pending: Arc<(Mutex<usize>, Condvar)>,
+    shared: Arc<Shared>,
 }
 
 impl ThreadPool {
@@ -22,47 +101,71 @@ impl ThreadPool {
         let n = n.max(1);
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
-        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState::default()),
+            cv: Condvar::new(),
+        });
         let mut workers = Vec::with_capacity(n);
         for i in 0..n {
             let rx = Arc::clone(&rx);
-            let pending = Arc::clone(&pending);
-            workers.push(
-                thread::Builder::new()
-                    .name(format!("stlt-worker-{i}"))
-                    .spawn(move || loop {
-                        let job = { rx.lock().unwrap().recv() };
+            let shared = Arc::clone(&shared);
+            let worker = thread::Builder::new()
+                .name(format!("stlt-worker-{i}"))
+                .spawn(move || {
+                    IN_WORKER.with(|w| w.set(true));
+                    loop {
+                        let job = { rx.lock().unwrap_or_else(|e| e.into_inner()).recv() };
                         match job {
                             Ok(job) => {
-                                job();
-                                let (lock, cv) = &*pending;
-                                let mut p = lock.lock().unwrap();
-                                *p -= 1;
-                                cv.notify_all();
+                                let _guard = PendingGuard { shared: &shared };
+                                if let Err(p) = catch_unwind(AssertUnwindSafe(job)) {
+                                    shared.lock_state().panics.push(panic_message(p.as_ref()));
+                                }
                             }
                             Err(_) => break,
                         }
-                    })
-                    .expect("spawn worker"),
-            );
+                    }
+                })
+                .expect("spawn worker");
+            workers.push(worker);
         }
-        ThreadPool { tx: Some(tx), workers, pending }
+        ThreadPool { tx: Some(tx), workers, shared }
+    }
+
+    /// Number of worker threads.
+    pub fn threads(&self) -> usize {
+        self.workers.len()
     }
 
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        {
-            let (lock, _) = &*self.pending;
-            *lock.lock().unwrap() += 1;
-        }
+        self.shared.lock_state().pending += 1;
         self.tx.as_ref().unwrap().send(Box::new(f)).expect("pool closed");
     }
 
-    /// Block until every submitted job has finished.
+    /// Block until every submitted job has finished. Panics (on this,
+    /// the coordinating thread) with the collected messages if any job
+    /// panicked — see [`ThreadPool::try_join`] for the non-panicking
+    /// form.
     pub fn join(&self) {
-        let (lock, cv) = &*self.pending;
-        let mut p = lock.lock().unwrap();
-        while *p > 0 {
-            p = cv.wait(p).unwrap();
+        if let Err(e) = self.try_join() {
+            panic!("{e}");
+        }
+    }
+
+    /// Block until the queue drains, then report (and clear) any job
+    /// panics that occurred since the last join. The queue counter is
+    /// pool-global, so concurrent submitters wait on each other's jobs
+    /// (unchanged semantics) and may observe each other's panics.
+    pub fn try_join(&self) -> Result<(), String> {
+        let mut st = self.shared.lock_state();
+        while st.pending > 0 {
+            st = self.shared.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        if st.panics.is_empty() {
+            Ok(())
+        } else {
+            let panics = std::mem::take(&mut st.panics);
+            Err(format!("{} pool job(s) panicked: {}", panics.len(), panics.join("; ")))
         }
     }
 }
@@ -76,23 +179,30 @@ impl Drop for ThreadPool {
     }
 }
 
-/// Run `f(i)` for i in 0..n across the pool, collecting results in order.
+/// Run `f(i)` for i in 0..n across the pool, collecting results in
+/// order.
+///
+/// Runs inline on the calling thread when `n <= 1` or when called from
+/// inside a pool worker — a nested fan-out would park the worker in
+/// `join()` behind its own unfinished slot. If a job panics, the panic
+/// is re-raised here once the queue has drained (instead of the old
+/// behaviour: a permanent deadlock on the never-decremented counter).
 pub fn parallel_map<T: Send + 'static, F>(pool: &ThreadPool, n: usize, f: F) -> Vec<T>
 where
     F: Fn(usize) -> T + Send + Sync + 'static,
 {
+    if n <= 1 || in_worker() {
+        return (0..n).map(f).collect();
+    }
     let f = Arc::new(f);
     let results: Arc<Mutex<Vec<Option<T>>>> =
         Arc::new(Mutex::new((0..n).map(|_| None).collect()));
-    let done = Arc::new(AtomicUsize::new(0));
     for i in 0..n {
         let f = Arc::clone(&f);
         let results = Arc::clone(&results);
-        let done = Arc::clone(&done);
         pool.execute(move || {
             let r = f(i);
             results.lock().unwrap()[i] = Some(r);
-            done.fetch_add(1, Ordering::SeqCst);
         });
     }
     pool.join();
@@ -105,9 +215,55 @@ where
         .collect()
 }
 
+/// Row-parallel scatter over borrowed data: split `out` (`n` rows of
+/// `row_len` f32s) into one contiguous chunk per available core and run
+/// `f(t0, t1, chunk)` concurrently on scoped threads, with the last
+/// chunk executing on the calling thread.
+///
+/// This is the engine-side primitive for the tied logits head and the
+/// FFN (rows are independent there), kept separate from the queue pool
+/// because those call sites *borrow* activations — scoped threads give
+/// them parallelism without `Arc`-ing every intermediate. Runs inline
+/// when `n < min_rows`, when only one core exists, or on a pool worker
+/// (the batch level already owns the cores then), so nesting is always
+/// deadlock- and oversubscription-free. Each out element is written by
+/// exactly one chunk; parallel and inline execution agree bitwise as
+/// long as `f`'s per-row output does not depend on (t0, t1) — true of
+/// every kernel call site (each row is an independent set of dots).
+pub fn scatter_rows<F>(n: usize, row_len: usize, out: &mut [f32], min_rows: usize, f: F)
+where
+    F: Fn(usize, usize, &mut [f32]) + Send + Sync,
+{
+    assert!(out.len() >= n * row_len, "scatter_rows: out too small");
+    let threads = thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
+    if n < min_rows.max(2) || threads < 2 || in_worker() {
+        f(0, n, &mut out[..n * row_len]);
+        return;
+    }
+    let nch = threads.min(n);
+    let per = n.div_ceil(nch);
+    thread::scope(|s| {
+        let f = &f;
+        let mut rest = &mut out[..n * row_len];
+        let mut t0 = 0usize;
+        while t0 < n {
+            let t1 = (t0 + per).min(n);
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut((t1 - t0) * row_len);
+            rest = tail;
+            if t1 < n {
+                s.spawn(move || f(t0, t1, chunk));
+            } else {
+                f(t0, t1, chunk); // final chunk on the calling thread
+            }
+            t0 = t1;
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
     fn runs_all_jobs() {
@@ -137,5 +293,83 @@ mod tests {
         pool.execute(|| {});
         pool.join();
         pool.join();
+    }
+
+    #[test]
+    fn panicking_job_is_surfaced_not_deadlocked() {
+        // the satellite seam: before the drop-guard fix this join hung
+        // forever (pending never decremented) or poisoned the mutex
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for i in 0..8 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                if i == 3 {
+                    panic!("job {i} exploded");
+                }
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        let err = pool.try_join().expect_err("panic must surface");
+        assert!(err.contains("job 3 exploded"), "message lost: {err}");
+        assert_eq!(counter.load(Ordering::SeqCst), 7, "other jobs must complete");
+
+        // the pool (and its workers) must remain fully usable afterwards
+        let c = Arc::clone(&counter);
+        pool.execute(move || {
+            c.fetch_add(10, Ordering::SeqCst);
+        });
+        pool.try_join().expect("panic report must clear the error state");
+        assert_eq!(counter.load(Ordering::SeqCst), 17);
+    }
+
+    #[test]
+    fn parallel_map_reraises_job_panic_on_caller() {
+        let pool = ThreadPool::new(2);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            parallel_map(&pool, 6, |i| {
+                if i == 2 {
+                    panic!("row 2 bad");
+                }
+                i
+            })
+        }));
+        let msg = panic_message(caught.expect_err("must re-raise").as_ref());
+        assert!(msg.contains("row 2 bad"), "message lost: {msg}");
+        // and again: the pool survives
+        assert_eq!(parallel_map(&pool, 4, |i| i + 1), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn nested_parallel_map_runs_inline_without_deadlock() {
+        let pool = ThreadPool::new(2);
+        // 4 outer jobs on 2 workers, each fanning out again: the nested
+        // calls must run inline (in_worker) or this join never returns
+        let out = parallel_map(&pool, 4, |i| {
+            assert!(in_worker());
+            parallel_map(global(), 3, move |j| i * 10 + j)
+        });
+        assert_eq!(out[2], vec![20, 21, 22]);
+    }
+
+    #[test]
+    fn scatter_rows_covers_every_chunk_exactly_once() {
+        for n in [0usize, 1, 2, 15, 16, 33] {
+            let row_len = 3;
+            let mut out = vec![0.0f32; n * row_len];
+            scatter_rows(n, row_len, &mut out, 16, |t0, t1, chunk| {
+                assert_eq!(chunk.len(), (t1 - t0) * row_len);
+                for (r, row) in chunk.chunks_exact_mut(row_len).enumerate() {
+                    for v in row.iter_mut() {
+                        *v += (t0 + r) as f32; // += catches double-writes
+                    }
+                }
+            });
+            for t in 0..n {
+                for j in 0..row_len {
+                    assert_eq!(out[t * row_len + j], t as f32, "row {t} col {j} (n={n})");
+                }
+            }
+        }
     }
 }

@@ -1,0 +1,180 @@
+//! Error-path state preservation for the typed entry points in
+//! `runtime/exec.rs` (satellite bugfix): `TrainStep::run`,
+//! `StreamStep::run` and `DecodeStep::run` move their host state
+//! (`TrainState.flat/m/v`, the stream carry) into the input tensors
+//! before the fallible backend call. A backend error used to leave the
+//! caller with silently zero-length vectors — a poisoned TrainState or
+//! an unresumable stream. These tests drive real backend failures
+//! (out-of-vocab tokens reaching the native engine) and pin that the
+//! state survives bitwise and the step is retryable.
+#![cfg(feature = "native")]
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use stlt::runtime::artifact::{Entry, ModelConfig, TensorSpec};
+use stlt::runtime::{DecodeStep, Manifest, Runtime, StreamStep, TrainState, TrainStep};
+use stlt::util::rng::Rng;
+
+const VOCAB: usize = 23;
+const D: usize = 8;
+const LAYERS: usize = 2;
+const S: usize = 4;
+const CHUNK: usize = 6;
+const B: usize = 2;
+const N1: usize = 9;
+
+fn cfg() -> ModelConfig {
+    ModelConfig {
+        arch: "stlt".into(),
+        vocab: VOCAB,
+        d_model: D,
+        n_layers: LAYERS,
+        n_ctx: 16,
+        s_max: S,
+        batch: B,
+        mode: "linear".into(),
+        ffn_mult: 2,
+        ..ModelConfig::default()
+    }
+}
+
+fn f32s(shape: &[usize]) -> TensorSpec {
+    TensorSpec { dtype: stlt::runtime::DType::F32, shape: shape.to_vec() }
+}
+
+fn i32s(shape: &[usize]) -> TensorSpec {
+    TensorSpec { dtype: stlt::runtime::DType::I32, shape: shape.to_vec() }
+}
+
+fn entry(name: &str, kind: &str, p: usize, inputs: Vec<TensorSpec>, outputs: Vec<TensorSpec>) -> Entry {
+    let n_inputs = inputs.len();
+    Entry {
+        name: name.to_string(),
+        file: PathBuf::from("native-synthetic"),
+        kind: kind.to_string(),
+        param_count: p,
+        inputs,
+        outputs,
+        config: cfg(),
+        extra: BTreeMap::new(),
+        init_file: None,
+        kept_inputs: (0..n_inputs).collect(),
+    }
+}
+
+fn manifest() -> Manifest {
+    let p = stlt::interpret::total_params(&stlt::interpret::trunk_layout(&cfg()));
+    let ls = [LAYERS, S, 2];
+    let us = [LAYERS, S, D, 2];
+    let mut entries = BTreeMap::new();
+    for e in [
+        entry(
+            "st.train",
+            "train_step",
+            p,
+            vec![f32s(&[p]), f32s(&[p]), f32s(&[p]), i32s(&[]), i32s(&[B, N1]), i32s(&[])],
+            vec![f32s(&[p]), f32s(&[p]), f32s(&[p]), f32s(&[]), f32s(&[]), f32s(&[])],
+        ),
+        entry(
+            "st.stream",
+            "stream_step",
+            p,
+            vec![f32s(&[p]), f32s(&ls), f32s(&us), i32s(&[CHUNK]), i32s(&[CHUNK]), f32s(&[CHUNK])],
+            vec![f32s(&ls), f32s(&us), f32s(&[]), f32s(&[])],
+        ),
+        entry(
+            "st.decode",
+            "decode_step",
+            p,
+            vec![f32s(&[p]), f32s(&ls), f32s(&us), i32s(&[1])],
+            vec![f32s(&ls), f32s(&us), f32s(&[VOCAB])],
+        ),
+    ] {
+        entries.insert(e.name.clone(), e);
+    }
+    Manifest { dir: PathBuf::from("."), entries }
+}
+
+fn tokens(n: usize, seed: u64) -> Vec<i32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.below(VOCAB as u64) as i32).collect()
+}
+
+#[test]
+fn train_step_error_preserves_state_and_is_retryable() {
+    let m = manifest();
+    let rt = Runtime::native().unwrap();
+    let step = TrainStep::new(&rt, &m, "st.train").unwrap();
+    let mut state = TrainState::init_for(step.entry(), 3).unwrap();
+    let good = tokens(B * N1, 5);
+
+    // one good step so the moments are nonzero (a harder restore target)
+    step.run(&mut state, &good, 0).unwrap();
+    let (flat0, m0, v0, step0) =
+        (state.flat.clone(), state.m.clone(), state.v.clone(), state.step);
+
+    // a token past the vocab fails inside the native engine, after the
+    // state vectors were moved into the input tensors
+    let mut bad = good.clone();
+    bad[N1 + 1] = VOCAB as i32 + 3;
+    let err = format!("{:#}", step.run(&mut state, &bad, 1).unwrap_err());
+    assert!(err.contains("vocab"), "unexpected error: {err}");
+
+    assert_eq!(state.flat, flat0, "flat must survive a failed step bitwise");
+    assert_eq!(state.m, m0, "first moment must survive a failed step");
+    assert_eq!(state.v, v0, "second moment must survive a failed step");
+    assert_eq!(state.step, step0, "step counter must not advance on error");
+
+    // and the very same state must be usable for a retry
+    let metrics = step.run(&mut state, &good, 1).unwrap();
+    assert!(metrics.loss.is_finite());
+    assert_eq!(state.step, step0 + 1);
+}
+
+#[test]
+fn stream_step_error_preserves_carry_and_is_resumable() {
+    let m = manifest();
+    let rt = Runtime::native().unwrap();
+    let stream = StreamStep::new(&rt, &m, "st.stream").unwrap();
+    let flat = stlt::runtime::native_stlt::host_init(&cfg(), 11);
+    let mut carry = stream.zero_carry();
+    let toks = tokens(CHUNK, 1);
+    let tgts = tokens(CHUNK, 2);
+    let mask = vec![1.0f32; CHUNK];
+
+    // advance one good chunk so the carry is nonzero
+    stream.run(&flat, &mut carry, &toks, &tgts, &mask).unwrap();
+    let (l0, u0) = (carry.l.clone(), carry.u.clone());
+    assert!(l0.iter().any(|&x| x != 0.0), "carry should be advanced");
+
+    let mut bad = toks.clone();
+    bad[2] = VOCAB as i32 + 1;
+    let err = format!("{:#}", stream.run(&flat, &mut carry, &bad, &tgts, &mask).unwrap_err());
+    assert!(err.contains("vocab"), "unexpected error: {err}");
+    assert_eq!(carry.l, l0, "L carry must survive a failed chunk bitwise");
+    assert_eq!(carry.u, u0, "U carry must survive a failed chunk bitwise");
+
+    // the stream must resume from exactly where it was
+    let (nll, cnt) = stream.run(&flat, &mut carry, &toks, &tgts, &mask).unwrap();
+    assert!(nll.is_finite() && cnt == CHUNK as f64);
+}
+
+#[test]
+fn decode_step_error_preserves_carry() {
+    let m = manifest();
+    let rt = Runtime::native().unwrap();
+    let decode = DecodeStep::new(&rt, &m, "st.decode").unwrap();
+    let flat = stlt::runtime::native_stlt::host_init(&cfg(), 13);
+    let mut carry = decode.zero_carry();
+    decode.run(&flat, &mut carry, 4).unwrap();
+    let (l0, u0) = (carry.l.clone(), carry.u.clone());
+
+    let err = format!("{:#}", decode.run(&flat, &mut carry, VOCAB as i32).unwrap_err());
+    assert!(err.contains("vocab"), "unexpected error: {err}");
+    assert_eq!(carry.l, l0, "decode carry must survive a failed step");
+    assert_eq!(carry.u, u0);
+
+    let logits = decode.run(&flat, &mut carry, 5).unwrap();
+    assert_eq!(logits.len(), VOCAB);
+}
