@@ -1,24 +1,65 @@
 //! Native-backend engine bench: tokens/s of the pure-Rust STLT forward,
 //! streaming, decode and train_step paths at the "tiny" scale (runs
-//! with default features — no artifacts, no XLA).
+//! with default features — no artifacts, no XLA), including the
+//! segment-checkpointed train_step with its peak-tape-bytes accounting.
 //!
 //! STLT_BENCH_SMOKE=1 shortens every measurement window so CI can run
 //! this as a visibility smoke (perf regressions in the backward pass
 //! show up in the logged tokens/s) without burning minutes.
+//!
+//! Every row is also appended to a machine-readable `BENCH_native.json`
+//! (override the path with STLT_BENCH_JSON) so the bench trajectory can
+//! be tracked across commits instead of scraped from CI logs.
 
+use std::fmt::Write as _;
 use std::sync::Arc;
 
-use stlt::bench::bench_for;
+use stlt::bench::{bench_for, BenchResult};
 use stlt::runtime::artifact::ModelConfig;
 use stlt::runtime::native_stlt::{host_init, StltModel};
-use stlt::train::{batch_loss_and_grad, native_train_step};
+use stlt::train::{batch_loss_and_grad, native_train_step, tape_bytes};
 use stlt::util::linalg;
-use stlt::util::threadpool::ThreadPool;
+use stlt::util::threadpool::{configured_threads, ThreadPool};
+
+/// One machine-readable bench row: the timing summary plus whatever
+/// derived metrics the human-readable line prints.
+struct JsonRow {
+    r: BenchResult,
+    /// ("metric name", value) pairs: tokens_per_s, gflops, tape_bytes…
+    extra: Vec<(&'static str, f64)>,
+}
+
+struct Rows(Vec<JsonRow>);
+
+impl Rows {
+    fn push(&mut self, r: BenchResult, extra: Vec<(&'static str, f64)>) {
+        self.0.push(JsonRow { r, extra });
+    }
+
+    /// Hand-rolled JSON (util::json is a parser; no serde offline).
+    fn to_json(&self) -> String {
+        let mut s = String::from("{\n  \"bench\": \"native\",\n  \"results\": [\n");
+        for (i, row) in self.0.iter().enumerate() {
+            let _ = write!(
+                s,
+                "    {{\"name\": {:?}, \"iters\": {}, \"mean_s\": {:.9}, \
+                 \"p50_s\": {:.9}, \"p95_s\": {:.9}, \"min_s\": {:.9}",
+                row.r.name, row.r.iters, row.r.mean_s, row.r.p50_s, row.r.p95_s, row.r.min_s
+            );
+            for (k, v) in &row.extra {
+                let _ = write!(s, ", {k:?}: {v:.3}");
+            }
+            s.push_str(if i + 1 < self.0.len() { "},\n" } else { "}\n" });
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+}
 
 /// Blocked-kernel micro rows: GFLOP/s of the shared linalg kernels at
 /// the tied-head shape (n × d × vocab, the single largest matmul) so
 /// kernel regressions are visible independently of the full engine.
-fn bench_kernels(secs: f64) {
+fn bench_kernels(secs: f64, rows: &mut Rows) {
     let (n, d, k) = (128usize, 64usize, 256usize);
     let mut rng = stlt::util::rng::Rng::new(7);
     let mut fill = |len: usize| -> Vec<f32> { (0..len).map(|_| rng.f32() - 0.5).collect() };
@@ -34,6 +75,7 @@ fn bench_kernels(secs: f64) {
         std::hint::black_box(&out);
     });
     println!("{}   ({:.2} GFLOP/s)", r.row(), gflop / r.p50_s);
+    rows.push(r.clone(), vec![("gflops", gflop / r.p50_s)]);
 
     let r = bench_for("linalg/gemm    128x64x256 (axpy)", secs.min(1.0), || {
         out.fill(0.0);
@@ -41,6 +83,7 @@ fn bench_kernels(secs: f64) {
         std::hint::black_box(&out);
     });
     println!("{}   ({:.2} GFLOP/s)", r.row(), gflop / r.p50_s);
+    rows.push(r.clone(), vec![("gflops", gflop / r.p50_s)]);
 
     let mut dw = vec![0.0f32; d * k];
     let dy = fill(n * k);
@@ -50,6 +93,7 @@ fn bench_kernels(secs: f64) {
         std::hint::black_box(&dw);
     });
     println!("{}   ({:.2} GFLOP/s)", r.row(), gflop / r.p50_s);
+    rows.push(r.clone(), vec![("gflops", gflop / r.p50_s)]);
 }
 
 fn main() {
@@ -61,7 +105,8 @@ fn main() {
         "== native engine bench (no artifacts needed{}) ==",
         if smoke { ", smoke mode" } else { "" }
     );
-    bench_kernels(secs);
+    let mut rows = Rows(Vec::new());
+    bench_kernels(secs, &mut rows);
     let cfg = ModelConfig {
         arch: "stlt".into(),
         vocab: 256,
@@ -81,6 +126,7 @@ fn main() {
         std::hint::black_box(model.forward_logits(&tokens).unwrap());
     });
     println!("{}   ({:.0} tok/s)", r.row(), 128.0 / r.p50_s);
+    rows.push(r.clone(), vec![("tokens_per_s", 128.0 / r.p50_s)]);
 
     let chunk: Vec<i32> = tokens[..64].to_vec();
     let (mut l, mut u) = model.zero_carry();
@@ -88,36 +134,63 @@ fn main() {
         std::hint::black_box(model.trunk_chunk(&mut l, &mut u, &chunk, 0.0, None).unwrap());
     });
     println!("{}   ({:.0} tok/s)", r.row(), 64.0 / r.p50_s);
+    rows.push(r.clone(), vec![("tokens_per_s", 64.0 / r.p50_s)]);
 
     let (mut l, mut u) = model.zero_carry();
     let r = bench_for("native/decode 1 tok", secs.min(2.0), || {
         std::hint::black_box(model.trunk_chunk(&mut l, &mut u, &tokens[..1], 0.0, None).unwrap());
     });
     println!("{}   ({:.0} tok/s)", r.row(), 1.0 / r.p50_s);
+    rows.push(r.clone(), vec![("tokens_per_s", 1.0 / r.p50_s)]);
 
-    // training: gradient accumulation alone, then the full optimiser step
-    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    let pool = ThreadPool::new(threads);
+    // training: gradient accumulation alone, then the full optimiser
+    // step — whole-sequence tape vs the segment-checkpointed tape
+    let pool = ThreadPool::new(configured_threads());
     let (b, n1) = (cfg.batch, 33usize); // short rows keep the smoke cheap
+    let n = n1 - 1;
     let mut rng = stlt::util::rng::Rng::new(5);
     let batch: Vec<i32> = (0..b * n1).map(|_| rng.below(cfg.vocab as u64) as i32).collect();
-    let train_tokens = (b * (n1 - 1)) as f64;
+    let train_tokens = (b * n) as f64;
 
     let r = bench_for("native/grad batch 8x32 tok", secs, || {
         std::hint::black_box(batch_loss_and_grad(&model, &batch, b, n1, &pool).unwrap());
     });
     println!("{}   ({:.0} tok/s)", r.row(), train_tokens / r.p50_s);
+    rows.push(r.clone(), vec![("tokens_per_s", train_tokens / r.p50_s)]);
 
-    let mut fl = flat.clone();
-    let mut m = vec![0.0f32; fl.len()];
-    let mut v = vec![0.0f32; fl.len()];
-    let mut step = 0i32;
-    let r = bench_for("native/train_step 8x32 tok", secs, || {
-        std::hint::black_box(
-            native_train_step(&model, &mut fl, &mut m, &mut v, step, &batch, b, n1, &pool)
-                .unwrap(),
+    for (label, seg) in [("native/train_step 8x32 tok (full tape)", 0usize),
+        ("native/train_step 8x32 tok (ckpt C=8)", 8)]
+    {
+        let mut c = cfg.clone();
+        c.grad_ckpt_segment = seg;
+        let tape = tape_bytes(&c, n) as f64;
+        let m2 = StltModel::new(&c, Arc::new(flat.clone())).unwrap();
+        let mut fl = flat.clone();
+        let mut mm = vec![0.0f32; fl.len()];
+        let mut vv = vec![0.0f32; fl.len()];
+        let mut step = 0i32;
+        let r = bench_for(label, secs, || {
+            std::hint::black_box(
+                native_train_step(&m2, &mut fl, &mut mm, &mut vv, step, &batch, b, n1, &pool)
+                    .unwrap(),
+            );
+            step += 1;
+        });
+        println!(
+            "{}   ({:.0} tok/s, tape {:.1} KiB/row)",
+            r.row(),
+            train_tokens / r.p50_s,
+            tape / 1024.0
         );
-        step += 1;
-    });
-    println!("{}   ({:.0} tok/s)", r.row(), train_tokens / r.p50_s);
+        rows.push(
+            r.clone(),
+            vec![("tokens_per_s", train_tokens / r.p50_s), ("tape_bytes_per_row", tape)],
+        );
+    }
+
+    let path = std::env::var("STLT_BENCH_JSON").unwrap_or_else(|_| "BENCH_native.json".into());
+    match std::fs::write(&path, rows.to_json()) {
+        Ok(()) => println!("wrote {path} ({} rows)", rows.0.len()),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }

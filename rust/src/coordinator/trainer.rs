@@ -117,6 +117,26 @@ pub fn train_lm(
         train_data.next_batch();
     }
 
+    // surface the backward-tape budget up front: at long contexts the
+    // tape (plus the O(n·vocab) softmax scratch on top of it) is what
+    // decides whether the run fits in RAM
+    #[cfg(feature = "native")]
+    {
+        let mcfg = &entry.config;
+        // only the native backward has this tape (the XLA backward is
+        // whatever the lowered HLO does and ignores grad_ckpt_segment)
+        if mcfg.arch == "stlt" && rt.platform() == "native" {
+            let n = step_exec.n_plus_1.saturating_sub(1);
+            crate::info!(
+                "train",
+                "{artifact_base}: activation tape {:.1} MiB/row + transient grad scratch \
+                 (grad_ckpt_segment {} of {n} tok)",
+                crate::train::tape_bytes(mcfg, n) as f64 / (1024.0 * 1024.0),
+                crate::train::seg_len(mcfg, n),
+            );
+        }
+    }
+
     let mut report = TrainReport {
         loss_curve: Vec::new(),
         eval_curve: Vec::new(),

@@ -2,7 +2,8 @@
 //!
 //! Subcommands:
 //!   info                      list artifacts + runtime info
-//!   train   --artifact NAME --steps N [--ckpt PATH] [--resume PATH] [--set k=v ...]
+//!   train   --artifact NAME --steps N [--ckpt PATH] [--resume PATH]
+//!           [--grad-ckpt C] [--set k=v ...]
 //!   eval    --artifact NAME [--ckpt PATH] [--noise X]
 //!   stream  --artifact NAME [--ckpt PATH] --doc-len N   streaming PPL demo
 //!   generate --artifact NAME [--ckpt PATH] --len N
@@ -36,7 +37,7 @@ fn main() {
 fn usage() -> String {
     "usage: stlt <info|train|eval|stream|generate|inspect> [--backend native|xla] \
      [--artifact NAME] [--steps N] [--ckpt PATH] [--resume PATH] [--config FILE] \
-     [--set key=value ...] [--noise X] [--len N] [--doc-len N] \
+     [--set key=value ...] [--grad-ckpt C] [--noise X] [--len N] [--doc-len N] \
      [--sampling greedy|temp:T|topk:K:T|topp:P:T]"
         .to_string()
 }
@@ -87,7 +88,7 @@ fn run() -> Result<()> {
         stlt::util::logging::set_level(stlt::util::logging::Level::Debug);
     }
     let backend = BackendKind::parse(&args.get_or("backend", "native"))?;
-    let manifest = Manifest::load(default_artifacts_dir())?;
+    let mut manifest = Manifest::load(default_artifacts_dir())?;
     match args.subcommand.as_deref() {
         Some("info") => {
             let rt = Runtime::new(backend)?;
@@ -110,6 +111,28 @@ fn run() -> Result<()> {
             let overrides = args.get_all("set");
             cfg.apply_overrides(&overrides).map_err(|e| anyhow!(e))?;
             let artifact = args.get_or("artifact", &cfg.str_or("train.artifact", "lm_stlt_tiny"));
+            // --grad-ckpt C segment-checkpoints the native backward tape
+            // (0 = whole sequence). Gradients are bitwise identical for
+            // every C, so this is free to set per-run and never
+            // invalidates checkpoints or resume. An *explicit* flag or
+            // train.grad_ckpt config key always overrides the manifest —
+            // including 0, so whole-sequence can be forced on a manifest
+            // that ships a positive grad_ckpt_segment.
+            let grad_ckpt = match args.get("grad-ckpt") {
+                Some(_) => Some(args.get_usize("grad-ckpt", 0).map_err(|e| anyhow!(e))?),
+                None => cfg
+                    .get("train.grad_ckpt")
+                    .and_then(|v| v.as_i64())
+                    .map(|v| v.max(0) as usize),
+            };
+            if let Some(c) = grad_ckpt {
+                let prefix = format!("{artifact}.");
+                for e in manifest.entries.values_mut() {
+                    if e.name.starts_with(&prefix) {
+                        e.config.grad_ckpt_segment = c;
+                    }
+                }
+            }
             let opts = TrainOpts {
                 steps: args.get_u64("steps", cfg.i64_or("train.steps", 200) as u64)
                     .map_err(|e| anyhow!(e))?,

@@ -60,6 +60,16 @@ pub struct ModelConfig {
     pub beta1: f32,
     pub beta2: f32,
     pub grad_clip: f32,
+    /// Native-backward gradient-checkpoint segment length (tokens).
+    /// 0 = whole sequence (one segment): the backward's activation tape
+    /// holds the full O(N·S·d) per-layer U history, exactly the pre-
+    /// checkpointing behaviour. A positive value C stores only the
+    /// (L, U) carry at every C-token boundary and replays each
+    /// segment's tape on the fly during the backward, cutting the peak
+    /// tape to O(C·S·d + (N/C)·S·d) per layer. Gradients are bitwise
+    /// identical for every value (tests/native_train.rs). Native-only;
+    /// the XLA backward ignores it.
+    pub grad_ckpt_segment: usize,
 }
 
 impl Default for ModelConfig {
@@ -92,6 +102,7 @@ impl Default for ModelConfig {
             beta1: 0.9,
             beta2: 0.98,
             grad_clip: 1.0,
+            grad_ckpt_segment: 0,
         }
     }
 }
@@ -192,6 +203,11 @@ fn parse_config(j: Option<&Json>) -> ModelConfig {
         fopt("grad_clip", &mut c.grad_clip);
         if let Some(w) = j.get("warmup").and_then(|v| v.as_i64()) {
             c.warmup = w as u64;
+        }
+        if let Some(g) = j.get("grad_ckpt_segment").and_then(|v| v.as_i64()) {
+            if g > 0 {
+                c.grad_ckpt_segment = g as usize;
+            }
         }
     }
     c
@@ -336,7 +352,8 @@ mod tests {
         "inputs":[{"dtype":"float32","shape":[10]},{"dtype":"int32","shape":[2,3]}],
         "outputs":[{"dtype":"float32","shape":[10]},{"dtype":"float32","shape":[]}],
         "config":{"arch":"stlt","vocab":256,"d_model":64,"n_layers":2,"n_ctx":128,
-                  "s_max":32,"batch":8,"adaptive":true,"mode":"linear","total_steps":2000},
+                  "s_max":32,"batch":8,"adaptive":true,"mode":"linear","total_steps":2000,
+                  "grad_ckpt_segment":512},
         "chunk":64}}}"#;
 
     #[test]
@@ -351,7 +368,10 @@ mod tests {
         assert_eq!(e.outputs[1].shape, Vec::<usize>::new());
         assert_eq!(e.config.arch, "stlt");
         assert!(e.config.adaptive);
+        assert_eq!(e.config.grad_ckpt_segment, 512);
         assert_eq!(e.extra["chunk"], 64);
+        // absent from a manifest (every committed one) -> whole-sequence
+        assert_eq!(ModelConfig::default().grad_ckpt_segment, 0);
     }
 
     #[test]

@@ -140,7 +140,11 @@ impl NativeExec {
     /// (flat', m', v', loss, ce, s_eff) — the XLA `train_step` contract,
     /// implemented by [`crate::train`]. The `seed` input exists for
     /// artifact-shape parity; the native gate is deterministic (no
-    /// Gumbel-sigmoid relaxation), so it is unused.
+    /// Gumbel-sigmoid relaxation), so it is unused. The backward tape
+    /// is segment-checkpointed per `config.grad_ckpt_segment` (carried
+    /// by the entry the plan was resolved from); gradients are bitwise
+    /// identical for every segment length, so the knob never leaks into
+    /// the contract outputs.
     fn train_step(&self, model: StltModel, rest: &[Tensor]) -> Result<Vec<Tensor>> {
         if rest.len() != 5 {
             bail!(
@@ -172,6 +176,13 @@ impl NativeExec {
         let metrics = crate::train::native_train_step(
             &model, &mut flat, &mut m, &mut v, step, tokens, b, n1, &self.pool,
         )?;
+        crate::debuglog!(
+            "native",
+            "{}: step {} peak backward tape {} bytes/row",
+            self.entry.name,
+            step,
+            metrics.tape_bytes
+        );
         let p = flat.len();
         Ok(vec![
             Tensor::f32(flat, &[p]),

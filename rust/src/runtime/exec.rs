@@ -171,6 +171,24 @@ impl<'a> TrainStep<'a> {
     }
 }
 
+/// Pop the next (rightmost) output tensor, turning a short output set
+/// into an error instead of a panic — an arity mismatch must take the
+/// same state-restore path as a dtype/shape mismatch, or the
+/// "retryable failed step" guarantee dies in an unwind.
+fn pop_out(out: &mut Vec<Tensor>, what: &str) -> Result<Tensor> {
+    out.pop().ok_or_else(|| anyhow::anyhow!("backend returned too few outputs: missing {what}"))
+}
+
+/// [`pop_out`] for scalar outputs: an empty tensor errors (through the
+/// same restore path) instead of panicking on `[0]`.
+fn pop_scalar(out: &mut Vec<Tensor>, what: &str) -> Result<f32> {
+    let t = pop_out(out, what)?;
+    let v = t.as_f32()?;
+    v.first()
+        .copied()
+        .ok_or_else(|| anyhow::anyhow!("backend returned an empty scalar for {what}"))
+}
+
 /// Parse `(flat', m', v', metrics)` from a train_step result —
 /// outputs are flat', m', v', loss, ce, s_eff — without touching the
 /// caller's TrainState, so a partial/mismatched output set cannot
@@ -179,12 +197,12 @@ fn parse_train_out(
     run: Result<Vec<Tensor>>,
 ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, StepMetrics)> {
     let mut out = run?;
-    let s_eff = out.pop().unwrap().as_f32()?[0];
-    let ce = out.pop().unwrap().as_f32()?[0];
-    let loss = out.pop().unwrap().as_f32()?[0];
-    let v = out.pop().unwrap().into_f32()?;
-    let m = out.pop().unwrap().into_f32()?;
-    let flat = out.pop().unwrap().into_f32()?;
+    let s_eff = pop_scalar(&mut out, "s_eff")?;
+    let ce = pop_scalar(&mut out, "ce")?;
+    let loss = pop_scalar(&mut out, "loss")?;
+    let v = pop_out(&mut out, "v")?.into_f32()?;
+    let m = pop_out(&mut out, "m")?.into_f32()?;
+    let flat = pop_out(&mut out, "flat")?.into_f32()?;
     Ok((flat, m, v, StepMetrics { loss, ce, s_eff }))
 }
 
@@ -192,11 +210,11 @@ fn parse_train_out(
 /// v', loss, ce.
 fn parse_s2s_out(run: Result<Vec<Tensor>>) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, f32, f32)> {
     let mut out = run?;
-    let ce = out.pop().unwrap().as_f32()?[0];
-    let loss = out.pop().unwrap().as_f32()?[0];
-    let v = out.pop().unwrap().into_f32()?;
-    let m = out.pop().unwrap().into_f32()?;
-    let flat = out.pop().unwrap().into_f32()?;
+    let ce = pop_scalar(&mut out, "ce")?;
+    let loss = pop_scalar(&mut out, "loss")?;
+    let v = pop_out(&mut out, "v")?.into_f32()?;
+    let m = pop_out(&mut out, "m")?.into_f32()?;
+    let flat = pop_out(&mut out, "flat")?.into_f32()?;
     Ok((flat, m, v, loss, ce))
 }
 
@@ -423,10 +441,10 @@ impl<'a> StreamStep<'a> {
 /// cannot corrupt it.
 fn parse_stream_out(run: Result<Vec<Tensor>>) -> Result<(Vec<f32>, Vec<f32>, f64, f64)> {
     let mut out = run?;
-    let count = out.pop().unwrap().as_f32()?[0] as f64;
-    let nll = out.pop().unwrap().as_f32()?[0] as f64;
-    let u = out.pop().unwrap().into_f32()?;
-    let l = out.pop().unwrap().into_f32()?;
+    let count = pop_scalar(&mut out, "count")? as f64;
+    let nll = pop_scalar(&mut out, "nll")? as f64;
+    let u = pop_out(&mut out, "u")?.into_f32()?;
+    let l = pop_out(&mut out, "l")?.into_f32()?;
     Ok((l, u, nll, count))
 }
 
@@ -434,9 +452,9 @@ fn parse_stream_out(run: Result<Vec<Tensor>>) -> Result<(Vec<f32>, Vec<f32>, f64
 /// the caller's carry.
 fn parse_decode_out(run: Result<Vec<Tensor>>) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
     let mut out = run?;
-    let logits = out.pop().unwrap().into_f32()?;
-    let u = out.pop().unwrap().into_f32()?;
-    let l = out.pop().unwrap().into_f32()?;
+    let logits = pop_out(&mut out, "logits")?.into_f32()?;
+    let u = pop_out(&mut out, "u")?.into_f32()?;
+    let l = pop_out(&mut out, "l")?.into_f32()?;
     Ok((l, u, logits))
 }
 

@@ -25,8 +25,11 @@
 //! identity, so the per-token decode serving path never re-packs).
 //! The tied head and FFN additionally fan out over token rows via
 //! [`crate::util::threadpool::scatter_rows`]. The training tape in
-//! [`crate::train`] calls the same kernels on the same panels, so the
-//! forward and backward can never drift numerically.
+//! [`crate::train`] calls the same kernels on the same panels — and the
+//! same [`lu_node_step`] recurrence kernel, so the (L, U) carry
+//! snapshots its segment-checkpointed backward stores replay to
+//! bitwise-identical values — so the forward and backward can never
+//! drift numerically.
 //!
 //! A naive O(N^2 S) relevance-matrix oracle ([`MixerImpl::ReferenceN2`])
 //! and FFT-based spectral relevance cross-checks (via [`crate::util::fft`],
@@ -46,6 +49,50 @@ use crate::util::threadpool::scatter_rows;
 /// the decode path (n = 1) and the server's small chunks never pay
 /// thread-fanout overhead.
 const MIN_PAR_ROWS: usize = 16;
+
+/// One node's Laplace-carry advance for a single timestep — THE
+/// recurrence kernel, shared verbatim by the streaming engine
+/// ([`StltModel::mix_recurrence`]), the training-tape forward, and the
+/// backward pass's segment-checkpoint replay (`train/backward.rs`).
+/// One function on all three sides means a carry snapshot taken during
+/// the tape forward replays to bitwise-identical (L, U) values during
+/// the backward, and the tape can never drift from what the engine
+/// serves.
+///
+///   L ← lam·L + f_tk          (lk = [re, im])
+///   U ← gamma·U + conj(L)⊗v   (uk = [d][re, im])
+///   z += Re(L·U)              (when zr is Some; caller divides by S)
+///
+/// `zr: None` is the backward's replay mode: it advances the identical
+/// L/U state (z never feeds back into L or U) without paying the
+/// discarded z flops. One body serves both so the two modes cannot
+/// drift.
+#[inline(always)]
+pub(crate) fn lu_node_step(
+    lam_re: f32,
+    lam_im: f32,
+    gamma: f32,
+    f_tk: f32,
+    lk: &mut [f32],
+    uk: &mut [f32],
+    vr: &[f32],
+    mut zr: Option<&mut [f32]>,
+) {
+    let (lr, li) = (lk[0], lk[1]);
+    let nlr = lam_re * lr - lam_im * li + f_tk;
+    let nli = lam_re * li + lam_im * lr;
+    lk[0] = nlr;
+    lk[1] = nli;
+    for (e, &ve) in vr.iter().enumerate() {
+        let ur = gamma * uk[e * 2] + nlr * ve;
+        let ui = gamma * uk[e * 2 + 1] - nli * ve;
+        uk[e * 2] = ur;
+        uk[e * 2 + 1] = ui;
+        if let Some(z) = zr.as_deref_mut() {
+            z[e] += nlr * ur - nli * ui;
+        }
+    }
+}
 
 pub(crate) fn softplus(x: f32) -> f32 {
     if x > 20.0 {
@@ -432,19 +479,16 @@ impl StltModel {
             let vr = &v[t * d..(t + 1) * d];
             let zr = &mut z[t * d..(t + 1) * d];
             for k in 0..s {
-                let (lr, li) = (l[k * 2], l[k * 2 + 1]);
-                let nlr = np.lam_re[k] * lr - np.lam_im[k] * li + fr[k];
-                let nli = np.lam_re[k] * li + np.lam_im[k] * lr;
-                l[k * 2] = nlr;
-                l[k * 2 + 1] = nli;
-                let ub = &mut u[k * d * 2..(k + 1) * d * 2];
-                for (e, &ve) in vr.iter().enumerate() {
-                    let ur = np.gamma * ub[e * 2] + nlr * ve;
-                    let ui = np.gamma * ub[e * 2 + 1] - nli * ve;
-                    ub[e * 2] = ur;
-                    ub[e * 2 + 1] = ui;
-                    zr[e] += nlr * ur - nli * ui;
-                }
+                lu_node_step(
+                    np.lam_re[k],
+                    np.lam_im[k],
+                    np.gamma,
+                    fr[k],
+                    &mut l[k * 2..(k + 1) * 2],
+                    &mut u[k * d * 2..(k + 1) * d * 2],
+                    vr,
+                    Some(&mut zr[..]),
+                );
             }
             for ze in zr.iter_mut() {
                 *ze *= inv_s;

@@ -35,6 +35,30 @@
 //! is pinned by finite-difference checks against an independent f64
 //! oracle in `tests/native_train.rs`.
 //!
+//! ## Segment-checkpointed tape
+//!
+//! The naive tape stores U_t for every t — O(N·S·d) floats per layer,
+//! the term that makes long-context training OOM long before the
+//! forward does. Instead, the tape forward records only the (L, U)
+//! carry at every `grad_ckpt_segment`-token boundary (the same carry
+//! `trunk_chunk` threads through chunked streaming), and the backward
+//! replays each segment's L/U history on the fly, in reverse segment
+//! order, from its snapshot — through the *same*
+//! [`crate::runtime::native_stlt`] `lu_node_step` kernel the forward
+//! and the streaming engine use, so the replayed values are bitwise
+//! identical to what a full tape would have stored and the gradient is
+//! bitwise independent of the segment length
+//! (`tests/native_train.rs`). Peak tape memory drops from O(N·S·d) to
+//! O(C·S·d + (N/C)·S·d) per layer for segment length C, at the cost of
+//! one extra forward recurrence replay (~the cheap part of the
+//! backward; the GEMMs are never replayed). `grad_ckpt_segment = 0`
+//! (default) means one whole-sequence segment: the replay buffer is
+//! then O(N·S·d), but only ONE layer's buffer is alive at a time —
+//! already an n_layers× improvement over the old always-resident
+//! per-layer U tape — and the replay sweep applies there too.
+//! [`tape_bytes`] is the exact accounting, asserted against the real
+//! allocations in tests.
+//!
 //! Ablation flags mirror `stlt_layer.node_params`/`regulariser`:
 //! `learn_sigma=false` (resp. omega, t) zeroes that group's gradient
 //! from both the model path and the Eq. Reg penalty.
@@ -47,7 +71,8 @@
 
 use anyhow::{bail, Result};
 
-use crate::runtime::native_stlt::{sigmoid, softplus, StltModel};
+use crate::runtime::artifact::ModelConfig;
+use crate::runtime::native_stlt::{lu_node_step, sigmoid, softplus, StltModel};
 use crate::util::linalg::{self, gelu_grad};
 
 /// Gradient + loss terms of one row. `grad` has the full flat length.
@@ -58,9 +83,16 @@ pub struct RowOut {
     /// mean over layers of the active node count Σ_k m_k
     pub s_eff: f32,
     pub grad: Vec<f32>,
+    /// peak activation-tape bytes this row allocated (stored layer
+    /// tapes + the backward's segment replay buffers); equals
+    /// [`tape_bytes`] for the model's config and this row's length
+    pub tape_bytes: usize,
 }
 
-/// Activations of one layer recorded during the tape forward.
+/// Activations of one layer recorded during the tape forward. The
+/// Laplace recurrence contributes only O((N/C)·S·d) carry snapshots —
+/// the per-timestep U history is replayed per segment during the
+/// backward, never stored whole.
 struct LayerTape {
     x_in: Vec<f32>,   // [n,d] residual stream entering the layer
     mu1: Vec<f32>,    // [n] LN1 means
@@ -70,8 +102,8 @@ struct LayerTape {
     m: Vec<f32>,      // [S] node gate
     fraw: Vec<f32>,   // [n,S] pre-gate feature projection h1 @ w_f
     v: Vec<f32>,      // [n,d] value projection h1 @ w_v
-    l_all: Vec<f32>,  // [n,S,2] L_t for every t
-    u_all: Vec<f32>,  // [n,S,d,2] U_t for every t (the O(N·S·d) tape)
+    l_snap: Vec<f32>, // [nseg,S,2] L carry entering each segment
+    u_snap: Vec<f32>, // [nseg,S,d,2] U carry entering each segment
     zmix: Vec<f32>,   // [n,d] mixed output pre-w_o
     x_mid: Vec<f32>,  // [n,d] residual stream after the mixer
     mu2: Vec<f32>,
@@ -79,6 +111,65 @@ struct LayerTape {
     h2: Vec<f32>,    // [n,d] LN2 output (FFN input)
     hpre: Vec<f32>,  // [n,hd] FFN pre-GELU activations
     hgelu: Vec<f32>, // [n,hd] gelu(hpre), reused for the w2 gradient
+}
+
+impl LayerTape {
+    fn bytes(&self) -> usize {
+        4 * (self.x_in.len()
+            + self.mu1.len()
+            + self.inv1.len()
+            + self.h1.len()
+            + self.pooled.len()
+            + self.m.len()
+            + self.fraw.len()
+            + self.v.len()
+            + self.l_snap.len()
+            + self.u_snap.len()
+            + self.zmix.len()
+            + self.x_mid.len()
+            + self.mu2.len()
+            + self.inv2.len()
+            + self.h2.len()
+            + self.hpre.len()
+            + self.hgelu.len())
+    }
+}
+
+/// Resolved checkpoint segment length for a row of `n` tokens:
+/// `grad_ckpt_segment` clamped to [1, n], with 0 meaning "one segment
+/// covering the whole sequence".
+pub fn seg_len(cfg: &ModelConfig, n: usize) -> usize {
+    match cfg.grad_ckpt_segment {
+        0 => n.max(1),
+        c => c.min(n.max(1)),
+    }
+}
+
+/// Exact activation-tape bytes [`row_loss_and_grad`] allocates for one
+/// row of `n` tokens: the stored per-layer tapes (everything in
+/// `LayerTape`, dominated by the O((N/C)·S·d) carry snapshots once the
+/// O(N·S·d) U history is checkpointed away) plus the backward's
+/// segment replay buffers (O(C·S·d), one pair shared across all
+/// layers). Asserted equal to the real tape allocation in
+/// `tests/native_train.rs`. Scope: this counts the *tape* — the
+/// backward additionally holds transient gradient scratch on top: two
+/// n·vocab buffers (logits + dlogits) during the CE/head phase, both
+/// freed before the layer sweep, then per-layer `dhid` [n·hd] and
+/// `dfp`/`dv`/`dzmix` [n·S / n·d] buffers. Treat row-fits-in-RAM
+/// budgets as tape_bytes + max(2·n·vocab, a few n·hd/n·d) f32s.
+pub fn tape_bytes(cfg: &ModelConfig, n: usize) -> usize {
+    let (s, d) = (cfg.s_max, cfg.d_model);
+    let hd = d * cfg.ffn_mult.max(1);
+    let c = seg_len(cfg, n);
+    let nseg = n.max(1).div_ceil(c);
+    let pooled = if cfg.adaptive { d } else { 0 };
+    // x_in/h1/v/zmix/x_mid/h2 are [n,d]; hpre/hgelu [n,hd]; fraw [n,S];
+    // mu/inv ×4 [n]; m [S]; snapshots [nseg,S,(2+2d)]
+    let per_layer =
+        n * (6 * d + 2 * hd + s + 4) + nseg * s * (2 + 2 * d) + s + pooled;
+    // backward replay: (C+1) slots of (L [S,2], U [S,d,2])
+    let replay = (c + 1) * s * (2 + 2 * d);
+    4 * (cfg.n_layers * per_layer + replay)
 }
 
 /// LayerNorm forward recording (mu, inv) per row for the backward.
@@ -167,6 +258,7 @@ pub fn row_loss_and_grad(
     let (s, d, vcb) = (cfg.s_max, cfg.d_model, cfg.vocab);
     let hd = d * cfg.ffn_mult.max(1);
     let n = tokens.len() - 1;
+    let ckpt = seg_len(cfg, n);
     let flat = model.flat_params();
     let panels = model.panels();
     let (embed_off, lnf_g, lnf_b) = model.head_offsets();
@@ -198,39 +290,40 @@ pub fn row_loss_and_grad(
         let mut v = vec![0.0f32; n * d];
         linalg::gemm_at(&h1, &lp.w_v_t, &mut v, n, d, d);
 
-        // recurrence with full L/U tape
+        // recurrence, storing only per-segment (L, U) carry snapshots —
+        // the shared lu_node_step kernel guarantees the backward's
+        // segment replay reproduces every dropped value bitwise
         let np = model.node_params(lo);
         let inv_s = 1.0 / s as f32;
-        let mut l_all = vec![0.0f32; n * s * 2];
-        let mut u_all = vec![0.0f32; n * s * d * 2];
+        let nseg = n.div_ceil(ckpt);
+        let mut l_snap = Vec::with_capacity(nseg * s * 2);
+        let mut u_snap = Vec::with_capacity(nseg * s * d * 2);
         let mut zmix = vec![0.0f32; n * d];
         {
             let mut l = vec![0.0f32; s * 2];
             let mut u = vec![0.0f32; s * d * 2];
             for t in 0..n {
+                if t % ckpt == 0 {
+                    l_snap.extend_from_slice(&l);
+                    u_snap.extend_from_slice(&u);
+                }
                 let vr = &v[t * d..(t + 1) * d];
                 let zr = &mut zmix[t * d..(t + 1) * d];
                 for k in 0..s {
-                    let f_tk = fraw[t * s + k] * m[k];
-                    let (lr, li) = (l[k * 2], l[k * 2 + 1]);
-                    let nlr = np.lam_re[k] * lr - np.lam_im[k] * li + f_tk;
-                    let nli = np.lam_re[k] * li + np.lam_im[k] * lr;
-                    l[k * 2] = nlr;
-                    l[k * 2 + 1] = nli;
-                    let ub = &mut u[k * d * 2..(k + 1) * d * 2];
-                    for (e, &ve) in vr.iter().enumerate() {
-                        let ur = np.gamma * ub[e * 2] + nlr * ve;
-                        let ui = np.gamma * ub[e * 2 + 1] - nli * ve;
-                        ub[e * 2] = ur;
-                        ub[e * 2 + 1] = ui;
-                        zr[e] += nlr * ur - nli * ui;
-                    }
+                    lu_node_step(
+                        np.lam_re[k],
+                        np.lam_im[k],
+                        np.gamma,
+                        fraw[t * s + k] * m[k],
+                        &mut l[k * 2..(k + 1) * 2],
+                        &mut u[k * d * 2..(k + 1) * d * 2],
+                        vr,
+                        Some(&mut zr[..]),
+                    );
                 }
                 for ze in zr.iter_mut() {
                     *ze *= inv_s;
                 }
-                l_all[t * s * 2..(t + 1) * s * 2].copy_from_slice(&l);
-                u_all[t * s * d * 2..(t + 1) * s * d * 2].copy_from_slice(&u);
             }
         }
 
@@ -253,8 +346,8 @@ pub fn row_loss_and_grad(
             m,
             fraw,
             v,
-            l_all,
-            u_all,
+            l_snap,
+            u_snap,
             zmix,
             x_mid,
             mu2,
@@ -292,8 +385,16 @@ pub fn row_loss_and_grad(
         }
         dl[tgt] -= ce_scale;
     }
+    // logits (n·vocab) are dead once dlogits exist — at long contexts
+    // keeping them through the layer sweep would dwarf the checkpointed
+    // recurrence tape
+    drop(logits);
 
     // ---------------- backward sweep ----------------
+    // peak tape: every layer's stored tape plus the segment replay
+    // buffers (allocated once below, shared across layers)
+    let tape_total = tapes.iter().map(LayerTape::bytes).sum::<usize>()
+        + 4 * ((ckpt + 1) * s * (2 + 2 * d));
     let mut grad = vec![0.0f32; flat.len()];
 
     // tied head: logits = xf @ embedᵀ, so
@@ -302,10 +403,18 @@ pub fn row_loss_and_grad(
     let mut dxf = vec![0.0f32; n * d];
     linalg::gemm(&dlogits, embed, &mut dxf, n, vcb, d);
     linalg::gemm_ta(&dlogits, &xf, &mut grad[embed_off..embed_off + vcb * d], n, vcb, d);
+    drop(dlogits); // n·vocab scratch, dead after the head gradients
     let mut dx = ln_bwd(flat, &mut grad, &dxf, &x_last, &muf, &invf, lnf_g, lnf_b, d);
 
     let mut reg_total = 0.0f32;
     let mut s_eff_sum = 0.0f32;
+    // segment replay buffers, shared across layers (every read slot is
+    // freshly written per segment — slot 0 from the snapshot, slots
+    // 1..len by the replay — so no per-layer zeroing is needed): slot j
+    // holds the (L, U) state after token t0 + j - 1, slot 0 being the
+    // checkpointed carry entering the segment (zero for segment 0)
+    let mut l_seg = vec![0.0f32; (ckpt + 1) * s * 2];
+    let mut u_seg = vec![0.0f32; (ckpt + 1) * s * d * 2];
     // the sweep needs no panels: the `dy @ Wᵀ` products read the
     // original (input-major) weights, which are already in the gemm_at
     // layout for the transposed direction
@@ -347,7 +456,13 @@ pub fn row_loss_and_grad(
         linalg::gemm_at(&dx_mid, &flat[lo.w_o..lo.w_o + d * d], &mut dzmix, n, d, d);
         linalg::gemm_ta(&tape.zmix, &dx_mid, &mut grad[lo.w_o..lo.w_o + d * d], n, d, d);
 
-        // recurrence adjoints
+        // recurrence adjoints, segment-checkpointed: walk the segments
+        // in reverse, replaying each one's (L, U) history from its
+        // carry snapshot via the engine's own lu_node_step — the
+        // replayed values are bitwise what a full tape would hold, so
+        // the gradient is bitwise independent of the segment length.
+        // The GL/GU adjoint carries thread across segment boundaries
+        // exactly like the forward carries did, just reversed in time.
         let inv_s = 1.0 / s as f32;
         let mut gl = vec![0.0f32; s * 2];
         let mut gu = vec![0.0f32; s * d * 2];
@@ -356,59 +471,80 @@ pub fn row_loss_and_grad(
         let mut dgamma = 0.0f64;
         let mut dfp = vec![0.0f32; n * s];
         let mut dv = vec![0.0f32; n * d];
-        for t in (0..n).rev() {
-            let lrow = &tape.l_all[t * s * 2..(t + 1) * s * 2];
-            let urow = &tape.u_all[t * s * d * 2..(t + 1) * s * d * 2];
-            let uprev = if t > 0 {
-                Some(&tape.u_all[(t - 1) * s * d * 2..t * s * d * 2])
-            } else {
-                None
-            };
-            let lprev = if t > 0 {
-                Some(&tape.l_all[(t - 1) * s * 2..t * s * 2])
-            } else {
-                None
-            };
-            let vr = &tape.v[t * d..(t + 1) * d];
-            let dvr = &mut dv[t * d..(t + 1) * d];
-            let zg = &dzmix[t * d..(t + 1) * d];
-            for k in 0..s {
-                let (ltr, lti) = (lrow[k * 2], lrow[k * 2 + 1]);
-                let ub = &urow[k * d * 2..(k + 1) * d * 2];
-                let gub = &mut gu[k * d * 2..(k + 1) * d * 2];
-                let (mut glr, mut gli) = (gl[k * 2], gl[k * 2 + 1]);
-                let mut dg_loc = 0.0f64;
-                for e in 0..d {
-                    let g_te = zg[e] * inv_s;
-                    // z_t = Σ_k Re(L_t · U_t)/S
-                    let gur = gub[e * 2] + g_te * ltr;
-                    let gui = gub[e * 2 + 1] - g_te * lti;
-                    glr += g_te * ub[e * 2];
-                    gli -= g_te * ub[e * 2 + 1];
-                    // U_t = gamma U_{t-1} + conj(L_t) v_t
-                    if let Some(up) = uprev {
-                        dg_loc += (gur * up[k * d * 2 + e * 2]) as f64
-                            + (gui * up[k * d * 2 + e * 2 + 1]) as f64;
-                    }
-                    let ve = vr[e];
-                    dvr[e] += gur * ltr - gui * lti;
-                    glr += gur * ve;
-                    gli -= gui * ve;
-                    gub[e * 2] = np.gamma * gur;
-                    gub[e * 2 + 1] = np.gamma * gui;
+        let nseg = n.div_ceil(ckpt);
+        for seg in (0..nseg).rev() {
+            let t0 = seg * ckpt;
+            let len = ckpt.min(n - t0);
+            l_seg[..s * 2].copy_from_slice(&tape.l_snap[seg * s * 2..(seg + 1) * s * 2]);
+            u_seg[..s * d * 2]
+                .copy_from_slice(&tape.u_snap[seg * s * d * 2..(seg + 1) * s * d * 2]);
+            for j in 0..len {
+                let t = t0 + j;
+                let (ldone, lrest) = l_seg.split_at_mut((j + 1) * s * 2);
+                let lcur = &mut lrest[..s * 2];
+                lcur.copy_from_slice(&ldone[j * s * 2..]);
+                let (udone, urest) = u_seg.split_at_mut((j + 1) * s * d * 2);
+                let ucur = &mut urest[..s * d * 2];
+                ucur.copy_from_slice(&udone[j * s * d * 2..]);
+                let vr = &tape.v[t * d..(t + 1) * d];
+                for k in 0..s {
+                    lu_node_step(
+                        np.lam_re[k],
+                        np.lam_im[k],
+                        np.gamma,
+                        tape.fraw[t * s + k] * tape.m[k],
+                        &mut lcur[k * 2..(k + 1) * 2],
+                        &mut ucur[k * d * 2..(k + 1) * d * 2],
+                        vr,
+                        None, // replay advances L/U only; z is never re-needed
+                    );
                 }
-                dgamma += dg_loc;
-                // L_t = lam L_{t-1} + f_t
-                dfp[t * s + k] += glr;
-                let (lpr, lpi) = match lprev {
-                    Some(lp) => (lp[k * 2], lp[k * 2 + 1]),
-                    None => (0.0, 0.0),
-                };
-                da[k] += glr * lpr + gli * lpi;
-                db[k] += -glr * lpi + gli * lpr;
-                let (a, b) = (np.lam_re[k], np.lam_im[k]);
-                gl[k * 2] = a * glr + b * gli;
-                gl[k * 2 + 1] = -b * glr + a * gli;
+            }
+            for j in (0..len).rev() {
+                let t = t0 + j;
+                let lrow = &l_seg[(j + 1) * s * 2..(j + 2) * s * 2];
+                let urow = &u_seg[(j + 1) * s * d * 2..(j + 2) * s * d * 2];
+                // slot j: the state before t — for the global t = 0 this
+                // is the zero carry, so its adjoint terms add exact
+                // zeros, matching the old tape's explicit t = 0 skip
+                let lprev = &l_seg[j * s * 2..(j + 1) * s * 2];
+                let uprev = &u_seg[j * s * d * 2..(j + 1) * s * d * 2];
+                let vr = &tape.v[t * d..(t + 1) * d];
+                let dvr = &mut dv[t * d..(t + 1) * d];
+                let zg = &dzmix[t * d..(t + 1) * d];
+                for k in 0..s {
+                    let (ltr, lti) = (lrow[k * 2], lrow[k * 2 + 1]);
+                    let ub = &urow[k * d * 2..(k + 1) * d * 2];
+                    let up = &uprev[k * d * 2..(k + 1) * d * 2];
+                    let gub = &mut gu[k * d * 2..(k + 1) * d * 2];
+                    let (mut glr, mut gli) = (gl[k * 2], gl[k * 2 + 1]);
+                    let mut dg_loc = 0.0f64;
+                    for e in 0..d {
+                        let g_te = zg[e] * inv_s;
+                        // z_t = Σ_k Re(L_t · U_t)/S
+                        let gur = gub[e * 2] + g_te * ltr;
+                        let gui = gub[e * 2 + 1] - g_te * lti;
+                        glr += g_te * ub[e * 2];
+                        gli -= g_te * ub[e * 2 + 1];
+                        // U_t = gamma U_{t-1} + conj(L_t) v_t
+                        dg_loc += (gur * up[e * 2]) as f64 + (gui * up[e * 2 + 1]) as f64;
+                        let ve = vr[e];
+                        dvr[e] += gur * ltr - gui * lti;
+                        glr += gur * ve;
+                        gli -= gui * ve;
+                        gub[e * 2] = np.gamma * gur;
+                        gub[e * 2 + 1] = np.gamma * gui;
+                    }
+                    dgamma += dg_loc;
+                    // L_t = lam L_{t-1} + f_t
+                    dfp[t * s + k] += glr;
+                    let (lpr, lpi) = (lprev[k * 2], lprev[k * 2 + 1]);
+                    da[k] += glr * lpr + gli * lpi;
+                    db[k] += -glr * lpi + gli * lpr;
+                    let (a, b) = (np.lam_re[k], np.lam_im[k]);
+                    gl[k * 2] = a * glr + b * gli;
+                    gl[k * 2 + 1] = -b * glr + a * gli;
+                }
             }
         }
 
@@ -534,6 +670,7 @@ pub fn row_loss_and_grad(
         reg: reg_total,
         s_eff: s_eff_sum / cfg.n_layers as f32,
         grad,
+        tape_bytes: tape_total,
     })
 }
 

@@ -29,17 +29,27 @@
 //! of the worker count — gradients from a 1-thread pool and an
 //! N-thread pool are bitwise identical (`tests/native_train.rs`).
 //!
-//! Memory: the backward tape stores the per-timestep U carry, i.e.
-//! O(N·S·d) floats per layer per in-flight row — the classic
-//! activation-memory cost of exact reverse mode. Rows not yet picked up
-//! by a worker hold no tape.
+//! Memory: the backward tape is segment-checkpointed
+//! (`backward::tape_bytes` is the exact accounting) — per in-flight row
+//! it stores O(N·d + N·hd) projection/LN activations plus O((N/C)·S·d)
+//! Laplace carry snapshots for `grad_ckpt_segment = C`, replaying each
+//! segment's O(C·S·d) U history on the fly during the backward instead
+//! of materialising the classic O(N·S·d) exact-reverse-mode U tape
+//! (`grad_ckpt_segment = 0` keeps one whole-sequence segment). Rows not
+//! yet picked up by a worker hold no tape.
+//!
+//! Metric sums (NLL, reg, s_eff) accumulate in f64 on the reduction
+//! thread: an f32 running sum stalls once the total outgrows the 2^-24
+//! relative step (a 100k-token batch NLL sits well past it), making the
+//! reported loss depend on summation order. The f64 path is pinned by
+//! the long-sequence sum-order test in `tests/native_parity.rs`.
 
 pub mod backward;
 pub mod optim;
 
 use anyhow::{bail, Result};
 
-pub use backward::{row_loss_and_grad, RowOut};
+pub use backward::{row_loss_and_grad, seg_len, tape_bytes, RowOut};
 pub use optim::{adamw_step, AdamHp};
 
 use crate::runtime::native_stlt::StltModel;
@@ -56,6 +66,9 @@ pub struct BatchMetrics {
     pub s_eff: f32,
     /// pre-clip global gradient norm (0 until the optimiser runs)
     pub grad_norm: f32,
+    /// peak per-row activation-tape bytes (max over the batch rows;
+    /// see [`backward::tape_bytes`])
+    pub tape_bytes: usize,
 }
 
 /// Gradient of the batch loss `mean_B·N nll + mean_B reg` for a flat
@@ -91,12 +104,16 @@ pub fn batch_loss_and_grad(
         )
     });
     let mut grad: Option<Vec<f32>> = None;
-    let (mut nll, mut reg, mut s_eff) = (0.0f64, 0.0f32, 0.0f32);
+    // all scalar reductions in f64 (satellite fix): f32 running sums
+    // drift measurably once rows are 100k tokens long
+    let (mut nll, mut reg, mut s_eff) = (0.0f64, 0.0f64, 0.0f64);
+    let mut tape_peak = 0usize;
     for r in rows {
         let r = r?;
         nll += r.nll_sum;
-        reg += r.reg;
-        s_eff += r.s_eff;
+        reg += r.reg as f64;
+        s_eff += r.s_eff as f64;
+        tape_peak = tape_peak.max(r.tape_bytes);
         match &mut grad {
             None => grad = Some(r.grad),
             Some(g) => {
@@ -106,12 +123,13 @@ pub fn batch_loss_and_grad(
             }
         }
     }
-    let ce = (nll as f32) * ce_scale;
+    let ce = nll * ce_scale as f64;
     let metrics = BatchMetrics {
-        loss: ce + reg * reg_scale,
-        ce,
-        s_eff: s_eff * reg_scale,
+        loss: (ce + reg * reg_scale as f64) as f32,
+        ce: ce as f32,
+        s_eff: (s_eff * reg_scale as f64) as f32,
         grad_norm: 0.0,
+        tape_bytes: tape_peak,
     };
     Ok((grad.unwrap(), metrics))
 }

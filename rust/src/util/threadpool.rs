@@ -13,8 +13,16 @@
 //! so nested fan-outs ([`parallel_map`] from inside a job) run inline
 //! instead of parking a worker in `join()` on its own queue — the
 //! classic self-join deadlock. [`scatter_rows`] is the borrowing
-//! (scoped) row-parallel primitive the STLT engine uses for the tied
-//! head and FFN.
+//! row-parallel primitive the STLT engine uses for the tied head and
+//! FFN: it runs its chunks on the *persistent* global workers behind a
+//! per-call completion latch (not per-call scoped spawns — the old
+//! per-projection thread spawns were measurable on the non-batched
+//! streaming/decode path on many-core boxes).
+//!
+//! [`configured_threads`] is the single source of truth for the worker
+//! count — `STLT_THREADS` when set, else the available parallelism —
+//! read by both the pool constructor and the scatter chunking, so row
+//! fan-out always matches the actual worker count.
 
 use std::any::Any;
 use std::cell::Cell;
@@ -35,16 +43,37 @@ pub fn in_worker() -> bool {
     IN_WORKER.with(|w| w.get())
 }
 
-/// The process-wide shared pool, lazily sized to the available
-/// parallelism. The native backend and the row-parallel eval/train
-/// paths all draw from this one pool so the machine is never
-/// oversubscribed by stacked per-component pools.
+/// Parse a worker-count override; `None`/empty/garbage/0 falls back.
+/// Split out of [`configured_threads`] so the parsing is unit-testable
+/// without racing on the process environment.
+fn threads_from(over: Option<&str>, fallback: usize) -> usize {
+    over.and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(fallback)
+        .max(1)
+}
+
+/// The worker-thread count every parallel primitive derives from —
+/// the single source of truth (satellite fix: the pool used to size
+/// itself while `scatter_rows` separately re-read the machine
+/// parallelism per call, so row fan-out could mismatch the actual
+/// worker count). `STLT_THREADS` overrides the detected parallelism;
+/// read once per process.
+pub fn configured_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        let fallback = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        threads_from(std::env::var("STLT_THREADS").ok().as_deref(), fallback)
+    })
+}
+
+/// The process-wide shared pool, lazily sized to
+/// [`configured_threads`]. The native backend and the row-parallel
+/// eval/train paths all draw from this one pool so the machine is
+/// never oversubscribed by stacked per-component pools.
 pub fn global() -> &'static ThreadPool {
     static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
-    GLOBAL.get_or_init(|| {
-        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        ThreadPool::new(n)
-    })
+    GLOBAL.get_or_init(|| ThreadPool::new(configured_threads()))
 }
 
 #[derive(Default)]
@@ -138,8 +167,12 @@ impl ThreadPool {
     }
 
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.execute_boxed(Box::new(f));
+    }
+
+    fn execute_boxed(&self, job: Job) {
         self.shared.lock_state().pending += 1;
-        self.tx.as_ref().unwrap().send(Box::new(f)).expect("pool closed");
+        self.tx.as_ref().unwrap().send(job).expect("pool closed");
     }
 
     /// Block until every submitted job has finished. Panics (on this,
@@ -215,49 +248,141 @@ where
         .collect()
 }
 
+/// Completion latch for one [`scatter_rows`] call: counts *completed*
+/// jobs up (never the pool-global queue, which other submitters share)
+/// and collects their panic messages for the caller to re-raise. It
+/// counts up rather than down so the caller can wait for exactly the
+/// number of jobs that were *successfully* enqueued — a job that was
+/// never sent can neither be waited for (deadlock) nor underflow the
+/// counter by completing before registration.
+struct Latch {
+    state: Mutex<(usize, Vec<String>)>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new() -> Latch {
+        Latch { state: Mutex::new((0, Vec::new())), cv: Condvar::new() }
+    }
+
+    /// Block until `target` jobs have finished; returns the collected
+    /// panic messages.
+    fn wait(&self, target: usize) -> Vec<String> {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        while st.0 < target {
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        std::mem::take(&mut st.1)
+    }
+
+    fn done(&self, panic_msg: Option<String>) {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.0 += 1;
+        if let Some(m) = panic_msg {
+            st.1.push(m);
+        }
+        self.cv.notify_all();
+    }
+}
+
+/// Waits on the latch if [`scatter_rows`] unwinds for any reason —
+/// enqueue failure mid-loop or a panic in the caller's own inline
+/// chunk — so workers can never outlive the borrows they hold. Armed
+/// *before* the first enqueue; `enqueued` tracks how many jobs were
+/// actually sent at the moment of the unwind.
+struct LatchWait<'a> {
+    latch: &'a Latch,
+    enqueued: &'a Cell<usize>,
+}
+
+impl Drop for LatchWait<'_> {
+    fn drop(&mut self) {
+        self.latch.wait(self.enqueued.get());
+    }
+}
+
 /// Row-parallel scatter over borrowed data: split `out` (`n` rows of
-/// `row_len` f32s) into one contiguous chunk per available core and run
-/// `f(t0, t1, chunk)` concurrently on scoped threads, with the last
-/// chunk executing on the calling thread.
+/// `row_len` f32s) into one contiguous chunk per worker and run
+/// `f(t0, t1, chunk)` concurrently on the persistent [`global`] pool
+/// workers behind a completion latch, with the last chunk executing on
+/// the calling thread (satellite fix: this used to spawn scoped OS
+/// threads per call — a measurable per-projection cost on the
+/// non-batched streaming/decode path on many-core boxes).
 ///
 /// This is the engine-side primitive for the tied logits head and the
-/// FFN (rows are independent there), kept separate from the queue pool
-/// because those call sites *borrow* activations — scoped threads give
-/// them parallelism without `Arc`-ing every intermediate. Runs inline
-/// when `n < min_rows`, when only one core exists, or on a pool worker
-/// (the batch level already owns the cores then), so nesting is always
-/// deadlock- and oversubscription-free. Each out element is written by
-/// exactly one chunk; parallel and inline execution agree bitwise as
-/// long as `f`'s per-row output does not depend on (t0, t1) — true of
-/// every kernel call site (each row is an independent set of dots).
+/// FFN (rows are independent there). The call sites *borrow*
+/// activations, so the enqueued jobs erase their borrow lifetime; the
+/// latch (waited on even when unwinding) guarantees every job finishes
+/// before this frame returns, which is what made scoped threads sound
+/// too. Runs inline when `n < min_rows`, when only one worker is
+/// configured, or on a pool worker (the batch level already owns the
+/// cores then), so nesting is always deadlock- and oversubscription-
+/// free. Each out element is written by exactly one chunk; parallel and
+/// inline execution agree bitwise as long as `f`'s per-row output does
+/// not depend on (t0, t1) — true of every kernel call site (each row is
+/// an independent set of dots).
 pub fn scatter_rows<F>(n: usize, row_len: usize, out: &mut [f32], min_rows: usize, f: F)
 where
     F: Fn(usize, usize, &mut [f32]) + Send + Sync,
 {
     assert!(out.len() >= n * row_len, "scatter_rows: out too small");
-    let threads = thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
+    let threads = configured_threads();
     if n < min_rows.max(2) || threads < 2 || in_worker() {
         f(0, n, &mut out[..n * row_len]);
         return;
     }
     let nch = threads.min(n);
     let per = n.div_ceil(nch);
-    thread::scope(|s| {
-        let f = &f;
-        let mut rest = &mut out[..n * row_len];
-        let mut t0 = 0usize;
-        while t0 < n {
-            let t1 = (t0 + per).min(n);
-            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut((t1 - t0) * row_len);
-            rest = tail;
-            if t1 < n {
-                s.spawn(move || f(t0, t1, chunk));
-            } else {
-                f(t0, t1, chunk); // final chunk on the calling thread
-            }
-            t0 = t1;
+    let pool = global();
+    let latch = Latch::new();
+    let enqueued = Cell::new(0usize);
+    // armed before the first enqueue: ANY unwind out of this frame —
+    // a failed enqueue mid-loop or a panic in the final inline chunk —
+    // first waits for every job that was actually sent
+    let guard = LatchWait { latch: &latch, enqueued: &enqueued };
+    let mut rest = &mut out[..n * row_len];
+    let mut t0 = 0usize;
+    let mut last: Option<(usize, usize, &mut [f32])> = None;
+    while t0 < n {
+        let t1 = (t0 + per).min(n);
+        let (chunk, tail) = std::mem::take(&mut rest).split_at_mut((t1 - t0) * row_len);
+        rest = tail;
+        if t1 < n {
+            let latch_r = &latch;
+            let fref = &f;
+            let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                let msg = catch_unwind(AssertUnwindSafe(|| fref(t0, t1, chunk)))
+                    .err()
+                    .map(|p| panic_message(p.as_ref()));
+                latch_r.done(msg);
+            });
+            // SAFETY: the job borrows `f`, the latch, and a disjoint
+            // `out` chunk. The latch counts a job completed only after
+            // its body (and every borrow) is done, and this frame never
+            // returns — normally or unwinding — before waiting for all
+            // `enqueued` jobs (the normal-path wait below, or the
+            // `LatchWait` guard armed above), so the erased borrows
+            // strictly outlive every job. `enqueued` is bumped only
+            // after a successful send: a job that failed to enqueue is
+            // dropped inside the failed send and never waited on.
+            let job: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Job>(job)
+            };
+            pool.execute_boxed(job);
+            enqueued.set(enqueued.get() + 1);
+        } else {
+            last = Some((t0, t1, chunk));
         }
-    });
+        t0 = t1;
+    }
+    if let Some((t0, t1, chunk)) = last {
+        f(t0, t1, chunk); // final chunk on the calling thread
+    }
+    std::mem::forget(guard); // normal path: wait below, collecting panics
+    let panics = latch.wait(enqueued.get());
+    if !panics.is_empty() {
+        panic!("{} scatter_rows job(s) panicked: {}", panics.len(), panics.join("; "));
+    }
 }
 
 #[cfg(test)]
@@ -350,6 +475,78 @@ mod tests {
             parallel_map(global(), 3, move |j| i * 10 + j)
         });
         assert_eq!(out[2], vec![20, 21, 22]);
+    }
+
+    #[test]
+    fn threads_from_env_override_rules() {
+        // the STLT_THREADS parse seam, kept pure so tests don't race on
+        // the process environment (configured_threads memoizes once)
+        assert_eq!(threads_from(Some("6"), 2), 6);
+        assert_eq!(threads_from(Some(" 3 "), 2), 3);
+        assert_eq!(threads_from(None, 4), 4);
+        assert_eq!(threads_from(Some(""), 4), 4);
+        assert_eq!(threads_from(Some("zero"), 4), 4);
+        assert_eq!(threads_from(Some("0"), 4), 4, "0 workers is nonsense");
+        assert_eq!(threads_from(None, 0), 1, "floor at one worker");
+    }
+
+    #[test]
+    fn scatter_rows_runs_on_persistent_workers() {
+        // the satellite seam: chunks execute on global() pool workers
+        // (in_worker), not on freshly spawned scoped threads — except
+        // the final chunk, which stays on the caller
+        if configured_threads() < 2 {
+            return; // single-core box: scatter is documented-inline
+        }
+        let n = 64usize;
+        let row_len = 2usize;
+        let mut out = vec![0.0f32; n * row_len];
+        let worker_chunks = AtomicUsize::new(0);
+        let caller_chunks = AtomicUsize::new(0);
+        scatter_rows(n, row_len, &mut out, 2, |t0, _t1, chunk| {
+            if in_worker() {
+                worker_chunks.fetch_add(1, Ordering::SeqCst);
+            } else {
+                caller_chunks.fetch_add(1, Ordering::SeqCst);
+            }
+            for (r, row) in chunk.chunks_exact_mut(row_len).enumerate() {
+                row.fill((t0 + r) as f32);
+            }
+        });
+        assert!(worker_chunks.load(Ordering::SeqCst) >= 1, "no chunk reached a pool worker");
+        assert_eq!(caller_chunks.load(Ordering::SeqCst), 1, "final chunk runs on the caller");
+        for t in 0..n {
+            assert_eq!(out[t * row_len], t as f32);
+        }
+    }
+
+    #[test]
+    fn scatter_rows_propagates_worker_panic_and_pool_survives() {
+        if configured_threads() < 2 {
+            return;
+        }
+        let n = 64usize;
+        let mut out = vec![0.0f32; n];
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            scatter_rows(n, 1, &mut out, 2, |t0, _t1, _chunk| {
+                if t0 == 0 {
+                    panic!("chunk at {t0} exploded");
+                }
+            });
+        }));
+        let msg = panic_message(caught.expect_err("panic must reach the caller").as_ref());
+        assert!(msg.contains("exploded"), "message lost: {msg}");
+        // the global pool must stay fully usable (worker survived, no
+        // stuck latch, no poisoned queue)
+        let mut out = vec![0.0f32; n];
+        scatter_rows(n, 1, &mut out, 2, |t0, t1, chunk| {
+            for (r, v) in chunk.iter_mut().enumerate() {
+                *v = (t0 + r) as f32;
+            }
+            assert!(t1 <= n);
+        });
+        assert_eq!(out[n - 1], (n - 1) as f32);
+        assert!(global().try_join().is_ok(), "scatter panics must not leak into pool joins");
     }
 
     #[test]

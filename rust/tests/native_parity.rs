@@ -185,6 +185,43 @@ fn stream_and_decode_match_n2_reference_nll() {
 }
 
 #[test]
+fn chunked_stream_matches_whole_sequence_nll_at_8k() {
+    // long-context satellite seam: at N = 8192 the chunked-stream NLL
+    // must match the whole-sequence NLL to f64 summation-order noise.
+    // Per the PR-3 kernel guarantees the chunked logits are *bitwise*
+    // the whole-sequence logits, so the only remaining difference is
+    // the order the per-position f64 NLL terms are associated in — the
+    // sum-order test pinning the f64 accumulation fix (an f32 running
+    // sum re-associates with per-add error ~total·2⁻²⁴ and lands orders
+    // of magnitude above the 1e-9 bar at this length).
+    let c = cfg();
+    let flat = host_init(&c, 23);
+    let model = StltModel::new(&c, Arc::new(flat)).unwrap();
+    let n = 8192usize;
+    let tokens = doc(n + 1, 51);
+
+    let (whole_nll, count, _) = model.eval_row(&tokens, 0.0, 0).unwrap();
+    assert_eq!(count, n as f64);
+
+    for chunk in [512usize, 1024] {
+        let (mut l, mut u) = model.zero_carry();
+        let mut nll = 0.0f64;
+        for t0 in (0..n).step_by(chunk) {
+            let t1 = (t0 + chunk).min(n);
+            let (logits, _) = model.trunk_chunk(&mut l, &mut u, &tokens[t0..t1], 0.0, None).unwrap();
+            for (j, t) in (t0..t1).enumerate() {
+                nll += nll_of(&logits[j * VOCAB..(j + 1) * VOCAB], tokens[t + 1]).unwrap();
+            }
+        }
+        let rel = (nll - whole_nll).abs() / whole_nll.abs().max(1.0);
+        assert!(
+            rel < 1e-9,
+            "chunk={chunk}: stream nll {nll} vs whole {whole_nll} (rel {rel:.3e})"
+        );
+    }
+}
+
+#[test]
 fn eval_step_runs_natively_and_is_near_uniform() {
     let c = cfg();
     let flat = host_init(&c, 3);

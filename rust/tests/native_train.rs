@@ -439,6 +439,153 @@ fn ablation_stop_grads_zero_the_right_groups() {
 }
 
 #[test]
+fn checkpointed_grads_bitwise_equal_across_segment_sizes() {
+    // the tentpole keystone: the segment-checkpointed backward replays
+    // each segment's (L, U) history through the engine's own recurrence
+    // kernel, so the gradient must be BITWISE identical for every
+    // segment length — 1, a mid C, C±1, N, and beyond-N — and for the
+    // whole-sequence default (0). Adaptive exercises the gate/pooled
+    // path on top of the recurrence.
+    for adaptive in [false, true] {
+        let mut cfg = grad_cfg();
+        cfg.adaptive = adaptive;
+        let flat = perturbed_init(&cfg, 31);
+        let tokens = fd_tokens(&cfg, 37, 12); // n = 12
+        let n = tokens.len() - 1;
+        let run = |seg: usize| {
+            let mut c = cfg.clone();
+            c.grad_ckpt_segment = seg;
+            let model = StltModel::new(&c, Arc::new(flat.clone())).unwrap();
+            row_loss_and_grad(&model, &tokens, 0.125, 1.0).unwrap()
+        };
+        let base = run(0);
+        for seg in [1usize, 3, 4, 5, n - 1, n, n + 7] {
+            let out = run(seg);
+            assert_eq!(
+                out.nll_sum.to_bits(),
+                base.nll_sum.to_bits(),
+                "adaptive={adaptive} seg={seg}: nll drifted"
+            );
+            assert_eq!(out.reg.to_bits(), base.reg.to_bits(), "seg={seg}: reg drifted");
+            for (i, (a, b)) in out.grad.iter().zip(&base.grad).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "adaptive={adaptive} seg={seg}: grad[{i}] {a} != full-tape {b}"
+                );
+            }
+        }
+        // the segmented tape really shrinks with C
+        assert!(
+            run(3).tape_bytes < base.tape_bytes,
+            "adaptive={adaptive}: C=3 tape must undercut the whole-sequence tape"
+        );
+    }
+}
+
+#[test]
+fn long_context_train_step_fits_checkpointed_tape_budget() {
+    // the acceptance seam: a 32k-token train_step runs on the native
+    // backend inside a peak-tape budget the full-tape path provably
+    // exceeds, with the accounting asserted against the real
+    // allocations (RowOut::tape_bytes == train::tape_bytes).
+    let n: usize = 32 * 1024;
+    let mut cfg = ModelConfig {
+        arch: "stlt".into(),
+        vocab: 9,
+        d_model: 8,
+        n_layers: 1,
+        n_ctx: n,
+        s_max: 2,
+        batch: 1,
+        mode: "linear".into(),
+        ffn_mult: 1,
+        t_init: 4.0,
+        ..ModelConfig::default()
+    };
+    let full_bytes = stlt::train::tape_bytes(&cfg, n);
+    cfg.grad_ckpt_segment = 256;
+    let ckpt_bytes = stlt::train::tape_bytes(&cfg, n);
+    // the budget sits where the U tape alone (n*S*d*2 floats/layer)
+    // would blow it but the checkpointed tape fits with headroom
+    let u_tape = 4 * n * cfg.s_max * cfg.d_model * 2 * cfg.n_layers;
+    let budget = full_bytes - u_tape / 2;
+    assert!(full_bytes > budget, "full tape must provably exceed the budget");
+    assert!(
+        ckpt_bytes < budget,
+        "checkpointed tape {ckpt_bytes} must fit the budget {budget} (full {full_bytes})"
+    );
+    // O(C) bound: the checkpointing overhead over the fixed projection
+    // tape is exactly the (C+1)-slot replay buffer plus N/C snapshots —
+    // for every C here that sum stays an order of magnitude under the
+    // O(N) U tape it replaces, and the total stays inside the budget
+    let fixed = {
+        let mut cc = cfg.clone();
+        cc.grad_ckpt_segment = 1;
+        stlt::train::tape_bytes(&cc, n)
+            - 4 * (1 + 1) * cfg.s_max * (2 + 2 * cfg.d_model)
+            - 4 * cfg.n_layers * n * cfg.s_max * (2 + 2 * cfg.d_model)
+    };
+    for c in [64usize, 128, 256, 512] {
+        let mut cc = cfg.clone();
+        cc.grad_ckpt_segment = c;
+        let b = stlt::train::tape_bytes(&cc, n);
+        let extra = b - fixed;
+        assert!(b < budget, "C={c}: tape {b} must fit the budget {budget}");
+        assert!(
+            extra * 10 < u_tape,
+            "C={c}: checkpoint overhead {extra} not O(C)-small vs the U tape {u_tape}"
+        );
+    }
+
+    let flat = host_init(&cfg, 5);
+    let mut rng = Rng::new(13);
+    let tokens: Vec<i32> = (0..n + 1).map(|_| rng.below(cfg.vocab as u64) as i32).collect();
+
+    // accounting honesty: the real per-row allocation equals tape_bytes
+    let model = StltModel::new(&cfg, Arc::new(flat.clone())).unwrap();
+    let out = row_loss_and_grad(&model, &tokens, 1.0 / n as f32, 1.0).unwrap();
+    assert_eq!(
+        out.tape_bytes, ckpt_bytes,
+        "tape accounting must match the real allocation"
+    );
+    assert!(out.tape_bytes < budget);
+    assert!(out.nll_sum.is_finite());
+
+    // and the full Backend-seam contract executes the same row: a
+    // 32k-context native train_step (batch 1) completes with finite loss
+    let manifest = long_manifest(&cfg);
+    let rt = Runtime::native().unwrap();
+    let step = TrainStep::new(&rt, &manifest, "long.train").unwrap();
+    assert_eq!(step.n_plus_1, n + 1);
+    let mut state = TrainState::init_for(step.entry(), 5).unwrap();
+    let metrics = step.run(&mut state, &tokens, 0).unwrap();
+    assert!(metrics.loss.is_finite(), "32k-token native train_step must survive");
+    assert_eq!(state.step, 1);
+}
+
+/// Synthesize a `train_step`-only manifest for an arbitrary config.
+fn long_manifest(cfg: &ModelConfig) -> Manifest {
+    let p = total_params(&trunk_layout(cfg));
+    let (b, n1) = (cfg.batch, cfg.n_ctx + 1);
+    let e = Entry {
+        name: "long.train".to_string(),
+        file: PathBuf::from("native-synthetic"),
+        kind: "train_step".to_string(),
+        param_count: p,
+        inputs: vec![f32s(&[p]), f32s(&[p]), f32s(&[p]), i32s(&[]), i32s(&[b, n1]), i32s(&[])],
+        outputs: vec![f32s(&[p]), f32s(&[p]), f32s(&[p]), f32s(&[]), f32s(&[]), f32s(&[])],
+        config: cfg.clone(),
+        extra: BTreeMap::new(),
+        init_file: None,
+        kept_inputs: (0..6).collect(),
+    };
+    let mut entries = BTreeMap::new();
+    entries.insert(e.name.clone(), e);
+    Manifest { dir: PathBuf::from("."), entries }
+}
+
+#[test]
 fn data_parallel_grads_bitwise_equal_across_pool_sizes() {
     let mut cfg = grad_cfg();
     cfg.adaptive = false;
