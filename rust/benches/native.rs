@@ -11,12 +11,18 @@
 //! (override the path with STLT_BENCH_JSON) so the bench trajectory can
 //! be tracked across commits instead of scraped from CI logs.
 
+use std::collections::BTreeMap;
 use std::fmt::Write as _;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
 use stlt::bench::{bench_for, BenchResult};
-use stlt::runtime::artifact::ModelConfig;
+use stlt::coordinator::{GenOpts, Server, ServerOpts};
+use stlt::runtime::artifact::{Entry, ModelConfig};
 use stlt::runtime::native_stlt::{host_init, StltModel};
+use stlt::runtime::Manifest;
 use stlt::train::{batch_loss_and_grad, native_train_step, tape_bytes};
 use stlt::util::linalg;
 use stlt::util::threadpool::{configured_threads, ThreadPool};
@@ -94,6 +100,177 @@ fn bench_kernels(secs: f64, rows: &mut Rows) {
     });
     println!("{}   ({:.2} GFLOP/s)", r.row(), gflop / r.p50_s);
     rows.push(r.clone(), vec![("gflops", gflop / r.p50_s)]);
+}
+
+/// Summarise one-shot wall-clock samples into a BenchResult row
+/// (stlt::bench::bench_for times a closure; the serving rows time
+/// whole concurrent scenarios instead).
+fn wall_row(name: &str, samples: &mut [f64]) -> BenchResult {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len().max(1);
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_s: samples.iter().sum::<f64>() / n as f64,
+        p50_s: samples[samples.len() / 2],
+        p95_s: samples[(samples.len() * 95 / 100).min(samples.len() - 1)],
+        min_s: samples.first().copied().unwrap_or(0.0),
+    }
+}
+
+/// Synthesize the serving manifest entries (the native backend reads
+/// only metadata) for base "srv" at batch width `bsrv`, via the shared
+/// per-kind builders so the schemas have one source of truth.
+fn serving_manifest(cfg: &ModelConfig, p: usize, chunk: usize, bsrv: usize) -> Manifest {
+    let mut entries = BTreeMap::new();
+    for e in [
+        Entry::synthetic_decode(cfg, p, "srv.decode"),
+        Entry::synthetic_stream_batch(cfg, p, "srv.stream_batch", chunk, bsrv),
+    ] {
+        entries.insert(e.name.clone(), e);
+    }
+    Manifest { dir: PathBuf::from("."), entries }
+}
+
+/// Serving rows: batched continuous decode vs the old one-session-at-
+/// a-time path (same B = 8 sessions, same prompts), plus first-token
+/// latency under a mixed feed+generate load.
+fn bench_serving(smoke: bool, cfg: &ModelConfig, flat: &[f32], rows: &mut Rows) {
+    let bsrv = 8usize;
+    let chunk = 64usize;
+    let gen_len = if smoke { 16 } else { 64 };
+    let prompt_len = chunk + 1;
+    let m = serving_manifest(cfg, flat.len(), chunk, bsrv);
+    let opts = || ServerOpts { max_sessions: 32, ..ServerOpts::default() };
+    let vocab = cfg.vocab;
+    let docv = |len: usize, seed: u64| -> Vec<i32> {
+        let mut rng = stlt::util::rng::Rng::new(seed);
+        (0..len).map(|_| rng.below(vocab as u64) as i32).collect()
+    };
+
+    // ---- sequential baseline: one session generates at a time -------
+    let server = Server::start(&m, "srv", flat.to_vec(), opts()).unwrap();
+    let mut seeds = Vec::new();
+    for s in 0..bsrv as u64 {
+        let prompt = docv(prompt_len, 100 + s);
+        server.feed(1 + s, prompt.clone(), false).unwrap();
+        seeds.push(*prompt.last().unwrap());
+    }
+    let t0 = Instant::now();
+    for s in 0..bsrv {
+        let g = server.generate(1 + s as u64, seeds[s], gen_len, None).unwrap();
+        assert_eq!(g.tokens.len(), gen_len);
+    }
+    let seq_s = t0.elapsed().as_secs_f64();
+    let seq_tps = (bsrv * gen_len) as f64 / seq_s;
+    server.shutdown();
+
+    let r = wall_row(
+        &format!("serving/decode sequential B={bsrv}x{gen_len} tok"),
+        &mut [seq_s],
+    );
+    println!("{}   ({seq_tps:.0} tok/s aggregate)", r.row());
+    rows.push(r, vec![("tokens_per_s", seq_tps)]);
+
+    // ---- batched continuous decode: the same sessions, concurrent ---
+    let server = Arc::new(Server::start(&m, "srv", flat.to_vec(), opts()).unwrap());
+    let mut seeds = Vec::new();
+    for s in 0..bsrv as u64 {
+        let prompt = docv(prompt_len, 100 + s);
+        server.feed(1 + s, prompt.clone(), false).unwrap();
+        seeds.push(*prompt.last().unwrap());
+    }
+    let t0 = Instant::now();
+    let clients: Vec<_> = (0..bsrv)
+        .map(|s| {
+            let server = Arc::clone(&server);
+            let seed_tok = seeds[s];
+            std::thread::spawn(move || {
+                let g = server.generate(1 + s as u64, seed_tok, gen_len, None).unwrap();
+                assert_eq!(g.tokens.len(), gen_len);
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().unwrap();
+    }
+    let bat_s = t0.elapsed().as_secs_f64();
+    let bat_tps = (bsrv * gen_len) as f64 / bat_s;
+    let speedup = bat_tps / seq_tps;
+
+    let r = wall_row(
+        &format!("serving/decode batched    B={bsrv}x{gen_len} tok"),
+        &mut [bat_s],
+    );
+    println!("{}   ({bat_tps:.0} tok/s aggregate, {speedup:.2}x vs sequential)", r.row());
+    rows.push(
+        r,
+        vec![("tokens_per_s", bat_tps), ("speedup_vs_sequential", speedup)],
+    );
+
+    // ---- first-token latency under mixed feed + generate load -------
+    let stop = Arc::new(AtomicBool::new(false));
+    let feeder = {
+        let server = Arc::clone(&server);
+        let stop = Arc::clone(&stop);
+        let feed_len = 2 * chunk + 1;
+        std::thread::spawn(move || {
+            let mut i = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let mut rng = stlt::util::rng::Rng::new(9000 + i);
+                let d: Vec<i32> =
+                    (0..feed_len).map(|_| rng.below(vocab as u64) as i32).collect();
+                let _ = server.feed(500 + (i % 4), d, false);
+                i += 1;
+            }
+        })
+    };
+    let rounds = if smoke { 2 } else { 5 };
+    let mut ttfts = Vec::new();
+    for _ in 0..rounds {
+        let clients: Vec<_> = (0..bsrv)
+            .map(|s| {
+                let server = Arc::clone(&server);
+                let seed_tok = seeds[s];
+                std::thread::spawn(move || {
+                    let t0 = Instant::now();
+                    let mut stream = server
+                        .start_generate(
+                            1 + s as u64,
+                            GenOpts {
+                                seed_token: seed_tok,
+                                max_tokens: gen_len,
+                                ..GenOpts::default()
+                            },
+                        )
+                        .unwrap();
+                    stream.recv().unwrap().unwrap();
+                    let ttft = t0.elapsed().as_secs_f64();
+                    for t in stream.by_ref() {
+                        t.unwrap();
+                    }
+                    ttft
+                })
+            })
+            .collect();
+        for c in clients {
+            ttfts.push(c.join().unwrap());
+        }
+    }
+    stop.store(true, Ordering::Relaxed);
+    feeder.join().unwrap();
+    let r = wall_row("serving/first-token latency (mixed load)", &mut ttfts);
+    let p50 = r.p50_s;
+    let p99 = ttfts[(ttfts.len() * 99 / 100).min(ttfts.len() - 1)];
+    println!(
+        "{}   (ttft p50 {:.2}ms, p99 {:.2}ms under feed load)",
+        r.row(),
+        p50 * 1e3,
+        p99 * 1e3
+    );
+    // milliseconds: the JSON extras print at 3 decimals, which would
+    // flatten sub-millisecond latencies recorded in seconds
+    rows.push(r, vec![("ttft_p50_ms", p50 * 1e3), ("ttft_p99_ms", p99 * 1e3)]);
 }
 
 fn main() {
@@ -187,6 +364,9 @@ fn main() {
             vec![("tokens_per_s", train_tokens / r.p50_s), ("tape_bytes_per_row", tape)],
         );
     }
+
+    // serving: batched continuous decode vs sequential, ttft percentiles
+    bench_serving(smoke, &cfg, &flat, &mut rows);
 
     let path = std::env::var("STLT_BENCH_JSON").unwrap_or_else(|_| "BENCH_native.json".into());
     match std::fs::write(&path, rows.to_json()) {

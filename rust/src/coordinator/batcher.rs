@@ -1,11 +1,16 @@
-//! Dynamic batcher: groups per-session stream chunks into fixed-size
-//! model batches under a latency deadline (the continuous-batching idea
-//! from serving systems, adapted to STLT's carry-state model).
+//! Dynamic batcher: groups queue items into fixed-size batches under a
+//! latency deadline.
+//!
+//! NOTE: the serving `Server` no longer uses this — its model thread
+//! runs a continuous-batching scheduler that forms waves from whatever
+//! is in flight each iteration (see `coordinator/server.rs`), which
+//! strictly dominates deadline batching for that workload.
+//! `Batcher`/`BatchPolicy` remain as a standalone queue primitive
+//! (benches, property tests, and any future fixed-batch pipeline);
+//! `ServerOpts::policy` is kept only for construction compatibility.
 //!
 //! Policy: block for the first item, then drain whatever else is queued
-//! up to `max_batch` or until `max_wait` elapses. Partially-filled
-//! batches are padded with inactive rows (active=0), which the
-//! `stream_batch` artifact guarantees leave carries untouched.
+//! up to `max_batch` or until `max_wait` elapses.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};

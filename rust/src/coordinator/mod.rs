@@ -1,5 +1,6 @@
-//! Layer-3 coordinator: training driver + streaming inference server
-//! (router/batcher/state-pool/backpressure). This is where the paper's
+//! Layer-3 coordinator: training driver + continuous-batching
+//! inference server (session handles / token streams / scheduler /
+//! state-pool / backpressure). This is where the paper's
 //! "streaming-friendly, O(S d) state" claim becomes a serving system.
 
 pub mod batcher;
@@ -7,6 +8,7 @@ pub mod beam;
 pub mod queue;
 pub mod sampling;
 pub mod server;
+pub mod session;
 pub mod state;
 pub mod trainer;
 
@@ -14,7 +16,8 @@ pub use batcher::{BatchPolicy, Batcher};
 pub use beam::{beam_search, StepScorer};
 pub use sampling::Sampling;
 pub use queue::BoundedQueue;
-pub use server::{FeedResult, GenResult, Server, ServerOpts};
+pub use server::{FeedResult, Server, ServerOpts, ServerStats, WaveFill};
+pub use session::{FinishReason, GenOpts, GenResult, SessionHandle, TokenStream};
 pub use state::{Admit, StatePool};
 pub use trainer::{
     eval_lm, load_checkpoint, load_checkpoint_for, load_checkpoint_meta, save_checkpoint,

@@ -122,6 +122,13 @@ impl<T> BoundedQueue<T> {
         self.not_full.notify_all();
     }
 
+    /// True once [`BoundedQueue::close`] has been called (items already
+    /// queued may still be drained). The serving scheduler polls this
+    /// to cancel in-flight generations promptly on shutdown.
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().q.len()
     }

@@ -1,19 +1,36 @@
 //! Streaming inference server: the L3 coordination contribution.
 //!
-//! Architecture (vLLM-router-shaped, adapted to STLT's O(S d) carries):
+//! Architecture (vLLM-shaped continuous batching, adapted to STLT's
+//! O(S d) carries instead of a paged KV cache):
 //!
-//!   clients --> BoundedQueue (admission control / backpressure)
-//!            --> Batcher (deadline-based dynamic batching)
-//!            --> model thread (single PJRT owner)
-//!                 * Feed chunks: packed into the `stream_batch`
-//!                   artifact, padded with inactive rows
-//!                 * Generate: token-by-token via `decode_step`
-//!            --> per-request response channels
+//!   clients --> SessionHandle (open_session/feed/generate/cancel)
+//!            --> BoundedQueue (admission control / backpressure)
+//!            --> model thread: continuous-batching scheduler
+//!                 * intake: drains new requests every iteration, so
+//!                   sessions join waves mid-flight (no head-of-line
+//!                   blocking behind a long generation)
+//!                 * feed wave: ONE chunk for up to b_srv feeding
+//!                   sessions via the `stream_batch` artifact
+//!                 * decode wave: ONE token for up to b_srv generating
+//!                   sessions via the batched `decode_batch` artifact
+//!                   (per-row fallback on backends without it)
+//!                 * fairness: the scheduler alternates one feed wave
+//!                   and one decode wave per iteration, and rotates
+//!                   tasks behind each wave, so no request class or
+//!                   session monopolises the model thread — a decode
+//!                   token waits at most one feed chunk, and vice versa
+//!            --> per-request response channels; generations stream
+//!                tokens through [`TokenStream`] as they are produced
 //!
-//! Session carries live in the StatePool ("KV-cache analog"): admitting
-//! beyond capacity LRU-evicts an idle session. All latencies are
-//! recorded in log-bucket histograms.
+//! Session carries live in the StatePool ("KV-cache analog"): a session
+//! with an in-flight feed or generation holds its carry checked out
+//! (pinned — it can never lose state mid-wave); idle sessions are
+//! LRU-evicted on admission beyond capacity. Evictions are surfaced on
+//! both paths (`FeedResult::evicted`, `GenResult::evicted` +
+//! `fresh_carry`). All latencies land in log-bucket histograms,
+//! including time-to-first-token.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
@@ -25,20 +42,30 @@ use crate::metrics::Histogram;
 use crate::runtime::artifact::Entry;
 use crate::runtime::exec as stlt_exec;
 use crate::runtime::{BackendKind, Manifest, Runtime, StreamCarry, Tensor};
+use crate::util::rng::Rng;
 
 // Backend device handles may be !Send (xla's PJRT wraps Rc + raw
 // pointers), so the model thread constructs its own Runtime and is the
 // only thread to touch it; everything crossing the thread boundary is
 // plain data (BackendKind is Copy + Send).
 
-use super::batcher::{BatchPolicy, Batcher};
-use super::sampling::Sampling;
+use super::batcher::BatchPolicy;
 use super::queue::{BoundedQueue, PushError};
+use super::sampling::Sampling;
+use super::session::{FinishReason, GenOpts, GenResult, SessionHandle, StreamItem, TokenStream};
 use super::state::{Admit, StatePool};
+
+/// Requests drained from the shared queue in one scheduler iteration.
+/// Bounds per-iteration intake work, not concurrency: anything left
+/// queued is picked up next iteration (one wave later).
+const INTAKE_MAX: usize = 256;
 
 pub struct ServerOpts {
     pub queue_cap: usize,
     pub max_sessions: usize,
+    /// Legacy dynamic-batching knob. The continuous-batching scheduler
+    /// forms waves from whatever is in flight each iteration, so this
+    /// no longer gates batching; kept so existing configs construct.
     pub policy: BatchPolicy,
     /// Execution substrate for the model thread (default: native).
     pub backend: BackendKind,
@@ -62,15 +89,42 @@ pub struct FeedResult {
     pub evicted: Option<u64>,
 }
 
-#[derive(Clone, Debug)]
-pub struct GenResult {
-    pub tokens: Vec<i32>,
+pub(crate) enum Request {
+    Feed {
+        session: u64,
+        tokens: Vec<i32>,
+        count_loss: bool,
+        resp: mpsc::Sender<Result<FeedResult>>,
+    },
+    Generate { session: u64, opts: GenOpts, tx: mpsc::Sender<StreamItem> },
+    Cancel { session: u64 },
+    Release { session: u64 },
 }
 
-enum Request {
-    Feed { session: u64, tokens: Vec<i32>, count_loss: bool, resp: mpsc::Sender<Result<FeedResult>> },
-    Generate { session: u64, seed_token: i32, max_tokens: usize, stop: Option<i32>, sampling: Sampling, rng_seed: u64, resp: mpsc::Sender<Result<GenResult>> },
-    Release { session: u64 },
+/// Bounded wave-fill accounting (one wave ≈ one generated token, so an
+/// unbounded per-wave Vec would grow linearly with tokens served).
+#[derive(Default, Clone, Copy, Debug)]
+pub struct WaveFill {
+    pub waves: u64,
+    pub rows_sum: u64,
+    pub max_fill: usize,
+}
+
+impl WaveFill {
+    pub fn record(&mut self, fill: usize) {
+        self.waves += 1;
+        self.rows_sum += fill as u64;
+        self.max_fill = self.max_fill.max(fill);
+    }
+
+    /// Mean active rows per wave.
+    pub fn mean(&self) -> f64 {
+        if self.waves == 0 {
+            0.0
+        } else {
+            self.rows_sum as f64 / self.waves as f64
+        }
+    }
 }
 
 #[derive(Default)]
@@ -79,35 +133,81 @@ pub struct ServerStats {
     pub gens: AtomicU64,
     pub evictions: AtomicU64,
     pub shed: AtomicU64,
+    pub cancelled: AtomicU64,
     pub tokens_streamed: AtomicU64,
-    pub batch_fill: Mutex<Vec<usize>>,
+    pub tokens_generated: AtomicU64,
+    /// Active rows per wave (feed and decode waves alike).
+    pub batch_fill: Mutex<WaveFill>,
     pub feed_latency: Mutex<Histogram>,
     pub gen_latency: Mutex<Histogram>,
+    /// Submission -> first streamed token, per generation.
+    pub ttft_latency: Mutex<Histogram>,
+}
+
+/// Shared client-side state behind [`Server`] and every
+/// [`SessionHandle`]: the request queue, stats, and the session-id
+/// allocator. Handles outlive the `Server` value only in the sense of
+/// failing cleanly (the queue reports closed).
+pub(crate) struct ServerCore {
+    queue: Arc<BoundedQueue<(Request, Instant)>>,
+    pub(crate) stats: Arc<ServerStats>,
+    /// `open_session` ids start far above any hand-picked id used with
+    /// the session-id API, so the two can never collide.
+    next_session: AtomicU64,
+}
+
+impl ServerCore {
+    fn submit(&self, req: Request) -> Result<()> {
+        match self.queue.push((req, Instant::now()), Duration::from_secs(30)) {
+            Ok(()) => Ok(()),
+            Err(PushError::Timeout) => {
+                self.stats.shed.fetch_add(1, Ordering::Relaxed);
+                Err(anyhow!("server overloaded (backpressure timeout)"))
+            }
+            Err(PushError::Closed) => Err(anyhow!("server shut down")),
+        }
+    }
+
+    pub(crate) fn feed(
+        &self,
+        session: u64,
+        tokens: Vec<i32>,
+        count_loss: bool,
+    ) -> Result<FeedResult> {
+        let (tx, rx) = mpsc::channel();
+        self.submit(Request::Feed { session, tokens, count_loss, resp: tx })?;
+        rx.recv().map_err(|_| anyhow!("model thread dropped request"))?
+    }
+
+    pub(crate) fn start_generate(&self, session: u64, opts: GenOpts) -> Result<TokenStream> {
+        let (tx, rx) = mpsc::channel();
+        self.submit(Request::Generate { session, opts, tx })?;
+        Ok(TokenStream::new(rx))
+    }
+
+    pub(crate) fn cancel(&self, session: u64) -> Result<()> {
+        self.submit(Request::Cancel { session })
+    }
+
+    pub(crate) fn release(&self, session: u64) -> Result<()> {
+        self.submit(Request::Release { session })
+    }
 }
 
 pub struct Server {
-    queue: Arc<BoundedQueue<(Request, Instant)>>,
+    core: Arc<ServerCore>,
     pub stats: Arc<ServerStats>,
     worker: Option<thread::JoinHandle<()>>,
-}
-
-struct ModelThread {
-    rt: Runtime,
-    /// weights pre-uploaded as a PJRT buffer (§Perf L3-1): no per-call copy
-    params: stlt_exec::ParamBuf,
-    stream_entry: Entry,
-    decode_entry: Entry,
-    chunk: usize,
-    b_srv: usize,
-    pool: StatePool,
-    stats: Arc<ServerStats>,
 }
 
 impl Server {
     /// `artifact_base` e.g. "lm_stlt_tiny"; `flat` the trained params.
     /// The runtime is created *inside* the model thread (backend device
-    /// handles may be !Send); start() blocks until both executables are
-    /// loaded (compiled, on the xla backend).
+    /// handles may be !Send); start() blocks until the executables are
+    /// loaded (compiled, on the xla backend). The batched decode
+    /// executable is derived from the `.decode` entry at the serving
+    /// batch width; backends without the `decode_batch` kind fall back
+    /// to per-row decode inside the same scheduler.
     pub fn start(
         manifest: &Manifest,
         artifact_base: &str,
@@ -119,10 +219,20 @@ impl Server {
         let chunk = *stream_entry.extra.get("chunk").ok_or_else(|| anyhow!("no chunk"))? as usize;
         let b_srv =
             *stream_entry.extra.get("batch_srv").ok_or_else(|| anyhow!("no batch_srv"))? as usize;
+        let vocab = decode_entry
+            .outputs
+            .get(2)
+            .and_then(|o| o.shape.first())
+            .copied()
+            .ok_or_else(|| anyhow!("malformed decode entry (no logits output)"))?;
 
         let queue = Arc::new(BoundedQueue::new(opts.queue_cap));
         let stats = Arc::new(ServerStats::default());
-        let batcher = Batcher::new(Arc::clone(&queue), opts.policy.clone());
+        let core = Arc::new(ServerCore {
+            queue: Arc::clone(&queue),
+            stats: Arc::clone(&stats),
+            next_session: AtomicU64::new(1 << 32),
+        });
         let stats_thread = Arc::clone(&stats);
         let max_sessions = opts.max_sessions;
         let backend = opts.backend;
@@ -137,11 +247,32 @@ impl Server {
                         return;
                     }
                 };
-                // pre-compile both executables before accepting traffic
+                // pre-compile the executables before accepting traffic
                 if let Err(e) = rt.load(&stream_entry).and_then(|_| rt.load(&decode_entry)) {
                     let _ = ready_tx.send(Err(e));
                     return;
                 }
+                // batched continuous decode: derived entry, optional kind
+                let batched = if rt.supports_kind("decode_batch") {
+                    match stlt_exec::BatchedDecodeStep::from_decode(&decode_entry, b_srv)
+                        .and_then(|b| rt.load(b.entry()).map(|_| b))
+                    {
+                        Ok(b) => Some(b),
+                        Err(e) => {
+                            crate::info!(
+                                "server",
+                                "decode_batch unavailable ({e:#}); per-row decode fallback"
+                            );
+                            None
+                        }
+                    }
+                } else {
+                    crate::info!(
+                        "server",
+                        "backend has no decode_batch kind; per-row decode fallback"
+                    );
+                    None
+                };
                 // upload the weights once (§Perf L3-1)
                 let params = match stlt_exec::upload_params(&rt, &stream_entry, &flat) {
                     Ok(p) => p,
@@ -151,47 +282,52 @@ impl Server {
                     }
                 };
                 let _ = ready_tx.send(Ok(()));
-                let mut mt = ModelThread {
+                let mt = ModelThread {
                     rt,
                     params,
                     stream_entry,
                     decode_entry,
+                    batched,
                     chunk,
                     b_srv,
+                    vocab,
                     pool: StatePool::new(max_sessions),
                     stats: stats_thread,
+                    feeds: Vec::new(),
+                    gens: Vec::new(),
+                    parked: VecDeque::new(),
                 };
-                while let Some(batch) = batcher.next_batch() {
-                    mt.process(batch);
-                }
+                mt.run(&queue);
             })
             .expect("spawn model thread");
         ready_rx
             .recv()
             .map_err(|_| anyhow!("model thread died during startup"))??;
-        Ok(Server { queue, stats, worker: Some(worker) })
+        Ok(Server { core, stats, worker: Some(worker) })
     }
 
-    fn submit(&self, req: Request) -> Result<()> {
-        match self.queue.push((req, Instant::now()), Duration::from_secs(30)) {
-            Ok(()) => Ok(()),
-            Err(PushError::Timeout) => {
-                self.stats.shed.fetch_add(1, Ordering::Relaxed);
-                Err(anyhow!("server overloaded (backpressure timeout)"))
-            }
-            Err(PushError::Closed) => Err(anyhow!("server shut down")),
-        }
+    /// Open a new session and return its handle. Ids are allocated from
+    /// a range disjoint from hand-picked session-id-API ids.
+    pub fn open_session(&self) -> SessionHandle {
+        let id = self.core.next_session.fetch_add(1, Ordering::Relaxed);
+        SessionHandle::new(id, Arc::clone(&self.core))
     }
 
     /// Stream a chunk of document tokens into a session. Blocking.
+    /// (Session-id variant of [`SessionHandle::feed`].)
     pub fn feed(&self, session: u64, tokens: Vec<i32>, count_loss: bool) -> Result<FeedResult> {
-        let (tx, rx) = mpsc::channel();
-        self.submit(Request::Feed { session, tokens, count_loss, resp: tx })?;
-        rx.recv().map_err(|_| anyhow!("model thread dropped request"))?
+        self.core.feed(session, tokens, count_loss)
+    }
+
+    /// Start a streamed generation on a session by id; returns the
+    /// [`TokenStream`] immediately (see [`SessionHandle::generate`]).
+    pub fn start_generate(&self, session: u64, opts: GenOpts) -> Result<TokenStream> {
+        self.core.start_generate(session, opts)
     }
 
     /// Greedy generation continuing a session from `seed_token` (the
-    /// last prompt token, which feed() leaves unconsumed). Blocking.
+    /// last prompt token, which feed() leaves unconsumed). Blocking
+    /// wrapper over the streamed path.
     pub fn generate(
         &self,
         session: u64,
@@ -202,8 +338,9 @@ impl Server {
         self.generate_with(session, seed_token, max_tokens, stop, Sampling::Greedy, 0)
     }
 
-    /// Generation with an explicit sampling policy (temperature / top-k /
-    /// nucleus) and RNG seed for reproducible stochastic decoding.
+    /// Generation with an explicit sampling policy and RNG seed.
+    /// Blocking wrapper: streams internally, returns the collected
+    /// tokens once the generation finishes.
     pub fn generate_with(
         &self,
         session: u64,
@@ -213,19 +350,23 @@ impl Server {
         sampling: Sampling,
         rng_seed: u64,
     ) -> Result<GenResult> {
-        let (tx, rx) = mpsc::channel();
-        self.submit(Request::Generate {
-            session, seed_token, max_tokens, stop, sampling, rng_seed, resp: tx,
-        })?;
-        rx.recv().map_err(|_| anyhow!("model thread dropped request"))?
+        self.core
+            .start_generate(session, GenOpts { seed_token, max_tokens, stop, sampling, rng_seed })?
+            .wait()
+    }
+
+    /// Cancel a session's in-flight generation (session-id variant of
+    /// [`SessionHandle::cancel`]).
+    pub fn cancel(&self, session: u64) -> Result<()> {
+        self.core.cancel(session)
     }
 
     pub fn release(&self, session: u64) -> Result<()> {
-        self.submit(Request::Release { session })
+        self.core.release(session)
     }
 
     pub fn shutdown(mut self) {
-        self.queue.close();
+        self.core.queue.close();
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
@@ -234,51 +375,311 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.queue.close();
+        self.core.queue.close();
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
     }
 }
 
+/// One queued feed request inside a [`FeedTask`].
+struct PendingFeed {
+    tokens: Vec<i32>,
+    count_loss: bool,
+    resp: mpsc::Sender<Result<FeedResult>>,
+    t0: Instant,
+    /// Victim evicted when this feed admitted the session.
+    evicted: Option<u64>,
+    /// Input tokens consumed so far (the final token stays unconsumed).
+    off: usize,
+    nll: f64,
+    cnt: f64,
+}
+
+/// A session with feed work in flight. Holds the session carry checked
+/// out (pinned) for its whole lifetime, so interleaved admissions can
+/// never evict a mid-feed session.
+struct FeedTask {
+    session: u64,
+    carry: StreamCarry,
+    queue: VecDeque<PendingFeed>,
+    consumed_total: u64,
+}
+
+/// A generation in flight. Holds the carry checked out from admission
+/// to finish; `carry == None` while parked behind an earlier feed on
+/// the same session.
+struct GenTask {
+    session: u64,
+    carry: Option<StreamCarry>,
+    /// Next input token (seed_token, then each sampled token).
+    token: i32,
+    produced: usize,
+    opts: GenOpts,
+    rng: Rng,
+    tx: mpsc::Sender<StreamItem>,
+    t0: Instant,
+    cancelled: bool,
+}
+
+struct ModelThread {
+    rt: Runtime,
+    /// weights pre-uploaded as a device buffer (§Perf L3-1)
+    params: stlt_exec::ParamBuf,
+    stream_entry: Entry,
+    decode_entry: Entry,
+    /// Batched continuous-decode executable; None on backends without
+    /// the `decode_batch` kind (per-row fallback).
+    batched: Option<stlt_exec::BatchedDecodeStep>,
+    chunk: usize,
+    b_srv: usize,
+    /// Vocab size from the decode entry; seed tokens are validated
+    /// against it at intake.
+    vocab: usize,
+    pool: StatePool,
+    stats: Arc<ServerStats>,
+    feeds: Vec<FeedTask>,
+    gens: Vec<GenTask>,
+    /// Requests that could not admit a session because every resident
+    /// session was pinned by in-flight work (admission control):
+    /// retried, in arrival order, at every scheduler iteration. A
+    /// non-empty parked queue implies active tasks exist (only pinned
+    /// sessions reject admission), so retries always ride on a working
+    /// iteration — no spin, no deadlock.
+    parked: VecDeque<(Request, Instant)>,
+}
+
+/// Why a session's carry could not be acquired.
+enum AcquireError {
+    /// Every resident session is pinned by in-flight work — transient;
+    /// the request parks until a wave frees a slot.
+    Capacity,
+    /// Permanent for this request (e.g. the carry is already checked
+    /// out by a conflicting task).
+    Other(anyhow::Error),
+}
+
 impl ModelThread {
-    fn process(&mut self, batch: Vec<(Request, Instant)>) {
-        let mut feeds = Vec::new();
-        for (req, t0) in batch {
-            match req {
-                Request::Feed { session, tokens, count_loss, resp } => {
-                    feeds.push((session, tokens, count_loss, resp, t0));
-                }
-                Request::Generate { session, seed_token, max_tokens, stop, sampling, rng_seed, resp } => {
-                    let r = self.run_generate(session, seed_token, max_tokens, stop, sampling, rng_seed);
-                    self.stats.gens.fetch_add(1, Ordering::Relaxed);
-                    self.stats.gen_latency.lock().unwrap().record(t0.elapsed().as_secs_f64());
-                    let _ = resp.send(r);
-                }
-                Request::Release { session } => {
-                    self.pool.release(session);
+    /// The continuous-batching scheduler loop. Each iteration: drain
+    /// newly-arrived requests into the in-flight task sets (mid-flight
+    /// admission), then run at most one feed wave and one decode wave
+    /// (the fairness alternation). Blocks only when no work is in
+    /// flight; exits when the queue is closed and everything drained.
+    fn run(mut self, queue: &BoundedQueue<(Request, Instant)>) {
+        loop {
+            let mut incoming: Vec<(Request, Instant)> = Vec::new();
+            if self.feeds.is_empty() && self.gens.is_empty() && self.parked.is_empty() {
+                match queue.pop() {
+                    Some(r) => incoming.push(r),
+                    None => break, // closed and drained
                 }
             }
-        }
-        // process feeds in waves of b_srv sessions
-        while !feeds.is_empty() {
-            let wave: Vec<_> = feeds.drain(..feeds.len().min(self.b_srv)).collect();
-            self.run_feed_wave(wave);
+            incoming.extend(queue.drain_up_to(INTAKE_MAX));
+            // parked admissions retry first (arrival-order fairness),
+            // then the new arrivals
+            let mut retry: Vec<(Request, Instant)> = self.parked.drain(..).collect();
+            retry.extend(incoming);
+            for (req, t0) in retry {
+                self.intake(req, t0);
+            }
+            if queue.is_closed() {
+                // prompt shutdown: in-flight generations end Cancelled
+                // at the next wave boundary instead of running out
+                // their token budgets against a departing server
+                for g in &mut self.gens {
+                    g.cancelled = true;
+                }
+            }
+            if !self.feeds.is_empty() {
+                self.feed_wave();
+            }
+            if !self.gens.is_empty() {
+                self.decode_wave();
+            }
         }
     }
 
-    fn admit_session(&mut self, session: u64) -> Option<u64> {
-        if self.pool.contains(session) {
-            return None;
+    /// Finish `session`'s already-cancelled generations immediately, so
+    /// a feed/generate submitted right after a cancel does not race the
+    /// next wave boundary and get spuriously rejected as "in flight".
+    fn reap_cancelled(&mut self, session: u64) {
+        while let Some(pos) = self.gens.iter().position(|g| g.session == session && g.cancelled) {
+            let g = self.gens.remove(pos);
+            self.finish_gen(g, FinishReason::Cancelled);
         }
-        let carry = StreamCarry::zeros(&self.stream_entry_single());
-        match self.pool.admit(session, carry) {
-            Admit::Evicted(v) => {
-                self.stats.evictions.fetch_add(1, Ordering::Relaxed);
-                Some(v)
+    }
+
+    fn intake(&mut self, req: Request, t0: Instant) {
+        match req {
+            Request::Feed { session, tokens, count_loss, resp } => {
+                self.reap_cancelled(session);
+                if self.gens.iter().any(|g| g.session == session) {
+                    let _ = resp.send(Err(anyhow!(
+                        "session {session}: a generation is in flight; cancel it or \
+                         wait for its stream to finish before feeding"
+                    )));
+                    return;
+                }
+                if let Some(ft) = self.feeds.iter_mut().find(|f| f.session == session) {
+                    ft.queue.push_back(PendingFeed {
+                        tokens,
+                        count_loss,
+                        resp,
+                        t0,
+                        evicted: None,
+                        off: 0,
+                        nll: 0.0,
+                        cnt: 0.0,
+                    });
+                    return;
+                }
+                match self.acquire(session) {
+                    Ok((carry, evicted, _fresh)) => {
+                        let mut q = VecDeque::new();
+                        q.push_back(PendingFeed {
+                            tokens,
+                            count_loss,
+                            resp,
+                            t0,
+                            evicted,
+                            off: 0,
+                            nll: 0.0,
+                            cnt: 0.0,
+                        });
+                        self.feeds.push(FeedTask { session, carry, queue: q, consumed_total: 0 });
+                    }
+                    Err(AcquireError::Capacity) => {
+                        let req = Request::Feed { session, tokens, count_loss, resp };
+                        self.parked.push_back((req, t0));
+                    }
+                    Err(AcquireError::Other(e)) => {
+                        let _ = resp.send(Err(e));
+                    }
+                }
             }
-            _ => None,
+            Request::Generate { session, opts, tx } => {
+                self.reap_cancelled(session);
+                if self.gens.iter().any(|g| g.session == session) {
+                    let _ = tx.send(StreamItem::End(Err(anyhow!(
+                        "session {session}: a generation is already in flight"
+                    ))));
+                    return;
+                }
+                // validate the seed token here so one client's bad
+                // request can never abort a whole batched decode wave
+                // of innocent sessions (sampled tokens are in-vocab by
+                // construction, so this is the only entry point)
+                if opts.seed_token < 0 || opts.seed_token as usize >= self.vocab {
+                    let _ = tx.send(StreamItem::End(Err(anyhow!(
+                        "seed_token {} out of vocab {}",
+                        opts.seed_token,
+                        self.vocab
+                    ))));
+                    return;
+                }
+                let behind_feed = self.feeds.iter().any(|f| f.session == session);
+                let mut bound = None;
+                if !behind_feed {
+                    match self.acquire(session) {
+                        Ok(acq) => bound = Some(acq),
+                        Err(AcquireError::Capacity) => {
+                            self.parked.push_back((Request::Generate { session, opts, tx }, t0));
+                            return;
+                        }
+                        Err(AcquireError::Other(e)) => {
+                            let _ = tx.send(StreamItem::End(Err(e)));
+                            return;
+                        }
+                    }
+                }
+                let rng = Rng::new(opts.rng_seed ^ session);
+                let mut task = GenTask {
+                    session,
+                    carry: None,
+                    token: opts.seed_token,
+                    produced: 0,
+                    opts,
+                    rng,
+                    tx,
+                    t0,
+                    cancelled: false,
+                };
+                if let Some((carry, evicted, fresh)) = bound {
+                    task.carry = Some(carry);
+                    let _ = task.tx.send(StreamItem::Start { evicted, fresh_carry: fresh });
+                }
+                // without a bound carry the task parks behind the
+                // session's feed queue; it is bound when that drains
+                self.gens.push(task);
+            }
+            Request::Cancel { session } => {
+                for g in self.gens.iter_mut().filter(|g| g.session == session) {
+                    g.cancelled = true;
+                }
+                // a capacity-parked generation cancels before it starts
+                self.drop_parked(session, false);
+            }
+            Request::Release { session } => {
+                if let Some(pos) = self.feeds.iter().position(|f| f.session == session) {
+                    let ft = self.feeds.remove(pos);
+                    for p in ft.queue {
+                        let _ = p.resp.send(Err(anyhow!("session {session} released mid-feed")));
+                    }
+                }
+                if let Some(pos) = self.gens.iter().position(|g| g.session == session) {
+                    let g = self.gens.remove(pos);
+                    self.finish_gen(g, FinishReason::Cancelled);
+                }
+                self.drop_parked(session, true);
+                self.pool.release(session);
+            }
         }
+    }
+
+    /// Resolve `session`'s capacity-parked requests on cancel/release:
+    /// parked generations end Cancelled; parked feeds (only when
+    /// `feeds_too`, i.e. release) fail with a clear error.
+    fn drop_parked(&mut self, session: u64, feeds_too: bool) {
+        let mut kept = VecDeque::new();
+        for (req, t0) in self.parked.drain(..) {
+            match req {
+                Request::Generate { session: s, tx, .. } if s == session => {
+                    self.stats.cancelled.fetch_add(1, Ordering::Relaxed);
+                    let _ = tx.send(StreamItem::End(Ok(FinishReason::Cancelled)));
+                }
+                Request::Feed { session: s, resp, .. } if feeds_too && s == session => {
+                    let _ = resp.send(Err(anyhow!("session {session} released before its \
+                         feed could be admitted")));
+                }
+                other => kept.push_back((other, t0)),
+            }
+        }
+        self.parked = kept;
+    }
+
+    /// Admit (if needed) and check out a session's carry. Returns
+    /// (carry, evicted victim, fresh-carry flag).
+    fn acquire(
+        &mut self,
+        session: u64,
+    ) -> std::result::Result<(StreamCarry, Option<u64>, bool), AcquireError> {
+        let fresh = !self.pool.contains(session);
+        let mut evicted = None;
+        if fresh {
+            let carry = StreamCarry::zeros(&self.stream_entry_single());
+            match self.pool.admit(session, carry) {
+                Admit::Evicted(v) => {
+                    self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+                    evicted = Some(v);
+                }
+                Admit::Rejected => return Err(AcquireError::Capacity),
+                Admit::Ok => {}
+            }
+        }
+        let carry = self.pool.checkout(session).ok_or_else(|| {
+            AcquireError::Other(anyhow!("session {session}: state is already in flight"))
+        })?;
+        Ok((carry, evicted, fresh))
     }
 
     /// Per-session carry shapes = stream_batch shapes minus batch dim.
@@ -289,78 +690,74 @@ impl ModelThread {
         e
     }
 
-    /// One wave: up to b_srv sessions, each feeding up to `chunk` tokens
-    /// per model call, iterating until every session's tokens are drained.
-    fn run_feed_wave(
-        &mut self,
-        wave: Vec<(u64, Vec<i32>, bool, mpsc::Sender<Result<FeedResult>>, Instant)>,
-    ) {
+    /// Bind a parked generation once `session`'s feed queue has
+    /// drained (or fail its stream if the state is gone).
+    fn activate_waiting_gen(&mut self, session: u64) {
+        let parked = self.gens.iter().position(|g| g.session == session && g.carry.is_none());
+        let pos = match parked {
+            Some(p) => p,
+            None => return,
+        };
+        match self.acquire(session) {
+            Ok((carry, evicted, fresh)) => {
+                let g = &mut self.gens[pos];
+                g.carry = Some(carry);
+                let _ = g.tx.send(StreamItem::Start { evicted, fresh_carry: fresh });
+            }
+            // Capacity here is transient (the feed that just drained
+            // released a slot another admission raced onto): leave the
+            // task parked; decode_wave retries binding every iteration.
+            Err(AcquireError::Capacity) => {}
+            Err(AcquireError::Other(e)) => {
+                let g = self.gens.remove(pos);
+                let _ = g.tx.send(StreamItem::End(Err(e)));
+            }
+        }
+    }
+
+    /// One feed wave: advance up to b_srv feeding sessions by ONE chunk
+    /// each through the `stream_batch` artifact, then rotate them
+    /// behind any sessions that did not make this wave.
+    fn feed_wave(&mut self) {
         let b = self.b_srv;
         let c = self.chunk;
-        let mut sessions = Vec::new();
-        for (session, tokens, count_loss, resp, t0) in wave {
-            let evicted = self.admit_session(session);
-            sessions.push((session, tokens, count_loss, resp, t0, evicted, 0.0f64, 0.0f64, 0usize));
-        }
-        self.stats.batch_fill.lock().unwrap().push(sessions.len());
-        loop {
-            // build one batched chunk step
-            let mut any = false;
-            let mut l_all = Vec::new();
-            let mut u_all = Vec::new();
-            let mut toks = vec![0i32; b * c];
-            let mut tgts = vec![0i32; b * c];
-            let mut mask = vec![0f32; b * c];
-            let mut active = vec![0f32; b];
-            let mut carries: Vec<Option<StreamCarry>> = Vec::with_capacity(b);
-            let mut consumed = vec![0usize; sessions.len()];
-            for (i, (session, tokens, count_loss, _, _, _, _, _, off)) in
-                sessions.iter().enumerate()
-            {
-                if i >= b {
-                    break;
-                }
-                let remaining = tokens.len().saturating_sub(*off);
-                if remaining <= 1 {
-                    carries.push(None);
-                    continue;
-                }
+        let wave = self.feeds.len().min(b);
+        let single = self.stream_entry_single();
+        let l_stride = single.inputs[1].numel();
+        let u_stride = single.inputs[2].numel();
+        let mut l_all = Vec::with_capacity(b * l_stride);
+        let mut u_all = Vec::with_capacity(b * u_stride);
+        let mut toks = vec![0i32; b * c];
+        let mut tgts = vec![0i32; b * c];
+        let mut mask = vec![0f32; b * c];
+        let mut active = vec![0f32; b];
+        let mut consumed = vec![0usize; wave];
+        let mut any = false;
+        for (i, ft) in self.feeds[..wave].iter().enumerate() {
+            let p = ft.queue.front().expect("feed task with empty queue");
+            let remaining = p.tokens.len().saturating_sub(p.off);
+            if remaining > 1 {
                 let take = remaining.min(c + 1); // need next-token targets
-                let slice = &tokens[*off..*off + take];
+                let slice = &p.tokens[p.off..p.off + take];
                 let n_in = take - 1;
                 for j in 0..n_in {
                     toks[i * c + j] = slice[j];
                     tgts[i * c + j] = slice[j + 1];
-                    mask[i * c + j] = if *count_loss { 1.0 } else { 0.0 };
+                    mask[i * c + j] = if p.count_loss { 1.0 } else { 0.0 };
                 }
                 active[i] = 1.0;
-                any = true;
                 consumed[i] = n_in;
-                let carry = self.pool.checkout(*session).expect("session admitted");
-                carries.push(Some(carry));
-                let _ = session;
+                any = true;
             }
-            if !any {
-                break;
-            }
-            // pad remaining rows with zero carries
-            while carries.len() < b {
-                carries.push(None);
-            }
-            let single = self.stream_entry_single();
-            for cslot in &carries {
-                match cslot {
-                    Some(cr) => {
-                        l_all.extend_from_slice(&cr.l);
-                        u_all.extend_from_slice(&cr.u);
-                    }
-                    None => {
-                        let z = StreamCarry::zeros(&single);
-                        l_all.extend_from_slice(&z.l);
-                        u_all.extend_from_slice(&z.u);
-                    }
-                }
-            }
+            l_all.extend_from_slice(&ft.carry.l);
+            u_all.extend_from_slice(&ft.carry.u);
+        }
+        // pad the remaining rows with zero carries
+        l_all.resize(b * l_stride, 0.0);
+        u_all.resize(b * u_stride, 0.0);
+        if any {
+            let fill = consumed.iter().filter(|&&x| x > 0).count();
+            self.stats.batch_fill.lock().unwrap().record(fill);
             let e = &self.stream_entry;
             let out = self.rt.run_with_param_buffer(
                 e,
@@ -374,113 +771,284 @@ impl ModelThread {
                     Tensor::f32(active, &[b]),
                 ],
             );
-            let out = match out {
-                Ok(o) => o,
+            let parsed =
+                out.and_then(|o| Self::parse_stream_batch_out(o, b, l_stride, u_stride));
+            let (l_new, u_new, nll, cnt) = match parsed {
+                Ok(t) => t,
                 Err(err) => {
-                    // fail every in-flight request in this wave
-                    let msg = format!("{err:#}");
-                    for (session, _, _, resp, _, _, _, _, _) in sessions.drain(..) {
-                        self.pool.release(session);
-                        let _ = resp.send(Err(anyhow!("stream step failed: {msg}")));
-                    }
+                    self.fail_feed_wave(wave, &format!("{err:#}"));
                     return;
                 }
             };
-            let l_new = out[0].as_f32().unwrap();
-            let u_new = out[1].as_f32().unwrap();
-            let nll = out[2].as_f32().unwrap();
-            let cnt = out[3].as_f32().unwrap();
-            let l_stride = single.inputs[1].numel();
-            let u_stride = single.inputs[2].numel();
-            for (i, cslot) in carries.into_iter().enumerate() {
-                if let Some(mut cr) = cslot {
-                    cr.l.clear();
-                    cr.l.extend_from_slice(&l_new[i * l_stride..(i + 1) * l_stride]);
-                    cr.u.clear();
-                    cr.u.extend_from_slice(&u_new[i * u_stride..(i + 1) * u_stride]);
-                    let s = &mut sessions[i];
-                    self.pool.checkin(s.0, cr, consumed[i] as u64);
-                    s.6 += nll[i] as f64;
-                    s.7 += cnt[i] as f64;
-                    s.8 += consumed[i];
-                    self.stats.tokens_streamed.fetch_add(consumed[i] as u64, Ordering::Relaxed);
+            for i in 0..wave {
+                if consumed[i] == 0 {
+                    continue;
                 }
-            }
-            // drop fully-drained sessions out of the wave
-            let mut still = Vec::new();
-            for s in sessions.drain(..) {
-                let done = s.1.len().saturating_sub(s.8) <= 1;
-                if done {
-                    self.stats.feeds.fetch_add(1, Ordering::Relaxed);
-                    self.stats.feed_latency.lock().unwrap().record(s.4.elapsed().as_secs_f64());
-                    let _ = s.3.send(Ok(FeedResult { nll_sum: s.6, count: s.7, evicted: s.5 }));
-                } else {
-                    still.push(s);
-                }
-            }
-            sessions = still;
-            if sessions.is_empty() {
-                break;
+                let ft = &mut self.feeds[i];
+                ft.carry.l.clear();
+                ft.carry.l.extend_from_slice(&l_new[i * l_stride..(i + 1) * l_stride]);
+                ft.carry.u.clear();
+                ft.carry.u.extend_from_slice(&u_new[i * u_stride..(i + 1) * u_stride]);
+                let p = ft.queue.front_mut().expect("feed task with empty queue");
+                p.nll += nll[i] as f64;
+                p.cnt += cnt[i] as f64;
+                p.off += consumed[i];
+                self.stats.tokens_streamed.fetch_add(consumed[i] as u64, Ordering::Relaxed);
             }
         }
-        // sessions left with <=1 token remaining: respond
-        for s in sessions {
+        // completion sweep (reverse so removals keep indices valid):
+        // finished pendings respond; tasks with drained queues check
+        // their carry back in and unpark any waiting generation
+        let mut removed = 0usize;
+        let mut drained_sessions = Vec::new();
+        for i in (0..wave).rev() {
+            let ft = &mut self.feeds[i];
+            let done = {
+                let p = ft.queue.front().expect("feed task with empty queue");
+                p.tokens.len().saturating_sub(p.off) <= 1
+            };
+            if !done {
+                continue;
+            }
+            let p = ft.queue.pop_front().unwrap();
+            ft.consumed_total += p.off as u64;
             self.stats.feeds.fetch_add(1, Ordering::Relaxed);
-            let _ = s.3.send(Ok(FeedResult { nll_sum: s.6, count: s.7, evicted: s.5 }));
+            self.stats.feed_latency.lock().unwrap().record(p.t0.elapsed().as_secs_f64());
+            let fr = FeedResult { nll_sum: p.nll, count: p.cnt, evicted: p.evicted };
+            let _ = p.resp.send(Ok(fr));
+            if ft.queue.is_empty() {
+                let ft = self.feeds.remove(i);
+                self.pool.checkin(ft.session, ft.carry, ft.consumed_total);
+                drained_sessions.push(ft.session);
+                removed += 1;
+            }
+        }
+        // fairness rotation: surviving wave members go to the back
+        let still = wave - removed;
+        if still > 0 && self.feeds.len() > still {
+            self.feeds.rotate_left(still);
+        }
+        for s in drained_sessions {
+            self.activate_waiting_gen(s);
         }
     }
 
-    fn run_generate(
-        &mut self,
-        session: u64,
-        seed_token: i32,
-        max_tokens: usize,
-        stop: Option<i32>,
-        sampling: Sampling,
-        rng_seed: u64,
-    ) -> Result<GenResult> {
-        let mut rng = crate::util::rng::Rng::new(rng_seed ^ session);
-        self.admit_session(session);
-        let mut carry = self
-            .pool
-            .checkout(session)
-            .ok_or_else(|| anyhow!("session {session} not available"))?;
-        let e = &self.decode_entry;
-        let mut out_tokens = Vec::new();
-        // feed() consumes tokens pairwise (input -> target) and leaves the
-        // final prompt token unconsumed; the caller passes it here.
-        let mut token = seed_token;
-        let mut produced = 0usize;
-        let result = loop {
-            if produced >= max_tokens {
-                break Ok(());
-            }
-            let run = self.rt.run_with_param_buffer(
-                e,
-                self.params.buffer(),
-                &[
-                    Tensor::f32(std::mem::take(&mut carry.l), &carry.l_shape.clone()),
-                    Tensor::f32(std::mem::take(&mut carry.u), &carry.u_shape.clone()),
-                    Tensor::i32(vec![token], &[1]),
-                ],
+    /// Parse (l', u', nll [b], count [b]) from a stream_batch output
+    /// set. Arity/shape mismatches surface as errors — not indexing
+    /// panics past the failure path — so a malformed backend output
+    /// fails only the wave (PR-4's pop_out hardening, applied to the
+    /// one remaining indexed-unwrap parse).
+    fn parse_stream_batch_out(
+        mut out: Vec<Tensor>,
+        b: usize,
+        l_stride: usize,
+        u_stride: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let mut pop = |what: &str| -> Result<Vec<f32>> {
+            out.pop()
+                .ok_or_else(|| anyhow!("stream_batch returned too few outputs: missing {what}"))?
+                .into_f32()
+        };
+        let cnt = pop("count")?;
+        let nll = pop("nll")?;
+        let u = pop("u")?;
+        let l = pop("l")?;
+        if l.len() != b * l_stride || u.len() != b * u_stride || nll.len() < b || cnt.len() < b {
+            anyhow::bail!(
+                "stream_batch output sizes (l {}, u {}, nll {}, count {}) do not match b={b}",
+                l.len(),
+                u.len(),
+                nll.len(),
+                cnt.len()
             );
-            match run {
-                Ok(mut out) => {
-                    let logits = out.pop().unwrap().into_f32().unwrap();
-                    carry.u = out.pop().unwrap().into_f32().unwrap();
-                    carry.l = out.pop().unwrap().into_f32().unwrap();
-                    token = sampling.sample(&logits, &mut rng) as i32;
-                    out_tokens.push(token);
-                    produced += 1;
-                    if Some(token) == stop {
-                        break Ok(());
+        }
+        Ok((l, u, nll, cnt))
+    }
+
+    /// Fail every pending feed of the current wave's tasks and drop
+    /// their sessions (their carries are mid-step; a clean re-feed is
+    /// the recovery path, as with the old whole-wave semantics).
+    fn fail_feed_wave(&mut self, wave: usize, msg: &str) {
+        let failed: Vec<FeedTask> = self.feeds.drain(..wave).collect();
+        for ft in failed {
+            for p in ft.queue {
+                let _ = p.resp.send(Err(anyhow!("stream step failed: {msg}")));
+            }
+            self.pool.release(ft.session);
+            // a generation parked behind this feed cannot proceed
+            // meaningfully; fail its stream too
+            let parked =
+                self.gens.iter().position(|g| g.session == ft.session && g.carry.is_none());
+            if let Some(pos) = parked {
+                let g = self.gens.remove(pos);
+                let _ = g.tx.send(StreamItem::End(Err(anyhow!(
+                    "session {}: feed failed before generation started: {msg}",
+                    ft.session
+                ))));
+            }
+        }
+    }
+
+    /// One decode wave: advance up to b_srv ready generations by ONE
+    /// token each — batched through `decode_batch` where the backend
+    /// supports it, per-row otherwise — then rotate survivors behind
+    /// waiting sessions so every generation makes progress.
+    fn decode_wave(&mut self) {
+        // cancelled (or zero-budget) tasks finish at the wave boundary
+        let mut i = 0;
+        while i < self.gens.len() {
+            let g = &self.gens[i];
+            if g.cancelled {
+                let g = self.gens.remove(i);
+                self.finish_gen(g, FinishReason::Cancelled);
+            } else if g.produced >= g.opts.max_tokens {
+                let g = self.gens.remove(i);
+                self.finish_gen(g, FinishReason::MaxTokens);
+            } else {
+                i += 1;
+            }
+        }
+        // bind any generation still parked without a feed in front of
+        // it (covers the rare admission race on activation, and makes
+        // a parked task never depend on a future request to progress)
+        let unblocked: Vec<u64> = self
+            .gens
+            .iter()
+            .filter(|g| g.carry.is_none())
+            .map(|g| g.session)
+            .filter(|s| !self.feeds.iter().any(|f| f.session == *s))
+            .collect();
+        for s in unblocked {
+            self.activate_waiting_gen(s);
+        }
+        // wave = the first b_srv tasks whose carry is bound
+        let mut wave_idx = Vec::new();
+        for (i, g) in self.gens.iter().enumerate() {
+            if g.carry.is_some() {
+                wave_idx.push(i);
+                if wave_idx.len() == self.b_srv {
+                    break;
+                }
+            }
+        }
+        if wave_idx.is_empty() {
+            return;
+        }
+        self.stats.batch_fill.lock().unwrap().record(wave_idx.len());
+        let mut wave: Vec<GenTask> = Vec::with_capacity(wave_idx.len());
+        for &i in wave_idx.iter().rev() {
+            wave.push(self.gens.remove(i));
+        }
+        wave.reverse();
+        let tokens: Vec<i32> = wave.iter().map(|g| g.token).collect();
+        // single-row waves take the plain decode_step (no batch padding
+        // to gather for one session); multi-row waves are the batched
+        // continuous-decode hot path. The two are bitwise identical per
+        // row (the decode_batch parity seam), so wave size never leaks
+        // into outputs. Outcomes are per row: a failed row ends only
+        // its own stream — and on any failure the affected carries are
+        // left exactly as they were (run_h gathers by copy; the
+        // per-row path only assigns after a fully parsed output), so a
+        // failed step never silently consumes a token.
+        let results: Vec<Result<Vec<f32>>> = match &self.batched {
+            Some(batch) if wave.len() > 1 => {
+                let mut carries: Vec<&mut StreamCarry> = wave
+                    .iter_mut()
+                    .map(|g| g.carry.as_mut().expect("wave task has carry"))
+                    .collect();
+                match batch.run_h(&self.rt, &self.params, &mut carries, &tokens) {
+                    Ok(rows) => rows.into_iter().map(Ok).collect(),
+                    Err(e) => {
+                        let msg = format!("{e:#}");
+                        (0..wave.len())
+                            .map(|_| Err(anyhow!("decode step failed: {msg}")))
+                            .collect()
                     }
                 }
-                Err(err) => break Err(err),
+            }
+            _ => self.decode_rows_sequential(&mut wave, &tokens),
+        };
+        let mut survivors = Vec::new();
+        for (mut g, res) in wave.into_iter().zip(results) {
+            let logits = match res {
+                Ok(l) => l,
+                Err(e) => {
+                    self.finish_gen_err(g, e);
+                    continue;
+                }
+            };
+            let tok = g.opts.sampling.sample(&logits, &mut g.rng) as i32;
+            g.token = tok;
+            g.produced += 1;
+            if g.produced == 1 {
+                self.stats.ttft_latency.lock().unwrap().record(g.t0.elapsed().as_secs_f64());
+            }
+            self.stats.tokens_generated.fetch_add(1, Ordering::Relaxed);
+            if g.tx.send(StreamItem::Token(tok)).is_err() {
+                // client dropped the stream: implicit cancel
+                self.finish_gen(g, FinishReason::Cancelled);
+            } else if Some(tok) == g.opts.stop {
+                self.finish_gen(g, FinishReason::Stop);
+            } else if g.produced >= g.opts.max_tokens {
+                self.finish_gen(g, FinishReason::MaxTokens);
+            } else {
+                survivors.push(g);
+            }
+        }
+        // fairness rotation: survivors rejoin at the back
+        self.gens.extend(survivors);
+    }
+
+    /// Per-row decode fallback for backends without the `decode_batch`
+    /// kind (e.g. XLA, whose programs are AOT-lowered per entry) and
+    /// for single-row waves. Each row gets its own outcome through
+    /// [`stlt_exec::DecodeStep::run_h`] — the same zero-copy
+    /// take-and-restore hot path as standalone decoding, so a failed
+    /// row's carry is left intact and sibling rows are unaffected.
+    fn decode_rows_sequential(
+        &self,
+        wave: &mut [GenTask],
+        tokens: &[i32],
+    ) -> Vec<Result<Vec<f32>>> {
+        let step = match stlt_exec::DecodeStep::from_entry(&self.rt, &self.decode_entry) {
+            Ok(s) => s,
+            Err(e) => {
+                let msg = format!("{e:#}");
+                return wave.iter().map(|_| Err(anyhow!("{msg}"))).collect();
             }
         };
-        self.pool.checkin(session, carry, produced as u64);
-        result?;
-        Ok(GenResult { tokens: out_tokens })
+        let mut rows = Vec::with_capacity(wave.len());
+        for (g, &tok) in wave.iter_mut().zip(tokens) {
+            let carry = g.carry.as_mut().expect("wave task has carry");
+            rows.push(step.run_h(&self.params, carry, tok));
+        }
+        rows
+    }
+
+    /// End a generation: return the carry to the pool, record stats,
+    /// and close the stream with `reason`.
+    fn finish_gen(&mut self, g: GenTask, reason: FinishReason) {
+        if let Some(carry) = g.carry {
+            self.pool.checkin(g.session, carry, g.produced as u64);
+        }
+        self.stats.gens.fetch_add(1, Ordering::Relaxed);
+        self.stats.gen_latency.lock().unwrap().record(g.t0.elapsed().as_secs_f64());
+        if reason == FinishReason::Cancelled {
+            self.stats.cancelled.fetch_add(1, Ordering::Relaxed);
+        }
+        let _ = g.tx.send(StreamItem::End(Ok(reason)));
+    }
+
+    /// End a generation with a model-thread error; the carry (restored
+    /// by the exec layer) returns to the pool so the session survives.
+    fn finish_gen_err(&mut self, g: GenTask, err: anyhow::Error) {
+        if let Some(carry) = g.carry {
+            self.pool.checkin(g.session, carry, g.produced as u64);
+        }
+        self.stats.gens.fetch_add(1, Ordering::Relaxed);
+        // errored generations stay in the latency histogram (they are
+        // often the slowest ones; dropping them would read optimistic)
+        self.stats.gen_latency.lock().unwrap().record(g.t0.elapsed().as_secs_f64());
+        let _ = g.tx.send(StreamItem::End(Err(err)));
     }
 }

@@ -1,0 +1,256 @@
+//! Client-side surface of the continuous-batching server: session
+//! handles and streamed tokens.
+//!
+//! [`crate::coordinator::Server::open_session`] returns a
+//! [`SessionHandle`] — a cheap, thread-safe handle over one streaming
+//! session's O(S·d) carry state. `feed` streams document tokens in,
+//! `generate` returns a [`TokenStream`] that yields tokens *as the
+//! model thread produces them* (an mpsc-backed iterator), `cancel`
+//! stops an in-flight generation at the next wave boundary, and
+//! `close` (or dropping the handle) releases the carry.
+//!
+//! Lifecycle:
+//!
+//!   open_session() ─ feed()* ─ generate() ─┬─ next()* ─ finish
+//!                                          └─ cancel()
+//!
+//! A session's carry stays resident (and pinned against LRU eviction)
+//! while a feed or generation is in flight; between calls it is idle
+//! and evictable. If an idle session's state was evicted and a later
+//! `generate` re-admits it, the stream reports `fresh_carry() == true`
+//! — the generation started from a zero carry, not the fed context —
+//! and `evicted()` names any victim this admission displaced, exactly
+//! like `FeedResult::evicted` does on the feed path.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use super::sampling::Sampling;
+use super::server::{FeedResult, ServerCore};
+
+/// Options for one generation through a [`SessionHandle`] (or the
+/// blocking `Server::generate_with` wrapper).
+#[derive(Clone, Debug)]
+pub struct GenOpts {
+    /// First input token. `feed` consumes tokens pairwise (input ->
+    /// target) and leaves the final prompt token unconsumed; pass it
+    /// here to continue the fed context.
+    pub seed_token: i32,
+    /// Maximum number of tokens to produce.
+    pub max_tokens: usize,
+    /// Stop after producing this token (it is included in the output).
+    pub stop: Option<i32>,
+    /// Sampling policy (greedy / temperature / top-k / nucleus).
+    pub sampling: Sampling,
+    /// RNG seed for reproducible stochastic decoding (xor'd with the
+    /// session id, so concurrent sessions draw independent streams).
+    pub rng_seed: u64,
+}
+
+impl Default for GenOpts {
+    fn default() -> Self {
+        GenOpts {
+            seed_token: 0,
+            max_tokens: 64,
+            stop: None,
+            sampling: Sampling::Greedy,
+            rng_seed: 0,
+        }
+    }
+}
+
+/// Why a generation ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Produced `max_tokens` tokens.
+    MaxTokens,
+    /// Produced the stop token (included in the output).
+    Stop,
+    /// Cancelled — explicitly, by dropping the [`TokenStream`], by
+    /// releasing the session, or by server shutdown.
+    Cancelled,
+}
+
+/// Completed generation: every streamed token plus the end-of-stream
+/// metadata. The blocking `generate`/`generate_with` wrappers return
+/// this directly; streaming callers get the same fields from
+/// [`TokenStream`] accessors after the stream ends.
+#[derive(Clone, Debug)]
+pub struct GenResult {
+    pub tokens: Vec<i32>,
+    pub reason: FinishReason,
+    /// Session id LRU-evicted when this generation (re)admitted its
+    /// session — the generate-path analog of `FeedResult::evicted`.
+    pub evicted: Option<u64>,
+    /// True when the generation started from a freshly-admitted zero
+    /// carry rather than resuming fed context — the signal that this
+    /// session's own state had been evicted (or never fed). Before
+    /// this surfaced, an evicted client silently got logits from a
+    /// zero carry.
+    pub fresh_carry: bool,
+}
+
+/// One item on the model-thread -> client stream channel.
+pub(crate) enum StreamItem {
+    /// Sent once, when the scheduler binds the session state to the
+    /// generation (before the first token).
+    Start { evicted: Option<u64>, fresh_carry: bool },
+    Token(i32),
+    End(Result<FinishReason>),
+}
+
+/// Streamed generation output: an iterator over tokens, delivered as
+/// the continuous-batching scheduler produces them — the first token
+/// arrives while the rest of the completion is still being decoded.
+///
+/// Iteration yields `Result<i32>`; an `Err` item reports a model-thread
+/// failure (or server shutdown) and ends the stream. Dropping the
+/// stream cancels the in-flight generation at the next wave boundary.
+/// After the stream ends, [`TokenStream::finish_reason`],
+/// [`TokenStream::evicted`] and [`TokenStream::fresh_carry`] expose the
+/// end-of-stream metadata; [`TokenStream::wait`] collects everything
+/// into a [`GenResult`].
+pub struct TokenStream {
+    rx: mpsc::Receiver<StreamItem>,
+    evicted: Option<u64>,
+    fresh_carry: bool,
+    finished: Option<FinishReason>,
+    failed: bool,
+}
+
+impl TokenStream {
+    pub(crate) fn new(rx: mpsc::Receiver<StreamItem>) -> TokenStream {
+        TokenStream { rx, evicted: None, fresh_carry: false, finished: None, failed: false }
+    }
+
+    /// Block for the next token. `None` once the generation has
+    /// finished (see [`TokenStream::finish_reason`]) or after an error
+    /// has been yielded.
+    pub fn recv(&mut self) -> Option<Result<i32>> {
+        if self.finished.is_some() || self.failed {
+            return None;
+        }
+        loop {
+            match self.rx.recv() {
+                Ok(StreamItem::Start { evicted, fresh_carry }) => {
+                    self.evicted = evicted;
+                    self.fresh_carry = fresh_carry;
+                }
+                Ok(StreamItem::Token(t)) => return Some(Ok(t)),
+                Ok(StreamItem::End(Ok(reason))) => {
+                    self.finished = Some(reason);
+                    return None;
+                }
+                Ok(StreamItem::End(Err(e))) => {
+                    self.failed = true;
+                    return Some(Err(e));
+                }
+                Err(_) => {
+                    self.failed = true;
+                    return Some(Err(anyhow!("server shut down mid-generation")));
+                }
+            }
+        }
+    }
+
+    /// Why the stream ended; `None` while it is still live (or if it
+    /// ended in an error).
+    pub fn finish_reason(&self) -> Option<FinishReason> {
+        self.finished
+    }
+
+    /// Victim session LRU-evicted by this generation's admission.
+    /// Populated once the scheduler has bound the session (always by
+    /// the first received token).
+    pub fn evicted(&self) -> Option<u64> {
+        self.evicted
+    }
+
+    /// True when the generation started from a freshly-admitted zero
+    /// carry (this session's own state was evicted, or it was never
+    /// fed). Populated like [`TokenStream::evicted`].
+    pub fn fresh_carry(&self) -> bool {
+        self.fresh_carry
+    }
+
+    /// Drain the stream to completion and collect a [`GenResult`].
+    pub fn wait(mut self) -> Result<GenResult> {
+        let mut tokens = Vec::new();
+        while let Some(item) = self.recv() {
+            tokens.push(item?);
+        }
+        let reason = self
+            .finished
+            .ok_or_else(|| anyhow!("generation stream ended without a finish reason"))?;
+        Ok(GenResult { tokens, reason, evicted: self.evicted, fresh_carry: self.fresh_carry })
+    }
+}
+
+impl Iterator for TokenStream {
+    type Item = Result<i32>;
+
+    fn next(&mut self) -> Option<Result<i32>> {
+        self.recv()
+    }
+}
+
+/// Handle over one serving session. Cheap to clone-by-open (each
+/// `open_session` allocates a fresh id); all methods are non-blocking
+/// submissions except `feed`, which blocks until the server has
+/// consumed the chunk (use multiple handles from multiple threads for
+/// concurrency — the scheduler batches them into shared waves).
+/// Dropping the handle releases the session's carry.
+pub struct SessionHandle {
+    id: u64,
+    core: Arc<ServerCore>,
+    released: bool,
+}
+
+impl SessionHandle {
+    pub(crate) fn new(id: u64, core: Arc<ServerCore>) -> SessionHandle {
+        SessionHandle { id, core, released: false }
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Stream a chunk of document tokens into the session. Blocking;
+    /// concurrent feeds from other sessions share batched waves.
+    pub fn feed(&self, tokens: Vec<i32>, count_loss: bool) -> Result<FeedResult> {
+        self.core.feed(self.id, tokens, count_loss)
+    }
+
+    /// Start a generation; returns immediately with a [`TokenStream`]
+    /// yielding tokens as the scheduler produces them.
+    pub fn generate(&self, opts: GenOpts) -> Result<TokenStream> {
+        self.core.start_generate(self.id, opts)
+    }
+
+    /// Convenience: run a generation to completion.
+    pub fn generate_blocking(&self, opts: GenOpts) -> Result<GenResult> {
+        self.generate(opts)?.wait()
+    }
+
+    /// Cancel the in-flight generation (if any) at the next wave
+    /// boundary; its stream ends with [`FinishReason::Cancelled`].
+    pub fn cancel(&self) -> Result<()> {
+        self.core.cancel(self.id)
+    }
+
+    /// Release the session's carry state explicitly.
+    pub fn close(mut self) -> Result<()> {
+        self.released = true;
+        self.core.release(self.id)
+    }
+}
+
+impl Drop for SessionHandle {
+    fn drop(&mut self) {
+        if !self.released {
+            let _ = self.core.release(self.id);
+        }
+    }
+}

@@ -83,12 +83,21 @@ impl StatePool {
         }
     }
 
-    /// Temporarily take the carry out for an execution step (pins the
-    /// session so concurrent eviction cannot drop in-flight state).
+    /// Temporarily take the carry out (pins the session so eviction
+    /// cannot drop in-flight state). The serving scheduler holds a
+    /// checkout for the whole lifetime of a feed/generate task, so a
+    /// session being decoded can never lose its carry mid-flight.
+    ///
+    /// Returns None while the carry is already checked out: the old
+    /// behaviour silently handed the *empty placeholder* to a second
+    /// caller, which would have executed from a zero-length carry.
     pub fn checkout(&mut self, id: u64) -> Option<StreamCarry> {
         self.clock += 1;
         let clock = self.clock;
         let s = self.states.get_mut(&id)?;
+        if s.pinned {
+            return None;
+        }
         s.last_used = clock;
         s.pinned = true;
         // move out, leave empty placeholder
@@ -166,6 +175,17 @@ mod tests {
         p.checkin(1, c, 10);
         assert_eq!(p.admit(1, carry()), Admit::Ok); // does not reset
         assert_eq!(p.tokens_seen(1), 10);
+    }
+
+    #[test]
+    fn double_checkout_is_refused_not_empty() {
+        let mut p = StatePool::new(2);
+        p.admit(1, carry());
+        let c = p.checkout(1).unwrap();
+        assert_eq!(c.l.len(), 8, "first checkout gets the real carry");
+        assert!(p.checkout(1).is_none(), "carry is in flight");
+        p.checkin(1, c, 4);
+        assert_eq!(p.checkout(1).unwrap().l.len(), 8);
     }
 
     #[test]

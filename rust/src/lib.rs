@@ -12,17 +12,18 @@
 //!   the flat parameter vector, and [`train`] adds a hand-derived
 //!   exact backward pass, a pure-Rust AdamW (optim.py semantics) and
 //!   multi-threaded data-parallel gradient accumulation. The full
-//!   `stlt train|eval|stream|generate|inspect --backend native`
+//!   `stlt train|eval|stream|generate|serve|inspect --backend native`
 //!   surface works with zero external dependencies.
 //! * **xla** (feature `xla`): AOT-lowered HLO artifacts (Pallas STLT
 //!   kernels + JAX models, lowered by python/compile/aot.py at build
 //!   time) executed on the PJRT CPU client, including the baseline
 //!   architectures, quadratic mode and seq2seq training.
 //!
-//! Layered on top: the training driver, the streaming long-document
-//! coordinator (router / dynamic batcher / carry state-pool /
-//! backpressure), and every substrate (tokenizer, data generators,
-//! metrics, config, CLI, RNG, FFT, thread pool) built from scratch.
+//! Layered on top: the training driver, the continuous-batching
+//! serving coordinator (session handles / token streams / batched
+//! decode waves / carry state-pool / backpressure), and every
+//! substrate (tokenizer, data generators, metrics, config, CLI, RNG,
+//! FFT, thread pool) built from scratch.
 //!
 //! See rust/README.md for the Backend trait contract, the manifest /
 //! flat-parameter layout the native backend consumes, and the

@@ -7,6 +7,10 @@
 //!   eval    --artifact NAME [--ckpt PATH] [--noise X]
 //!   stream  --artifact NAME [--ckpt PATH] --doc-len N   streaming PPL demo
 //!   generate --artifact NAME [--ckpt PATH] --len N
+//!   serve   --artifact NAME [--sessions N] [--prompt-len N] [--gen-len N]
+//!           continuous-batching demo: N concurrent sessions feed +
+//!           stream generations through the session API, reporting
+//!           aggregate tokens/s and first-token latency
 //!   inspect --artifact NAME [--ckpt PATH]               learned-parameter dump
 //!
 //! `--backend native|xla` selects the execution substrate (default:
@@ -35,9 +39,10 @@ fn main() {
 }
 
 fn usage() -> String {
-    "usage: stlt <info|train|eval|stream|generate|inspect> [--backend native|xla] \
+    "usage: stlt <info|train|eval|stream|generate|serve|inspect> [--backend native|xla] \
      [--artifact NAME] [--steps N] [--ckpt PATH] [--resume PATH] [--config FILE] \
      [--set key=value ...] [--grad-ckpt C] [--noise X] [--len N] [--doc-len N] \
+     [--sessions N] [--prompt-len N] [--gen-len N] \
      [--sampling greedy|temp:T|topk:K:T|topp:P:T]"
         .to_string()
 }
@@ -230,6 +235,89 @@ fn run() -> Result<()> {
             println!("prompt tail: {:?}", &prompt[prompt.len().saturating_sub(8)..]);
             println!("generated : {:?}", g.tokens);
             server.shutdown();
+            Ok(())
+        }
+        Some("serve") => {
+            let artifact = args.get_or("artifact", "lm_stlt_tiny");
+            let sessions = args.get_usize("sessions", 4).map_err(|e| anyhow!(e))?.max(1);
+            let prompt_len = args.get_usize("prompt-len", 129).map_err(|e| anyhow!(e))?.max(2);
+            let gen_len = args.get_usize("gen-len", 32).map_err(|e| anyhow!(e))?.max(1);
+            let sampling = stlt::coordinator::Sampling::parse(
+                &args.get_or("sampling", "greedy"),
+            )
+            .map_err(|e| anyhow!(e))?;
+            let flat = load_flat(&manifest, &artifact, &args)?;
+            let vocab = manifest.get(&format!("{artifact}.stream_batch"))?.config.vocab;
+            let server = std::sync::Arc::new(coordinator::Server::start(
+                &manifest,
+                &artifact,
+                flat,
+                ServerOpts { backend, max_sessions: sessions.max(16), ..Default::default() },
+            )?);
+            let t0 = std::time::Instant::now();
+            let mut clients = Vec::new();
+            for s in 0..sessions {
+                let server = std::sync::Arc::clone(&server);
+                clients.push(std::thread::spawn(move || -> Result<(usize, f64, f64)> {
+                    let handle = server.open_session();
+                    let mut corpus = stlt::data::corpus::Corpus::new(
+                        stlt::data::corpus::CorpusConfig::default_for_vocab(vocab),
+                        1000 + s as u64,
+                    );
+                    let prompt = corpus.take(prompt_len);
+                    let fr = handle.feed(prompt.clone(), true)?;
+                    let tg0 = std::time::Instant::now();
+                    let mut stream = handle.generate(stlt::coordinator::GenOpts {
+                        seed_token: *prompt.last().unwrap(),
+                        max_tokens: gen_len,
+                        sampling,
+                        rng_seed: s as u64,
+                        ..Default::default()
+                    })?;
+                    let (mut n, mut ttft) = (0usize, 0.0f64);
+                    while let Some(tok) = stream.recv() {
+                        tok?;
+                        n += 1;
+                        if n == 1 {
+                            ttft = tg0.elapsed().as_secs_f64();
+                        }
+                    }
+                    let ppl = stlt::metrics::perplexity(fr.nll_sum, fr.count);
+                    Ok((n, ttft, ppl))
+                }));
+            }
+            let mut total_tokens = 0usize;
+            for (s, c) in clients.into_iter().enumerate() {
+                let (n, ttft, ppl) = c.join().map_err(|_| anyhow!("client thread panicked"))??;
+                total_tokens += n;
+                println!(
+                    "session {s}: {n} tokens, first token {:.1}ms, prompt ppl {ppl:.2}",
+                    ttft * 1e3
+                );
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            println!(
+                "served {sessions} concurrent sessions (prompt {prompt_len}, gen {gen_len}) \
+                 in {dt:.2}s on {}: {:.0} generated tok/s aggregate",
+                backend.name(),
+                total_tokens as f64 / dt
+            );
+            println!("ttft: {}", server.stats.ttft_latency.lock().unwrap().summary());
+            println!("feed latency: {}", server.stats.feed_latency.lock().unwrap().summary());
+            {
+                let fill = *server.stats.batch_fill.lock().unwrap();
+                println!(
+                    "waves: {} (mean fill {:.2}, max {}), evictions {}, cancelled {}",
+                    fill.waves,
+                    fill.mean(),
+                    fill.max_fill,
+                    server.stats.evictions.load(std::sync::atomic::Ordering::Relaxed),
+                    server.stats.cancelled.load(std::sync::atomic::Ordering::Relaxed),
+                );
+            }
+            std::sync::Arc::try_unwrap(server)
+                .map_err(|_| anyhow!("server still shared"))?
+                .shutdown();
             Ok(())
         }
         Some("inspect") => {

@@ -311,6 +311,162 @@ pub fn default_artifacts_dir() -> PathBuf {
 }
 
 impl Entry {
+    /// Synthesize a metadata-only entry. The native backend executes
+    /// from metadata alone (the HLO `file` is never read), so tests and
+    /// benches build in-memory manifests with this instead of running
+    /// `make artifacts` — one constructor keeps their entry schemas in
+    /// sync with the real parser above.
+    pub fn synthetic(
+        name: &str,
+        kind: &str,
+        config: ModelConfig,
+        param_count: usize,
+        inputs: Vec<TensorSpec>,
+        outputs: Vec<TensorSpec>,
+        extra: &[(&str, i64)],
+    ) -> Entry {
+        let n_inputs = inputs.len();
+        Entry {
+            name: name.to_string(),
+            file: PathBuf::from(format!("{name}.native-synthetic")),
+            kind: kind.to_string(),
+            param_count,
+            inputs,
+            outputs,
+            config,
+            extra: extra.iter().map(|(k, v)| ((*k).to_string(), *v)).collect(),
+            init_file: None,
+            kept_inputs: (0..n_inputs).collect(),
+        }
+    }
+
+    /// [`Entry::synthetic`] for the `stream_step` kind, shapes derived
+    /// from the config — the single source of truth for the serving
+    /// entry schemas that tests and benches build in memory.
+    pub fn synthetic_stream(cfg: &ModelConfig, p: usize, name: &str, chunk: usize) -> Entry {
+        let (ly, s, d) = (cfg.n_layers, cfg.s_max, cfg.d_model);
+        let f = |sh: &[usize]| TensorSpec { dtype: DType::F32, shape: sh.to_vec() };
+        let i = |sh: &[usize]| TensorSpec { dtype: DType::I32, shape: sh.to_vec() };
+        Entry::synthetic(
+            name,
+            "stream_step",
+            cfg.clone(),
+            p,
+            vec![
+                f(&[p]),
+                f(&[ly, s, 2]),
+                f(&[ly, s, d, 2]),
+                i(&[chunk]),
+                i(&[chunk]),
+                f(&[chunk]),
+            ],
+            vec![f(&[ly, s, 2]), f(&[ly, s, d, 2]), f(&[]), f(&[])],
+            &[("chunk", chunk as i64)],
+        )
+    }
+
+    /// [`Entry::synthetic`] for the `decode_step` kind.
+    pub fn synthetic_decode(cfg: &ModelConfig, p: usize, name: &str) -> Entry {
+        let (ly, s, d) = (cfg.n_layers, cfg.s_max, cfg.d_model);
+        let f = |sh: &[usize]| TensorSpec { dtype: DType::F32, shape: sh.to_vec() };
+        let i = |sh: &[usize]| TensorSpec { dtype: DType::I32, shape: sh.to_vec() };
+        Entry::synthetic(
+            name,
+            "decode_step",
+            cfg.clone(),
+            p,
+            vec![f(&[p]), f(&[ly, s, 2]), f(&[ly, s, d, 2]), i(&[1])],
+            vec![f(&[ly, s, 2]), f(&[ly, s, d, 2]), f(&[cfg.vocab])],
+            &[],
+        )
+    }
+
+    /// [`Entry::synthetic`] for the `stream_batch_step` kind (the
+    /// server's feed-wave artifact, batch width `bsrv`).
+    pub fn synthetic_stream_batch(
+        cfg: &ModelConfig,
+        p: usize,
+        name: &str,
+        chunk: usize,
+        bsrv: usize,
+    ) -> Entry {
+        let (ly, s, d) = (cfg.n_layers, cfg.s_max, cfg.d_model);
+        let f = |sh: &[usize]| TensorSpec { dtype: DType::F32, shape: sh.to_vec() };
+        let i = |sh: &[usize]| TensorSpec { dtype: DType::I32, shape: sh.to_vec() };
+        Entry::synthetic(
+            name,
+            "stream_batch_step",
+            cfg.clone(),
+            p,
+            vec![
+                f(&[p]),
+                f(&[bsrv, ly, s, 2]),
+                f(&[bsrv, ly, s, d, 2]),
+                i(&[bsrv, chunk]),
+                i(&[bsrv, chunk]),
+                f(&[bsrv, chunk]),
+                f(&[bsrv]),
+            ],
+            vec![
+                f(&[bsrv, ly, s, 2]),
+                f(&[bsrv, ly, s, d, 2]),
+                f(&[bsrv]),
+                f(&[bsrv]),
+            ],
+            &[("chunk", chunk as i64), ("batch_srv", bsrv as i64)],
+        )
+    }
+
+    /// Derive the batched single-token decode entry from this
+    /// `decode_step` entry: the `decode_batch` kind the continuous-
+    /// batching server executes. A batch dimension `b` is prepended to
+    /// the carries/token/logits and an `active` row mask [b] is added,
+    /// mirroring how `stream_batch_step` extends `stream_step`:
+    ///
+    ///   (flat, l [b,…], u [b,…], tokens [b], active [b])
+    ///     -> (l' [b,…], u' [b,…], logits [b, V])
+    ///
+    /// Rows with `active <= 0.5` are padding: their carries pass
+    /// through untouched and their logits are zero. Derived here (not
+    /// read from the manifest) so every existing manifest with a
+    /// `decode_step` entry serves batched decode without regeneration;
+    /// backends that cannot execute the kind (no AOT program exists for
+    /// it) report so via `Backend::supports_kind` and the server falls
+    /// back to per-row decode.
+    pub fn to_decode_batch(&self, b: usize) -> Result<Entry> {
+        if self.kind != "decode_step" {
+            bail!("{}: kind '{}' cannot derive decode_batch", self.name, self.kind);
+        }
+        if b == 0 {
+            bail!("{}: decode_batch batch size must be >= 1", self.name);
+        }
+        if self.inputs.len() < 4 || self.outputs.len() < 3 {
+            bail!("{}: malformed decode_step specs", self.name);
+        }
+        let batched = |spec: &TensorSpec| TensorSpec {
+            dtype: spec.dtype,
+            shape: std::iter::once(b).chain(spec.shape.iter().copied()).collect(),
+        };
+        let mut e = self.clone();
+        e.name = format!("{}.batch{b}", self.name);
+        e.kind = "decode_batch".to_string();
+        e.inputs = vec![
+            self.inputs[0].clone(),        // flat [p]
+            batched(&self.inputs[1]),      // l [b, layers, S, 2]
+            batched(&self.inputs[2]),      // u [b, layers, S, d, 2]
+            TensorSpec { dtype: DType::I32, shape: vec![b] },
+            TensorSpec { dtype: DType::F32, shape: vec![b] },
+        ];
+        e.outputs = vec![
+            batched(&self.outputs[0]),
+            batched(&self.outputs[1]),
+            batched(&self.outputs[2]), // logits [b, V]
+        ];
+        e.extra.insert("batch_srv".to_string(), b as i64);
+        e.kept_inputs = (0..e.inputs.len()).collect();
+        Ok(e)
+    }
+
     /// Validate a set of host tensors against this entry's input specs.
     pub fn check_inputs(&self, tensors: &[crate::runtime::tensor::Tensor]) -> Result<()> {
         if tensors.len() != self.inputs.len() {
@@ -395,6 +551,45 @@ mod tests {
         let bad = vec![Tensor::f32(vec![0.0; 10], &[10]), Tensor::f32(vec![0.0; 6], &[2, 3])];
         assert!(e.check_inputs(&bad).is_err());
         assert!(e.check_inputs(&good[..1].to_vec()).is_err());
+    }
+
+    #[test]
+    fn decode_batch_derivation() {
+        let mut e = Entry {
+            name: "m.decode".into(),
+            file: PathBuf::from("m.decode.hlo.txt"),
+            kind: "decode_step".into(),
+            param_count: 10,
+            inputs: vec![
+                TensorSpec { dtype: DType::F32, shape: vec![10] },
+                TensorSpec { dtype: DType::F32, shape: vec![2, 4, 2] },
+                TensorSpec { dtype: DType::F32, shape: vec![2, 4, 8, 2] },
+                TensorSpec { dtype: DType::I32, shape: vec![1] },
+            ],
+            outputs: vec![
+                TensorSpec { dtype: DType::F32, shape: vec![2, 4, 2] },
+                TensorSpec { dtype: DType::F32, shape: vec![2, 4, 8, 2] },
+                TensorSpec { dtype: DType::F32, shape: vec![19] },
+            ],
+            config: ModelConfig::default(),
+            extra: BTreeMap::new(),
+            init_file: None,
+            kept_inputs: vec![0, 1, 2, 3],
+        };
+        let b = e.to_decode_batch(4).unwrap();
+        assert_eq!(b.kind, "decode_batch");
+        assert_eq!(b.name, "m.decode.batch4");
+        assert_eq!(b.inputs[1].shape, vec![4, 2, 4, 2]);
+        assert_eq!(b.inputs[2].shape, vec![4, 2, 4, 8, 2]);
+        assert_eq!(b.inputs[3].shape, vec![4]);
+        assert_eq!(b.inputs[4].shape, vec![4]); // active mask
+        assert_eq!(b.inputs[4].dtype, DType::F32);
+        assert_eq!(b.outputs[2].shape, vec![4, 19]);
+        assert_eq!(b.extra["batch_srv"], 4);
+        assert!(b.to_decode_batch(2).is_err(), "only decode_step derives");
+        assert!(e.to_decode_batch(0).is_err());
+        e.kind = "stream_step".into();
+        assert!(e.to_decode_batch(4).is_err());
     }
 
     #[test]

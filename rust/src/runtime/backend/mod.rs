@@ -100,6 +100,20 @@ pub trait Backend {
 
     /// Upload a long-lived f32 tensor once; reused across executions.
     fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<Box<dyn DeviceBuffer>>;
+
+    /// Whether this backend can execute entries of the given kind.
+    /// Optional-capability probe for *derived* kinds (`decode_batch`,
+    /// synthesized from a `decode_step` entry rather than read from the
+    /// manifest): the XLA backend has no AOT program for a derived
+    /// entry — its `load` would happily compile the underlying
+    /// single-token HLO and then execute it with batched shapes — so
+    /// callers must ask before loading and fall back (the server drops
+    /// to per-row decode). Defaults to true: manifest-listed kinds
+    /// already fail cleanly inside `load`.
+    fn supports_kind(&self, kind: &str) -> bool {
+        let _ = kind;
+        true
+    }
 }
 
 #[cfg(test)]

@@ -61,8 +61,15 @@ impl Default for NativeBackend {
     }
 }
 
-const SUPPORTED: &[&str] =
-    &["eval_step", "forward", "stream_step", "stream_batch_step", "decode_step", "train_step"];
+const SUPPORTED: &[&str] = &[
+    "eval_step",
+    "forward",
+    "stream_step",
+    "stream_batch_step",
+    "decode_step",
+    "decode_batch",
+    "train_step",
+];
 
 impl Backend for NativeBackend {
     fn platform(&self) -> String {
@@ -91,6 +98,10 @@ impl Backend for NativeBackend {
             bail!("upload_f32: {} elements vs dims {:?}", data.len(), dims);
         }
         Ok(Box::new(NativeBuffer { data: Arc::new(data.to_vec()) }))
+    }
+
+    fn supports_kind(&self, kind: &str) -> bool {
+        SUPPORTED.contains(&kind)
     }
 }
 
@@ -131,6 +142,7 @@ impl NativeExec {
             "stream_step" => self.stream_step(model, rest),
             "stream_batch_step" => self.stream_batch_step(model, rest),
             "decode_step" => self.decode_step(model, rest),
+            "decode_batch" => self.decode_batch(model, rest),
             "train_step" => self.train_step(model, rest),
             other => bail!("{}: unsupported kind '{other}'", self.entry.name),
         }
@@ -298,6 +310,77 @@ impl NativeExec {
             Tensor::f32(u_out, rest[1].shape()),
             Tensor::f32(nll_out, &[b]),
             Tensor::f32(cnt_out, &[b]),
+        ])
+    }
+
+    /// (l [B,…], u [B,…], tokens [B], active [B]) -> (l', u',
+    /// logits [B, V]): the continuous-batching serving step
+    /// ([`crate::runtime::artifact::Entry::to_decode_batch`]). The wave
+    /// splits into one contiguous row chunk per worker, and each chunk
+    /// runs the engine's batched single-token forward
+    /// ([`StltModel::decode_step_batch`]) over its rows — thread
+    /// parallelism across chunks, panel reuse across the rows inside
+    /// one. Per-row results are bitwise independent of the chunking
+    /// (rows never interact), so every row equals a single-session
+    /// `decode_step` on the same carry. Rows with `active <= 0.5` keep
+    /// their carry and return zero logits.
+    fn decode_batch(&self, model: StltModel, rest: &[Tensor]) -> Result<Vec<Tensor>> {
+        if rest.len() != 4 {
+            bail!(
+                "{}: decode_batch expects 4 inputs after the parameter vector \
+                 — (l, u, tokens, active); got {}",
+                self.entry.name,
+                rest.len()
+            );
+        }
+        let b = rest[2].shape().first().copied().unwrap_or(0);
+        if b == 0 {
+            bail!("{}: decode_batch with an empty batch", self.entry.name);
+        }
+        let l_all = Arc::new(rest[0].as_f32()?.to_vec());
+        let u_all = Arc::new(rest[1].as_f32()?.to_vec());
+        let tokens = Arc::new(rest[2].as_i32()?.to_vec());
+        let active = Arc::new(rest[3].as_f32()?.to_vec());
+        let l_stride = l_all.len() / b;
+        let u_stride = u_all.len() / b;
+        let vocab = model.cfg.vocab;
+        let per = b.div_ceil(threadpool::configured_threads().min(b));
+        let nch = b.div_ceil(per);
+        let run_chunk = move |c: usize| {
+            let (r0, r1) = (c * per, ((c + 1) * per).min(b));
+            let mut l = l_all[r0 * l_stride..r1 * l_stride].to_vec();
+            let mut u = u_all[r0 * u_stride..r1 * u_stride].to_vec();
+            let logits = model.decode_step_batch(
+                r1 - r0,
+                &mut l,
+                &mut u,
+                &tokens[r0..r1],
+                &active[r0..r1],
+            )?;
+            Ok::<_, anyhow::Error>((l, u, logits))
+        };
+        // idle-aware fallback (the serving-latency satellite): when
+        // every shared worker is already busy (a training batch in the
+        // same process), a one-token decode wave must not queue behind
+        // them — run its chunks inline on the model thread instead
+        let chunks: Vec<_> = if self.pool.saturated() {
+            (0..nch).map(&run_chunk).collect()
+        } else {
+            parallel_map(&self.pool, nch, run_chunk)
+        };
+        let mut l_out = Vec::with_capacity(b * l_stride);
+        let mut u_out = Vec::with_capacity(b * u_stride);
+        let mut logits_out = Vec::with_capacity(b * vocab);
+        for ch in chunks {
+            let (l, u, lg) = ch?;
+            l_out.extend(l);
+            u_out.extend(u);
+            logits_out.extend(lg);
+        }
+        Ok(vec![
+            Tensor::f32(l_out, rest[0].shape()),
+            Tensor::f32(u_out, rest[1].shape()),
+            Tensor::f32(logits_out, &[b, vocab]),
         ])
     }
 

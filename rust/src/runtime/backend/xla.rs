@@ -79,6 +79,15 @@ impl Backend for XlaBackend {
         let buf = self.client.buffer_from_host_buffer(data, dims, None)?;
         Ok(Box::new(XlaBuffer { buf, len: data.len() }))
     }
+
+    fn supports_kind(&self, kind: &str) -> bool {
+        // `decode_batch` entries are derived (Entry::to_decode_batch),
+        // not AOT-lowered: the entry's `file` still points at the
+        // single-token decode HLO, which would compile fine and then
+        // execute with the wrong shapes. Refuse up front so the server
+        // falls back to per-row decode on this backend.
+        kind != "decode_batch"
+    }
 }
 
 pub struct XlaExec {

@@ -70,6 +70,14 @@ impl Runtime {
         self.backend.platform()
     }
 
+    /// Whether the backend can execute entries of `kind`. Used for
+    /// *derived* kinds (`decode_batch`) that never appear in the
+    /// manifest: the server probes before loading and falls back to the
+    /// per-row path on backends without a batched program.
+    pub fn supports_kind(&self, kind: &str) -> bool {
+        self.backend.supports_kind(kind)
+    }
+
     /// Load (compile for XLA, resolve for native) a manifest entry,
     /// or fetch it from the per-process cache.
     pub fn load(&self, entry: &Entry) -> Result<Arc<dyn Executable>> {

@@ -477,9 +477,14 @@ pub struct DecodeStep<'a> {
 
 impl<'a> DecodeStep<'a> {
     pub fn new(rt: &'a Runtime, manifest: &'a Manifest, name: &str) -> Result<DecodeStep<'a>> {
-        let entry = manifest.get(name)?;
+        DecodeStep::from_entry(rt, manifest.get(name)?)
+    }
+
+    /// Construct directly over an entry the caller already owns (the
+    /// serving model thread holds its decode entry outside a manifest).
+    pub fn from_entry(rt: &'a Runtime, entry: &'a Entry) -> Result<DecodeStep<'a>> {
         if entry.kind != "decode_step" {
-            bail!("{name} is kind '{}', expected decode_step", entry.kind);
+            bail!("{} is kind '{}', expected decode_step", entry.name, entry.kind);
         }
         let vocab = entry.outputs[2].shape[0];
         Ok(DecodeStep { rt, entry, vocab })
@@ -533,6 +538,123 @@ impl<'a> DecodeStep<'a> {
                 Err(e)
             }
         }
+    }
+}
+
+/// `decode_batch` artifact: the continuous-batching serving step.
+/// (flat, l [b,…], u [b,…], tokens [b], active [b]) ->
+/// (l', u', logits [b, V]).
+///
+/// Unlike the other typed entry points this owns its [`Entry`]: the
+/// entry is *derived* from a `decode_step` entry
+/// ([`Entry::to_decode_batch`]) rather than read from the manifest, so
+/// there is no manifest-owned entry to borrow, and the server (which
+/// owns its `Runtime` inside the model thread) passes the runtime per
+/// call instead of holding a self-referential borrow.
+pub struct BatchedDecodeStep {
+    entry: Entry,
+    pub batch: usize,
+    pub vocab: usize,
+}
+
+impl BatchedDecodeStep {
+    /// Derive from a `decode_step` entry with serving batch width `b`.
+    pub fn from_decode(decode_entry: &Entry, b: usize) -> Result<BatchedDecodeStep> {
+        let entry = decode_entry.to_decode_batch(b)?;
+        let vocab = entry.outputs[2].shape[1];
+        Ok(BatchedDecodeStep { entry, batch: b, vocab })
+    }
+
+    pub fn entry(&self) -> &Entry {
+        &self.entry
+    }
+
+    fn l_stride(&self) -> usize {
+        self.entry.inputs[1].shape[1..].iter().product()
+    }
+
+    fn u_stride(&self) -> usize {
+        self.entry.inputs[2].shape[1..].iter().product()
+    }
+
+    /// Advance up to `batch` sessions one token each. `rows[i]` is that
+    /// session's carry (updated in place on success) and `tokens[i]`
+    /// its input token; missing rows up to `batch` are padded with
+    /// inactive zero-carry rows, which the kind guarantees contribute
+    /// nothing and cost (near) nothing. Returns one logits vector [V]
+    /// per provided row, bitwise identical to a single-session
+    /// `decode_step` on the same carry (the padding/masking parity
+    /// seam, pinned in tests/native_serving.rs).
+    ///
+    /// The carries are gathered by copy, so on any failure — backend
+    /// error or output mismatch — every session carry is left exactly
+    /// as it was (same retryability contract as [`DecodeStep::run`]).
+    pub fn run_h(
+        &self,
+        rt: &Runtime,
+        params: &ParamBuf,
+        rows: &mut [&mut StreamCarry],
+        tokens: &[i32],
+    ) -> Result<Vec<Vec<f32>>> {
+        let n = rows.len();
+        if n == 0 || n > self.batch {
+            bail!("decode_batch wave of {n} rows (batch width {})", self.batch);
+        }
+        if tokens.len() != n {
+            bail!("decode_batch: {n} rows but {} tokens", tokens.len());
+        }
+        let (ls, us) = (self.l_stride(), self.u_stride());
+        let b = self.batch;
+        let mut l_all = vec![0.0f32; b * ls];
+        let mut u_all = vec![0.0f32; b * us];
+        let mut toks = vec![0i32; b];
+        let mut active = vec![0.0f32; b];
+        for (i, cr) in rows.iter().enumerate() {
+            if cr.l.len() != ls || cr.u.len() != us {
+                bail!(
+                    "decode_batch row {i}: carry ({}, {}) != entry strides ({ls}, {us})",
+                    cr.l.len(),
+                    cr.u.len()
+                );
+            }
+            l_all[i * ls..(i + 1) * ls].copy_from_slice(&cr.l);
+            u_all[i * us..(i + 1) * us].copy_from_slice(&cr.u);
+            toks[i] = tokens[i];
+            active[i] = 1.0;
+        }
+        let e = &self.entry;
+        let mut out = rt.run_with_param_buffer(
+            e,
+            params.buffer(),
+            &[
+                Tensor::f32(l_all, &e.inputs[1].shape.clone()),
+                Tensor::f32(u_all, &e.inputs[2].shape.clone()),
+                Tensor::i32(toks, &[b]),
+                Tensor::f32(active, &[b]),
+            ],
+        )?;
+        let logits_all = pop_out(&mut out, "logits")?.into_f32()?;
+        let u_new = pop_out(&mut out, "u")?.into_f32()?;
+        let l_new = pop_out(&mut out, "l")?.into_f32()?;
+        if logits_all.len() != b * self.vocab || u_new.len() != b * us || l_new.len() != b * ls {
+            bail!(
+                "decode_batch: output sizes (l {}, u {}, logits {}) do not match \
+                 the entry (b={b}, strides {ls}/{us}, vocab {})",
+                l_new.len(),
+                u_new.len(),
+                logits_all.len(),
+                self.vocab
+            );
+        }
+        for (i, cr) in rows.iter_mut().enumerate() {
+            cr.l.clear();
+            cr.l.extend_from_slice(&l_new[i * ls..(i + 1) * ls]);
+            cr.u.clear();
+            cr.u.extend_from_slice(&u_new[i * us..(i + 1) * us]);
+        }
+        Ok((0..n)
+            .map(|i| logits_all[i * self.vocab..(i + 1) * self.vocab].to_vec())
+            .collect())
     }
 }
 

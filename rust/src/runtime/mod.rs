@@ -21,8 +21,8 @@ pub use artifact::{default_artifacts_dir, Manifest};
 pub use backend::{Backend, BackendKind, DeviceBuffer, Executable};
 pub use client::Runtime;
 pub use exec::{
-    DecodeStep, EvalStep, Forward, S2sDecode, S2sTrainStep, StepMetrics, StreamCarry,
-    StreamStep, TrainState, TrainStep,
+    BatchedDecodeStep, DecodeStep, EvalStep, Forward, S2sDecode, S2sTrainStep, StepMetrics,
+    StreamCarry, StreamStep, TrainState, TrainStep,
 };
 #[cfg(feature = "native")]
 pub use native_stlt::StltModel;

@@ -748,6 +748,148 @@ impl StltModel {
         Ok((logits, s_eff_sum / self.cfg.n_layers as f32))
     }
 
+    /// Batched single-token decode: advance `bsz` independent sessions
+    /// by one token each, in one pass over the packed weight panels.
+    /// This is the serving hot path behind the `decode_batch` artifact
+    /// kind: session *rows* take the place of token rows in every GEMM
+    /// (`h [bsz, d] @ panel`), so each weight panel is streamed once
+    /// per wave instead of once per session, while the (L, U)
+    /// recurrence advances each row's own carry slice exactly one step.
+    ///
+    /// Per-row outputs are bitwise identical to running
+    /// [`StltModel::trunk_chunk`] on that row's carry with its single
+    /// token: every `gemm_at` output element is `dot(a_row, bt_row)`
+    /// independent of the row count (the linalg parity guarantee),
+    /// LayerNorm and the recurrence are strictly per-row, and the
+    /// adaptive gate pools over each row alone — exactly the n = 1
+    /// pooling of a single-token chunk. Pinned by unit test and by the
+    /// server's padding/masking parity test.
+    ///
+    /// `l_all` is `[bsz, n_layers*S*2]`, `u_all` `[bsz, n_layers*S*d*2]`
+    /// (row-major). Rows with `active[r] <= 0.5` are padding: their
+    /// carries are untouched and their logits row is zero. Returns
+    /// logits `[bsz * vocab]`.
+    pub fn decode_step_batch(
+        &self,
+        bsz: usize,
+        l_all: &mut [f32],
+        u_all: &mut [f32],
+        tokens: &[i32],
+        active: &[f32],
+    ) -> Result<Vec<f32>> {
+        if self.mixer != MixerImpl::Recurrence {
+            bail!(
+                "decode_step_batch runs MixerImpl::Recurrence only (the ReferenceN2 \
+                 oracle is valid from a zero carry on full sequences — see trunk_chunk)"
+            );
+        }
+        let (s, d, vcb) = (self.cfg.s_max, self.cfg.d_model, self.cfg.vocab);
+        let (l_stride, u_stride) = (self.cfg.n_layers * s * 2, self.cfg.n_layers * s * d * 2);
+        if l_all.len() != bsz * l_stride
+            || u_all.len() != bsz * u_stride
+            || tokens.len() != bsz
+            || active.len() != bsz
+        {
+            bail!(
+                "decode_step_batch shape mismatch: bsz={bsz} l={} u={} tokens={} active={}",
+                l_all.len(),
+                u_all.len(),
+                tokens.len(),
+                active.len()
+            );
+        }
+        let f = &self.flat[..];
+        let mut logits_out = vec![0.0f32; bsz * vcb];
+        // compact the active rows so padding costs nothing and the GEMM
+        // row dimension is dense; idx maps compact row -> original row
+        let idx: Vec<usize> = (0..bsz).filter(|&r| active[r] > 0.5).collect();
+        let na = idx.len();
+        if na == 0 {
+            return Ok(logits_out);
+        }
+        // validate every token before touching any carry, so a bad row
+        // cannot leave sibling rows half-advanced
+        for &r in &idx {
+            let tok = tokens[r];
+            if tok < 0 || tok as usize >= vcb {
+                bail!("token {tok} out of vocab {vcb}");
+            }
+        }
+        let scale = (d as f32).sqrt();
+        let mut x = vec![0.0f32; na * d];
+        for (c, &r) in idx.iter().enumerate() {
+            let tok = tokens[r] as usize;
+            let er = &f[self.embed + tok * d..self.embed + (tok + 1) * d];
+            for (i, &e) in er.iter().enumerate() {
+                x[c * d + i] = e * scale;
+            }
+        }
+        let mut h = vec![0.0f32; na * d];
+        let inv_s = 1.0 / s as f32;
+        for (li, (lo, lp)) in self.layers.iter().zip(&self.panels.layers).enumerate() {
+            self.layer_norm(&x, lo.ln1_g, lo.ln1_b, &mut h);
+            // projections batched over session rows
+            let mut fproj = vec![0.0f32; na * s];
+            linalg::gemm_at(&h, &lp.w_f_t, &mut fproj, na, d, s);
+            if self.cfg.adaptive {
+                // per-row gate: a single-token chunk pools over just its
+                // own (one-row) h, so the pooled vector IS the h row
+                for (c, frow) in fproj.chunks_exact_mut(s).enumerate() {
+                    let (m, _) = self.gate_full(lo, lp, &h[c * d..(c + 1) * d], 1);
+                    for (fk, &mk) in frow.iter_mut().zip(&m) {
+                        *fk *= mk;
+                    }
+                }
+            }
+            let mut v = vec![0.0f32; na * d];
+            linalg::gemm_at(&h, &lp.w_v_t, &mut v, na, d, d);
+            // per-row one-step recurrence on each row's own carry slice
+            let np = self.node_params(lo);
+            let mut zmix = vec![0.0f32; na * d];
+            for (c, &r) in idx.iter().enumerate() {
+                let l_off = r * l_stride + li * s * 2;
+                let u_off = r * u_stride + li * s * d * 2;
+                let lsl = &mut l_all[l_off..l_off + s * 2];
+                let usl = &mut u_all[u_off..u_off + s * d * 2];
+                let fr = &fproj[c * s..(c + 1) * s];
+                let vr = &v[c * d..(c + 1) * d];
+                let zr = &mut zmix[c * d..(c + 1) * d];
+                for k in 0..s {
+                    lu_node_step(
+                        np.lam_re[k],
+                        np.lam_im[k],
+                        np.gamma,
+                        fr[k],
+                        &mut lsl[k * 2..(k + 1) * 2],
+                        &mut usl[k * d * 2..(k + 1) * d * 2],
+                        vr,
+                        Some(&mut zr[..]),
+                    );
+                }
+                for ze in zr.iter_mut() {
+                    *ze *= inv_s;
+                }
+            }
+            let mut z = vec![0.0f32; na * d];
+            linalg::gemm_at(&zmix, &lp.w_o_t, &mut z, na, d, d);
+            for (xe, ze) in x.iter_mut().zip(&z) {
+                *xe += ze;
+            }
+            self.layer_norm(&x, lo.ln2_g, lo.ln2_b, &mut h);
+            let (_, _, f_out) = self.ffn_parts(lo, lp, &h, na, false);
+            for (xe, fe) in x.iter_mut().zip(&f_out) {
+                *xe += fe;
+            }
+        }
+        let mut xf = vec![0.0f32; na * d];
+        self.layer_norm(&x, self.lnf_g, self.lnf_b, &mut xf);
+        let logits = self.head_logits(&xf, na);
+        for (c, &r) in idx.iter().enumerate() {
+            logits_out[r * vcb..(r + 1) * vcb].copy_from_slice(&logits[c * vcb..(c + 1) * vcb]);
+        }
+        Ok(logits_out)
+    }
+
     /// Full-sequence forward from a zero carry: logits [n*vocab].
     pub fn forward_logits(&self, tokens: &[i32]) -> Result<Vec<f32>> {
         let (mut l, mut u) = self.zero_carry();
@@ -947,6 +1089,84 @@ mod tests {
                 assert_eq!(lp.w_f_t[k * d + i], m1.flat[lo.w_f + i * s + k]);
             }
         }
+    }
+
+    #[test]
+    fn decode_step_batch_bitwise_matches_single_rows() {
+        // the serving parity seam: each row of the batched single-token
+        // forward must be BITWISE the single-session trunk_chunk on the
+        // same carry, with inactive rows untouched — adaptive and not.
+        for adaptive in [false, true] {
+            let mut cfg = tiny_cfg();
+            cfg.adaptive = adaptive;
+            let m = model(&cfg, 17);
+            let bsz = 5usize;
+            let (l0, u0) = m.zero_carry();
+            let (ls, us) = (l0.len(), u0.len());
+            // give every row a distinct warmed-up carry
+            let mut l_all = vec![0.0f32; bsz * ls];
+            let mut u_all = vec![0.0f32; bsz * us];
+            for r in 0..bsz {
+                let (mut l, mut u) = m.zero_carry();
+                let warm: Vec<i32> =
+                    (0..3 + r).map(|i| ((i * 7 + r) % cfg.vocab) as i32).collect();
+                m.trunk_chunk(&mut l, &mut u, &warm, 0.0, None).unwrap();
+                l_all[r * ls..(r + 1) * ls].copy_from_slice(&l);
+                u_all[r * us..(r + 1) * us].copy_from_slice(&u);
+            }
+            let tokens: Vec<i32> = (0..bsz).map(|r| ((r * 3 + 1) % cfg.vocab) as i32).collect();
+            // row 2 inactive (ragged wave padding)
+            let active: Vec<f32> = (0..bsz).map(|r| if r == 2 { 0.0 } else { 1.0 }).collect();
+            let (l_ref_all, u_ref_all) = (l_all.clone(), u_all.clone());
+            let logits =
+                m.decode_step_batch(bsz, &mut l_all, &mut u_all, &tokens, &active).unwrap();
+            for r in 0..bsz {
+                let mut l = l_ref_all[r * ls..(r + 1) * ls].to_vec();
+                let mut u = u_ref_all[r * us..(r + 1) * us].to_vec();
+                if r == 2 {
+                    assert_eq!(&l_all[r * ls..(r + 1) * ls], &l[..], "inactive carry touched");
+                    assert_eq!(&u_all[r * us..(r + 1) * us], &u[..], "inactive carry touched");
+                    assert!(
+                        logits[r * cfg.vocab..(r + 1) * cfg.vocab].iter().all(|&x| x == 0.0),
+                        "inactive logits must be zero"
+                    );
+                    continue;
+                }
+                let (want, _) =
+                    m.trunk_chunk(&mut l, &mut u, &tokens[r..r + 1], 0.0, None).unwrap();
+                assert_eq!(
+                    &logits[r * cfg.vocab..(r + 1) * cfg.vocab],
+                    &want[..],
+                    "row {r} logits diverge (adaptive={adaptive})"
+                );
+                assert_eq!(&l_all[r * ls..(r + 1) * ls], &l[..], "row {r} L carry");
+                assert_eq!(&u_all[r * us..(r + 1) * us], &u[..], "row {r} U carry");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_step_batch_rejects_bad_tokens_without_mutation() {
+        let cfg = tiny_cfg();
+        let m = model(&cfg, 8);
+        let (l0, u0) = m.zero_carry();
+        let (ls, us) = (l0.len(), u0.len());
+        let mut l_all = vec![0.5f32; 2 * ls];
+        let mut u_all = vec![0.25f32; 2 * us];
+        let (l_ref, u_ref) = (l_all.clone(), u_all.clone());
+        let err = m
+            .decode_step_batch(2, &mut l_all, &mut u_all, &[1, cfg.vocab as i32], &[1.0, 1.0])
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("vocab"), "unhelpful: {err:#}");
+        assert_eq!(l_all, l_ref, "no carry may advance on a rejected wave");
+        assert_eq!(u_all, u_ref);
+        // the ReferenceN2 oracle is zero-carry/full-sequence only; the
+        // batched decode path must refuse it like trunk_chunk does
+        let mut m2 = model(&cfg, 8);
+        m2.mixer = MixerImpl::ReferenceN2;
+        let err =
+            m2.decode_step_batch(2, &mut l_all, &mut u_all, &[1, 2], &[1.0, 1.0]).unwrap_err();
+        assert!(format!("{err:#}").contains("Recurrence"), "unhelpful: {err:#}");
     }
 
     #[test]

@@ -166,6 +166,21 @@ impl ThreadPool {
         self.workers.len()
     }
 
+    /// Jobs currently queued or running. This is the saturation signal
+    /// behind the idle-aware inline fallback: when `pending() >=
+    /// threads()` every worker is already busy, so a latency-critical
+    /// fan-out (a serving decode scatter) would queue FIFO behind
+    /// whatever long batch jobs are in flight instead of running now.
+    pub fn pending(&self) -> usize {
+        self.shared.lock_state().pending
+    }
+
+    /// True when every worker is (or is about to be) occupied — new
+    /// jobs would wait in the FIFO queue rather than start immediately.
+    pub fn saturated(&self) -> bool {
+        self.pending() >= self.threads()
+    }
+
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
         self.execute_boxed(Box::new(f));
     }
@@ -224,6 +239,12 @@ pub fn parallel_map<T: Send + 'static, F>(pool: &ThreadPool, n: usize, f: F) -> 
 where
     F: Fn(usize) -> T + Send + Sync + 'static,
 {
+    // No idle-aware fallback here: parallel_map carries long batch jobs
+    // (training/eval rows), where serializing a whole batch onto the
+    // caller because the pool was *momentarily* saturated by a
+    // one-token decode wave would cost far more than briefly queueing.
+    // Latency-critical callers opt in explicitly ([`scatter_rows`] and
+    // the native decode_batch wave check [`ThreadPool::saturated`]).
     if n <= 1 || in_worker() {
         return (0..n).map(f).collect();
     }
@@ -327,13 +348,20 @@ where
 {
     assert!(out.len() >= n * row_len, "scatter_rows: out too small");
     let threads = configured_threads();
-    if n < min_rows.max(2) || threads < 2 || in_worker() {
+    let pool = global();
+    // `pool.saturated()`: the idle-aware inline fallback. scatter_rows
+    // chunks queue FIFO on the shared pool; when one process both
+    // trains and serves, a decode-path scatter would otherwise park
+    // behind an entire training batch's row jobs (the streaming-latency
+    // cliff in the ROADMAP). If every worker is already busy, running
+    // inline starts immediately and costs at most the single-thread
+    // compute we'd pay anyway after the queue drained.
+    if n < min_rows.max(2) || threads < 2 || in_worker() || pool.saturated() {
         f(0, n, &mut out[..n * row_len]);
         return;
     }
     let nch = threads.min(n);
     let per = n.div_ceil(nch);
-    let pool = global();
     let latch = Latch::new();
     let enqueued = Cell::new(0usize);
     // armed before the first enqueue: ANY unwind out of this frame —
@@ -494,30 +522,49 @@ mod tests {
     fn scatter_rows_runs_on_persistent_workers() {
         // the satellite seam: chunks execute on global() pool workers
         // (in_worker), not on freshly spawned scoped threads — except
-        // the final chunk, which stays on the caller
+        // the final chunk, which stays on the caller. Concurrent tests
+        // can transiently saturate the shared pool (which now triggers
+        // the idle-aware inline fallback), so retry until a fan-out
+        // actually happens.
         if configured_threads() < 2 {
             return; // single-core box: scatter is documented-inline
         }
+        use std::time::{Duration, Instant};
         let n = 64usize;
         let row_len = 2usize;
-        let mut out = vec![0.0f32; n * row_len];
-        let worker_chunks = AtomicUsize::new(0);
-        let caller_chunks = AtomicUsize::new(0);
-        scatter_rows(n, row_len, &mut out, 2, |t0, _t1, chunk| {
-            if in_worker() {
-                worker_chunks.fetch_add(1, Ordering::SeqCst);
-            } else {
-                caller_chunks.fetch_add(1, Ordering::SeqCst);
+        let mut fanned_out = false;
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while Instant::now() < deadline {
+            let mut out = vec![0.0f32; n * row_len];
+            let worker_chunks = AtomicUsize::new(0);
+            let caller_chunks = AtomicUsize::new(0);
+            scatter_rows(n, row_len, &mut out, 2, |t0, _t1, chunk| {
+                if in_worker() {
+                    worker_chunks.fetch_add(1, Ordering::SeqCst);
+                } else {
+                    caller_chunks.fetch_add(1, Ordering::SeqCst);
+                }
+                for (r, row) in chunk.chunks_exact_mut(row_len).enumerate() {
+                    row.fill((t0 + r) as f32);
+                }
+            });
+            for t in 0..n {
+                assert_eq!(out[t * row_len], t as f32);
             }
-            for (r, row) in chunk.chunks_exact_mut(row_len).enumerate() {
-                row.fill((t0 + r) as f32);
+            if worker_chunks.load(Ordering::SeqCst) >= 1 {
+                assert_eq!(
+                    caller_chunks.load(Ordering::SeqCst),
+                    1,
+                    "final chunk runs on the caller"
+                );
+                fanned_out = true;
+                break;
             }
-        });
-        assert!(worker_chunks.load(Ordering::SeqCst) >= 1, "no chunk reached a pool worker");
-        assert_eq!(caller_chunks.load(Ordering::SeqCst), 1, "final chunk runs on the caller");
-        for t in 0..n {
-            assert_eq!(out[t * row_len], t as f32);
+            // the shared pool may be transiently saturated by sibling
+            // tests (forcing the inline fallback); back off and retry
+            thread::sleep(std::time::Duration::from_millis(1));
         }
+        assert!(fanned_out, "no scatter call ever reached a pool worker");
     }
 
     #[test]
@@ -547,6 +594,94 @@ mod tests {
         });
         assert_eq!(out[n - 1], (n - 1) as f32);
         assert!(global().try_join().is_ok(), "scatter panics must not leak into pool joins");
+    }
+
+    #[test]
+    fn pending_tracks_queue_depth() {
+        let pool = ThreadPool::new(2);
+        assert_eq!(pool.pending(), 0);
+        assert!(!pool.saturated());
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        for _ in 0..3 {
+            let g = Arc::clone(&gate);
+            pool.execute(move || {
+                let (m, cv) = &*g;
+                let mut open = m.lock().unwrap();
+                while !*open {
+                    open = cv.wait(open).unwrap();
+                }
+            });
+        }
+        assert_eq!(pool.pending(), 3);
+        assert!(pool.saturated(), "3 blocked jobs on 2 workers is saturated");
+        {
+            let (m, cv) = &*gate;
+            *m.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        pool.join();
+        assert_eq!(pool.pending(), 0);
+    }
+
+    #[test]
+    fn scatter_not_starved_by_saturating_batch_job() {
+        // the fairness satellite seam: with every global worker parked
+        // on a long "training batch" job, a decode-path scatter_rows
+        // must fall back inline instead of queueing behind them. Before
+        // the idle-aware fallback this took >= the blockers' duration.
+        use std::time::{Duration, Instant};
+        let pool = global();
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let held = Arc::new(AtomicUsize::new(0));
+        for _ in 0..pool.threads() {
+            let g = Arc::clone(&gate);
+            let h = Arc::clone(&held);
+            pool.execute(move || {
+                h.fetch_add(1, Ordering::SeqCst);
+                let (m, cv) = &*g;
+                let mut open = m.lock().unwrap();
+                while !*open {
+                    open = cv.wait(open).unwrap();
+                }
+            });
+        }
+        // wait until the blockers actually occupy the workers
+        let t0 = Instant::now();
+        while held.load(Ordering::SeqCst) < pool.threads()
+            && t0.elapsed() < Duration::from_secs(5)
+        {
+            std::thread::yield_now();
+        }
+        assert!(pool.saturated(), "blockers must saturate the pool");
+        let n = 64usize;
+        let mut out = vec![0.0f32; n];
+        let t0 = Instant::now();
+        let ran_on_worker = AtomicUsize::new(0);
+        scatter_rows(n, 1, &mut out, 2, |t0c, _t1, chunk| {
+            if in_worker() {
+                ran_on_worker.fetch_add(1, Ordering::SeqCst);
+            }
+            for (r, v) in chunk.iter_mut().enumerate() {
+                *v = (t0c + r) as f32;
+            }
+        });
+        let elapsed = t0.elapsed();
+        // release the blockers before asserting, so a failure can't
+        // leave the shared pool wedged for other tests
+        {
+            let (m, cv) = &*gate;
+            *m.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        let _ = pool.try_join();
+        assert_eq!(ran_on_worker.load(Ordering::SeqCst), 0, "must run inline when saturated");
+        assert!(
+            elapsed < Duration::from_secs(2),
+            "decode scatter starved behind batch jobs: {elapsed:?}"
+        );
+        for (t, v) in out.iter().enumerate() {
+            assert_eq!(*v, t as f32);
+        }
     }
 
     #[test]

@@ -53,27 +53,13 @@ fn entry(
     outputs: Vec<TensorSpec>,
     extra: &[(&str, i64)],
 ) -> Entry {
-    let n_inputs = inputs.len();
-    Entry {
-        name: name.to_string(),
-        file: PathBuf::from("native-synthetic.hlo.txt"), // never read
-        kind: kind.to_string(),
-        param_count: p,
-        inputs,
-        outputs,
-        config: cfg(),
-        extra: extra.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
-        init_file: None,
-        kept_inputs: (0..n_inputs).collect(),
-    }
+    Entry::synthetic(name, kind, cfg(), p, inputs, outputs, extra)
 }
 
-/// Synthesize the manifest entries the runtime/server need for base "nat".
+/// Synthesize the manifest entries the runtime/server need for base
+/// "nat" (the serving kinds come from the shared per-kind builders).
 fn manifest(p: usize) -> Manifest {
-    let ls = [LAYERS, S, 2];
-    let us = [LAYERS, S, D, 2];
-    let bls = [BSRV, LAYERS, S, 2];
-    let bus = [BSRV, LAYERS, S, D, 2];
+    let c = cfg();
     let mut entries = BTreeMap::new();
     for e in [
         entry(
@@ -84,38 +70,9 @@ fn manifest(p: usize) -> Manifest {
             vec![f32s(&[]), f32s(&[]), f32s(&[])],
             &[],
         ),
-        entry(
-            "nat.stream",
-            "stream_step",
-            p,
-            vec![f32s(&[p]), f32s(&ls), f32s(&us), i32s(&[CHUNK]), i32s(&[CHUNK]), f32s(&[CHUNK])],
-            vec![f32s(&ls), f32s(&us), f32s(&[]), f32s(&[])],
-            &[("chunk", CHUNK as i64)],
-        ),
-        entry(
-            "nat.decode",
-            "decode_step",
-            p,
-            vec![f32s(&[p]), f32s(&ls), f32s(&us), i32s(&[1])],
-            vec![f32s(&ls), f32s(&us), f32s(&[VOCAB])],
-            &[],
-        ),
-        entry(
-            "nat.stream_batch",
-            "stream_batch_step",
-            p,
-            vec![
-                f32s(&[p]),
-                f32s(&bls),
-                f32s(&bus),
-                i32s(&[BSRV, CHUNK]),
-                i32s(&[BSRV, CHUNK]),
-                f32s(&[BSRV, CHUNK]),
-                f32s(&[BSRV]),
-            ],
-            vec![f32s(&bls), f32s(&bus), f32s(&[BSRV]), f32s(&[BSRV])],
-            &[("chunk", CHUNK as i64), ("batch_srv", BSRV as i64)],
-        ),
+        Entry::synthetic_stream(&c, p, "nat.stream", CHUNK),
+        Entry::synthetic_decode(&c, p, "nat.decode"),
+        Entry::synthetic_stream_batch(&c, p, "nat.stream_batch", CHUNK, BSRV),
     ] {
         entries.insert(e.name.clone(), e);
     }

@@ -1,0 +1,409 @@
+//! Continuous-batching serving integration (native backend, zero
+//! external deps): concurrent session handles + token streams against
+//! the sequential reference, cancellation mid-generate, LRU eviction
+//! surfacing, first-token-before-completion, and the batched
+//! `decode_batch` padding/masking bitwise-parity seam.
+
+#![cfg(feature = "native")]
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+use stlt::coordinator::{FinishReason, GenOpts, Sampling, Server, ServerOpts};
+use stlt::runtime::artifact::{Entry, ModelConfig};
+use stlt::runtime::native_stlt::host_init;
+use stlt::runtime::{
+    BackendKind, BatchedDecodeStep, DecodeStep, Manifest, Runtime, StreamStep,
+};
+
+const S: usize = 4;
+const D: usize = 8;
+const LAYERS: usize = 2;
+const VOCAB: usize = 19;
+const CHUNK: usize = 8;
+const BSRV: usize = 4;
+
+fn cfg() -> ModelConfig {
+    ModelConfig {
+        arch: "stlt".into(),
+        vocab: VOCAB,
+        d_model: D,
+        n_layers: LAYERS,
+        n_ctx: 32,
+        s_max: S,
+        batch: 2,
+        mode: "linear".into(),
+        ..ModelConfig::default()
+    }
+}
+
+/// Synthesize the manifest entries the server needs for base "nat"
+/// (shared per-kind builders keep the schemas in one place).
+fn manifest(p: usize) -> Manifest {
+    let c = cfg();
+    let mut entries = BTreeMap::new();
+    for e in [
+        Entry::synthetic_stream(&c, p, "nat.stream", CHUNK),
+        Entry::synthetic_decode(&c, p, "nat.decode"),
+        Entry::synthetic_stream_batch(&c, p, "nat.stream_batch", CHUNK, BSRV),
+    ] {
+        entries.insert(e.name.clone(), e);
+    }
+    Manifest { dir: PathBuf::from("."), entries }
+}
+
+fn doc(len: usize, seed: u64) -> Vec<i32> {
+    let mut rng = stlt::util::rng::Rng::new(seed);
+    (0..len).map(|_| rng.below(VOCAB as u64) as i32).collect()
+}
+
+/// One client's conversation: feed, generate, feed more, generate —
+/// returns everything observable so two runs can be compared bitwise.
+/// Uses the session-id API with an explicit id (the sampling RNG is
+/// seeded with `rng_seed ^ session`, so ids must match across the
+/// sequential and concurrent runs for a bitwise comparison).
+fn converse(server: &Server, seed: u64) -> (f64, f64, Vec<i32>, f64, Vec<i32>) {
+    let session = 1000 + seed;
+    let prompt = doc(41 + (seed % 3) as usize * 7, 100 + seed);
+    let fr1 = server.feed(session, prompt.clone(), true).unwrap();
+    let g1 = server
+        .start_generate(
+            session,
+            GenOpts {
+                seed_token: *prompt.last().unwrap(),
+                max_tokens: 8,
+                sampling: Sampling::Temperature(1.3),
+                rng_seed: 7,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+        .wait()
+        .unwrap();
+    let more = doc(23, 500 + seed);
+    let fr2 = server.feed(session, more.clone(), true).unwrap();
+    let g2 = server
+        .generate(session, *more.last().unwrap(), 6, None)
+        .unwrap();
+    assert_eq!(g1.tokens.len(), 8);
+    assert_eq!(g1.reason, FinishReason::MaxTokens);
+    assert!(!g1.fresh_carry, "fed session must resume its context");
+    (fr1.nll_sum, fr1.count, g1.tokens, fr2.nll_sum, g2.tokens)
+}
+
+#[test]
+fn concurrent_interleaved_serving_bitwise_matches_sequential() {
+    // the tentpole e2e seam: N client threads with interleaved feeds +
+    // generates through the continuous-batching scheduler produce
+    // BITWISE the outputs of the same conversations run one at a time.
+    let c = cfg();
+    let flat = host_init(&c, 42);
+    let m = manifest(flat.len());
+
+    // sequential reference: one conversation at a time
+    let server = Server::start(&m, "nat", flat.clone(), ServerOpts::default()).unwrap();
+    let reference: Vec<_> = (0..6u64).map(|s| converse(&server, s)).collect();
+    server.shutdown();
+
+    // concurrent: 6 client threads (wave width BSRV=4, so rotation and
+    // mid-flight admission are exercised)
+    let server = Arc::new(Server::start(&m, "nat", flat, ServerOpts::default()).unwrap());
+    let mut handles = Vec::new();
+    for s in 0..6u64 {
+        let server = Arc::clone(&server);
+        handles.push(std::thread::spawn(move || (s, converse(&server, s))));
+    }
+    for h in handles {
+        let (s, got) = h.join().unwrap();
+        let want = &reference[s as usize];
+        assert_eq!(got.0.to_bits(), want.0.to_bits(), "session {s} feed-1 nll");
+        assert_eq!(got.1, want.1, "session {s} feed-1 count");
+        assert_eq!(got.2, want.2, "session {s} generation 1");
+        assert_eq!(got.3.to_bits(), want.3.to_bits(), "session {s} feed-2 nll");
+        assert_eq!(got.4, want.4, "session {s} generation 2");
+    }
+    assert_eq!(server.stats.gens.load(Ordering::Relaxed), 12);
+    assert_eq!(server.stats.feeds.load(Ordering::Relaxed), 12);
+    // continuous batching actually batched: some wave held > 1 row
+    let fill = *server.stats.batch_fill.lock().unwrap();
+    assert!(fill.max_fill > 1, "no wave ever batched (max fill {})", fill.max_fill);
+    assert!(fill.waves > 0 && fill.mean() >= 1.0);
+}
+
+#[test]
+fn cancellation_mid_generate() {
+    let c = cfg();
+    let flat = host_init(&c, 9);
+    let m = manifest(flat.len());
+    let server = Server::start(&m, "nat", flat, ServerOpts::default()).unwrap();
+    let h = server.open_session();
+    let prompt = doc(33, 3);
+    h.feed(prompt.clone(), false).unwrap();
+    let mut stream = h
+        .generate(GenOpts {
+            seed_token: *prompt.last().unwrap(),
+            max_tokens: 1_000_000, // would run ~forever without cancel
+            ..Default::default()
+        })
+        .unwrap();
+    let mut got = Vec::new();
+    for _ in 0..3 {
+        got.push(stream.recv().unwrap().unwrap());
+    }
+    h.cancel().unwrap();
+    // drain the remainder; the stream must terminate promptly
+    for t in stream.by_ref() {
+        got.push(t.unwrap());
+    }
+    assert_eq!(stream.finish_reason(), Some(FinishReason::Cancelled));
+    assert!(
+        got.len() < 1_000_000,
+        "cancel must stop the generation (got {} tokens)",
+        got.len()
+    );
+    assert!(server.stats.cancelled.load(Ordering::Relaxed) >= 1);
+    // the session survives cancellation: a follow-up generation works
+    // and resumes the same carry state
+    let g = h
+        .generate_blocking(GenOpts {
+            seed_token: *prompt.last().unwrap(),
+            max_tokens: 4,
+            ..Default::default()
+        })
+        .unwrap();
+    assert_eq!(g.tokens.len(), 4);
+    assert!(!g.fresh_carry, "cancelled session must keep its state");
+    server.shutdown();
+}
+
+#[test]
+fn dropping_the_stream_cancels_implicitly() {
+    let c = cfg();
+    let flat = host_init(&c, 11);
+    let m = manifest(flat.len());
+    let server = Server::start(&m, "nat", flat, ServerOpts::default()).unwrap();
+    let h = server.open_session();
+    h.feed(doc(20, 1), false).unwrap();
+    let mut stream = h
+        .generate(GenOpts { seed_token: 1, max_tokens: 1_000_000, ..Default::default() })
+        .unwrap();
+    let _ = stream.recv().unwrap().unwrap();
+    drop(stream); // client walks away
+    // the scheduler notices the dead channel at the next token send and
+    // finishes the task (implicit cancel); poll until it has, since the
+    // drop itself carries no message
+    let t0 = Instant::now();
+    while server.stats.cancelled.load(Ordering::Relaxed) < 1 {
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(10),
+            "dropped stream never cancelled the generation"
+        );
+        std::thread::yield_now();
+    }
+    // a new generation on the session then works
+    let g = h
+        .generate_blocking(GenOpts { seed_token: 1, max_tokens: 3, ..Default::default() })
+        .unwrap();
+    assert_eq!(g.tokens.len(), 3);
+    server.shutdown();
+}
+
+#[test]
+fn eviction_is_surfaced_on_the_generate_path() {
+    // the silent-eviction satellite seam: a client whose session was
+    // LRU-evicted used to get logits from a zero carry with no signal.
+    let c = cfg();
+    let flat = host_init(&c, 5);
+    let m = manifest(flat.len());
+    let opts = ServerOpts { max_sessions: 2, ..ServerOpts::default() };
+    let server = Server::start(&m, "nat", flat, opts).unwrap();
+    server.feed(1, doc(30, 1), false).unwrap();
+    server.feed(2, doc(30, 2), false).unwrap();
+    let fr3 = server.feed(3, doc(30, 3), false).unwrap();
+    assert_eq!(fr3.evicted, Some(1), "feed path reports the LRU victim");
+    // session 1's state is gone; generating on it must say so
+    let g = server.generate(1, 4, 5, None).unwrap();
+    assert_eq!(g.tokens.len(), 5);
+    assert!(g.fresh_carry, "evicted session restarted from a zero carry with no signal");
+    assert_eq!(g.evicted, Some(2), "re-admission evicted the current LRU");
+    // a resident session reports resumed context
+    let g3 = server.generate(3, 4, 5, None).unwrap();
+    assert!(!g3.fresh_carry);
+    assert!(server.stats.evictions.load(Ordering::Relaxed) >= 2);
+    server.shutdown();
+}
+
+#[test]
+fn eviction_under_concurrent_load_stays_correct() {
+    let c = cfg();
+    let flat = host_init(&c, 23);
+    let m = manifest(flat.len());
+    let opts = ServerOpts { max_sessions: 2, queue_cap: 64, ..ServerOpts::default() };
+    let server = Arc::new(Server::start(&m, "nat", flat, opts).unwrap());
+    let mut handles = Vec::new();
+    for s in 0..6u64 {
+        let server = Arc::clone(&server);
+        handles.push(std::thread::spawn(move || {
+            let d = doc(40, 70 + s);
+            server.feed(100 + s, d.clone(), true).map(|r| (r, d.len()))
+        }));
+    }
+    for h in handles {
+        let (r, len) = h.join().unwrap().unwrap();
+        assert_eq!(r.count, (len - 1) as f64, "every feed streams fully despite eviction");
+    }
+    assert!(
+        server.stats.evictions.load(Ordering::Relaxed) >= 4,
+        "6 sessions through 2 slots must evict"
+    );
+}
+
+#[test]
+fn first_token_arrives_before_the_completion_finishes() {
+    // acceptance seam: TokenStream must deliver token 1 while the rest
+    // of the completion is still being decoded — not after the whole
+    // generation like the old blocking GenResult.
+    let c = cfg();
+    let flat = host_init(&c, 31);
+    let m = manifest(flat.len());
+    let server = Server::start(&m, "nat", flat, ServerOpts::default()).unwrap();
+    let h = server.open_session();
+    let prompt = doc(25, 8);
+    h.feed(prompt.clone(), false).unwrap();
+    let t0 = Instant::now();
+    let mut stream = h
+        .generate(GenOpts {
+            seed_token: *prompt.last().unwrap(),
+            max_tokens: 64,
+            ..Default::default()
+        })
+        .unwrap();
+    let first = stream.recv().unwrap().unwrap();
+    let t_first = t0.elapsed();
+    assert!((0..VOCAB as i32).contains(&first));
+    assert!(stream.finish_reason().is_none(), "stream still live after the first token");
+    let rest: Vec<i32> = stream.by_ref().map(|t| t.unwrap()).collect();
+    let t_done = t0.elapsed();
+    assert_eq!(rest.len(), 63, "remaining tokens still stream after the first");
+    assert_eq!(stream.finish_reason(), Some(FinishReason::MaxTokens));
+    assert!(
+        t_first < t_done,
+        "first token ({t_first:?}) must land before completion ({t_done:?})"
+    );
+    let ttft_recorded = server.stats.ttft_latency.lock().unwrap().summary();
+    assert!(!ttft_recorded.is_empty());
+    server.shutdown();
+}
+
+#[test]
+fn decode_batch_padding_masking_parity_is_bitwise() {
+    // acceptance seam: the batched decode_batch path must produce
+    // logits (and carries) BITWISE identical to single-session decode
+    // for every row, under ragged padding.
+    let c = cfg();
+    let flat = host_init(&c, 77);
+    let m = manifest(flat.len());
+    let rt = Runtime::new(BackendKind::Native).unwrap();
+    assert!(rt.supports_kind("decode_batch"));
+
+    // distinct warmed carries via the single-session stream path
+    let stream = StreamStep::new(&rt, &m, "nat.stream").unwrap();
+    let decode = DecodeStep::new(&rt, &m, "nat.decode").unwrap();
+    let batch = BatchedDecodeStep::from_decode(m.get("nat.decode").unwrap(), BSRV).unwrap();
+    assert_eq!(batch.batch, BSRV);
+    assert_eq!(batch.vocab, VOCAB);
+    for rows in 1..=3usize {
+        // ragged: `rows` real sessions, BSRV - rows padding rows
+        let mut carries = Vec::new();
+        for r in 0..rows {
+            let mut carry = stream.zero_carry();
+            let d = doc(CHUNK + 1, 40 + r as u64);
+            let toks: Vec<i32> = d[..CHUNK].to_vec();
+            let tgts: Vec<i32> = d[1..=CHUNK].to_vec();
+            stream.run(&flat, &mut carry, &toks, &tgts, &[1.0; CHUNK]).unwrap();
+            carries.push(carry);
+        }
+        let tokens: Vec<i32> = (0..rows as i32).map(|r| (r * 5 + 2) % VOCAB as i32).collect();
+        // reference: each row through the single-session decode_step
+        let mut ref_carries = carries.clone();
+        let mut ref_logits = Vec::new();
+        for (cr, &tok) in ref_carries.iter_mut().zip(&tokens) {
+            ref_logits.push(decode.run(&flat, cr, tok).unwrap());
+        }
+        // batched, with padding rows
+        let params = decode.upload(&flat).unwrap();
+        let mut row_refs: Vec<&mut stlt::runtime::StreamCarry> = carries.iter_mut().collect();
+        let logits = batch.run_h(&rt, &params, &mut row_refs, &tokens).unwrap();
+        assert_eq!(logits.len(), rows);
+        for r in 0..rows {
+            assert_eq!(logits[r], ref_logits[r], "row {r}/{rows} logits diverge");
+            assert_eq!(carries[r].l, ref_carries[r].l, "row {r}/{rows} L carry diverges");
+            assert_eq!(carries[r].u, ref_carries[r].u, "row {r}/{rows} U carry diverges");
+        }
+    }
+}
+
+#[test]
+fn session_handle_lifecycle_and_conflicts() {
+    let c = cfg();
+    let flat = host_init(&c, 55);
+    let m = manifest(flat.len());
+    let server = Server::start(&m, "nat", flat, ServerOpts::default()).unwrap();
+    let h1 = server.open_session();
+    let h2 = server.open_session();
+    assert_ne!(h1.id(), h2.id(), "handles get distinct sessions");
+    assert!(h1.id() >= 1 << 32, "handle ids never collide with hand-picked ids");
+
+    h1.feed(doc(20, 1), false).unwrap();
+    // a second generation on the same session while one is in flight
+    // is rejected through its own stream
+    let s1 = h1
+        .generate(GenOpts { seed_token: 1, max_tokens: 200_000, ..Default::default() })
+        .unwrap();
+    let err = h1
+        .generate(GenOpts { seed_token: 1, max_tokens: 4, ..Default::default() })
+        .unwrap()
+        .wait()
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("in flight"), "unhelpful error: {err:#}");
+    // feeding mid-generation is rejected with a clear error
+    let err = h1.feed(doc(10, 2), false).unwrap_err();
+    assert!(format!("{err:#}").contains("in flight"), "unhelpful error: {err:#}");
+    h1.cancel().unwrap();
+    let r = s1.wait().unwrap();
+    assert_eq!(r.reason, FinishReason::Cancelled);
+
+    // an out-of-vocab seed token fails its own stream at intake — it
+    // can never poison a shared decode wave
+    let err = h2
+        .generate(GenOpts { seed_token: -5, max_tokens: 4, ..Default::default() })
+        .unwrap()
+        .wait()
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("vocab"), "unhelpful error: {err:#}");
+
+    // stop token ends the stream with FinishReason::Stop
+    let free = h2
+        .generate_blocking(GenOpts { seed_token: 2, max_tokens: 16, ..Default::default() })
+        .unwrap();
+    let stop = free.tokens[0];
+    let h3 = server.open_session();
+    let stopped = h3
+        .generate_blocking(GenOpts {
+            seed_token: 2,
+            max_tokens: 16,
+            stop: Some(stop),
+            ..Default::default()
+        })
+        .unwrap();
+    assert_eq!(stopped.reason, FinishReason::Stop);
+    assert_eq!(stopped.tokens, vec![stop]);
+
+    // close releases state; dropping a handle releases too
+    h3.close().unwrap();
+    drop(h2);
+    server.shutdown();
+}
