@@ -1,7 +1,9 @@
 //! Native-backend engine bench: tokens/s of the pure-Rust STLT forward,
 //! streaming, decode and train_step paths at the "tiny" scale (runs
 //! with default features — no artifacts, no XLA), including the
-//! segment-checkpointed train_step with its peak-tape-bytes accounting.
+//! segment-checkpointed train_step with its peak-tape-bytes accounting,
+//! plus the sharded-serving wire rows (router + N loopback workers:
+//! decode scaling, ttft percentiles, live-migration latency).
 //!
 //! STLT_BENCH_SMOKE=1 shortens every measurement window so CI can run
 //! this as a visibility smoke (perf regressions in the backward pass
@@ -273,6 +275,142 @@ fn bench_serving(smoke: bool, cfg: &ModelConfig, flat: &[f32], rows: &mut Rows) 
     rows.push(r, vec![("ttft_p50_ms", p50 * 1e3), ("ttft_p99_ms", p99 * 1e3)]);
 }
 
+/// Wire rows: the batched-decode workload again, but through the full
+/// sharded topology — loopback TCP, session router, N worker servers —
+/// plus live-migration latency. The delta between `serving/decode
+/// batched` and `wire/decode W=1` is the protocol tax; scaling W shows
+/// the sharding win (each worker runs its own decode waves).
+fn bench_wire(smoke: bool, cfg: &ModelConfig, flat: &[f32], rows: &mut Rows) {
+    use stlt::coordinator::Session;
+    use stlt::net::{spawn_worker, Router, WireServer};
+
+    let bsrv = 8usize;
+    let chunk = 64usize;
+    let gen_len = if smoke { 16 } else { 64 };
+    let prompt_len = chunk + 1;
+    let sessions = if smoke { 8usize } else { 16 };
+    let m = serving_manifest(cfg, flat.len(), chunk, bsrv);
+    let vocab = cfg.vocab;
+    let docv = |len: usize, seed: u64| -> Vec<i32> {
+        let mut rng = stlt::util::rng::Rng::new(seed);
+        (0..len).map(|_| rng.below(vocab as u64) as i32).collect()
+    };
+
+    // kept alive to the end of the bench: router-client reader threads
+    // hold the sockets, so topologies are not torn down mid-run
+    let mut keep: Vec<(Arc<Server>, WireServer)> = Vec::new();
+
+    for workers in [1usize, 2, 4] {
+        let mut addrs = Vec::new();
+        for _ in 0..workers {
+            let s = Arc::new(
+                Server::start(
+                    &m,
+                    "srv",
+                    flat.to_vec(),
+                    ServerOpts { max_sessions: 64, ..ServerOpts::default() },
+                )
+                .unwrap(),
+            );
+            let w = spawn_worker(Arc::clone(&s), "127.0.0.1:0").unwrap();
+            addrs.push(w.addr().to_string());
+            keep.push((s, w));
+        }
+        let router = Router::connect(&addrs).unwrap();
+
+        // open + warm all sessions before the clock starts
+        let mut sess = Vec::new();
+        let mut seeds = Vec::new();
+        for k in 0..sessions as u64 {
+            let h = router.open_session().unwrap();
+            let prompt = docv(prompt_len, 100 + k);
+            h.feed(prompt.clone(), false).unwrap();
+            seeds.push(*prompt.last().unwrap());
+            sess.push(h);
+        }
+
+        let t0 = Instant::now();
+        let clients: Vec<_> = sess
+            .into_iter()
+            .zip(seeds)
+            .map(|(h, seed_tok)| {
+                std::thread::spawn(move || {
+                    let tg = Instant::now();
+                    let mut stream = h
+                        .generate(GenOpts {
+                            seed_token: seed_tok,
+                            max_tokens: gen_len,
+                            ..GenOpts::default()
+                        })
+                        .unwrap();
+                    stream.recv().unwrap().unwrap();
+                    let ttft = tg.elapsed().as_secs_f64();
+                    let mut n = 1usize;
+                    for t in stream.by_ref() {
+                        t.unwrap();
+                        n += 1;
+                    }
+                    assert_eq!(n, gen_len);
+                    (h, ttft)
+                })
+            })
+            .collect();
+        let mut ttfts = Vec::new();
+        let mut handles = Vec::new();
+        for c in clients {
+            let (h, ttft) = c.join().unwrap();
+            ttfts.push(ttft);
+            handles.push(h);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let tps = (sessions * gen_len) as f64 / wall;
+        ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p50 = ttfts[ttfts.len() / 2];
+        let p99 = ttfts[(ttfts.len() * 99 / 100).min(ttfts.len() - 1)];
+        let r =
+            wall_row(&format!("wire/decode W={workers} {sessions}x{gen_len} tok"), &mut [wall]);
+        println!(
+            "{}   ({tps:.0} tok/s aggregate, ttft p50 {:.2}ms p99 {:.2}ms)",
+            r.row(),
+            p50 * 1e3,
+            p99 * 1e3
+        );
+        rows.push(
+            r,
+            vec![
+                ("tokens_per_s", tps),
+                ("ttft_p50_ms", p50 * 1e3),
+                ("ttft_p99_ms", p99 * 1e3),
+                ("workers", workers as f64),
+            ],
+        );
+
+        if workers == 2 {
+            // live migration: ping-pong one warmed session between the
+            // two workers (export → open same id → import → swap)
+            let h = &handles[0];
+            let id = h.session_id();
+            let carry_kib = h.export_carry().unwrap().state_bytes() as f64 / 1024.0;
+            let iters = if smoke { 8 } else { 32 };
+            let mut samples = Vec::with_capacity(iters);
+            for _ in 0..iters {
+                let from = router.worker_of(id).unwrap();
+                let tm = Instant::now();
+                router.migrate(id, 1 - from).unwrap();
+                samples.push(tm.elapsed().as_secs_f64());
+            }
+            let r = wall_row("wire/migrate session (2 workers)", &mut samples);
+            let p50_ms = r.p50_s * 1e3;
+            println!("{}   ({carry_kib:.1} KiB carry, p50 {p50_ms:.2}ms)", r.row());
+            rows.push(r, vec![("carry_kib", carry_kib), ("migrate_p50_ms", p50_ms)]);
+        }
+
+        for mut h in handles {
+            let _ = h.close();
+        }
+    }
+}
+
 fn main() {
     let smoke = std::env::var("STLT_BENCH_SMOKE")
         .map(|v| !v.is_empty() && v != "0")
@@ -367,6 +505,10 @@ fn main() {
 
     // serving: batched continuous decode vs sequential, ttft percentiles
     bench_serving(smoke, &cfg, &flat, &mut rows);
+
+    // sharded serving: router + N wire workers over loopback TCP,
+    // decode scaling and live-migration latency
+    bench_wire(smoke, &cfg, &flat, &mut rows);
 
     let path = std::env::var("STLT_BENCH_JSON").unwrap_or_else(|_| "BENCH_native.json".into());
     match std::fs::write(&path, rows.to_json()) {

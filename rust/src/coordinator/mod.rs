@@ -14,11 +14,13 @@ pub mod trainer;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use beam::{beam_search, StepScorer};
-pub use sampling::Sampling;
 pub use queue::BoundedQueue;
+pub use sampling::Sampling;
 pub use server::{FeedResult, Server, ServerOpts, ServerStats, WaveFill};
-pub use session::{FinishReason, GenOpts, GenResult, SessionHandle, TokenStream};
-pub use state::{Admit, StatePool};
+pub use session::{
+    CarrySnapshot, FinishReason, GenOpts, GenResult, Session, SessionHandle, TokenStream,
+};
+pub use state::{Admit, Export, Import, StatePool};
 pub use trainer::{
     eval_lm, load_checkpoint, load_checkpoint_for, load_checkpoint_meta, save_checkpoint,
     save_checkpoint_for_run, train_lm, CkptMeta, TrainOpts, TrainReport,

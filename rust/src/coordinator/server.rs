@@ -52,8 +52,10 @@ use crate::util::rng::Rng;
 use super::batcher::BatchPolicy;
 use super::queue::{BoundedQueue, PushError};
 use super::sampling::Sampling;
-use super::session::{FinishReason, GenOpts, GenResult, SessionHandle, StreamItem, TokenStream};
-use super::state::{Admit, StatePool};
+use super::session::{
+    CarrySnapshot, FinishReason, GenOpts, GenResult, SessionHandle, StreamItem, TokenStream,
+};
+use super::state::{Admit, Export, Import, StatePool};
 
 /// Requests drained from the shared queue in one scheduler iteration.
 /// Bounds per-iteration intake work, not concurrency: anything left
@@ -99,6 +101,10 @@ pub(crate) enum Request {
     Generate { session: u64, opts: GenOpts, tx: mpsc::Sender<StreamItem> },
     Cancel { session: u64 },
     Release { session: u64 },
+    /// Copy a session's carry out for migration/resume.
+    ExportCarry { session: u64, resp: mpsc::Sender<Result<CarrySnapshot>> },
+    /// Install an exported carry (reply: LRU-evicted victim, if any).
+    ImportCarry { session: u64, snap: CarrySnapshot, resp: mpsc::Sender<Result<Option<u64>>> },
 }
 
 /// Bounded wave-fill accounting (one wave ≈ one generated token, so an
@@ -191,6 +197,18 @@ impl ServerCore {
 
     pub(crate) fn release(&self, session: u64) -> Result<()> {
         self.submit(Request::Release { session })
+    }
+
+    pub(crate) fn export_carry(&self, session: u64) -> Result<CarrySnapshot> {
+        let (tx, rx) = mpsc::channel();
+        self.submit(Request::ExportCarry { session, resp: tx })?;
+        rx.recv().map_err(|_| anyhow!("model thread dropped request"))?
+    }
+
+    pub(crate) fn import_carry(&self, session: u64, snap: CarrySnapshot) -> Result<Option<u64>> {
+        let (tx, rx) = mpsc::channel();
+        self.submit(Request::ImportCarry { session, snap, resp: tx })?;
+        rx.recv().map_err(|_| anyhow!("model thread dropped request"))?
     }
 }
 
@@ -363,6 +381,27 @@ impl Server {
 
     pub fn release(&self, session: u64) -> Result<()> {
         self.core.release(session)
+    }
+
+    /// Export a session's carry by id (see
+    /// [`SessionHandle::export_carry`]).
+    pub fn export_carry(&self, session: u64) -> Result<CarrySnapshot> {
+        self.core.export_carry(session)
+    }
+
+    /// Import a carry into a session by id (see
+    /// [`SessionHandle::import_carry`]).
+    pub fn import_carry(&self, session: u64, snap: CarrySnapshot) -> Result<Option<u64>> {
+        self.core.import_carry(session, snap)
+    }
+
+    /// Handle over an explicit session id. The wire worker opens
+    /// router-chosen ids with this so a session keeps its id across a
+    /// migration — generation RNG is seeded `rng_seed ^ session`, so a
+    /// preserved id is what keeps sampled continuations bitwise
+    /// identical on the destination worker.
+    pub(crate) fn session_handle(&self, id: u64) -> SessionHandle {
+        SessionHandle::new(id, Arc::clone(&self.core))
     }
 
     pub fn shutdown(mut self) {
@@ -633,6 +672,93 @@ impl ModelThread {
                 self.drop_parked(session, true);
                 self.pool.release(session);
             }
+            Request::ExportCarry { session, resp } => {
+                self.reap_cancelled(session);
+                let _ = resp.send(self.export_snapshot(session));
+            }
+            Request::ImportCarry { session, snap, resp } => {
+                self.reap_cancelled(session);
+                if self.feeds.iter().any(|f| f.session == session)
+                    || self.gens.iter().any(|g| g.session == session)
+                {
+                    let _ = resp.send(Err(anyhow!(
+                        "session {session}: cannot import a carry while a feed or \
+                         generation is in flight"
+                    )));
+                    return;
+                }
+                // validate against this server's model before touching
+                // the pool: a snapshot from a different model geometry
+                // must fail loudly, not corrupt a wave later
+                let single = self.stream_entry_single();
+                let (l_stride, u_stride) = (single.inputs[1].numel(), single.inputs[2].numel());
+                if snap.l.len() != l_stride || snap.u.len() != u_stride {
+                    let _ = resp.send(Err(anyhow!(
+                        "carry shape mismatch: snapshot is ({}, {}) f32s, this model wants \
+                         ({l_stride}, {u_stride}) — importing across different models?",
+                        snap.l.len(),
+                        snap.u.len()
+                    )));
+                    return;
+                }
+                // adopt the server's own canonical shapes (numel-equal
+                // reshapes in a foreign snapshot must not leak in)
+                let carry = StreamCarry {
+                    l: snap.l,
+                    u: snap.u,
+                    l_shape: single.inputs[1].shape.clone(),
+                    u_shape: single.inputs[2].shape.clone(),
+                };
+                match self.pool.import(session, carry, snap.tokens_seen) {
+                    Import::Ok => {
+                        let _ = resp.send(Ok(None));
+                    }
+                    Import::Evicted(v) => {
+                        self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+                        let _ = resp.send(Ok(Some(v)));
+                    }
+                    Import::InFlight(_) => {
+                        // unreachable given the task-set check above,
+                        // but keep the refusal honest if it ever races
+                        let _ = resp.send(Err(anyhow!(
+                            "session {session}: carry is checked out by in-flight work"
+                        )));
+                    }
+                    Import::NoCapacity(carry) => {
+                        // park-and-retry like feed/generate admission:
+                        // every resident session is pinned, so a wave
+                        // is in flight and will free a slot
+                        let snap = CarrySnapshot {
+                            l: carry.l,
+                            u: carry.u,
+                            l_shape: carry.l_shape,
+                            u_shape: carry.u_shape,
+                            tokens_seen: snap.tokens_seen,
+                        };
+                        self.parked.push_back((Request::ImportCarry { session, snap, resp }, t0));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Export a session's carry as a [`CarrySnapshot`], mapping pool
+    /// outcomes to client-facing errors.
+    fn export_snapshot(&self, session: u64) -> Result<CarrySnapshot> {
+        match self.pool.export(session) {
+            Export::Missing => Err(anyhow!(
+                "session {session}: no resident state to export (never fed, or evicted)"
+            )),
+            Export::InFlight => Err(anyhow!(
+                "session {session}: cannot export while a feed or generation holds the carry"
+            )),
+            Export::Carry { carry, tokens_seen } => Ok(CarrySnapshot {
+                l: carry.l,
+                u: carry.u,
+                l_shape: carry.l_shape,
+                u_shape: carry.u_shape,
+                tokens_seen,
+            }),
         }
     }
 
@@ -650,6 +776,10 @@ impl ModelThread {
                 Request::Feed { session: s, resp, .. } if feeds_too && s == session => {
                     let _ = resp.send(Err(anyhow!("session {session} released before its \
                          feed could be admitted")));
+                }
+                Request::ImportCarry { session: s, resp, .. } if feeds_too && s == session => {
+                    let _ = resp.send(Err(anyhow!("session {session} released before its \
+                         carry import could be admitted")));
                 }
                 other => kept.push_back((other, t0)),
             }

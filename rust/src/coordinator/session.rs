@@ -30,9 +30,32 @@ use anyhow::{anyhow, Result};
 use super::sampling::Sampling;
 use super::server::{FeedResult, ServerCore};
 
+/// A session's serializable state: the O(S·d) STLT carry plus the
+/// served-token counter, as exported by
+/// [`SessionHandle::export_carry`]. This is the unit of live migration
+/// — a few hundred KiB at e2e scale (vs an O(N·d) KV cache), cheap to
+/// ship over the wire and re-import bitwise on another worker.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CarrySnapshot {
+    pub l: Vec<f32>,
+    pub u: Vec<f32>,
+    pub l_shape: Vec<usize>,
+    pub u_shape: Vec<usize>,
+    /// Tokens served so far (feed + decode), carried for stats
+    /// continuity on the importing worker.
+    pub tokens_seen: u64,
+}
+
+impl CarrySnapshot {
+    /// Bytes of carry state this snapshot ships (excluding shapes).
+    pub fn state_bytes(&self) -> usize {
+        (self.l.len() + self.u.len()) * 4
+    }
+}
+
 /// Options for one generation through a [`SessionHandle`] (or the
 /// blocking `Server::generate_with` wrapper).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct GenOpts {
     /// First input token. `feed` consumes tokens pairwise (input ->
     /// target) and leaves the final prompt token unconsumed; pass it
@@ -123,6 +146,15 @@ pub struct TokenStream {
 impl TokenStream {
     pub(crate) fn new(rx: mpsc::Receiver<StreamItem>) -> TokenStream {
         TokenStream { rx, evicted: None, fresh_carry: false, finished: None, failed: false }
+    }
+
+    /// Receive the next raw protocol item (Start/Token/End) without
+    /// collapsing it into the iterator view. The wire layer relays
+    /// these 1:1 into stream frames so remote clients see the same
+    /// metadata (eviction, fresh-carry, finish reason) as local ones.
+    /// `None` when the model thread dropped the channel mid-stream.
+    pub(crate) fn recv_raw(&mut self) -> Option<StreamItem> {
+        self.rx.recv().ok()
     }
 
     /// Block for the next token. `None` once the generation has
@@ -245,6 +277,21 @@ impl SessionHandle {
         self.released = true;
         self.core.release(self.id)
     }
+
+    /// Export a copy of the session's carry for migration or
+    /// client-side resume. Checkout-safe: fails while a feed or
+    /// generation holds the carry (wait for the stream to finish or
+    /// cancel first) and when the state was evicted.
+    pub fn export_carry(&self) -> Result<CarrySnapshot> {
+        self.core.export_carry(self.id)
+    }
+
+    /// Install an exported carry into this session, replacing whatever
+    /// state it had (including none — an evicted or fresh session).
+    /// Returns the victim id if the admission LRU-evicted a session.
+    pub fn import_carry(&self, snap: CarrySnapshot) -> Result<Option<u64>> {
+        self.core.import_carry(self.id, snap)
+    }
 }
 
 impl Drop for SessionHandle {
@@ -252,5 +299,63 @@ impl Drop for SessionHandle {
         if !self.released {
             let _ = self.core.release(self.id);
         }
+    }
+}
+
+/// The one seam local and remote serving share: [`SessionHandle`]
+/// (in-process) and `net::RemoteSession`/`net::RouterSession` (over
+/// the wire) all implement it, so `stlt serve`, the benches, and the
+/// soak tests drive either through the same code. Object-safe — the
+/// CLI holds `Box<dyn Session>`.
+pub trait Session: Send {
+    fn session_id(&self) -> u64;
+    /// Stream document tokens in (blocking until consumed).
+    fn feed(&self, tokens: Vec<i32>, count_loss: bool) -> Result<FeedResult>;
+    /// Start a generation; tokens stream back as they are produced.
+    fn generate(&self, opts: GenOpts) -> Result<TokenStream>;
+    /// Cancel the in-flight generation at the next wave boundary.
+    fn cancel(&self) -> Result<()>;
+    /// Export the session's carry (refused while a wave holds it).
+    fn export_carry(&self) -> Result<CarrySnapshot>;
+    /// Install an exported carry; returns any LRU-evicted victim.
+    fn import_carry(&self, snap: CarrySnapshot) -> Result<Option<u64>>;
+    /// Release the session's state. `&mut self` (not `self`) keeps the
+    /// trait object-safe; implementations make a later drop a no-op.
+    fn close(&mut self) -> Result<()>;
+
+    /// Convenience: run a generation to completion.
+    fn generate_blocking(&self, opts: GenOpts) -> Result<GenResult> {
+        self.generate(opts)?.wait()
+    }
+}
+
+impl Session for SessionHandle {
+    fn session_id(&self) -> u64 {
+        self.id
+    }
+
+    fn feed(&self, tokens: Vec<i32>, count_loss: bool) -> Result<FeedResult> {
+        SessionHandle::feed(self, tokens, count_loss)
+    }
+
+    fn generate(&self, opts: GenOpts) -> Result<TokenStream> {
+        SessionHandle::generate(self, opts)
+    }
+
+    fn cancel(&self) -> Result<()> {
+        SessionHandle::cancel(self)
+    }
+
+    fn export_carry(&self) -> Result<CarrySnapshot> {
+        SessionHandle::export_carry(self)
+    }
+
+    fn import_carry(&self, snap: CarrySnapshot) -> Result<Option<u64>> {
+        SessionHandle::import_carry(self, snap)
+    }
+
+    fn close(&mut self) -> Result<()> {
+        self.released = true;
+        self.core.release(self.id)
     }
 }

@@ -17,6 +17,30 @@ pub enum Admit {
     Rejected,
 }
 
+/// Outcome of [`StatePool::export`].
+pub enum Export {
+    /// The session has no resident state (never admitted, or evicted).
+    Missing,
+    /// The carry is checked out by an in-flight feed/generate wave;
+    /// exporting now would ship the empty placeholder.
+    InFlight,
+    /// A copy of the resident carry plus its served-token counter.
+    Carry { carry: StreamCarry, tokens_seen: u64 },
+}
+
+/// Outcome of [`StatePool::import`]. The rejected variants hand the
+/// carry back so the caller can park and retry without a reclone.
+pub enum Import {
+    Ok,
+    /// Imported; admission LRU-evicted this victim.
+    Evicted(u64),
+    /// Every resident session is pinned — transient, retry later.
+    NoCapacity(StreamCarry),
+    /// The session's own carry is checked out by in-flight work;
+    /// overwriting it would corrupt the wave's checkin.
+    InFlight(StreamCarry),
+}
+
 pub struct StatePool {
     capacity: usize,
     states: HashMap<u64, SessionState>,
@@ -123,6 +147,58 @@ impl StatePool {
     pub fn release(&mut self, id: u64) -> bool {
         self.states.remove(&id).is_some()
     }
+
+    /// Copy a session's carry out for migration/resume. Checkout-safe:
+    /// refuses while a wave holds the carry (the resident value is the
+    /// empty placeholder then — exporting it would ship zero-length
+    /// state that "imports" cleanly and corrupts the session).
+    pub fn export(&self, id: u64) -> Export {
+        match self.states.get(&id) {
+            None => Export::Missing,
+            Some(s) if s.pinned => Export::InFlight,
+            Some(s) => Export::Carry { carry: s.carry.clone(), tokens_seen: s.tokens_seen },
+        }
+    }
+
+    /// Install an exported carry under `id`: replaces the resident
+    /// state if the session exists (and is not pinned), otherwise
+    /// admits it like [`StatePool::admit`] — including LRU eviction
+    /// and the all-pinned `NoCapacity` rejection.
+    pub fn import(&mut self, id: u64, carry: StreamCarry, tokens_seen: u64) -> Import {
+        self.clock += 1;
+        let clock = self.clock;
+        if let Some(s) = self.states.get_mut(&id) {
+            if s.pinned {
+                return Import::InFlight(carry);
+            }
+            s.carry = carry;
+            s.tokens_seen = tokens_seen;
+            s.last_used = clock;
+            return Import::Ok;
+        }
+        let mut evicted = None;
+        if self.states.len() >= self.capacity {
+            let victim = self
+                .states
+                .iter()
+                .filter(|(_, s)| !s.pinned)
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(k, _)| *k);
+            match victim {
+                Some(v) => {
+                    self.states.remove(&v);
+                    evicted = Some(v);
+                }
+                None => return Import::NoCapacity(carry),
+            }
+        }
+        self.states
+            .insert(id, SessionState { carry, last_used: clock, pinned: false, tokens_seen });
+        match evicted {
+            Some(v) => Import::Evicted(v),
+            None => Import::Ok,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -203,5 +279,73 @@ mod tests {
         p.admit(1, carry());
         p.admit(2, carry());
         assert_eq!(p.state_bytes(), 2 * 40 * 4);
+    }
+
+    #[test]
+    fn export_copies_resident_state() {
+        let mut p = StatePool::new(2);
+        p.admit(1, carry());
+        let mut c = p.checkout(1).unwrap();
+        c.l[0] = 3.5;
+        p.checkin(1, c, 16);
+        match p.export(1) {
+            Export::Carry { carry, tokens_seen } => {
+                assert_eq!(carry.l[0], 3.5);
+                assert_eq!(tokens_seen, 16);
+            }
+            _ => panic!("expected a carry"),
+        }
+        // export is a copy: the session stays resident and usable
+        assert!(p.contains(1));
+        assert_eq!(p.checkout(1).unwrap().l[0], 3.5);
+    }
+
+    #[test]
+    fn export_refuses_checked_out_and_missing() {
+        let mut p = StatePool::new(2);
+        p.admit(1, carry());
+        let c = p.checkout(1).unwrap();
+        assert!(matches!(p.export(1), Export::InFlight));
+        p.checkin(1, c, 0);
+        assert!(matches!(p.export(1), Export::Carry { .. }));
+        assert!(matches!(p.export(9), Export::Missing));
+    }
+
+    #[test]
+    fn import_replaces_or_admits() {
+        let mut p = StatePool::new(2);
+        // import into an empty pool admits
+        let mut c = carry();
+        c.u[0] = 7.0;
+        assert!(matches!(p.import(5, c, 12), Import::Ok));
+        assert_eq!(p.tokens_seen(5), 12);
+        assert_eq!(p.checkout(5).unwrap().u[0], 7.0);
+        // import over a resident (unpinned) session replaces its state
+        let mut p2 = StatePool::new(2);
+        p2.admit(5, carry());
+        let mut c2 = carry();
+        c2.u[0] = 9.0;
+        assert!(matches!(p2.import(5, c2, 3), Import::Ok));
+        assert_eq!(p2.tokens_seen(5), 3);
+        assert_eq!(p2.checkout(5).unwrap().u[0], 9.0);
+    }
+
+    #[test]
+    fn import_evicts_lru_and_respects_pins() {
+        let mut p = StatePool::new(2);
+        p.admit(1, carry());
+        p.admit(2, carry());
+        let c = p.checkout(1).unwrap();
+        p.checkin(1, c, 1); // 2 is now LRU
+        assert!(matches!(p.import(3, carry(), 0), Import::Evicted(2)));
+        // pinned resident session refuses an overwrite
+        let _held = p.checkout(1).unwrap();
+        assert!(matches!(p.import(1, carry(), 0), Import::InFlight(_)));
+        // all pinned -> no capacity for a new id (carry handed back)
+        let _held3 = p.checkout(3).unwrap();
+        match p.import(4, carry(), 0) {
+            Import::NoCapacity(c) => assert_eq!(c.l.len(), 8),
+            _ => panic!("expected NoCapacity"),
+        }
     }
 }

@@ -44,6 +44,7 @@ pub mod data;
 pub mod harness;
 pub mod interpret;
 pub mod metrics;
+pub mod net;
 pub mod runtime;
 pub mod tokenizer;
 #[cfg(feature = "native")]

@@ -8,9 +8,19 @@
 //!   stream  --artifact NAME [--ckpt PATH] --doc-len N   streaming PPL demo
 //!   generate --artifact NAME [--ckpt PATH] --len N
 //!   serve   --artifact NAME [--sessions N] [--prompt-len N] [--gen-len N]
+//!           [--connect ADDR]
 //!           continuous-batching demo: N concurrent sessions feed +
 //!           stream generations through the session API, reporting
-//!           aggregate tokens/s and first-token latency
+//!           aggregate tokens/s and first-token latency. With
+//!           --connect the same workload drives a remote worker or
+//!           router over the wire protocol instead of an in-process
+//!           server (see `stlt::net`).
+//!   worker  --artifact NAME --listen ADDR [--max-sessions N] [--queue-cap N]
+//!           host one continuous-batching Server behind the binary
+//!           wire protocol (ADDR: host:port or unix:/path)
+//!   router  --listen ADDR --workers ADDR[,ADDR...]
+//!           front-end: hash-routes sessions across workers, speaks
+//!           the same wire protocol to clients, migrates carries
 //!   inspect --artifact NAME [--ckpt PATH]               learned-parameter dump
 //!
 //! `--backend native|xla` selects the execution substrate (default:
@@ -39,11 +49,14 @@ fn main() {
 }
 
 fn usage() -> String {
-    "usage: stlt <info|train|eval|stream|generate|serve|inspect> [--backend native|xla] \
+    "usage: stlt <info|train|eval|stream|generate|serve|worker|router|inspect> \
+     [--backend native|xla] \
      [--artifact NAME] [--steps N] [--ckpt PATH] [--resume PATH] [--config FILE] \
      [--set key=value ...] [--grad-ckpt C] [--noise X] [--len N] [--doc-len N] \
      [--sessions N] [--prompt-len N] [--gen-len N] \
-     [--sampling greedy|temp:T|topk:K:T|topp:P:T]"
+     [--sampling greedy|temp:T|topk:K:T|topp:P:T] \
+     [--connect ADDR] [--listen ADDR] [--workers ADDR,...] \
+     [--max-sessions N] [--queue-cap N]"
         .to_string()
 }
 
@@ -66,25 +79,11 @@ fn load_flat(manifest: &Manifest, artifact: &str, args: &Args) -> Result<Vec<f32
     }
     // no --ckpt: fall back to an init vector. aot.py attaches a
     // python-exact .init.bin to the train entry; native-only manifests
-    // carry none, so synthesize the host init from the config instead.
-    if let Some(entry) = manifest
-        .entries
-        .values()
-        .find(|e| e.name.starts_with(&prefix) && e.init_file.is_some())
-    {
-        stlt::info!("cli", "{artifact}: no --ckpt, using untrained init vector");
-        return stlt::runtime::exec::load_init_vec(
-            entry.init_file.as_ref().unwrap(),
-            entry.param_count,
-        );
-    }
-    let entry = manifest
-        .entries
-        .values()
-        .find(|e| e.name.starts_with(&prefix))
-        .ok_or_else(|| anyhow!("no '{artifact}.*' entries in manifest"))?;
-    stlt::info!("cli", "{artifact}: no --ckpt, using untrained host init");
-    Ok(stlt::runtime::TrainState::init_for(entry, 0)?.flat)
+    // carry none, so artifact_flat synthesizes the deterministic host
+    // init — every worker loading the same manifest gets bitwise-equal
+    // weights, which is what makes cross-process migration exact.
+    stlt::info!("cli", "{artifact}: no --ckpt, using untrained init");
+    stlt::runtime::exec::artifact_flat(manifest, artifact)
 }
 
 fn run() -> Result<()> {
@@ -246,28 +245,52 @@ fn run() -> Result<()> {
                 &args.get_or("sampling", "greedy"),
             )
             .map_err(|e| anyhow!(e))?;
-            let flat = load_flat(&manifest, &artifact, &args)?;
             let vocab = manifest.get(&format!("{artifact}.stream_batch"))?.config.vocab;
-            let server = std::sync::Arc::new(coordinator::Server::start(
-                &manifest,
-                &artifact,
-                flat,
-                ServerOpts { backend, max_sessions: sessions.max(16), ..Default::default() },
-            )?);
+            // local in-process server, or a wire connection to a
+            // worker/router — the per-session workload below drives
+            // both through the same `Session` trait
+            #[derive(Clone)]
+            enum Target {
+                Local(std::sync::Arc<coordinator::Server>),
+                Remote(stlt::net::Client),
+            }
+            let target = match args.get("connect") {
+                Some(addr) => {
+                    println!("driving remote server at {addr}");
+                    Target::Remote(stlt::net::Client::connect(addr)?)
+                }
+                None => {
+                    let flat = load_flat(&manifest, &artifact, &args)?;
+                    Target::Local(std::sync::Arc::new(coordinator::Server::start(
+                        &manifest,
+                        &artifact,
+                        flat,
+                        ServerOpts {
+                            backend,
+                            max_sessions: sessions.max(16),
+                            ..Default::default()
+                        },
+                    )?))
+                }
+            };
             let t0 = std::time::Instant::now();
             let mut clients = Vec::new();
             for s in 0..sessions {
-                let server = std::sync::Arc::clone(&server);
+                let target = target.clone();
                 clients.push(std::thread::spawn(move || -> Result<(usize, f64, f64)> {
-                    let handle = server.open_session();
+                    use stlt::coordinator::Session;
+                    let mut sess: Box<dyn Session> = match &target {
+                        Target::Local(server) => Box::new(server.open_session()),
+                        Target::Remote(client) => Box::new(client.open(0)?),
+                    };
                     let mut corpus = stlt::data::corpus::Corpus::new(
                         stlt::data::corpus::CorpusConfig::default_for_vocab(vocab),
                         1000 + s as u64,
                     );
                     let prompt = corpus.take(prompt_len);
-                    let fr = handle.feed(prompt.clone(), true)?;
+                    let fr = sess.feed(prompt.clone(), true)?;
                     let tg0 = std::time::Instant::now();
-                    let mut stream = handle.generate(stlt::coordinator::GenOpts {
+                    let mut stream = sess.generate(stlt::coordinator::GenOpts {
                         seed_token: *prompt.last().unwrap(),
                         max_tokens: gen_len,
                         sampling,
@@ -282,6 +305,7 @@ fn run() -> Result<()> {
                             ttft = tg0.elapsed().as_secs_f64();
                         }
                     }
+                    sess.close()?;
                     let ppl = stlt::metrics::perplexity(fr.nll_sum, fr.count);
                     Ok((n, ttft, ppl))
                 }));
@@ -302,23 +326,75 @@ fn run() -> Result<()> {
                 backend.name(),
                 total_tokens as f64 / dt
             );
-            println!("ttft: {}", server.stats.ttft_latency.lock().unwrap().summary());
-            println!("feed latency: {}", server.stats.feed_latency.lock().unwrap().summary());
-            {
-                let fill = *server.stats.batch_fill.lock().unwrap();
+            if let Target::Local(server) = target {
+                println!("ttft: {}", server.stats.ttft_latency.lock().unwrap().summary());
                 println!(
-                    "waves: {} (mean fill {:.2}, max {}), evictions {}, cancelled {}",
-                    fill.waves,
-                    fill.mean(),
-                    fill.max_fill,
-                    server.stats.evictions.load(std::sync::atomic::Ordering::Relaxed),
-                    server.stats.cancelled.load(std::sync::atomic::Ordering::Relaxed),
+                    "feed latency: {}",
+                    server.stats.feed_latency.lock().unwrap().summary()
                 );
+                {
+                    let fill = *server.stats.batch_fill.lock().unwrap();
+                    println!(
+                        "waves: {} (mean fill {:.2}, max {}), evictions {}, cancelled {}",
+                        fill.waves,
+                        fill.mean(),
+                        fill.max_fill,
+                        server.stats.evictions.load(std::sync::atomic::Ordering::Relaxed),
+                        server.stats.cancelled.load(std::sync::atomic::Ordering::Relaxed),
+                    );
+                }
+                std::sync::Arc::try_unwrap(server)
+                    .map_err(|_| anyhow!("server still shared"))?
+                    .shutdown();
             }
-            std::sync::Arc::try_unwrap(server)
-                .map_err(|_| anyhow!("server still shared"))?
-                .shutdown();
             Ok(())
+        }
+        Some("worker") => {
+            let artifact = args.get_or("artifact", "lm_stlt_tiny");
+            let listen = args.get_or("listen", "127.0.0.1:7741");
+            let max_sessions = args.get_usize("max-sessions", 64).map_err(|e| anyhow!(e))?;
+            let queue_cap = args.get_usize("queue-cap", 256).map_err(|e| anyhow!(e))?;
+            let flat = load_flat(&manifest, &artifact, &args)?;
+            let server = std::sync::Arc::new(coordinator::Server::start(
+                &manifest,
+                &artifact,
+                flat,
+                ServerOpts { backend, max_sessions, queue_cap, ..Default::default() },
+            )?);
+            let wire = stlt::net::spawn_worker(server, &listen)?;
+            // the stdout line is the readiness signal scripts and tests
+            // wait for; logging goes to stderr
+            println!("worker listening on {}", wire.addr());
+            use std::io::Write;
+            std::io::stdout().flush()?;
+            loop {
+                std::thread::park();
+            }
+        }
+        Some("router") => {
+            let listen = args.get_or("listen", "127.0.0.1:7740");
+            let workers: Vec<String> = args
+                .get("workers")
+                .ok_or_else(|| anyhow!("router requires --workers ADDR[,ADDR...]"))?
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+            if workers.is_empty() {
+                return Err(anyhow!("router requires at least one worker address"));
+            }
+            let router = stlt::net::Router::connect(&workers)?;
+            let wire = router.listen(&listen)?;
+            println!(
+                "router listening on {} ({} workers)",
+                wire.addr(),
+                router.worker_count()
+            );
+            use std::io::Write;
+            std::io::stdout().flush()?;
+            loop {
+                std::thread::park();
+            }
         }
         Some("inspect") => {
             let artifact = args.get_or("artifact", "lm_stlt_tiny");

@@ -1,0 +1,372 @@
+//! Wire client: one multiplexed connection ([`Client`]) and the
+//! remote implementation of [`crate::coordinator::Session`]
+//! ([`RemoteSession`]).
+//!
+//! One reader thread demultiplexes reply/stream frames by `req` id
+//! into per-operation channels: plain requests get a one-shot reply,
+//! generations get an [`mpsc`] channel that the reader feeds
+//! `Start`/`Token`/`End` items — the *same* [`TokenStream`] type a
+//! local [`crate::coordinator::SessionHandle`] returns, so streaming
+//! consumers cannot tell local from remote. Dropping a remote
+//! `TokenStream` mid-generation sends a `Cancel` frame (mirroring the
+//! local drop-cancels contract). If the connection dies, every
+//! pending operation fails with a clear error instead of hanging.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::session::StreamItem;
+use crate::coordinator::{CarrySnapshot, FeedResult, GenOpts, Session, TokenStream};
+
+use super::wire::{self, EndOutcome, Frame};
+use super::Stream;
+
+enum Pending {
+    /// One-shot reply (Open/Feed/Cancel/Close/Export/Import).
+    Resp(mpsc::Sender<Result<Frame>>),
+    /// A generation stream; `session` is kept for the implicit Cancel
+    /// when the local receiver is dropped.
+    Stream { tx: mpsc::Sender<StreamItem>, session: u64 },
+}
+
+struct ClientInner {
+    peer: String,
+    writer: Mutex<std::io::BufWriter<Stream>>,
+    pending: Mutex<HashMap<u64, Pending>>,
+    next_req: AtomicU64,
+    alive: AtomicBool,
+}
+
+/// A connection to a worker or router. Cheap to clone (all clones
+/// share the socket and the reader thread); thread-safe — sessions
+/// opened from one client can be driven from many threads.
+#[derive(Clone)]
+pub struct Client {
+    inner: Arc<ClientInner>,
+}
+
+impl Client {
+    /// Connect and handshake. `addr` is `host:port` or `unix:/path`.
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = Stream::connect(addr)?;
+        let mut wstream = stream.try_clone()?;
+        {
+            use std::io::Write;
+            wire::write_frame(
+                &mut wstream,
+                &Frame::Hello { magic: wire::MAGIC, version: wire::PROTOCOL_VERSION },
+            )?;
+            wstream.flush()?;
+        }
+        let mut reader = std::io::BufReader::new(stream.try_clone()?);
+        match wire::read_frame(&mut reader)? {
+            Some(Frame::HelloAck { version }) if version == wire::PROTOCOL_VERSION => {}
+            Some(Frame::HelloAck { version }) => {
+                bail!("{addr}: server speaks protocol version {version}, this client speaks {}",
+                    wire::PROTOCOL_VERSION)
+            }
+            Some(Frame::Error { msg, .. }) => bail!("{addr}: handshake refused: {msg}"),
+            Some(f) => bail!("{addr}: unexpected handshake reply {}", f.name()),
+            None => bail!("{addr}: connection closed during handshake"),
+        }
+        let inner = Arc::new(ClientInner {
+            peer: addr.to_string(),
+            writer: Mutex::new(std::io::BufWriter::new(wstream)),
+            pending: Mutex::new(HashMap::new()),
+            next_req: AtomicU64::new(1),
+            alive: AtomicBool::new(true),
+        });
+        let inner_r = Arc::clone(&inner);
+        thread::Builder::new()
+            .name("stlt-client-reader".into())
+            .spawn(move || read_loop(inner_r, reader))
+            .expect("spawn client reader");
+        Ok(Client { inner })
+    }
+
+    /// False once the connection has failed (all operations error).
+    pub fn is_alive(&self) -> bool {
+        self.inner.alive.load(Ordering::Relaxed)
+    }
+
+    /// The address this client connected to.
+    pub fn peer(&self) -> &str {
+        &self.inner.peer
+    }
+
+    /// Open a session. `desired == 0` lets the server allocate an id;
+    /// nonzero opens that exact id (the router's migration contract).
+    pub fn open(&self, desired: u64) -> Result<RemoteSession> {
+        let req = self.fresh_req();
+        match self.request(req, Frame::Open { req, session: desired })? {
+            Frame::OpenOk { session, .. } => {
+                Ok(RemoteSession { client: self.clone(), session, closed: false })
+            }
+            f => bail!("unexpected reply to Open: {}", f.name()),
+        }
+    }
+
+    fn fresh_req(&self) -> u64 {
+        self.inner.next_req.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Send `frame` and block for its one-shot reply. `Error` frames
+    /// come back as `Err`.
+    fn request(&self, req: u64, frame: Frame) -> Result<Frame> {
+        let (tx, rx) = mpsc::channel();
+        self.inner.pending.lock().unwrap().insert(req, Pending::Resp(tx));
+        if let Err(e) = self.inner.send_frame(&frame) {
+            self.inner.pending.lock().unwrap().remove(&req);
+            return Err(e);
+        }
+        // The reader thread fails all pending ops when the connection
+        // dies — but only ones registered before its drain. If we
+        // registered after (send raced the death), clean up ourselves.
+        if !self.is_alive() && self.inner.pending.lock().unwrap().remove(&req).is_some() {
+            bail!("connection to {} lost", self.inner.peer);
+        }
+        match rx.recv() {
+            Ok(reply) => reply,
+            Err(_) => bail!("connection to {} lost", self.inner.peer),
+        }
+    }
+
+    /// Start a remote generation: registers the stream, sends the
+    /// frame, and returns a [`TokenStream`] fed by the reader thread.
+    fn start_generate(&self, session: u64, opts: GenOpts) -> Result<TokenStream> {
+        let req = self.fresh_req();
+        let (tx, rx) = mpsc::channel();
+        self.inner
+            .pending
+            .lock()
+            .unwrap()
+            .insert(req, Pending::Stream { tx, session });
+        if let Err(e) = self.inner.send_frame(&Frame::Generate { req, session, opts }) {
+            self.inner.pending.lock().unwrap().remove(&req);
+            return Err(e);
+        }
+        if !self.is_alive() {
+            // as in request(): cover the insert-after-drain race; if
+            // the reader already failed this entry the stream below
+            // yields that error
+            if self.inner.pending.lock().unwrap().remove(&req).is_some() {
+                bail!("connection to {} lost", self.inner.peer);
+            }
+        }
+        Ok(TokenStream::new(rx))
+    }
+}
+
+impl ClientInner {
+    fn send_frame(&self, frame: &Frame) -> Result<()> {
+        use std::io::Write;
+        if !self.alive.load(Ordering::Relaxed) {
+            bail!("connection to {} lost", self.peer);
+        }
+        let mut w = self.writer.lock().unwrap();
+        let r = wire::write_frame(&mut *w, frame).and_then(|()| w.flush().map_err(Into::into));
+        if r.is_err() {
+            self.alive.store(false, Ordering::Relaxed);
+        }
+        r
+    }
+
+    /// Route one server frame to its pending operation.
+    fn dispatch(&self, frame: Frame) {
+        match frame {
+            Frame::Start { req, evicted, fresh_carry } => {
+                self.stream_item(req, StreamItem::Start { evicted, fresh_carry }, false);
+            }
+            Frame::Token { req, token } => {
+                self.stream_item(req, StreamItem::Token(token), false);
+            }
+            Frame::End { req, outcome } => {
+                let item = match outcome {
+                    EndOutcome::Finished(r) => StreamItem::End(Ok(r)),
+                    EndOutcome::Failed(msg) => StreamItem::End(Err(anyhow!(msg))),
+                };
+                self.stream_item(req, item, true);
+            }
+            Frame::Error { req, msg } => {
+                match self.pending.lock().unwrap().remove(&req) {
+                    Some(Pending::Resp(tx)) => {
+                        let _ = tx.send(Err(anyhow!(msg)));
+                    }
+                    Some(Pending::Stream { tx, .. }) => {
+                        let _ = tx.send(StreamItem::End(Err(anyhow!(msg))));
+                    }
+                    // connection-level (req 0) or stale: log and move on
+                    None => crate::warnlog!("net", "server error ({}): {msg}", self.peer),
+                }
+            }
+            Frame::OpenOk { req, .. }
+            | Frame::FeedOk { req, .. }
+            | Frame::Carry { req, .. }
+            | Frame::ImportOk { req, .. }
+            | Frame::Ack { req } => {
+                if let Some(Pending::Resp(tx)) = self.pending.lock().unwrap().remove(&req) {
+                    let _ = tx.send(Ok(frame));
+                }
+            }
+            f => crate::warnlog!(
+                "net",
+                "unexpected frame {} from server {} (ignored)",
+                f.name(),
+                self.peer
+            ),
+        }
+    }
+
+    /// Deliver one stream item; `last` removes the pending entry. A
+    /// dead local receiver (dropped TokenStream) triggers the
+    /// implicit remote Cancel.
+    fn stream_item(&self, req: u64, item: StreamItem, last: bool) {
+        let mut cancel_session = None;
+        {
+            let mut pending = self.pending.lock().unwrap();
+            let dead = match pending.get(&req) {
+                Some(Pending::Stream { tx, .. }) => tx.send(item).is_err(),
+                // Resp entry or unknown req: stray frame, drop it
+                _ => return,
+            };
+            if dead || last {
+                if let Some(Pending::Stream { session, .. }) = pending.remove(&req) {
+                    if dead {
+                        cancel_session = Some(session);
+                    }
+                }
+            }
+        }
+        if let Some(session) = cancel_session {
+            // receiver gone mid-stream: mirror the local drop-cancels
+            // contract. Fresh req id; the Ack comes back unmatched and
+            // is dropped by dispatch.
+            let req = self.next_req.fetch_add(1, Ordering::Relaxed);
+            let _ = self.send_frame(&Frame::Cancel { req, session });
+        }
+    }
+}
+
+/// Reader thread: demultiplex until EOF/error, then fail everything.
+fn read_loop(inner: Arc<ClientInner>, mut reader: std::io::BufReader<Stream>) {
+    loop {
+        match wire::read_frame(&mut reader) {
+            Ok(Some(frame)) => inner.dispatch(frame),
+            Ok(None) => break,
+            Err(e) => {
+                if inner.alive.load(Ordering::Relaxed) {
+                    crate::debuglog!("net", "connection to {} failed: {e:#}", inner.peer);
+                }
+                break;
+            }
+        }
+    }
+    inner.alive.store(false, Ordering::Relaxed);
+    let mut pending = inner.pending.lock().unwrap();
+    for (_, p) in pending.drain() {
+        match p {
+            Pending::Resp(tx) => {
+                let _ = tx.send(Err(anyhow!("connection to {} lost", inner.peer)));
+            }
+            Pending::Stream { tx, .. } => {
+                let _ = tx.send(StreamItem::End(Err(anyhow!(
+                    "connection to {} lost mid-generation",
+                    inner.peer
+                ))));
+            }
+        }
+    }
+}
+
+/// A session living on a remote worker (or behind a router), driven
+/// through the [`Session`] trait exactly like a local
+/// [`crate::coordinator::SessionHandle`].
+pub struct RemoteSession {
+    client: Client,
+    session: u64,
+    closed: bool,
+}
+
+impl RemoteSession {
+    /// The session id (globally meaningful: it survives migration).
+    pub fn id(&self) -> u64 {
+        self.session
+    }
+}
+
+impl Session for RemoteSession {
+    fn session_id(&self) -> u64 {
+        self.session
+    }
+
+    fn feed(&self, tokens: Vec<i32>, count_loss: bool) -> Result<FeedResult> {
+        let req = self.client.fresh_req();
+        let frame = Frame::Feed { req, session: self.session, count_loss, tokens };
+        match self.client.request(req, frame)? {
+            Frame::FeedOk { nll_sum, count, evicted, .. } => {
+                Ok(FeedResult { nll_sum, count, evicted })
+            }
+            f => bail!("unexpected reply to Feed: {}", f.name()),
+        }
+    }
+
+    fn generate(&self, opts: GenOpts) -> Result<TokenStream> {
+        self.client.start_generate(self.session, opts)
+    }
+
+    fn cancel(&self) -> Result<()> {
+        let req = self.client.fresh_req();
+        match self.client.request(req, Frame::Cancel { req, session: self.session })? {
+            Frame::Ack { .. } => Ok(()),
+            f => bail!("unexpected reply to Cancel: {}", f.name()),
+        }
+    }
+
+    fn export_carry(&self) -> Result<CarrySnapshot> {
+        let req = self.client.fresh_req();
+        match self.client.request(req, Frame::ExportCarry { req, session: self.session })? {
+            Frame::Carry { snap, .. } => Ok(snap),
+            f => bail!("unexpected reply to ExportCarry: {}", f.name()),
+        }
+    }
+
+    fn import_carry(&self, snap: CarrySnapshot) -> Result<Option<u64>> {
+        let req = self.client.fresh_req();
+        let frame = Frame::ImportCarry { req, session: self.session, snap };
+        match self.client.request(req, frame)? {
+            Frame::ImportOk { evicted, .. } => Ok(evicted),
+            f => bail!("unexpected reply to ImportCarry: {}", f.name()),
+        }
+    }
+
+    fn close(&mut self) -> Result<()> {
+        if self.closed {
+            return Ok(());
+        }
+        self.closed = true;
+        let req = self.client.fresh_req();
+        match self.client.request(req, Frame::Close { req, session: self.session })? {
+            Frame::Ack { .. } => Ok(()),
+            f => bail!("unexpected reply to Close: {}", f.name()),
+        }
+    }
+}
+
+impl Drop for RemoteSession {
+    fn drop(&mut self) {
+        if !self.closed && self.client.is_alive() {
+            // fire-and-forget: the Ack comes back unmatched and is
+            // dropped; the worker releases the session either way
+            self.closed = true;
+            let req = self.client.fresh_req();
+            let _ = self
+                .client
+                .inner
+                .send_frame(&Frame::Close { req, session: self.session });
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! Layer-4 sharded serving: the multi-process story on top of the
+//! continuous-batching [`crate::coordinator::Server`].
+//!
+//! The STLT carry is O(S·d) per session — a few hundred KiB at e2e
+//! scale, perfectly serializable — so sessions are cheap to route
+//! between processes and *migrate live*, unlike an O(N·d) KV cache.
+//! This module turns that property into a deployment topology:
+//!
+//!   clients ──wire──> router (`stlt router`) ──wire──> N workers
+//!                       │ hash-routes session ids        (`stlt worker`)
+//!                       │ multiplexes connections         one Server +
+//!                       │ migrates carries on             StatePool each
+//!                       │ drain/rebalance
+//!
+//! * [`wire`]: the dependency-free length-prefixed binary frame
+//!   protocol (versioned handshake, request/stream/error frames,
+//!   carry snapshots as raw bits).
+//! * [`worker`]: serves a [`crate::coordinator::Server`] over the
+//!   protocol — per-connection reader + bounded writer, per-request
+//!   threads, and teardown that releases (and thereby cancels) every
+//!   session a dropped connection owned.
+//! * [`client`]: [`Client`] multiplexes one connection;
+//!   [`RemoteSession`] implements [`crate::coordinator::Session`], so
+//!   local and remote sessions are interchangeable.
+//! * [`router`]: [`Router`] fans sessions out across workers by id
+//!   hash and moves them between workers with
+//!   `ExportCarry`/`ImportCarry` (bitwise-identical continuations,
+//!   pinned by `tests/native_wire.rs`).
+//!
+//! Addresses are `host:port` (TCP, `TCP_NODELAY` — token streams are
+//! latency-bound) or `unix:/path/to.sock` on Unix.
+
+pub mod client;
+pub mod router;
+pub mod wire;
+pub mod worker;
+
+pub use client::{Client, RemoteSession};
+pub use router::{Router, RouterSession};
+pub use wire::{read_frame, write_frame, EndOutcome, Frame, MAGIC, MAX_FRAME, PROTOCOL_VERSION};
+pub use worker::{spawn_worker, WireServer};
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+
+use anyhow::{Context, Result};
+
+/// One bidirectional byte stream: TCP or (on Unix) a Unix-domain
+/// socket. `try_clone` splits it into independently-owned read/write
+/// halves (reader thread + writer thread).
+pub enum Stream {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Stream {
+    /// Connect to `addr`: `host:port` or `unix:/path`.
+    pub fn connect(addr: &str) -> Result<Stream> {
+        if let Some(path) = addr.strip_prefix("unix:") {
+            #[cfg(unix)]
+            {
+                let s = UnixStream::connect(path)
+                    .with_context(|| format!("connect to unix socket {path}"))?;
+                return Ok(Stream::Unix(s));
+            }
+            #[cfg(not(unix))]
+            anyhow::bail!("unix sockets unsupported on this platform: {path}");
+        }
+        let s = TcpStream::connect(addr).with_context(|| format!("connect to {addr}"))?;
+        // token streams are one small frame at a time; Nagle would add
+        // up to 40ms per token
+        let _ = s.set_nodelay(true);
+        Ok(Stream::Tcp(s))
+    }
+
+    pub fn try_clone(&self) -> Result<Stream> {
+        Ok(match self {
+            Stream::Tcp(s) => Stream::Tcp(s.try_clone()?),
+            #[cfg(unix)]
+            Stream::Unix(s) => Stream::Unix(s.try_clone()?),
+        })
+    }
+
+    /// Hard-close both halves (unblocks a reader in another thread).
+    pub fn shutdown(&self) {
+        match self {
+            Stream::Tcp(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+            #[cfg(unix)]
+            Stream::Unix(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// Listening socket for either address family.
+pub enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener),
+}
+
+impl Listener {
+    /// Bind `addr`: `host:port` (`:0` for an ephemeral port) or
+    /// `unix:/path` (a stale socket file is removed first).
+    pub fn bind(addr: &str) -> Result<Listener> {
+        if let Some(path) = addr.strip_prefix("unix:") {
+            #[cfg(unix)]
+            {
+                let _ = std::fs::remove_file(path);
+                let l = UnixListener::bind(path)
+                    .with_context(|| format!("bind unix socket {path}"))?;
+                return Ok(Listener::Unix(l));
+            }
+            #[cfg(not(unix))]
+            anyhow::bail!("unix sockets unsupported on this platform: {path}");
+        }
+        let l = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        Ok(Listener::Tcp(l))
+    }
+
+    /// The bound address in connectable form (resolves `:0`).
+    pub fn local_addr(&self) -> Result<String> {
+        Ok(match self {
+            Listener::Tcp(l) => l.local_addr()?.to_string(),
+            #[cfg(unix)]
+            Listener::Unix(l) => {
+                let a = l.local_addr()?;
+                match a.as_pathname() {
+                    Some(p) => format!("unix:{}", p.display()),
+                    None => "unix:?".to_string(),
+                }
+            }
+        })
+    }
+
+    pub fn set_nonblocking(&self, v: bool) -> Result<()> {
+        match self {
+            Listener::Tcp(l) => l.set_nonblocking(v)?,
+            #[cfg(unix)]
+            Listener::Unix(l) => l.set_nonblocking(v)?,
+        }
+        Ok(())
+    }
+
+    /// Accept one connection (respects `set_nonblocking`).
+    pub fn accept(&self) -> std::io::Result<Stream> {
+        match self {
+            Listener::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                let _ = s.set_nodelay(true);
+                Ok(Stream::Tcp(s))
+            }
+            #[cfg(unix)]
+            Listener::Unix(l) => {
+                let (s, _) = l.accept()?;
+                Ok(Stream::Unix(s))
+            }
+        }
+    }
+}

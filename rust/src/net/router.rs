@@ -1,0 +1,415 @@
+//! Session router: the sharding front-end over N wire workers.
+//!
+//! Sessions are placed on workers by a splitmix hash of the session
+//! id (stable across router restarts for explicitly-chosen ids) with
+//! linear probing past dead workers. Each session's placement is a
+//! mutex-guarded `(worker, RemoteSession)` pair: ops lock the
+//! placement for their duration, so a migration never races an
+//! in-flight feed/generate — it waits, then atomically swaps where
+//! the session lives.
+//!
+//! Live migration is the STLT-specific payoff: a session is its
+//! O(S·d) carry, so `migrate` = `ExportCarry` from worker A → `Open`
+//! the *same session id* on worker B → `ImportCarry` → swap
+//! placement. Preserving the id preserves the generation RNG seed
+//! (`rng_seed ^ session`), and carries cross the wire as raw f32
+//! bits, so a migrated session's continuation is bitwise identical to
+//! never having moved (pinned by `tests/native_wire.rs`).
+//!
+//! The router is usable two ways:
+//! * in-process: [`Router::open_session`] hands out
+//!   [`RouterSession`]s (the [`Session`] trait again);
+//! * as a process: [`Router::listen`] serves the same wire protocol
+//!   clients speak to workers — `stlt serve --connect` cannot tell a
+//!   router from a worker.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::{CarrySnapshot, FeedResult, GenOpts, Session, TokenStream};
+
+use super::client::{Client, RemoteSession};
+use super::worker::{spawn_node, Node, WireServer};
+
+/// Router-allocated session ids start here: disjoint from both
+/// `Server::open_session` ids (1<<32) and small hand-picked ids.
+const ROUTER_SESSION_BASE: u64 = 1 << 40;
+
+struct WorkerLink {
+    addr: String,
+    client: Client,
+}
+
+/// Where one session currently lives.
+struct Placement {
+    worker: usize,
+    remote: RemoteSession,
+}
+
+struct Routed {
+    /// Locked for the duration of every op on the session; migration
+    /// takes the same lock, so ops never straddle a move.
+    place: Mutex<Placement>,
+}
+
+pub(crate) struct RouterCore {
+    workers: Vec<WorkerLink>,
+    sessions: Mutex<HashMap<u64, Arc<Routed>>>,
+    next_session: AtomicU64,
+}
+
+/// The sharding front-end. Cheap to clone; all clones share worker
+/// connections and the placement table.
+#[derive(Clone)]
+pub struct Router {
+    core: Arc<RouterCore>,
+}
+
+impl Router {
+    /// Connect to every worker address (`host:port` or `unix:/path`).
+    /// All workers must be reachable at startup; losing one later
+    /// fails only the sessions placed on it.
+    pub fn connect(worker_addrs: &[String]) -> Result<Router> {
+        if worker_addrs.is_empty() {
+            bail!("router needs at least one worker address");
+        }
+        let mut workers = Vec::with_capacity(worker_addrs.len());
+        for addr in worker_addrs {
+            let client = Client::connect(addr)?;
+            workers.push(WorkerLink { addr: addr.clone(), client });
+        }
+        Ok(Router {
+            core: Arc::new(RouterCore {
+                workers,
+                sessions: Mutex::new(HashMap::new()),
+                next_session: AtomicU64::new(ROUTER_SESSION_BASE),
+            }),
+        })
+    }
+
+    /// Open a session on the worker its id hashes to.
+    pub fn open_session(&self) -> Result<RouterSession> {
+        let id = self.core.open(0)?;
+        Ok(RouterSession { core: Arc::clone(&self.core), id, closed: false })
+    }
+
+    /// Open a session with an explicit id (for resume-by-id flows).
+    pub fn open_session_with_id(&self, id: u64) -> Result<RouterSession> {
+        let id = self.core.open(id)?;
+        Ok(RouterSession { core: Arc::clone(&self.core), id, closed: false })
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.core.workers.len()
+    }
+
+    pub fn worker_addr(&self, worker: usize) -> Option<&str> {
+        self.core.workers.get(worker).map(|w| w.addr.as_str())
+    }
+
+    pub fn worker_alive(&self, worker: usize) -> bool {
+        self.core.workers.get(worker).is_some_and(|w| w.client.is_alive())
+    }
+
+    /// Which worker a session currently lives on.
+    pub fn worker_of(&self, session: u64) -> Option<usize> {
+        let routed = self.core.routed(session).ok()?;
+        let place = routed.place.lock().unwrap();
+        Some(place.worker)
+    }
+
+    /// Sessions currently placed on `worker`.
+    pub fn sessions_on(&self, worker: usize) -> Vec<u64> {
+        let sessions = self.core.sessions.lock().unwrap();
+        let mut out = Vec::new();
+        for (id, routed) in sessions.iter() {
+            if routed.place.lock().unwrap().worker == worker {
+                out.push(*id);
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// Total sessions the router is tracking.
+    pub fn session_count(&self) -> usize {
+        self.core.sessions.lock().unwrap().len()
+    }
+
+    /// Live-migrate one session to `to`. Blocks until in-flight ops on
+    /// the session finish (placement lock), then ships the carry.
+    /// No-op `Ok` if the session is already there.
+    pub fn migrate(&self, session: u64, to: usize) -> Result<()> {
+        self.core.migrate(session, to)
+    }
+
+    /// Drain `worker`: migrate every session off it, round-robin onto
+    /// the other alive workers. Returns (moved, failed).
+    pub fn drain(&self, worker: usize) -> (usize, usize) {
+        let ids = self.sessions_on(worker);
+        let targets: Vec<usize> = (0..self.core.workers.len())
+            .filter(|&w| w != worker && self.worker_alive(w))
+            .collect();
+        if targets.is_empty() {
+            return (0, ids.len());
+        }
+        let (mut moved, mut failed) = (0, 0);
+        for (i, id) in ids.iter().enumerate() {
+            match self.core.migrate(*id, targets[i % targets.len()]) {
+                Ok(()) => moved += 1,
+                Err(e) => {
+                    crate::warnlog!("router", "drain: session {id} failed to move: {e:#}");
+                    failed += 1;
+                }
+            }
+        }
+        (moved, failed)
+    }
+
+    /// One rebalance pass: move sessions from the most-loaded worker
+    /// to the least-loaded until they differ by at most one. Returns
+    /// sessions moved.
+    pub fn rebalance_once(&self) -> usize {
+        let n = self.core.workers.len();
+        if n < 2 {
+            return 0;
+        }
+        let mut moved = 0;
+        loop {
+            let loads: Vec<usize> = (0..n).map(|w| self.sessions_on(w).len()).collect();
+            let alive: Vec<usize> = (0..n).filter(|&w| self.worker_alive(w)).collect();
+            if alive.len() < 2 {
+                return moved;
+            }
+            let &max_w = alive.iter().max_by_key(|&&w| loads[w]).unwrap();
+            let &min_w = alive.iter().min_by_key(|&&w| loads[w]).unwrap();
+            if loads[max_w] <= loads[min_w] + 1 {
+                return moved;
+            }
+            let candidates = self.sessions_on(max_w);
+            let Some(&id) = candidates.first() else { return moved };
+            match self.core.migrate(id, min_w) {
+                Ok(()) => moved += 1,
+                Err(_) => return moved, // likely in-flight; try next pass
+            }
+        }
+    }
+
+    /// Serve the wire protocol (the same one workers speak) at
+    /// `listen`; clients drive routed sessions transparently.
+    pub fn listen(&self, listen: &str) -> Result<WireServer> {
+        let node: Arc<dyn Node> = Arc::clone(&self.core) as Arc<dyn Node>;
+        spawn_node(node, listen, "router")
+    }
+}
+
+impl RouterCore {
+    /// splitmix64 finalizer: uncorrelated worker choice from
+    /// sequential session ids.
+    fn hash_worker(&self, session: u64) -> usize {
+        let mut z = session.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        (z % self.workers.len() as u64) as usize
+    }
+
+    /// Preferred worker for `session`, probing past dead links.
+    fn pick(&self, session: u64) -> Result<usize> {
+        let n = self.workers.len();
+        let start = self.hash_worker(session);
+        for i in 0..n {
+            let w = (start + i) % n;
+            if self.workers[w].client.is_alive() {
+                return Ok(w);
+            }
+        }
+        bail!("no alive workers")
+    }
+
+    fn routed(&self, session: u64) -> Result<Arc<Routed>> {
+        self.sessions
+            .lock()
+            .unwrap()
+            .get(&session)
+            .cloned()
+            .ok_or_else(|| anyhow!("session {session} is not open on this router"))
+    }
+
+    fn open(&self, desired: u64) -> Result<u64> {
+        let id = if desired == 0 {
+            self.next_session.fetch_add(1, Ordering::Relaxed)
+        } else {
+            desired
+        };
+        let worker = self.pick(id)?;
+        // Reserve the id before the worker round-trip so two clients
+        // opening the same id race on the map, not on the worker.
+        {
+            let mut sessions = self.sessions.lock().unwrap();
+            if sessions.contains_key(&id) {
+                bail!("session {id} is already open on this router");
+            }
+            // placeholder-free reservation: insert after the remote
+            // open would be racy, so hold the map lock across it only
+            // for explicit ids (allocated ids cannot collide)
+        }
+        let remote = self.workers[worker].client.open(id)?;
+        let routed = Arc::new(Routed { place: Mutex::new(Placement { worker, remote }) });
+        let mut sessions = self.sessions.lock().unwrap();
+        if sessions.contains_key(&id) {
+            // two explicit opens raced; the remote session drops (and
+            // closes worker-side) harmlessly
+            bail!("session {id} is already open on this router");
+        }
+        sessions.insert(id, routed);
+        Ok(id)
+    }
+
+    fn close(&self, session: u64) -> Result<()> {
+        let routed = match self.sessions.lock().unwrap().remove(&session) {
+            Some(r) => r,
+            None => return Ok(()),
+        };
+        let mut place = routed.place.lock().unwrap();
+        place.remote.close()
+    }
+
+    fn migrate(&self, session: u64, to: usize) -> Result<()> {
+        if to >= self.workers.len() {
+            bail!("no such worker {to}");
+        }
+        if !self.workers[to].client.is_alive() {
+            bail!("worker {to} ({}) is down", self.workers[to].addr);
+        }
+        let routed = self.routed(session)?;
+        let mut place = routed.place.lock().unwrap();
+        if place.worker == to {
+            return Ok(());
+        }
+        // Export waits for nothing: the placement lock means no op of
+        // ours is in flight, and the worker refuses if some *other*
+        // path holds the carry.
+        let snap = place.remote.export_carry()?;
+        // Same session id on the destination — the RNG-seed coupling
+        // (rng_seed ^ session) is what keeps continuations bitwise.
+        let mut fresh = self.workers[to].client.open(session)?;
+        if let Err(e) = fresh.import_carry(snap) {
+            let _ = fresh.close();
+            return Err(e.context(format!("importing carry on worker {to}")));
+        }
+        let old_worker = place.worker;
+        let mut old = std::mem::replace(&mut *place, Placement { worker: to, remote: fresh });
+        // Best-effort: the source may be mid-death during a drain.
+        if let Err(e) = old.remote.close() {
+            crate::debuglog!(
+                "router",
+                "migrate: closing session {session} on worker {old_worker} failed: {e:#}"
+            );
+        }
+        Ok(())
+    }
+}
+
+// The router's wire face: the same serve_conn loop workers use, over
+// routed sessions. Open allocates router ids; everything else locks
+// the placement and forwards.
+impl Node for RouterCore {
+    fn node_open(&self, desired: u64) -> Result<u64> {
+        self.open(desired)
+    }
+
+    fn node_feed(&self, id: u64, tokens: Vec<i32>, count_loss: bool) -> Result<FeedResult> {
+        let routed = self.routed(id)?;
+        let place = routed.place.lock().unwrap();
+        place.remote.feed(tokens, count_loss)
+    }
+
+    fn node_generate(&self, id: u64, opts: GenOpts) -> Result<TokenStream> {
+        let routed = self.routed(id)?;
+        let place = routed.place.lock().unwrap();
+        place.remote.generate(opts)
+    }
+
+    fn node_cancel(&self, id: u64) -> Result<()> {
+        let routed = self.routed(id)?;
+        let place = routed.place.lock().unwrap();
+        place.remote.cancel()
+    }
+
+    fn node_close(&self, id: u64) -> Result<()> {
+        self.close(id)
+    }
+
+    fn node_export(&self, id: u64) -> Result<CarrySnapshot> {
+        let routed = self.routed(id)?;
+        let place = routed.place.lock().unwrap();
+        place.remote.export_carry()
+    }
+
+    fn node_import(&self, id: u64, snap: CarrySnapshot) -> Result<Option<u64>> {
+        let routed = self.routed(id)?;
+        let place = routed.place.lock().unwrap();
+        place.remote.import_carry(snap)
+    }
+}
+
+/// A routed session handle: the [`Session`] trait over whichever
+/// worker the router currently places the session on. Migration is
+/// transparent — ops serialize against it via the placement lock.
+pub struct RouterSession {
+    core: Arc<RouterCore>,
+    id: u64,
+    closed: bool,
+}
+
+impl RouterSession {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+}
+
+impl Session for RouterSession {
+    fn session_id(&self) -> u64 {
+        self.id
+    }
+
+    fn feed(&self, tokens: Vec<i32>, count_loss: bool) -> Result<FeedResult> {
+        self.core.node_feed(self.id, tokens, count_loss)
+    }
+
+    fn generate(&self, opts: GenOpts) -> Result<TokenStream> {
+        self.core.node_generate(self.id, opts)
+    }
+
+    fn cancel(&self) -> Result<()> {
+        self.core.node_cancel(self.id)
+    }
+
+    fn export_carry(&self) -> Result<CarrySnapshot> {
+        self.core.node_export(self.id)
+    }
+
+    fn import_carry(&self, snap: CarrySnapshot) -> Result<Option<u64>> {
+        self.core.node_import(self.id, snap)
+    }
+
+    fn close(&mut self) -> Result<()> {
+        if self.closed {
+            return Ok(());
+        }
+        self.closed = true;
+        self.core.close(self.id)
+    }
+}
+
+impl Drop for RouterSession {
+    fn drop(&mut self) {
+        if !self.closed {
+            let _ = self.core.close(self.id);
+        }
+    }
+}

@@ -1,0 +1,744 @@
+//! The STLT wire protocol: dependency-free length-prefixed binary
+//! frames mirroring the [`crate::coordinator::Session`] seam.
+//!
+//! Framing (all integers little-endian):
+//!
+//!   u32 payload_len | u8 tag | payload...
+//!
+//! Requests carry a client-chosen `req` id (u64) so one connection
+//! multiplexes many sessions/operations; every reply (including each
+//! frame of a generation stream) echoes it. `req` ids only need to be
+//! unique among a connection's *in-flight* operations.
+//!
+//! Connection handshake: the client sends `Hello { magic, version }`
+//! first; the server answers `HelloAck { version }` on a match or a
+//! connection-level `Error { req: 0 }` (then closes) on a mismatch —
+//! version negotiation is exact-match at protocol version 1.
+//!
+//! Stream frames (`Start`/`Token`/`End`) relay the model thread's
+//! stream items 1:1, so a remote [`crate::net::RemoteSession`] sees
+//! the same eviction/fresh-carry/finish metadata as a local
+//! [`crate::coordinator::SessionHandle`]. `Feed` replies carry the
+//! NLL sum/count as raw f64 bits — perplexity accounting survives the
+//! wire bitwise.
+//!
+//! `ExportCarry`/`ImportCarry` ship a session's O(S·d)
+//! [`CarrySnapshot`] for live migration; f32 carry values are encoded
+//! as raw bits (bitwise round-trip, pinned by test).
+
+use std::io::{Read, Write};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::{CarrySnapshot, FinishReason, GenOpts, Sampling};
+
+/// "STLT" as a little-endian u32 (bytes `53 54 4C 54` on the wire).
+pub const MAGIC: u32 = 0x544C_5453;
+/// Exact-match protocol version (bump on any frame-layout change).
+pub const PROTOCOL_VERSION: u16 = 1;
+/// Hard ceiling on one frame's payload (64 MiB — comfortably above
+/// any e2e-scale carry snapshot, far below an allocation bomb).
+pub const MAX_FRAME: usize = 64 << 20;
+
+/// One protocol frame. `C->S` frames are client requests; `S->C`
+/// frames are replies or server-pushed stream items.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    // -- handshake ----------------------------------------------------
+    /// C->S, first frame on every connection.
+    Hello { magic: u32, version: u16 },
+    /// S->C, handshake accepted.
+    HelloAck { version: u16 },
+
+    // -- requests (C->S) ----------------------------------------------
+    /// Open a session. `session == 0` asks the server to allocate an
+    /// id; a nonzero id opens that exact session (router-chosen ids
+    /// survive migration this way). Reply: `OpenOk` | `Error`.
+    Open { req: u64, session: u64 },
+    /// Stream document tokens in. Reply: `FeedOk` | `Error`.
+    Feed { req: u64, session: u64, count_loss: bool, tokens: Vec<i32> },
+    /// Start a generation. Reply: `Start`, `Token`*, `End` (or a bare
+    /// `Error` if the generation could not start).
+    Generate { req: u64, session: u64, opts: GenOpts },
+    /// Cancel the session's in-flight generation. Reply: `Ack`.
+    Cancel { req: u64, session: u64 },
+    /// Release the session's state. Reply: `Ack` | `Error`.
+    Close { req: u64, session: u64 },
+    /// Export the session's carry. Reply: `Carry` | `Error`.
+    ExportCarry { req: u64, session: u64 },
+    /// Install an exported carry. Reply: `ImportOk` | `Error`.
+    ImportCarry { req: u64, session: u64, snap: CarrySnapshot },
+
+    // -- replies / stream (S->C) --------------------------------------
+    /// Session opened (echoes the allocated or requested id).
+    OpenOk { req: u64, session: u64 },
+    /// Feed consumed; f64 NLL accounting crosses bitwise.
+    FeedOk { req: u64, nll_sum: f64, count: f64, evicted: Option<u64> },
+    /// Generation bound to its session state (before the first token).
+    Start { req: u64, evicted: Option<u64>, fresh_carry: bool },
+    /// One generated token.
+    Token { req: u64, token: i32 },
+    /// Generation over: how it finished, or why it failed.
+    End { req: u64, outcome: EndOutcome },
+    /// Exported carry snapshot.
+    Carry { req: u64, snap: CarrySnapshot },
+    /// Carry imported; `evicted` names any LRU victim.
+    ImportOk { req: u64, evicted: Option<u64> },
+    /// Generic success reply (Cancel/Close).
+    Ack { req: u64 },
+    /// Operation failed (`req` echoes the request) or, with `req == 0`,
+    /// a connection-level failure (e.g. handshake refusal).
+    Error { req: u64, msg: String },
+}
+
+/// How a remote generation ended: a [`FinishReason`] on success, or
+/// the server-side error message.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EndOutcome {
+    Finished(FinishReason),
+    Failed(String),
+}
+
+// Tag bytes: requests in 0x0_, replies/stream frames in 0x8_.
+const TAG_HELLO: u8 = 0x01;
+const TAG_OPEN: u8 = 0x02;
+const TAG_FEED: u8 = 0x03;
+const TAG_GENERATE: u8 = 0x04;
+const TAG_CANCEL: u8 = 0x05;
+const TAG_CLOSE: u8 = 0x06;
+const TAG_EXPORT: u8 = 0x07;
+const TAG_IMPORT: u8 = 0x08;
+const TAG_HELLO_ACK: u8 = 0x81;
+const TAG_OPEN_OK: u8 = 0x82;
+const TAG_FEED_OK: u8 = 0x83;
+const TAG_START: u8 = 0x84;
+const TAG_TOKEN: u8 = 0x85;
+const TAG_END: u8 = 0x86;
+const TAG_CARRY: u8 = 0x87;
+const TAG_IMPORT_OK: u8 = 0x88;
+const TAG_ACK: u8 = 0x89;
+const TAG_ERROR: u8 = 0xFF;
+
+impl Frame {
+    /// Human-readable frame name for error messages.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Frame::Hello { .. } => "Hello",
+            Frame::HelloAck { .. } => "HelloAck",
+            Frame::Open { .. } => "Open",
+            Frame::Feed { .. } => "Feed",
+            Frame::Generate { .. } => "Generate",
+            Frame::Cancel { .. } => "Cancel",
+            Frame::Close { .. } => "Close",
+            Frame::ExportCarry { .. } => "ExportCarry",
+            Frame::ImportCarry { .. } => "ImportCarry",
+            Frame::OpenOk { .. } => "OpenOk",
+            Frame::FeedOk { .. } => "FeedOk",
+            Frame::Start { .. } => "Start",
+            Frame::Token { .. } => "Token",
+            Frame::End { .. } => "End",
+            Frame::Carry { .. } => "Carry",
+            Frame::ImportOk { .. } => "ImportOk",
+            Frame::Ack { .. } => "Ack",
+            Frame::Error { .. } => "Error",
+        }
+    }
+
+    /// Serialize the payload (tag byte + fields, no length prefix).
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            Frame::Hello { magic, version } => {
+                out.push(TAG_HELLO);
+                put_u32(out, *magic);
+                put_u16(out, *version);
+            }
+            Frame::HelloAck { version } => {
+                out.push(TAG_HELLO_ACK);
+                put_u16(out, *version);
+            }
+            Frame::Open { req, session } => {
+                out.push(TAG_OPEN);
+                put_u64(out, *req);
+                put_u64(out, *session);
+            }
+            Frame::Feed { req, session, count_loss, tokens } => {
+                out.push(TAG_FEED);
+                put_u64(out, *req);
+                put_u64(out, *session);
+                out.push(u8::from(*count_loss));
+                put_vec_i32(out, tokens);
+            }
+            Frame::Generate { req, session, opts } => {
+                out.push(TAG_GENERATE);
+                put_u64(out, *req);
+                put_u64(out, *session);
+                put_gen_opts(out, opts);
+            }
+            Frame::Cancel { req, session } => {
+                out.push(TAG_CANCEL);
+                put_u64(out, *req);
+                put_u64(out, *session);
+            }
+            Frame::Close { req, session } => {
+                out.push(TAG_CLOSE);
+                put_u64(out, *req);
+                put_u64(out, *session);
+            }
+            Frame::ExportCarry { req, session } => {
+                out.push(TAG_EXPORT);
+                put_u64(out, *req);
+                put_u64(out, *session);
+            }
+            Frame::ImportCarry { req, session, snap } => {
+                out.push(TAG_IMPORT);
+                put_u64(out, *req);
+                put_u64(out, *session);
+                put_snapshot(out, snap);
+            }
+            Frame::OpenOk { req, session } => {
+                out.push(TAG_OPEN_OK);
+                put_u64(out, *req);
+                put_u64(out, *session);
+            }
+            Frame::FeedOk { req, nll_sum, count, evicted } => {
+                out.push(TAG_FEED_OK);
+                put_u64(out, *req);
+                // raw bits: f64 NLL accounting crosses the wire bitwise
+                put_u64(out, nll_sum.to_bits());
+                put_u64(out, count.to_bits());
+                put_opt_u64(out, *evicted);
+            }
+            Frame::Start { req, evicted, fresh_carry } => {
+                out.push(TAG_START);
+                put_u64(out, *req);
+                put_opt_u64(out, *evicted);
+                out.push(u8::from(*fresh_carry));
+            }
+            Frame::Token { req, token } => {
+                out.push(TAG_TOKEN);
+                put_u64(out, *req);
+                put_u32(out, *token as u32);
+            }
+            Frame::End { req, outcome } => {
+                out.push(TAG_END);
+                put_u64(out, *req);
+                match outcome {
+                    EndOutcome::Finished(r) => out.push(match r {
+                        FinishReason::MaxTokens => 0,
+                        FinishReason::Stop => 1,
+                        FinishReason::Cancelled => 2,
+                    }),
+                    EndOutcome::Failed(msg) => {
+                        out.push(3);
+                        put_str(out, msg);
+                    }
+                }
+            }
+            Frame::Carry { req, snap } => {
+                out.push(TAG_CARRY);
+                put_u64(out, *req);
+                put_snapshot(out, snap);
+            }
+            Frame::ImportOk { req, evicted } => {
+                out.push(TAG_IMPORT_OK);
+                put_u64(out, *req);
+                put_opt_u64(out, *evicted);
+            }
+            Frame::Ack { req } => {
+                out.push(TAG_ACK);
+                put_u64(out, *req);
+            }
+            Frame::Error { req, msg } => {
+                out.push(TAG_ERROR);
+                put_u64(out, *req);
+                put_str(out, msg);
+            }
+        }
+    }
+
+    /// Decode one payload (as framed by [`write_frame`]). Strict:
+    /// trailing bytes, truncated fields, bad tags and non-UTF-8
+    /// strings are all errors, never panics.
+    pub fn decode(payload: &[u8]) -> Result<Frame> {
+        let mut c = Cursor { buf: payload, off: 0 };
+        let tag = c.u8()?;
+        let frame = match tag {
+            TAG_HELLO => Frame::Hello { magic: c.u32()?, version: c.u16()? },
+            TAG_HELLO_ACK => Frame::HelloAck { version: c.u16()? },
+            TAG_OPEN => Frame::Open { req: c.u64()?, session: c.u64()? },
+            TAG_FEED => Frame::Feed {
+                req: c.u64()?,
+                session: c.u64()?,
+                count_loss: c.bool()?,
+                tokens: c.vec_i32()?,
+            },
+            TAG_GENERATE => Frame::Generate {
+                req: c.u64()?,
+                session: c.u64()?,
+                opts: c.gen_opts()?,
+            },
+            TAG_CANCEL => Frame::Cancel { req: c.u64()?, session: c.u64()? },
+            TAG_CLOSE => Frame::Close { req: c.u64()?, session: c.u64()? },
+            TAG_EXPORT => Frame::ExportCarry { req: c.u64()?, session: c.u64()? },
+            TAG_IMPORT => Frame::ImportCarry {
+                req: c.u64()?,
+                session: c.u64()?,
+                snap: c.snapshot()?,
+            },
+            TAG_OPEN_OK => Frame::OpenOk { req: c.u64()?, session: c.u64()? },
+            TAG_FEED_OK => Frame::FeedOk {
+                req: c.u64()?,
+                nll_sum: f64::from_bits(c.u64()?),
+                count: f64::from_bits(c.u64()?),
+                evicted: c.opt_u64()?,
+            },
+            TAG_START => Frame::Start {
+                req: c.u64()?,
+                evicted: c.opt_u64()?,
+                fresh_carry: c.bool()?,
+            },
+            TAG_TOKEN => Frame::Token { req: c.u64()?, token: c.u32()? as i32 },
+            TAG_END => {
+                let req = c.u64()?;
+                let outcome = match c.u8()? {
+                    0 => EndOutcome::Finished(FinishReason::MaxTokens),
+                    1 => EndOutcome::Finished(FinishReason::Stop),
+                    2 => EndOutcome::Finished(FinishReason::Cancelled),
+                    3 => EndOutcome::Failed(c.string()?),
+                    x => bail!("bad End status byte {x}"),
+                };
+                Frame::End { req, outcome }
+            }
+            TAG_CARRY => Frame::Carry { req: c.u64()?, snap: c.snapshot()? },
+            TAG_IMPORT_OK => Frame::ImportOk { req: c.u64()?, evicted: c.opt_u64()? },
+            TAG_ACK => Frame::Ack { req: c.u64()? },
+            TAG_ERROR => Frame::Error { req: c.u64()?, msg: c.string()? },
+            x => bail!("unknown frame tag 0x{x:02x}"),
+        };
+        c.finish()?;
+        Ok(frame)
+    }
+}
+
+/// Write one length-prefixed frame. The caller flushes (the worker's
+/// writer thread coalesces bursts into one flush).
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<()> {
+    let mut payload = Vec::with_capacity(64);
+    frame.encode(&mut payload);
+    if payload.len() > MAX_FRAME {
+        bail!("frame {} exceeds MAX_FRAME ({} > {MAX_FRAME})", frame.name(), payload.len());
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(&payload)?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame. `Ok(None)` on clean EOF (peer
+/// closed between frames); EOF mid-frame is an error.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>> {
+    let mut len4 = [0u8; 4];
+    if !read_full_or_eof(r, &mut len4)? {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(len4) as usize;
+    if len == 0 || len > MAX_FRAME {
+        bail!("bad frame length {len} (max {MAX_FRAME})");
+    }
+    let mut payload = vec![0u8; len];
+    if !read_full_or_eof(r, &mut payload)? {
+        bail!("connection closed mid-frame (wanted {len} payload bytes)");
+    }
+    Frame::decode(&payload).map(Some)
+}
+
+/// Fill `buf` completely. `Ok(false)` iff EOF arrived before the
+/// first byte; EOF after a partial read is an error.
+fn read_full_or_eof<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<bool> {
+    let mut off = 0;
+    while off < buf.len() {
+        match r.read(&mut buf[off..]) {
+            Ok(0) => {
+                if off == 0 {
+                    return Ok(false);
+                }
+                bail!("connection closed mid-frame ({off}/{} bytes)", buf.len());
+            }
+            Ok(n) => off += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(true)
+}
+
+// -- field encoders ---------------------------------------------------
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_opt_u64(out: &mut Vec<u8>, v: Option<u64>) {
+    match v {
+        None => out.push(0),
+        Some(x) => {
+            out.push(1);
+            put_u64(out, x);
+        }
+    }
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_vec_i32(out: &mut Vec<u8>, v: &[i32]) {
+    put_u32(out, v.len() as u32);
+    for &x in v {
+        put_u32(out, x as u32);
+    }
+}
+
+fn put_vec_f32(out: &mut Vec<u8>, v: &[f32]) {
+    put_u32(out, v.len() as u32);
+    for &x in v {
+        // raw bits: carries must round-trip bitwise
+        put_u32(out, x.to_bits());
+    }
+}
+
+fn put_shape(out: &mut Vec<u8>, shape: &[usize]) {
+    out.push(shape.len() as u8);
+    for &d in shape {
+        put_u32(out, d as u32);
+    }
+}
+
+fn put_gen_opts(out: &mut Vec<u8>, o: &GenOpts) {
+    put_u32(out, o.seed_token as u32);
+    put_u64(out, o.max_tokens as u64);
+    match o.stop {
+        None => out.push(0),
+        Some(s) => {
+            out.push(1);
+            put_u32(out, s as u32);
+        }
+    }
+    match o.sampling {
+        Sampling::Greedy => out.push(0),
+        Sampling::Temperature(t) => {
+            out.push(1);
+            put_u32(out, t.to_bits());
+        }
+        Sampling::TopK(k, t) => {
+            out.push(2);
+            put_u32(out, k as u32);
+            put_u32(out, t.to_bits());
+        }
+        Sampling::TopP(p, t) => {
+            out.push(3);
+            put_u32(out, p.to_bits());
+            put_u32(out, t.to_bits());
+        }
+    }
+    put_u64(out, o.rng_seed);
+}
+
+fn put_snapshot(out: &mut Vec<u8>, s: &CarrySnapshot) {
+    put_shape(out, &s.l_shape);
+    put_shape(out, &s.u_shape);
+    put_vec_f32(out, &s.l);
+    put_vec_f32(out, &s.u);
+    put_u64(out, s.tokens_seen);
+}
+
+// -- strict decoder ---------------------------------------------------
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() - self.off < n {
+            bail!(
+                "truncated frame: wanted {n} bytes at offset {}, payload is {}",
+                self.off,
+                self.buf.len()
+            );
+        }
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn bool(&mut self) -> Result<bool> {
+        Ok(self.u8()? != 0)
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn opt_u64(&mut self) -> Result<Option<u64>> {
+        match self.u8()? {
+            0 => Ok(None),
+            _ => Ok(Some(self.u64()?)),
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| anyhow!("non-UTF-8 string in frame"))
+    }
+
+    /// Element count, bounds-checked against the remaining payload
+    /// *before* allocating (a forged count cannot force a huge alloc).
+    fn count(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        if (self.buf.len() - self.off) / elem_bytes < n {
+            bail!("frame claims {n} elements but only {} bytes remain", self.buf.len() - self.off);
+        }
+        Ok(n)
+    }
+
+    fn vec_i32(&mut self) -> Result<Vec<i32>> {
+        let n = self.count(4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.u32()? as i32);
+        }
+        Ok(v)
+    }
+
+    fn vec_f32(&mut self) -> Result<Vec<f32>> {
+        let n = self.count(4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(f32::from_bits(self.u32()?));
+        }
+        Ok(v)
+    }
+
+    fn shape(&mut self) -> Result<Vec<usize>> {
+        let n = self.u8()? as usize;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.u32()? as usize);
+        }
+        Ok(v)
+    }
+
+    fn gen_opts(&mut self) -> Result<GenOpts> {
+        let seed_token = self.u32()? as i32;
+        let max_tokens = self.u64()? as usize;
+        let stop = match self.u8()? {
+            0 => None,
+            _ => Some(self.u32()? as i32),
+        };
+        let sampling = match self.u8()? {
+            0 => Sampling::Greedy,
+            1 => Sampling::Temperature(f32::from_bits(self.u32()?)),
+            2 => Sampling::TopK(self.u32()? as usize, f32::from_bits(self.u32()?)),
+            3 => Sampling::TopP(f32::from_bits(self.u32()?), f32::from_bits(self.u32()?)),
+            x => bail!("bad sampling tag {x}"),
+        };
+        let rng_seed = self.u64()?;
+        Ok(GenOpts { seed_token, max_tokens, stop, sampling, rng_seed })
+    }
+
+    fn snapshot(&mut self) -> Result<CarrySnapshot> {
+        let l_shape = self.shape()?;
+        let u_shape = self.shape()?;
+        let l = self.vec_f32()?;
+        let u = self.vec_f32()?;
+        let tokens_seen = self.u64()?;
+        Ok(CarrySnapshot { l, u, l_shape, u_shape, tokens_seen })
+    }
+
+    fn finish(&self) -> Result<()> {
+        if self.off != self.buf.len() {
+            bail!("{} trailing bytes after frame payload", self.buf.len() - self.off);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(f: Frame) {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &f).unwrap();
+        let got = read_frame(&mut buf.as_slice()).unwrap().unwrap();
+        assert_eq!(got, f, "frame {} did not round-trip", got.name());
+    }
+
+    fn snap() -> CarrySnapshot {
+        CarrySnapshot {
+            l: vec![1.5, -0.0, f32::MIN_POSITIVE, 3.25e-7],
+            u: vec![0.1; 8],
+            l_shape: vec![2, 2],
+            u_shape: vec![2, 2, 2],
+            tokens_seen: 9001,
+        }
+    }
+
+    #[test]
+    fn all_frames_round_trip() {
+        roundtrip(Frame::Hello { magic: MAGIC, version: PROTOCOL_VERSION });
+        roundtrip(Frame::HelloAck { version: PROTOCOL_VERSION });
+        roundtrip(Frame::Open { req: 1, session: 0 });
+        roundtrip(Frame::Open { req: 2, session: 77 });
+        roundtrip(Frame::Feed { req: 3, session: 77, count_loss: true, tokens: vec![1, -2, 3] });
+        roundtrip(Frame::Feed { req: 4, session: 77, count_loss: false, tokens: vec![] });
+        roundtrip(Frame::Generate {
+            req: 5,
+            session: 77,
+            opts: GenOpts {
+                seed_token: 42,
+                max_tokens: 128,
+                stop: Some(3),
+                sampling: Sampling::TopK(40, 0.8),
+                rng_seed: 0xDEAD_BEEF,
+            },
+        });
+        roundtrip(Frame::Generate {
+            req: 6,
+            session: 77,
+            opts: GenOpts {
+                sampling: Sampling::TopP(0.9, 1.0),
+                ..GenOpts::default()
+            },
+        });
+        roundtrip(Frame::Cancel { req: 7, session: 77 });
+        roundtrip(Frame::Close { req: 8, session: 77 });
+        roundtrip(Frame::ExportCarry { req: 9, session: 77 });
+        roundtrip(Frame::ImportCarry { req: 10, session: 77, snap: snap() });
+        roundtrip(Frame::OpenOk { req: 11, session: 1 << 40 });
+        roundtrip(Frame::FeedOk { req: 12, nll_sum: 1234.5678, count: 64.0, evicted: Some(5) });
+        roundtrip(Frame::FeedOk { req: 13, nll_sum: 0.0, count: 0.0, evicted: None });
+        roundtrip(Frame::Start { req: 14, evicted: Some(9), fresh_carry: true });
+        roundtrip(Frame::Token { req: 15, token: -1 });
+        roundtrip(Frame::End { req: 16, outcome: EndOutcome::Finished(FinishReason::MaxTokens) });
+        roundtrip(Frame::End { req: 17, outcome: EndOutcome::Finished(FinishReason::Stop) });
+        roundtrip(Frame::End { req: 18, outcome: EndOutcome::Finished(FinishReason::Cancelled) });
+        roundtrip(Frame::End { req: 19, outcome: EndOutcome::Failed("boom: §µ".into()) });
+        roundtrip(Frame::Carry { req: 20, snap: snap() });
+        roundtrip(Frame::ImportOk { req: 21, evicted: None });
+        roundtrip(Frame::Ack { req: 22 });
+        roundtrip(Frame::Error { req: 0, msg: "handshake: version 2 != 1".into() });
+    }
+
+    #[test]
+    fn f64_nll_bits_survive_the_wire() {
+        // a value with no short decimal representation
+        let nll = 123.456789f64.ln() * 7.0 / 3.0;
+        let f = Frame::FeedOk { req: 1, nll_sum: nll, count: 65.0, evicted: None };
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &f).unwrap();
+        match read_frame(&mut buf.as_slice()).unwrap().unwrap() {
+            Frame::FeedOk { nll_sum, count, .. } => {
+                assert_eq!(nll_sum.to_bits(), nll.to_bits());
+                assert_eq!(count.to_bits(), 65.0f64.to_bits());
+            }
+            f => panic!("wrong frame {}", f.name()),
+        }
+    }
+
+    #[test]
+    fn f32_carry_bits_survive_the_wire() {
+        let mut s = snap();
+        // exercise non-finite and denormal payloads
+        s.l = vec![f32::NAN, f32::INFINITY, -0.0, 1e-40];
+        let f = Frame::Carry { req: 1, snap: s.clone() };
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &f).unwrap();
+        match read_frame(&mut buf.as_slice()).unwrap().unwrap() {
+            Frame::Carry { snap: got, .. } => {
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&got.l), bits(&s.l));
+                assert_eq!(bits(&got.u), bits(&s.u));
+            }
+            f => panic!("wrong frame {}", f.name()),
+        }
+    }
+
+    #[test]
+    fn clean_eof_is_none_partial_is_error() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Ack { req: 1 }).unwrap();
+        // clean EOF before any byte
+        assert!(read_frame(&mut (&buf[..0])).unwrap().is_none());
+        // EOF inside the length prefix / payload
+        assert!(read_frame(&mut (&buf[..2])).is_err());
+        assert!(read_frame(&mut (&buf[..buf.len() - 1])).is_err());
+    }
+
+    #[test]
+    fn malformed_frames_error_not_panic() {
+        // zero / oversized length prefix
+        assert!(read_frame(&mut (&[0u8, 0, 0, 0][..])).is_err());
+        let huge = (MAX_FRAME as u32 + 1).to_le_bytes();
+        assert!(read_frame(&mut (&huge[..])).is_err());
+        // unknown tag
+        assert!(Frame::decode(&[0x42]).is_err());
+        // trailing garbage
+        let mut p = Vec::new();
+        Frame::Ack { req: 1 }.encode(&mut p);
+        p.push(0);
+        assert!(Frame::decode(&p).is_err());
+        // truncated field
+        let mut p2 = Vec::new();
+        Frame::Ack { req: 1 }.encode(&mut p2);
+        assert!(Frame::decode(&p2[..p2.len() - 1]).is_err());
+        // forged element count larger than the payload
+        let mut p3 = vec![TAG_FEED];
+        p3.extend_from_slice(&1u64.to_le_bytes());
+        p3.extend_from_slice(&2u64.to_le_bytes());
+        p3.push(0);
+        p3.extend_from_slice(&u32::MAX.to_le_bytes()); // claims 4B tokens
+        assert!(Frame::decode(&p3).is_err());
+        // bad End status byte
+        let mut p4 = vec![TAG_END];
+        p4.extend_from_slice(&1u64.to_le_bytes());
+        p4.push(9);
+        assert!(Frame::decode(&p4).is_err());
+    }
+
+    #[test]
+    fn oversized_frame_refused_on_write() {
+        let f = Frame::Feed {
+            req: 1,
+            session: 1,
+            count_loss: false,
+            tokens: vec![0; MAX_FRAME / 4 + 8],
+        };
+        let mut buf = Vec::new();
+        assert!(write_frame(&mut buf, &f).is_err());
+        assert!(buf.is_empty(), "nothing written for an oversized frame");
+    }
+}

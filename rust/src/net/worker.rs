@@ -1,0 +1,506 @@
+//! Wire-serving loop: host a [`Server`] (worker) or a router core
+//! behind the frame protocol.
+//!
+//! Connection model (one per client):
+//!
+//! * the accept loop spawns a *reader* thread per connection, which
+//!   dispatches frames; blocking operations (feed, export/import,
+//!   generation relays) run on short-lived per-request threads so one
+//!   slow feed never stalls the connection;
+//! * all replies funnel through one *writer* thread behind a bounded
+//!   channel ([`FRAME_WINDOW`]) — per-connection backpressure: a slow
+//!   client throttles its own producers instead of ballooning memory;
+//! * at most [`MAX_INFLIGHT`] operations may be in flight per
+//!   connection; excess requests get an `Error` frame immediately
+//!   (admission parking *inside* the server is the capacity story —
+//!   this bound is purely against a misbehaving client);
+//! * on disconnect — clean or abrupt — the reader releases every
+//!   session the connection opened. Release runs the PR-5 cancel
+//!   path, so a client that vanishes mid-`generate` cancels its
+//!   in-flight generation at the next wave boundary instead of
+//!   leaking a pinned session (pinned by `tests/native_wire.rs`).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::session::StreamItem;
+use crate::coordinator::{CarrySnapshot, FeedResult, GenOpts, Server, SessionHandle, TokenStream};
+
+use super::wire::{self, EndOutcome, Frame};
+use super::{Listener, Stream};
+
+/// Writer-channel depth (frames). A full window blocks the producing
+/// request thread — the per-connection backpressure seam.
+pub const FRAME_WINDOW: usize = 256;
+/// Per-connection cap on concurrently running operations.
+pub const MAX_INFLIGHT: usize = 1024;
+
+/// What a wire endpoint serves: the session-by-id operations behind
+/// the frame protocol. Implemented by the worker (over one [`Server`])
+/// and by the router core (over routed remote sessions), so both ends
+/// share one [`serve_conn`] loop.
+pub(crate) trait Node: Send + Sync {
+    /// Open a session; `desired == 0` means allocate. Returns the id.
+    fn node_open(&self, desired: u64) -> Result<u64>;
+    fn node_feed(&self, id: u64, tokens: Vec<i32>, count_loss: bool) -> Result<FeedResult>;
+    fn node_generate(&self, id: u64, opts: GenOpts) -> Result<TokenStream>;
+    fn node_cancel(&self, id: u64) -> Result<()>;
+    fn node_close(&self, id: u64) -> Result<()>;
+    fn node_export(&self, id: u64) -> Result<CarrySnapshot>;
+    fn node_import(&self, id: u64, snap: CarrySnapshot) -> Result<Option<u64>>;
+}
+
+/// The worker-side [`Node`]: one continuous-batching [`Server`] plus
+/// the registry of sessions currently owned by live connections (two
+/// connections can never claim the same session id).
+pub(crate) struct WorkerNode {
+    server: Arc<Server>,
+    active: Mutex<HashMap<u64, SessionHandle>>,
+}
+
+impl WorkerNode {
+    pub(crate) fn new(server: Arc<Server>) -> WorkerNode {
+        WorkerNode { server, active: Mutex::new(HashMap::new()) }
+    }
+}
+
+impl Node for WorkerNode {
+    fn node_open(&self, desired: u64) -> Result<u64> {
+        let mut active = self.active.lock().unwrap();
+        let handle = if desired == 0 {
+            self.server.open_session()
+        } else {
+            if active.contains_key(&desired) {
+                bail!("session {desired} is already open on this worker");
+            }
+            self.server.session_handle(desired)
+        };
+        let id = handle.id();
+        if desired == 0 && active.contains_key(&id) {
+            // cannot happen (open_session ids are unique), but never
+            // clobber an owned session on a logic regression
+            bail!("session allocator returned an id already in use: {id}");
+        }
+        active.insert(id, handle);
+        Ok(id)
+    }
+
+    fn node_feed(&self, id: u64, tokens: Vec<i32>, count_loss: bool) -> Result<FeedResult> {
+        self.server.feed(id, tokens, count_loss)
+    }
+
+    fn node_generate(&self, id: u64, opts: GenOpts) -> Result<TokenStream> {
+        self.server.start_generate(id, opts)
+    }
+
+    fn node_cancel(&self, id: u64) -> Result<()> {
+        self.server.cancel(id)
+    }
+
+    fn node_close(&self, id: u64) -> Result<()> {
+        match self.active.lock().unwrap().remove(&id) {
+            // close() releases the carry; a released session's
+            // in-flight generation ends Cancelled (the PR-5 path)
+            Some(handle) => handle.close(),
+            None => Ok(()),
+        }
+    }
+
+    fn node_export(&self, id: u64) -> Result<CarrySnapshot> {
+        self.server.export_carry(id)
+    }
+
+    fn node_import(&self, id: u64, snap: CarrySnapshot) -> Result<Option<u64>> {
+        self.server.import_carry(id, snap)
+    }
+}
+
+/// A running wire endpoint (accept loop + per-connection threads).
+/// Dropping it stops accepting; live connections run to their natural
+/// end (process exit tears them down in the CLI).
+pub struct WireServer {
+    addr: String,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<thread::JoinHandle<()>>,
+}
+
+impl WireServer {
+    /// The bound address (with `:0` resolved to the real port).
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Stop accepting new connections and join the accept loop.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for WireServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// Serve `server` over the wire protocol at `listen`
+/// (`host:port`/`:0` or `unix:/path`). Returns once bound; accepting
+/// runs on a background thread.
+pub fn spawn_worker(server: Arc<Server>, listen: &str) -> Result<WireServer> {
+    spawn_node(Arc::new(WorkerNode::new(server)), listen, "worker")
+}
+
+pub(crate) fn spawn_node(
+    node: Arc<dyn Node>,
+    listen: &str,
+    label: &'static str,
+) -> Result<WireServer> {
+    let listener = Listener::bind(listen)?;
+    let addr = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop_t = Arc::clone(&stop);
+    let accept_thread = thread::Builder::new()
+        .name(format!("stlt-{label}-accept"))
+        .spawn(move || {
+            while !stop_t.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok(stream) => {
+                        let node = Arc::clone(&node);
+                        let _ = thread::Builder::new()
+                            .name(format!("stlt-{label}-conn"))
+                            .spawn(move || serve_conn(node, stream, label));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(e) => {
+                        crate::warnlog!("net", "{label} accept error: {e}");
+                        thread::sleep(Duration::from_millis(50));
+                    }
+                }
+            }
+        })
+        .expect("spawn accept thread");
+    Ok(WireServer { addr, stop, accept_thread: Some(accept_thread) })
+}
+
+/// Decrements the in-flight counter when a request thread finishes
+/// (on every exit path, including panics unwinding).
+struct InflightGuard(Arc<AtomicUsize>);
+
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Serve one connection to completion. Cleanup (session release) runs
+/// on every exit path — clean EOF, protocol error, or socket failure.
+fn serve_conn(node: Arc<dyn Node>, stream: Stream, label: &'static str) {
+    match conn_loop(&node, stream) {
+        Ok(()) => {}
+        Err(e) => crate::debuglog!("net", "{label} connection ended: {e:#}"),
+    }
+}
+
+fn conn_loop(node: &Arc<dyn Node>, stream: Stream) -> Result<()> {
+    let mut reader = std::io::BufReader::new(stream.try_clone()?);
+
+    // Handshake happens before the writer thread exists; replies go
+    // straight to the socket.
+    let mut direct = stream.try_clone()?;
+    match wire::read_frame(&mut reader)? {
+        Some(Frame::Hello { magic, version })
+            if magic == wire::MAGIC && version == wire::PROTOCOL_VERSION =>
+        {
+            wire::write_frame(&mut direct, &Frame::HelloAck { version: wire::PROTOCOL_VERSION })?;
+            use std::io::Write;
+            direct.flush()?;
+        }
+        Some(Frame::Hello { magic, version }) => {
+            let msg = if magic != wire::MAGIC {
+                format!("handshake: bad magic 0x{magic:08x} (not an STLT peer?)")
+            } else {
+                format!(
+                    "handshake: protocol version {version} != {} (upgrade both ends)",
+                    wire::PROTOCOL_VERSION
+                )
+            };
+            let _ = wire::write_frame(&mut direct, &Frame::Error { req: 0, msg: msg.clone() });
+            use std::io::Write;
+            let _ = direct.flush();
+            bail!("{msg}");
+        }
+        Some(f) => bail!("handshake: expected Hello, got {}", f.name()),
+        None => return Ok(()), // connected and left without a word
+    }
+
+    // Writer thread: the single socket writer. Bounded channel =
+    // per-connection backpressure. On a write error it keeps draining
+    // (discarding) so producers never block on a dead socket.
+    let (out_tx, out_rx) = mpsc::sync_channel::<Frame>(FRAME_WINDOW);
+    let wstream = stream.try_clone()?;
+    let writer = thread::Builder::new()
+        .name("stlt-conn-writer".into())
+        .spawn(move || write_loop(wstream, out_rx))
+        .expect("spawn writer thread");
+
+    // Sessions this connection opened; released on any exit.
+    let mut owned: std::collections::HashSet<u64> = std::collections::HashSet::new();
+    let inflight = Arc::new(AtomicUsize::new(0));
+
+    let send_err = |req: u64, msg: String| {
+        let _ = out_tx.send(Frame::Error { req, msg });
+    };
+
+    let result = loop {
+        let frame = match wire::read_frame(&mut reader) {
+            Ok(Some(f)) => f,
+            Ok(None) => break Ok(()), // clean EOF
+            Err(e) => break Err(e),
+        };
+        match frame {
+            Frame::Open { req, session } => match node.node_open(session) {
+                Ok(id) => {
+                    owned.insert(id);
+                    let _ = out_tx.send(Frame::OpenOk { req, session: id });
+                }
+                Err(e) => send_err(req, format!("{e:#}")),
+            },
+            Frame::Feed { req, session, count_loss, tokens } => {
+                if !owned.contains(&session) {
+                    send_err(req, format!("session {session} is not open on this connection"));
+                    continue;
+                }
+                if !admit_inflight(&inflight) {
+                    send_err(req, format!("connection in-flight limit ({MAX_INFLIGHT}) reached"));
+                    continue;
+                }
+                let node = Arc::clone(node);
+                let out = out_tx.clone();
+                let guard = InflightGuard(Arc::clone(&inflight));
+                spawn_request(move || {
+                    let _guard = guard;
+                    match node.node_feed(session, tokens, count_loss) {
+                        Ok(fr) => {
+                            let _ = out.send(Frame::FeedOk {
+                                req,
+                                nll_sum: fr.nll_sum,
+                                count: fr.count,
+                                evicted: fr.evicted,
+                            });
+                        }
+                        Err(e) => {
+                            let _ = out.send(Frame::Error { req, msg: format!("{e:#}") });
+                        }
+                    }
+                });
+            }
+            Frame::Generate { req, session, opts } => {
+                if !owned.contains(&session) {
+                    send_err(req, format!("session {session} is not open on this connection"));
+                    continue;
+                }
+                if !admit_inflight(&inflight) {
+                    send_err(req, format!("connection in-flight limit ({MAX_INFLIGHT}) reached"));
+                    continue;
+                }
+                let node = Arc::clone(node);
+                let out = out_tx.clone();
+                let guard = InflightGuard(Arc::clone(&inflight));
+                spawn_request(move || {
+                    let _guard = guard;
+                    relay_generation(&*node, session, opts, req, &out);
+                });
+            }
+            Frame::Cancel { req, session } => {
+                if !owned.contains(&session) {
+                    send_err(req, format!("session {session} is not open on this connection"));
+                    continue;
+                }
+                match node.node_cancel(session) {
+                    Ok(()) => {
+                        let _ = out_tx.send(Frame::Ack { req });
+                    }
+                    Err(e) => send_err(req, format!("{e:#}")),
+                }
+            }
+            Frame::Close { req, session } => {
+                if !owned.remove(&session) {
+                    send_err(req, format!("session {session} is not open on this connection"));
+                    continue;
+                }
+                match node.node_close(session) {
+                    Ok(()) => {
+                        let _ = out_tx.send(Frame::Ack { req });
+                    }
+                    Err(e) => send_err(req, format!("{e:#}")),
+                }
+            }
+            Frame::ExportCarry { req, session } => {
+                if !owned.contains(&session) {
+                    send_err(req, format!("session {session} is not open on this connection"));
+                    continue;
+                }
+                if !admit_inflight(&inflight) {
+                    send_err(req, format!("connection in-flight limit ({MAX_INFLIGHT}) reached"));
+                    continue;
+                }
+                let node = Arc::clone(node);
+                let out = out_tx.clone();
+                let guard = InflightGuard(Arc::clone(&inflight));
+                spawn_request(move || {
+                    let _guard = guard;
+                    match node.node_export(session) {
+                        Ok(snap) => {
+                            let _ = out.send(Frame::Carry { req, snap });
+                        }
+                        Err(e) => {
+                            let _ = out.send(Frame::Error { req, msg: format!("{e:#}") });
+                        }
+                    }
+                });
+            }
+            Frame::ImportCarry { req, session, snap } => {
+                if !owned.contains(&session) {
+                    send_err(req, format!("session {session} is not open on this connection"));
+                    continue;
+                }
+                if !admit_inflight(&inflight) {
+                    send_err(req, format!("connection in-flight limit ({MAX_INFLIGHT}) reached"));
+                    continue;
+                }
+                let node = Arc::clone(node);
+                let out = out_tx.clone();
+                let guard = InflightGuard(Arc::clone(&inflight));
+                spawn_request(move || {
+                    let _guard = guard;
+                    match node.node_import(session, snap) {
+                        Ok(evicted) => {
+                            let _ = out.send(Frame::ImportOk { req, evicted });
+                        }
+                        Err(e) => {
+                            let _ = out.send(Frame::Error { req, msg: format!("{e:#}") });
+                        }
+                    }
+                });
+            }
+            Frame::Hello { .. } => break Err(anyhow!("unexpected second Hello")),
+            f => break Err(anyhow!("unexpected server-side frame {} from client", f.name())),
+        }
+    };
+
+    // Teardown: release every session this connection owned. For a
+    // connection that vanished mid-generate this runs the server's
+    // release path, which cancels the in-flight generation — the
+    // relay thread sees End(Cancelled) and exits.
+    for id in owned {
+        let _ = node.node_close(id);
+    }
+    // The writer exits when every sender is gone: ours now, the relay
+    // threads' as their generations end Cancelled.
+    drop(out_tx);
+    let _ = writer.join();
+    result
+}
+
+fn admit_inflight(inflight: &Arc<AtomicUsize>) -> bool {
+    if inflight.load(Ordering::Relaxed) >= MAX_INFLIGHT {
+        return false;
+    }
+    inflight.fetch_add(1, Ordering::Relaxed);
+    true
+}
+
+fn spawn_request<F: FnOnce() + Send + 'static>(f: F) {
+    let _ = thread::Builder::new().name("stlt-conn-req".into()).spawn(f);
+}
+
+/// Pump one generation's stream items into wire frames. A failed send
+/// means the connection is gone — dropping the [`TokenStream`] then
+/// cancels the generation server-side.
+fn relay_generation(
+    node: &dyn Node,
+    session: u64,
+    opts: GenOpts,
+    req: u64,
+    out: &mpsc::SyncSender<Frame>,
+) {
+    let mut stream = match node.node_generate(session, opts) {
+        Ok(s) => s,
+        Err(e) => {
+            let _ = out.send(Frame::Error { req, msg: format!("{e:#}") });
+            return;
+        }
+    };
+    loop {
+        match stream.recv_raw() {
+            Some(StreamItem::Start { evicted, fresh_carry }) => {
+                if out.send(Frame::Start { req, evicted, fresh_carry }).is_err() {
+                    return;
+                }
+            }
+            Some(StreamItem::Token(t)) => {
+                if out.send(Frame::Token { req, token: t }).is_err() {
+                    return;
+                }
+            }
+            Some(StreamItem::End(Ok(reason))) => {
+                let _ = out.send(Frame::End { req, outcome: EndOutcome::Finished(reason) });
+                return;
+            }
+            Some(StreamItem::End(Err(e))) => {
+                let _ = out.send(Frame::End { req, outcome: EndOutcome::Failed(format!("{e:#}")) });
+                return;
+            }
+            None => {
+                let _ = out.send(Frame::End {
+                    req,
+                    outcome: EndOutcome::Failed("server shut down mid-generation".into()),
+                });
+                return;
+            }
+        }
+    }
+}
+
+/// The writer thread: serialize frames in arrival order, flush when
+/// the burst drains. After a socket error it drains-and-discards so
+/// producers blocked on the bounded channel always make progress.
+fn write_loop(stream: Stream, rx: mpsc::Receiver<Frame>) {
+    use std::io::Write;
+    let mut w = std::io::BufWriter::new(stream);
+    let mut dead = false;
+    loop {
+        let mut frame = match rx.recv() {
+            Ok(f) => f,
+            Err(_) => break, // all senders gone
+        };
+        loop {
+            if !dead && wire::write_frame(&mut w, &frame).is_err() {
+                dead = true;
+            }
+            match rx.try_recv() {
+                Ok(next) => frame = next,
+                Err(_) => break,
+            }
+        }
+        if !dead && w.flush().is_err() {
+            dead = true;
+        }
+    }
+    let _ = w.flush();
+}

@@ -766,6 +766,29 @@ pub fn init_vec_host(param_count: usize, seed: u64) -> Vec<f32> {
     (0..param_count).map(|_| (rng.normal() * 0.02) as f32).collect()
 }
 
+/// Untrained parameter vector for `{artifact}.*`: the python-exact
+/// `.init.bin` when the manifest ships one, else the deterministic
+/// host init (seed 0). Every process that loads the same manifest
+/// this way holds bitwise-identical weights — the invariant the
+/// sharded-serving tests and benches lean on when comparing token
+/// streams across workers.
+pub fn artifact_flat(manifest: &Manifest, artifact: &str) -> Result<Vec<f32>> {
+    let prefix = format!("{artifact}.");
+    if let Some(entry) = manifest
+        .entries
+        .values()
+        .find(|e| e.name.starts_with(&prefix) && e.init_file.is_some())
+    {
+        return load_init_vec(entry.init_file.as_ref().unwrap(), entry.param_count);
+    }
+    let entry = manifest
+        .entries
+        .values()
+        .find(|e| e.name.starts_with(&prefix))
+        .ok_or_else(|| anyhow::anyhow!("no '{artifact}.*' entries in manifest"))?;
+    Ok(TrainState::init_for(entry, 0)?.flat)
+}
+
 /// Load an init vector dumped by aot.py (f32 little-endian raw file).
 pub fn load_init_vec(path: &std::path::Path, expected: usize) -> Result<Vec<f32>> {
     let bytes = std::fs::read(path)?;

@@ -347,6 +347,72 @@ fn decode_batch_padding_masking_parity_is_bitwise() {
 }
 
 #[test]
+fn export_import_resumes_bitwise_across_server_instances() {
+    // the client-side resume seam: export a session's carry, bring it
+    // to a *different* server instance (same weights), and continue —
+    // NLL bits and sampled tokens match a session that never moved.
+    let c = cfg();
+    let flat = host_init(&c, 63);
+    let m = manifest(flat.len());
+    let id = 4242u64;
+    let prompt = doc(37, 21);
+    let more = doc(19, 22);
+    let opts = GenOpts {
+        seed_token: *more.last().unwrap(),
+        max_tokens: 6,
+        sampling: Sampling::Temperature(1.1),
+        rng_seed: 3,
+        ..Default::default()
+    };
+
+    // reference: one continuous session, one server
+    let reference = Server::start(&m, "nat", flat.clone(), ServerOpts::default()).unwrap();
+    let r1 = reference.feed(id, prompt.clone(), true).unwrap();
+    let r2 = reference.feed(id, more.clone(), true).unwrap();
+    let rg = reference.start_generate(id, opts.clone()).unwrap().wait().unwrap();
+    reference.shutdown();
+
+    // server A: first half of the conversation, then export
+    let a = Server::start(&m, "nat", flat.clone(), ServerOpts::default()).unwrap();
+    let a1 = a.feed(id, prompt.clone(), true).unwrap();
+    assert_eq!(a1.nll_sum.to_bits(), r1.nll_sum.to_bits());
+    let snap = a.export_carry(id).unwrap();
+    assert!(snap.tokens_seen > 0, "snapshot must carry the token clock");
+    assert!(snap.state_bytes() > 0);
+    a.shutdown();
+
+    // server B: import under the SAME id (the generation RNG is seeded
+    // rng_seed ^ session, so the id is part of the session's identity),
+    // then the second half
+    let b = Server::start(&m, "nat", flat, ServerOpts::default()).unwrap();
+    assert_eq!(b.import_carry(id, snap.clone()).unwrap(), None);
+    let b2 = b.feed(id, more, true).unwrap();
+    assert_eq!(b2.nll_sum.to_bits(), r2.nll_sum.to_bits(), "resumed feed diverged");
+    assert_eq!(b2.count, r2.count);
+    let bg = b.start_generate(id, opts).unwrap().wait().unwrap();
+    assert!(!bg.fresh_carry, "imported session must resume, not restart");
+    assert_eq!(bg.tokens, rg.tokens, "resumed generation diverged");
+
+    // checkout safety: export refuses while a generation holds the carry
+    let h = b.open_session();
+    h.feed(doc(20, 23), false).unwrap();
+    let mut stream = h
+        .generate(GenOpts { seed_token: 1, max_tokens: 500_000, ..Default::default() })
+        .unwrap();
+    // first token ⇒ the carry is checked out, not merely queued
+    stream.recv().unwrap().unwrap();
+    let err = h.export_carry().unwrap_err();
+    assert!(format!("{err:#}").contains("export"), "unhelpful error: {err:#}");
+    h.cancel().unwrap();
+    let r = stream.wait().unwrap();
+    assert_eq!(r.reason, FinishReason::Cancelled);
+    // and once the generation is gone, the handle-level seam round-trips
+    let snap2 = h.export_carry().unwrap();
+    assert_eq!(h.import_carry(snap2).unwrap(), None);
+    b.shutdown();
+}
+
+#[test]
 fn session_handle_lifecycle_and_conflicts() {
     let c = cfg();
     let flat = host_init(&c, 55);

@@ -1,0 +1,560 @@
+//! Sharded-serving integration (native backend, zero external deps):
+//! the binary wire protocol, worker connection lifecycle, the session
+//! router, and live carry migration.
+//!
+//! The load-bearing claims pinned here:
+//!   * sessions driven over the wire are BITWISE the sessions driven
+//!     in-process (f64 NLL bits, token streams) — the protocol adds
+//!     transport, never arithmetic;
+//!   * a client that vanishes mid-generate cancels its in-flight
+//!     generation on the worker (no leaked pinned sessions);
+//!   * a session migrated between two worker *processes* continues
+//!     bitwise-identically to one that never moved;
+//!   * killing a worker fails its sessions with clean errors while
+//!     sessions on surviving workers proceed untouched.
+
+#![cfg(feature = "native")]
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, Write};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use stlt::coordinator::{
+    FinishReason, GenOpts, Sampling, Server, ServerOpts, Session,
+};
+use stlt::net::{
+    read_frame, spawn_worker, write_frame, Client, Frame, Router, Stream, MAGIC,
+    PROTOCOL_VERSION,
+};
+use stlt::runtime::artifact::{Entry, ModelConfig};
+use stlt::runtime::native_stlt::host_init;
+use stlt::runtime::{default_artifacts_dir, Manifest};
+
+const S: usize = 4;
+const D: usize = 8;
+const LAYERS: usize = 2;
+const VOCAB: usize = 19;
+const CHUNK: usize = 8;
+const BSRV: usize = 4;
+
+fn cfg() -> ModelConfig {
+    ModelConfig {
+        arch: "stlt".into(),
+        vocab: VOCAB,
+        d_model: D,
+        n_layers: LAYERS,
+        n_ctx: 32,
+        s_max: S,
+        batch: 2,
+        mode: "linear".into(),
+        ..ModelConfig::default()
+    }
+}
+
+fn manifest(p: usize) -> Manifest {
+    let c = cfg();
+    let mut entries = BTreeMap::new();
+    for e in [
+        Entry::synthetic_stream(&c, p, "nat.stream", CHUNK),
+        Entry::synthetic_decode(&c, p, "nat.decode"),
+        Entry::synthetic_stream_batch(&c, p, "nat.stream_batch", CHUNK, BSRV),
+    ] {
+        entries.insert(e.name.clone(), e);
+    }
+    Manifest { dir: PathBuf::from("."), entries }
+}
+
+fn doc(len: usize, seed: u64, vocab: usize) -> Vec<i32> {
+    let mut rng = stlt::util::rng::Rng::new(seed);
+    (0..len).map(|_| rng.below(vocab as u64) as i32).collect()
+}
+
+/// Everything observable from one scripted conversation, bit-exact
+/// fields widened to bits so assertions compare raw representations.
+#[derive(Debug, PartialEq)]
+struct Transcript {
+    nll1: u64,
+    count1: f64,
+    gen1: Vec<i32>,
+    nll2: u64,
+    gen2: Vec<i32>,
+}
+
+fn gen_opts(seed_token: i32, max_tokens: usize, temp: f32, rng_seed: u64) -> GenOpts {
+    GenOpts {
+        seed_token,
+        max_tokens,
+        sampling: Sampling::Temperature(temp),
+        rng_seed,
+        ..Default::default()
+    }
+}
+
+/// The scripted conversation over any [`Session`] implementation.
+/// Sampling is temperature-based so the `rng_seed ^ session` RNG seam
+/// is exercised: matching transcripts prove the session *id* survived
+/// the transport (and, in the migration tests, the move).
+fn converse(sess: &dyn Session, k: u64, vocab: usize) -> Transcript {
+    let prompt = doc(40 + (k % 5) as usize * 3, 1000 + k, vocab);
+    let fr1 = sess.feed(prompt.clone(), true).unwrap();
+    let g1 = sess
+        .generate(gen_opts(*prompt.last().unwrap(), 7, 1.2, 11))
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(g1.reason, FinishReason::MaxTokens);
+    let more = doc(21, 5000 + k, vocab);
+    let fr2 = sess.feed(more.clone(), true).unwrap();
+    let g2 = sess
+        .generate(gen_opts(*more.last().unwrap(), 5, 0.9, 13))
+        .unwrap()
+        .wait()
+        .unwrap();
+    Transcript {
+        nll1: fr1.nll_sum.to_bits(),
+        count1: fr1.count,
+        gen1: g1.tokens,
+        nll2: fr2.nll_sum.to_bits(),
+        gen2: g2.tokens,
+    }
+}
+
+/// The same conversation through the session-id API (the reference
+/// path: integration tests cannot mint explicit-id handles).
+fn converse_by_id(server: &Server, session: u64, k: u64, vocab: usize) -> Transcript {
+    let prompt = doc(40 + (k % 5) as usize * 3, 1000 + k, vocab);
+    let fr1 = server.feed(session, prompt.clone(), true).unwrap();
+    let g1 = server
+        .start_generate(session, gen_opts(*prompt.last().unwrap(), 7, 1.2, 11))
+        .unwrap()
+        .wait()
+        .unwrap();
+    let more = doc(21, 5000 + k, vocab);
+    let fr2 = server.feed(session, more.clone(), true).unwrap();
+    let g2 = server
+        .start_generate(session, gen_opts(*more.last().unwrap(), 5, 0.9, 13))
+        .unwrap()
+        .wait()
+        .unwrap();
+    Transcript {
+        nll1: fr1.nll_sum.to_bits(),
+        count1: fr1.count,
+        gen1: g1.tokens,
+        nll2: fr2.nll_sum.to_bits(),
+        gen2: g2.tokens,
+    }
+}
+
+#[test]
+fn wire_sessions_bitwise_match_local() {
+    let c = cfg();
+    let flat = host_init(&c, 42);
+    let m = manifest(flat.len());
+
+    // reference: in-process server, session-id API, sequential
+    let server = Server::start(&m, "nat", flat.clone(), ServerOpts::default()).unwrap();
+    let reference: Vec<_> = (0..5u64).map(|k| converse_by_id(&server, 501 + k, k, VOCAB)).collect();
+    server.shutdown();
+
+    // wire: same conversations concurrently through one multiplexed
+    // client connection to a loopback worker, same explicit ids
+    let server = Arc::new(Server::start(&m, "nat", flat, ServerOpts::default()).unwrap());
+    let wire = spawn_worker(Arc::clone(&server), "127.0.0.1:0").unwrap();
+    let client = Client::connect(wire.addr()).unwrap();
+    let mut threads = Vec::new();
+    for k in 0..5u64 {
+        let client = client.clone();
+        threads.push(std::thread::spawn(move || {
+            let mut sess = client.open(501 + k).unwrap();
+            assert_eq!(sess.id(), 501 + k);
+            let t = converse(&sess, k, VOCAB);
+            sess.close().unwrap();
+            (k, t)
+        }));
+    }
+    for t in threads {
+        let (k, got) = t.join().unwrap();
+        assert_eq!(got, reference[k as usize], "wire session {k} diverged from local");
+    }
+    wire.shutdown();
+}
+
+#[test]
+fn handshake_rejects_bad_version_and_magic() {
+    let c = cfg();
+    let flat = host_init(&c, 3);
+    let m = manifest(flat.len());
+    let server = Arc::new(Server::start(&m, "nat", flat, ServerOpts::default()).unwrap());
+    let wire = spawn_worker(Arc::clone(&server), "127.0.0.1:0").unwrap();
+
+    // wrong protocol version: explicit Error frame naming both versions
+    let mut s = Stream::connect(wire.addr()).unwrap();
+    write_frame(&mut s, &Frame::Hello { magic: MAGIC, version: PROTOCOL_VERSION + 1 }).unwrap();
+    s.flush().unwrap();
+    let mut r = std::io::BufReader::new(s.try_clone().unwrap());
+    match read_frame(&mut r).unwrap() {
+        Some(Frame::Error { req: 0, msg }) => {
+            assert!(msg.contains("version"), "unhelpful version error: {msg}");
+        }
+        f => panic!("expected Error for version mismatch, got {f:?}"),
+    }
+
+    // wrong magic: a non-STLT peer gets told so
+    let mut s = Stream::connect(wire.addr()).unwrap();
+    write_frame(&mut s, &Frame::Hello { magic: 0xDEAD_BEEF, version: PROTOCOL_VERSION }).unwrap();
+    s.flush().unwrap();
+    let mut r = std::io::BufReader::new(s.try_clone().unwrap());
+    match read_frame(&mut r).unwrap() {
+        Some(Frame::Error { req: 0, msg }) => {
+            assert!(msg.contains("magic"), "unhelpful magic error: {msg}");
+        }
+        f => panic!("expected Error for bad magic, got {f:?}"),
+    }
+
+    // and a well-formed handshake still succeeds afterwards
+    let client = Client::connect(wire.addr()).unwrap();
+    assert!(client.is_alive());
+    wire.shutdown();
+}
+
+#[test]
+fn abrupt_disconnect_cancels_inflight_generation() {
+    let c = cfg();
+    let flat = host_init(&c, 17);
+    let m = manifest(flat.len());
+    let server = Arc::new(Server::start(&m, "nat", flat, ServerOpts::default()).unwrap());
+    let wire = spawn_worker(Arc::clone(&server), "127.0.0.1:0").unwrap();
+
+    // hand-rolled frames on a raw socket: RemoteSession's Drop sends a
+    // polite Close, and this test is about the *impolite* exit
+    let mut s = Stream::connect(wire.addr()).unwrap();
+    let mut r = std::io::BufReader::new(s.try_clone().unwrap());
+    write_frame(&mut s, &Frame::Hello { magic: MAGIC, version: PROTOCOL_VERSION }).unwrap();
+    s.flush().unwrap();
+    assert!(matches!(read_frame(&mut r).unwrap(), Some(Frame::HelloAck { .. })));
+    write_frame(&mut s, &Frame::Open { req: 1, session: 777 }).unwrap();
+    s.flush().unwrap();
+    assert!(matches!(
+        read_frame(&mut r).unwrap(),
+        Some(Frame::OpenOk { req: 1, session: 777 })
+    ));
+    let prompt = doc(30, 9, VOCAB);
+    write_frame(
+        &mut s,
+        &Frame::Feed { req: 2, session: 777, count_loss: false, tokens: prompt.clone() },
+    )
+    .unwrap();
+    s.flush().unwrap();
+    assert!(matches!(read_frame(&mut r).unwrap(), Some(Frame::FeedOk { req: 2, .. })));
+    write_frame(
+        &mut s,
+        &Frame::Generate {
+            req: 3,
+            session: 777,
+            opts: GenOpts {
+                seed_token: *prompt.last().unwrap(),
+                max_tokens: 1_000_000, // would run ~forever without the cancel
+                ..Default::default()
+            },
+        },
+    )
+    .unwrap();
+    s.flush().unwrap();
+    assert!(matches!(read_frame(&mut r).unwrap(), Some(Frame::Start { req: 3, .. })));
+    for _ in 0..3 {
+        assert!(matches!(read_frame(&mut r).unwrap(), Some(Frame::Token { req: 3, .. })));
+    }
+
+    // client walks away mid-stream, no Close, no Cancel
+    drop(r);
+    drop(s);
+
+    // the worker's teardown releases the session; release cancels the
+    // in-flight generation at the next wave boundary
+    let t0 = Instant::now();
+    while server.stats.cancelled.load(Ordering::Relaxed) < 1 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "abrupt disconnect never cancelled the in-flight generation"
+        );
+        std::thread::yield_now();
+    }
+
+    // the worker keeps serving, and the session id is free again
+    // (teardown released it from the connection registry)
+    let client = Client::connect(wire.addr()).unwrap();
+    let mut sess = client.open(777).unwrap();
+    sess.feed(doc(10, 10, VOCAB), false).unwrap();
+    sess.close().unwrap();
+    wire.shutdown();
+}
+
+#[test]
+fn migration_is_bitwise_under_concurrent_load() {
+    let c = cfg();
+    let flat = host_init(&c, 91);
+    let m = manifest(flat.len());
+
+    // reference: one in-process server, nothing ever moves
+    let reference_server = Server::start(&m, "nat", flat.clone(), ServerOpts::default()).unwrap();
+
+    // topology: two workers (identical weights), one router
+    let w0 = Arc::new(Server::start(&m, "nat", flat.clone(), ServerOpts::default()).unwrap());
+    let w1 = Arc::new(Server::start(&m, "nat", flat, ServerOpts::default()).unwrap());
+    let wire0 = spawn_worker(Arc::clone(&w0), "127.0.0.1:0").unwrap();
+    let wire1 = spawn_worker(Arc::clone(&w1), "127.0.0.1:0").unwrap();
+    let router =
+        Router::connect(&[wire0.addr().to_string(), wire1.addr().to_string()]).unwrap();
+    assert_eq!(router.worker_count(), 2);
+
+    let mut threads = Vec::new();
+    for k in 0..6u64 {
+        let router = router.clone();
+        threads.push(std::thread::spawn(move || {
+            let sess = router.open_session().unwrap();
+            let id = sess.id();
+            let vocab = VOCAB;
+            let prompt = doc(40 + (k % 5) as usize * 3, 1000 + k, vocab);
+            let fr1 = sess.feed(prompt.clone(), true).unwrap();
+            let g1 = sess
+                .generate(gen_opts(*prompt.last().unwrap(), 7, 1.2, 11))
+                .unwrap()
+                .wait()
+                .unwrap();
+            // live migration mid-conversation, concurrent with the
+            // other sessions' feeds and generations
+            let from = router.worker_of(id).unwrap();
+            router.migrate(id, 1 - from).unwrap();
+            assert_eq!(router.worker_of(id), Some(1 - from), "session {id} did not move");
+            let more = doc(21, 5000 + k, vocab);
+            let fr2 = sess.feed(more.clone(), true).unwrap();
+            let g2 = sess
+                .generate(gen_opts(*more.last().unwrap(), 5, 0.9, 13))
+                .unwrap()
+                .wait()
+                .unwrap();
+            let t = Transcript {
+                nll1: fr1.nll_sum.to_bits(),
+                count1: fr1.count,
+                gen1: g1.tokens,
+                nll2: fr2.nll_sum.to_bits(),
+                gen2: g2.tokens,
+            };
+            (k, id, sess, t)
+        }));
+    }
+    let mut sessions = Vec::new();
+    for t in threads {
+        let (k, id, sess, got) = t.join().unwrap();
+        let want = converse_by_id(&reference_server, id, k, VOCAB);
+        assert_eq!(got, want, "migrated session {id} diverged from the unmoved reference");
+        sessions.push((k, id, sess));
+    }
+
+    // drain worker 0 entirely; continuations stay bitwise afterwards
+    let (moved, failed) = router.drain(0);
+    assert_eq!(failed, 0, "drain must move every session cleanly ({moved} moved)");
+    assert!(router.sessions_on(0).is_empty(), "worker 0 still hosts sessions after drain");
+    assert_eq!(router.sessions_on(1).len(), sessions.len(), "drain lost sessions");
+    for (k, id, sess) in &sessions {
+        let extra = doc(9, 9000 + k, VOCAB);
+        let fr = sess.feed(extra.clone(), true).unwrap();
+        let want = reference_server.feed(*id, extra, true).unwrap();
+        assert_eq!(fr.nll_sum.to_bits(), want.nll_sum.to_bits(), "post-drain feed diverged");
+    }
+
+    // rebalance spreads them back within a delta of one
+    router.rebalance_once();
+    let (a, b) = (router.sessions_on(0).len(), router.sessions_on(1).len());
+    assert!(a.abs_diff(b) <= 1, "rebalance left {a} vs {b}");
+
+    for (_, _, mut sess) in sessions {
+        sess.close().unwrap();
+    }
+    reference_server.shutdown();
+    wire0.shutdown();
+    wire1.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// multi-process soak: real `stlt worker` processes over loopback TCP
+// ---------------------------------------------------------------------
+
+/// A spawned worker process, killed on drop (panic-safe).
+struct WorkerProc {
+    child: Child,
+    addr: String,
+}
+
+impl WorkerProc {
+    fn spawn(max_sessions: usize) -> WorkerProc {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_stlt"))
+            .args([
+                "worker",
+                "--listen",
+                "127.0.0.1:0",
+                "--artifact",
+                "lm_stlt_tiny",
+                "--max-sessions",
+                &max_sessions.to_string(),
+            ])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn stlt worker");
+        // the stdout line is the readiness signal (and carries the
+        // resolved ephemeral port)
+        let stdout = child.stdout.take().unwrap();
+        let mut line = String::new();
+        std::io::BufReader::new(stdout).read_line(&mut line).expect("worker stdout");
+        let addr = line
+            .trim()
+            .strip_prefix("worker listening on ")
+            .unwrap_or_else(|| panic!("unexpected worker banner: {line:?}"))
+            .to_string();
+        WorkerProc { child, addr }
+    }
+}
+
+impl Drop for WorkerProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+#[test]
+fn soak_two_worker_processes_interleaved_and_kill() {
+    const SESSIONS: u64 = 96;
+    let m = Manifest::load(default_artifacts_dir()).unwrap();
+    let vocab = m.get("lm_stlt_tiny.stream_batch").unwrap().config.vocab;
+    // the worker CLI loads exactly this when no --ckpt is given, so the
+    // in-process reference holds bitwise the workers' weights
+    let flat = stlt::runtime::exec::artifact_flat(&m, "lm_stlt_tiny").unwrap();
+
+    let wp0 = WorkerProc::spawn(256);
+    let wp1 = WorkerProc::spawn(256);
+    let router = Router::connect(&[wp0.addr.clone(), wp1.addr.clone()]).unwrap();
+
+    let reference = Arc::new(
+        Server::start(
+            &m,
+            "lm_stlt_tiny",
+            flat,
+            ServerOpts { max_sessions: 256, queue_cap: 256, ..Default::default() },
+        )
+        .unwrap(),
+    );
+
+    // hundreds of concurrent wire sessions with interleaved
+    // feed/generate/cancel/migrate; every non-cancelled transcript must
+    // match the single-process reference bitwise
+    let mut threads = Vec::new();
+    for k in 0..SESSIONS {
+        let router = router.clone();
+        let reference = Arc::clone(&reference);
+        threads.push(std::thread::spawn(move || {
+            let sess = router.open_session().unwrap();
+            let id = sess.id();
+            if k % 10 == 7 {
+                // cancellation traffic: long generation, cancel, drain;
+                // excluded from the bitwise comparison
+                let prompt = doc(24, 300 + k, vocab);
+                sess.feed(prompt.clone(), false).unwrap();
+                let mut stream = sess
+                    .generate(GenOpts {
+                        seed_token: *prompt.last().unwrap(),
+                        max_tokens: 1_000_000,
+                        ..Default::default()
+                    })
+                    .unwrap();
+                for _ in 0..2 {
+                    stream.recv().unwrap().unwrap();
+                }
+                sess.cancel().unwrap();
+                let drained: Vec<i32> = stream.by_ref().map(|t| t.unwrap()).collect();
+                assert!(drained.len() < 1_000_000);
+                assert_eq!(stream.finish_reason(), Some(FinishReason::Cancelled));
+                // the session survives its cancel
+                let g = sess.generate_blocking(gen_opts(1, 3, 1.0, 5)).unwrap();
+                assert_eq!(g.tokens.len(), 3);
+                return (k, id, sess, None);
+            }
+            if k % 3 == 0 {
+                // migration traffic, concurrent with everything else
+                let got = {
+                    let prompt = doc(40 + (k % 5) as usize * 3, 1000 + k, vocab);
+                    let fr1 = sess.feed(prompt.clone(), true).unwrap();
+                    let g1 = sess
+                        .generate(gen_opts(*prompt.last().unwrap(), 7, 1.2, 11))
+                        .unwrap()
+                        .wait()
+                        .unwrap();
+                    let from = router.worker_of(id).unwrap();
+                    router.migrate(id, 1 - from).unwrap();
+                    let more = doc(21, 5000 + k, vocab);
+                    let fr2 = sess.feed(more.clone(), true).unwrap();
+                    let g2 = sess
+                        .generate(gen_opts(*more.last().unwrap(), 5, 0.9, 13))
+                        .unwrap()
+                        .wait()
+                        .unwrap();
+                    Transcript {
+                        nll1: fr1.nll_sum.to_bits(),
+                        count1: fr1.count,
+                        gen1: g1.tokens,
+                        nll2: fr2.nll_sum.to_bits(),
+                        gen2: g2.tokens,
+                    }
+                };
+                return (k, id, sess, Some(got));
+            }
+            let got = converse(&sess, k, vocab);
+            (k, id, sess, Some(got))
+        }));
+    }
+    let mut live = Vec::new();
+    for t in threads {
+        let (k, id, sess, got) = t.join().unwrap();
+        if let Some(got) = got {
+            let want = converse_by_id(&reference, id, k, vocab);
+            assert_eq!(got, want, "wire session {id} (k={k}) diverged from single-process");
+        }
+        live.push((id, sess));
+    }
+    assert_eq!(router.session_count(), live.len());
+
+    // -- kill one worker ----------------------------------------------
+    // sessions on the dead worker fail with clean errors (no hangs);
+    // sessions on the survivor keep working; new sessions route around
+    // the corpse
+    let on0: Vec<u64> =
+        live.iter().map(|(id, _)| *id).filter(|id| router.worker_of(*id) == Some(0)).collect();
+    let on1: Vec<u64> =
+        live.iter().map(|(id, _)| *id).filter(|id| router.worker_of(*id) == Some(1)).collect();
+    assert!(!on0.is_empty() && !on1.is_empty(), "hash routing left a worker empty");
+    drop(wp0); // SIGKILL
+
+    let t0 = Instant::now();
+    while router.worker_alive(0) {
+        assert!(t0.elapsed() < Duration::from_secs(10), "router never noticed the dead worker");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let dead = live.iter().find(|(id, _)| on0.contains(id)).unwrap();
+    let err = dead.1.feed(doc(5, 1, vocab), false).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("lost") || msg.contains("connect"), "unhelpful dead-worker error: {msg}");
+    let survivor = live.iter().find(|(id, _)| on1.contains(id)).unwrap();
+    survivor.1.feed(doc(5, 2, vocab), false).unwrap();
+    let fresh = router.open_session().unwrap();
+    assert_eq!(router.worker_of(fresh.id()), Some(1), "new sessions must avoid the dead worker");
+    fresh.feed(doc(5, 3, vocab), false).unwrap();
+
+    drop(live);
+    drop(fresh);
+    drop(wp1);
+}
