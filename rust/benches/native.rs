@@ -275,6 +275,79 @@ fn bench_serving(smoke: bool, cfg: &ModelConfig, flat: &[f32], rows: &mut Rows) 
     rows.push(r, vec![("ttft_p50_ms", p50 * 1e3), ("ttft_p99_ms", p99 * 1e3)]);
 }
 
+/// Observability overhead row: the batched continuous-decode workload
+/// with the metrics registry enabled (the default) vs force-disabled.
+/// Disabled cost is one relaxed atomic load per instrument; the budget
+/// is <= 2% in steady state (CI asserts a looser 10% to stay unflaky
+/// on shared runners).
+fn bench_obs_overhead(smoke: bool, cfg: &ModelConfig, flat: &[f32], rows: &mut Rows) {
+    let bsrv = 8usize;
+    let chunk = 64usize;
+    let gen_len = if smoke { 16 } else { 64 };
+    let prompt_len = chunk + 1;
+    let m = serving_manifest(cfg, flat.len(), chunk, bsrv);
+    let opts = || ServerOpts { max_sessions: 32, ..ServerOpts::default() };
+    let vocab = cfg.vocab;
+    let docv = |len: usize, seed: u64| -> Vec<i32> {
+        let mut rng = stlt::util::rng::Rng::new(seed);
+        (0..len).map(|_| rng.below(vocab as u64) as i32).collect()
+    };
+
+    let run = || -> f64 {
+        let server = Arc::new(Server::start(&m, "srv", flat.to_vec(), opts()).unwrap());
+        let mut seeds = Vec::new();
+        for s in 0..bsrv as u64 {
+            let prompt = docv(prompt_len, 700 + s);
+            server.feed(1 + s, prompt.clone(), false).unwrap();
+            seeds.push(*prompt.last().unwrap());
+        }
+        let t0 = Instant::now();
+        let clients: Vec<_> = (0..bsrv)
+            .map(|s| {
+                let server = Arc::clone(&server);
+                let seed_tok = seeds[s];
+                std::thread::spawn(move || {
+                    let g = server.generate(1 + s as u64, seed_tok, gen_len, None).unwrap();
+                    assert_eq!(g.tokens.len(), gen_len);
+                })
+            })
+            .collect();
+        for c in clients {
+            c.join().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        server.shutdown();
+        wall
+    };
+
+    // warm once so thread-pool spin-up and panel packing are off the
+    // clock, then measure enabled and disabled back to back
+    let _ = run();
+    let was_on = stlt::obs::metrics_on();
+    stlt::obs::set_metrics(true);
+    let on_s = run();
+    stlt::obs::set_metrics(false);
+    let off_s = run();
+    stlt::obs::set_metrics(was_on);
+
+    let on_tps = (bsrv * gen_len) as f64 / on_s;
+    let off_tps = (bsrv * gen_len) as f64 / off_s;
+    let overhead_pct = (on_s / off_s - 1.0) * 100.0;
+    let r = wall_row(&format!("obs/overhead decode B={bsrv}x{gen_len} tok"), &mut [on_s]);
+    println!(
+        "{}   (metrics on {on_tps:.0} tok/s, off {off_tps:.0} tok/s, overhead {overhead_pct:+.2}%)",
+        r.row()
+    );
+    rows.push(
+        r,
+        vec![
+            ("tokens_per_s_metrics_on", on_tps),
+            ("tokens_per_s_metrics_off", off_tps),
+            ("overhead_pct", overhead_pct),
+        ],
+    );
+}
+
 /// Wire rows: the batched-decode workload again, but through the full
 /// sharded topology — loopback TCP, session router, N worker servers —
 /// plus live-migration latency. The delta between `serving/decode
@@ -364,9 +437,15 @@ fn bench_wire(smoke: bool, cfg: &ModelConfig, flat: &[f32], rows: &mut Rows) {
         }
         let wall = t0.elapsed().as_secs_f64();
         let tps = (sessions * gen_len) as f64 / wall;
-        ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let p50 = ttfts[ttfts.len() / 2];
-        let p99 = ttfts[(ttfts.len() * 99 / 100).min(ttfts.len() - 1)];
+        // quantiles via the shared log-bucket histogram — the same
+        // math `stlt stats` exposes live, so bench and serving
+        // percentiles agree bit-for-bit by construction
+        let mut th = stlt::metrics::Histogram::new();
+        for &t in &ttfts {
+            th.record(t);
+        }
+        let p50 = th.quantile(0.50);
+        let p99 = th.quantile(0.99);
         let r =
             wall_row(&format!("wire/decode W={workers} {sessions}x{gen_len} tok"), &mut [wall]);
         println!(
@@ -505,6 +584,9 @@ fn main() {
 
     // serving: batched continuous decode vs sequential, ttft percentiles
     bench_serving(smoke, &cfg, &flat, &mut rows);
+
+    // observability: metrics-enabled vs disabled on the same workload
+    bench_obs_overhead(smoke, &cfg, &flat, &mut rows);
 
     // sharded serving: router + N wire workers over loopback TCP,
     // decode scaling and live-migration latency

@@ -16,7 +16,7 @@ pub use batcher::{BatchPolicy, Batcher};
 pub use beam::{beam_search, StepScorer};
 pub use queue::BoundedQueue;
 pub use sampling::Sampling;
-pub use server::{FeedResult, Server, ServerOpts, ServerStats, WaveFill};
+pub use server::{FeedResult, Server, ServerOpts, ServerStats};
 pub use session::{
     CarrySnapshot, FinishReason, GenOpts, GenResult, Session, SessionHandle, TokenStream,
 };

@@ -32,13 +32,13 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::metrics::Histogram;
+use crate::obs::{Counter, Gauge, Hist};
 use crate::runtime::artifact::Entry;
 use crate::runtime::exec as stlt_exec;
 use crate::runtime::{BackendKind, Manifest, Runtime, StreamCarry, Tensor};
@@ -107,47 +107,101 @@ pub(crate) enum Request {
     ImportCarry { session: u64, snap: CarrySnapshot, resp: mpsc::Sender<Result<Option<u64>>> },
 }
 
-/// Bounded wave-fill accounting (one wave ≈ one generated token, so an
-/// unbounded per-wave Vec would grow linearly with tokens served).
-#[derive(Default, Clone, Copy, Debug)]
-pub struct WaveFill {
-    pub waves: u64,
-    pub rows_sum: u64,
-    pub max_fill: usize,
+/// Per-server metric set, built from [`crate::obs`] primitives. The
+/// handles are instance-owned (tests assert exact counts on their own
+/// server) and *published* into the global registry at
+/// [`Server::start`] under `server/` / `scheduler/` names — the latest
+/// server wins the names, so `stlt stats` always reads the live
+/// instance without any parallel bookkeeping.
+pub struct ServerStats {
+    pub feeds: Arc<Counter>,
+    pub gens: Arc<Counter>,
+    pub evictions: Arc<Counter>,
+    pub shed: Arc<Counter>,
+    pub cancelled: Arc<Counter>,
+    pub tokens_streamed: Arc<Counter>,
+    pub tokens_generated: Arc<Counter>,
+    /// Wave-fill accounting (feed and decode waves alike): total waves,
+    /// total active rows, and the high-water fill.
+    pub waves: Arc<Counter>,
+    pub wave_rows: Arc<Counter>,
+    pub wave_max_fill: Arc<Gauge>,
+    /// Admission-control queue: current depth + total ever parked.
+    pub park_depth: Arc<Gauge>,
+    pub parked_total: Arc<Counter>,
+    pub feed_latency: Arc<Hist>,
+    pub gen_latency: Arc<Hist>,
+    /// Submission -> first streamed token, per generation.
+    pub ttft_latency: Arc<Hist>,
 }
 
-impl WaveFill {
-    pub fn record(&mut self, fill: usize) {
-        self.waves += 1;
-        self.rows_sum += fill as u64;
-        self.max_fill = self.max_fill.max(fill);
+impl Default for ServerStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServerStats {
+    pub fn new() -> ServerStats {
+        ServerStats {
+            feeds: Arc::new(Counter::new()),
+            gens: Arc::new(Counter::new()),
+            evictions: Arc::new(Counter::new()),
+            shed: Arc::new(Counter::new()),
+            cancelled: Arc::new(Counter::new()),
+            tokens_streamed: Arc::new(Counter::new()),
+            tokens_generated: Arc::new(Counter::new()),
+            waves: Arc::new(Counter::new()),
+            wave_rows: Arc::new(Counter::new()),
+            wave_max_fill: Arc::new(Gauge::new()),
+            park_depth: Arc::new(Gauge::new()),
+            parked_total: Arc::new(Counter::new()),
+            feed_latency: Arc::new(Hist::new()),
+            gen_latency: Arc::new(Hist::new()),
+            ttft_latency: Arc::new(Hist::new()),
+        }
+    }
+
+    /// Record one wave of `fill` active rows.
+    pub fn record_wave(&self, fill: usize) {
+        self.waves.inc();
+        self.wave_rows.add(fill as u64);
+        self.wave_max_fill.set_max(fill as f64);
     }
 
     /// Mean active rows per wave.
-    pub fn mean(&self) -> f64 {
-        if self.waves == 0 {
+    pub fn wave_mean_fill(&self) -> f64 {
+        let waves = self.waves.get();
+        if waves == 0 {
             0.0
         } else {
-            self.rows_sum as f64 / self.waves as f64
+            self.wave_rows.get() as f64 / waves as f64
         }
     }
-}
 
-#[derive(Default)]
-pub struct ServerStats {
-    pub feeds: AtomicU64,
-    pub gens: AtomicU64,
-    pub evictions: AtomicU64,
-    pub shed: AtomicU64,
-    pub cancelled: AtomicU64,
-    pub tokens_streamed: AtomicU64,
-    pub tokens_generated: AtomicU64,
-    /// Active rows per wave (feed and decode waves alike).
-    pub batch_fill: Mutex<WaveFill>,
-    pub feed_latency: Mutex<Histogram>,
-    pub gen_latency: Mutex<Histogram>,
-    /// Submission -> first streamed token, per generation.
-    pub ttft_latency: Mutex<Histogram>,
+    /// Bind this instance's metrics into the global registry (latest
+    /// publication wins; see [`crate::obs::publish`]).
+    pub fn publish(&self) {
+        use crate::obs::{publish, Metric};
+        let c = |name: &str, m: &Arc<Counter>| publish(name, Metric::Counter(Arc::clone(m)));
+        let g = |name: &str, m: &Arc<Gauge>| publish(name, Metric::Gauge(Arc::clone(m)));
+        let h = |name: &str, m: &Arc<Hist>| publish(name, Metric::Hist(Arc::clone(m)));
+        c("server/feeds", &self.feeds);
+        c("server/gens", &self.gens);
+        c("server/evictions", &self.evictions);
+        c("server/shed", &self.shed);
+        c("server/cancelled", &self.cancelled);
+        c("server/tokens_streamed", &self.tokens_streamed);
+        c("server/tokens_generated", &self.tokens_generated);
+        c("server/waves", &self.waves);
+        c("server/wave_rows", &self.wave_rows);
+        g("server/wave_max_fill", &self.wave_max_fill);
+        g("scheduler/park_depth", &self.park_depth);
+        c("scheduler/parked_total", &self.parked_total);
+        h("server/feed_seconds", &self.feed_latency);
+        h("server/gen_seconds", &self.gen_latency);
+        h("server/ttft_seconds", &self.ttft_latency);
+    }
 }
 
 /// Shared client-side state behind [`Server`] and every
@@ -167,7 +221,7 @@ impl ServerCore {
         match self.queue.push((req, Instant::now()), Duration::from_secs(30)) {
             Ok(()) => Ok(()),
             Err(PushError::Timeout) => {
-                self.stats.shed.fetch_add(1, Ordering::Relaxed);
+                self.stats.shed.inc();
                 Err(anyhow!("server overloaded (backpressure timeout)"))
             }
             Err(PushError::Closed) => Err(anyhow!("server shut down")),
@@ -246,6 +300,13 @@ impl Server {
 
         let queue = Arc::new(BoundedQueue::new(opts.queue_cap));
         let stats = Arc::new(ServerStats::default());
+        // this server's instance metrics become the registry's live
+        // view (`stlt stats` and Stats frames read the latest server)
+        stats.publish();
+        // per-node sigma/omega/T + half-life gauges: the paper's
+        // interpretability story, sampled from the weights we serve
+        #[cfg(feature = "native")]
+        crate::runtime::native_stlt::publish_node_gauges(&stream_entry.config, &flat);
         let core = Arc::new(ServerCore {
             queue: Arc::clone(&queue),
             stats: Arc::clone(&stats),
@@ -529,6 +590,7 @@ impl ModelThread {
                     g.cancelled = true;
                 }
             }
+            self.stats.park_depth.set(self.parked.len() as f64);
             if !self.feeds.is_empty() {
                 self.feed_wave();
             }
@@ -549,6 +611,7 @@ impl ModelThread {
     }
 
     fn intake(&mut self, req: Request, t0: Instant) {
+        let _span = crate::obs::span("scheduler", "intake");
         match req {
             Request::Feed { session, tokens, count_loss, resp } => {
                 self.reap_cancelled(session);
@@ -589,6 +652,7 @@ impl ModelThread {
                     }
                     Err(AcquireError::Capacity) => {
                         let req = Request::Feed { session, tokens, count_loss, resp };
+                        self.stats.parked_total.inc();
                         self.parked.push_back((req, t0));
                     }
                     Err(AcquireError::Other(e)) => {
@@ -622,6 +686,7 @@ impl ModelThread {
                     match self.acquire(session) {
                         Ok(acq) => bound = Some(acq),
                         Err(AcquireError::Capacity) => {
+                            self.stats.parked_total.inc();
                             self.parked.push_back((Request::Generate { session, opts, tx }, t0));
                             return;
                         }
@@ -714,7 +779,7 @@ impl ModelThread {
                         let _ = resp.send(Ok(None));
                     }
                     Import::Evicted(v) => {
-                        self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+                        self.stats.evictions.inc();
                         let _ = resp.send(Ok(Some(v)));
                     }
                     Import::InFlight(_) => {
@@ -735,6 +800,7 @@ impl ModelThread {
                             u_shape: carry.u_shape,
                             tokens_seen: snap.tokens_seen,
                         };
+                        self.stats.parked_total.inc();
                         self.parked.push_back((Request::ImportCarry { session, snap, resp }, t0));
                     }
                 }
@@ -770,7 +836,7 @@ impl ModelThread {
         for (req, t0) in self.parked.drain(..) {
             match req {
                 Request::Generate { session: s, tx, .. } if s == session => {
-                    self.stats.cancelled.fetch_add(1, Ordering::Relaxed);
+                    self.stats.cancelled.inc();
                     let _ = tx.send(StreamItem::End(Ok(FinishReason::Cancelled)));
                 }
                 Request::Feed { session: s, resp, .. } if feeds_too && s == session => {
@@ -799,7 +865,7 @@ impl ModelThread {
             let carry = StreamCarry::zeros(&self.stream_entry_single());
             match self.pool.admit(session, carry) {
                 Admit::Evicted(v) => {
-                    self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+                    self.stats.evictions.inc();
                     evicted = Some(v);
                 }
                 Admit::Rejected => return Err(AcquireError::Capacity),
@@ -849,6 +915,7 @@ impl ModelThread {
     /// each through the `stream_batch` artifact, then rotate them
     /// behind any sessions that did not make this wave.
     fn feed_wave(&mut self) {
+        let _span = crate::obs::span("scheduler", "feed_wave");
         let b = self.b_srv;
         let c = self.chunk;
         let wave = self.feeds.len().min(b);
@@ -887,7 +954,7 @@ impl ModelThread {
         u_all.resize(b * u_stride, 0.0);
         if any {
             let fill = consumed.iter().filter(|&&x| x > 0).count();
-            self.stats.batch_fill.lock().unwrap().record(fill);
+            self.stats.record_wave(fill);
             let e = &self.stream_entry;
             let out = self.rt.run_with_param_buffer(
                 e,
@@ -923,7 +990,7 @@ impl ModelThread {
                 p.nll += nll[i] as f64;
                 p.cnt += cnt[i] as f64;
                 p.off += consumed[i];
-                self.stats.tokens_streamed.fetch_add(consumed[i] as u64, Ordering::Relaxed);
+                self.stats.tokens_streamed.add(consumed[i] as u64);
             }
         }
         // completion sweep (reverse so removals keep indices valid):
@@ -942,8 +1009,8 @@ impl ModelThread {
             }
             let p = ft.queue.pop_front().unwrap();
             ft.consumed_total += p.off as u64;
-            self.stats.feeds.fetch_add(1, Ordering::Relaxed);
-            self.stats.feed_latency.lock().unwrap().record(p.t0.elapsed().as_secs_f64());
+            self.stats.feeds.inc();
+            self.stats.feed_latency.record(p.t0.elapsed().as_secs_f64());
             let fr = FeedResult { nll_sum: p.nll, count: p.cnt, evicted: p.evicted };
             let _ = p.resp.send(Ok(fr));
             if ft.queue.is_empty() {
@@ -1024,6 +1091,7 @@ impl ModelThread {
     /// supports it, per-row otherwise — then rotate survivors behind
     /// waiting sessions so every generation makes progress.
     fn decode_wave(&mut self) {
+        let _span = crate::obs::span("scheduler", "decode_wave");
         // cancelled (or zero-budget) tasks finish at the wave boundary
         let mut i = 0;
         while i < self.gens.len() {
@@ -1064,7 +1132,7 @@ impl ModelThread {
         if wave_idx.is_empty() {
             return;
         }
-        self.stats.batch_fill.lock().unwrap().record(wave_idx.len());
+        self.stats.record_wave(wave_idx.len());
         let mut wave: Vec<GenTask> = Vec::with_capacity(wave_idx.len());
         for &i in wave_idx.iter().rev() {
             wave.push(self.gens.remove(i));
@@ -1111,9 +1179,9 @@ impl ModelThread {
             g.token = tok;
             g.produced += 1;
             if g.produced == 1 {
-                self.stats.ttft_latency.lock().unwrap().record(g.t0.elapsed().as_secs_f64());
+                self.stats.ttft_latency.record(g.t0.elapsed().as_secs_f64());
             }
-            self.stats.tokens_generated.fetch_add(1, Ordering::Relaxed);
+            self.stats.tokens_generated.inc();
             if g.tx.send(StreamItem::Token(tok)).is_err() {
                 // client dropped the stream: implicit cancel
                 self.finish_gen(g, FinishReason::Cancelled);
@@ -1161,10 +1229,10 @@ impl ModelThread {
         if let Some(carry) = g.carry {
             self.pool.checkin(g.session, carry, g.produced as u64);
         }
-        self.stats.gens.fetch_add(1, Ordering::Relaxed);
-        self.stats.gen_latency.lock().unwrap().record(g.t0.elapsed().as_secs_f64());
+        self.stats.gens.inc();
+        self.stats.gen_latency.record(g.t0.elapsed().as_secs_f64());
         if reason == FinishReason::Cancelled {
-            self.stats.cancelled.fetch_add(1, Ordering::Relaxed);
+            self.stats.cancelled.inc();
         }
         let _ = g.tx.send(StreamItem::End(Ok(reason)));
     }
@@ -1175,10 +1243,10 @@ impl ModelThread {
         if let Some(carry) = g.carry {
             self.pool.checkin(g.session, carry, g.produced as u64);
         }
-        self.stats.gens.fetch_add(1, Ordering::Relaxed);
+        self.stats.gens.inc();
         // errored generations stay in the latency histogram (they are
         // often the slowest ones; dropping them would read optimistic)
-        self.stats.gen_latency.lock().unwrap().record(g.t0.elapsed().as_secs_f64());
+        self.stats.gen_latency.record(g.t0.elapsed().as_secs_f64());
         let _ = g.tx.send(StreamItem::End(Err(err)));
     }
 }

@@ -36,6 +36,9 @@ pub struct TrainOpts {
     /// checkpoint to resume from (validated against the artifact)
     pub resume: Option<String>,
     pub domain: u64,
+    /// every N steps: refresh the per-node `node/` gauges from the live
+    /// weights and log a one-line metrics digest (0 = off)
+    pub metrics_every: u64,
 }
 
 impl Default for TrainOpts {
@@ -49,6 +52,7 @@ impl Default for TrainOpts {
             checkpoint: None,
             resume: None,
             domain: 0,
+            metrics_every: 0,
         }
     }
 }
@@ -127,11 +131,13 @@ pub fn train_lm(
         // whatever the lowered HLO does and ignores grad_ckpt_segment)
         if mcfg.arch == "stlt" && rt.platform() == "native" {
             let n = step_exec.n_plus_1.saturating_sub(1);
+            let bytes = crate::train::tape_bytes(mcfg, n);
+            crate::obs::gauge("train/tape_bytes").set(bytes as f64);
             crate::info!(
                 "train",
                 "{artifact_base}: activation tape {:.1} MiB/row + transient grad scratch \
                  (grad_ckpt_segment {} of {n} tok)",
-                crate::train::tape_bytes(mcfg, n) as f64 / (1024.0 * 1024.0),
+                bytes as f64 / (1024.0 * 1024.0),
                 crate::train::seg_len(mcfg, n),
             );
         }
@@ -175,6 +181,13 @@ pub fn train_lm(
             let ppl = eval_lm(&eval_exec, &state.flat, &cfg, opts, 0.0)?;
             crate::info!("train", "{artifact_base} step {:4} valid ppl {:.3}", step + 1, ppl);
             report.eval_curve.push((step + 1, ppl));
+        }
+        if opts.metrics_every > 0 && (step + 1) % opts.metrics_every == 0 {
+            // the interpretability heartbeat: per-node sigma/omega/T and
+            // half-life gauges track the weights as they train
+            #[cfg(feature = "native")]
+            crate::runtime::native_stlt::publish_node_gauges(&entry.config, &state.flat);
+            crate::info!("train", "metrics: {}", crate::obs::summary_line());
         }
         report.steps_done = step + 1;
     }

@@ -58,6 +58,7 @@ pub fn train_or_load(
         checkpoint: Some(ckpt.to_string_lossy().into_owned()),
         resume: None,
         domain: 0,
+        metrics_every: 0,
     };
     let report = coordinator::train_lm(rt, manifest, artifact_base, &opts)?;
     Ok((coordinator::load_checkpoint(&ckpt)?, Some(report)))

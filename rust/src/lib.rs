@@ -45,6 +45,7 @@ pub mod harness;
 pub mod interpret;
 pub mod metrics;
 pub mod net;
+pub mod obs;
 pub mod runtime;
 pub mod tokenizer;
 #[cfg(feature = "native")]

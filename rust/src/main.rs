@@ -21,7 +21,15 @@
 //!   router  --listen ADDR --workers ADDR[,ADDR...]
 //!           front-end: hash-routes sessions across workers, speaks
 //!           the same wire protocol to clients, migrates carries
+//!   stats   --connect ADDR
+//!           fetch a live metrics snapshot (exposition text) from a
+//!           worker or router over the wire protocol
 //!   inspect --artifact NAME [--ckpt PATH]               learned-parameter dump
+//!
+//! Observability: metrics are on by default (`STLT_METRICS=0` to
+//! disable); `--metrics-every N` logs a one-line digest every N seconds
+//! (serve) or steps (train); `--trace FILE` (serve) writes Chrome
+//! trace-event JSON for Perfetto.
 //!
 //! `--backend native|xla` selects the execution substrate (default:
 //! native — pure Rust, no XLA/PJRT needed). Every subcommand including
@@ -42,6 +50,7 @@ use stlt::util::cli::Args;
 
 fn main() {
     stlt::util::logging::init();
+    stlt::obs::init_from_env();
     if let Err(e) = run() {
         eprintln!("error: {e:#}");
         std::process::exit(1);
@@ -49,14 +58,15 @@ fn main() {
 }
 
 fn usage() -> String {
-    "usage: stlt <info|train|eval|stream|generate|serve|worker|router|inspect> \
+    "usage: stlt <info|train|eval|stream|generate|serve|worker|router|stats|inspect> \
      [--backend native|xla] \
      [--artifact NAME] [--steps N] [--ckpt PATH] [--resume PATH] [--config FILE] \
      [--set key=value ...] [--grad-ckpt C] [--noise X] [--len N] [--doc-len N] \
      [--sessions N] [--prompt-len N] [--gen-len N] \
      [--sampling greedy|temp:T|topk:K:T|topp:P:T] \
      [--connect ADDR] [--listen ADDR] [--workers ADDR,...] \
-     [--max-sessions N] [--queue-cap N]"
+     [--max-sessions N] [--queue-cap N] \
+     [--metrics-every N] [--trace FILE]"
         .to_string()
 }
 
@@ -156,6 +166,7 @@ fn run() -> Result<()> {
                 resume: args.get("resume").map(String::from),
                 domain: args.get_u64("domain", cfg.i64_or("data.domain", 0) as u64)
                     .map_err(|e| anyhow!(e))?,
+                metrics_every: args.get_u64("metrics-every", 0).map_err(|e| anyhow!(e))?,
             };
             let rt = Runtime::new(backend)?;
             let report = coordinator::train_lm(&rt, &manifest, &artifact, &opts)?;
@@ -202,7 +213,7 @@ fn run() -> Result<()> {
                 doc_len, dt, doc_len as f64 / dt, backend.name(),
                 stlt::metrics::perplexity(r.nll_sum, r.count)
             );
-            println!("feed latency: {}", server.stats.feed_latency.lock().unwrap().summary());
+            println!("feed latency: {}", server.stats.feed_latency.summary());
             server.shutdown();
             Ok(())
         }
@@ -246,6 +257,18 @@ fn run() -> Result<()> {
             )
             .map_err(|e| anyhow!(e))?;
             let vocab = manifest.get(&format!("{artifact}.stream_batch"))?.config.vocab;
+            let metrics_every = args.get_u64("metrics-every", 0).map_err(|e| anyhow!(e))?;
+            let trace_file = args.get("trace").map(String::from);
+            if trace_file.is_some() {
+                stlt::obs::set_tracing(true);
+            }
+            if metrics_every > 0 {
+                // detached heartbeat: dies with the process
+                std::thread::spawn(move || loop {
+                    std::thread::sleep(std::time::Duration::from_secs(metrics_every));
+                    stlt::info!("obs", "{}", stlt::obs::summary_line());
+                });
+            }
             // local in-process server, or a wire connection to a
             // worker/router — the per-session workload below drives
             // both through the same `Session` trait
@@ -274,9 +297,14 @@ fn run() -> Result<()> {
                 }
             };
             let t0 = std::time::Instant::now();
+            // client-observed first-token latency, shared across client
+            // threads via the metrics registry (the same histogram
+            // implementation every other latency in the process uses)
+            let ttft_hist = stlt::obs::hist("serve_cli/ttft_seconds");
             let mut clients = Vec::new();
             for s in 0..sessions {
                 let target = target.clone();
+                let ttft_hist = std::sync::Arc::clone(&ttft_hist);
                 clients.push(std::thread::spawn(move || -> Result<(usize, f64, f64)> {
                     use stlt::coordinator::Session;
                     let mut sess: Box<dyn Session> = match &target {
@@ -303,6 +331,7 @@ fn run() -> Result<()> {
                         n += 1;
                         if n == 1 {
                             ttft = tg0.elapsed().as_secs_f64();
+                            ttft_hist.record(ttft);
                         }
                     }
                     sess.close()?;
@@ -326,26 +355,25 @@ fn run() -> Result<()> {
                 backend.name(),
                 total_tokens as f64 / dt
             );
+            println!("client ttft: {}", ttft_hist.summary());
             if let Target::Local(server) = target {
-                println!("ttft: {}", server.stats.ttft_latency.lock().unwrap().summary());
+                println!("ttft: {}", server.stats.ttft_latency.summary());
+                println!("feed latency: {}", server.stats.feed_latency.summary());
                 println!(
-                    "feed latency: {}",
-                    server.stats.feed_latency.lock().unwrap().summary()
+                    "waves: {} (mean fill {:.2}, max {}), evictions {}, cancelled {}",
+                    server.stats.waves.get(),
+                    server.stats.wave_mean_fill(),
+                    server.stats.wave_max_fill.get() as u64,
+                    server.stats.evictions.get(),
+                    server.stats.cancelled.get(),
                 );
-                {
-                    let fill = *server.stats.batch_fill.lock().unwrap();
-                    println!(
-                        "waves: {} (mean fill {:.2}, max {}), evictions {}, cancelled {}",
-                        fill.waves,
-                        fill.mean(),
-                        fill.max_fill,
-                        server.stats.evictions.load(std::sync::atomic::Ordering::Relaxed),
-                        server.stats.cancelled.load(std::sync::atomic::Ordering::Relaxed),
-                    );
-                }
                 std::sync::Arc::try_unwrap(server)
                     .map_err(|_| anyhow!("server still shared"))?
                     .shutdown();
+            }
+            if let Some(path) = trace_file {
+                std::fs::write(&path, stlt::obs::drain_json())?;
+                println!("trace written to {path}");
             }
             Ok(())
         }
@@ -395,6 +423,18 @@ fn run() -> Result<()> {
             loop {
                 std::thread::park();
             }
+        }
+        Some("stats") => {
+            let addr = args
+                .get("connect")
+                .ok_or_else(|| anyhow!("stats requires --connect ADDR (worker or router)"))?;
+            let client = stlt::net::Client::connect(addr)?;
+            let text = client.stats()?;
+            // validate before printing so scripts piping this output
+            // never scrape a half-broken document
+            stlt::obs::parse(&text).map_err(|e| anyhow!("{addr}: bad stats payload: {e}"))?;
+            print!("{text}");
+            Ok(())
         }
         Some("inspect") => {
             let artifact = args.get_or("artifact", "lm_stlt_tiny");

@@ -54,6 +54,14 @@ impl OnlineStats {
     }
 }
 
+/// Number of histogram slots: 200 log-spaced buckets over [1e-6, 100]
+/// seconds plus an underflow (index 0) and an overflow (index 201)
+/// bucket. [`crate::obs::Hist`] mirrors this geometry with atomic slots
+/// and snapshots back via [`Histogram::from_buckets`], so every
+/// quantile anyone reports comes from the one [`Histogram::quantile`]
+/// implementation.
+pub const HIST_SLOTS: usize = 202;
+
 /// Log-spaced latency histogram from 1us to ~100s; percentile queries by
 /// bucket interpolation — fixed memory, O(1) insert, good enough for
 /// serving telemetry.
@@ -80,7 +88,21 @@ impl Histogram {
         Histogram { buckets: vec![0; n + 2], total: 0, lo, ratio: (hi / lo).powf(1.0 / n as f64) }
     }
 
-    fn bucket_of(&self, x: f64) -> usize {
+    /// Rebuild a histogram from raw slot counts in [`HIST_SLOTS`]
+    /// layout — the bridge back from an externally-accumulated copy of
+    /// the same geometry (the atomic [`crate::obs::Hist`]).
+    pub fn from_buckets(buckets: Vec<u64>) -> Self {
+        assert_eq!(buckets.len(), HIST_SLOTS, "bucket layout mismatch");
+        let total = buckets.iter().sum();
+        let mut h = Histogram::new();
+        h.buckets = buckets;
+        h.total = total;
+        h
+    }
+
+    /// Slot index a sample lands in (public so the atomic mirror in
+    /// [`crate::obs`] records into bit-identical buckets).
+    pub fn bucket_of(&self, x: f64) -> usize {
         if x < self.lo {
             return 0;
         }
@@ -173,5 +195,23 @@ mod tests {
     fn empty_histogram() {
         let h = Histogram::new();
         assert_eq!(h.quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn from_buckets_round_trips_quantiles() {
+        let mut h = Histogram::new();
+        for i in 1..=500 {
+            h.record(i as f64 * 2e-4);
+        }
+        let mut raw = vec![0u64; HIST_SLOTS];
+        let probe = Histogram::new();
+        for i in 1..=500 {
+            raw[probe.bucket_of(i as f64 * 2e-4)] += 1;
+        }
+        let h2 = Histogram::from_buckets(raw);
+        assert_eq!(h2.count(), h.count());
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(h2.quantile(q).to_bits(), h.quantile(q).to_bits());
+        }
     }
 }

@@ -110,6 +110,25 @@ impl Client {
         }
     }
 
+    /// Fetch the peer's metrics snapshot in exposition format (see
+    /// [`crate::obs::expo`]). Works against both workers and routers.
+    pub fn stats(&self) -> Result<String> {
+        let req = self.fresh_req();
+        match self.request(req, Frame::Stats { req })? {
+            Frame::StatsOk { version, text, .. } => {
+                if version != crate::obs::EXPO_VERSION {
+                    bail!(
+                        "{}: stats exposition version {version}, this client reads {}",
+                        self.inner.peer,
+                        crate::obs::EXPO_VERSION
+                    );
+                }
+                Ok(text)
+            }
+            f => bail!("unexpected reply to Stats: {}", f.name()),
+        }
+    }
+
     fn fresh_req(&self) -> u64 {
         self.inner.next_req.fetch_add(1, Ordering::Relaxed)
     }
@@ -207,6 +226,7 @@ impl ClientInner {
             | Frame::FeedOk { req, .. }
             | Frame::Carry { req, .. }
             | Frame::ImportOk { req, .. }
+            | Frame::StatsOk { req, .. }
             | Frame::Ack { req } => {
                 if let Some(Pending::Resp(tx)) = self.pending.lock().unwrap().remove(&req) {
                     let _ = tx.send(Ok(frame));

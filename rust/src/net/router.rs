@@ -34,6 +34,10 @@ use crate::coordinator::{CarrySnapshot, FeedResult, GenOpts, Session, TokenStrea
 use super::client::{Client, RemoteSession};
 use super::worker::{spawn_node, Node, WireServer};
 
+static MIGRATIONS: crate::obs::LazyCounter = crate::obs::LazyCounter::new("router/migrations");
+static MIGRATE_SECONDS: crate::obs::LazyHist = crate::obs::LazyHist::new("router/migrate_seconds");
+static SESSIONS_OPEN: crate::obs::LazyGauge = crate::obs::LazyGauge::new("router/sessions_open");
+
 /// Router-allocated session ids start here: disjoint from both
 /// `Server::open_session` ids (1<<32) and small hand-picked ids.
 const ROUTER_SESSION_BASE: u64 = 1 << 40;
@@ -81,6 +85,11 @@ impl Router {
             let client = Client::connect(addr)?;
             workers.push(WorkerLink { addr: addr.clone(), client });
         }
+        // register the router's metric families up front so a stats
+        // scrape sees them (zeroed) even before the first migration
+        crate::obs::counter("router/migrations");
+        crate::obs::hist("router/migrate_seconds");
+        crate::obs::gauge("router/sessions_open");
         Ok(Router {
             core: Arc::new(RouterCore {
                 workers,
@@ -266,13 +275,19 @@ impl RouterCore {
             bail!("session {id} is already open on this router");
         }
         sessions.insert(id, routed);
+        SESSIONS_OPEN.set(sessions.len() as f64);
         Ok(id)
     }
 
     fn close(&self, session: u64) -> Result<()> {
-        let routed = match self.sessions.lock().unwrap().remove(&session) {
-            Some(r) => r,
-            None => return Ok(()),
+        let routed = {
+            let mut sessions = self.sessions.lock().unwrap();
+            let r = sessions.remove(&session);
+            SESSIONS_OPEN.set(sessions.len() as f64);
+            match r {
+                Some(r) => r,
+                None => return Ok(()),
+            }
         };
         let mut place = routed.place.lock().unwrap();
         place.remote.close()
@@ -290,17 +305,29 @@ impl RouterCore {
         if place.worker == to {
             return Ok(());
         }
+        let _span = crate::obs::span("router", "migrate");
+        let t0 = std::time::Instant::now();
         // Export waits for nothing: the placement lock means no op of
         // ours is in flight, and the worker refuses if some *other*
         // path holds the carry.
-        let snap = place.remote.export_carry()?;
+        let snap = {
+            let _s = crate::obs::span("router", "migrate_export");
+            place.remote.export_carry()?
+        };
         // Same session id on the destination — the RNG-seed coupling
         // (rng_seed ^ session) is what keeps continuations bitwise.
-        let mut fresh = self.workers[to].client.open(session)?;
-        if let Err(e) = fresh.import_carry(snap) {
-            let _ = fresh.close();
-            return Err(e.context(format!("importing carry on worker {to}")));
+        let mut fresh = {
+            let _s = crate::obs::span("router", "migrate_open");
+            self.workers[to].client.open(session)?
+        };
+        {
+            let _s = crate::obs::span("router", "migrate_import");
+            if let Err(e) = fresh.import_carry(snap) {
+                let _ = fresh.close();
+                return Err(e.context(format!("importing carry on worker {to}")));
+            }
         }
+        let _s = crate::obs::span("router", "migrate_swap");
         let old_worker = place.worker;
         let mut old = std::mem::replace(&mut *place, Placement { worker: to, remote: fresh });
         // Best-effort: the source may be mid-death during a drain.
@@ -310,6 +337,8 @@ impl RouterCore {
                 "migrate: closing session {session} on worker {old_worker} failed: {e:#}"
             );
         }
+        MIGRATIONS.inc();
+        MIGRATE_SECONDS.record(t0.elapsed().as_secs_f64());
         Ok(())
     }
 }

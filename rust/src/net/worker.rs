@@ -53,6 +53,13 @@ pub(crate) trait Node: Send + Sync {
     fn node_close(&self, id: u64) -> Result<()>;
     fn node_export(&self, id: u64) -> Result<CarrySnapshot>;
     fn node_import(&self, id: u64, snap: CarrySnapshot) -> Result<Option<u64>>;
+    /// Render this process's metrics registry (exposition text). The
+    /// default covers every node kind: a worker's registry carries its
+    /// server/scheduler/panel families, a router's its migration
+    /// families — both live in the same process-wide registry.
+    fn node_stats(&self) -> Result<String> {
+        Ok(crate::obs::render())
+    }
 }
 
 /// The worker-side [`Node`]: one continuous-batching [`Server`] plus
@@ -398,6 +405,18 @@ fn conn_loop(node: &Arc<dyn Node>, stream: Stream) -> Result<()> {
                     }
                 });
             }
+            // Stats needs no session and never blocks on the model
+            // thread: render inline on the reader (like Cancel).
+            Frame::Stats { req } => match node.node_stats() {
+                Ok(text) => {
+                    let _ = out_tx.send(Frame::StatsOk {
+                        req,
+                        version: crate::obs::EXPO_VERSION,
+                        text,
+                    });
+                }
+                Err(e) => send_err(req, format!("{e:#}")),
+            },
             Frame::Hello { .. } => break Err(anyhow!("unexpected second Hello")),
             f => break Err(anyhow!("unexpected server-side frame {} from client", f.name())),
         }

@@ -1,0 +1,143 @@
+//! `stlt`-text exposition format: the line protocol `stlt stats`
+//! prints and the wire `StatsOk` frame carries.
+//!
+//! ```text
+//! # stlt-metrics v1
+//! counter server/feeds 12
+//! gauge scheduler/park_depth 0
+//! hist server/ttft_seconds 12 0.000912 0.003113 0.004920
+//! ```
+//!
+//! One metric per line: `KIND NAME VALUE...`, name-sorted. Counter
+//! values are u64; gauge values f64 (Rust `Display`, round-trips
+//! through `f64::from_str`); hist lines carry `count p50_s p95_s
+//! p99_s` computed by the shared [`crate::metrics::Histogram`]
+//! implementation. Lines starting with `#` are comments; the first
+//! line names the format version ([`EXPO_VERSION`], also carried as a
+//! field of the `StatsOk` frame so old clients can refuse new text).
+
+use super::registry::{entries, Metric};
+
+/// Version of the exposition text format (bump on breaking changes).
+pub const EXPO_VERSION: u16 = 1;
+
+/// Render the whole registry in exposition format.
+pub fn render() -> String {
+    let mut out = format!("# stlt-metrics v{EXPO_VERSION}\n");
+    for (name, metric) in entries() {
+        match metric {
+            Metric::Counter(c) => {
+                out.push_str(&format!("counter {name} {}\n", c.get()));
+            }
+            Metric::Gauge(g) => {
+                out.push_str(&format!("gauge {name} {}\n", g.get()));
+            }
+            Metric::Hist(h) => {
+                let s = h.snapshot();
+                out.push_str(&format!(
+                    "hist {name} {} {} {} {}\n",
+                    s.count(),
+                    s.quantile(0.5),
+                    s.quantile(0.95),
+                    s.quantile(0.99)
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// One-line digest for `--metrics-every` heartbeats: every counter and
+/// gauge as `name=value`, every histogram as `name.p50_ms=..`, skipping
+/// the (large) per-node `node/` family.
+pub fn summary_line() -> String {
+    let mut parts = Vec::new();
+    for (name, metric) in entries() {
+        if name.starts_with("node/") {
+            continue;
+        }
+        match metric {
+            Metric::Counter(c) => parts.push(format!("{name}={}", c.get())),
+            Metric::Gauge(g) => parts.push(format!("{name}={:.3}", g.get())),
+            Metric::Hist(h) => {
+                let s = h.snapshot();
+                parts.push(format!(
+                    "{name}.n={} {name}.p50_ms={:.3}",
+                    s.count(),
+                    s.quantile(0.5) * 1e3
+                ));
+            }
+        }
+    }
+    parts.join(" ")
+}
+
+/// Parse one exposition document into `(kind, name, values)` rows —
+/// used by tests and by anything scraping `stlt stats` output.
+pub fn parse(text: &str) -> Result<Vec<(String, String, Vec<f64>)>, String> {
+    let mut rows = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let kind = it.next().ok_or_else(|| format!("empty row: {line:?}"))?;
+        let name = it.next().ok_or_else(|| format!("row without name: {line:?}"))?;
+        let vals: Result<Vec<f64>, _> = it.map(|v| v.parse::<f64>()).collect();
+        let vals = vals.map_err(|e| format!("bad value in {line:?}: {e}"))?;
+        let want = match kind {
+            "counter" | "gauge" => 1,
+            "hist" => 4,
+            other => return Err(format!("unknown metric kind {other:?}")),
+        };
+        if vals.len() != want {
+            return Err(format!("{kind} row wants {want} values, got {}: {line:?}", vals.len()));
+        }
+        rows.push((kind.to_string(), name.to_string(), vals));
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::registry;
+    use super::*;
+
+    #[test]
+    fn render_parse_round_trip() {
+        registry::counter("expo_test/ticks").add(7);
+        registry::gauge("expo_test/depth").set(1.5);
+        registry::hist("expo_test/lat").record(0.01);
+        let text = render();
+        assert!(text.starts_with("# stlt-metrics v1\n"), "{text}");
+        let rows = parse(&text).expect("rendered text parses");
+        let find = |k: &str, n: &str| {
+            rows.iter().find(|(kind, name, _)| kind == k && name == n).cloned()
+        };
+        let (_, _, c) = find("counter", "expo_test/ticks").expect("counter row");
+        assert!(c[0] >= 7.0);
+        let (_, _, g) = find("gauge", "expo_test/depth").expect("gauge row");
+        assert_eq!(g[0], 1.5);
+        let (_, _, h) = find("hist", "expo_test/lat").expect("hist row");
+        assert!(h[0] >= 1.0, "count recorded");
+        assert!(h[1] > 0.0 && h[1] <= 0.01, "p50 is the bucket lower edge");
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(parse("counter only_name\n").is_err());
+        assert!(parse("widget a/b 1\n").is_err());
+        assert!(parse("gauge a/b not_a_number\n").is_err());
+        assert!(parse("# comment\n\n").unwrap().is_empty());
+    }
+
+    #[test]
+    fn summary_line_skips_node_family() {
+        registry::gauge("node/l0/n0/half_life").set(9.0);
+        registry::counter("expo_test/in_line").inc();
+        let line = summary_line();
+        assert!(!line.contains("node/"), "{line}");
+        assert!(line.contains("expo_test/in_line="), "{line}");
+    }
+}

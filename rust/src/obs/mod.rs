@@ -1,0 +1,58 @@
+//! Dependency-free observability: metrics registry + span tracer +
+//! exposition plumbing.
+//!
+//! Three layers (ROADMAP: production serving needs a window into
+//! itself; PAPER: per-node sigma/omega/T are the interpretability
+//! story and deserve first-class telemetry):
+//!
+//! * [`registry`] — atomic counters / gauges / fixed-bucket latency
+//!   histograms published under stable names. Enabled by default;
+//!   disabling ([`set_metrics`]) reduces every instrumented site to a
+//!   single relaxed atomic load (the `obs/decode` bench rows pin the
+//!   enabled-vs-disabled decode cost).
+//! * [`trace`] — spans around the load-bearing paths (scheduler waves,
+//!   panel packing, scatter chunks, backward segment replay, wire
+//!   encode/decode, carry migration), buffered in per-thread rings and
+//!   exported as Chrome trace-event JSON for Perfetto. Off by default.
+//! * [`expo`] — the `stlt`-text exposition format behind `stlt stats
+//!   --connect`, the wire `Stats`/`StatsOk` frames, and the
+//!   `--metrics-every` heartbeat lines.
+//!
+//! ## Metric name catalogue
+//!
+//! | family | metrics |
+//! |---|---|
+//! | `server/` | `feeds`, `gens`, `evictions`, `shed`, `cancelled`, `tokens_streamed`, `tokens_generated`, `waves`, `wave_rows`, `wave_max_fill`, `feed_seconds`, `gen_seconds`, `ttft_seconds` |
+//! | `scheduler/` | `park_depth`, `parked_total` |
+//! | `wire/` | `frames_tx`, `frames_rx`, `bytes_tx`, `bytes_rx` |
+//! | `router/` | `migrations`, `migrate_seconds`, `sessions_open` |
+//! | `panels/` | `bind_hits`, `bind_packs` |
+//! | `train/` | `tape_bytes`, `segments_replayed` |
+//! | `node/` | `l{L}/n{K}/{sigma,omega,t,half_life}`, `l{L}/half_life_mean` |
+//! | `serve_cli/` | `ttft_seconds` (client-observed, `stlt serve`) |
+
+pub mod expo;
+pub mod registry;
+pub mod trace;
+
+pub use expo::{parse, render, summary_line, EXPO_VERSION};
+pub use registry::{
+    counter, gauge, hist, metrics_on, publish, set_metrics, Counter, Gauge, Hist, LazyCounter,
+    LazyGauge, LazyHist, Metric,
+};
+pub use trace::{drain_json, set_tracing, span, trace_on, SpanGuard};
+
+/// Apply the `STLT_METRICS` / `STLT_TRACE` env switches (`0`/`off` to
+/// disable metrics; any non-empty value to enable tracing). Called from
+/// `main`; library users flip the flags directly.
+pub fn init_from_env() {
+    if let Ok(v) = std::env::var("STLT_METRICS") {
+        let off = matches!(v.as_str(), "0" | "off" | "false");
+        set_metrics(!off);
+    }
+    if let Ok(v) = std::env::var("STLT_TRACE") {
+        if !v.is_empty() && v != "0" {
+            set_tracing(true);
+        }
+    }
+}

@@ -1,0 +1,427 @@
+//! Lock-light metrics registry: atomic counters, gauges, and
+//! fixed-bucket latency histograms, published under stable names.
+//!
+//! Design:
+//!
+//! * **Hot path never allocates or locks.** A metric handle is an
+//!   `Arc` around plain atomics; `inc`/`set`/`record` are one relaxed
+//!   flag load plus one-to-two relaxed RMWs. With metrics disabled
+//!   ([`set_metrics`]) the cost collapses to the single flag load.
+//! * **Registration is the only synchronized step.** The global name
+//!   table is a `Mutex<BTreeMap>` touched at metric creation /
+//!   (re)binding and at render time only.
+//! * **Per-instance scoping via rebinding.** Components that own their
+//!   own metric set (one [`crate::coordinator::ServerStats`] per
+//!   server) create free-standing handles and *publish* them under
+//!   registry names; the latest publication wins. This keeps instance
+//!   counters exact (tests assert on their own server) while `stlt
+//!   stats` sees the live instance — one data structure, no parallel
+//!   bookkeeping.
+//! * **One quantile implementation.** [`Hist`] mirrors the
+//!   [`crate::metrics::Histogram`] bucket geometry with atomic slots
+//!   and snapshots back into it, so every p50/p95/p99 anyone prints —
+//!   CLI summaries, `Stats` frames, bench rows — comes from
+//!   `Histogram::quantile`.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::metrics::stats::{Histogram, HIST_SLOTS};
+
+static METRICS_ON: AtomicBool = AtomicBool::new(true);
+
+/// Is metric collection enabled? One relaxed load — this is the entire
+/// disabled-path cost of any instrumented call site.
+#[inline]
+pub fn metrics_on() -> bool {
+    METRICS_ON.load(Ordering::Relaxed)
+}
+
+/// Globally enable/disable metric collection (default: enabled). While
+/// disabled, counters/gauges/histograms silently drop updates; the
+/// overhead bench row compares decode throughput across this switch.
+pub fn set_metrics(on: bool) {
+    METRICS_ON.store(on, Ordering::Relaxed);
+}
+
+/// Monotonic event counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if metrics_on() {
+            self.0.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins instantaneous value (f64 bits in an `AtomicU64`).
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn set(&self, v: f64) {
+        if metrics_on() {
+            self.0.store(v.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    /// Raise the gauge to `v` if larger (running maximum). Correct for
+    /// non-negative values only: IEEE-754 bit patterns of non-negative
+    /// floats order like unsigned integers, so `fetch_max` on the bits
+    /// is `max` on the values.
+    #[inline]
+    pub fn set_max(&self, v: f64) {
+        if metrics_on() {
+            debug_assert!(v >= 0.0);
+            self.0.fetch_max(v.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Atomic mirror of [`Histogram`]: identical bucket geometry, relaxed
+/// per-slot counters so concurrent threads record without a lock.
+/// Quantiles are never computed here — [`Hist::snapshot`] rebuilds a
+/// `Histogram` and all math happens in the one shared implementation.
+pub struct Hist {
+    buckets: Box<[AtomicU64]>,
+}
+
+fn geometry() -> &'static Histogram {
+    static GEOM: OnceLock<Histogram> = OnceLock::new();
+    GEOM.get_or_init(Histogram::new)
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Hist {
+    pub fn new() -> Hist {
+        Hist { buckets: (0..HIST_SLOTS).map(|_| AtomicU64::new(0)).collect() }
+    }
+
+    #[inline]
+    pub fn record(&self, seconds: f64) {
+        if metrics_on() {
+            let b = geometry().bucket_of(seconds);
+            self.buckets[b].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Materialize the current counts as a [`Histogram`] for quantile /
+    /// summary queries.
+    pub fn snapshot(&self) -> Histogram {
+        Histogram::from_buckets(self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect())
+    }
+
+    /// `n=.. p50=..ms p95=..ms p99=..ms` via [`Histogram::summary`].
+    pub fn summary(&self) -> String {
+        self.snapshot().summary()
+    }
+}
+
+/// One registered metric: the registry holds a strong handle so a
+/// rendered snapshot never races an owner dropping its stats.
+#[derive(Clone)]
+pub enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Hist(Arc<Hist>),
+}
+
+fn table() -> &'static Mutex<BTreeMap<String, Metric>> {
+    static TABLE: OnceLock<Mutex<BTreeMap<String, Metric>>> = OnceLock::new();
+    TABLE.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+fn get_or_insert(name: &str, make: impl FnOnce() -> Metric) -> Metric {
+    let mut t = table().lock().unwrap_or_else(|e| e.into_inner());
+    t.entry(name.to_string()).or_insert_with(make).clone()
+}
+
+/// Get-or-create the process-wide counter `name`. If `name` is bound to
+/// a different metric kind, a fresh unregistered counter is returned
+/// (callers keep working; the registry keeps its original binding).
+pub fn counter(name: &str) -> Arc<Counter> {
+    match get_or_insert(name, || Metric::Counter(Arc::new(Counter::new()))) {
+        Metric::Counter(c) => c,
+        _ => Arc::new(Counter::new()),
+    }
+}
+
+pub fn gauge(name: &str) -> Arc<Gauge> {
+    match get_or_insert(name, || Metric::Gauge(Arc::new(Gauge::new()))) {
+        Metric::Gauge(g) => g,
+        _ => Arc::new(Gauge::new()),
+    }
+}
+
+pub fn hist(name: &str) -> Arc<Hist> {
+    match get_or_insert(name, || Metric::Hist(Arc::new(Hist::new()))) {
+        Metric::Hist(h) => h,
+        _ => Arc::new(Hist::new()),
+    }
+}
+
+/// Bind an instance-owned metric under `name`, replacing any previous
+/// binding (latest instance wins — see module docs on scoping).
+pub fn publish(name: &str, metric: Metric) {
+    let mut t = table().lock().unwrap_or_else(|e| e.into_inner());
+    t.insert(name.to_string(), metric);
+}
+
+/// A consistent copy of the registry contents, name-sorted.
+pub fn entries() -> Vec<(String, Metric)> {
+    let t = table().lock().unwrap_or_else(|e| e.into_inner());
+    t.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
+}
+
+/// Statically-named counter for hot call sites: resolves its registry
+/// handle once, costs one `OnceLock` load afterwards. `const`-
+/// constructible so it can live in a `static`.
+pub struct LazyCounter {
+    name: &'static str,
+    cell: OnceLock<Arc<Counter>>,
+}
+
+impl LazyCounter {
+    pub const fn new(name: &'static str) -> LazyCounter {
+        LazyCounter { name, cell: OnceLock::new() }
+    }
+
+    #[inline]
+    fn get(&self) -> &Counter {
+        self.cell.get_or_init(|| counter(self.name))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if metrics_on() {
+            self.get().0.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn value(&self) -> u64 {
+        self.get().get()
+    }
+}
+
+/// Statically-named gauge (see [`LazyCounter`]).
+pub struct LazyGauge {
+    name: &'static str,
+    cell: OnceLock<Arc<Gauge>>,
+}
+
+impl LazyGauge {
+    pub const fn new(name: &'static str) -> LazyGauge {
+        LazyGauge { name, cell: OnceLock::new() }
+    }
+
+    #[inline]
+    fn get(&self) -> &Gauge {
+        self.cell.get_or_init(|| gauge(self.name))
+    }
+
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.get().set(v);
+    }
+
+    pub fn value(&self) -> f64 {
+        self.get().get()
+    }
+}
+
+/// Statically-named histogram (see [`LazyCounter`]).
+pub struct LazyHist {
+    name: &'static str,
+    cell: OnceLock<Arc<Hist>>,
+}
+
+impl LazyHist {
+    pub const fn new(name: &'static str) -> LazyHist {
+        LazyHist { name, cell: OnceLock::new() }
+    }
+
+    #[inline]
+    fn get(&self) -> &Hist {
+        self.cell.get_or_init(|| hist(self.name))
+    }
+
+    #[inline]
+    pub fn record(&self, seconds: f64) {
+        self.get().record(seconds);
+    }
+
+    pub fn snapshot(&self) -> Histogram {
+        self.get().snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new();
+        g.set(2.5);
+        assert_eq!(g.get(), 2.5);
+        g.set_max(1.0);
+        assert_eq!(g.get(), 2.5);
+        g.set_max(7.0);
+        assert_eq!(g.get(), 7.0);
+    }
+
+    #[test]
+    fn registry_interns_by_name() {
+        let a = counter("test/registry_interns");
+        let b = counter("test/registry_interns");
+        a.inc();
+        assert_eq!(b.get(), 1);
+        // kind mismatch yields a detached (but functional) handle
+        let g = gauge("test/registry_interns");
+        g.set(3.0);
+        assert_eq!(g.get(), 3.0);
+        assert_eq!(b.get(), 1);
+    }
+
+    #[test]
+    fn publish_rebinds_latest_instance() {
+        let first = Arc::new(Counter::new());
+        first.add(10);
+        publish("test/rebind", Metric::Counter(Arc::clone(&first)));
+        let second = Arc::new(Counter::new());
+        second.add(2);
+        publish("test/rebind", Metric::Counter(Arc::clone(&second)));
+        let bound = counter("test/rebind");
+        assert_eq!(bound.get(), 2, "latest publication wins");
+        assert_eq!(first.get(), 10, "replaced instance keeps its counts");
+    }
+
+    /// Satellite: concurrent increments from the shared threadpool sum
+    /// exactly — no lost updates, no double counting.
+    #[test]
+    fn concurrent_counter_sums_exactly() {
+        let c = Arc::new(Counter::new());
+        let pool = crate::util::threadpool::ThreadPool::new(4);
+        let jobs = 64;
+        let per_job = 1000u64;
+        for _ in 0..jobs {
+            let c = Arc::clone(&c);
+            pool.execute(move || {
+                for _ in 0..per_job {
+                    c.inc();
+                }
+            });
+        }
+        pool.join();
+        assert_eq!(c.get(), jobs as u64 * per_job);
+    }
+
+    /// Satellite: the atomic histogram's quantiles are bit-identical to
+    /// the plain `metrics::Histogram` fed the same samples (single
+    /// quantile implementation), and both agree with a sorted-vec
+    /// oracle to within one log bucket.
+    #[test]
+    fn hist_matches_oracle_and_shared_impl() {
+        let h = Hist::new();
+        let mut plain = Histogram::new();
+        let mut vals: Vec<f64> = Vec::new();
+        // deterministic pseudo-random latencies, 10us..1s
+        let mut x = 0x9e3779b97f4a7c15u64;
+        for _ in 0..4096 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let v = 1e-5 + (x >> 11) as f64 / (1u64 << 53) as f64;
+            h.record(v);
+            plain.record(v);
+            vals.push(v);
+        }
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let snap = h.snapshot();
+        assert_eq!(snap.count(), plain.count());
+        // log-bucket geometry: ratio between adjacent bucket edges
+        let ratio = (100.0f64 / 1e-6).powf(1.0 / 200.0);
+        for q in [0.01, 0.5, 0.95, 0.99, 1.0] {
+            let ours = snap.quantile(q);
+            assert_eq!(ours.to_bits(), plain.quantile(q).to_bits(), "shared impl at q={q}");
+            let target = ((q * vals.len() as f64).ceil() as usize).clamp(1, vals.len());
+            let exact = vals[target - 1];
+            assert!(
+                ours <= exact && exact <= ours * ratio * 1.0001,
+                "q={q}: bucket edge {ours} should bracket exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn hist_oracle_edge_cases() {
+        // empty: quantile is 0 by convention
+        let h = Hist::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.snapshot().quantile(0.5), 0.0);
+        // single sample: every quantile lands in its bucket
+        let h = Hist::new();
+        h.record(0.004);
+        let snap = h.snapshot();
+        for q in [0.0, 0.5, 1.0] {
+            let v = snap.quantile(q);
+            assert!(v <= 0.004 && 0.004 <= v * 1.1, "q={q} -> {v}");
+        }
+        // saturating buckets: everything beyond the range piles into the
+        // overflow slot and quantiles clamp to the top edge
+        let h = Hist::new();
+        for _ in 0..10 {
+            h.record(1e6);
+        }
+        let snap = h.snapshot();
+        assert_eq!(snap.count(), 10);
+        let top = snap.quantile(1.0);
+        assert!(top >= 99.0, "overflow bucket reports the top edge, got {top}");
+        // underflow side
+        let h = Hist::new();
+        h.record(0.0);
+        assert!(h.snapshot().quantile(1.0) <= 1e-6);
+    }
+}

@@ -414,6 +414,7 @@ impl<'a> StreamStep<'a> {
         targets: &[i32],
         mask: &[f32],
     ) -> Result<(f64, f64)> {
+        let _span = crate::obs::span("exec", "stream_chunk");
         let inputs = vec![
             Tensor::f32(std::mem::take(&mut carry.l), &carry.l_shape.clone()),
             Tensor::f32(std::mem::take(&mut carry.u), &carry.u_shape.clone()),
@@ -521,6 +522,7 @@ impl<'a> DecodeStep<'a> {
 
     /// Hot-path variant with a pre-uploaded parameter buffer.
     pub fn run_h(&self, params: &ParamBuf, carry: &mut StreamCarry, token: i32) -> Result<Vec<f32>> {
+        let _span = crate::obs::span("exec", "decode");
         let inputs = vec![
             Tensor::f32(std::mem::take(&mut carry.l), &carry.l_shape.clone()),
             Tensor::f32(std::mem::take(&mut carry.u), &carry.u_shape.clone()),
@@ -596,6 +598,7 @@ impl BatchedDecodeStep {
         rows: &mut [&mut StreamCarry],
         tokens: &[i32],
     ) -> Result<Vec<Vec<f32>>> {
+        let _span = crate::obs::span("exec", "decode_batch");
         let n = rows.len();
         if n == 0 || n > self.batch {
             bail!("decode_batch wave of {n} rows (batch width {})", self.batch);

@@ -50,6 +50,46 @@ use crate::util::threadpool::scatter_rows;
 /// thread-fanout overhead.
 const MIN_PAR_ROWS: usize = 16;
 
+static BIND_HITS: crate::obs::LazyCounter = crate::obs::LazyCounter::new("panels/bind_hits");
+static BIND_PACKS: crate::obs::LazyCounter = crate::obs::LazyCounter::new("panels/bind_packs");
+
+/// Publish per-node `sigma`/`omega`/`T`/half-life gauges under
+/// `node/l{L}/n{K}/..` plus a per-layer `half_life_mean` — the paper's
+/// interpretability story (a node's memory half-life is
+/// `ln2 / (sigma + 1/T)` tokens) surfaced as live telemetry. Called at
+/// server start and every `--metrics-every` interval during training;
+/// a flat vector that does not match the config is skipped silently
+/// (foreign-backend layouts have nothing to report).
+pub fn publish_node_gauges(cfg: &ModelConfig, flat: &[f32]) {
+    if !crate::obs::metrics_on() {
+        return;
+    }
+    let plan = match StltPlan::new(cfg) {
+        Ok(p) => p,
+        Err(_) => return,
+    };
+    if flat.len() != plan.total {
+        return;
+    }
+    let ln2 = std::f64::consts::LN_2;
+    for (l, lo) in plan.layers.iter().enumerate() {
+        let t = softplus(flat[lo.t_raw]) + 1.0;
+        let mut hl_sum = 0.0f64;
+        for k in 0..cfg.s_max {
+            let sigma = softplus(flat[lo.sigma_raw + k]) + cfg.sigma_min;
+            let omega = if cfg.omega_zero { 0.0 } else { flat[lo.omega + k] };
+            let half_life = ln2 / (sigma as f64 + 1.0 / t as f64);
+            hl_sum += half_life;
+            crate::obs::gauge(&format!("node/l{l}/n{k}/sigma")).set(sigma as f64);
+            crate::obs::gauge(&format!("node/l{l}/n{k}/omega")).set(omega as f64);
+            crate::obs::gauge(&format!("node/l{l}/n{k}/t")).set(t as f64);
+            crate::obs::gauge(&format!("node/l{l}/n{k}/half_life")).set(half_life);
+        }
+        crate::obs::gauge(&format!("node/l{l}/half_life_mean"))
+            .set(hl_sum / cfg.s_max.max(1) as f64);
+    }
+}
+
 /// One node's Laplace-carry advance for a single timestep — THE
 /// recurrence kernel, shared verbatim by the streaming engine
 /// ([`StltModel::mix_recurrence`]), the training-tape forward, and the
@@ -241,6 +281,11 @@ fn find(layout: &[Leaf], path: &str) -> Result<usize> {
 impl StltPlan {
     /// Validate the config and resolve all parameter offsets.
     pub fn new(cfg: &ModelConfig) -> Result<StltPlan> {
+        // register the panel-cache counter family up front: an idle
+        // process (a worker that never took a wave) still exposes
+        // zeroed `panels/` rows to a stats scrape
+        crate::obs::counter("panels/bind_hits");
+        crate::obs::counter("panels/bind_packs");
         if cfg.arch != "stlt" {
             bail!(
                 "native backend executes arch 'stlt' only (got '{}'); \
@@ -315,8 +360,13 @@ impl StltPlan {
                     .map(|_| Arc::clone(p))
             });
             match hit {
-                Some(p) => p,
+                Some(p) => {
+                    BIND_HITS.inc();
+                    p
+                }
                 None => {
+                    BIND_PACKS.inc();
+                    let _span = crate::obs::span("panels", "pack");
                     let p = Arc::new(pack_panels(&self.cfg, &self.layers, &flat));
                     *cache = Some((Arc::downgrade(&flat), Arc::clone(&p)));
                     p

@@ -75,6 +75,9 @@ use crate::runtime::artifact::ModelConfig;
 use crate::runtime::native_stlt::{lu_node_step, sigmoid, softplus, StltModel};
 use crate::util::linalg::{self, gelu_grad};
 
+static SEGMENTS_REPLAYED: crate::obs::LazyCounter =
+    crate::obs::LazyCounter::new("train/segments_replayed");
+
 /// Gradient + loss terms of one row. `grad` has the full flat length.
 pub struct RowOut {
     pub nll_sum: f64,
@@ -473,6 +476,8 @@ pub fn row_loss_and_grad(
         let mut dv = vec![0.0f32; n * d];
         let nseg = n.div_ceil(ckpt);
         for seg in (0..nseg).rev() {
+            let _span = crate::obs::span("train", "segment_replay");
+            SEGMENTS_REPLAYED.inc();
             let t0 = seg * ckpt;
             let len = ckpt.min(n - t0);
             l_seg[..s * 2].copy_from_slice(&tape.l_snap[seg * s * 2..(seg + 1) * s * 2]);

@@ -2,11 +2,12 @@
 //! relative to process start, level filter via STLT_LOG env (error..trace).
 
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
 
 static LEVEL: AtomicU8 = AtomicU8::new(2); // info
 static INIT: std::sync::Once = std::sync::Once::new();
-static mut START: Option<Instant> = None;
+static START: OnceLock<Instant> = OnceLock::new();
 
 #[derive(Clone, Copy, PartialEq, PartialOrd)]
 pub enum Level {
@@ -19,7 +20,7 @@ pub enum Level {
 
 pub fn init() {
     INIT.call_once(|| {
-        unsafe { START = Some(Instant::now()) };
+        let _ = START.set(Instant::now());
         if let Ok(v) = std::env::var("STLT_LOG") {
             let l = match v.to_lowercase().as_str() {
                 "error" => 0,
@@ -44,9 +45,17 @@ pub fn enabled(l: Level) -> bool {
     (l as u8) <= LEVEL.load(Ordering::Relaxed)
 }
 
+/// The single process timebase: set once by the first `init()` (or the
+/// first caller of this function). Log timestamps and [`crate::obs`]
+/// span timestamps are both measured against it, so a trace viewed in
+/// Perfetto lines up with the stderr log.
+pub fn timebase() -> Instant {
+    *START.get_or_init(Instant::now)
+}
+
 pub fn elapsed_s() -> f64 {
     init();
-    unsafe { START.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0) }
+    timebase().elapsed().as_secs_f64()
 }
 
 pub fn log(l: Level, tag: &str, msg: &str) {

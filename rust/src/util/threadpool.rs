@@ -379,9 +379,12 @@ where
             let latch_r = &latch;
             let fref = &f;
             let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
-                let msg = catch_unwind(AssertUnwindSafe(|| fref(t0, t1, chunk)))
-                    .err()
-                    .map(|p| panic_message(p.as_ref()));
+                let msg = catch_unwind(AssertUnwindSafe(|| {
+                    let _span = crate::obs::span("pool", "scatter_chunk");
+                    fref(t0, t1, chunk)
+                }))
+                .err()
+                .map(|p| panic_message(p.as_ref()));
                 latch_r.done(msg);
             });
             // SAFETY: the job borrows `f`, the latch, and a disjoint
@@ -404,6 +407,7 @@ where
         t0 = t1;
     }
     if let Some((t0, t1, chunk)) = last {
+        let _span = crate::obs::span("pool", "scatter_chunk");
         f(t0, t1, chunk); // final chunk on the calling thread
     }
     std::mem::forget(guard); // normal path: wait below, collecting panics

@@ -5,7 +5,6 @@
 //! tests live in tests/native_parity.rs.
 #![cfg(feature = "xla")]
 
-use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 use stlt::coordinator::{BatchPolicy, Server, ServerOpts};
@@ -86,10 +85,9 @@ fn concurrent_sessions_match_single_session_reference() {
             rn
         );
     }
-    // batching actually happened (batch_fill recorded >1 at least once,
-    // or at minimum all feeds completed)
-    assert_eq!(server.stats.feeds.load(Ordering::Relaxed), 3);
-    assert!(server.stats.tokens_streamed.load(Ordering::Relaxed) >= 3 * 299);
+    // all feeds completed and every streamed token was accounted
+    assert_eq!(server.stats.feeds.get(), 3);
+    assert!(server.stats.tokens_streamed.get() >= 3 * 299);
 }
 
 #[test]
@@ -108,7 +106,7 @@ fn eviction_under_session_pressure() {
         server.feed(s, doc(vocab, s, 150), false).unwrap();
     }
     assert!(
-        server.stats.evictions.load(Ordering::Relaxed) >= 3,
+        server.stats.evictions.get() >= 3,
         "expected LRU evictions with max_sessions=2"
     );
     server.shutdown();

@@ -685,6 +685,7 @@ fn native_train_lm_smoke_nll_decreases() {
         checkpoint: None,
         resume: None,
         domain: 0,
+        metrics_every: 0,
     };
     let report = stlt::coordinator::train_lm(&rt, &manifest, "smoke", &opts).unwrap();
     assert_eq!(report.steps_done, 60);
@@ -718,6 +719,7 @@ fn checkpoint_roundtrip_resumes_bit_identically() {
             checkpoint: Some(ckpt.to_string_lossy().into_owned()),
             resume: resume.map(|r| r.to_string_lossy().into_owned()),
             domain: 0,
+            metrics_every: 0,
         };
         stlt::coordinator::train_lm(&rt, &manifest, "smoke", &opts).unwrap();
     };

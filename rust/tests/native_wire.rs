@@ -19,7 +19,6 @@ use std::collections::BTreeMap;
 use std::io::{BufRead, Write};
 use std::path::PathBuf;
 use std::process::{Child, Command, Stdio};
-use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -276,7 +275,7 @@ fn abrupt_disconnect_cancels_inflight_generation() {
     // the worker's teardown releases the session; release cancels the
     // in-flight generation at the next wave boundary
     let t0 = Instant::now();
-    while server.stats.cancelled.load(Ordering::Relaxed) < 1 {
+    while server.stats.cancelled.get() < 1 {
         assert!(
             t0.elapsed() < Duration::from_secs(10),
             "abrupt disconnect never cancelled the in-flight generation"
@@ -378,6 +377,53 @@ fn migration_is_bitwise_under_concurrent_load() {
     reference_server.shutdown();
     wire0.shutdown();
     wire1.shutdown();
+}
+
+#[test]
+fn stats_frame_returns_parseable_snapshot() {
+    let c = cfg();
+    let flat = host_init(&c, 33);
+    let m = manifest(flat.len());
+    let server = Arc::new(Server::start(&m, "nat", flat, ServerOpts::default()).unwrap());
+    let wire = spawn_worker(Arc::clone(&server), "127.0.0.1:0").unwrap();
+    let client = Client::connect(wire.addr()).unwrap();
+
+    // drive a little traffic so the counters have something to report
+    let mut sess = client.open(901).unwrap();
+    let prompt = doc(24, 77, VOCAB);
+    sess.feed(prompt.clone(), true).unwrap();
+    sess.generate(gen_opts(*prompt.last().unwrap(), 4, 1.0, 7)).unwrap().wait().unwrap();
+
+    let text = client.stats().unwrap();
+    let rows = stlt::obs::parse(&text).expect("stats payload must round-trip the parser");
+
+    // The registry is process-global and other tests run concurrently,
+    // so assert family presence and monotone positivity, never exact
+    // counts owned by this test alone.
+    let find = |kind: &str, name: &str| -> Option<f64> {
+        rows.iter().find(|(k, n, _)| k == kind && n == name).map(|(_, _, v)| v[0])
+    };
+    assert!(find("counter", "wire/frames_tx").unwrap_or(0.0) > 0.0, "no frames counted");
+    assert!(find("counter", "wire/frames_rx").unwrap_or(0.0) > 0.0);
+    assert!(find("counter", "wire/bytes_tx").unwrap_or(0.0) > 0.0);
+    // server/* rebinds to the most recently started Server (publish-rebind
+    // scoping), and sibling tests start servers concurrently — so check the
+    // family is exposed, not a value another instance may own right now.
+    assert!(find("counter", "server/feeds").is_some(), "server/feeds family missing");
+    assert!(find("counter", "server/gens").is_some(), "server/gens family missing");
+    assert!(
+        rows.iter().any(|(k, n, _)| k == "hist" && n == "server/ttft_seconds"),
+        "ttft histogram family missing"
+    );
+    // per-node Laplace dynamics: sigma/omega/T/half-life published at load
+    assert!(
+        find("gauge", "node/l0/n0/half_life").is_some(),
+        "node half-life gauges missing"
+    );
+    assert!(find("gauge", "node/l0/half_life_mean").unwrap_or(-1.0) > 0.0);
+
+    sess.close().unwrap();
+    wire.shutdown();
 }
 
 // ---------------------------------------------------------------------
