@@ -537,6 +537,26 @@ fn main() {
     println!("{}   ({:.0} tok/s)", r.row(), 1.0 / r.p50_s);
     rows.push(r.clone(), vec![("tokens_per_s", 1.0 / r.p50_s)]);
 
+    // mixer seam: the linear-attention baseline through the same engine
+    // and carry plumbing — the delta vs the rows above is the cost (or
+    // win) of the φ-feature prefix sums over the Laplace recurrence
+    let cfg_la = ModelConfig { mixer: "linear_attention".into(), ..cfg.clone() };
+    let model_la = StltModel::new(&cfg_la, Arc::new(flat.clone())).unwrap();
+    let r = bench_for("native/forward 128 tok (linear_attention)", secs, || {
+        std::hint::black_box(model_la.forward_logits(&tokens).unwrap());
+    });
+    println!("{}   ({:.0} tok/s)", r.row(), 128.0 / r.p50_s);
+    rows.push(r.clone(), vec![("tokens_per_s", 128.0 / r.p50_s)]);
+
+    let (mut l, mut u) = model_la.zero_carry();
+    let r = bench_for("native/decode 1 tok (linear_attention)", secs.min(2.0), || {
+        std::hint::black_box(
+            model_la.trunk_chunk(&mut l, &mut u, &tokens[..1], 0.0, None).unwrap(),
+        );
+    });
+    println!("{}   ({:.0} tok/s)", r.row(), 1.0 / r.p50_s);
+    rows.push(r.clone(), vec![("tokens_per_s", 1.0 / r.p50_s)]);
+
     // training: gradient accumulation alone, then the full optimiser
     // step — whole-sequence tape vs the segment-checkpointed tape
     let pool = ThreadPool::new(configured_threads());
@@ -547,7 +567,13 @@ fn main() {
     let train_tokens = (b * n) as f64;
 
     let r = bench_for("native/grad batch 8x32 tok", secs, || {
-        std::hint::black_box(batch_loss_and_grad(&model, &batch, b, n1, &pool).unwrap());
+        std::hint::black_box(batch_loss_and_grad(&model, &batch, b, n1, None, &pool).unwrap());
+    });
+    println!("{}   ({:.0} tok/s)", r.row(), train_tokens / r.p50_s);
+    rows.push(r.clone(), vec![("tokens_per_s", train_tokens / r.p50_s)]);
+
+    let r = bench_for("native/grad batch 8x32 tok (linear_attention)", secs, || {
+        std::hint::black_box(batch_loss_and_grad(&model_la, &batch, b, n1, None, &pool).unwrap());
     });
     println!("{}   ({:.0} tok/s)", r.row(), train_tokens / r.p50_s);
     rows.push(r.clone(), vec![("tokens_per_s", train_tokens / r.p50_s)]);
@@ -565,7 +591,7 @@ fn main() {
         let mut step = 0i32;
         let r = bench_for(label, secs, || {
             std::hint::black_box(
-                native_train_step(&m2, &mut fl, &mut mm, &mut vv, step, &batch, b, n1, &pool)
+                native_train_step(&m2, &mut fl, &mut mm, &mut vv, step, &batch, b, n1, 0, &pool)
                     .unwrap(),
             );
             step += 1;

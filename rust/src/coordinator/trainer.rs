@@ -164,15 +164,30 @@ pub fn train_lm(
         }
         loss_window.push(m.loss as f64);
         s_eff_last = m.s_eff;
+        // adaptive runs: surface the annealed Gumbel-sigmoid temperature
+        // (the native backend derives the same value from the step)
+        #[cfg(feature = "native")]
+        let gum_temp = if entry.config.adaptive {
+            let t = crate::train::gumbel_temp_at(&entry.config, step as i32);
+            crate::obs::gauge("train/gumbel_temp").set(t as f64);
+            Some(t)
+        } else {
+            None
+        };
+        #[cfg(not(feature = "native"))]
+        let gum_temp: Option<f32> = None;
         if (opts.log_every > 0 && (step + 1) % opts.log_every == 0) || step + 1 == opts.steps {
+            let temp_part =
+                gum_temp.map_or(String::new(), |t| format!(" gumbel_temp {t:.3}"));
             crate::info!(
                 "train",
-                "{artifact_base} step {:4}/{} loss {:.4} ce {:.4} s_eff {:.1}",
+                "{artifact_base} step {:4}/{} loss {:.4} ce {:.4} s_eff {:.1}{}",
                 step + 1,
                 opts.steps,
                 loss_window.mean(),
                 m.ce,
-                m.s_eff
+                m.s_eff,
+                temp_part
             );
             report.loss_curve.push((step + 1, loss_window.mean() as f32));
             loss_window = OnlineStats::new();

@@ -4,6 +4,11 @@
 //!   info                      list artifacts + runtime info
 //!   train   --artifact NAME --steps N [--ckpt PATH] [--resume PATH]
 //!           [--grad-ckpt C] [--set k=v ...]
+//!           [--adaptive true|false] [--mixer NAME]
+//!           (--adaptive/--mixer override the model family for this
+//!           invocation on every subcommand: adaptive node allocation
+//!           with Gumbel-sigmoid training, and the token mixer —
+//!           recurrence | reference_n2 | linear_attention)
 //!   eval    --artifact NAME [--ckpt PATH] [--noise X]
 //!   stream  --artifact NAME [--ckpt PATH] --doc-len N   streaming PPL demo
 //!   generate --artifact NAME [--ckpt PATH] --len N
@@ -61,13 +66,106 @@ fn usage() -> String {
     "usage: stlt <info|train|eval|stream|generate|serve|worker|router|stats|inspect> \
      [--backend native|xla] \
      [--artifact NAME] [--steps N] [--ckpt PATH] [--resume PATH] [--config FILE] \
-     [--set key=value ...] [--grad-ckpt C] [--noise X] [--len N] [--doc-len N] \
+     [--set key=value ...] [--grad-ckpt C] \
+     [--adaptive true|false] [--mixer recurrence|reference_n2|linear_attention] \
+     [--noise X] [--len N] [--doc-len N] \
      [--sessions N] [--prompt-len N] [--gen-len N] \
      [--sampling greedy|temp:T|topk:K:T|topp:P:T] \
      [--connect ADDR] [--listen ADDR] [--workers ADDR,...] \
      [--max-sessions N] [--queue-cap N] \
      [--metrics-every N] [--trace FILE]"
         .to_string()
+}
+
+/// Apply the `--adaptive true|false` / `--mixer NAME` model overrides
+/// to every stlt entry in the loaded manifest (this invocation only —
+/// nothing is written back to disk). Every subcommand honours them, so
+/// the same flags select the model family for training, eval, serving
+/// and the worker. Because flipping `adaptive` changes the parameter
+/// layout (the gate's w_alpha/b_alpha), the entry's `param_count` and
+/// `[p]` tensor specs are recomputed and any python-exact init vector
+/// is dropped in favour of the deterministic host init; mixer changes
+/// regenerate the per-layer carry specs ([`ModelConfig::carry_lens`]).
+fn apply_model_overrides(manifest: &mut Manifest, args: &Args) -> Result<()> {
+    use stlt::runtime::artifact::{Entry, MIXER_NAMES};
+    let adaptive = match args.get("adaptive") {
+        None => None,
+        Some(v) => match v {
+            "true" | "1" => Some(true),
+            "false" | "0" => Some(false),
+            other => return Err(anyhow!("--adaptive expects true|false, got '{other}'")),
+        },
+    };
+    let mixer = match args.get("mixer") {
+        None => None,
+        Some(m) if MIXER_NAMES.contains(&m) => Some(m.to_string()),
+        Some(m) => {
+            return Err(anyhow!(
+                "--mixer '{m}': unknown mixer (expected one of {})",
+                MIXER_NAMES.join(" | ")
+            ))
+        }
+    };
+    if adaptive.is_none() && mixer.is_none() {
+        return Ok(());
+    }
+    let mut touched = 0usize;
+    for e in manifest.entries.values_mut() {
+        if e.config.arch != "stlt" {
+            continue;
+        }
+        let p_old = e.param_count;
+        if let Some(a) = adaptive {
+            e.config.adaptive = a;
+        }
+        if let Some(mx) = &mixer {
+            e.config.mixer = mx.clone();
+        }
+        let p_new = stlt::interpret::total_params(&stlt::interpret::trunk_layout(&e.config));
+        if p_new != p_old {
+            e.param_count = p_new;
+            // any python-exact init vector packs the old layout
+            e.init_file = None;
+        }
+        for spec in e.inputs.iter_mut().chain(e.outputs.iter_mut()) {
+            if spec.shape == [p_old] {
+                spec.shape = vec![p_new];
+            }
+        }
+        // serving kinds carry per-layer state whose shape follows the
+        // mixer/gate; rebuild their specs from the one source of truth
+        // (decode_batch is derived from decode_step at serve time, so
+        // it follows automatically)
+        let rebuilt = match e.kind.as_str() {
+            "stream_step" => {
+                let chunk = e.extra.get("chunk").copied().unwrap_or(1).max(1) as usize;
+                Some(Entry::synthetic_stream(&e.config, p_new, &e.name, chunk))
+            }
+            "decode_step" => Some(Entry::synthetic_decode(&e.config, p_new, &e.name)),
+            "stream_batch_step" => {
+                let chunk = e.extra.get("chunk").copied().unwrap_or(1).max(1) as usize;
+                let bsrv = e.extra.get("batch_srv").copied().unwrap_or(1).max(1) as usize;
+                Some(Entry::synthetic_stream_batch(&e.config, p_new, &e.name, chunk, bsrv))
+            }
+            _ => None,
+        };
+        if let Some(r) = rebuilt {
+            e.inputs = r.inputs;
+            e.outputs = r.outputs;
+            e.kept_inputs = r.kept_inputs;
+        }
+        touched += 1;
+    }
+    if touched == 0 {
+        return Err(anyhow!("--adaptive/--mixer: no stlt entries in the manifest to override"));
+    }
+    stlt::info!(
+        "cli",
+        "model overrides: adaptive={:?} mixer={:?} applied to {touched} entries",
+        adaptive,
+        mixer
+    );
+    Ok(())
 }
 
 /// Trained weights from --ckpt (validated against the artifact's name
@@ -103,6 +201,7 @@ fn run() -> Result<()> {
     }
     let backend = BackendKind::parse(&args.get_or("backend", "native"))?;
     let mut manifest = Manifest::load(default_artifacts_dir())?;
+    apply_model_overrides(&mut manifest, &args)?;
     match args.subcommand.as_deref() {
         Some("info") => {
             let rt = Runtime::new(backend)?;

@@ -40,6 +40,11 @@ pub struct ModelConfig {
     pub batch: usize,
     pub adaptive: bool,
     pub mode: String,
+    /// Token-mixing family: "" / "recurrence" (the default Laplace
+    /// recurrence), "reference_n2" (the quadratic ablation oracle), or
+    /// "linear_attention" (the Katharopoulos et al. baseline). Resolved
+    /// by `runtime::mixer::mixer_from_config`; validated at parse time.
+    pub mixer: String,
     pub total_steps: u64,
     pub ffn_mult: usize,
     pub sigma_min: f32,
@@ -70,6 +75,38 @@ pub struct ModelConfig {
     /// identical for every value (tests/native_train.rs). Native-only;
     /// the XLA backward ignores it.
     pub grad_ckpt_segment: usize,
+    // --- adaptive-gate Gumbel-sigmoid temperature schedule (SS3.6):
+    // temp anneals linearly from `gumbel_temp_hi` to `gumbel_temp_lo`
+    // over the first `gumbel_anneal_frac * total_steps` train steps,
+    // then stays at `gumbel_temp_lo`. Native training only; eval and
+    // serving always use the deterministic (noise-free) gate.
+    pub gumbel_temp_hi: f32,
+    pub gumbel_temp_lo: f32,
+    pub gumbel_anneal_frac: f32,
+}
+
+impl ModelConfig {
+    /// Per-layer streaming-state slot lengths `(l, u)` of the mixer
+    /// itself — the feature-independent mirror of
+    /// `runtime::mixer::Mixer::state_lens` (pinned equal by a test
+    /// there), so entry builders and the wire layer can size carries
+    /// without the native feature.
+    pub fn state_lens(&self) -> (usize, usize) {
+        let (s, d) = (self.s_max, self.d_model);
+        if self.mixer == "linear_attention" {
+            (s, s * d)
+        } else {
+            (s * 2, s * d * 2)
+        }
+    }
+
+    /// Per-layer carry slot lengths `(l, u)` as serialized/streamed:
+    /// the mixer state plus, when adaptive, the causal gate's
+    /// (pool_sum [d], count [1]) appended to the l slot.
+    pub fn carry_lens(&self) -> (usize, usize) {
+        let (sl, su) = self.state_lens();
+        (sl + if self.adaptive { self.d_model + 1 } else { 0 }, su)
+    }
 }
 
 impl Default for ModelConfig {
@@ -84,6 +121,7 @@ impl Default for ModelConfig {
             batch: 0,
             adaptive: false,
             mode: String::new(),
+            mixer: String::new(),
             // python config.py defaults
             total_steps: 2000,
             ffn_mult: 4,
@@ -103,6 +141,9 @@ impl Default for ModelConfig {
             beta2: 0.98,
             grad_clip: 1.0,
             grad_ckpt_segment: 0,
+            gumbel_temp_hi: 1.0,
+            gumbel_temp_lo: 0.1,
+            gumbel_anneal_frac: 0.4,
         }
     }
 }
@@ -146,7 +187,16 @@ fn parse_spec(j: &Json) -> Result<TensorSpec> {
     Ok(TensorSpec { dtype, shape })
 }
 
-fn parse_config(j: Option<&Json>) -> ModelConfig {
+/// Accepted `mixer` config values ("" = the default recurrence).
+pub const MIXER_NAMES: [&str; 3] = ["recurrence", "reference_n2", "linear_attention"];
+
+/// Parse a manifest `config` object. Legacy keys stay tolerant (absent
+/// or malformed values fall back to the python defaults — older
+/// manifests must keep loading); the PR-8 keys (`mixer`, the Gumbel
+/// temperature schedule) are validated strictly with actionable errors,
+/// because a typo'd mixer name or a negative temperature would
+/// otherwise train a silently different model.
+fn parse_config(j: Option<&Json>) -> Result<ModelConfig> {
     let mut c = ModelConfig::default();
     if let Some(j) = j {
         let s = |k: &str| j.get(k).and_then(|v| v.as_str()).unwrap_or("").to_string();
@@ -209,8 +259,47 @@ fn parse_config(j: Option<&Json>) -> ModelConfig {
                 c.grad_ckpt_segment = g as usize;
             }
         }
+        if let Some(v) = j.get("mixer") {
+            let name = v.as_str().ok_or_else(|| {
+                anyhow!("config key 'mixer' must be a string, one of {MIXER_NAMES:?}")
+            })?;
+            if !name.is_empty() && !MIXER_NAMES.contains(&name) {
+                bail!("unknown mixer '{name}' (expected one of {MIXER_NAMES:?})");
+            }
+            c.mixer = name.to_string();
+        }
+        let gum = |k: &str, dst: &mut f32| -> Result<()> {
+            if let Some(v) = j.get(k) {
+                let x = v
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("config key '{k}' must be a number, got {v:?}"))?;
+                if !x.is_finite() || x <= 0.0 {
+                    bail!("config key '{k}' must be a finite positive number, got {x}");
+                }
+                *dst = x as f32;
+            }
+            Ok(())
+        };
+        gum("gumbel_temp_hi", &mut c.gumbel_temp_hi)?;
+        gum("gumbel_temp_lo", &mut c.gumbel_temp_lo)?;
+        gum("gumbel_anneal_frac", &mut c.gumbel_anneal_frac)?;
+        if c.gumbel_temp_lo > c.gumbel_temp_hi {
+            bail!(
+                "gumbel_temp_lo ({}) must not exceed gumbel_temp_hi ({}) — the \
+                 schedule anneals hi -> lo",
+                c.gumbel_temp_lo,
+                c.gumbel_temp_hi
+            );
+        }
+        if c.gumbel_anneal_frac > 1.0 {
+            bail!(
+                "gumbel_anneal_frac ({}) must be in (0, 1] — it is the fraction of \
+                 total_steps spent annealing",
+                c.gumbel_anneal_frac
+            );
+        }
     }
-    c
+    Ok(c)
 }
 
 impl Manifest {
@@ -261,7 +350,8 @@ impl Manifest {
                         as usize,
                     inputs,
                     outputs,
-                    config: parse_config(e.get("config")),
+                    config: parse_config(e.get("config"))
+                        .with_context(|| format!("{name}: bad config"))?,
                     extra,
                     init_file: e
                         .get("init")
@@ -340,43 +430,55 @@ impl Entry {
         }
     }
 
+    /// Streaming-carry specs `(l, u)` for a config. Configs whose
+    /// per-layer slots are the historical recurrence layout keep the
+    /// legacy structured shapes `[layers, S, 2]` / `[layers, S, d, 2]`
+    /// (so committed manifests and v2 checkpoints match spec-for-spec);
+    /// anything else — adaptive gate state, linear attention — gets the
+    /// flat `[layers, ll]` / `[layers, ul]` shapes from
+    /// [`ModelConfig::carry_lens`]. The runtime only ever consumes the
+    /// carries flattened, so both spell the same buffers.
+    fn carry_specs(cfg: &ModelConfig) -> (TensorSpec, TensorSpec) {
+        let (ly, s, d) = (cfg.n_layers, cfg.s_max, cfg.d_model);
+        let (ll, ul) = cfg.carry_lens();
+        let f = |sh: &[usize]| TensorSpec { dtype: DType::F32, shape: sh.to_vec() };
+        if (ll, ul) == (s * 2, s * d * 2) {
+            (f(&[ly, s, 2]), f(&[ly, s, d, 2]))
+        } else {
+            (f(&[ly, ll]), f(&[ly, ul]))
+        }
+    }
+
     /// [`Entry::synthetic`] for the `stream_step` kind, shapes derived
     /// from the config — the single source of truth for the serving
     /// entry schemas that tests and benches build in memory.
     pub fn synthetic_stream(cfg: &ModelConfig, p: usize, name: &str, chunk: usize) -> Entry {
-        let (ly, s, d) = (cfg.n_layers, cfg.s_max, cfg.d_model);
         let f = |sh: &[usize]| TensorSpec { dtype: DType::F32, shape: sh.to_vec() };
         let i = |sh: &[usize]| TensorSpec { dtype: DType::I32, shape: sh.to_vec() };
+        let (l, u) = Entry::carry_specs(cfg);
         Entry::synthetic(
             name,
             "stream_step",
             cfg.clone(),
             p,
-            vec![
-                f(&[p]),
-                f(&[ly, s, 2]),
-                f(&[ly, s, d, 2]),
-                i(&[chunk]),
-                i(&[chunk]),
-                f(&[chunk]),
-            ],
-            vec![f(&[ly, s, 2]), f(&[ly, s, d, 2]), f(&[]), f(&[])],
+            vec![f(&[p]), l.clone(), u.clone(), i(&[chunk]), i(&[chunk]), f(&[chunk])],
+            vec![l, u, f(&[]), f(&[])],
             &[("chunk", chunk as i64)],
         )
     }
 
     /// [`Entry::synthetic`] for the `decode_step` kind.
     pub fn synthetic_decode(cfg: &ModelConfig, p: usize, name: &str) -> Entry {
-        let (ly, s, d) = (cfg.n_layers, cfg.s_max, cfg.d_model);
         let f = |sh: &[usize]| TensorSpec { dtype: DType::F32, shape: sh.to_vec() };
         let i = |sh: &[usize]| TensorSpec { dtype: DType::I32, shape: sh.to_vec() };
+        let (l, u) = Entry::carry_specs(cfg);
         Entry::synthetic(
             name,
             "decode_step",
             cfg.clone(),
             p,
-            vec![f(&[p]), f(&[ly, s, 2]), f(&[ly, s, d, 2]), i(&[1])],
-            vec![f(&[ly, s, 2]), f(&[ly, s, d, 2]), f(&[cfg.vocab])],
+            vec![f(&[p]), l.clone(), u.clone(), i(&[1])],
+            vec![l, u, f(&[cfg.vocab])],
             &[],
         )
     }
@@ -390,9 +492,13 @@ impl Entry {
         chunk: usize,
         bsrv: usize,
     ) -> Entry {
-        let (ly, s, d) = (cfg.n_layers, cfg.s_max, cfg.d_model);
         let f = |sh: &[usize]| TensorSpec { dtype: DType::F32, shape: sh.to_vec() };
         let i = |sh: &[usize]| TensorSpec { dtype: DType::I32, shape: sh.to_vec() };
+        let (l, u) = Entry::carry_specs(cfg);
+        let b = |spec: &TensorSpec| TensorSpec {
+            dtype: spec.dtype,
+            shape: std::iter::once(bsrv).chain(spec.shape.iter().copied()).collect(),
+        };
         Entry::synthetic(
             name,
             "stream_batch_step",
@@ -400,19 +506,14 @@ impl Entry {
             p,
             vec![
                 f(&[p]),
-                f(&[bsrv, ly, s, 2]),
-                f(&[bsrv, ly, s, d, 2]),
+                b(&l),
+                b(&u),
                 i(&[bsrv, chunk]),
                 i(&[bsrv, chunk]),
                 f(&[bsrv, chunk]),
                 f(&[bsrv]),
             ],
-            vec![
-                f(&[bsrv, ly, s, 2]),
-                f(&[bsrv, ly, s, d, 2]),
-                f(&[bsrv]),
-                f(&[bsrv]),
-            ],
+            vec![b(&l), b(&u), f(&[bsrv]), f(&[bsrv])],
             &[("chunk", chunk as i64), ("batch_srv", bsrv as i64)],
         )
     }
@@ -590,6 +691,72 @@ mod tests {
         assert!(e.to_decode_batch(0).is_err());
         e.kind = "stream_step".into();
         assert!(e.to_decode_batch(4).is_err());
+    }
+
+    fn sample_with_config(extra_cfg: &str) -> String {
+        SAMPLE.replace("\"grad_ckpt_segment\":512", &format!("\"grad_ckpt_segment\":512,{extra_cfg}"))
+    }
+
+    #[test]
+    fn adaptive_config_keys_parse_and_validate() {
+        let dir = std::env::temp_dir().join("stlt_manifest_test5");
+        // well-formed: every new key lands where it should
+        write_manifest(
+            &dir,
+            &sample_with_config(
+                "\"mixer\":\"linear_attention\",\"gumbel_temp_hi\":2.0,\
+                 \"gumbel_temp_lo\":0.25,\"gumbel_anneal_frac\":0.5",
+            ),
+        );
+        let m = Manifest::load(&dir).unwrap();
+        let c = &m.get("lm.train").unwrap().config;
+        assert_eq!(c.mixer, "linear_attention");
+        assert_eq!(c.gumbel_temp_hi, 2.0);
+        assert_eq!(c.gumbel_temp_lo, 0.25);
+        assert_eq!(c.gumbel_anneal_frac, 0.5);
+        // absent keys -> python-default schedule
+        let d = ModelConfig::default();
+        assert_eq!((d.gumbel_temp_hi, d.gumbel_temp_lo, d.gumbel_anneal_frac), (1.0, 0.1, 0.4));
+        // malformed values must fail the whole load with a pointed error
+        for (bad, needle) in [
+            ("\"mixer\":\"softmax\"", "unknown mixer"),
+            ("\"mixer\":7", "must be a string"),
+            ("\"gumbel_temp_hi\":\"hot\"", "must be a number"),
+            ("\"gumbel_temp_lo\":-0.5", "finite positive"),
+            ("\"gumbel_temp_lo\":0.0", "finite positive"),
+            ("\"gumbel_temp_hi\":0.05", "must not exceed"),
+            ("\"gumbel_anneal_frac\":1.5", "must be in (0, 1]"),
+        ] {
+            write_manifest(&dir, &sample_with_config(bad));
+            let err = format!("{:#}", Manifest::load(&dir).unwrap_err());
+            assert!(err.contains(needle), "{bad}: expected '{needle}' in: {err}");
+            assert!(err.contains("lm.train"), "{bad}: error should name the entry: {err}");
+        }
+    }
+
+    #[test]
+    fn carry_lens_track_mixer_and_gate() {
+        let mut c = ModelConfig { s_max: 4, d_model: 8, n_layers: 2, ..ModelConfig::default() };
+        assert_eq!(c.carry_lens(), (8, 64), "recurrence: (S*2, S*d*2)");
+        c.adaptive = true;
+        assert_eq!(c.carry_lens(), (8 + 9, 64), "gate appends (pool_sum d, count)");
+        c.mixer = "linear_attention".into();
+        assert_eq!(c.state_lens(), (4, 32), "linattn: (S, S*d)");
+        assert_eq!(c.carry_lens(), (4 + 9, 32));
+        // entry builders follow: legacy structured shapes only for the
+        // historical recurrence layout, flat [ly, len] otherwise
+        c.adaptive = false;
+        c.mixer = String::new();
+        let e = Entry::synthetic_decode(&c, 10, "m.decode");
+        assert_eq!(e.inputs[1].shape, vec![2, 4, 2]);
+        assert_eq!(e.inputs[2].shape, vec![2, 4, 8, 2]);
+        c.adaptive = true;
+        let e = Entry::synthetic_decode(&c, 10, "m.decode");
+        assert_eq!(e.inputs[1].shape, vec![2, 17]);
+        assert_eq!(e.inputs[2].shape, vec![2, 64]);
+        let e = Entry::synthetic_stream_batch(&c, 10, "m.srv", 8, 3);
+        assert_eq!(e.inputs[1].shape, vec![3, 2, 17]);
+        assert_eq!(e.outputs[1].shape, vec![3, 2, 64]);
     }
 
     #[test]

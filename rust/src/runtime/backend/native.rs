@@ -150,11 +150,12 @@ impl NativeExec {
 
     /// (m, v, step, tokens [B,N+1], seed) with device-resident flat ->
     /// (flat', m', v', loss, ce, s_eff) — the XLA `train_step` contract,
-    /// implemented by [`crate::train`]. The `seed` input exists for
-    /// artifact-shape parity; the native gate is deterministic (no
-    /// Gumbel-sigmoid relaxation), so it is unused. The backward tape
-    /// is segment-checkpointed per `config.grad_ckpt_segment` (carried
-    /// by the entry the plan was resolved from); gradients are bitwise
+    /// implemented by [`crate::train`]. For adaptive configs the `seed`
+    /// input drives the Gumbel-sigmoid gate relaxation (with the
+    /// step-annealed temperature); otherwise the step is fully
+    /// deterministic and the seed is inert. The backward tape is
+    /// segment-checkpointed per `config.grad_ckpt_segment` (carried by
+    /// the entry the plan was resolved from); gradients are bitwise
     /// identical for every segment length, so the knob never leaks into
     /// the contract outputs.
     fn train_step(&self, model: StltModel, rest: &[Tensor]) -> Result<Vec<Tensor>> {
@@ -185,8 +186,9 @@ impl NativeExec {
                 flat.len()
             );
         }
+        let seed = rest[4].as_i32()?[0] as u64;
         let metrics = crate::train::native_train_step(
-            &model, &mut flat, &mut m, &mut v, step, tokens, b, n1, &self.pool,
+            &model, &mut flat, &mut m, &mut v, step, tokens, b, n1, seed, &self.pool,
         )?;
         crate::debuglog!(
             "native",

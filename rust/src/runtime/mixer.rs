@@ -1,0 +1,854 @@
+//! The mixer seam: token mixing as a first-class, pluggable contract.
+//!
+//! A [`Mixer`] owns everything that differs between token-mixing
+//! families sharing the STLT trunk (embedding → LN → mix → FFN → head):
+//! the per-layer streaming-carry layout, the single-token state advance
+//! ([`Mixer::token_step`], the serving decode hot path), the chunked
+//! forward ([`Mixer::mix_chunk`]), and the segment-checkpointed
+//! reverse-mode adjoints ([`Mixer::backward_chunk`]) the native trainer
+//! replays through. Engine ([`crate::runtime::native_stlt`]), backward
+//! ([`crate::train::backward`]), batched serving decode, and carry
+//! export/import/migration all route through this trait — none of them
+//! hard-code STLT carry shapes.
+//!
+//! Three implementations ship:
+//!
+//! * [`Recurrence`] — the paper's O(N·S·d) recursive Laplace
+//!   convolution (production path), carry = (L [S,2], U [S,d,2]).
+//! * [`ReferenceN2`] — the naive O(N²·S·d) relevance-matrix oracle,
+//!   promoted from test-only to a supported quadratic ablation mode
+//!   (`mixer = "reference_n2"`). Identical model to [`Recurrence`]
+//!   (same parameters, same math, different evaluation order), but
+//!   only valid from a zero carry — [`Mixer::streaming`] is false and
+//!   the engine refuses to stream it mid-sequence. Training uses the
+//!   recurrence tape (same function, O(N) memory).
+//! * [`LinearAttention`] — shared-QK linear attention per
+//!   "Transformers are RNNs" (Katharopoulos et al.): features
+//!   u = φ(f)·m with φ(x) = elu(x)+1, carry = (zv [S], S_mat [S,d]),
+//!   z_t = (u_tᵀ S_t) / (u_tᵀ zv_t + ε). The Laplace node parameters
+//!   (σ, ω, T) do not feed it ([`Mixer::uses_node_params`] is false):
+//!   they stay in the parameter layout for checkpoint compatibility
+//!   but receive exactly-zero gradients.
+//!
+//! The adaptive node gate multiplies the per-node features in every
+//! mixer; the per-token gate rows are computed by the trunk (they need
+//! the gate parameters and the causal pooling state the trunk carries)
+//! and passed in as a strided tape: row t is
+//! `m[t*m_stride .. t*m_stride + S]`, with `m_stride = 0` sharing one
+//! all-ones row across tokens for non-adaptive configs.
+//!
+//! Carry-slot sizing is mirrored (and pinned by a test here) by the
+//! feature-independent [`ModelConfig::state_lens`] /
+//! [`ModelConfig::carry_lens`], which the manifest entry builders use.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::artifact::ModelConfig;
+use crate::runtime::native_stlt::{lu_node_step, NodeParams};
+
+static SEGMENTS_REPLAYED: crate::obs::LazyCounter =
+    crate::obs::LazyCounter::new("train/segments_replayed");
+
+/// Denominator guard of the linear-attention readout (Katharopoulos
+/// et al. use the same form: numerator / (uᵀ zv + ε)).
+const LINATTN_EPS: f32 = 1e-6;
+
+/// The token-mixing contract (see module docs).
+pub trait Mixer: Send + Sync {
+    /// Config-string name (`ModelConfig::mixer`).
+    fn name(&self) -> &'static str;
+
+    /// Per-layer (l-slot, u-slot) lengths of the mixer *state* alone.
+    /// The engine appends the adaptive gate's causal pooling state
+    /// (d+1 floats) to the l slot; [`ModelConfig::carry_lens`] folds
+    /// both and must agree with this (pinned by a test below).
+    fn state_lens(&self, cfg: &ModelConfig) -> (usize, usize);
+
+    /// Whether the mixer can resume from a carried mid-sequence state.
+    /// `false` (the O(N²) oracle) restricts it to whole-sequence
+    /// forwards from a zero carry; the engine enforces this.
+    fn streaming(&self) -> bool {
+        true
+    }
+
+    /// Whether the Laplace node parameters (sigma_raw, omega, t_raw)
+    /// feed this mixer. `false` gates the node-parameter gradient
+    /// conversion and the omega/sigma Eq. Reg terms off in the
+    /// backward, so those parameter groups get exactly-zero gradients.
+    fn uses_node_params(&self) -> bool {
+        true
+    }
+
+    /// Advance the layer state by one token. `fraw_row` [S] is the
+    /// pre-gate feature projection, `m_row` [S] the node gate,
+    /// `v_row` [d] the value projection; `l`/`u` are the
+    /// [`Mixer::state_lens`]-sized state slices. When `z_row` is
+    /// `Some` the mixed output row [d] is accumulated into it (caller
+    /// provides it zeroed); `None` is the backward's replay mode —
+    /// advance the state only, skipping the discarded output flops.
+    #[allow(clippy::too_many_arguments)]
+    fn token_step(
+        &self,
+        np: &NodeParams,
+        s: usize,
+        d: usize,
+        fraw_row: &[f32],
+        m_row: &[f32],
+        l: &mut [f32],
+        u: &mut [f32],
+        v_row: &[f32],
+        z_row: Option<&mut [f32]>,
+    );
+
+    /// One chunk of `n` tokens → zmix [n*d], advancing (l, u) in
+    /// place. Default: the streaming token loop (exactly what the
+    /// engine, tape forward and decode replay, so chunked and
+    /// whole-sequence execution are bitwise identical).
+    #[allow(clippy::too_many_arguments)]
+    fn mix_chunk(
+        &self,
+        np: &NodeParams,
+        s: usize,
+        d: usize,
+        n: usize,
+        fraw: &[f32],
+        m: &[f32],
+        m_stride: usize,
+        v: &[f32],
+        l: &mut [f32],
+        u: &mut [f32],
+    ) -> Vec<f32> {
+        let mut z = vec![0.0f32; n * d];
+        for t in 0..n {
+            self.token_step(
+                np,
+                s,
+                d,
+                &fraw[t * s..(t + 1) * s],
+                &m[t * m_stride..t * m_stride + s],
+                l,
+                u,
+                &v[t * d..(t + 1) * d],
+                Some(&mut z[t * d..(t + 1) * d]),
+            );
+        }
+        z
+    }
+
+    /// Reverse-mode adjoints of a whole-row [`Mixer::mix_chunk`] from a
+    /// zero entry carry, segment-checkpointed: `l_snap`/`u_snap` hold
+    /// the state entering each `ckpt`-token segment (recorded by the
+    /// tape forward), `l_seg`/`u_seg` are caller-provided replay
+    /// buffers of (ckpt+1) state slots, and each segment's state
+    /// history is replayed on the fly through [`Mixer::token_step`] —
+    /// bitwise what a full tape would have stored, so gradients are
+    /// bitwise independent of the segment length.
+    ///
+    /// Inputs mirror the tape: `fraw` [n,S], the strided gate tape
+    /// `m`, `v` [n,d], the recorded outputs `zmix` [n,d] and their
+    /// adjoint `dz` [n,d]. Outputs: `dfraw`/`dm` [n,S] (per-token —
+    /// the gate chain rule differs per mixer, so the fraw/gate split
+    /// happens in here), `dv` [n,d], and the node-constant adjoints
+    /// `da`/`db` [S] (∂/∂lam_re, ∂/∂lam_im) with ∂/∂gamma returned —
+    /// all-zero for mixers with `uses_node_params() == false`.
+    #[allow(clippy::too_many_arguments)]
+    fn backward_chunk(
+        &self,
+        np: &NodeParams,
+        s: usize,
+        d: usize,
+        n: usize,
+        ckpt: usize,
+        fraw: &[f32],
+        m: &[f32],
+        m_stride: usize,
+        v: &[f32],
+        zmix: &[f32],
+        dz: &[f32],
+        l_snap: &[f32],
+        u_snap: &[f32],
+        l_seg: &mut [f32],
+        u_seg: &mut [f32],
+        dfraw: &mut [f32],
+        dm: &mut [f32],
+        dv: &mut [f32],
+        da: &mut [f32],
+        db: &mut [f32],
+    ) -> f64;
+}
+
+/// Resolve a [`Mixer`] from `cfg.mixer` ("" defaults to the
+/// recurrence). The same names are what `parse_config` validates and
+/// the `--mixer` CLI override accepts.
+pub fn mixer_from_config(cfg: &ModelConfig) -> Result<Arc<dyn Mixer>> {
+    match cfg.mixer.as_str() {
+        "" | "recurrence" => Ok(Arc::new(Recurrence)),
+        "reference_n2" => Ok(Arc::new(ReferenceN2)),
+        "linear_attention" => Ok(Arc::new(LinearAttention)),
+        other => bail!(
+            "unknown mixer '{other}' (expected recurrence | reference_n2 | linear_attention)"
+        ),
+    }
+}
+
+/// The O(N·S·d) recursive Laplace convolution (production path):
+///   L_t = lam·L_{t-1} + f_t,  U_t = gamma·U_{t-1} + conj(L_t)⊗v_t,
+///   z_t = Re⟨L_t, U_t⟩ / S,   with f_t = fraw_t ⊙ m_t.
+pub struct Recurrence;
+
+impl Mixer for Recurrence {
+    fn name(&self) -> &'static str {
+        "recurrence"
+    }
+
+    fn state_lens(&self, cfg: &ModelConfig) -> (usize, usize) {
+        (cfg.s_max * 2, cfg.s_max * cfg.d_model * 2)
+    }
+
+    fn token_step(
+        &self,
+        np: &NodeParams,
+        s: usize,
+        d: usize,
+        fraw_row: &[f32],
+        m_row: &[f32],
+        l: &mut [f32],
+        u: &mut [f32],
+        v_row: &[f32],
+        mut z_row: Option<&mut [f32]>,
+    ) {
+        let inv_s = 1.0 / s as f32;
+        for k in 0..s {
+            lu_node_step(
+                np.lam_re[k],
+                np.lam_im[k],
+                np.gamma,
+                fraw_row[k] * m_row[k],
+                &mut l[k * 2..(k + 1) * 2],
+                &mut u[k * d * 2..(k + 1) * d * 2],
+                v_row,
+                z_row.as_deref_mut(),
+            );
+        }
+        if let Some(zr) = z_row {
+            for ze in zr.iter_mut() {
+                *ze *= inv_s;
+            }
+        }
+    }
+
+    fn backward_chunk(
+        &self,
+        np: &NodeParams,
+        s: usize,
+        d: usize,
+        n: usize,
+        ckpt: usize,
+        fraw: &[f32],
+        m: &[f32],
+        m_stride: usize,
+        v: &[f32],
+        _zmix: &[f32],
+        dz: &[f32],
+        l_snap: &[f32],
+        u_snap: &[f32],
+        l_seg: &mut [f32],
+        u_seg: &mut [f32],
+        dfraw: &mut [f32],
+        dm: &mut [f32],
+        dv: &mut [f32],
+        da: &mut [f32],
+        db: &mut [f32],
+    ) -> f64 {
+        // Running the adjoints GL_t = ∂loss/∂L_t, GU_t = ∂loss/∂U_t
+        // backwards in t gives an exact O(N·S·d) gradient — the same
+        // linear-attention trick the forward exploits, transposed in
+        // time. Segments replay in reverse order; the GL/GU carries
+        // thread across segment boundaries exactly like the forward
+        // carries did, just reversed.
+        let inv_s = 1.0 / s as f32;
+        let mut gl = vec![0.0f32; s * 2];
+        let mut gu = vec![0.0f32; s * d * 2];
+        let mut dgamma = 0.0f64;
+        let mut dfp = vec![0.0f32; n * s]; // adjoint of the gated f
+        let nseg = n.div_ceil(ckpt);
+        for seg in (0..nseg).rev() {
+            let _span = crate::obs::span("train", "segment_replay");
+            SEGMENTS_REPLAYED.inc();
+            let t0 = seg * ckpt;
+            let len = ckpt.min(n - t0);
+            l_seg[..s * 2].copy_from_slice(&l_snap[seg * s * 2..(seg + 1) * s * 2]);
+            u_seg[..s * d * 2]
+                .copy_from_slice(&u_snap[seg * s * d * 2..(seg + 1) * s * d * 2]);
+            for j in 0..len {
+                let t = t0 + j;
+                let (ldone, lrest) = l_seg.split_at_mut((j + 1) * s * 2);
+                let lcur = &mut lrest[..s * 2];
+                lcur.copy_from_slice(&ldone[j * s * 2..]);
+                let (udone, urest) = u_seg.split_at_mut((j + 1) * s * d * 2);
+                let ucur = &mut urest[..s * d * 2];
+                ucur.copy_from_slice(&udone[j * s * d * 2..]);
+                // replay advances L/U only; z is never re-needed
+                self.token_step(
+                    np,
+                    s,
+                    d,
+                    &fraw[t * s..(t + 1) * s],
+                    &m[t * m_stride..t * m_stride + s],
+                    lcur,
+                    ucur,
+                    &v[t * d..(t + 1) * d],
+                    None,
+                );
+            }
+            for j in (0..len).rev() {
+                let t = t0 + j;
+                let lrow = &l_seg[(j + 1) * s * 2..(j + 2) * s * 2];
+                let urow = &u_seg[(j + 1) * s * d * 2..(j + 2) * s * d * 2];
+                // slot j: the state before t — for the global t = 0 this
+                // is the zero carry, so its adjoint terms add exact zeros
+                let lprev = &l_seg[j * s * 2..(j + 1) * s * 2];
+                let uprev = &u_seg[j * s * d * 2..(j + 1) * s * d * 2];
+                let vr = &v[t * d..(t + 1) * d];
+                let dvr = &mut dv[t * d..(t + 1) * d];
+                let zg = &dz[t * d..(t + 1) * d];
+                for k in 0..s {
+                    let (ltr, lti) = (lrow[k * 2], lrow[k * 2 + 1]);
+                    let ub = &urow[k * d * 2..(k + 1) * d * 2];
+                    let up = &uprev[k * d * 2..(k + 1) * d * 2];
+                    let gub = &mut gu[k * d * 2..(k + 1) * d * 2];
+                    let (mut glr, mut gli) = (gl[k * 2], gl[k * 2 + 1]);
+                    let mut dg_loc = 0.0f64;
+                    for e in 0..d {
+                        let g_te = zg[e] * inv_s;
+                        // z_t = Σ_k Re(L_t · U_t)/S
+                        let gur = gub[e * 2] + g_te * ltr;
+                        let gui = gub[e * 2 + 1] - g_te * lti;
+                        glr += g_te * ub[e * 2];
+                        gli -= g_te * ub[e * 2 + 1];
+                        // U_t = gamma U_{t-1} + conj(L_t) v_t
+                        dg_loc += (gur * up[e * 2]) as f64 + (gui * up[e * 2 + 1]) as f64;
+                        let ve = vr[e];
+                        dvr[e] += gur * ltr - gui * lti;
+                        glr += gur * ve;
+                        gli -= gui * ve;
+                        gub[e * 2] = np.gamma * gur;
+                        gub[e * 2 + 1] = np.gamma * gui;
+                    }
+                    dgamma += dg_loc;
+                    // L_t = lam L_{t-1} + f_t
+                    dfp[t * s + k] += glr;
+                    let (lpr, lpi) = (lprev[k * 2], lprev[k * 2 + 1]);
+                    da[k] += glr * lpr + gli * lpi;
+                    db[k] += -glr * lpi + gli * lpr;
+                    let (a, b) = (np.lam_re[k], np.lam_im[k]);
+                    gl[k * 2] = a * glr + b * gli;
+                    gl[k * 2 + 1] = -b * glr + a * gli;
+                }
+            }
+        }
+        // f = fraw ⊙ m: split the gated-feature adjoint
+        for t in 0..n {
+            for k in 0..s {
+                let dfp_tk = dfp[t * s + k];
+                dfraw[t * s + k] = dfp_tk * m[t * m_stride + k];
+                dm[t * s + k] = dfp_tk * fraw[t * s + k];
+            }
+        }
+        dgamma
+    }
+}
+
+/// Naive O(N²·S·d) relevance-matrix oracle: materialises L via explicit
+/// lam powers and recomputes every discounted U prefix sum. Identical
+/// model to [`Recurrence`] (delegates token_step/backward to it); only
+/// the chunked forward is the quadratic evaluation, and only from a
+/// zero carry ([`Mixer::streaming`] = false, enforced by the engine).
+pub struct ReferenceN2;
+
+impl Mixer for ReferenceN2 {
+    fn name(&self) -> &'static str {
+        "reference_n2"
+    }
+
+    fn state_lens(&self, cfg: &ModelConfig) -> (usize, usize) {
+        Recurrence.state_lens(cfg)
+    }
+
+    fn streaming(&self) -> bool {
+        false
+    }
+
+    fn token_step(
+        &self,
+        np: &NodeParams,
+        s: usize,
+        d: usize,
+        fraw_row: &[f32],
+        m_row: &[f32],
+        l: &mut [f32],
+        u: &mut [f32],
+        v_row: &[f32],
+        z_row: Option<&mut [f32]>,
+    ) {
+        // the training tape streams even for the quadratic ablation
+        // mode — same model, O(N) tape instead of O(N²) evaluation
+        Recurrence.token_step(np, s, d, fraw_row, m_row, l, u, v_row, z_row);
+    }
+
+    fn mix_chunk(
+        &self,
+        np: &NodeParams,
+        s: usize,
+        d: usize,
+        n: usize,
+        fraw: &[f32],
+        m: &[f32],
+        m_stride: usize,
+        v: &[f32],
+        l: &mut [f32],
+        u: &mut [f32],
+    ) -> Vec<f32> {
+        let inv_s = 1.0 / s as f32;
+        // gate first, exactly like the streaming path's f_t = fraw_t ⊙ m_t
+        let mut fproj = vec![0.0f32; n * s];
+        for t in 0..n {
+            for k in 0..s {
+                fproj[t * s + k] = fraw[t * s + k] * m[t * m_stride + k];
+            }
+        }
+        // lam^p for p in [0, n): [n][s]
+        let mut pow_re = vec![0.0f32; n.max(1) * s];
+        let mut pow_im = vec![0.0f32; n.max(1) * s];
+        for k in 0..s {
+            pow_re[k] = 1.0;
+            pow_im[k] = 0.0;
+        }
+        for p in 1..n {
+            for k in 0..s {
+                let (ar, ai) = (pow_re[(p - 1) * s + k], pow_im[(p - 1) * s + k]);
+                pow_re[p * s + k] = ar * np.lam_re[k] - ai * np.lam_im[k];
+                pow_im[p * s + k] = ar * np.lam_im[k] + ai * np.lam_re[k];
+            }
+        }
+        // L[t,k] = sum_{m<=t} f[m,k] lam^{t-m}
+        let mut l_re = vec![0.0f32; n * s];
+        let mut l_im = vec![0.0f32; n * s];
+        for t in 0..n {
+            for mm in 0..=t {
+                let p = t - mm;
+                for k in 0..s {
+                    let f = fproj[mm * s + k];
+                    l_re[t * s + k] += f * pow_re[p * s + k];
+                    l_im[t * s + k] += f * pow_im[p * s + k];
+                }
+            }
+        }
+        // z_t = Re<L_t, U_t>/S with U_t = sum_{m<=t} gamma^{t-m} conj(L_m) (x) v_m
+        let mut z = vec![0.0f32; n * d];
+        for t in 0..n {
+            for k in 0..s {
+                let (ltr, lti) = (l_re[t * s + k], l_im[t * s + k]);
+                let mut g = 1.0f32;
+                for mm in (0..=t).rev() {
+                    let (lmr, lmi) = (l_re[mm * s + k], l_im[mm * s + k]);
+                    for e in 0..d {
+                        let ve = v[mm * d + e];
+                        // ur += g*lmr*ve ; ui += -g*lmi*ve ; z += ltr*ur - lti*ui
+                        z[t * d + e] += (ltr * lmr + lti * lmi) * g * ve;
+                    }
+                    g *= np.gamma;
+                }
+            }
+            for e in 0..d {
+                z[t * d + e] *= inv_s;
+            }
+        }
+        // advance the carry to the end-of-chunk state for parity checks
+        if n > 0 {
+            for k in 0..s {
+                l[k * 2] = l_re[(n - 1) * s + k];
+                l[k * 2 + 1] = l_im[(n - 1) * s + k];
+                let ub = &mut u[k * d * 2..(k + 1) * d * 2];
+                for e in 0..d {
+                    let (mut ur, mut ui) = (0.0f32, 0.0f32);
+                    let mut g = 1.0f32;
+                    for mm in (0..n).rev() {
+                        ur += g * l_re[mm * s + k] * v[mm * d + e];
+                        ui -= g * l_im[mm * s + k] * v[mm * d + e];
+                        g *= np.gamma;
+                    }
+                    ub[e * 2] = ur;
+                    ub[e * 2 + 1] = ui;
+                }
+            }
+        }
+        z
+    }
+
+    fn backward_chunk(
+        &self,
+        np: &NodeParams,
+        s: usize,
+        d: usize,
+        n: usize,
+        ckpt: usize,
+        fraw: &[f32],
+        m: &[f32],
+        m_stride: usize,
+        v: &[f32],
+        zmix: &[f32],
+        dz: &[f32],
+        l_snap: &[f32],
+        u_snap: &[f32],
+        l_seg: &mut [f32],
+        u_seg: &mut [f32],
+        dfraw: &mut [f32],
+        dm: &mut [f32],
+        dv: &mut [f32],
+        da: &mut [f32],
+        db: &mut [f32],
+    ) -> f64 {
+        Recurrence.backward_chunk(
+            np, s, d, n, ckpt, fraw, m, m_stride, v, zmix, dz, l_snap, u_snap, l_seg, u_seg,
+            dfraw, dm, dv, da, db,
+        )
+    }
+}
+
+/// φ(x) = elu(x) + 1 and its derivative — the positive feature map of
+/// "Transformers are RNNs" (both branches agree at x = 0: φ = φ' = 1).
+#[inline(always)]
+fn phi(x: f32) -> (f32, f32) {
+    if x > 0.0 {
+        (x + 1.0, 1.0)
+    } else {
+        let ex = x.exp();
+        (ex, ex)
+    }
+}
+
+/// Shared-QK linear attention: u_t = φ(fraw_t) ⊙ m_t, streaming state
+/// zv_t = Σ u, S_t = Σ u⊗v, readout z_t = (u_tᵀ S_t)/(u_tᵀ zv_t + ε)
+/// with inclusive (post-update) reads — the causal-attention form.
+/// Gating post-φ keeps the feature map positive and makes m_k → 0
+/// remove node k from numerator and denominator alike.
+pub struct LinearAttention;
+
+impl LinearAttention {
+    /// Readout denominator, accumulated in one fixed order so the
+    /// forward and the backward's recomputation agree bitwise.
+    #[inline(always)]
+    fn den(u: &[f32], zv: &[f32]) -> f32 {
+        let mut den = LINATTN_EPS;
+        for (uk, zk) in u.iter().zip(zv) {
+            den += uk * zk;
+        }
+        den
+    }
+}
+
+impl Mixer for LinearAttention {
+    fn name(&self) -> &'static str {
+        "linear_attention"
+    }
+
+    fn state_lens(&self, cfg: &ModelConfig) -> (usize, usize) {
+        (cfg.s_max, cfg.s_max * cfg.d_model)
+    }
+
+    fn uses_node_params(&self) -> bool {
+        false
+    }
+
+    fn token_step(
+        &self,
+        _np: &NodeParams,
+        s: usize,
+        d: usize,
+        fraw_row: &[f32],
+        m_row: &[f32],
+        zv: &mut [f32],
+        s_mat: &mut [f32],
+        v_row: &[f32],
+        z_row: Option<&mut [f32]>,
+    ) {
+        let mut u = vec![0.0f32; s];
+        for k in 0..s {
+            u[k] = phi(fraw_row[k]).0 * m_row[k];
+            zv[k] += u[k];
+            let sk = &mut s_mat[k * d..(k + 1) * d];
+            for (se, &ve) in sk.iter_mut().zip(v_row) {
+                *se += u[k] * ve;
+            }
+        }
+        if let Some(zr) = z_row {
+            for k in 0..s {
+                let sk = &s_mat[k * d..(k + 1) * d];
+                for (ze, &se) in zr.iter_mut().zip(sk) {
+                    *ze += u[k] * se;
+                }
+            }
+            let inv_den = 1.0 / Self::den(&u, zv);
+            for ze in zr.iter_mut() {
+                *ze *= inv_den;
+            }
+        }
+    }
+
+    fn backward_chunk(
+        &self,
+        np: &NodeParams,
+        s: usize,
+        d: usize,
+        n: usize,
+        ckpt: usize,
+        fraw: &[f32],
+        m: &[f32],
+        m_stride: usize,
+        v: &[f32],
+        zmix: &[f32],
+        dz: &[f32],
+        l_snap: &[f32],
+        u_snap: &[f32],
+        l_seg: &mut [f32],
+        u_seg: &mut [f32],
+        dfraw: &mut [f32],
+        dm: &mut [f32],
+        dv: &mut [f32],
+        _da: &mut [f32],
+        _db: &mut [f32],
+    ) -> f64 {
+        // GS = ∂loss/∂S_t, Gzv = ∂loss/∂zv_t, threaded backwards across
+        // segment boundaries; the state decompositions S_t = S_{t-1} +
+        // u_t ⊗ v_t and zv_t = zv_{t-1} + u_t pass both through
+        // unchanged, so no decay factors appear.
+        let mut gs = vec![0.0f32; s * d];
+        let mut gzv = vec![0.0f32; s];
+        let mut u = vec![0.0f32; s];
+        let mut dnum = vec![0.0f32; d];
+        let nseg = n.div_ceil(ckpt);
+        for seg in (0..nseg).rev() {
+            let _span = crate::obs::span("train", "segment_replay");
+            SEGMENTS_REPLAYED.inc();
+            let t0 = seg * ckpt;
+            let len = ckpt.min(n - t0);
+            l_seg[..s].copy_from_slice(&l_snap[seg * s..(seg + 1) * s]);
+            u_seg[..s * d].copy_from_slice(&u_snap[seg * s * d..(seg + 1) * s * d]);
+            for j in 0..len {
+                let t = t0 + j;
+                let (ldone, lrest) = l_seg.split_at_mut((j + 1) * s);
+                let lcur = &mut lrest[..s];
+                lcur.copy_from_slice(&ldone[j * s..]);
+                let (udone, urest) = u_seg.split_at_mut((j + 1) * s * d);
+                let ucur = &mut urest[..s * d];
+                ucur.copy_from_slice(&udone[j * s * d..]);
+                self.token_step(
+                    np,
+                    s,
+                    d,
+                    &fraw[t * s..(t + 1) * s],
+                    &m[t * m_stride..t * m_stride + s],
+                    lcur,
+                    ucur,
+                    &v[t * d..(t + 1) * d],
+                    None,
+                );
+            }
+            for j in (0..len).rev() {
+                let t = t0 + j;
+                // slot j+1: (zv, S) after token t — num/den read the
+                // post-update state, so the adjoints do too
+                let zvrow = &l_seg[(j + 1) * s..(j + 2) * s];
+                let srow = &u_seg[(j + 1) * s * d..(j + 2) * s * d];
+                let frow = &fraw[t * s..(t + 1) * s];
+                let mrow = &m[t * m_stride..t * m_stride + s];
+                for k in 0..s {
+                    u[k] = phi(frow[k]).0 * mrow[k];
+                }
+                let zrow = &zmix[t * d..(t + 1) * d];
+                let dzr = &dz[t * d..(t + 1) * d];
+                let inv_den = 1.0 / Self::den(&u, zvrow);
+                // z = num/den: dnum = dz/den, dden = -Σ_e dnum_e z_e
+                let mut dden = 0.0f32;
+                for e in 0..d {
+                    dnum[e] = dzr[e] * inv_den;
+                    dden -= dnum[e] * zrow[e];
+                }
+                let vr = &v[t * d..(t + 1) * d];
+                let dvr = &mut dv[t * d..(t + 1) * d];
+                for k in 0..s {
+                    let sk = &srow[k * d..(k + 1) * d];
+                    let gsk = &mut gs[k * d..(k + 1) * d];
+                    // num_e = Σ_k u_k S[k,e] ; den = Σ_k u_k zv_k + ε
+                    let mut du_k = dden * zvrow[k];
+                    for e in 0..d {
+                        du_k += dnum[e] * sk[e];
+                        gsk[e] += dnum[e] * u[k];
+                    }
+                    gzv[k] += dden * u[k];
+                    // S_t = S_{t-1} + u_t ⊗ v_t ; zv_t = zv_{t-1} + u_t
+                    for e in 0..d {
+                        du_k += gsk[e] * vr[e];
+                        dvr[e] += gsk[e] * u[k];
+                    }
+                    du_k += gzv[k];
+                    // u = φ(fraw) ⊙ m
+                    let (ph, dph) = phi(frow[k]);
+                    dfraw[t * s + k] = du_k * dph * mrow[k];
+                    dm[t * s + k] = du_k * ph;
+                }
+            }
+        }
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn cfg(s: usize, d: usize) -> ModelConfig {
+        ModelConfig {
+            arch: "stlt".into(),
+            vocab: 11,
+            d_model: d,
+            n_layers: 1,
+            n_ctx: 16,
+            s_max: s,
+            batch: 1,
+            mode: "linear".into(),
+            ..ModelConfig::default()
+        }
+    }
+
+    fn dummy_np(s: usize) -> NodeParams {
+        NodeParams {
+            lam_re: vec![0.5; s],
+            lam_im: vec![0.1; s],
+            gamma: 0.9,
+        }
+    }
+
+    #[test]
+    fn state_lens_agree_with_config() {
+        // the trait's carry contract and the feature-independent
+        // ModelConfig mirror (used by manifest entry builders) must
+        // never drift
+        for name in ["recurrence", "reference_n2", "linear_attention"] {
+            let mut c = cfg(4, 8);
+            c.mixer = name.into();
+            let mx = mixer_from_config(&c).unwrap();
+            assert_eq!(mx.state_lens(&c), c.state_lens(), "{name}");
+            let (sl, su) = c.state_lens();
+            assert_eq!(c.carry_lens(), (sl, su), "no gate state when not adaptive");
+            c.adaptive = true;
+            assert_eq!(c.carry_lens(), (sl + c.d_model + 1, su), "{name} gate state");
+        }
+        assert!(mixer_from_config(&{
+            let mut c = cfg(4, 8);
+            c.mixer = "softmax".into();
+            c
+        })
+        .is_err());
+    }
+
+    #[test]
+    fn linear_attention_matches_quadratic_oracle() {
+        // streaming state form == the O(n²) causal-attention form:
+        //   z_t[e] = Σ_{t'<=t} (u_t · u_{t'}) v_{t'}[e]
+        //           / (Σ_{t'<=t} (u_t · u_{t'}) + ε)
+        let (s, d, n) = (4usize, 6usize, 9usize);
+        let c = cfg(s, d);
+        let np = dummy_np(s);
+        let mut rng = Rng::new(7);
+        let fraw: Vec<f32> = (0..n * s).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let v: Vec<f32> = (0..n * d).map(|_| rng.f32() - 0.5).collect();
+        let m: Vec<f32> = (0..n * s).map(|_| 0.25 + 0.75 * rng.f32()).collect();
+        let mx = LinearAttention;
+        let (sl, su) = mx.state_lens(&c);
+        let (mut l, mut u_st) = (vec![0.0f32; sl], vec![0.0f32; su]);
+        let z = mx.mix_chunk(&np, s, d, n, &fraw, &m, s, &v, &mut l, &mut u_st);
+        // oracle in f64
+        let uu: Vec<f64> = (0..n * s)
+            .map(|i| {
+                let x = fraw[i] as f64;
+                let p = if x > 0.0 { x + 1.0 } else { x.exp() };
+                p * m[i] as f64
+            })
+            .collect();
+        for t in 0..n {
+            for e in 0..d {
+                let (mut num, mut den) = (0.0f64, LINATTN_EPS as f64);
+                for tp in 0..=t {
+                    let mut dot = 0.0f64;
+                    for k in 0..s {
+                        dot += uu[t * s + k] * uu[tp * s + k];
+                    }
+                    num += dot * v[tp * d + e] as f64;
+                    if e == 0 {
+                        den += dot;
+                    }
+                }
+                let mut den_all = LINATTN_EPS as f64;
+                for tp in 0..=t {
+                    let mut dot = 0.0f64;
+                    for k in 0..s {
+                        dot += uu[t * s + k] * uu[tp * s + k];
+                    }
+                    den_all += dot;
+                }
+                let want = num / den_all;
+                let got = z[t * d + e] as f64;
+                assert!(
+                    (got - want).abs() < 1e-4 * (1.0 + want.abs()),
+                    "z[{t},{e}] {got} vs {want}"
+                );
+            }
+        }
+        // and the carried state equals the plain sums
+        for k in 0..s {
+            let want: f64 = (0..n).map(|t| uu[t * s + k]).sum();
+            assert!((l[k] as f64 - want).abs() < 1e-4 * (1.0 + want.abs()));
+        }
+    }
+
+    #[test]
+    fn linear_attention_chunked_state_is_bitwise_invariant() {
+        // the carry makes chunk boundaries invisible: any split of the
+        // token stream produces bitwise the same outputs and state
+        let (s, d, n) = (3usize, 5usize, 12usize);
+        let c = cfg(s, d);
+        let np = dummy_np(s);
+        let mut rng = Rng::new(3);
+        let fraw: Vec<f32> = (0..n * s).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let v: Vec<f32> = (0..n * d).map(|_| rng.f32() - 0.5).collect();
+        let m = vec![1.0f32; s];
+        let mx = LinearAttention;
+        let (sl, su) = mx.state_lens(&c);
+        let (mut l, mut u_st) = (vec![0.0f32; sl], vec![0.0f32; su]);
+        let whole = mx.mix_chunk(&np, s, d, n, &fraw, &m, 0, &v, &mut l, &mut u_st);
+        let (mut l2, mut u2) = (vec![0.0f32; sl], vec![0.0f32; su]);
+        let mut pieces = Vec::new();
+        for (t0, len) in [(0usize, 5usize), (5, 1), (6, 6)] {
+            pieces.extend(mx.mix_chunk(
+                &np,
+                s,
+                d,
+                len,
+                &fraw[t0 * s..(t0 + len) * s],
+                &m,
+                0,
+                &v[t0 * d..(t0 + len) * d],
+                &mut l2,
+                &mut u2,
+            ));
+        }
+        assert_eq!(whole, pieces);
+        assert_eq!(l, l2);
+        assert_eq!(u_st, u2);
+    }
+}

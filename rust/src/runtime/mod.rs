@@ -14,6 +14,8 @@ pub mod backend;
 pub mod client;
 pub mod exec;
 #[cfg(feature = "native")]
+pub mod mixer;
+#[cfg(feature = "native")]
 pub mod native_stlt;
 pub mod tensor;
 
@@ -24,6 +26,8 @@ pub use exec::{
     BatchedDecodeStep, DecodeStep, EvalStep, Forward, S2sDecode, S2sTrainStep, StepMetrics,
     StreamCarry, StreamStep, TrainState, TrainStep,
 };
+#[cfg(feature = "native")]
+pub use mixer::{mixer_from_config, Mixer};
 #[cfg(feature = "native")]
 pub use native_stlt::StltModel;
 pub use tensor::{DType, Tensor};

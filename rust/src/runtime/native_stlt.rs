@@ -31,9 +31,23 @@
 //! bitwise-identical values — so the forward and backward can never
 //! drift numerically.
 //!
-//! A naive O(N^2 S) relevance-matrix oracle ([`MixerImpl::ReferenceN2`])
-//! and FFT-based spectral relevance cross-checks (via [`crate::util::fft`],
-//! the paper's SS3.4 claim) keep the recurrence honest in tests.
+//! Token mixing itself is pluggable: the trunk routes through the
+//! [`crate::runtime::mixer::Mixer`] trait (selected by
+//! `ModelConfig::mixer`), so the recursive Laplace convolution, the
+//! naive O(N² S) relevance-matrix oracle (`reference_n2`, a supported
+//! quadratic ablation mode), and the linear-attention baseline
+//! (`linear_attention`) all share this trunk, the serving decode path,
+//! and the training tape. FFT-based spectral relevance cross-checks
+//! (via [`crate::util::fft`], the paper's SS3.4 claim) keep the
+//! recurrence honest in tests.
+//!
+//! The adaptive node gate (SS3.6) is causal: gate logits at token t see
+//! the running mean of the pre-mixer activations over tokens ≤ t, with
+//! the (pool_sum, count) pooling state appended to each layer's l-carry
+//! slot — so chunked streaming, batched decode, and whole-sequence
+//! forwards are bitwise identical. (The python reference pools over the
+//! whole row acausally; the causal running mean is the documented
+//! deviation that makes adaptive models streamable at all.)
 
 use std::sync::{Arc, Mutex, Weak};
 
@@ -41,6 +55,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::interpret::{total_params, trunk_layout, Leaf};
 use crate::runtime::artifact::ModelConfig;
+use crate::runtime::mixer::{mixer_from_config, Mixer};
 use crate::util::linalg;
 use crate::util::rng::Rng;
 use crate::util::threadpool::scatter_rows;
@@ -53,12 +68,17 @@ const MIN_PAR_ROWS: usize = 16;
 static BIND_HITS: crate::obs::LazyCounter = crate::obs::LazyCounter::new("panels/bind_hits");
 static BIND_PACKS: crate::obs::LazyCounter = crate::obs::LazyCounter::new("panels/bind_packs");
 
-/// Publish per-node `sigma`/`omega`/`T`/half-life gauges under
-/// `node/l{L}/n{K}/..` plus a per-layer `half_life_mean` — the paper's
-/// interpretability story (a node's memory half-life is
-/// `ln2 / (sigma + 1/T)` tokens) surfaced as live telemetry. Called at
-/// server start and every `--metrics-every` interval during training;
-/// a flat vector that does not match the config is skipped silently
+/// Publish per-node `sigma`/`omega`/`T`/half-life/`alpha` gauges under
+/// `node/l{L}/n{K}/..` plus per-layer `half_life_mean` and
+/// `active_nodes` — the paper's interpretability story (a node's memory
+/// half-life is `ln2 / (sigma + 1/T)` tokens, and the adaptive gate's
+/// resting activity `alpha = sigmoid(b_alpha)` says which nodes the
+/// model still pays for) surfaced as live telemetry. `half_life_mean`
+/// is alpha-weighted so nodes the gate has switched off stop dragging
+/// the reported memory horizon; for non-adaptive configs alpha is 1.0
+/// everywhere and the mean is the plain average. Called at server start
+/// and every `--metrics-every` interval during training; a flat vector
+/// that does not match the config is skipped silently
 /// (foreign-backend layouts have nothing to report).
 pub fn publish_node_gauges(cfg: &ModelConfig, flat: &[f32]) {
     if !crate::obs::metrics_on() {
@@ -74,26 +94,40 @@ pub fn publish_node_gauges(cfg: &ModelConfig, flat: &[f32]) {
     let ln2 = std::f64::consts::LN_2;
     for (l, lo) in plan.layers.iter().enumerate() {
         let t = softplus(flat[lo.t_raw]) + 1.0;
-        let mut hl_sum = 0.0f64;
+        let mut hl_wsum = 0.0f64;
+        let mut a_sum = 0.0f64;
+        let mut active = 0usize;
         for k in 0..cfg.s_max {
             let sigma = softplus(flat[lo.sigma_raw + k]) + cfg.sigma_min;
             let omega = if cfg.omega_zero { 0.0 } else { flat[lo.omega + k] };
             let half_life = ln2 / (sigma as f64 + 1.0 / t as f64);
-            hl_sum += half_life;
+            // resting gate activity: the causal pool starts at zero, so
+            // sigmoid(b_alpha) is the gate a fresh stream opens with
+            let alpha = match (cfg.adaptive, lo.b_alpha) {
+                (true, Some(ba)) => sigmoid(flat[ba + k]) as f64,
+                _ => 1.0,
+            };
+            if alpha > 0.5 {
+                active += 1;
+            }
+            hl_wsum += alpha * half_life;
+            a_sum += alpha;
             crate::obs::gauge(&format!("node/l{l}/n{k}/sigma")).set(sigma as f64);
             crate::obs::gauge(&format!("node/l{l}/n{k}/omega")).set(omega as f64);
             crate::obs::gauge(&format!("node/l{l}/n{k}/t")).set(t as f64);
             crate::obs::gauge(&format!("node/l{l}/n{k}/half_life")).set(half_life);
+            crate::obs::gauge(&format!("node/l{l}/n{k}/alpha")).set(alpha);
         }
         crate::obs::gauge(&format!("node/l{l}/half_life_mean"))
-            .set(hl_sum / cfg.s_max.max(1) as f64);
+            .set(if a_sum > 0.0 { hl_wsum / a_sum } else { 0.0 });
+        crate::obs::gauge(&format!("node/l{l}/active_nodes")).set(active as f64);
     }
 }
 
 /// One node's Laplace-carry advance for a single timestep — THE
-/// recurrence kernel, shared verbatim by the streaming engine
-/// ([`StltModel::mix_recurrence`]), the training-tape forward, and the
-/// backward pass's segment-checkpoint replay (`train/backward.rs`).
+/// recurrence kernel, shared verbatim by the streaming engine (via
+/// [`crate::runtime::mixer::Recurrence`]), the training-tape forward,
+/// and the backward pass's segment-checkpoint replay.
 /// One function on all three sides means a carry snapshot taken during
 /// the tape forward replays to bitwise-identical (L, U) values during
 /// the backward, and the tape can never drift from what the engine
@@ -144,19 +178,6 @@ pub(crate) fn softplus(x: f32) -> f32 {
 
 pub(crate) fn sigmoid(x: f32) -> f32 {
     1.0 / (1.0 + (-x).exp())
-}
-
-/// Which mixer implementation [`StltModel::forward_logits`] uses.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
-pub enum MixerImpl {
-    /// The O(N·S·d) recursive convolution (production path).
-    #[default]
-    Recurrence,
-    /// Naive O(N^2·S·d) relevance-style oracle recomputing every
-    /// discounted prefix sum from scratch — test-only cross-check;
-    /// only valid from a zero carry (full-sequence forward), enforced
-    /// by [`StltModel::trunk_chunk`].
-    ReferenceN2,
 }
 
 /// Resolved offsets of one trunk layer inside the flat vector.
@@ -226,7 +247,9 @@ fn pack_panels(cfg: &ModelConfig, layers: &[LayerOffsets], flat: &[f32]) -> Pane
 type PanelCache = Mutex<Option<(Weak<Vec<f32>>, Arc<Panels>)>>;
 
 /// Per-layer node constants derived from the learnable parameters.
-pub(crate) struct NodeParams {
+/// `pub` because the [`Mixer`] trait's methods take it (mixers that
+/// ignore the Laplace nodes, like linear attention, just don't read it).
+pub struct NodeParams {
     pub(crate) lam_re: Vec<f32>,
     pub(crate) lam_im: Vec<f32>,
     pub(crate) gamma: f32,
@@ -249,6 +272,7 @@ pub struct StltPlan {
     lnf_b: usize,
     total: usize,
     panel_cache: Arc<PanelCache>,
+    mixer: Arc<dyn Mixer>,
 }
 
 /// The native STLT model: a plan bound to a flat packed parameter
@@ -267,7 +291,7 @@ pub struct StltModel {
     embed: usize,
     lnf_g: usize,
     lnf_b: usize,
-    pub mixer: MixerImpl,
+    mixer: Arc<dyn Mixer>,
 }
 
 fn find(layout: &[Leaf], path: &str) -> Result<usize> {
@@ -327,6 +351,7 @@ impl StltPlan {
             });
         }
         Ok(StltPlan {
+            mixer: mixer_from_config(cfg)?,
             cfg: Arc::new(cfg.clone()),
             embed: find(&layout, "/embed")?,
             lnf_g: find(&layout, "/lnf_g")?,
@@ -381,7 +406,7 @@ impl StltPlan {
             embed: self.embed,
             lnf_g: self.lnf_g,
             lnf_b: self.lnf_b,
-            mixer: MixerImpl::Recurrence,
+            mixer: Arc::clone(&self.mixer),
         })
     }
 }
@@ -392,10 +417,22 @@ impl StltModel {
         StltPlan::new(cfg)?.bind(flat)
     }
 
-    /// Zero streaming carry: (L [n_layers*S*2], U [n_layers*S*d*2]).
+    /// Zero streaming carry, `(l [n_layers * ll], u [n_layers * ul])`
+    /// with per-layer slot lengths from [`ModelConfig::carry_lens`] —
+    /// the mixer's own state plus, when adaptive, the causal gate's
+    /// (pool_sum [d], count) appended to the l slot. For the default
+    /// non-adaptive recurrence this is the historical
+    /// (L [n_layers*S*2], U [n_layers*S*d*2]) layout, so v2 checkpoints
+    /// and their exported carries stream unchanged.
     pub fn zero_carry(&self) -> (Vec<f32>, Vec<f32>) {
-        let (ly, s, d) = (self.cfg.n_layers, self.cfg.s_max, self.cfg.d_model);
-        (vec![0.0; ly * s * 2], vec![0.0; ly * s * d * 2])
+        let ly = self.cfg.n_layers;
+        let (ll, ul) = self.cfg.carry_lens();
+        (vec![0.0; ly * ll], vec![0.0; ly * ul])
+    }
+
+    /// The mixer this model routes token mixing through.
+    pub fn mixer(&self) -> &dyn Mixer {
+        &*self.mixer
     }
 
     /// Per-layer parameter offsets, in layer order ([`crate::train`]).
@@ -436,45 +473,60 @@ impl StltModel {
         NodeParams { lam_re, lam_im, gamma }
     }
 
-    /// Adaptive node gate m [S] plus the mean-pooled pre-mixer
-    /// activations it was computed from (deterministic inference alpha,
-    /// SS3.6) — shared by the engine and the training tape so the gate
-    /// logits are computed by the same kernel on both sides. All-ones
-    /// (and an empty pooled vector) when not adaptive.
-    pub(crate) fn gate_full(
+    /// Causal adaptive node gate (SS3.6, streaming form): one gate row
+    /// [S] per token, where token t's logits see the running mean of
+    /// the pre-mixer activations over tokens ≤ t. `gate_state` is the
+    /// (pool_sum [d], count [1]) slice appended to the layer's l-carry
+    /// slot, advanced in place — so any chunking of the token stream
+    /// (including single-token decode) produces bitwise the same gates.
+    /// Returns `None` when the config is not adaptive (callers share
+    /// one all-ones row with stride 0).
+    ///
+    /// The training tape computes the same pool/logits arithmetic (plus
+    /// Gumbel noise and a temperature) in `train/backward.rs`; the
+    /// deterministic path here is what eval and serving use.
+    pub(crate) fn causal_gate_rows(
         &self,
         lo: &LayerOffsets,
         lp: &LayerPanels,
         h: &[f32],
         n: usize,
-    ) -> (Vec<f32>, Vec<f32>) {
+        gate_state: &mut [f32],
+    ) -> Option<Vec<f32>> {
         let (s, d) = (self.cfg.s_max, self.cfg.d_model);
         if !self.cfg.adaptive {
-            return (vec![1.0; s], Vec::new());
+            return None;
         }
         let (ba, wat) = match (lo.b_alpha, &lp.w_alpha_t) {
             (Some(b), Some(w)) => (b, w),
-            _ => return (vec![1.0; s], Vec::new()),
+            _ => return None,
         };
+        debug_assert_eq!(gate_state.len(), d + 1);
         let f = &self.flat[..];
+        let (pool, cnt) = gate_state.split_at_mut(d);
         let mut pooled = vec![0.0f32; d];
-        for row in h.chunks_exact(d) {
-            for (p, &x) in pooled.iter_mut().zip(row) {
+        let mut m = vec![0.0f32; n * s];
+        for t in 0..n {
+            for (p, &x) in pool.iter_mut().zip(&h[t * d..(t + 1) * d]) {
                 *p += x;
             }
+            cnt[0] += 1.0;
+            let invc = 1.0 / cnt[0];
+            for (o, &p) in pooled.iter_mut().zip(pool.iter()) {
+                *o = p * invc;
+            }
+            for k in 0..s {
+                m[t * s + k] =
+                    sigmoid(f[ba + k] + linalg::dot(&pooled, &wat[k * d..(k + 1) * d]));
+            }
         }
-        let inv_n = 1.0 / n as f32;
-        for p in pooled.iter_mut() {
-            *p *= inv_n;
-        }
-        let m = (0..s)
-            .map(|k| sigmoid(f[ba + k] + linalg::dot(&pooled, &wat[k * d..(k + 1) * d])))
-            .collect();
-        (m, pooled)
+        Some(m)
     }
 
-    /// One mixer chunk: h [n*d] (LayerNormed input) -> z [n*d], advancing
-    /// the layer carry (l [S*2], u [S*d*2]) in place. Returns (z, s_eff).
+    /// One mixer chunk: h [n*d] (LayerNormed input) -> z [n*d],
+    /// advancing the layer carry slot (mixer state + gate pooling
+    /// state) in place. Returns (z, s_eff = mean-over-tokens gate mass,
+    /// exactly S when not adaptive).
     fn mixer_chunk(
         &self,
         lo: &LayerOffsets,
@@ -486,150 +538,31 @@ impl StltModel {
     ) -> (Vec<f32>, f32) {
         let (s, d) = (self.cfg.s_max, self.cfg.d_model);
         let np = self.node_params(lo);
-        let (m, _pooled) = self.gate_full(lo, lp, h, n);
-        let s_eff: f32 = m.iter().sum();
+        let (sl, _) = self.mixer.state_lens(&self.cfg);
+        let (l_mix, gate_state) = l.split_at_mut(sl);
+        let (m, m_stride) = match self.causal_gate_rows(lo, lp, h, n, gate_state) {
+            Some(m) => (m, s),
+            None => (vec![1.0f32; s], 0),
+        };
+        let s_eff: f32 = if m_stride == 0 {
+            s as f32
+        } else {
+            m.iter().sum::<f32>() / n.max(1) as f32
+        };
 
-        // projections on the shared kernels: fproj [n*S] (gated), v [n*d]
-        let mut fproj = vec![0.0f32; n * s];
-        linalg::gemm_at(h, &lp.w_f_t, &mut fproj, n, d, s);
-        for row in fproj.chunks_exact_mut(s) {
-            for (fk, &mk) in row.iter_mut().zip(&m) {
-                *fk *= mk;
-            }
-        }
+        // projections on the shared kernels: fraw [n*S] (pre-gate; the
+        // mixer applies its own gating chain), v [n*d]
+        let mut fraw = vec![0.0f32; n * s];
+        linalg::gemm_at(h, &lp.w_f_t, &mut fraw, n, d, s);
         let mut v = vec![0.0f32; n * d];
         linalg::gemm_at(h, &lp.w_v_t, &mut v, n, d, d);
 
-        let zmix = match self.mixer {
-            MixerImpl::Recurrence => self.mix_recurrence(&np, &fproj, &v, n, l, u),
-            MixerImpl::ReferenceN2 => self.mix_reference_n2(&np, &fproj, &v, n, l, u),
-        };
+        let zmix = self.mixer.mix_chunk(&np, s, d, n, &fraw, &m, m_stride, &v, l_mix, u);
 
         // output projection z = zmix @ w_o
         let mut z = vec![0.0f32; n * d];
         linalg::gemm_at(&zmix, &lp.w_o_t, &mut z, n, d, d);
         (z, s_eff)
-    }
-
-    /// The production O(n·S·d) path: sequential L/U recurrences.
-    fn mix_recurrence(
-        &self,
-        np: &NodeParams,
-        fproj: &[f32],
-        v: &[f32],
-        n: usize,
-        l: &mut [f32],
-        u: &mut [f32],
-    ) -> Vec<f32> {
-        let (s, d) = (self.cfg.s_max, self.cfg.d_model);
-        let inv_s = 1.0 / s as f32;
-        let mut z = vec![0.0f32; n * d];
-        for t in 0..n {
-            let fr = &fproj[t * s..(t + 1) * s];
-            let vr = &v[t * d..(t + 1) * d];
-            let zr = &mut z[t * d..(t + 1) * d];
-            for k in 0..s {
-                lu_node_step(
-                    np.lam_re[k],
-                    np.lam_im[k],
-                    np.gamma,
-                    fr[k],
-                    &mut l[k * 2..(k + 1) * 2],
-                    &mut u[k * d * 2..(k + 1) * d * 2],
-                    vr,
-                    Some(&mut zr[..]),
-                );
-            }
-            for ze in zr.iter_mut() {
-                *ze *= inv_s;
-            }
-        }
-        z
-    }
-
-    /// Naive O(n^2·S·d) oracle: materialises L via explicit lam powers
-    /// (the relevance-matrix view) and recomputes every discounted U
-    /// prefix sum. Only valid from a zero carry (enforced by
-    /// [`StltModel::trunk_chunk`]); still advances the carry to the
-    /// post-chunk state so callers can cross-check both.
-    fn mix_reference_n2(
-        &self,
-        np: &NodeParams,
-        fproj: &[f32],
-        v: &[f32],
-        n: usize,
-        l: &mut [f32],
-        u: &mut [f32],
-    ) -> Vec<f32> {
-        let (s, d) = (self.cfg.s_max, self.cfg.d_model);
-        let inv_s = 1.0 / s as f32;
-        // lam^p for p in [0, n): [n][s]
-        let mut pow_re = vec![0.0f32; n.max(1) * s];
-        let mut pow_im = vec![0.0f32; n.max(1) * s];
-        for k in 0..s {
-            pow_re[k] = 1.0;
-            pow_im[k] = 0.0;
-        }
-        for p in 1..n {
-            for k in 0..s {
-                let (ar, ai) = (pow_re[(p - 1) * s + k], pow_im[(p - 1) * s + k]);
-                pow_re[p * s + k] = ar * np.lam_re[k] - ai * np.lam_im[k];
-                pow_im[p * s + k] = ar * np.lam_im[k] + ai * np.lam_re[k];
-            }
-        }
-        // L[t,k] = sum_{m<=t} f[m,k] lam^{t-m}
-        let mut l_re = vec![0.0f32; n * s];
-        let mut l_im = vec![0.0f32; n * s];
-        for t in 0..n {
-            for mm in 0..=t {
-                let p = t - mm;
-                for k in 0..s {
-                    let f = fproj[mm * s + k];
-                    l_re[t * s + k] += f * pow_re[p * s + k];
-                    l_im[t * s + k] += f * pow_im[p * s + k];
-                }
-            }
-        }
-        // z_t = Re<L_t, U_t>/S with U_t = sum_{m<=t} gamma^{t-m} conj(L_m) (x) v_m
-        let mut z = vec![0.0f32; n * d];
-        for t in 0..n {
-            for k in 0..s {
-                let (ltr, lti) = (l_re[t * s + k], l_im[t * s + k]);
-                let mut g = 1.0f32;
-                for mm in (0..=t).rev() {
-                    let (lmr, lmi) = (l_re[mm * s + k], l_im[mm * s + k]);
-                    for e in 0..d {
-                        let ve = v[mm * d + e];
-                        // ur += g*lmr*ve ; ui += -g*lmi*ve ; z += ltr*ur - lti*ui
-                        z[t * d + e] += (ltr * lmr + lti * lmi) * g * ve;
-                    }
-                    g *= np.gamma;
-                }
-            }
-            for e in 0..d {
-                z[t * d + e] *= inv_s;
-            }
-        }
-        // advance the carry to the end-of-chunk state for parity checks
-        if n > 0 {
-            for k in 0..s {
-                l[k * 2] = l_re[(n - 1) * s + k];
-                l[k * 2 + 1] = l_im[(n - 1) * s + k];
-                let ub = &mut u[k * d * 2..(k + 1) * d * 2];
-                for e in 0..d {
-                    let (mut ur, mut ui) = (0.0f32, 0.0f32);
-                    let mut g = 1.0f32;
-                    for mm in (0..n).rev() {
-                        ur += g * l_re[mm * s + k] * v[mm * d + e];
-                        ui -= g * l_im[mm * s + k] * v[mm * d + e];
-                        g *= np.gamma;
-                    }
-                    ub[e * 2] = ur;
-                    ub[e * 2 + 1] = ui;
-                }
-            }
-        }
-        z
     }
 
     fn layer_norm(&self, x: &[f32], g_off: usize, b_off: usize, out: &mut [f32]) {
@@ -732,28 +665,31 @@ impl StltModel {
         noise_rng: Option<&mut Rng>,
     ) -> Result<(Vec<f32>, f32)> {
         let (s, d, vcb) = (self.cfg.s_max, self.cfg.d_model, self.cfg.vocab);
+        let (ll, ul) = self.cfg.carry_lens();
         let n = tokens.len();
         let f = &self.flat[..];
-        if l_carry.len() != self.cfg.n_layers * s * 2
-            || u_carry.len() != self.cfg.n_layers * s * d * 2
-        {
+        if l_carry.len() != self.cfg.n_layers * ll || u_carry.len() != self.cfg.n_layers * ul {
             bail!(
-                "carry shape mismatch: l={} u={} for {} layers S={} d={}",
+                "carry shape mismatch: l={} u={} for {} layers of mixer '{}' \
+                 (want l={} u={} per layer, adaptive={})",
                 l_carry.len(),
                 u_carry.len(),
                 self.cfg.n_layers,
-                s,
-                d
+                self.mixer.name(),
+                ll,
+                ul,
+                self.cfg.adaptive
             );
         }
-        if self.mixer == MixerImpl::ReferenceN2
+        if !self.mixer.streaming()
             && (l_carry.iter().any(|&x| x != 0.0) || u_carry.iter().any(|&x| x != 0.0))
         {
             bail!(
-                "MixerImpl::ReferenceN2 recomputes every prefix sum from scratch \
+                "mixer '{}' recomputes every prefix sum from scratch \
                  and is only valid from a zero carry (full-sequence forward); \
                  streaming mid-sequence would silently produce wrong logits — \
-                 use MixerImpl::Recurrence for chunked/streamed execution"
+                 use the Recurrence mixer for chunked/streamed execution",
+                self.mixer.name()
             );
         }
         let scale = (d as f32).sqrt();
@@ -779,8 +715,8 @@ impl StltModel {
         let mut s_eff_sum = 0.0f32;
         for (li, (lo, lp)) in self.layers.iter().zip(&self.panels.layers).enumerate() {
             self.layer_norm(&x, lo.ln1_g, lo.ln1_b, &mut h);
-            let lsl = &mut l_carry[li * s * 2..(li + 1) * s * 2];
-            let usl = &mut u_carry[li * s * d * 2..(li + 1) * s * d * 2];
+            let lsl = &mut l_carry[li * ll..(li + 1) * ll];
+            let usl = &mut u_carry[li * ul..(li + 1) * ul];
             let (z, s_eff) = self.mixer_chunk(lo, lp, &h, n, lsl, usl);
             s_eff_sum += s_eff;
             for (xe, ze) in x.iter_mut().zip(&z) {
@@ -827,14 +763,18 @@ impl StltModel {
         tokens: &[i32],
         active: &[f32],
     ) -> Result<Vec<f32>> {
-        if self.mixer != MixerImpl::Recurrence {
+        if !self.mixer.streaming() {
             bail!(
-                "decode_step_batch runs MixerImpl::Recurrence only (the ReferenceN2 \
-                 oracle is valid from a zero carry on full sequences — see trunk_chunk)"
+                "decode_step_batch needs a streaming mixer, not '{}' (the quadratic \
+                 oracle is valid from a zero carry on full sequences — see \
+                 trunk_chunk; use the Recurrence mixer for decode)",
+                self.mixer.name()
             );
         }
         let (s, d, vcb) = (self.cfg.s_max, self.cfg.d_model, self.cfg.vocab);
-        let (l_stride, u_stride) = (self.cfg.n_layers * s * 2, self.cfg.n_layers * s * d * 2);
+        let (ll, ul) = self.cfg.carry_lens();
+        let (sl, _) = self.mixer.state_lens(&self.cfg);
+        let (l_stride, u_stride) = (self.cfg.n_layers * ll, self.cfg.n_layers * ul);
         if l_all.len() != bsz * l_stride
             || u_all.len() != bsz * u_stride
             || tokens.len() != bsz
@@ -875,50 +815,42 @@ impl StltModel {
             }
         }
         let mut h = vec![0.0f32; na * d];
-        let inv_s = 1.0 / s as f32;
+        let ones = vec![1.0f32; s];
         for (li, (lo, lp)) in self.layers.iter().zip(&self.panels.layers).enumerate() {
             self.layer_norm(&x, lo.ln1_g, lo.ln1_b, &mut h);
-            // projections batched over session rows
-            let mut fproj = vec![0.0f32; na * s];
-            linalg::gemm_at(&h, &lp.w_f_t, &mut fproj, na, d, s);
-            if self.cfg.adaptive {
-                // per-row gate: a single-token chunk pools over just its
-                // own (one-row) h, so the pooled vector IS the h row
-                for (c, frow) in fproj.chunks_exact_mut(s).enumerate() {
-                    let (m, _) = self.gate_full(lo, lp, &h[c * d..(c + 1) * d], 1);
-                    for (fk, &mk) in frow.iter_mut().zip(&m) {
-                        *fk *= mk;
-                    }
-                }
-            }
+            // projections batched over session rows (pre-gate; the
+            // mixer applies its own gating chain per row)
+            let mut fraw = vec![0.0f32; na * s];
+            linalg::gemm_at(&h, &lp.w_f_t, &mut fraw, na, d, s);
             let mut v = vec![0.0f32; na * d];
             linalg::gemm_at(&h, &lp.w_v_t, &mut v, na, d, d);
-            // per-row one-step recurrence on each row's own carry slice
+            // per-row one-step mixer advance on each row's own carry slice
             let np = self.node_params(lo);
             let mut zmix = vec![0.0f32; na * d];
             for (c, &r) in idx.iter().enumerate() {
-                let l_off = r * l_stride + li * s * 2;
-                let u_off = r * u_stride + li * s * d * 2;
-                let lsl = &mut l_all[l_off..l_off + s * 2];
-                let usl = &mut u_all[u_off..u_off + s * d * 2];
-                let fr = &fproj[c * s..(c + 1) * s];
-                let vr = &v[c * d..(c + 1) * d];
-                let zr = &mut zmix[c * d..(c + 1) * d];
-                for k in 0..s {
-                    lu_node_step(
-                        np.lam_re[k],
-                        np.lam_im[k],
-                        np.gamma,
-                        fr[k],
-                        &mut lsl[k * 2..(k + 1) * 2],
-                        &mut usl[k * d * 2..(k + 1) * d * 2],
-                        vr,
-                        Some(&mut zr[..]),
-                    );
-                }
-                for ze in zr.iter_mut() {
-                    *ze *= inv_s;
-                }
+                let l_off = r * l_stride + li * ll;
+                let u_off = r * u_stride + li * ul;
+                let lsl = &mut l_all[l_off..l_off + ll];
+                let usl = &mut u_all[u_off..u_off + ul];
+                let (l_mix, gate_state) = lsl.split_at_mut(sl);
+                // a one-token chunk of this row's own stream: the causal
+                // gate advances the row's pooling state exactly like
+                // trunk_chunk would
+                let m = self
+                    .causal_gate_rows(lo, lp, &h[c * d..(c + 1) * d], 1, gate_state)
+                    .unwrap_or_default();
+                let m_row = if m.is_empty() { &ones[..] } else { &m[..] };
+                self.mixer.token_step(
+                    &np,
+                    s,
+                    d,
+                    &fraw[c * s..(c + 1) * s],
+                    m_row,
+                    l_mix,
+                    usl,
+                    &v[c * d..(c + 1) * d],
+                    Some(&mut zmix[c * d..(c + 1) * d]),
+                );
             }
             let mut z = vec![0.0f32; na * d];
             linalg::gemm_at(&zmix, &lp.w_o_t, &mut z, na, d, d);
@@ -1070,16 +1002,29 @@ mod tests {
     #[test]
     fn recurrence_matches_n2_reference() {
         // the tentpole correctness seam: O(N S d) recurrence == O(N^2)
-        // relevance-matrix oracle on full-sequence forwards
-        for seed in [1u64, 9] {
-            let cfg = tiny_cfg();
-            let mut m = model(&cfg, seed);
-            let tokens: Vec<i32> = (0..12).map(|i| (i * 5 + 3) % cfg.vocab as i32).collect();
-            let fast = m.forward_logits(&tokens).unwrap();
-            m.mixer = MixerImpl::ReferenceN2;
-            let slow = m.forward_logits(&tokens).unwrap();
-            for (a, b) in fast.iter().zip(&slow) {
-                assert!((a - b).abs() < 1e-3 * (1.0 + a.abs()), "{a} vs {b}");
+        // relevance-matrix oracle on full-sequence forwards, with both
+        // mixers selected the supported way (cfg.mixer) over one
+        // shared parameter vector — adaptive and not (the ablation
+        // mode must see the same causal gates the recurrence does)
+        for adaptive in [false, true] {
+            for seed in [1u64, 9] {
+                let mut cfg = tiny_cfg();
+                cfg.adaptive = adaptive;
+                let flat = Arc::new(host_init(&cfg, seed));
+                let m = StltModel::new(&cfg, Arc::clone(&flat)).unwrap();
+                let mut cfg2 = cfg.clone();
+                cfg2.mixer = "reference_n2".into();
+                let m2 = StltModel::new(&cfg2, flat).unwrap();
+                let tokens: Vec<i32> =
+                    (0..12).map(|i| (i * 5 + 3) % cfg.vocab as i32).collect();
+                let fast = m.forward_logits(&tokens).unwrap();
+                let slow = m2.forward_logits(&tokens).unwrap();
+                for (a, b) in fast.iter().zip(&slow) {
+                    assert!(
+                        (a - b).abs() < 1e-3 * (1.0 + a.abs()),
+                        "{a} vs {b} (adaptive={adaptive})"
+                    );
+                }
             }
         }
     }
@@ -1088,14 +1033,22 @@ mod tests {
     fn reference_n2_rejects_nonzero_carry() {
         // the oracle is documented zero-carry-only; streaming it
         // mid-sequence must be a hard error, not silently-wrong logits
-        let cfg = tiny_cfg();
-        let mut m = model(&cfg, 1);
-        m.mixer = MixerImpl::ReferenceN2;
+        let mut cfg = tiny_cfg();
+        cfg.mixer = "reference_n2".into();
+        let m = model(&cfg, 1);
         let tokens: Vec<i32> = (0..6).map(|i| i % cfg.vocab as i32).collect();
         let (mut l, mut u) = m.zero_carry();
         m.trunk_chunk(&mut l, &mut u, &tokens, 0.0, None).unwrap();
         let err = m.trunk_chunk(&mut l, &mut u, &tokens, 0.0, None).unwrap_err();
         assert!(format!("{err:#}").contains("zero carry"), "unhelpful error: {err:#}");
+    }
+
+    #[test]
+    fn unknown_mixer_is_rejected_at_plan_time() {
+        let mut cfg = tiny_cfg();
+        cfg.mixer = "softmax".into();
+        let err = StltPlan::new(&cfg).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown mixer"), "unhelpful: {err:#}");
     }
 
     #[test]
@@ -1145,9 +1098,16 @@ mod tests {
     fn decode_step_batch_bitwise_matches_single_rows() {
         // the serving parity seam: each row of the batched single-token
         // forward must be BITWISE the single-session trunk_chunk on the
-        // same carry, with inactive rows untouched — adaptive and not.
-        for adaptive in [false, true] {
+        // same carry, with inactive rows untouched — for every
+        // streaming mixer, adaptive and not.
+        for (mixer, adaptive) in [
+            ("recurrence", false),
+            ("recurrence", true),
+            ("linear_attention", false),
+            ("linear_attention", true),
+        ] {
             let mut cfg = tiny_cfg();
+            cfg.mixer = mixer.into();
             cfg.adaptive = adaptive;
             let m = model(&cfg, 17);
             let bsz = 5usize;
@@ -1210,10 +1170,11 @@ mod tests {
         assert!(format!("{err:#}").contains("vocab"), "unhelpful: {err:#}");
         assert_eq!(l_all, l_ref, "no carry may advance on a rejected wave");
         assert_eq!(u_all, u_ref);
-        // the ReferenceN2 oracle is zero-carry/full-sequence only; the
+        // the reference_n2 oracle is zero-carry/full-sequence only; the
         // batched decode path must refuse it like trunk_chunk does
-        let mut m2 = model(&cfg, 8);
-        m2.mixer = MixerImpl::ReferenceN2;
+        let mut cfg2 = cfg.clone();
+        cfg2.mixer = "reference_n2".into();
+        let m2 = model(&cfg2, 8);
         let err =
             m2.decode_step_batch(2, &mut l_all, &mut u_all, &[1, 2], &[1.0, 1.0]).unwrap_err();
         assert!(format!("{err:#}").contains("Recurrence"), "unhelpful: {err:#}");
@@ -1228,6 +1189,37 @@ mod tests {
         let (mut l, mut u) = m.zero_carry();
         let (_, s_eff) = m.trunk_chunk(&mut l, &mut u, &tokens, 0.0, None).unwrap();
         assert!(s_eff > 0.0 && s_eff < cfg.s_max as f32, "s_eff {s_eff}");
+    }
+
+    #[test]
+    fn adaptive_and_linattn_chunking_is_bitwise_invariant() {
+        // the causal gate carries its pooling state in the l-slot, so
+        // chunked streaming must be BITWISE the whole-sequence forward
+        // (not merely close, as the float-reassociation tolerance of
+        // `chunking_is_invariant` allows) — the satellite guarantee the
+        // serving path depends on, for every streaming mixer
+        for (mixer, adaptive) in [
+            ("recurrence", true),
+            ("linear_attention", false),
+            ("linear_attention", true),
+        ] {
+            let mut cfg = tiny_cfg();
+            cfg.mixer = mixer.into();
+            cfg.adaptive = adaptive;
+            let m = model(&cfg, 23);
+            let tokens: Vec<i32> = (0..15).map(|i| (i * 7 + 1) % cfg.vocab as i32).collect();
+            let whole = m.forward_logits(&tokens).unwrap();
+            let (mut l, mut u) = m.zero_carry();
+            let mut pieces = Vec::new();
+            for chunk in [5usize, 1, 6, 3] {
+                let off = pieces.len() / cfg.vocab;
+                let (lg, _) = m
+                    .trunk_chunk(&mut l, &mut u, &tokens[off..off + chunk], 0.0, None)
+                    .unwrap();
+                pieces.extend(lg);
+            }
+            assert_eq!(whole, pieces, "mixer={mixer} adaptive={adaptive}");
+        }
     }
 
     #[test]

@@ -13,27 +13,39 @@
 //!
 //! Every matmul here — the tape forward's projections (run on the same
 //! pre-transposed weight panels as the engine, via the shared
-//! [`StltModel::gate_full`]/[`StltModel::ffn_parts`]/
-//! [`StltModel::head_logits`] helpers) and the backward sweep's
-//! `dy @ Wᵀ` / `xᵀ dy` adjoint products — goes through the blocked
-//! kernels in [`crate::util::linalg`]. One kernel family on both sides
-//! of the tape means the gradient can never be taken of a subtly
-//! different network than the engine serves (`tests/native_train.rs`
-//! pins tape-vs-engine NLL parity).
+//! [`StltModel::ffn_parts`]/[`StltModel::head_logits`] helpers) and the
+//! backward sweep's `dy @ Wᵀ` / `xᵀ dy` adjoint products — goes through
+//! the blocked kernels in [`crate::util::linalg`]. One kernel family on
+//! both sides of the tape means the gradient can never be taken of a
+//! subtly different network than the engine serves
+//! (`tests/native_train.rs` pins tape-vs-engine NLL parity).
 //!
-//! The interesting part is the recurrence. Per node k (lam = lam_re +
-//! j·lam_im, discount gamma, all derived from sigma/omega/T):
+//! Token mixing routes through the [`Mixer`] trait on both sides: the
+//! tape forward advances the mixer state through
+//! [`Mixer::token_step`] (snapshotting it at segment boundaries), and
+//! the reverse sweep calls [`Mixer::backward_chunk`], which owns the
+//! mixer-specific adjoint recurrences (the GL/GU time-transposed sweep
+//! for the Laplace recurrence, the GS/Gzv accumulators for linear
+//! attention) and the fraw/gate chain-rule split. Mixers with
+//! [`Mixer::uses_node_params`] = false (linear attention) skip the
+//! node-parameter gradient conversion and the omega/sigma Eq. Reg
+//! terms, leaving those groups exactly zero. No autograd framework is
+//! involved; correctness is pinned by finite-difference checks against
+//! an independent f64 oracle in `tests/native_train.rs`.
 //!
-//!   L_t = lam · L_{t-1} + f_t
-//!   U_t = gamma · U_{t-1} + conj(L_t) ⊗ v_t
-//!   z_t = Re⟨L_t, U_t⟩ / S
+//! ## Adaptive node gate (SS3.6)
 //!
-//! Running the adjoints GL_t = ∂loss/∂L_t and GU_t = ∂loss/∂U_t
-//! *backwards* in t gives an exact O(N·S·d) gradient — the same
-//! linear-attention trick (Katharopoulos et al.) the forward exploits,
-//! transposed in time. No autograd framework is involved; correctness
-//! is pinned by finite-difference checks against an independent f64
-//! oracle in `tests/native_train.rs`.
+//! The gate is *causal* (token t sees the running mean of the LN1
+//! output over tokens ≤ t — the same pooling the engine streams) and,
+//! during training, relaxed with the Gumbel-sigmoid trick: per
+//! (row, layer, node) a logistic noise sample g = ln u − ln(1 − u) is
+//! drawn once (shared across the row's tokens) and the gate becomes
+//! `m = sigmoid((logit + g) / temp)`, with the temperature annealed by
+//! the trainer (`gumbel_temp_*` config keys). `noise: None` — eval,
+//! serving, FD probes — is the deterministic `sigmoid(logit)` path,
+//! bitwise the engine's. The node-budget regularizer `lambda_mask`
+//! penalises the token-mean gate m̄ per node, so inactive nodes are
+//! driven toward zero mass (cf. Adaptive Attention Span's span budget).
 //!
 //! ## Segment-checkpointed tape
 //!
@@ -42,12 +54,11 @@
 //! forward does. Instead, the tape forward records only the (L, U)
 //! carry at every `grad_ckpt_segment`-token boundary (the same carry
 //! `trunk_chunk` threads through chunked streaming), and the backward
-//! replays each segment's L/U history on the fly, in reverse segment
-//! order, from its snapshot — through the *same*
-//! [`crate::runtime::native_stlt`] `lu_node_step` kernel the forward
-//! and the streaming engine use, so the replayed values are bitwise
-//! identical to what a full tape would have stored and the gradient is
-//! bitwise independent of the segment length
+//! replays each segment's state history on the fly, in reverse segment
+//! order, from its snapshot — through the *same* [`Mixer::token_step`]
+//! the forward and the streaming engine use, so the replayed values
+//! are bitwise identical to what a full tape would have stored and the
+//! gradient is bitwise independent of the segment length
 //! (`tests/native_train.rs`). Peak tape memory drops from O(N·S·d) to
 //! O(C·S·d + (N/C)·S·d) per layer for segment length C, at the cost of
 //! one extra forward recurrence replay (~the cheap part of the
@@ -63,27 +74,40 @@
 //! `learn_sigma=false` (resp. omega, t) zeroes that group's gradient
 //! from both the model path and the Eq. Reg penalty.
 //!
-//! Training-vs-python deviations (documented in rust/README.md):
-//! adaptive gating uses the deterministic sigmoid alpha (no
-//! Gumbel-sigmoid noise), and the Eq. Reg mask coupling is per-row
-//! (python couples through the batch-mean gate); for non-adaptive
-//! configs both reductions are identical.
+//! Training-vs-python deviations (documented in rust/README.md): the
+//! gate pools *causally* (python mean-pools the whole row acausally,
+//! which no streaming decoder can reproduce) and the Eq. Reg mask
+//! coupling is per-row through the token-mean gate m̄ (python couples
+//! through the batch-mean gate); for non-adaptive configs both
+//! reductions are identical.
 
 use anyhow::{bail, Result};
 
 use crate::runtime::artifact::ModelConfig;
-use crate::runtime::native_stlt::{lu_node_step, sigmoid, softplus, StltModel};
+use crate::runtime::mixer::Mixer;
+use crate::runtime::native_stlt::{sigmoid, softplus, StltModel};
 use crate::util::linalg::{self, gelu_grad};
+use crate::util::rng::Rng;
 
-static SEGMENTS_REPLAYED: crate::obs::LazyCounter =
-    crate::obs::LazyCounter::new("train/segments_replayed");
+/// Gumbel-sigmoid relaxation parameters for one training row. `None`
+/// anywhere a `Option<TrainNoise>` is taken means the deterministic
+/// `sigmoid(logit)` gate — bitwise the engine's eval/serving path.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainNoise {
+    /// annealed relaxation temperature (> 0); see `gumbel_temp_at`
+    pub temp: f32,
+    /// seed for this row's logistic noise draws (one [`Rng`] per row;
+    /// each layer draws its S samples sequentially in layer order)
+    pub seed: u64,
+}
 
 /// Gradient + loss terms of one row. `grad` has the full flat length.
 pub struct RowOut {
     pub nll_sum: f64,
     /// unscaled Eq. Reg penalty of this row (sum over layers)
     pub reg: f32,
-    /// mean over layers of the active node count Σ_k m_k
+    /// mean over layers of the gate mass Σ_k m̄_k (token-mean per node;
+    /// exactly S for non-adaptive configs)
     pub s_eff: f32,
     pub grad: Vec<f32>,
     /// peak activation-tape bytes this row allocated (stored layer
@@ -97,16 +121,19 @@ pub struct RowOut {
 /// the per-timestep U history is replayed per segment during the
 /// backward, never stored whole.
 struct LayerTape {
-    x_in: Vec<f32>,   // [n,d] residual stream entering the layer
-    mu1: Vec<f32>,    // [n] LN1 means
-    inv1: Vec<f32>,   // [n] LN1 inverse stddevs
-    h1: Vec<f32>,     // [n,d] LN1 output (mixer input)
-    pooled: Vec<f32>, // [d] mean-pooled h1 (adaptive only, else empty)
-    m: Vec<f32>,      // [S] node gate
+    x_in: Vec<f32>, // [n,d] residual stream entering the layer
+    mu1: Vec<f32>,  // [n] LN1 means
+    inv1: Vec<f32>, // [n] LN1 inverse stddevs
+    h1: Vec<f32>,   // [n,d] LN1 output (mixer input)
+    /// node gate tape: `[n,S]` per-token rows when adaptive
+    /// (`m_stride = S`), a single shared all-ones `[S]` row otherwise
+    /// (`m_stride = 0`) — row t is `m[t*m_stride .. t*m_stride+S]`
+    m: Vec<f32>,
+    m_stride: usize,
     fraw: Vec<f32>,   // [n,S] pre-gate feature projection h1 @ w_f
     v: Vec<f32>,      // [n,d] value projection h1 @ w_v
-    l_snap: Vec<f32>, // [nseg,S,2] L carry entering each segment
-    u_snap: Vec<f32>, // [nseg,S,d,2] U carry entering each segment
+    l_snap: Vec<f32>, // [nseg,sl] first mixer state entering each segment
+    u_snap: Vec<f32>, // [nseg,su] second mixer state entering each segment
     zmix: Vec<f32>,   // [n,d] mixed output pre-w_o
     x_mid: Vec<f32>,  // [n,d] residual stream after the mixer
     mu2: Vec<f32>,
@@ -122,7 +149,6 @@ impl LayerTape {
             + self.mu1.len()
             + self.inv1.len()
             + self.h1.len()
-            + self.pooled.len()
             + self.m.len()
             + self.fraw.len()
             + self.v.len()
@@ -165,13 +191,16 @@ pub fn tape_bytes(cfg: &ModelConfig, n: usize) -> usize {
     let hd = d * cfg.ffn_mult.max(1);
     let c = seg_len(cfg, n);
     let nseg = n.max(1).div_ceil(c);
-    let pooled = if cfg.adaptive { d } else { 0 };
+    // mixer state slot sizes (recurrence: S·2 / S·d·2, linear
+    // attention: S / S·d) — cfg's mirror of Mixer::state_lens
+    let (sl, su) = cfg.state_lens();
+    // gate tape: per-token [n,S] when adaptive, one shared [S] row else
+    let m_len = if cfg.adaptive { n.max(1) * s } else { s };
     // x_in/h1/v/zmix/x_mid/h2 are [n,d]; hpre/hgelu [n,hd]; fraw [n,S];
-    // mu/inv ×4 [n]; m [S]; snapshots [nseg,S,(2+2d)]
-    let per_layer =
-        n * (6 * d + 2 * hd + s + 4) + nseg * s * (2 + 2 * d) + s + pooled;
-    // backward replay: (C+1) slots of (L [S,2], U [S,d,2])
-    let replay = (c + 1) * s * (2 + 2 * d);
+    // mu/inv ×4 [n]; snapshots [nseg,sl+su]
+    let per_layer = n * (6 * d + 2 * hd + s + 4) + nseg * (sl + su) + m_len;
+    // backward replay: (C+1) mixer state slots, shared across layers
+    let replay = (c + 1) * (sl + su);
     4 * (cfg.n_layers * per_layer + replay)
 }
 
@@ -248,11 +277,16 @@ fn ln_bwd(
 /// `ce_scale · Σ nll + reg_scale · reg_row`, so a caller accumulating a
 /// `[B, N+1]` batch passes `ce_scale = 1/(B·N)` and `reg_scale = 1/B`
 /// to reproduce `trunk.lm_loss` exactly (for non-adaptive configs).
+///
+/// `noise` switches the adaptive gate to the Gumbel-sigmoid relaxation
+/// (training); `None` keeps the deterministic engine gate (eval, FD
+/// probes, non-adaptive configs — where it is ignored entirely).
 pub fn row_loss_and_grad(
     model: &StltModel,
     tokens: &[i32],
     ce_scale: f32,
     reg_scale: f32,
+    noise: Option<TrainNoise>,
 ) -> Result<RowOut> {
     if tokens.len() < 2 {
         bail!("training row needs at least 2 tokens");
@@ -280,53 +314,90 @@ pub fn row_loss_and_grad(
         }
     }
 
+    // one logistic-noise stream per row, shared by every layer (each
+    // layer draws its S samples sequentially, in layer order)
+    let mut gum_rng = noise.map(|ns| Rng::new(ns.seed));
+
     let mut tapes: Vec<LayerTape> = Vec::with_capacity(cfg.n_layers);
     for (lo, lp) in model.layer_offsets().iter().zip(&panels.layers) {
         let (h1, mu1, inv1) = ln_fwd(flat, &x, lo.ln1_g, lo.ln1_b, d);
 
-        // gate (deterministic alpha; all-ones when not adaptive) —
-        // the engine's own kernel, so tape and serving gates agree
-        let (m, pooled) = model.gate_full(lo, lp, &h1, n);
+        // gate tape: causal running-mean pooling — the engine's own
+        // kernel when deterministic (so tape and serving gates agree
+        // bitwise), the Gumbel-sigmoid relaxation during training
+        let (m, m_stride) = if !cfg.adaptive {
+            (vec![1.0f32; s], 0)
+        } else if let (Some(ns), Some(rng)) = (noise, gum_rng.as_mut()) {
+            let ba = lo.b_alpha.expect("adaptive layout exposes b_alpha");
+            let wat = lp.w_alpha_t.as_ref().expect("adaptive panel has w_alpha_t");
+            let inv_temp = 1.0 / ns.temp;
+            // one logistic sample per (layer, node), shared across the
+            // row's tokens — python's gate() draws the same shape
+            let g: Vec<f32> = (0..s)
+                .map(|_| {
+                    let u = rng.f64().clamp(1e-6, 1.0 - 1e-6);
+                    (u.ln() - (1.0 - u).ln()) as f32
+                })
+                .collect();
+            let mut m = vec![0.0f32; n * s];
+            let mut pool = vec![0.0f32; d];
+            let mut pooled = vec![0.0f32; d];
+            for t in 0..n {
+                for (p, &h) in pool.iter_mut().zip(&h1[t * d..(t + 1) * d]) {
+                    *p += h;
+                }
+                let invc = 1.0 / (t + 1) as f32;
+                for (pe, &p) in pooled.iter_mut().zip(&pool) {
+                    *pe = p * invc;
+                }
+                for k in 0..s {
+                    let logit =
+                        flat[ba + k] + linalg::dot(&pooled, &wat[k * d..(k + 1) * d]);
+                    m[t * s + k] = sigmoid((logit + g[k]) * inv_temp);
+                }
+            }
+            (m, s)
+        } else {
+            let mut gate_state = vec![0.0f32; d + 1];
+            let m = model
+                .causal_gate_rows(lo, lp, &h1, n, &mut gate_state)
+                .expect("adaptive layout exposes the gate offsets");
+            (m, s)
+        };
 
         let mut fraw = vec![0.0f32; n * s];
         linalg::gemm_at(&h1, &lp.w_f_t, &mut fraw, n, d, s);
         let mut v = vec![0.0f32; n * d];
         linalg::gemm_at(&h1, &lp.w_v_t, &mut v, n, d, d);
 
-        // recurrence, storing only per-segment (L, U) carry snapshots —
-        // the shared lu_node_step kernel guarantees the backward's
+        // mixer state walk, storing only per-segment state snapshots —
+        // the shared token_step kernel guarantees the backward's
         // segment replay reproduces every dropped value bitwise
         let np = model.node_params(lo);
-        let inv_s = 1.0 / s as f32;
+        let (sl, su) = model.mixer().state_lens(cfg);
         let nseg = n.div_ceil(ckpt);
-        let mut l_snap = Vec::with_capacity(nseg * s * 2);
-        let mut u_snap = Vec::with_capacity(nseg * s * d * 2);
+        let mut l_snap = Vec::with_capacity(nseg * sl);
+        let mut u_snap = Vec::with_capacity(nseg * su);
         let mut zmix = vec![0.0f32; n * d];
         {
-            let mut l = vec![0.0f32; s * 2];
-            let mut u = vec![0.0f32; s * d * 2];
+            let mut l = vec![0.0f32; sl];
+            let mut u = vec![0.0f32; su];
             for t in 0..n {
                 if t % ckpt == 0 {
                     l_snap.extend_from_slice(&l);
                     u_snap.extend_from_slice(&u);
                 }
-                let vr = &v[t * d..(t + 1) * d];
-                let zr = &mut zmix[t * d..(t + 1) * d];
-                for k in 0..s {
-                    lu_node_step(
-                        np.lam_re[k],
-                        np.lam_im[k],
-                        np.gamma,
-                        fraw[t * s + k] * m[k],
-                        &mut l[k * 2..(k + 1) * 2],
-                        &mut u[k * d * 2..(k + 1) * d * 2],
-                        vr,
-                        Some(&mut zr[..]),
-                    );
-                }
-                for ze in zr.iter_mut() {
-                    *ze *= inv_s;
-                }
+                model.mixer().token_step(
+                    &np,
+                    s,
+                    d,
+                    &fraw[t * s..(t + 1) * s],
+                    &m[t * m_stride..t * m_stride + s],
+                    &mut l,
+                    &mut u,
+                    &v[t * d..(t + 1) * d],
+                    Some(&mut zmix[t * d..(t + 1) * d]),
+                );
             }
         }
 
@@ -345,8 +416,8 @@ pub fn row_loss_and_grad(
             mu1,
             inv1,
             h1,
-            pooled,
             m,
+            m_stride,
             fraw,
             v,
             l_snap,
@@ -396,8 +467,9 @@ pub fn row_loss_and_grad(
     // ---------------- backward sweep ----------------
     // peak tape: every layer's stored tape plus the segment replay
     // buffers (allocated once below, shared across layers)
-    let tape_total = tapes.iter().map(LayerTape::bytes).sum::<usize>()
-        + 4 * ((ckpt + 1) * s * (2 + 2 * d));
+    let (sl_r, su_r) = model.mixer().state_lens(cfg);
+    let tape_total =
+        tapes.iter().map(LayerTape::bytes).sum::<usize>() + 4 * ((ckpt + 1) * (sl_r + su_r));
     let mut grad = vec![0.0f32; flat.len()];
 
     // tied head: logits = xf @ embedᵀ, so
@@ -414,16 +486,21 @@ pub fn row_loss_and_grad(
     // segment replay buffers, shared across layers (every read slot is
     // freshly written per segment — slot 0 from the snapshot, slots
     // 1..len by the replay — so no per-layer zeroing is needed): slot j
-    // holds the (L, U) state after token t0 + j - 1, slot 0 being the
+    // holds the mixer state after token t0 + j - 1, slot 0 being the
     // checkpointed carry entering the segment (zero for segment 0)
-    let mut l_seg = vec![0.0f32; (ckpt + 1) * s * 2];
-    let mut u_seg = vec![0.0f32; (ckpt + 1) * s * d * 2];
+    let mut l_seg = vec![0.0f32; (ckpt + 1) * sl_r];
+    let mut u_seg = vec![0.0f32; (ckpt + 1) * su_r];
     // the sweep needs no panels: the `dy @ Wᵀ` products read the
     // original (input-major) weights, which are already in the gemm_at
     // layout for the transposed direction
+    let unp = model.mixer().uses_node_params();
     for (lo, tape) in model.layer_offsets().iter().zip(&tapes).rev() {
         let np = model.node_params(lo);
-        s_eff_sum += tape.m.iter().sum::<f32>();
+        s_eff_sum += if tape.m_stride == 0 {
+            s as f32
+        } else {
+            tape.m.iter().sum::<f32>() / n as f32
+        };
 
         // --- FFN block: x_out = x_mid + (b2 + gelu(h2 @ w1 + b1) @ w2)
         //   dhid = dx @ w2ᵀ ; dW2 += hgeluᵀ dx ; db2 += Σ_t dx
@@ -459,113 +536,54 @@ pub fn row_loss_and_grad(
         linalg::gemm_at(&dx_mid, &flat[lo.w_o..lo.w_o + d * d], &mut dzmix, n, d, d);
         linalg::gemm_ta(&tape.zmix, &dx_mid, &mut grad[lo.w_o..lo.w_o + d * d], n, d, d);
 
-        // recurrence adjoints, segment-checkpointed: walk the segments
-        // in reverse, replaying each one's (L, U) history from its
-        // carry snapshot via the engine's own lu_node_step — the
-        // replayed values are bitwise what a full tape would hold, so
-        // the gradient is bitwise independent of the segment length.
-        // The GL/GU adjoint carries thread across segment boundaries
-        // exactly like the forward carries did, just reversed in time.
-        let inv_s = 1.0 / s as f32;
-        let mut gl = vec![0.0f32; s * 2];
-        let mut gu = vec![0.0f32; s * d * 2];
+        // mixer adjoints, segment-checkpointed: the trait impl walks
+        // the segments in reverse, replaying each one's state history
+        // from its carry snapshot through the same token_step the
+        // forward used (bitwise what a full tape would hold, so the
+        // gradient is bitwise independent of the segment length), then
+        // runs its adjoint recurrence backwards in t. dfraw/dm come
+        // back per-token with the fraw ⊙ gate chain rule already split.
         let mut da = vec![0.0f32; s];
         let mut db = vec![0.0f32; s];
-        let mut dgamma = 0.0f64;
-        let mut dfp = vec![0.0f32; n * s];
         let mut dv = vec![0.0f32; n * d];
-        let nseg = n.div_ceil(ckpt);
-        for seg in (0..nseg).rev() {
-            let _span = crate::obs::span("train", "segment_replay");
-            SEGMENTS_REPLAYED.inc();
-            let t0 = seg * ckpt;
-            let len = ckpt.min(n - t0);
-            l_seg[..s * 2].copy_from_slice(&tape.l_snap[seg * s * 2..(seg + 1) * s * 2]);
-            u_seg[..s * d * 2]
-                .copy_from_slice(&tape.u_snap[seg * s * d * 2..(seg + 1) * s * d * 2]);
-            for j in 0..len {
-                let t = t0 + j;
-                let (ldone, lrest) = l_seg.split_at_mut((j + 1) * s * 2);
-                let lcur = &mut lrest[..s * 2];
-                lcur.copy_from_slice(&ldone[j * s * 2..]);
-                let (udone, urest) = u_seg.split_at_mut((j + 1) * s * d * 2);
-                let ucur = &mut urest[..s * d * 2];
-                ucur.copy_from_slice(&udone[j * s * d * 2..]);
-                let vr = &tape.v[t * d..(t + 1) * d];
-                for k in 0..s {
-                    lu_node_step(
-                        np.lam_re[k],
-                        np.lam_im[k],
-                        np.gamma,
-                        tape.fraw[t * s + k] * tape.m[k],
-                        &mut lcur[k * 2..(k + 1) * 2],
-                        &mut ucur[k * d * 2..(k + 1) * d * 2],
-                        vr,
-                        None, // replay advances L/U only; z is never re-needed
-                    );
-                }
-            }
-            for j in (0..len).rev() {
-                let t = t0 + j;
-                let lrow = &l_seg[(j + 1) * s * 2..(j + 2) * s * 2];
-                let urow = &u_seg[(j + 1) * s * d * 2..(j + 2) * s * d * 2];
-                // slot j: the state before t — for the global t = 0 this
-                // is the zero carry, so its adjoint terms add exact
-                // zeros, matching the old tape's explicit t = 0 skip
-                let lprev = &l_seg[j * s * 2..(j + 1) * s * 2];
-                let uprev = &u_seg[j * s * d * 2..(j + 1) * s * d * 2];
-                let vr = &tape.v[t * d..(t + 1) * d];
-                let dvr = &mut dv[t * d..(t + 1) * d];
-                let zg = &dzmix[t * d..(t + 1) * d];
-                for k in 0..s {
-                    let (ltr, lti) = (lrow[k * 2], lrow[k * 2 + 1]);
-                    let ub = &urow[k * d * 2..(k + 1) * d * 2];
-                    let up = &uprev[k * d * 2..(k + 1) * d * 2];
-                    let gub = &mut gu[k * d * 2..(k + 1) * d * 2];
-                    let (mut glr, mut gli) = (gl[k * 2], gl[k * 2 + 1]);
-                    let mut dg_loc = 0.0f64;
-                    for e in 0..d {
-                        let g_te = zg[e] * inv_s;
-                        // z_t = Σ_k Re(L_t · U_t)/S
-                        let gur = gub[e * 2] + g_te * ltr;
-                        let gui = gub[e * 2 + 1] - g_te * lti;
-                        glr += g_te * ub[e * 2];
-                        gli -= g_te * ub[e * 2 + 1];
-                        // U_t = gamma U_{t-1} + conj(L_t) v_t
-                        dg_loc += (gur * up[e * 2]) as f64 + (gui * up[e * 2 + 1]) as f64;
-                        let ve = vr[e];
-                        dvr[e] += gur * ltr - gui * lti;
-                        glr += gur * ve;
-                        gli -= gui * ve;
-                        gub[e * 2] = np.gamma * gur;
-                        gub[e * 2 + 1] = np.gamma * gui;
-                    }
-                    dgamma += dg_loc;
-                    // L_t = lam L_{t-1} + f_t
-                    dfp[t * s + k] += glr;
-                    let (lpr, lpi) = (lprev[k * 2], lprev[k * 2 + 1]);
-                    da[k] += glr * lpr + gli * lpi;
-                    db[k] += -glr * lpi + gli * lpr;
-                    let (a, b) = (np.lam_re[k], np.lam_im[k]);
-                    gl[k * 2] = a * glr + b * gli;
-                    gl[k * 2 + 1] = -b * glr + a * gli;
-                }
-            }
-        }
-
-        // f = fraw ⊙ m
-        let mut dm = vec![0.0f32; s];
         let mut dfraw = vec![0.0f32; n * s];
-        for t in 0..n {
-            for k in 0..s {
-                let dfp_tk = dfp[t * s + k];
-                dfraw[t * s + k] = dfp_tk * tape.m[k];
-                dm[k] += dfp_tk * tape.fraw[t * s + k];
-            }
-        }
+        let mut dm = vec![0.0f32; n * s];
+        let dgamma = model.mixer().backward_chunk(
+            &np,
+            s,
+            d,
+            n,
+            ckpt,
+            &tape.fraw,
+            &tape.m,
+            tape.m_stride,
+            &tape.v,
+            &tape.zmix,
+            &dzmix,
+            &tape.l_snap,
+            &tape.u_snap,
+            &mut l_seg,
+            &mut u_seg,
+            &mut dfraw,
+            &mut dm,
+            &mut dv,
+            &mut da,
+            &mut db,
+        );
 
-        // Eq. Reg penalty (per-row gate; identical to python for m = 1)
+        // Eq. Reg penalty on the token-mean gate m̄ (per-row; python
+        // couples through the batch mean — identical for m = 1). The
+        // omega/sigma terms exist only for node-parameterised mixers.
         let f = flat;
+        let inv_n = 1.0 / n as f32;
+        let mbar: Vec<f32> = if tape.m_stride == 0 {
+            tape.m.clone()
+        } else {
+            (0..s)
+                .map(|k| (0..n).map(|t| tape.m[t * s + k]).sum::<f32>() * inv_n)
+                .collect()
+        };
+        let mut dmbar = vec![0.0f32; s];
         let t_val = softplus(f[lo.t_raw]) + 1.0;
         let sigma: Vec<f32> = (0..s)
             .map(|k| softplus(f[lo.sigma_raw + k]) + cfg.sigma_min)
@@ -573,24 +591,29 @@ pub fn row_loss_and_grad(
         let omega: Vec<f32> = (0..s).map(|k| f[lo.omega + k]).collect();
         let mut reg = 0.0f32;
         for k in 0..s {
-            reg += cfg.lambda_omega * omega[k].abs() * tape.m[k];
-            reg += cfg.lambda_mask * tape.m[k];
-            dm[k] += reg_scale * (cfg.lambda_omega * omega[k].abs() + cfg.lambda_mask);
-            if cfg.learn_omega {
-                grad[lo.omega + k] +=
-                    reg_scale * cfg.lambda_omega * abs_grad(omega[k]) * tape.m[k];
+            if unp {
+                reg += cfg.lambda_omega * omega[k].abs() * mbar[k];
+                dmbar[k] += reg_scale * cfg.lambda_omega * omega[k].abs();
+                if cfg.learn_omega {
+                    grad[lo.omega + k] +=
+                        reg_scale * cfg.lambda_omega * abs_grad(omega[k]) * mbar[k];
+                }
             }
+            reg += cfg.lambda_mask * mbar[k];
+            dmbar[k] += reg_scale * cfg.lambda_mask;
         }
         let mut dsigma = vec![0.0f32; s];
-        for k in 1..s {
-            let dsig = sigma[k] - sigma[k - 1];
-            reg += cfg.lambda_sigma * dsig * dsig * tape.m[k] * tape.m[k - 1];
-            dm[k] += reg_scale * cfg.lambda_sigma * dsig * dsig * tape.m[k - 1];
-            dm[k - 1] += reg_scale * cfg.lambda_sigma * dsig * dsig * tape.m[k];
-            if cfg.learn_sigma {
-                let c = reg_scale * cfg.lambda_sigma * 2.0 * dsig * tape.m[k] * tape.m[k - 1];
-                dsigma[k] += c;
-                dsigma[k - 1] -= c;
+        if unp {
+            for k in 1..s {
+                let dsig = sigma[k] - sigma[k - 1];
+                reg += cfg.lambda_sigma * dsig * dsig * mbar[k] * mbar[k - 1];
+                dmbar[k] += reg_scale * cfg.lambda_sigma * dsig * dsig * mbar[k - 1];
+                dmbar[k - 1] += reg_scale * cfg.lambda_sigma * dsig * dsig * mbar[k];
+                if cfg.learn_sigma {
+                    let c = reg_scale * cfg.lambda_sigma * 2.0 * dsig * mbar[k] * mbar[k - 1];
+                    dsigma[k] += c;
+                    dsigma[k - 1] -= c;
+                }
             }
         }
         reg_total += reg;
@@ -603,23 +626,54 @@ pub fn row_loss_and_grad(
         linalg::gemm_at(&dv, &flat[lo.w_v..lo.w_v + d * d], &mut dh1, n, d, d);
         linalg::gemm_ta(&tape.h1, &dv, &mut grad[lo.w_v..lo.w_v + d * d], n, d, d);
 
-        // adaptive gate backward: m = sigmoid(pooled @ w_a + b_a)
-        if cfg.adaptive {
+        // adaptive gate backward. Forward (per token t, node k):
+        //   pooled_t = (Σ_{t'≤t} h1_{t'}) / (t+1)        (causal pool)
+        //   logit_tk = pooled_t @ w_a[:,k] + b_a[k]
+        //   m_tk     = sigmoid((logit_tk + g_k) / temp)   (g = 0, temp = 1
+        //                                                  when noise is None)
+        if cfg.adaptive && tape.m_stride != 0 {
             if let (Some(wa), Some(ba)) = (lo.w_alpha, lo.b_alpha) {
-                let mut dpooled = vec![0.0f32; d];
-                for k in 0..s {
-                    let dlogit = dm[k] * tape.m[k] * (1.0 - tape.m[k]);
-                    grad[ba + k] += dlogit;
-                    for i in 0..d {
-                        grad[wa + i * s + k] += tape.pooled[i] * dlogit;
-                        dpooled[i] += flat[wa + i * s + k] * dlogit;
+                // the Eq. Reg m̄ adjoint spreads uniformly over tokens
+                for t in 0..n {
+                    for k in 0..s {
+                        dm[t * s + k] += dmbar[k] * inv_n;
                     }
                 }
-                let inv_n = 1.0 / n as f32;
+                let inv_temp = noise.map_or(1.0, |ns| 1.0 / ns.temp);
+                // pass 1 (forward in t): rebuild the running pool, push
+                // dlogit into w_a/b_a, collect the pooled adjoint per t
+                let mut dpooled = vec![0.0f32; n * d];
+                let mut pool = vec![0.0f32; d];
+                let mut pooled = vec![0.0f32; d];
                 for t in 0..n {
+                    for (p, &h) in pool.iter_mut().zip(&tape.h1[t * d..(t + 1) * d]) {
+                        *p += h;
+                    }
+                    let invc = 1.0 / (t + 1) as f32;
+                    for (pe, &p) in pooled.iter_mut().zip(&pool) {
+                        *pe = p * invc;
+                    }
+                    let dpr = &mut dpooled[t * d..(t + 1) * d];
+                    for k in 0..s {
+                        let m_tk = tape.m[t * s + k];
+                        let dlogit = dm[t * s + k] * m_tk * (1.0 - m_tk) * inv_temp;
+                        grad[ba + k] += dlogit;
+                        for i in 0..d {
+                            grad[wa + i * s + k] += pooled[i] * dlogit;
+                            dpr[i] += flat[wa + i * s + k] * dlogit;
+                        }
+                    }
+                }
+                // pass 2 (reverse in t): pooled_t sums every h1_{t'≤t},
+                // so dh1_t = Σ_{t'≥t} dpooled_{t'}/(t'+1) — a suffix scan
+                let mut acc = vec![0.0f32; d];
+                for t in (0..n).rev() {
+                    let invc = 1.0 / (t + 1) as f32;
+                    let dpr = &dpooled[t * d..(t + 1) * d];
                     let dhr = &mut dh1[t * d..(t + 1) * d];
-                    for (i, &dp) in dpooled.iter().enumerate() {
-                        dhr[i] += dp * inv_n;
+                    for i in 0..d {
+                        acc[i] += dpr[i] * invc;
+                        dhr[i] += acc[i];
                     }
                 }
             }
@@ -630,24 +684,28 @@ pub fn row_loss_and_grad(
         //   ∂loss/∂decay · decay = da·lam_re + db·lam_im
         //   ∂decay/∂sigma = -decay,   ∂decay/∂T = decay/T²
         //   ∂lam_re/∂θ = lam_im,      ∂lam_im/∂θ = -lam_re
-        let mut dt = dgamma as f32 * np.gamma / (8.0 * t_val * t_val);
-        for k in 0..s {
-            let dot = da[k] * np.lam_re[k] + db[k] * np.lam_im[k];
-            if cfg.learn_sigma {
-                dsigma[k] += -dot;
-            }
-            dt += dot / (t_val * t_val);
-            if cfg.learn_omega && !cfg.omega_zero {
-                grad[lo.omega + k] += da[k] * np.lam_im[k] - db[k] * np.lam_re[k];
-            }
-        }
-        if cfg.learn_sigma {
+        // Skipped entirely for mixers that never read them (linear
+        // attention): their sigma/omega/T gradients stay exactly zero.
+        if unp {
+            let mut dt = dgamma as f32 * np.gamma / (8.0 * t_val * t_val);
             for k in 0..s {
-                grad[lo.sigma_raw + k] += dsigma[k] * sigmoid(f[lo.sigma_raw + k]);
+                let dot = da[k] * np.lam_re[k] + db[k] * np.lam_im[k];
+                if cfg.learn_sigma {
+                    dsigma[k] += -dot;
+                }
+                dt += dot / (t_val * t_val);
+                if cfg.learn_omega && !cfg.omega_zero {
+                    grad[lo.omega + k] += da[k] * np.lam_im[k] - db[k] * np.lam_re[k];
+                }
             }
-        }
-        if cfg.learn_t {
-            grad[lo.t_raw] += dt * sigmoid(f[lo.t_raw]);
+            if cfg.learn_sigma {
+                for k in 0..s {
+                    grad[lo.sigma_raw + k] += dsigma[k] * sigmoid(f[lo.sigma_raw + k]);
+                }
+            }
+            if cfg.learn_t {
+                grad[lo.t_raw] += dt * sigmoid(f[lo.t_raw]);
+            }
         }
 
         // LN1 + residual into the layer input

@@ -6,10 +6,11 @@
 //!
 //! Every matmul on both sides of the tape runs on the shared blocked
 //! kernels in [`crate::util::linalg`] — the tape forward additionally
-//! reuses the engine's packed weight panels and its
-//! `gate_full`/`ffn_parts`/`head_logits` helpers — so training can
-//! never optimise a subtly different network than eval/serving
-//! executes.
+//! reuses the engine's packed weight panels and its causal-gate /
+//! `ffn_parts` / `head_logits` helpers, and token mixing goes through
+//! the same [`crate::runtime::Mixer`] trait the engine serves — so
+//! training can never optimise a subtly different network than
+//! eval/serving executes.
 //!
 //! Together these make `stlt train --backend native` a first-class
 //! path: the same `train_step` contract the AOT-lowered HLO exposes —
@@ -17,7 +18,13 @@
 //! ce, s_eff)` — is implemented by [`native_train_step`] and plugged
 //! into the [`crate::runtime::Backend`] seam by
 //! `runtime/backend/native.rs`, so `coordinator::train_lm` and the CLI
-//! drive either backend unchanged.
+//! drive either backend unchanged. For adaptive configs the step's
+//! `seed` drives the Gumbel-sigmoid gate relaxation ([`TrainNoise`]):
+//! each row derives an independent noise stream from it, and the
+//! relaxation temperature anneals from `gumbel_temp_hi` to
+//! `gumbel_temp_lo` over the first `gumbel_anneal_frac · total_steps`
+//! steps ([`gumbel_temp_at`]). Eval and serving always use the
+//! deterministic `sigmoid(logit)` gate.
 //!
 //! ## Data-parallel accumulation
 //!
@@ -49,11 +56,21 @@ pub mod optim;
 
 use anyhow::{bail, Result};
 
-pub use backward::{row_loss_and_grad, seg_len, tape_bytes, RowOut};
+pub use backward::{row_loss_and_grad, seg_len, tape_bytes, RowOut, TrainNoise};
 pub use optim::{adamw_step, AdamHp};
 
+use crate::runtime::artifact::ModelConfig;
 use crate::runtime::native_stlt::StltModel;
 use crate::util::threadpool::{parallel_map, ThreadPool};
+
+/// Gumbel-sigmoid relaxation temperature at a given training step:
+/// linear anneal from `gumbel_temp_hi` to `gumbel_temp_lo` over the
+/// first `gumbel_anneal_frac · total_steps` steps, flat afterwards.
+pub fn gumbel_temp_at(cfg: &ModelConfig, step: i32) -> f32 {
+    let horizon = (cfg.gumbel_anneal_frac * cfg.total_steps as f32).max(1.0);
+    let frac = (step.max(0) as f32 / horizon).clamp(0.0, 1.0);
+    cfg.gumbel_temp_hi + (cfg.gumbel_temp_lo - cfg.gumbel_temp_hi) * frac
+}
 
 /// Scalar outputs of one batch gradient / training step.
 #[derive(Clone, Copy, Debug)]
@@ -62,7 +79,8 @@ pub struct BatchMetrics {
     pub loss: f32,
     /// next-token cross-entropy, mean over B·N positions
     pub ce: f32,
-    /// mean active node count (Σ_k m_k averaged over layers and rows)
+    /// mean active node count (token-mean gate mass Σ_k m̄_k averaged
+    /// over layers and rows; exactly S for non-adaptive configs)
     pub s_eff: f32,
     /// pre-clip global gradient norm (0 until the optimiser runs)
     pub grad_norm: f32,
@@ -77,11 +95,16 @@ pub struct BatchMetrics {
 /// Row gradients are computed on `pool` workers and reduced in row
 /// order on the calling thread, so the result is bitwise independent
 /// of the pool size.
+///
+/// `noise` is the step-level Gumbel relaxation (adaptive training);
+/// each row gets an independent stream by hashing its index into the
+/// seed, so the result is also independent of row scheduling.
 pub fn batch_loss_and_grad(
     model: &StltModel,
     tokens: &[i32],
     batch: usize,
     n_plus_1: usize,
+    noise: Option<TrainNoise>,
     pool: &ThreadPool,
 ) -> Result<(Vec<f32>, BatchMetrics)> {
     if batch == 0 || n_plus_1 < 2 || tokens.len() != batch * n_plus_1 {
@@ -96,11 +119,17 @@ pub fn batch_loss_and_grad(
     let model_c = model.clone();
     let tokens_c: std::sync::Arc<Vec<i32>> = std::sync::Arc::new(tokens.to_vec());
     let rows = parallel_map(pool, batch, move |i| {
+        // per-row noise stream: splitmix-style index hash into the seed
+        let row_noise = noise.map(|ns| TrainNoise {
+            temp: ns.temp,
+            seed: ns.seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        });
         row_loss_and_grad(
             &model_c,
             &tokens_c[i * n_plus_1..(i + 1) * n_plus_1],
             ce_scale,
             reg_scale,
+            row_noise,
         )
     });
     let mut grad: Option<Vec<f32>> = None;
@@ -142,6 +171,12 @@ pub fn batch_loss_and_grad(
 /// counter (the scalar the driver feeds the artifact). Returns the step
 /// metrics; the caller increments its own step counter, exactly like
 /// the XLA path.
+///
+/// `seed` is the step's RNG seed from the artifact contract. It only
+/// matters for adaptive configs, where it (with the step-annealed
+/// temperature) drives the Gumbel-sigmoid gate relaxation; elsewhere
+/// the step is fully deterministic in (flat, m, v, step, tokens).
+#[allow(clippy::too_many_arguments)]
 pub fn native_train_step(
     model: &StltModel,
     flat: &mut [f32],
@@ -151,9 +186,19 @@ pub fn native_train_step(
     tokens: &[i32],
     batch: usize,
     n_plus_1: usize,
+    seed: u64,
     pool: &ThreadPool,
 ) -> Result<BatchMetrics> {
-    let (mut grad, mut metrics) = batch_loss_and_grad(model, tokens, batch, n_plus_1, pool)?;
+    let noise = if model.cfg.adaptive {
+        Some(TrainNoise {
+            temp: gumbel_temp_at(&model.cfg, step),
+            seed,
+        })
+    } else {
+        None
+    };
+    let (mut grad, mut metrics) =
+        batch_loss_and_grad(model, tokens, batch, n_plus_1, noise, pool)?;
     let hp = AdamHp::from_config(&model.cfg);
     metrics.grad_norm = adamw_step(&hp, step, flat, m, v, &mut grad);
     Ok(metrics)

@@ -13,7 +13,7 @@ use std::sync::Arc;
 
 use stlt::coordinator::{Server, ServerOpts};
 use stlt::runtime::artifact::{Entry, ModelConfig, TensorSpec};
-use stlt::runtime::native_stlt::{host_init, nll_of, MixerImpl, StltModel};
+use stlt::runtime::native_stlt::{host_init, nll_of, StltModel};
 use stlt::runtime::{BackendKind, DecodeStep, EvalStep, Manifest, Runtime, StreamStep};
 
 const S: usize = 4;
@@ -58,25 +58,29 @@ fn entry(
 
 /// Synthesize the manifest entries the runtime/server need for base
 /// "nat" (the serving kinds come from the shared per-kind builders).
-fn manifest(p: usize) -> Manifest {
-    let c = cfg();
+fn manifest_for(c: &ModelConfig, p: usize) -> Manifest {
     let mut entries = BTreeMap::new();
     for e in [
-        entry(
+        Entry::synthetic(
             "nat.eval",
             "eval_step",
+            c.clone(),
             p,
             vec![f32s(&[p]), i32s(&[2, 17]), f32s(&[]), i32s(&[])],
             vec![f32s(&[]), f32s(&[]), f32s(&[])],
             &[],
         ),
-        Entry::synthetic_stream(&c, p, "nat.stream", CHUNK),
-        Entry::synthetic_decode(&c, p, "nat.decode"),
-        Entry::synthetic_stream_batch(&c, p, "nat.stream_batch", CHUNK, BSRV),
+        Entry::synthetic_stream(c, p, "nat.stream", CHUNK),
+        Entry::synthetic_decode(c, p, "nat.decode"),
+        Entry::synthetic_stream_batch(c, p, "nat.stream_batch", CHUNK, BSRV),
     ] {
         entries.insert(e.name.clone(), e);
     }
     Manifest { dir: PathBuf::from("."), entries }
+}
+
+fn manifest(p: usize) -> Manifest {
+    manifest_for(&cfg(), p)
 }
 
 fn doc(len: usize, seed: u64) -> Vec<i32> {
@@ -85,9 +89,11 @@ fn doc(len: usize, seed: u64) -> Vec<i32> {
 }
 
 fn reference_nll(flat: &[f32], tokens: &[i32]) -> f64 {
-    // naive O(N^2 S d) relevance-matrix oracle
-    let mut model = StltModel::new(&cfg(), Arc::new(flat.to_vec())).unwrap();
-    model.mixer = MixerImpl::ReferenceN2;
+    // naive O(N^2 S d) relevance-matrix oracle, selected through the
+    // same config key the CLI's --mixer flag sets
+    let mut c = cfg();
+    c.mixer = "reference_n2".into();
+    let model = StltModel::new(&c, Arc::new(flat.to_vec())).unwrap();
     let n = tokens.len() - 1;
     let logits = model.forward_logits(&tokens[..n]).unwrap();
     (0..n)
@@ -248,6 +254,59 @@ fn native_server_matches_direct_engine_end_to_end() {
     let g2 = server.generate(2, prompt[n], gen_len, None).unwrap();
     assert_eq!(g2.tokens, g.tokens);
     server.shutdown();
+}
+
+#[test]
+fn adaptive_and_linattn_serving_match_direct_engine() {
+    // mixer-seam integration: the full server stack (chunked feed waves
+    // + batched decode) over an adaptive-gate model and over the
+    // linear-attention baseline reproduces the direct engine. Chunked
+    // logits are bitwise the whole-sequence logits (pinned at the
+    // engine level), so greedy generation must match token-for-token
+    // and the NLL differs only by f64 summation association.
+    for (mixer, adaptive) in
+        [("recurrence", true), ("linear_attention", false), ("linear_attention", true)]
+    {
+        let mut c = cfg();
+        c.adaptive = adaptive;
+        c.mixer = mixer.into();
+        let flat = host_init(&c, 13);
+        let m = manifest_for(&c, flat.len());
+        let prompt = doc(97, 33); // 96 transitions = 12 exact chunks
+        let model = StltModel::new(&c, Arc::new(flat.clone())).unwrap();
+        let n = prompt.len() - 1;
+        let logits = model.forward_logits(&prompt[..n]).unwrap();
+        let want_nll: f64 = (0..n)
+            .map(|t| nll_of(&logits[t * VOCAB..(t + 1) * VOCAB], prompt[t + 1]).unwrap())
+            .sum();
+
+        let server = Server::start(&m, "nat", flat.clone(), ServerOpts::default()).unwrap();
+        let r = server.feed(1, prompt.clone(), true).unwrap();
+        assert_eq!(r.count, n as f64, "mixer={mixer} adaptive={adaptive}");
+        let rel = (r.nll_sum - want_nll).abs() / want_nll.abs().max(1.0);
+        assert!(
+            rel < 1e-12,
+            "mixer={mixer} adaptive={adaptive}: server nll {} vs engine {want_nll} (rel {rel:.3e})",
+            r.nll_sum
+        );
+
+        let gen_len = 12;
+        let g = server.generate(1, prompt[n], gen_len, None).unwrap();
+        let (mut l, mut u) = model.zero_carry();
+        model.trunk_chunk(&mut l, &mut u, &prompt[..n], 0.0, None).unwrap();
+        let mut tok = prompt[n];
+        let mut want_tokens = Vec::new();
+        for _ in 0..gen_len {
+            let (lg, _) = model.trunk_chunk(&mut l, &mut u, &[tok], 0.0, None).unwrap();
+            tok = stlt::metrics::argmax(&lg[lg.len() - VOCAB..]) as i32;
+            want_tokens.push(tok);
+        }
+        assert_eq!(
+            g.tokens, want_tokens,
+            "mixer={mixer} adaptive={adaptive}: server generation must match the engine"
+        );
+        server.shutdown();
+    }
 }
 
 #[test]

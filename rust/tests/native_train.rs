@@ -4,9 +4,13 @@
 //! finite differences against an *independent f64 oracle*: a from-
 //! scratch double-precision transcription of the forward loss (module
 //! [`oracle`]) that shares no code with `train/backward.rs`. The oracle
-//! is noise-free (f64), so the FD comparison isolates the analytic f32
-//! gradient's error; the 1e-3 acceptance tolerance sits ~100x above the
-//! observed f32 rounding floor.
+//! covers both mixers (Laplace recurrence and linear attention), the
+//! causal adaptive gate, and — given the same `(temp, seed)` — replays
+//! the tape's exact Gumbel-sigmoid logistic samples, so the relaxed
+//! training loss is FD-pinned too. Arithmetic noise is f64-free, so the
+//! comparison isolates the analytic f32 gradient's error; the 1e-3
+//! acceptance tolerance sits ~100x above the observed f32 rounding
+//! floor.
 //!
 //! Also here: the data-parallel bitwise-reduction guarantee, a native
 //! `train_lm` smoke (NLL must decrease), bit-identical checkpoint
@@ -25,7 +29,7 @@ use stlt::interpret::{total_params, trunk_layout};
 use stlt::runtime::artifact::{Entry, ModelConfig, TensorSpec};
 use stlt::runtime::native_stlt::{host_init, StltModel};
 use stlt::runtime::{Manifest, Runtime, TrainState, TrainStep};
-use stlt::train::{batch_loss_and_grad, row_loss_and_grad};
+use stlt::train::{batch_loss_and_grad, row_loss_and_grad, TrainNoise};
 use stlt::util::rng::Rng;
 use stlt::util::threadpool::ThreadPool;
 
@@ -34,6 +38,7 @@ use stlt::util::threadpool::ThreadPool;
 mod oracle {
     use stlt::interpret::trunk_layout;
     use stlt::runtime::artifact::ModelConfig;
+    use stlt::util::rng::Rng;
 
     fn softplus(x: f64) -> f64 {
         if x > 20.0 {
@@ -52,6 +57,15 @@ mod oracle {
         0.5 * x * (1.0 + (C * (x + 0.044_715 * x * x * x)).tanh())
     }
 
+    /// φ(x) = elu(x) + 1, the linear-attention feature map.
+    fn phi(x: f64) -> f64 {
+        if x > 0.0 {
+            x + 1.0
+        } else {
+            x.exp()
+        }
+    }
+
     fn ln(x: &[f64], g: &[f64], b: &[f64], d: usize) -> Vec<f64> {
         let n = x.len() / d;
         let mut y = vec![0.0; n * d];
@@ -68,12 +82,19 @@ mod oracle {
     }
 
     /// loss = ce_scale * Σ nll + reg_scale * reg for one token row.
+    ///
+    /// `noise = Some((temp, seed))` replays the tape's Gumbel-sigmoid
+    /// relaxation: one `Rng` stream per row, S logistic samples per
+    /// layer drawn in layer order, each rounded through f32 exactly as
+    /// the tape holds them — so the oracle differentiates the *same*
+    /// relaxed loss. `None` is the deterministic eval/FD gate.
     pub fn row_loss(
         cfg: &ModelConfig,
         flat: &[f32],
         tokens: &[i32],
         ce_scale: f64,
         reg_scale: f64,
+        noise: Option<(f64, u64)>,
     ) -> f64 {
         let layout = trunk_layout(cfg);
         let off = |p: &str| layout.iter().find(|l| l.path == p).map(|l| l.offset);
@@ -92,36 +113,45 @@ mod oracle {
                 x[t * d + i] = embed[tok * d + i] * scale;
             }
         }
+        let linattn = cfg.mixer == "linear_attention";
+        let mut gum_rng = noise.map(|(_, seed)| Rng::new(seed));
         let mut reg_total = 0.0;
         for li in 0..cfg.n_layers {
             let p = format!("/layers/{li:03}");
             let o = |k: &str| off(&format!("{p}/{k}")).unwrap();
             let om = |k: &str| off(&format!("{p}/mixer/{k}"));
             let h1 = ln(&x, &take(o("ln1_g"), d), &take(o("ln1_b"), d), d);
-            // gate
-            let m: Vec<f64> = match (cfg.adaptive, om("w_alpha"), om("b_alpha")) {
-                (true, Some(wa), Some(ba)) => {
-                    let mut pooled = vec![0.0; d];
-                    for t in 0..n {
-                        for i in 0..d {
-                            pooled[i] += h1[t * d + i];
+            // gate: causal running-mean pooling over h1, per-token m;
+            // Gumbel-relaxed when a noise stream is given
+            let mut m = vec![1.0f64; n * s];
+            if let (true, Some(wa), Some(ba)) = (cfg.adaptive, om("w_alpha"), om("b_alpha")) {
+                let (temp, g) = match (noise, gum_rng.as_mut()) {
+                    (Some((tmp, _)), Some(rng)) => {
+                        let g: Vec<f64> = (0..s)
+                            .map(|_| {
+                                let u = rng.f64().clamp(1e-6, 1.0 - 1e-6);
+                                ((u.ln() - (1.0 - u).ln()) as f32) as f64
+                            })
+                            .collect();
+                        (tmp, g)
+                    }
+                    _ => (1.0, vec![0.0; s]),
+                };
+                let mut pool = vec![0.0; d];
+                for t in 0..n {
+                    for i in 0..d {
+                        pool[i] += h1[t * d + i];
+                    }
+                    let inv = 1.0 / (t + 1) as f64;
+                    for k in 0..s {
+                        let mut logit = flat[ba + k] as f64;
+                        for (i, pv) in pool.iter().enumerate() {
+                            logit += pv * inv * flat[wa + i * s + k] as f64;
                         }
+                        m[t * s + k] = sigmoid((logit + g[k]) / temp);
                     }
-                    for pv in pooled.iter_mut() {
-                        *pv /= n as f64;
-                    }
-                    (0..s)
-                        .map(|k| {
-                            let mut logit = flat[ba + k] as f64;
-                            for (i, pv) in pooled.iter().enumerate() {
-                                logit += pv * flat[wa + i * s + k] as f64;
-                            }
-                            sigmoid(logit)
-                        })
-                        .collect()
                 }
-                _ => vec![1.0; s],
-            };
+            }
             let w_f = take(om("w_f").unwrap(), d * s);
             let w_v = take(om("w_v").unwrap(), d * d);
             let w_o = take(om("w_o").unwrap(), d * d);
@@ -132,34 +162,72 @@ mod oracle {
                 .collect();
             let omega: Vec<f64> = (0..s).map(|k| flat[om("omega").unwrap() + k] as f64).collect();
             let theta: Vec<f64> = if cfg.omega_zero { vec![0.0; s] } else { omega.clone() };
-            // recurrence
-            let mut l = vec![0.0; s * 2];
-            let mut u = vec![0.0; s * d * 2];
             let mut z = vec![0.0; n * d];
-            for t in 0..n {
-                for k in 0..s {
-                    let decay = (-(sigma[k] + 1.0 / t_val)).exp();
-                    let (a, b) = (decay * theta[k].cos(), -decay * theta[k].sin());
-                    let mut f_tk = 0.0;
-                    for i in 0..d {
-                        f_tk += h1[t * d + i] * w_f[i * s + k];
-                    }
-                    f_tk *= m[k];
-                    let (lr, li2) = (l[k * 2], l[k * 2 + 1]);
-                    let nlr = a * lr - b * li2 + f_tk;
-                    let nli = a * li2 + b * lr;
-                    l[k * 2] = nlr;
-                    l[k * 2 + 1] = nli;
+            if linattn {
+                // shared-QK linear attention: u = φ(f) ⊙ m, inclusive
+                // prefix sums zv/S, readout z = (uᵀ S) / (uᵀ zv + ε)
+                let mut zv = vec![0.0; s];
+                let mut smat = vec![0.0; s * d];
+                for t in 0..n {
+                    let mut vv = vec![0.0; d];
                     for e in 0..d {
-                        let mut ve = 0.0;
                         for i in 0..d {
-                            ve += h1[t * d + i] * w_v[i * d + e];
+                            vv[e] += h1[t * d + i] * w_v[i * d + e];
                         }
-                        let ur = gamma * u[(k * d + e) * 2] + nlr * ve;
-                        let ui = gamma * u[(k * d + e) * 2 + 1] - nli * ve;
-                        u[(k * d + e) * 2] = ur;
-                        u[(k * d + e) * 2 + 1] = ui;
-                        z[t * d + e] += (nlr * ur - nli * ui) / s as f64;
+                    }
+                    let mut u = vec![0.0; s];
+                    for k in 0..s {
+                        let mut f_tk = 0.0;
+                        for i in 0..d {
+                            f_tk += h1[t * d + i] * w_f[i * s + k];
+                        }
+                        u[k] = phi(f_tk) * m[t * s + k];
+                        zv[k] += u[k];
+                        for e in 0..d {
+                            smat[k * d + e] += u[k] * vv[e];
+                        }
+                    }
+                    let mut den = 1e-6;
+                    for k in 0..s {
+                        den += u[k] * zv[k];
+                    }
+                    for e in 0..d {
+                        let mut num = 0.0;
+                        for k in 0..s {
+                            num += u[k] * smat[k * d + e];
+                        }
+                        z[t * d + e] = num / den;
+                    }
+                }
+            } else {
+                // Laplace-node recurrence
+                let mut l = vec![0.0; s * 2];
+                let mut u = vec![0.0; s * d * 2];
+                for t in 0..n {
+                    for k in 0..s {
+                        let decay = (-(sigma[k] + 1.0 / t_val)).exp();
+                        let (a, b) = (decay * theta[k].cos(), -decay * theta[k].sin());
+                        let mut f_tk = 0.0;
+                        for i in 0..d {
+                            f_tk += h1[t * d + i] * w_f[i * s + k];
+                        }
+                        f_tk *= m[t * s + k];
+                        let (lr, li2) = (l[k * 2], l[k * 2 + 1]);
+                        let nlr = a * lr - b * li2 + f_tk;
+                        let nli = a * li2 + b * lr;
+                        l[k * 2] = nlr;
+                        l[k * 2 + 1] = nli;
+                        for e in 0..d {
+                            let mut ve = 0.0;
+                            for i in 0..d {
+                                ve += h1[t * d + i] * w_v[i * d + e];
+                            }
+                            let ur = gamma * u[(k * d + e) * 2] + nlr * ve;
+                            let ui = gamma * u[(k * d + e) * 2 + 1] - nli * ve;
+                            u[(k * d + e) * 2] = ur;
+                            u[(k * d + e) * 2 + 1] = ui;
+                            z[t * d + e] += (nlr * ur - nli * ui) / s as f64;
+                        }
                     }
                 }
             }
@@ -196,14 +264,28 @@ mod oracle {
                 }
             }
             x = x_out;
-            // Eq. Reg (per-row gate)
-            for k in 0..s {
-                reg_total += cfg.lambda_omega as f64 * omega[k].abs() * m[k];
-                reg_total += cfg.lambda_mask as f64 * m[k];
+            // Eq. Reg on the token-mean gate mass m̄; the node-coupled
+            // terms only exist for mixers that use the Laplace nodes
+            let mut mbar = vec![0.0f64; s];
+            for t in 0..n {
+                for k in 0..s {
+                    mbar[k] += m[t * s + k];
+                }
             }
-            for k in 1..s {
-                let ds = sigma[k] - sigma[k - 1];
-                reg_total += cfg.lambda_sigma as f64 * ds * ds * m[k] * m[k - 1];
+            for mb in mbar.iter_mut() {
+                *mb /= n as f64;
+            }
+            for k in 0..s {
+                if !linattn {
+                    reg_total += cfg.lambda_omega as f64 * omega[k].abs() * mbar[k];
+                }
+                reg_total += cfg.lambda_mask as f64 * mbar[k];
+            }
+            if !linattn {
+                for k in 1..s {
+                    let ds = sigma[k] - sigma[k - 1];
+                    reg_total += cfg.lambda_sigma as f64 * ds * ds * mbar[k] * mbar[k - 1];
+                }
             }
         }
         let xf = ln(
@@ -272,7 +354,9 @@ fn fd_tokens(cfg: &ModelConfig, seed: u64, n: usize) -> Vec<i32> {
 }
 
 /// Directional finite-difference check of one parameter group against
-/// the f64 oracle: best error over eps in {1e-3, 1e-4}.
+/// the f64 oracle: best error over eps in {1e-3, 1e-4}. `noise` must
+/// match what the analytic gradient was computed with.
+#[allow(clippy::too_many_arguments)]
 fn group_fd_rel_err(
     cfg: &ModelConfig,
     flat: &[f32],
@@ -282,6 +366,7 @@ fn group_fd_rel_err(
     dir_seed: u64,
     ce_scale: f64,
     reg_scale: f64,
+    noise: Option<(f64, u64)>,
 ) -> (f64, f64) {
     let mut rng = Rng::new(dir_seed);
     let total: usize = spans.iter().map(|&(_, n)| n).sum();
@@ -301,8 +386,8 @@ fn group_fd_rel_err(
                 .map(|(&f, &ui)| (f as f64 + sgn * eps * ui) as f32)
                 .collect()
         };
-        let lp = oracle::row_loss(cfg, &shift(1.0), tokens, ce_scale, reg_scale);
-        let lm = oracle::row_loss(cfg, &shift(-1.0), tokens, ce_scale, reg_scale);
+        let lp = oracle::row_loss(cfg, &shift(1.0), tokens, ce_scale, reg_scale, noise);
+        let lm = oracle::row_loss(cfg, &shift(-1.0), tokens, ce_scale, reg_scale, noise);
         let fd = (lp - lm) / (2.0 * eps);
         let err = (fd - analytic).abs() / fd.abs().max(analytic.abs()).max(1e-6);
         best = best.min(err);
@@ -327,18 +412,19 @@ fn tape_forward_matches_engine_nll() {
     // forward that is not mirrored in the other fails here, so training
     // can never silently optimise a different network than eval/serving
     // executes. Tolerance covers fp summation-order differences only.
-    for adaptive in [false, true] {
+    for (mixer, adaptive) in [("", false), ("", true), ("linear_attention", true)] {
         let mut cfg = grad_cfg();
+        cfg.mixer = mixer.into();
         cfg.adaptive = adaptive;
         let flat = perturbed_init(&cfg, 17);
         let tokens = fd_tokens(&cfg, 23, 12);
         let model = StltModel::new(&cfg, Arc::new(flat)).unwrap();
-        let out = row_loss_and_grad(&model, &tokens, 1.0, 0.0).unwrap();
+        let out = row_loss_and_grad(&model, &tokens, 1.0, 0.0, None).unwrap();
         let (nll, cnt, _) = model.eval_row(&tokens, 0.0, 0).unwrap();
         assert_eq!(cnt, (tokens.len() - 1) as f64);
         assert!(
             (out.nll_sum - nll).abs() < 1e-4 * (1.0 + nll.abs()),
-            "adaptive={adaptive}: tape nll {} vs engine {nll}",
+            "mixer={mixer:?} adaptive={adaptive}: tape nll {} vs engine {nll}",
             out.nll_sum
         );
     }
@@ -355,11 +441,11 @@ fn fd_gradient_checks_every_param_group() {
     let n = tokens.len() - 1;
     let (ce_scale, reg_scale) = (1.0 / n as f64, 1.0);
     let model = StltModel::new(&cfg, Arc::new(flat.clone())).unwrap();
-    let out = row_loss_and_grad(&model, &tokens, ce_scale as f32, reg_scale as f32).unwrap();
+    let out = row_loss_and_grad(&model, &tokens, ce_scale as f32, reg_scale as f32, None).unwrap();
 
     // the f32 loss itself must agree with the f64 oracle
     let loss = ce_scale * out.nll_sum + reg_scale * out.reg as f64;
-    let oracle_loss = oracle::row_loss(&cfg, &flat, &tokens, ce_scale, reg_scale);
+    let oracle_loss = oracle::row_loss(&cfg, &flat, &tokens, ce_scale, reg_scale, None);
     assert!(
         (loss - oracle_loss).abs() < 1e-4 * (1.0 + oracle_loss.abs()),
         "loss {loss} vs oracle {oracle_loss}"
@@ -368,6 +454,7 @@ fn fd_gradient_checks_every_param_group() {
     for (dir_seed, (name, spans)) in param_groups(&cfg).iter().enumerate() {
         let (err, analytic) = group_fd_rel_err(
             &cfg, &flat, &out.grad, &tokens, spans, 1000 + dir_seed as u64, ce_scale, reg_scale,
+            None,
         );
         assert!(
             err <= 1e-3,
@@ -387,10 +474,11 @@ fn fd_gradient_checks_non_adaptive_and_omega_zero() {
         let n = tokens.len() - 1;
         let (ce_scale, reg_scale) = (1.0 / n as f64, 1.0);
         let model = StltModel::new(&cfg, Arc::new(flat.clone())).unwrap();
-        let out = row_loss_and_grad(&model, &tokens, ce_scale as f32, reg_scale as f32).unwrap();
+        let out =
+            row_loss_and_grad(&model, &tokens, ce_scale as f32, reg_scale as f32, None).unwrap();
         for (i, (name, spans)) in param_groups(&cfg).iter().enumerate() {
             let (err, analytic) = group_fd_rel_err(
-                &cfg, &flat, &out.grad, &tokens, spans, 2000 + i as u64, ce_scale, reg_scale,
+                &cfg, &flat, &out.grad, &tokens, spans, 2000 + i as u64, ce_scale, reg_scale, None,
             );
             assert!(
                 err <= 1e-3,
@@ -398,6 +486,90 @@ fn fd_gradient_checks_non_adaptive_and_omega_zero() {
             );
         }
     }
+}
+
+#[test]
+fn fd_gradient_checks_adaptive_gumbel_relaxation() {
+    // the training-path gate: Gumbel-sigmoid relaxation at a fixed
+    // (temp, seed). The oracle replays the identical logistic samples
+    // from the same Rng stream, so FD pins the relaxed-gate gradients
+    // (including the 1/temp chain factor) for every parameter group.
+    let cfg = grad_cfg();
+    let flat = perturbed_init(&cfg, 11);
+    let tokens = fd_tokens(&cfg, 42, 12);
+    let n = tokens.len() - 1;
+    let (ce_scale, reg_scale) = (1.0 / n as f64, 1.0);
+    let noise = TrainNoise { temp: 0.75, seed: 0x5EED };
+    let onoise = Some((noise.temp as f64, noise.seed));
+    let model = StltModel::new(&cfg, Arc::new(flat.clone())).unwrap();
+    let out = row_loss_and_grad(&model, &tokens, ce_scale as f32, reg_scale as f32, Some(noise))
+        .unwrap();
+
+    let loss = ce_scale * out.nll_sum + reg_scale * out.reg as f64;
+    let oracle_loss = oracle::row_loss(&cfg, &flat, &tokens, ce_scale, reg_scale, onoise);
+    assert!(
+        (loss - oracle_loss).abs() < 1e-4 * (1.0 + oracle_loss.abs()),
+        "relaxed loss {loss} vs oracle {oracle_loss}: Gumbel streams must line up"
+    );
+
+    for (i, (name, spans)) in param_groups(&cfg).iter().enumerate() {
+        let (err, analytic) = group_fd_rel_err(
+            &cfg, &flat, &out.grad, &tokens, spans, 3000 + i as u64, ce_scale, reg_scale, onoise,
+        );
+        assert!(
+            err <= 1e-3,
+            "gumbel group '{name}': FD rel err {err:.2e} (directional derivative {analytic:.3e})"
+        );
+    }
+}
+
+#[test]
+fn fd_gradient_checks_linear_attention_mixer() {
+    // the pluggable-baseline seam: linear attention trains through the
+    // same tape and trait. Every live parameter group FD-pins, the
+    // adaptive gate stays trainable (it gates post-φ), and the unused
+    // Laplace node parameters get *exactly* zero gradient —
+    // `uses_node_params() == false` must skip both the mixer backward
+    // and the node-coupled Eq. Reg terms, not merely shrink them.
+    let mut cfg = grad_cfg();
+    cfg.mixer = "linear_attention".into();
+    let flat = perturbed_init(&cfg, 13);
+    let tokens = fd_tokens(&cfg, 57, 12);
+    let n = tokens.len() - 1;
+    let (ce_scale, reg_scale) = (1.0 / n as f64, 1.0);
+    let model = StltModel::new(&cfg, Arc::new(flat.clone())).unwrap();
+    let out = row_loss_and_grad(&model, &tokens, ce_scale as f32, reg_scale as f32, None).unwrap();
+
+    let loss = ce_scale * out.nll_sum + reg_scale * out.reg as f64;
+    let oracle_loss = oracle::row_loss(&cfg, &flat, &tokens, ce_scale, reg_scale, None);
+    assert!(
+        (loss - oracle_loss).abs() < 1e-4 * (1.0 + oracle_loss.abs()),
+        "linattn loss {loss} vs oracle {oracle_loss}"
+    );
+
+    let groups = param_groups(&cfg);
+    for (i, (name, spans)) in groups.iter().enumerate() {
+        let (err, analytic) = group_fd_rel_err(
+            &cfg, &flat, &out.grad, &tokens, spans, 4000 + i as u64, ce_scale, reg_scale, None,
+        );
+        assert!(
+            err <= 1e-3,
+            "linattn group '{name}': FD rel err {err:.2e} (deriv {analytic:.3e})"
+        );
+    }
+    for frozen in ["sigma_raw", "omega", "t_raw"] {
+        for &(off, len) in &groups[frozen] {
+            for i in off..off + len {
+                assert_eq!(out.grad[i], 0.0, "linattn: node param grad[{i}] ({frozen}) not zero");
+            }
+        }
+    }
+    assert!(
+        groups["w_alpha"].iter().any(|&(off, len)| out.grad[off..off + len]
+            .iter()
+            .any(|&g| g != 0.0)),
+        "linattn: adaptive gate must stay trainable"
+    );
 }
 
 #[test]
@@ -416,7 +588,7 @@ fn ablation_stop_grads_zero_the_right_groups() {
         let flat = perturbed_init(&cfg, 8);
         let tokens = fd_tokens(&cfg, 9, 8);
         let model = StltModel::new(&cfg, Arc::new(flat.clone())).unwrap();
-        let out = row_loss_and_grad(&model, &tokens, 0.1, 1.0).unwrap();
+        let out = row_loss_and_grad(&model, &tokens, 0.1, 1.0, None).unwrap();
         let groups = param_groups(&cfg);
         let frozen = match fixed {
             "sigma" => "sigma_raw",
@@ -441,14 +613,23 @@ fn ablation_stop_grads_zero_the_right_groups() {
 #[test]
 fn checkpointed_grads_bitwise_equal_across_segment_sizes() {
     // the tentpole keystone: the segment-checkpointed backward replays
-    // each segment's (L, U) history through the engine's own recurrence
-    // kernel, so the gradient must be BITWISE identical for every
-    // segment length — 1, a mid C, C±1, N, and beyond-N — and for the
-    // whole-sequence default (0). Adaptive exercises the gate/pooled
-    // path on top of the recurrence.
-    for adaptive in [false, true] {
+    // each segment's carry history through the mixer's own token_step,
+    // so the gradient must be BITWISE identical for every segment
+    // length — 1, a mid C, C±1, N, and beyond-N — and for the
+    // whole-sequence default (0). The sweep covers every mixer plus the
+    // adaptive gate, with the Gumbel relaxation live where adaptive
+    // (the sampled gate sits on the tape, so replay may not redraw it).
+    for (mixer, adaptive) in [
+        ("", false),
+        ("", true),
+        ("reference_n2", false),
+        ("linear_attention", false),
+        ("linear_attention", true),
+    ] {
         let mut cfg = grad_cfg();
+        cfg.mixer = mixer.into();
         cfg.adaptive = adaptive;
+        let noise = adaptive.then(|| TrainNoise { temp: 0.8, seed: 0xC0FFEE });
         let flat = perturbed_init(&cfg, 31);
         let tokens = fd_tokens(&cfg, 37, 12); // n = 12
         let n = tokens.len() - 1;
@@ -456,7 +637,7 @@ fn checkpointed_grads_bitwise_equal_across_segment_sizes() {
             let mut c = cfg.clone();
             c.grad_ckpt_segment = seg;
             let model = StltModel::new(&c, Arc::new(flat.clone())).unwrap();
-            row_loss_and_grad(&model, &tokens, 0.125, 1.0).unwrap()
+            row_loss_and_grad(&model, &tokens, 0.125, 1.0, noise).unwrap()
         };
         let base = run(0);
         for seg in [1usize, 3, 4, 5, n - 1, n, n + 7] {
@@ -464,21 +645,21 @@ fn checkpointed_grads_bitwise_equal_across_segment_sizes() {
             assert_eq!(
                 out.nll_sum.to_bits(),
                 base.nll_sum.to_bits(),
-                "adaptive={adaptive} seg={seg}: nll drifted"
+                "mixer={mixer:?} adaptive={adaptive} seg={seg}: nll drifted"
             );
             assert_eq!(out.reg.to_bits(), base.reg.to_bits(), "seg={seg}: reg drifted");
             for (i, (a, b)) in out.grad.iter().zip(&base.grad).enumerate() {
                 assert_eq!(
                     a.to_bits(),
                     b.to_bits(),
-                    "adaptive={adaptive} seg={seg}: grad[{i}] {a} != full-tape {b}"
+                    "mixer={mixer:?} adaptive={adaptive} seg={seg}: grad[{i}] {a} != full-tape {b}"
                 );
             }
         }
         // the segmented tape really shrinks with C
         assert!(
             run(3).tape_bytes < base.tape_bytes,
-            "adaptive={adaptive}: C=3 tape must undercut the whole-sequence tape"
+            "mixer={mixer:?} adaptive={adaptive}: C=3 tape must undercut the whole-sequence tape"
         );
     }
 }
@@ -544,7 +725,7 @@ fn long_context_train_step_fits_checkpointed_tape_budget() {
 
     // accounting honesty: the real per-row allocation equals tape_bytes
     let model = StltModel::new(&cfg, Arc::new(flat.clone())).unwrap();
-    let out = row_loss_and_grad(&model, &tokens, 1.0 / n as f32, 1.0).unwrap();
+    let out = row_loss_and_grad(&model, &tokens, 1.0 / n as f32, 1.0, None).unwrap();
     assert_eq!(
         out.tape_bytes, ckpt_bytes,
         "tape accounting must match the real allocation"
@@ -596,11 +777,24 @@ fn data_parallel_grads_bitwise_equal_across_pool_sizes() {
     let tokens: Vec<i32> = (0..b * n1).map(|_| rng.below(cfg.vocab as u64) as i32).collect();
     let pool1 = ThreadPool::new(1);
     let pool4 = ThreadPool::new(4);
-    let (g1, m1) = batch_loss_and_grad(&model, &tokens, b, n1, &pool1).unwrap();
-    let (g4, m4) = batch_loss_and_grad(&model, &tokens, b, n1, &pool4).unwrap();
+    let (g1, m1) = batch_loss_and_grad(&model, &tokens, b, n1, None, &pool1).unwrap();
+    let (g4, m4) = batch_loss_and_grad(&model, &tokens, b, n1, None, &pool4).unwrap();
     assert_eq!(g1, g4, "row-ordered reduction must be pool-size invariant");
     assert_eq!(m1.loss.to_bits(), m4.loss.to_bits());
     assert_eq!(m1.ce.to_bits(), m4.ce.to_bits());
+
+    // Gumbel path: each row hashes its index into the step seed, so the
+    // noise stream — and with it the reduced gradient — must also be
+    // independent of which worker picks the row up
+    let cfg_a = grad_cfg(); // adaptive
+    let flat_a = perturbed_init(&cfg_a, 22);
+    let model_a = StltModel::new(&cfg_a, Arc::new(flat_a)).unwrap();
+    let noise = Some(TrainNoise { temp: 0.8, seed: 99 });
+    let (ga1, ma1) = batch_loss_and_grad(&model_a, &tokens, b, n1, noise, &pool1).unwrap();
+    let (ga4, ma4) = batch_loss_and_grad(&model_a, &tokens, b, n1, noise, &pool4).unwrap();
+    assert_eq!(ga1, ga4, "gumbel reduction must be pool-size invariant");
+    assert_eq!(ma1.loss.to_bits(), ma4.loss.to_bits());
+    assert_eq!(ma1.s_eff.to_bits(), ma4.s_eff.to_bits());
 }
 
 // ---------------------------------------------------------------------------
