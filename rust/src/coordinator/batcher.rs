@@ -12,8 +12,9 @@
 //! Policy: block for the first item, then drain whatever else is queued
 //! up to `max_batch` or until `max_wait` elapses.
 
-use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+use crate::util::sync::Arc;
 
 use super::queue::BoundedQueue;
 

@@ -2,8 +2,9 @@
 //! semantics — the admission-control primitive of the streaming server.
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
 use std::time::Duration;
+
+use crate::util::sync::{Condvar, Mutex};
 
 pub struct BoundedQueue<T> {
     inner: Mutex<Inner<T>>,
@@ -141,7 +142,7 @@ impl<T> BoundedQueue<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::Arc;
+    use crate::util::sync::Arc;
     use std::thread;
 
     #[test]

@@ -31,12 +31,13 @@
 //! including time-to-first-token.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
+
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::{mpsc, Arc};
 
 use crate::obs::{Counter, Gauge, Hist};
 use crate::runtime::artifact::Entry;
@@ -388,6 +389,9 @@ impl Server {
     /// Open a new session and return its handle. Ids are allocated from
     /// a range disjoint from hand-picked session-id-API ids.
     pub fn open_session(&self) -> SessionHandle {
+        // ORDERING: Relaxed — the counter only needs uniqueness, not
+        // ordering with any other memory; the id crosses threads inside
+        // Request messages, which the channel itself orders.
         let id = self.core.next_session.fetch_add(1, Ordering::Relaxed);
         SessionHandle::new(id, Arc::clone(&self.core))
     }

@@ -22,8 +22,8 @@
 //! and `evicted()` names any victim this admission displaced, exactly
 //! like `FeedResult::evicted` does on the feed path.
 
-use std::sync::mpsc;
-use std::sync::Arc;
+use crate::util::sync::mpsc;
+use crate::util::sync::Arc;
 
 use anyhow::{anyhow, Result};
 

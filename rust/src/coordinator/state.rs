@@ -201,6 +201,113 @@ impl StatePool {
     }
 }
 
+/// Model-check the pool's concurrency contract (build with
+/// `RUSTFLAGS="--cfg model_check"`): the serving scheduler drives a
+/// `Mutex<StatePool>` from wave threads (checkout → compute outside
+/// the lock → checkin) while admissions apply eviction pressure. The
+/// checker proves the two invariants the pin flag exists for — a
+/// checkout never observes the empty placeholder, and a pinned session
+/// survives any interleaving of admissions — and the mutant reverts
+/// checkout to its pre-pin behaviour to prove the checker would have
+/// caught the original double-checkout bug.
+#[cfg(all(test, model_check))]
+mod model_check {
+    use super::*;
+    use crate::util::chk::{self, Config};
+    use crate::util::sync::{Arc, Mutex};
+
+    fn carry() -> StreamCarry {
+        StreamCarry { l: vec![0.0; 8], u: vec![0.0; 32], l_shape: vec![2, 2, 2], u_shape: vec![2, 2, 4, 2] }
+    }
+
+    fn lock(p: &Mutex<StatePool>) -> crate::util::sync::MutexGuard<'_, StatePool> {
+        p.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// One serving wave on session 1: checkout (pin), "compute" with
+    /// the lock dropped, then checkin — asserting the carry is real and
+    /// that the pinned session survived any concurrent admissions.
+    /// `None` checkouts (in-flight elsewhere, or legitimately LRU-
+    /// evicted while idle) are the refusal path and simply give up.
+    fn wave(pool: &Mutex<StatePool>) {
+        let c = lock(pool).checkout(1);
+        if let Some(c) = c {
+            assert_eq!(c.l.len(), 8, "checkout must hand out the real carry, not the placeholder");
+            let mut p = lock(pool);
+            p.checkin(1, c, 1);
+            assert!(p.contains(1), "a pinned session must survive admission pressure");
+        }
+    }
+
+    #[test]
+    fn statepool_checkout_protocol_holds() {
+        let report = chk::check(Config::default(), || {
+            let pool = Arc::new(Mutex::new(StatePool::new(2)));
+            {
+                let mut p = lock(&pool);
+                p.admit(1, carry());
+                p.admit(2, carry());
+            }
+            let (pa, pb, pe) = (Arc::clone(&pool), Arc::clone(&pool), Arc::clone(&pool));
+            let a = chk::spawn(move || wave(&pa));
+            let b = chk::spawn(move || wave(&pb));
+            let e = chk::spawn(move || {
+                for id in [3u64, 4] {
+                    let adm = lock(&pe).admit(id, carry());
+                    // sessions 2/3 are never pinned, so eviction always
+                    // finds an unpinned victim here
+                    assert_ne!(adm, Admit::Rejected, "admission found no unpinned victim");
+                }
+            });
+            a.join();
+            b.join();
+            e.join();
+            assert!(lock(&pool).len() <= 2, "capacity respected in every interleaving");
+        });
+        report.assert_ok();
+        assert!(report.dfs_complete, "pool protocol should be exhaustible");
+    }
+
+    /// The pre-pin checkout: no in-flight check, so a second caller
+    /// silently receives the zero-length placeholder.
+    fn checkout_unpinned(p: &mut StatePool, id: u64) -> Option<StreamCarry> {
+        p.clock += 1;
+        let clock = p.clock;
+        let s = p.states.get_mut(&id)?;
+        s.last_used = clock;
+        s.pinned = true;
+        // BUG: s.pinned was not consulted before replacing the carry.
+        Some(std::mem::replace(
+            &mut s.carry,
+            StreamCarry { l: Vec::new(), u: Vec::new(), l_shape: vec![], u_shape: vec![] },
+        ))
+    }
+
+    #[test]
+    fn checker_catches_unpinned_double_checkout() {
+        let report = chk::check(Config::default(), || {
+            let pool = Arc::new(Mutex::new(StatePool::new(2)));
+            lock(&pool).admit(1, carry());
+            let mut hs = Vec::new();
+            for _ in 0..2 {
+                let p2 = Arc::clone(&pool);
+                hs.push(chk::spawn(move || {
+                    let c = checkout_unpinned(&mut lock(&p2), 1);
+                    if let Some(c) = c {
+                        assert_eq!(c.l.len(), 8, "second checkout got the placeholder");
+                        lock(&p2).checkin(1, c, 1);
+                    }
+                }));
+            }
+            for h in hs {
+                h.join();
+            }
+        });
+        let f = report.assert_fails();
+        assert!(f.message.contains("panicked"), "{}", f.message);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -36,6 +36,10 @@
 #![allow(clippy::too_many_arguments)]
 #![allow(clippy::type_complexity)]
 #![allow(clippy::manual_memcpy)]
+// Every dereference inside an `unsafe fn` must sit in its own
+// `unsafe {}` block with its own SAFETY argument — the crate's one
+// unsafe region (threadpool::scatter_rows) is kept minimal this way.
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod bench;
 pub mod config;
@@ -43,6 +47,7 @@ pub mod coordinator;
 pub mod data;
 pub mod harness;
 pub mod interpret;
+pub mod lint;
 pub mod metrics;
 pub mod net;
 pub mod obs;

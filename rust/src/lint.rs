@@ -1,0 +1,472 @@
+//! `stlt lint` — dependency-free concurrency-hygiene lint for the
+//! crate's own sources (DESIGN.md-style substrate build: no syn, no
+//! regex — a hand-rolled scrubber plus token-level line scans).
+//!
+//! The rules encode the invariants the model checker
+//! ([`crate::util::chk`]) and the sanitizer CI wall rest on:
+//!
+//! * **unsafe-safety** — every `unsafe` keyword must sit under an
+//!   adjacent `// SAFETY:` comment naming the invariant it relies on.
+//! * **static-mut** — `static mut` is banned outright (the facade's
+//!   atomics or `OnceLock` cover every legitimate use).
+//! * **unwrap** — `.unwrap()` / `.expect(` are banned in non-test
+//!   runtime code; servers must degrade, not abort. Exceptions live in
+//!   the committed allowlist (`lint.allow`) — and `net/` must have
+//!   none: a remote peer's bytes must never reach a panic.
+//! * **ordering-comment** — every relaxed/acquire/release atomic
+//!   ordering (`Ordering::Relaxed`, `::Acquire`, `::Release`,
+//!   `::AcqRel`) needs an adjacent `// ORDERING:` comment arguing why
+//!   that ordering suffices. `SeqCst` is exempt: it is the
+//!   safe-by-default choice, so it needs no argument.
+//! * **std-sync** — `std::sync` may only be named by the facade
+//!   (`util/sync.rs`) and the checker it swaps in (`util/chk.rs`).
+//!   Everything else must import through `crate::util::sync`, or the
+//!   model-check build silently loses coverage of that site.
+//!
+//! Scanning is scrub-then-match: string literals, char literals and
+//! comments are blanked (newlines preserved) before pattern checks, so
+//! `"std::sync"` in a doc comment or test fixture never trips a rule.
+//! Suppressions come from an allowlist of `rule path` lines; unused
+//! entries are themselves errors (`stale-allow`), which keeps the debt
+//! ledger honest as call sites are burned down.
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// One lint finding, pointing at a 1-indexed source line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+pub const RULE_UNSAFE: &str = "unsafe-safety";
+pub const RULE_STATIC_MUT: &str = "static-mut";
+pub const RULE_UNWRAP: &str = "unwrap";
+pub const RULE_ORDERING: &str = "ordering-comment";
+pub const RULE_STD_SYNC: &str = "std-sync";
+pub const RULE_STALE_ALLOW: &str = "stale-allow";
+
+/// Files allowed to name `std::sync` directly: the facade itself and
+/// the model checker it routes to under `--cfg model_check`.
+const STD_SYNC_EXEMPT: [&str; 2] = ["util/sync.rs", "util/chk.rs"];
+
+/// Blank string/char literals and comments (to spaces, newlines kept)
+/// so pattern checks only ever see code. Handles line comments, nested
+/// block comments, escapes, raw strings (`r"…"`, `r#"…"#`, `br…`) and
+/// the char-literal / lifetime ambiguity.
+fn scrub(src: &str) -> String {
+    let b: Vec<char> = src.chars().collect();
+    let mut out = String::with_capacity(src.len());
+    let blank = |c: char| if c == '\n' { '\n' } else { ' ' };
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = b[i];
+        // line comment
+        if c == '/' && b.get(i + 1) == Some(&'/') {
+            while i < b.len() && b[i] != '\n' {
+                out.push(' ');
+                i += 1;
+            }
+            continue;
+        }
+        // block comment (Rust block comments nest)
+        if c == '/' && b.get(i + 1) == Some(&'*') {
+            let mut depth = 1usize;
+            out.push_str("  ");
+            i += 2;
+            while i < b.len() && depth > 0 {
+                if b[i] == '/' && b.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else if b[i] == '*' && b.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else {
+                    out.push(blank(b[i]));
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // raw string: r"…" | r#"…"# (optionally b-prefixed), only when
+        // the r/b does not continue an identifier
+        let prev_ident =
+            out.as_bytes().last().is_some_and(|&p| p.is_ascii_alphanumeric() || p == b'_');
+        if (c == 'r' || c == 'b') && !prev_ident {
+            let mut j = i + 1;
+            if c == 'b' && b.get(j) == Some(&'r') {
+                j += 1;
+            }
+            let mut hashes = 0usize;
+            while b.get(j) == Some(&'#') {
+                hashes += 1;
+                j += 1;
+            }
+            if b.get(j) == Some(&'"') {
+                for k in i..=j {
+                    out.push(blank(b[k]));
+                }
+                i = j + 1;
+                // scan to `"` followed by `hashes` `#`s
+                'raw: while i < b.len() {
+                    if b[i] == '"' && b[i + 1..].iter().take(hashes).filter(|&&h| h == '#').count() == hashes {
+                        for k in i..(i + 1 + hashes).min(b.len()) {
+                            out.push(blank(b[k]));
+                        }
+                        i += 1 + hashes;
+                        break 'raw;
+                    }
+                    out.push(blank(b[i]));
+                    i += 1;
+                }
+                continue;
+            }
+        }
+        // plain (or byte) string literal
+        if c == '"' {
+            out.push(' ');
+            i += 1;
+            while i < b.len() && b[i] != '"' {
+                if b[i] == '\\' && i + 1 < b.len() {
+                    out.push(blank(b[i]));
+                    out.push(blank(b[i + 1]));
+                    i += 2;
+                } else {
+                    out.push(blank(b[i]));
+                    i += 1;
+                }
+            }
+            if i < b.len() {
+                out.push(' ');
+                i += 1;
+            }
+            continue;
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            if b.get(i + 1) == Some(&'\\') {
+                // escaped char literal ('\n', '\'', '\x7f'): blank the
+                // quote, the backslash and the escaped char, then
+                // everything up to the closing quote
+                out.push_str("   ");
+                i += 3;
+                while i < b.len() && b[i] != '\'' {
+                    out.push(blank(b[i]));
+                    i += 1;
+                }
+                if i < b.len() {
+                    out.push(' ');
+                    i += 1;
+                }
+                continue;
+            }
+            if b.get(i + 2) == Some(&'\'') && b.get(i + 1) != Some(&'\'') {
+                // 'x' — a one-char literal (this is what hides '"')
+                out.push_str("   ");
+                i += 3;
+                continue;
+            }
+            // lifetime — pass through
+        }
+        out.push(c);
+        i += 1;
+    }
+    out
+}
+
+/// `line` contains `word` with identifier boundaries on both sides.
+fn has_word(line: &str, word: &str) -> bool {
+    let mut from = 0usize;
+    while let Some(p) = line[from..].find(word) {
+        let p = from + p;
+        let before_ok = line[..p]
+            .chars()
+            .next_back()
+            .is_none_or(|c| !(c.is_alphanumeric() || c == '_'));
+        let after_ok = line[p + word.len()..]
+            .chars()
+            .next()
+            .is_none_or(|c| !(c.is_alphanumeric() || c == '_'));
+        if before_ok && after_ok {
+            return true;
+        }
+        from = p + word.len();
+    }
+    false
+}
+
+/// A `marker` comment is "adjacent" to line `i` (0-indexed) when it
+/// appears on the line itself, within the previous `window` lines, or
+/// anywhere in the contiguous `//`-comment block directly above —
+/// long SAFETY arguments should not be truncated to fit a window.
+fn adjacent_marker(raw: &[&str], i: usize, marker: &str, window: usize) -> bool {
+    let lo = i.saturating_sub(window);
+    if raw[lo..=i].iter().any(|l| l.contains(marker)) {
+        return true;
+    }
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let t = raw[j].trim_start();
+        if t.starts_with("//") {
+            if t.contains(marker) {
+                return true;
+            }
+        } else {
+            break;
+        }
+    }
+    false
+}
+
+/// Lint one file's source. `rel` is the path reported in findings and
+/// matched against the allowlist (forward slashes).
+pub fn check_source(rel: &str, src: &str) -> Vec<Violation> {
+    let scrubbed = scrub(src);
+    let code: Vec<&str> = scrubbed.lines().collect();
+    let raw: Vec<&str> = src.lines().collect();
+    // everything from the first test-gated attribute down is test code
+    let test_start = code
+        .iter()
+        .position(|l| l.contains("#[cfg(test)]") || l.contains("#[cfg(all(test"))
+        .unwrap_or(code.len());
+    let sync_exempt = STD_SYNC_EXEMPT.iter().any(|e| rel.ends_with(e));
+    let mut out = Vec::new();
+    let mut push = |line: usize, rule: &'static str, msg: String| {
+        out.push(Violation { file: rel.to_string(), line: line + 1, rule, msg });
+    };
+    for (i, l) in code.iter().enumerate() {
+        if has_word(l, "unsafe") && !adjacent_marker(&raw, i, "SAFETY:", 12) {
+            push(i, RULE_UNSAFE, "`unsafe` without an adjacent `// SAFETY:` comment".into());
+        }
+        if l.contains("static mut") {
+            push(i, RULE_STATIC_MUT, "`static mut` is banned (use atomics or OnceLock)".into());
+        }
+        if !sync_exempt && l.contains("std::sync") {
+            push(
+                i,
+                RULE_STD_SYNC,
+                "direct `std::sync` use outside the facade; import `crate::util::sync` \
+                 so the model-check build covers this site"
+                    .into(),
+            );
+        }
+        if i < test_start {
+            if l.contains(".unwrap()") || l.contains(".expect(") {
+                push(
+                    i,
+                    RULE_UNWRAP,
+                    "`.unwrap()`/`.expect()` in runtime code; return an error instead".into(),
+                );
+            }
+            let weak = ["Ordering::Relaxed", "Ordering::Acquire", "Ordering::Release", "Ordering::AcqRel"];
+            if weak.iter().any(|w| l.contains(w)) && !adjacent_marker(&raw, i, "ORDERING:", 6) {
+                push(
+                    i,
+                    RULE_ORDERING,
+                    "non-SeqCst atomic ordering without an adjacent `// ORDERING:` \
+                     justification"
+                        .into(),
+                );
+            }
+        }
+    }
+    out
+}
+
+/// One allowlist entry: suppress `rule` findings in the file whose
+/// path ends with `path`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AllowEntry {
+    pub rule: String,
+    pub path: String,
+    pub line: usize,
+}
+
+/// Parse `lint.allow`: one `rule path` pair per line, `#` comments and
+/// blank lines skipped.
+pub fn parse_allowlist(text: &str) -> Result<Vec<AllowEntry>, String> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        match (it.next(), it.next(), it.next()) {
+            (Some(rule), Some(path), None) => {
+                out.push(AllowEntry { rule: rule.to_string(), path: path.to_string(), line: i + 1 })
+            }
+            _ => return Err(format!("lint.allow:{}: expected `rule path`, got '{line}'", i + 1)),
+        }
+    }
+    Ok(out)
+}
+
+fn rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<PathBuf> =
+        fs::read_dir(dir)?.map(|e| e.map(|e| e.path())).collect::<std::io::Result<_>>()?;
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            rs_files(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `src_root`, applying the allowlist at
+/// `allow_path` (absent file = empty allowlist). Returns the surviving
+/// violations — including a `stale-allow` finding for every allowlist
+/// entry that no longer suppresses anything.
+pub fn run(src_root: &Path, allow_path: &Path) -> Result<Vec<Violation>, String> {
+    let allow = match fs::read_to_string(allow_path) {
+        Ok(text) => parse_allowlist(&text)?,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+        Err(e) => return Err(format!("{}: {e}", allow_path.display())),
+    };
+    let mut files = Vec::new();
+    rs_files(src_root, &mut files).map_err(|e| format!("{}: {e}", src_root.display()))?;
+    let mut used = vec![false; allow.len()];
+    let mut out = Vec::new();
+    for path in &files {
+        let src = fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        let rel = path.to_string_lossy().replace('\\', "/");
+        for v in check_source(&rel, &src) {
+            let suppressed = allow.iter().enumerate().any(|(k, a)| {
+                let hit = a.rule == v.rule && v.file.ends_with(&a.path);
+                if hit {
+                    used[k] = true;
+                }
+                hit
+            });
+            if !suppressed {
+                out.push(v);
+            }
+        }
+    }
+    for (k, a) in allow.iter().enumerate() {
+        if !used[k] {
+            out.push(Violation {
+                file: allow_path.to_string_lossy().into_owned(),
+                line: a.line,
+                rule: RULE_STALE_ALLOW,
+                msg: format!("entry `{} {}` no longer suppresses anything — remove it", a.rule, a.path),
+            });
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scrub_blanks_strings_comments_chars() {
+        let src = "let a = \"std::sync\"; // std::sync here\nlet q = '\"'; /* unsafe */ let b = r#\"static mut\"#;";
+        let s = scrub(src);
+        assert!(!s.contains("std::sync"), "scrubbed: {s}");
+        assert!(!s.contains("unsafe"));
+        assert!(!s.contains("static mut"));
+        assert_eq!(s.lines().count(), src.lines().count(), "newlines preserved");
+        // the char literal's quote must not open a string
+        assert!(s.contains("let b ="));
+    }
+
+    #[test]
+    fn scrub_keeps_lifetimes_and_nested_comments() {
+        let src = "fn f<'a>(x: &'a str) {} /* outer /* unsafe inner */ still comment */ let y = 1;";
+        let s = scrub(src);
+        assert!(s.contains("fn f<'a>(x: &'a str)"));
+        assert!(!s.contains("unsafe"));
+        assert!(s.contains("let y = 1;"));
+    }
+
+    #[test]
+    fn unsafe_needs_safety_comment() {
+        let bad = "fn f() { unsafe { g() } }\n";
+        let v = check_source("x.rs", bad);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, RULE_UNSAFE);
+        assert_eq!(v[0].line, 1);
+        let good = "// SAFETY: g upholds the invariant\nfn f() { unsafe { g() } }\n";
+        assert!(check_source("x.rs", good).is_empty());
+        // long contiguous comment blocks count as adjacent
+        let mut long = String::from("// SAFETY: a very long argument\n");
+        for _ in 0..20 {
+            long.push_str("// ...continued\n");
+        }
+        long.push_str("fn f() { unsafe { g() } }\n");
+        assert!(check_source("x.rs", &long).is_empty());
+    }
+
+    #[test]
+    fn unsafe_word_boundary() {
+        // attribute names embedding `unsafe` are not the keyword
+        let src = "#![deny(unsafe_op_in_unsafe_fn)]\n";
+        assert!(check_source("x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn static_mut_banned() {
+        let v = check_source("x.rs", "static mut X: u32 = 0;\n");
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, RULE_STATIC_MUT);
+    }
+
+    #[test]
+    fn unwrap_banned_outside_tests() {
+        let src = "fn f() { x.unwrap(); }\nfn g() { y.expect(\"boom\"); }\n#[cfg(test)]\nmod t { fn h() { z.unwrap(); } }\n";
+        let v = check_source("x.rs", src);
+        assert_eq!(v.len(), 2, "{v:?}");
+        assert!(v.iter().all(|v| v.rule == RULE_UNWRAP));
+        // unwrap_or_else is not unwrap
+        assert!(check_source("x.rs", "fn f() { x.unwrap_or_else(|e| e.into_inner()); }\n").is_empty());
+    }
+
+    #[test]
+    fn weak_orderings_need_justification() {
+        let bad = "fn f() { a.load(Ordering::Relaxed); }\n";
+        let v = check_source("x.rs", bad);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, RULE_ORDERING);
+        let good = "// ORDERING: Relaxed — pure counter\nfn f() { a.load(Ordering::Relaxed); }\n";
+        assert!(check_source("x.rs", good).is_empty());
+        // SeqCst needs no argument
+        assert!(check_source("x.rs", "fn f() { a.load(Ordering::SeqCst); }\n").is_empty());
+    }
+
+    #[test]
+    fn std_sync_only_in_facade_and_checker() {
+        let src = "use std::sync::Mutex;\n";
+        let v = check_source("rust/src/net/worker.rs", src);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, RULE_STD_SYNC);
+        assert!(check_source("rust/src/util/sync.rs", src).is_empty());
+        assert!(check_source("rust/src/util/chk.rs", src).is_empty());
+    }
+
+    #[test]
+    fn allowlist_roundtrip_and_errors() {
+        let allow = parse_allowlist("# comment\n\nunwrap rust/src/main.rs\n").unwrap();
+        assert_eq!(allow.len(), 1);
+        assert_eq!(allow[0].rule, "unwrap");
+        assert_eq!(allow[0].path, "rust/src/main.rs");
+        assert!(parse_allowlist("too many words here\n").is_err());
+    }
+}

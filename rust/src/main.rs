@@ -30,6 +30,11 @@
 //!           fetch a live metrics snapshot (exposition text) from a
 //!           worker or router over the wire protocol
 //!   inspect --artifact NAME [--ckpt PATH]               learned-parameter dump
+//!   lint    [--root DIR]
+//!           concurrency-hygiene lint over DIR/src (default: `rust`
+//!           when run from the repo root): SAFETY/ORDERING comment
+//!           discipline, unwrap/static-mut bans, std::sync facade
+//!           enforcement — see `stlt::lint`. Exit 1 on violations.
 //!
 //! Observability: metrics are on by default (`STLT_METRICS=0` to
 //! disable); `--metrics-every N` logs a one-line digest every N seconds
@@ -52,6 +57,7 @@ use stlt::config::Config;
 use stlt::coordinator::{self, ServerOpts, TrainOpts};
 use stlt::runtime::{default_artifacts_dir, BackendKind, Manifest, Runtime};
 use stlt::util::cli::Args;
+use stlt::util::sync::Arc;
 
 fn main() {
     stlt::util::logging::init();
@@ -63,7 +69,7 @@ fn main() {
 }
 
 fn usage() -> String {
-    "usage: stlt <info|train|eval|stream|generate|serve|worker|router|stats|inspect> \
+    "usage: stlt <info|train|eval|stream|generate|serve|worker|router|stats|inspect|lint> \
      [--backend native|xla] \
      [--artifact NAME] [--steps N] [--ckpt PATH] [--resume PATH] [--config FILE] \
      [--set key=value ...] [--grad-ckpt C] \
@@ -194,10 +200,31 @@ fn load_flat(manifest: &Manifest, artifact: &str, args: &Args) -> Result<Vec<f32
     stlt::runtime::exec::artifact_flat(manifest, artifact)
 }
 
+/// `stlt lint [--root DIR]`: scan DIR/src against the allowlist at
+/// DIR/lint.allow. Dispatched before the manifest loads — linting must
+/// work in a bare checkout with no artifacts.
+fn run_lint(args: &Args) -> Result<()> {
+    let default_root = if std::path::Path::new("rust/src").is_dir() { "rust" } else { "." };
+    let root = std::path::PathBuf::from(args.get_or("root", default_root));
+    let violations =
+        stlt::lint::run(&root.join("src"), &root.join("lint.allow")).map_err(|e| anyhow!(e))?;
+    for v in &violations {
+        eprintln!("{v}");
+    }
+    if !violations.is_empty() {
+        return Err(anyhow!("lint: {} violation(s) in {}", violations.len(), root.display()));
+    }
+    println!("lint: clean ({})", root.join("src").display());
+    Ok(())
+}
+
 fn run() -> Result<()> {
     let args = Args::from_env(&["verbose"]).map_err(|e| anyhow!(e))?;
     if args.has_flag("verbose") {
         stlt::util::logging::set_level(stlt::util::logging::Level::Debug);
+    }
+    if args.subcommand.as_deref() == Some("lint") {
+        return run_lint(&args);
     }
     let backend = BackendKind::parse(&args.get_or("backend", "native"))?;
     let mut manifest = Manifest::load(default_artifacts_dir())?;
@@ -331,7 +358,8 @@ fn run() -> Result<()> {
                 stlt::data::corpus::CorpusConfig::default_for_vocab(entry.config.vocab), 7,
             );
             let prompt = corpus.take(65);
-            let seed_token = *prompt.last().unwrap();
+            let seed_token =
+                prompt.last().copied().ok_or_else(|| anyhow!("corpus produced empty prompt"))?;
             server.feed(1, prompt.clone(), false)?;
             let sampling = stlt::coordinator::Sampling::parse(
                 &args.get_or("sampling", "greedy"),
@@ -373,7 +401,7 @@ fn run() -> Result<()> {
             // both through the same `Session` trait
             #[derive(Clone)]
             enum Target {
-                Local(std::sync::Arc<coordinator::Server>),
+                Local(Arc<coordinator::Server>),
                 Remote(stlt::net::Client),
             }
             let target = match args.get("connect") {
@@ -383,7 +411,7 @@ fn run() -> Result<()> {
                 }
                 None => {
                     let flat = load_flat(&manifest, &artifact, &args)?;
-                    Target::Local(std::sync::Arc::new(coordinator::Server::start(
+                    Target::Local(Arc::new(coordinator::Server::start(
                         &manifest,
                         &artifact,
                         flat,
@@ -403,7 +431,7 @@ fn run() -> Result<()> {
             let mut clients = Vec::new();
             for s in 0..sessions {
                 let target = target.clone();
-                let ttft_hist = std::sync::Arc::clone(&ttft_hist);
+                let ttft_hist = Arc::clone(&ttft_hist);
                 clients.push(std::thread::spawn(move || -> Result<(usize, f64, f64)> {
                     use stlt::coordinator::Session;
                     let mut sess: Box<dyn Session> = match &target {
@@ -415,10 +443,14 @@ fn run() -> Result<()> {
                         1000 + s as u64,
                     );
                     let prompt = corpus.take(prompt_len);
+                    let seed_token = prompt
+                        .last()
+                        .copied()
+                        .ok_or_else(|| anyhow!("corpus produced empty prompt"))?;
                     let fr = sess.feed(prompt.clone(), true)?;
                     let tg0 = std::time::Instant::now();
                     let mut stream = sess.generate(stlt::coordinator::GenOpts {
-                        seed_token: *prompt.last().unwrap(),
+                        seed_token,
                         max_tokens: gen_len,
                         sampling,
                         rng_seed: s as u64,
@@ -466,7 +498,7 @@ fn run() -> Result<()> {
                     server.stats.evictions.get(),
                     server.stats.cancelled.get(),
                 );
-                std::sync::Arc::try_unwrap(server)
+                Arc::try_unwrap(server)
                     .map_err(|_| anyhow!("server still shared"))?
                     .shutdown();
             }
@@ -482,7 +514,7 @@ fn run() -> Result<()> {
             let max_sessions = args.get_usize("max-sessions", 64).map_err(|e| anyhow!(e))?;
             let queue_cap = args.get_usize("queue-cap", 256).map_err(|e| anyhow!(e))?;
             let flat = load_flat(&manifest, &artifact, &args)?;
-            let server = std::sync::Arc::new(coordinator::Server::start(
+            let server = Arc::new(coordinator::Server::start(
                 &manifest,
                 &artifact,
                 flat,

@@ -13,14 +13,14 @@
 //! pending operation fails with a clear error instead of hanging.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::session::StreamItem;
 use crate::coordinator::{CarrySnapshot, FeedResult, GenOpts, Session, TokenStream};
+use crate::util::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::util::sync::{mpsc, Arc, Mutex};
 
 use super::wire::{self, EndOutcome, Frame};
 use super::Stream;
@@ -83,14 +83,19 @@ impl Client {
         let inner_r = Arc::clone(&inner);
         thread::Builder::new()
             .name("stlt-client-reader".into())
-            .spawn(move || read_loop(inner_r, reader))
-            .expect("spawn client reader");
+            .spawn(move || read_loop(inner_r, reader))?;
         Ok(Client { inner })
     }
 
     /// False once the connection has failed (all operations error).
     pub fn is_alive(&self) -> bool {
-        self.inner.alive.load(Ordering::Relaxed)
+        // ORDERING: Acquire — pairs with the Release stores that mark
+        // the connection dead, so a caller that observes false also
+        // observes everything the failing thread did first (in
+        // particular the reader's drain of `pending`). request() and
+        // start_generate() rely on this for their insert-after-drain
+        // race check.
+        self.inner.alive.load(Ordering::Acquire)
     }
 
     /// The address this client connected to.
@@ -130,6 +135,8 @@ impl Client {
     }
 
     fn fresh_req(&self) -> u64 {
+        // ORDERING: Relaxed — req ids only need uniqueness; matching
+        // request/reply state is published via the `pending` Mutex.
         self.inner.next_req.fetch_add(1, Ordering::Relaxed)
     }
 
@@ -137,15 +144,15 @@ impl Client {
     /// come back as `Err`.
     fn request(&self, req: u64, frame: Frame) -> Result<Frame> {
         let (tx, rx) = mpsc::channel();
-        self.inner.pending.lock().unwrap().insert(req, Pending::Resp(tx));
+        self.inner.pending.lock().unwrap_or_else(|e| e.into_inner()).insert(req, Pending::Resp(tx));
         if let Err(e) = self.inner.send_frame(&frame) {
-            self.inner.pending.lock().unwrap().remove(&req);
+            self.inner.pending.lock().unwrap_or_else(|e| e.into_inner()).remove(&req);
             return Err(e);
         }
         // The reader thread fails all pending ops when the connection
         // dies — but only ones registered before its drain. If we
         // registered after (send raced the death), clean up ourselves.
-        if !self.is_alive() && self.inner.pending.lock().unwrap().remove(&req).is_some() {
+        if !self.is_alive() && self.inner.pending.lock().unwrap_or_else(|e| e.into_inner()).remove(&req).is_some() {
             bail!("connection to {} lost", self.inner.peer);
         }
         match rx.recv() {
@@ -162,17 +169,17 @@ impl Client {
         self.inner
             .pending
             .lock()
-            .unwrap()
+            .unwrap_or_else(|e| e.into_inner())
             .insert(req, Pending::Stream { tx, session });
         if let Err(e) = self.inner.send_frame(&Frame::Generate { req, session, opts }) {
-            self.inner.pending.lock().unwrap().remove(&req);
+            self.inner.pending.lock().unwrap_or_else(|e| e.into_inner()).remove(&req);
             return Err(e);
         }
         if !self.is_alive() {
             // as in request(): cover the insert-after-drain race; if
             // the reader already failed this entry the stream below
             // yields that error
-            if self.inner.pending.lock().unwrap().remove(&req).is_some() {
+            if self.inner.pending.lock().unwrap_or_else(|e| e.into_inner()).remove(&req).is_some() {
                 bail!("connection to {} lost", self.inner.peer);
             }
         }
@@ -183,13 +190,16 @@ impl Client {
 impl ClientInner {
     fn send_frame(&self, frame: &Frame) -> Result<()> {
         use std::io::Write;
-        if !self.alive.load(Ordering::Relaxed) {
+        // ORDERING: Acquire — see Client::is_alive().
+        if !self.alive.load(Ordering::Acquire) {
             bail!("connection to {} lost", self.peer);
         }
-        let mut w = self.writer.lock().unwrap();
+        let mut w = self.writer.lock().unwrap_or_else(|e| e.into_inner());
         let r = wire::write_frame(&mut *w, frame).and_then(|()| w.flush().map_err(Into::into));
         if r.is_err() {
-            self.alive.store(false, Ordering::Relaxed);
+            // ORDERING: Release — pairs with the Acquire loads above;
+            // whoever observes the death also observes the failed write.
+            self.alive.store(false, Ordering::Release);
         }
         r
     }
@@ -211,7 +221,7 @@ impl ClientInner {
                 self.stream_item(req, item, true);
             }
             Frame::Error { req, msg } => {
-                match self.pending.lock().unwrap().remove(&req) {
+                match self.pending.lock().unwrap_or_else(|e| e.into_inner()).remove(&req) {
                     Some(Pending::Resp(tx)) => {
                         let _ = tx.send(Err(anyhow!(msg)));
                     }
@@ -228,7 +238,7 @@ impl ClientInner {
             | Frame::ImportOk { req, .. }
             | Frame::StatsOk { req, .. }
             | Frame::Ack { req } => {
-                if let Some(Pending::Resp(tx)) = self.pending.lock().unwrap().remove(&req) {
+                if let Some(Pending::Resp(tx)) = self.pending.lock().unwrap_or_else(|e| e.into_inner()).remove(&req) {
                     let _ = tx.send(Ok(frame));
                 }
             }
@@ -247,7 +257,7 @@ impl ClientInner {
     fn stream_item(&self, req: u64, item: StreamItem, last: bool) {
         let mut cancel_session = None;
         {
-            let mut pending = self.pending.lock().unwrap();
+            let mut pending = self.pending.lock().unwrap_or_else(|e| e.into_inner());
             let dead = match pending.get(&req) {
                 Some(Pending::Stream { tx, .. }) => tx.send(item).is_err(),
                 // Resp entry or unknown req: stray frame, drop it
@@ -265,6 +275,7 @@ impl ClientInner {
             // receiver gone mid-stream: mirror the local drop-cancels
             // contract. Fresh req id; the Ack comes back unmatched and
             // is dropped by dispatch.
+            // ORDERING: Relaxed — uniqueness only (see fresh_req).
             let req = self.next_req.fetch_add(1, Ordering::Relaxed);
             let _ = self.send_frame(&Frame::Cancel { req, session });
         }
@@ -278,6 +289,8 @@ fn read_loop(inner: Arc<ClientInner>, mut reader: std::io::BufReader<Stream>) {
             Ok(Some(frame)) => inner.dispatch(frame),
             Ok(None) => break,
             Err(e) => {
+                // ORDERING: Relaxed — only gates a log line (don't
+                // double-report a death send_frame already announced).
                 if inner.alive.load(Ordering::Relaxed) {
                     crate::debuglog!("net", "connection to {} failed: {e:#}", inner.peer);
                 }
@@ -285,8 +298,11 @@ fn read_loop(inner: Arc<ClientInner>, mut reader: std::io::BufReader<Stream>) {
             }
         }
     }
-    inner.alive.store(false, Ordering::Relaxed);
-    let mut pending = inner.pending.lock().unwrap();
+    // ORDERING: Release — published before the drain below; a requester
+    // that reads false here (Acquire) and finds its entry already gone
+    // knows the drain failed it, so nothing can leak undelivered.
+    inner.alive.store(false, Ordering::Release);
+    let mut pending = inner.pending.lock().unwrap_or_else(|e| e.into_inner());
     for (_, p) in pending.drain() {
         match p {
             Pending::Resp(tx) => {

@@ -24,12 +24,12 @@
 //!   router from a worker.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::{CarrySnapshot, FeedResult, GenOpts, Session, TokenStream};
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::{Arc, Mutex};
 
 use super::client::{Client, RemoteSession};
 use super::worker::{spawn_node, Node, WireServer};
@@ -126,16 +126,16 @@ impl Router {
     /// Which worker a session currently lives on.
     pub fn worker_of(&self, session: u64) -> Option<usize> {
         let routed = self.core.routed(session).ok()?;
-        let place = routed.place.lock().unwrap();
+        let place = routed.place.lock().unwrap_or_else(|e| e.into_inner());
         Some(place.worker)
     }
 
     /// Sessions currently placed on `worker`.
     pub fn sessions_on(&self, worker: usize) -> Vec<u64> {
-        let sessions = self.core.sessions.lock().unwrap();
+        let sessions = self.core.sessions.lock().unwrap_or_else(|e| e.into_inner());
         let mut out = Vec::new();
         for (id, routed) in sessions.iter() {
-            if routed.place.lock().unwrap().worker == worker {
+            if routed.place.lock().unwrap_or_else(|e| e.into_inner()).worker == worker {
                 out.push(*id);
             }
         }
@@ -145,7 +145,7 @@ impl Router {
 
     /// Total sessions the router is tracking.
     pub fn session_count(&self) -> usize {
-        self.core.sessions.lock().unwrap().len()
+        self.core.sessions.lock().unwrap_or_else(|e| e.into_inner()).len()
     }
 
     /// Live-migrate one session to `to`. Blocks until in-flight ops on
@@ -193,8 +193,14 @@ impl Router {
             if alive.len() < 2 {
                 return moved;
             }
-            let &max_w = alive.iter().max_by_key(|&&w| loads[w]).unwrap();
-            let &min_w = alive.iter().min_by_key(|&&w| loads[w]).unwrap();
+            // alive.len() >= 2 here, but prove it to the compiler
+            // rather than unwrapping
+            let (Some(&max_w), Some(&min_w)) = (
+                alive.iter().max_by_key(|&&w| loads[w]),
+                alive.iter().min_by_key(|&&w| loads[w]),
+            ) else {
+                return moved;
+            };
             if loads[max_w] <= loads[min_w] + 1 {
                 return moved;
             }
@@ -242,7 +248,7 @@ impl RouterCore {
     fn routed(&self, session: u64) -> Result<Arc<Routed>> {
         self.sessions
             .lock()
-            .unwrap()
+            .unwrap_or_else(|e| e.into_inner())
             .get(&session)
             .cloned()
             .ok_or_else(|| anyhow!("session {session} is not open on this router"))
@@ -250,6 +256,8 @@ impl RouterCore {
 
     fn open(&self, desired: u64) -> Result<u64> {
         let id = if desired == 0 {
+            // ORDERING: Relaxed — ids only need uniqueness; the routed
+            // entry itself is published via the `sessions` Mutex.
             self.next_session.fetch_add(1, Ordering::Relaxed)
         } else {
             desired
@@ -258,7 +266,7 @@ impl RouterCore {
         // Reserve the id before the worker round-trip so two clients
         // opening the same id race on the map, not on the worker.
         {
-            let mut sessions = self.sessions.lock().unwrap();
+            let mut sessions = self.sessions.lock().unwrap_or_else(|e| e.into_inner());
             if sessions.contains_key(&id) {
                 bail!("session {id} is already open on this router");
             }
@@ -268,7 +276,7 @@ impl RouterCore {
         }
         let remote = self.workers[worker].client.open(id)?;
         let routed = Arc::new(Routed { place: Mutex::new(Placement { worker, remote }) });
-        let mut sessions = self.sessions.lock().unwrap();
+        let mut sessions = self.sessions.lock().unwrap_or_else(|e| e.into_inner());
         if sessions.contains_key(&id) {
             // two explicit opens raced; the remote session drops (and
             // closes worker-side) harmlessly
@@ -281,7 +289,7 @@ impl RouterCore {
 
     fn close(&self, session: u64) -> Result<()> {
         let routed = {
-            let mut sessions = self.sessions.lock().unwrap();
+            let mut sessions = self.sessions.lock().unwrap_or_else(|e| e.into_inner());
             let r = sessions.remove(&session);
             SESSIONS_OPEN.set(sessions.len() as f64);
             match r {
@@ -289,7 +297,7 @@ impl RouterCore {
                 None => return Ok(()),
             }
         };
-        let mut place = routed.place.lock().unwrap();
+        let mut place = routed.place.lock().unwrap_or_else(|e| e.into_inner());
         place.remote.close()
     }
 
@@ -301,7 +309,7 @@ impl RouterCore {
             bail!("worker {to} ({}) is down", self.workers[to].addr);
         }
         let routed = self.routed(session)?;
-        let mut place = routed.place.lock().unwrap();
+        let mut place = routed.place.lock().unwrap_or_else(|e| e.into_inner());
         if place.worker == to {
             return Ok(());
         }
@@ -353,19 +361,19 @@ impl Node for RouterCore {
 
     fn node_feed(&self, id: u64, tokens: Vec<i32>, count_loss: bool) -> Result<FeedResult> {
         let routed = self.routed(id)?;
-        let place = routed.place.lock().unwrap();
+        let place = routed.place.lock().unwrap_or_else(|e| e.into_inner());
         place.remote.feed(tokens, count_loss)
     }
 
     fn node_generate(&self, id: u64, opts: GenOpts) -> Result<TokenStream> {
         let routed = self.routed(id)?;
-        let place = routed.place.lock().unwrap();
+        let place = routed.place.lock().unwrap_or_else(|e| e.into_inner());
         place.remote.generate(opts)
     }
 
     fn node_cancel(&self, id: u64) -> Result<()> {
         let routed = self.routed(id)?;
-        let place = routed.place.lock().unwrap();
+        let place = routed.place.lock().unwrap_or_else(|e| e.into_inner());
         place.remote.cancel()
     }
 
@@ -375,13 +383,13 @@ impl Node for RouterCore {
 
     fn node_export(&self, id: u64) -> Result<CarrySnapshot> {
         let routed = self.routed(id)?;
-        let place = routed.place.lock().unwrap();
+        let place = routed.place.lock().unwrap_or_else(|e| e.into_inner());
         place.remote.export_carry()
     }
 
     fn node_import(&self, id: u64, snap: CarrySnapshot) -> Result<Option<u64>> {
         let routed = self.routed(id)?;
-        let place = routed.place.lock().unwrap();
+        let place = routed.place.lock().unwrap_or_else(|e| e.into_inner());
         place.remote.import_carry(snap)
     }
 }
@@ -440,5 +448,86 @@ impl Drop for RouterSession {
         if !self.closed {
             let _ = self.core.close(self.id);
         }
+    }
+}
+
+/// Model-check the migration placement protocol (build with
+/// `RUSTFLAGS="--cfg model_check"`): [`RouterCore::migrate`]'s
+/// correctness rests on holding the placement lock across the whole
+/// export → open/import → swap sequence, so a concurrent op can never
+/// observe a placement whose worker no longer holds the carry. The
+/// model reduces a worker to "does it hold the carry" and an op to
+/// "read the placement, expect the carry there"; the mutant re-locks
+/// between export and swap — exactly the window the real lock closes —
+/// and the checker must catch the feed that falls into it.
+#[cfg(all(test, model_check))]
+mod model_check {
+    use crate::util::chk::{self, Config};
+    use crate::util::sync::atomic::{AtomicBool, Ordering};
+    use crate::util::sync::{Arc, Mutex};
+
+    /// Feed-path model: under the placement lock, the placed worker
+    /// must hold the carry.
+    fn feeder(place: &Mutex<usize>, carry: &[AtomicBool; 2]) {
+        let g = place.lock().unwrap_or_else(|e| e.into_inner());
+        assert!(
+            carry[*g].load(Ordering::SeqCst),
+            "placement points at worker {} but the carry is not there",
+            *g
+        );
+    }
+
+    #[test]
+    fn migration_placement_protocol_holds() {
+        let report = chk::check(Config::default(), || {
+            let place = Arc::new(Mutex::new(0usize));
+            let carry = Arc::new([AtomicBool::new(true), AtomicBool::new(false)]);
+            let (p2, c2) = (Arc::clone(&place), Arc::clone(&carry));
+            let migrator = chk::spawn(move || {
+                // migrate(): one lock held across export/import/swap
+                let mut g = p2.lock().unwrap_or_else(|e| e.into_inner());
+                let from = *g;
+                let to = 1 - from;
+                assert!(c2[from].swap(false, Ordering::SeqCst), "export needs the carry");
+                c2[to].store(true, Ordering::SeqCst);
+                *g = to;
+            });
+            let (p3, c3) = (Arc::clone(&place), Arc::clone(&carry));
+            let ops = chk::spawn(move || {
+                feeder(&p3, &c3);
+                feeder(&p3, &c3);
+            });
+            migrator.join();
+            ops.join();
+            feeder(&place, &carry);
+        });
+        report.assert_ok();
+        assert!(report.dfs_complete, "migration protocol should be exhaustible");
+    }
+
+    /// Mutant: export under one lock acquisition, swap under another —
+    /// a feed scheduled into the gap sees the stale placement with the
+    /// carry already exported.
+    #[test]
+    fn checker_catches_migration_lock_gap() {
+        let report = chk::check(Config::default(), || {
+            let place = Arc::new(Mutex::new(0usize));
+            let carry = Arc::new([AtomicBool::new(true), AtomicBool::new(false)]);
+            let (p2, c2) = (Arc::clone(&place), Arc::clone(&carry));
+            let migrator = chk::spawn(move || {
+                let from = *p2.lock().unwrap_or_else(|e| e.into_inner());
+                // BUG: the placement lock is released here.
+                let to = 1 - from;
+                assert!(c2[from].swap(false, Ordering::SeqCst), "export needs the carry");
+                c2[to].store(true, Ordering::SeqCst);
+                *p2.lock().unwrap_or_else(|e| e.into_inner()) = to;
+            });
+            let (p3, c3) = (Arc::clone(&place), Arc::clone(&carry));
+            let ops = chk::spawn(move || feeder(&p3, &c3));
+            migrator.join();
+            ops.join();
+        });
+        let f = report.assert_fails();
+        assert!(f.message.contains("panicked"), "{}", f.message);
     }
 }

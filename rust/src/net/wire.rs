@@ -522,6 +522,16 @@ impl<'a> Cursor<'a> {
         Ok(s)
     }
 
+    /// Fixed-size form of [`Cursor::take`]: the length check lives in
+    /// `take`, so the slice-to-array conversion is infallible by
+    /// construction (no `.try_into().unwrap()` in the decode path).
+    fn take_n<const N: usize>(&mut self) -> Result<[u8; N]> {
+        let s = self.take(N)?;
+        let mut a = [0u8; N];
+        a.copy_from_slice(s);
+        Ok(a)
+    }
+
     fn u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
     }
@@ -531,15 +541,15 @@ impl<'a> Cursor<'a> {
     }
 
     fn u16(&mut self) -> Result<u16> {
-        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+        Ok(u16::from_le_bytes(self.take_n()?))
     }
 
     fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(u32::from_le_bytes(self.take_n()?))
     }
 
     fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64::from_le_bytes(self.take_n()?))
     }
 
     fn opt_u64(&mut self) -> Result<Option<u64>> {
@@ -817,5 +827,115 @@ mod tests {
         let mut buf = Vec::new();
         assert!(write_frame(&mut buf, &f).is_err());
         assert!(buf.is_empty(), "nothing written for an oversized frame");
+    }
+
+    /// Well-formed frames the fuzzer mutates: every tag, every
+    /// variable-length field shape.
+    fn fuzz_corpus() -> Vec<Vec<u8>> {
+        let frames = vec![
+            Frame::Hello { magic: MAGIC, version: PROTOCOL_VERSION },
+            Frame::HelloAck { version: PROTOCOL_VERSION },
+            Frame::Open { req: 1, session: 77 },
+            Frame::Feed { req: 2, session: 77, count_loss: true, tokens: vec![1, -2, 3, 4] },
+            Frame::Generate {
+                req: 3,
+                session: 77,
+                opts: GenOpts {
+                    seed_token: 42,
+                    max_tokens: 128,
+                    stop: Some(3),
+                    sampling: Sampling::TopP(0.9, 0.7),
+                    rng_seed: 7,
+                },
+            },
+            Frame::Cancel { req: 4, session: 77 },
+            Frame::Close { req: 5, session: 77 },
+            Frame::ExportCarry { req: 6, session: 77 },
+            Frame::ImportCarry { req: 7, session: 77, snap: snap() },
+            Frame::Stats { req: 8 },
+            Frame::OpenOk { req: 9, session: 1 << 40 },
+            Frame::FeedOk { req: 10, nll_sum: 12.5, count: 3.0, evicted: Some(5) },
+            Frame::Start { req: 11, evicted: None, fresh_carry: true },
+            Frame::Token { req: 12, token: -9 },
+            Frame::End { req: 13, outcome: EndOutcome::Failed("boom".into()) },
+            Frame::Carry { req: 14, snap: snap() },
+            Frame::ImportOk { req: 15, evicted: Some(2) },
+            Frame::Ack { req: 16 },
+            Frame::StatsOk { req: 17, version: 1, text: "# stlt-metrics v1\n".into() },
+            Frame::Error { req: 18, msg: "nope".into() },
+        ];
+        frames
+            .iter()
+            .map(|f| {
+                let mut buf = Vec::new();
+                write_frame(&mut buf, f).unwrap();
+                buf
+            })
+            .collect()
+    }
+
+    /// Deterministic decoder fuzz: splitmix64-driven bit flips, length
+    /// corruption, truncation, and tag swaps over framed bytes. The
+    /// contract under test is total: [`read_frame`]/[`Frame::decode`]
+    /// return `Ok`/`Err` on arbitrary input, never panic and never
+    /// trust a forged length for an allocation. Iterations come from
+    /// `STLT_FUZZ_ITERS` (CI nightly runs a long sweep; the tier-1
+    /// default keeps the test fast) and the seed is fixed, so every
+    /// failure is reproducible by iteration count alone.
+    #[test]
+    fn decoder_survives_deterministic_fuzz() {
+        let iters: u64 = std::env::var("STLT_FUZZ_ITERS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(2_000);
+        let corpus = fuzz_corpus();
+        let mut rng = 0x57A7_F00D_u64;
+        let mut step = || crate::util::chk::splitmix64(&mut rng);
+        for _ in 0..iters {
+            let mut buf = corpus[(step() % corpus.len() as u64) as usize].clone();
+            for _ in 0..=(step() % 3) {
+                // every arm guards on the current length: an earlier
+                // truncation may have left fewer than 4 (or 0) bytes
+                match step() % 4 {
+                    // bit flip anywhere, length prefix included
+                    0 if !buf.is_empty() => {
+                        let i = (step() % buf.len() as u64) as usize;
+                        buf[i] ^= 1 << (step() % 8);
+                    }
+                    // length-prefix corruption: zero, nearby, huge
+                    1 if buf.len() >= 4 => {
+                        let claim: u32 = match step() % 4 {
+                            0 => 0,
+                            1 => (buf.len() as u32)
+                                .wrapping_sub(8)
+                                .wrapping_add((step() % 9) as u32),
+                            2 => MAX_FRAME as u32 + 1,
+                            _ => step() as u32,
+                        };
+                        buf[..4].copy_from_slice(&claim.to_le_bytes());
+                    }
+                    // truncation at an arbitrary point
+                    2 => {
+                        buf.truncate((step() % (buf.len() as u64 + 1)) as usize);
+                    }
+                    // tag swap: another valid tag over this payload
+                    3 if buf.len() > 4 => {
+                        let tags = [
+                            TAG_HELLO, TAG_OPEN, TAG_FEED, TAG_GENERATE, TAG_IMPORT,
+                            TAG_STATS, TAG_FEED_OK, TAG_START, TAG_END, TAG_CARRY,
+                            TAG_STATS_OK, TAG_ERROR, 0x42,
+                        ];
+                        buf[4] = tags[(step() % tags.len() as u64) as usize];
+                    }
+                    _ => {}
+                }
+            }
+            // Total: any outcome but a panic (or a forged-length alloc
+            // bomb, which count() and MAX_FRAME preclude) is correct.
+            let _ = read_frame(&mut buf.as_slice());
+            if buf.len() > 4 {
+                let _ = Frame::decode(&buf[4..]);
+            }
+        }
     }
 }

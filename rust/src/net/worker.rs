@@ -21,8 +21,6 @@
 //!   leaking a pinned session (pinned by `tests/native_wire.rs`).
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 use std::time::Duration;
 
@@ -30,6 +28,8 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::session::StreamItem;
 use crate::coordinator::{CarrySnapshot, FeedResult, GenOpts, Server, SessionHandle, TokenStream};
+use crate::util::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::util::sync::{mpsc, Arc, Mutex};
 
 use super::wire::{self, EndOutcome, Frame};
 use super::{Listener, Stream};
@@ -78,7 +78,7 @@ impl WorkerNode {
 
 impl Node for WorkerNode {
     fn node_open(&self, desired: u64) -> Result<u64> {
-        let mut active = self.active.lock().unwrap();
+        let mut active = self.active.lock().unwrap_or_else(|e| e.into_inner());
         let handle = if desired == 0 {
             self.server.open_session()
         } else {
@@ -110,7 +110,7 @@ impl Node for WorkerNode {
     }
 
     fn node_close(&self, id: u64) -> Result<()> {
-        match self.active.lock().unwrap().remove(&id) {
+        match self.active.lock().unwrap_or_else(|e| e.into_inner()).remove(&id) {
             // close() releases the carry; a released session's
             // in-flight generation ends Cancelled (the PR-5 path)
             Some(handle) => handle.close(),
@@ -148,6 +148,9 @@ impl WireServer {
     }
 
     fn stop_and_join(&mut self) {
+        // ORDERING: Relaxed — pure stop flag; the accept loop re-polls
+        // it every iteration and publishes nothing through it. join()
+        // below is the real synchronization edge.
         self.stop.store(true, Ordering::Relaxed);
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
@@ -181,6 +184,8 @@ pub(crate) fn spawn_node(
     let accept_thread = thread::Builder::new()
         .name(format!("stlt-{label}-accept"))
         .spawn(move || {
+            // ORDERING: Relaxed — see stop_and_join(): a late read only
+            // delays shutdown by one accept-poll interval.
             while !stop_t.load(Ordering::Relaxed) {
                 match listener.accept() {
                     Ok(stream) => {
@@ -199,8 +204,7 @@ pub(crate) fn spawn_node(
                     }
                 }
             }
-        })
-        .expect("spawn accept thread");
+        })?;
     Ok(WireServer { addr, stop, accept_thread: Some(accept_thread) })
 }
 
@@ -210,6 +214,8 @@ struct InflightGuard(Arc<AtomicUsize>);
 
 impl Drop for InflightGuard {
     fn drop(&mut self) {
+        // ORDERING: Relaxed — pairs with the CAS in admit_inflight;
+        // the counter is a pure admission cap and publishes no data.
         self.0.fetch_sub(1, Ordering::Relaxed);
     }
 }
@@ -262,8 +268,7 @@ fn conn_loop(node: &Arc<dyn Node>, stream: Stream) -> Result<()> {
     let wstream = stream.try_clone()?;
     let writer = thread::Builder::new()
         .name("stlt-conn-writer".into())
-        .spawn(move || write_loop(wstream, out_rx))
-        .expect("spawn writer thread");
+        .spawn(move || write_loop(wstream, out_rx))?;
 
     // Sessions this connection opened; released on any exit.
     let mut owned: std::collections::HashSet<u64> = std::collections::HashSet::new();
@@ -437,11 +442,19 @@ fn conn_loop(node: &Arc<dyn Node>, stream: Stream) -> Result<()> {
 }
 
 fn admit_inflight(inflight: &Arc<AtomicUsize>) -> bool {
-    if inflight.load(Ordering::Relaxed) >= MAX_INFLIGHT {
-        return false;
-    }
-    inflight.fetch_add(1, Ordering::Relaxed);
-    true
+    // ORDERING: Relaxed — the counter is a pure admission cap and
+    // publishes no other memory. The single CAS (rather than the old
+    // load-then-fetch_add, which could overshoot under concurrent
+    // admits) is what makes MAX_INFLIGHT exact.
+    inflight
+        .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |n| {
+            if n < MAX_INFLIGHT {
+                Some(n + 1)
+            } else {
+                None
+            }
+        })
+        .is_ok()
 }
 
 fn spawn_request<F: FnOnce() + Send + 'static>(f: F) {
@@ -522,4 +535,98 @@ fn write_loop(stream: Stream, rx: mpsc::Receiver<Frame>) {
         }
     }
     let _ = w.flush();
+}
+
+/// Model-check the writer-thread protocol (build with
+/// `RUSTFLAGS="--cfg model_check"`): producers push frames through the
+/// bounded channel while the writer drains in [`write_loop`]'s
+/// recv-then-burst shape, and teardown follows [`conn_loop`]'s
+/// drop-senders-then-join order. The checker proves backpressure never
+/// wedges — including when the socket dies mid-stream — and the mutant
+/// pins that joining the writer *before* dropping the reader's sender
+/// is the deadlock the real teardown comment warns about.
+#[cfg(all(test, model_check))]
+mod model_check {
+    use crate::util::chk::{self, Config};
+    use crate::util::sync::atomic::{AtomicUsize, Ordering};
+    use crate::util::sync::{mpsc, Arc};
+
+    /// The writer side of [`super::write_loop`], reduced to its visible
+    /// operations: block for one frame, burst-drain the rest, discard
+    /// (but keep draining) once the socket is dead. `u32` frames stand
+    /// in for [`super::Frame`]; a frame >= `dead_after` kills the
+    /// "socket".
+    fn writer_model(rx: mpsc::Receiver<u32>, dead_after: u32, drained: Arc<AtomicUsize>) {
+        let mut dead = false;
+        loop {
+            let mut frame = match rx.recv() {
+                Ok(f) => f,
+                Err(_) => break, // all senders gone
+            };
+            loop {
+                drained.fetch_add(1, Ordering::SeqCst);
+                if frame >= dead_after {
+                    dead = true; // write failed; keep draining
+                }
+                match rx.try_recv() {
+                    Ok(next) => frame = next,
+                    Err(_) => break,
+                }
+            }
+            let _ = dead; // flush-or-discard; no visible op either way
+        }
+    }
+
+    /// Correct protocol: a producer saturates the bounded window (4
+    /// sends through capacity 2, so backpressure blocking is explored),
+    /// the socket dies halfway, and teardown drops every sender before
+    /// joining the writer. Every frame must still be drained — a dead
+    /// socket discards output but never blocks producers.
+    #[test]
+    fn writer_queue_protocol_holds() {
+        let report = chk::check(Config::default(), || {
+            let (tx, rx) = mpsc::sync_channel::<u32>(2);
+            let drained = Arc::new(AtomicUsize::new(0));
+            let d2 = Arc::clone(&drained);
+            let writer = chk::spawn(move || writer_model(rx, 2, d2));
+            let producer = chk::spawn(move || {
+                for i in 0..4u32 {
+                    tx.send(i).expect("writer holds the receiver until senders drop");
+                }
+                // tx drops here = the last producer going away
+            });
+            producer.join();
+            // conn_loop teardown order: every sender gone, then join.
+            writer.join();
+            assert_eq!(drained.load(Ordering::SeqCst), 4, "dead socket must still drain");
+        });
+        report.assert_ok();
+        assert!(report.dfs_complete, "writer protocol should be exhaustible");
+    }
+
+    /// Mutant: join the writer while the reader's own sender is still
+    /// alive (the order conn_loop must NOT use). The writer never sees
+    /// senders-gone, recv blocks forever, and the joining thread blocks
+    /// behind it — a deadlock in every schedule, which the checker must
+    /// report on the first one.
+    #[test]
+    fn checker_catches_join_before_sender_drop() {
+        let report = chk::check(Config::default(), || {
+            let (tx, rx) = mpsc::sync_channel::<u32>(2);
+            let drained = Arc::new(AtomicUsize::new(0));
+            let writer = chk::spawn(move || writer_model(rx, u32::MAX, drained));
+            let producer_tx = tx.clone();
+            let producer = chk::spawn(move || {
+                for i in 0..2u32 {
+                    let _ = producer_tx.send(i);
+                }
+            });
+            producer.join();
+            // BUG: the reader-side sender `tx` is still live here.
+            writer.join();
+            drop(tx);
+        });
+        let f = report.assert_fails();
+        assert!(f.message.contains("deadlock"), "{}", f.message);
+    }
 }

@@ -24,10 +24,17 @@
 //!   `Histogram::quantile`.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::metrics::stats::{Histogram, HIST_SLOTS};
+use crate::util::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::util::sync::{Arc, Mutex, OnceLock};
+
+// ORDERING audit note (PR 9): every atomic in this module carries an
+// independent monotonic count or last-write-wins value; none publishes
+// other memory. Cross-thread *handle* visibility (publish/rebind, the
+// case that would be load-bearing) is ordered by the `table()` Mutex,
+// not by these atomics — so Relaxed is correct throughout, and each
+// site below documents why.
 
 static METRICS_ON: AtomicBool = AtomicBool::new(true);
 
@@ -35,6 +42,8 @@ static METRICS_ON: AtomicBool = AtomicBool::new(true);
 /// disabled-path cost of any instrumented call site.
 #[inline]
 pub fn metrics_on() -> bool {
+    // ORDERING: Relaxed — independent on/off knob; a stale read only
+    // drops or admits a few metric updates around the toggle.
     METRICS_ON.load(Ordering::Relaxed)
 }
 
@@ -42,6 +51,8 @@ pub fn metrics_on() -> bool {
 /// disabled, counters/gauges/histograms silently drop updates; the
 /// overhead bench row compares decode throughput across this switch.
 pub fn set_metrics(on: bool) {
+    // ORDERING: Relaxed — see metrics_on(); nothing is gated on this
+    // flag beyond the update itself.
     METRICS_ON.store(on, Ordering::Relaxed);
 }
 
@@ -62,11 +73,15 @@ impl Counter {
     #[inline]
     pub fn add(&self, n: u64) {
         if metrics_on() {
+            // ORDERING: Relaxed — a count with no associated payload;
+            // atomicity (no lost increments) is all that is needed.
             self.0.fetch_add(n, Ordering::Relaxed);
         }
     }
 
     pub fn get(&self) -> u64 {
+        // ORDERING: Relaxed — render-time snapshot; exactness at a
+        // given instant is not part of the contract.
         self.0.load(Ordering::Relaxed)
     }
 }
@@ -83,6 +98,8 @@ impl Gauge {
     #[inline]
     pub fn set(&self, v: f64) {
         if metrics_on() {
+            // ORDERING: Relaxed — last-write-wins value, publishes
+            // nothing else.
             self.0.store(v.to_bits(), Ordering::Relaxed);
         }
     }
@@ -95,11 +112,14 @@ impl Gauge {
     pub fn set_max(&self, v: f64) {
         if metrics_on() {
             debug_assert!(v >= 0.0);
+            // ORDERING: Relaxed — running max; the RMW is atomic and
+            // no other memory rides on it.
             self.0.fetch_max(v.to_bits(), Ordering::Relaxed);
         }
     }
 
     pub fn get(&self) -> f64 {
+        // ORDERING: Relaxed — render-time snapshot read.
         f64::from_bits(self.0.load(Ordering::Relaxed))
     }
 }
@@ -132,17 +152,21 @@ impl Hist {
     pub fn record(&self, seconds: f64) {
         if metrics_on() {
             let b = geometry().bucket_of(seconds);
+            // ORDERING: Relaxed — independent per-slot count.
             self.buckets[b].fetch_add(1, Ordering::Relaxed);
         }
     }
 
     pub fn count(&self) -> u64 {
+        // ORDERING: Relaxed — snapshot read; slots read at slightly
+        // different instants is inherent to a lock-free histogram.
         self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
     }
 
     /// Materialize the current counts as a [`Histogram`] for quantile /
     /// summary queries.
     pub fn snapshot(&self) -> Histogram {
+        // ORDERING: Relaxed — see count(): per-slot snapshot reads.
         Histogram::from_buckets(self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect())
     }
 
@@ -234,6 +258,7 @@ impl LazyCounter {
     #[inline]
     pub fn add(&self, n: u64) {
         if metrics_on() {
+            // ORDERING: Relaxed — same contract as Counter::add.
             self.get().0.fetch_add(n, Ordering::Relaxed);
         }
     }

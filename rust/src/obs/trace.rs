@@ -12,22 +12,25 @@
 //! the oldest events are overwritten and counted in
 //! `stlt.dropped_events` metadata so truncation is never silent.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
-
 use crate::util::logging::timebase;
+use crate::util::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::util::sync::{Arc, Mutex, OnceLock};
 
 static TRACE_ON: AtomicBool = AtomicBool::new(false);
 
 /// Is span tracing enabled? One relaxed load on the disabled path.
 #[inline]
 pub fn trace_on() -> bool {
+    // ORDERING: Relaxed — on/off knob only; span data is published via
+    // each ring's own Mutex, not via this flag. A stale read merely
+    // starts/stops recording one span late.
     TRACE_ON.load(Ordering::Relaxed)
 }
 
 /// Globally enable/disable span collection (default: disabled; `stlt
 /// serve --trace FILE` and the `STLT_TRACE` env switch it on).
 pub fn set_tracing(on: bool) {
+    // ORDERING: Relaxed — see trace_on(): the flag gates no other memory.
     TRACE_ON.store(on, Ordering::Relaxed);
 }
 
@@ -76,6 +79,8 @@ static NEXT_TID: AtomicU64 = AtomicU64::new(1);
 thread_local! {
     static LOCAL: Arc<ThreadRing> = {
         let tr = Arc::new(ThreadRing {
+            // ORDERING: Relaxed — the counter only needs uniqueness;
+            // the ring itself is published through rings()'s Mutex.
             tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
             ring: Mutex::new(Ring { events: Vec::new(), head: 0, dropped: 0 }),
         });

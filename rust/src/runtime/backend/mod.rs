@@ -15,12 +15,11 @@
 //! entry points in `exec.rs`, the coordinator) is backend-agnostic: no
 //! `xla::` type appears in any public API outside `backend/xla.rs`.
 
-use std::sync::Arc;
-
 use anyhow::{bail, Result};
 
 use crate::runtime::artifact::Entry;
 use crate::runtime::tensor::Tensor;
+use crate::util::sync::Arc;
 
 #[cfg(feature = "native")]
 pub mod native;

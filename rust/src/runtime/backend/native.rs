@@ -11,14 +11,13 @@
 //! couple only through the final gradient mean), so they fan out
 //! across [`crate::util::threadpool::ThreadPool`].
 
-use std::sync::Arc;
-
 use anyhow::{bail, Context, Result};
 
 use crate::runtime::artifact::Entry;
 use crate::runtime::backend::{Backend, DeviceBuffer, Executable};
 use crate::runtime::native_stlt::{nll_of, StltModel, StltPlan};
 use crate::runtime::tensor::Tensor;
+use crate::util::sync::Arc;
 use crate::util::threadpool::{self, parallel_map, ThreadPool};
 
 /// Host-resident "device" buffer: the native device *is* the host.

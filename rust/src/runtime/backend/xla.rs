@@ -8,13 +8,12 @@
 //! Pattern follows /opt/xla-example/load_hlo: HLO *text* interchange,
 //! `return_tuple=True` on the python side -> tuple literal unwrap here.
 
-use std::sync::Arc;
-
 use anyhow::{bail, Context, Result};
 
 use crate::runtime::artifact::Entry;
 use crate::runtime::backend::{Backend, DeviceBuffer, Executable};
 use crate::runtime::tensor::{DType, Tensor};
+use crate::util::sync::Arc;
 
 pub struct XlaBackend {
     client: xla::PjRtClient,

@@ -5,7 +5,6 @@
 //! both backends share one code path).
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -13,6 +12,7 @@ use anyhow::{bail, Result};
 use crate::runtime::artifact::Entry;
 use crate::runtime::backend::{Backend, BackendKind, DeviceBuffer, Executable};
 use crate::runtime::tensor::Tensor;
+use crate::util::sync::{Arc, Mutex};
 
 pub struct Runtime {
     backend: Box<dyn Backend>,

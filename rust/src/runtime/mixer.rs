@@ -41,12 +41,11 @@
 //! feature-independent [`ModelConfig::state_lens`] /
 //! [`ModelConfig::carry_lens`], which the manifest entry builders use.
 
-use std::sync::Arc;
-
 use anyhow::{bail, Result};
 
 use crate::runtime::artifact::ModelConfig;
 use crate::runtime::native_stlt::{lu_node_step, NodeParams};
+use crate::util::sync::Arc;
 
 static SEGMENTS_REPLAYED: crate::obs::LazyCounter =
     crate::obs::LazyCounter::new("train/segments_replayed");

@@ -49,8 +49,6 @@
 //! whole row acausally; the causal running mean is the documented
 //! deviation that makes adaptive models streamable at all.)
 
-use std::sync::{Arc, Mutex, Weak};
-
 use anyhow::{anyhow, bail, Result};
 
 use crate::interpret::{total_params, trunk_layout, Leaf};
@@ -58,6 +56,7 @@ use crate::runtime::artifact::ModelConfig;
 use crate::runtime::mixer::{mixer_from_config, Mixer};
 use crate::util::linalg;
 use crate::util::rng::Rng;
+use crate::util::sync::{Arc, Mutex, Weak};
 use crate::util::threadpool::scatter_rows;
 
 /// Row count below which the row-parallel head/FFN paths run inline —

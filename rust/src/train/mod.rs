@@ -61,6 +61,7 @@ pub use optim::{adamw_step, AdamHp};
 
 use crate::runtime::artifact::ModelConfig;
 use crate::runtime::native_stlt::StltModel;
+use crate::util::sync::Arc;
 use crate::util::threadpool::{parallel_map, ThreadPool};
 
 /// Gumbel-sigmoid relaxation temperature at a given training step:
@@ -117,7 +118,7 @@ pub fn batch_loss_and_grad(
     let ce_scale = 1.0 / (batch * n) as f32;
     let reg_scale = 1.0 / batch as f32;
     let model_c = model.clone();
-    let tokens_c: std::sync::Arc<Vec<i32>> = std::sync::Arc::new(tokens.to_vec());
+    let tokens_c: Arc<Vec<i32>> = Arc::new(tokens.to_vec());
     let rows = parallel_map(pool, batch, move |i| {
         // per-row noise stream: splitmix-style index hash into the seed
         let row_noise = noise.map(|ns| TrainNoise {

@@ -1,0 +1,1462 @@
+//! Deterministic concurrency model checker ("chk").
+//!
+//! Runs a closure-defined multi-thread protocol under a cooperative
+//! scheduler: every model thread is a real OS thread, but exactly one
+//! runs at a time, and control transfers only at *visible operations*
+//! (lock/unlock, condvar wait/notify, channel send/recv, atomic ops —
+//! the primitives in [`prim`], which `util::sync` re-exports when the
+//! crate is built with `--cfg model_check`). Because every scheduling
+//! decision happens at an explicit choice point, the checker can
+//!
+//! - enumerate interleavings exhaustively via stateless DFS with a
+//!   *bounded number of preemptions* (CHESS-style: most concurrency
+//!   bugs manifest with <= 2 preemptions, and bounding keeps the
+//!   schedule space tractable),
+//! - follow that with splitmix64-seeded random schedules at an
+//!   unbounded preemption budget to probe beyond the DFS bound,
+//! - detect deadlock and lost wakeups directly: if no thread is
+//!   runnable, none is waiting on a modeled timeout, and not all have
+//!   finished, the schedule is stuck and is reported with every
+//!   blocked thread's operation,
+//! - report any panic (assertion failure) inside a model thread as a
+//!   failing schedule together with the choice trace that produced it.
+//!
+//! Protocol closures must be deterministic: given the same schedule
+//! they must perform the same sequence of visible operations (no wall
+//! clock, no OS randomness, no HashMap-iteration-order-dependent
+//! branching). Timed waits (`Condvar::wait_timeout`) are modeled
+//! logically: a timeout can only fire when the system is otherwise
+//! quiescent, which keeps the state space small and matches the
+//! "timeouts are a liveness escape hatch" role they play in the
+//! serving substrate. `prim` locks must not be acquired inside `Drop`
+//! impls of protocol state (drops run during unwinding, where the
+//! scheduler refuses to park a thread).
+//!
+//! This module is always compiled (its own unit tests run in tier-1);
+//! only the re-export through `util::sync` is gated on `model_check`.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread;
+
+/// Knobs for [`check`]. `Default` is sized for protocol tests with
+/// 2-4 threads and a handful of operations each.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Preemption budget for the exhaustive DFS phase: scheduling away
+    /// from a still-runnable thread costs one preemption; once the
+    /// budget is spent the running thread continues until it blocks or
+    /// finishes. 2 catches the overwhelming majority of real bugs.
+    pub preemption_bound: usize,
+    /// Hard cap on DFS schedules (the DFS stops early if the bounded
+    /// space is exhausted first, which `Report::dfs_complete` records).
+    pub max_schedules: usize,
+    /// Number of random schedules to run after DFS, each with an
+    /// unbounded preemption budget.
+    pub random_schedules: usize,
+    /// Seed for the splitmix64 stream that drives random schedules.
+    pub seed: u64,
+    /// Per-schedule step cap: exceeding it is reported as a livelock.
+    pub max_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Config {
+        Config {
+            preemption_bound: 2,
+            max_schedules: 20_000,
+            random_schedules: 64,
+            seed: 0x5113_b0c4_u64,
+            max_steps: 20_000,
+        }
+    }
+}
+
+/// A failing schedule: what went wrong plus the choice trace
+/// (`t<id>:<op>` per scheduling decision) that reproduces it.
+#[derive(Clone, Debug)]
+pub struct Failure {
+    pub message: String,
+    pub trace: String,
+}
+
+/// Outcome of [`check`].
+#[derive(Clone, Debug)]
+pub struct Report {
+    /// Total schedules executed (DFS + random).
+    pub schedules: usize,
+    /// True iff the DFS exhausted every schedule at the preemption
+    /// bound (rather than stopping at `max_schedules`).
+    pub dfs_complete: bool,
+    pub failure: Option<Failure>,
+}
+
+impl Report {
+    /// Panics (failing the enclosing test) if any schedule failed.
+    pub fn assert_ok(&self) {
+        if let Some(f) = &self.failure {
+            panic!(
+                "model check failed after {} schedule(s): {}\nschedule: {}",
+                self.schedules, f.message, f.trace
+            );
+        }
+    }
+
+    /// Returns the failure, panicking if every schedule passed — used
+    /// to pin the checker itself against deliberately-broken mutants.
+    pub fn assert_fails(&self) -> &Failure {
+        match &self.failure {
+            Some(f) => f,
+            None => panic!(
+                "model check unexpectedly passed all {} schedule(s) (dfs_complete={})",
+                self.schedules, self.dfs_complete
+            ),
+        }
+    }
+}
+
+/// splitmix64: tiny, high-quality 64-bit PRNG step (public domain
+/// constants; same finalizer the session router uses for placement
+/// hashing). Advances `state` and returns the next value.
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler internals
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Status {
+    Runnable,
+    Running,
+    Blocked,
+    Finished,
+}
+
+struct ThreadSt {
+    status: Status,
+    /// Object this thread is blocked on (valid while `Blocked`).
+    blocked_on: u64,
+    /// Blocked with a timeout escape (a modeled `wait_timeout`).
+    timed: bool,
+    /// Set by the controller when a timed block is woken by its
+    /// timeout firing rather than a real notify.
+    woke_by_timeout: bool,
+    /// The operation this thread is at (for traces and deadlock
+    /// reports).
+    desc: &'static str,
+    /// Object joiners block on until this thread finishes.
+    join_obj: u64,
+}
+
+impl ThreadSt {
+    fn new(desc: &'static str) -> ThreadSt {
+        ThreadSt {
+            status: Status::Runnable,
+            blocked_on: 0,
+            timed: false,
+            woke_by_timeout: false,
+            desc,
+            join_obj: fresh_obj(),
+        }
+    }
+}
+
+struct ChoicePoint {
+    /// Number of candidates at this decision.
+    n: usize,
+    /// Which one was taken (index into the sorted candidate list).
+    chosen: usize,
+    tid: usize,
+    desc: &'static str,
+}
+
+struct SchedState {
+    threads: Vec<ThreadSt>,
+    handles: Vec<Option<thread::JoinHandle<()>>>,
+    /// The one thread currently allowed to run (None while the
+    /// controller is choosing).
+    active: Option<usize>,
+    /// Last scheduled thread, for preemption accounting.
+    prev: Option<usize>,
+    preemptions: usize,
+    trace: Vec<ChoicePoint>,
+    steps: usize,
+    failure: Option<String>,
+    /// Set by the controller to tear the schedule down: parked threads
+    /// wake, unwind with `ChkAbort`, and finish.
+    aborting: bool,
+}
+
+pub(crate) struct Session {
+    st: Mutex<SchedState>,
+    cv: Condvar,
+}
+
+/// Panic payload used to unwind model threads during teardown; the
+/// thread wrapper swallows it without recording a failure.
+struct ChkAbort;
+
+thread_local! {
+    static CTX: std::cell::RefCell<Option<(Arc<Session>, usize)>> =
+        std::cell::RefCell::new(None);
+}
+
+/// The (session, tid) of the calling thread, if it is a model thread.
+pub(crate) fn session() -> Option<(Arc<Session>, usize)> {
+    CTX.with(|c| c.borrow().clone())
+}
+
+/// True iff the calling thread is inside a model-check session; the
+/// `prim` wrappers use this to fall back to plain `std::sync`.
+pub(crate) fn in_session() -> bool {
+    CTX.with(|c| c.borrow().is_some())
+}
+
+/// If on a model thread, hand the scheduler a decision point labelled
+/// `desc`; otherwise a no-op. Used by the atomic wrappers.
+pub(crate) fn op_point(desc: &'static str) {
+    if let Some((sess, me)) = session() {
+        sess.yield_op(me, desc);
+    }
+}
+
+static NEXT_OBJ: AtomicU64 = AtomicU64::new(1);
+
+/// Fresh process-unique id for a blockable object (mutex, condvar,
+/// channel, join handle).
+pub(crate) fn fresh_obj() -> u64 {
+    NEXT_OBJ.fetch_add(1, Ordering::SeqCst)
+}
+
+impl Session {
+    fn lock(&self) -> MutexGuard<'_, SchedState> {
+        self.st.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Core control transfer: mark this thread Runnable (plain yield)
+    /// or Blocked on an object, wake the controller, and sleep until
+    /// scheduled again. Returns true iff a timed block was ended by
+    /// its timeout firing. No-op while unwinding (drops must never
+    /// park; the schedule is ending anyway).
+    fn deschedule(&self, tid: usize, desc: &'static str, block: Option<(u64, bool)>) -> bool {
+        if thread::panicking() {
+            return false;
+        }
+        let mut st = self.lock();
+        if st.aborting {
+            drop(st);
+            std::panic::panic_any(ChkAbort);
+        }
+        {
+            let t = &mut st.threads[tid];
+            t.desc = desc;
+            match block {
+                Some((obj, timed)) => {
+                    t.status = Status::Blocked;
+                    t.blocked_on = obj;
+                    t.timed = timed;
+                    t.woke_by_timeout = false;
+                }
+                None => t.status = Status::Runnable,
+            }
+        }
+        st.active = None;
+        self.cv.notify_all();
+        loop {
+            if st.aborting {
+                drop(st);
+                std::panic::panic_any(ChkAbort);
+            }
+            if st.active == Some(tid) {
+                break;
+            }
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        let t = &mut st.threads[tid];
+        t.status = Status::Running;
+        let fired = t.woke_by_timeout;
+        t.woke_by_timeout = false;
+        fired
+    }
+
+    /// A plain scheduling point before a visible operation.
+    pub(crate) fn yield_op(&self, tid: usize, desc: &'static str) {
+        self.deschedule(tid, desc, None);
+    }
+
+    /// Park until `obj` is signalled (or, when `timed`, until the
+    /// controller fires the timeout). Returns true iff timed out.
+    pub(crate) fn block_on(&self, tid: usize, obj: u64, desc: &'static str, timed: bool) -> bool {
+        self.deschedule(tid, desc, Some((obj, timed)))
+    }
+
+    /// Make every thread blocked on `obj` runnable again.
+    pub(crate) fn unblock_all(&self, obj: u64) {
+        let mut st = self.lock();
+        for t in st.threads.iter_mut() {
+            if t.status == Status::Blocked && t.blocked_on == obj {
+                t.status = Status::Runnable;
+            }
+        }
+    }
+
+    /// Make the lowest-tid thread blocked on `obj` runnable again.
+    pub(crate) fn unblock_one(&self, obj: u64) {
+        let mut st = self.lock();
+        for t in st.threads.iter_mut() {
+            if t.status == Status::Blocked && t.blocked_on == obj {
+                t.status = Status::Runnable;
+                break;
+            }
+        }
+    }
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+/// Body of every model thread: register TLS, wait to be scheduled the
+/// first time, run the closure, then mark Finished and wake joiners
+/// and the controller.
+fn thread_main<F: FnOnce()>(sess: Arc<Session>, tid: usize, f: F) {
+    CTX.with(|c| *c.borrow_mut() = Some((Arc::clone(&sess), tid)));
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        {
+            let mut st = sess.lock();
+            loop {
+                if st.aborting {
+                    drop(st);
+                    std::panic::panic_any(ChkAbort);
+                }
+                if st.active == Some(tid) {
+                    break;
+                }
+                st = sess.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+            st.threads[tid].status = Status::Running;
+        }
+        f();
+    }));
+    let mut st = sess.lock();
+    if let Err(p) = outcome {
+        if p.downcast_ref::<ChkAbort>().is_none() && st.failure.is_none() {
+            st.failure = Some(format!("thread t{tid} panicked: {}", panic_message(&*p)));
+        }
+    }
+    let join_obj = st.threads[tid].join_obj;
+    st.threads[tid].status = Status::Finished;
+    for t in st.threads.iter_mut() {
+        if t.status == Status::Blocked && t.blocked_on == join_obj {
+            t.status = Status::Runnable;
+        }
+    }
+    if st.active == Some(tid) {
+        st.active = None;
+    }
+    sess.cv.notify_all();
+    CTX.with(|c| *c.borrow_mut() = None);
+}
+
+/// Handle to a model thread spawned with [`spawn`].
+pub struct JoinHandle {
+    sess: Arc<Session>,
+    tid: usize,
+}
+
+impl JoinHandle {
+    /// Block (as a modeled operation) until the thread finishes. Any
+    /// panic in the thread is already recorded as a schedule failure,
+    /// so join itself never propagates one.
+    pub fn join(self) {
+        let (sess, me) = session().expect("chk::JoinHandle::join outside a model-check session");
+        sess.yield_op(me, "join");
+        loop {
+            let (done, obj) = {
+                let st = sess.lock();
+                let t = &st.threads[self.tid];
+                (t.status == Status::Finished, t.join_obj)
+            };
+            if done {
+                return;
+            }
+            sess.block_on(me, obj, "join", false);
+        }
+    }
+}
+
+/// Spawn a model thread inside the current session. Panics if called
+/// from outside a session (model threads only exist under [`check`]).
+pub fn spawn<F: FnOnce() + Send + 'static>(f: F) -> JoinHandle {
+    let (sess, me) = session().expect("chk::spawn outside a model-check session");
+    let tid;
+    {
+        let mut st = sess.lock();
+        tid = st.threads.len();
+        st.threads.push(ThreadSt::new("spawned"));
+        let s2 = Arc::clone(&sess);
+        let h = thread::Builder::new()
+            .name(format!("chk-{tid}"))
+            .spawn(move || thread_main(s2, tid, f))
+            .expect("spawn chk model thread");
+        st.handles.push(Some(h));
+    }
+    // Spawning is itself a visible step: give the scheduler the chance
+    // to run the child before the parent's next operation.
+    sess.yield_op(me, "spawn");
+    JoinHandle { sess, tid }
+}
+
+struct RunOutcome {
+    trace: Vec<ChoicePoint>,
+    failure: Option<String>,
+}
+
+/// Execute one schedule: `replay` pins the first choices (DFS), then
+/// `rng` (if any) picks randomly, then the default is candidate 0.
+fn run_one(
+    cfg: &Config,
+    f: Arc<dyn Fn() + Send + Sync>,
+    replay: &[usize],
+    mut rng: Option<u64>,
+    bound: usize,
+) -> RunOutcome {
+    let sess = Arc::new(Session {
+        st: Mutex::new(SchedState {
+            threads: vec![ThreadSt::new("start")],
+            handles: Vec::new(),
+            active: None,
+            prev: None,
+            preemptions: 0,
+            trace: Vec::new(),
+            steps: 0,
+            failure: None,
+            aborting: false,
+        }),
+        cv: Condvar::new(),
+    });
+    {
+        let mut st = sess.lock();
+        let s2 = Arc::clone(&sess);
+        let g = Arc::clone(&f);
+        let h = thread::Builder::new()
+            .name("chk-0".to_string())
+            .spawn(move || thread_main(s2, 0, move || g()))
+            .expect("spawn chk root thread");
+        st.handles.push(Some(h));
+    }
+
+    let mut depth = 0usize;
+    let mut st = sess.lock();
+    loop {
+        while st.active.is_some() {
+            st = sess.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        if st.failure.is_some() {
+            break;
+        }
+        let runnable: Vec<usize> = st
+            .threads
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.status == Status::Runnable)
+            .map(|(i, _)| i)
+            .collect();
+        // (cands, true) = schedule one of them; (cands, false) = fire
+        // the timeout of one of them (only when nothing is runnable).
+        let (cands, run) = if runnable.is_empty() {
+            if st.threads.iter().all(|t| t.status == Status::Finished) {
+                break; // schedule complete
+            }
+            let timed: Vec<usize> = st
+                .threads
+                .iter()
+                .enumerate()
+                .filter(|(_, t)| t.status == Status::Blocked && t.timed)
+                .map(|(i, _)| i)
+                .collect();
+            if timed.is_empty() {
+                let stuck: Vec<String> = st
+                    .threads
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, t)| t.status == Status::Blocked)
+                    .map(|(i, t)| format!("t{i} in {}", t.desc))
+                    .collect();
+                st.failure = Some(format!(
+                    "deadlock (possible lost wakeup): no runnable thread; blocked: {}",
+                    stuck.join(", ")
+                ));
+                break;
+            }
+            (timed, false)
+        } else {
+            let mut cands = runnable;
+            if let Some(p) = st.prev {
+                // Preemption bounding: once the budget is spent, a
+                // still-runnable previous thread keeps running.
+                if st.preemptions >= bound && cands.contains(&p) {
+                    cands = vec![p];
+                }
+            }
+            (cands, true)
+        };
+        let chosen = if depth < replay.len() {
+            replay[depth].min(cands.len() - 1)
+        } else if let Some(s) = rng.as_mut() {
+            (splitmix64(s) % cands.len() as u64) as usize
+        } else {
+            0
+        };
+        depth += 1;
+        let tid = cands[chosen];
+        if !run {
+            st.trace.push(ChoicePoint { n: cands.len(), chosen, tid, desc: "timeout" });
+            let t = &mut st.threads[tid];
+            t.status = Status::Runnable;
+            t.woke_by_timeout = true;
+            continue;
+        }
+        st.trace.push(ChoicePoint { n: cands.len(), chosen, tid, desc: st.threads[tid].desc });
+        if let Some(p) = st.prev {
+            if p != tid && st.threads[p].status == Status::Runnable {
+                st.preemptions += 1;
+            }
+        }
+        st.steps += 1;
+        if st.steps > cfg.max_steps {
+            st.failure = Some(format!(
+                "exceeded max_steps={} (livelock or non-terminating protocol)",
+                cfg.max_steps
+            ));
+            break;
+        }
+        st.active = Some(tid);
+        st.prev = Some(tid);
+        sess.cv.notify_all();
+    }
+    // Teardown: wake every parked thread; they unwind with ChkAbort.
+    st.aborting = true;
+    sess.cv.notify_all();
+    while !st.threads.iter().all(|t| t.status == Status::Finished) {
+        st = sess.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+    }
+    let failure = st.failure.take();
+    let trace = std::mem::take(&mut st.trace);
+    let handles: Vec<_> = st.handles.iter_mut().map(|h| h.take()).collect();
+    drop(st);
+    for h in handles.into_iter().flatten() {
+        let _ = h.join();
+    }
+    RunOutcome { trace, failure }
+}
+
+fn render_trace(trace: &[ChoicePoint]) -> String {
+    trace
+        .iter()
+        .map(|c| format!("t{}:{}", c.tid, c.desc))
+        .collect::<Vec<_>>()
+        .join(" -> ")
+}
+
+/// Model-check `protocol`: exhaustive bounded-preemption DFS followed
+/// by random schedules. The closure runs once per schedule as model
+/// thread t0 and may [`spawn`] further model threads; any panic,
+/// deadlock, lost wakeup, or livelock in any schedule is returned as a
+/// [`Failure`] with its reproducing choice trace.
+pub fn check<F>(cfg: Config, protocol: F) -> Report
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let f: Arc<dyn Fn() + Send + Sync> = Arc::new(protocol);
+    let mut schedules = 0usize;
+    let mut dfs_complete = false;
+    let mut replay: Vec<usize> = Vec::new();
+    while schedules < cfg.max_schedules {
+        let out = run_one(&cfg, Arc::clone(&f), &replay, None, cfg.preemption_bound);
+        schedules += 1;
+        if let Some(message) = out.failure {
+            return Report {
+                schedules,
+                dfs_complete: false,
+                failure: Some(Failure { message, trace: render_trace(&out.trace) }),
+            };
+        }
+        // Stateless DFS backtrack: bump the deepest choice that still
+        // has an unexplored sibling; done when none remains.
+        let mut tr = out.trace;
+        loop {
+            match tr.pop() {
+                None => {
+                    dfs_complete = true;
+                    break;
+                }
+                Some(cp) if cp.chosen + 1 < cp.n => {
+                    replay.clear();
+                    replay.extend(tr.iter().map(|c| c.chosen));
+                    replay.push(cp.chosen + 1);
+                    break;
+                }
+                Some(_) => {}
+            }
+        }
+        if dfs_complete {
+            break;
+        }
+    }
+    // Random phase: unbounded preemptions probe beyond the DFS bound.
+    let mut seed = cfg.seed;
+    for _ in 0..cfg.random_schedules {
+        let s = splitmix64(&mut seed);
+        let out = run_one(&cfg, Arc::clone(&f), &[], Some(s), usize::MAX);
+        schedules += 1;
+        if let Some(message) = out.failure {
+            return Report {
+                schedules,
+                dfs_complete,
+                failure: Some(Failure { message, trace: render_trace(&out.trace) }),
+            };
+        }
+    }
+    Report { schedules, dfs_complete, failure: None }
+}
+
+// ---------------------------------------------------------------------------
+// prim: model-aware drop-ins for the std::sync primitives the repo uses
+// ---------------------------------------------------------------------------
+
+/// Model-aware counterparts of the `std::sync` primitives the codebase
+/// uses. On a model thread every operation is a scheduling point and
+/// blocking is simulated; on any other thread they delegate straight
+/// to `std` (so production code built with `--cfg model_check` still
+/// behaves normally outside sessions). `util::sync` re-exports these
+/// under `model_check`; normal builds re-export `std::sync` itself.
+pub mod prim {
+    use std::ops::{Deref, DerefMut};
+    use std::sync::{LockResult, PoisonError, TryLockError};
+    use std::time::Duration;
+
+    use super::{fresh_obj, session};
+
+    /// Mirror of `std::sync::WaitTimeoutResult` (std's has no public
+    /// constructor, so the modeled `wait_timeout` needs its own).
+    pub struct WaitTimeoutResult(bool);
+
+    impl WaitTimeoutResult {
+        pub fn timed_out(&self) -> bool {
+            self.0
+        }
+    }
+
+    /// Lazily-assigned object id: `const fn new` parity with std means
+    /// ids cannot be drawn at construction, so 0 marks "unassigned"
+    /// and the first operation claims one (`fresh_obj` never returns
+    /// 0). Id *values* never influence scheduling decisions — they
+    /// only match blockers to wakers — so lazy assignment keeps
+    /// schedules deterministic.
+    fn lazy_obj_id(cell: &std::sync::atomic::AtomicU64) -> u64 {
+        use std::sync::atomic::Ordering::SeqCst;
+        let v = cell.load(SeqCst);
+        if v != 0 {
+            return v;
+        }
+        let n = fresh_obj();
+        match cell.compare_exchange(0, n, SeqCst, SeqCst) {
+            Ok(_) => n,
+            Err(cur) => cur,
+        }
+    }
+
+    pub struct Mutex<T> {
+        id: std::sync::atomic::AtomicU64,
+        /// The *model* ownership flag; `data`'s own lock is then
+        /// uncontended by construction (one model thread runs at a
+        /// time and only the flag holder touches it).
+        held: std::sync::atomic::AtomicBool,
+        data: std::sync::Mutex<T>,
+    }
+
+    pub struct MutexGuard<'a, T> {
+        lock: &'a Mutex<T>,
+        inner: Option<std::sync::MutexGuard<'a, T>>,
+        /// Acquired through the model (release must signal it).
+        modeled: bool,
+    }
+
+    impl<T> Mutex<T> {
+        pub const fn new(t: T) -> Mutex<T> {
+            Mutex {
+                id: std::sync::atomic::AtomicU64::new(0),
+                held: std::sync::atomic::AtomicBool::new(false),
+                data: std::sync::Mutex::new(t),
+            }
+        }
+
+        fn obj_id(&self) -> u64 {
+            lazy_obj_id(&self.id)
+        }
+
+        pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+            match session() {
+                None => match self.data.lock() {
+                    Ok(g) => Ok(MutexGuard { lock: self, inner: Some(g), modeled: false }),
+                    Err(p) => Err(PoisonError::new(MutexGuard {
+                        lock: self,
+                        inner: Some(p.into_inner()),
+                        modeled: false,
+                    })),
+                },
+                Some((sess, me)) => {
+                    sess.yield_op(me, "Mutex::lock");
+                    while self.held.swap(true, std::sync::atomic::Ordering::SeqCst) {
+                        sess.block_on(me, self.obj_id(), "Mutex::lock", false);
+                    }
+                    Ok(MutexGuard { lock: self, inner: Some(self.take_data()), modeled: true })
+                }
+            }
+        }
+
+        pub fn into_inner(self) -> LockResult<T> {
+            self.data.into_inner()
+        }
+
+        /// Grab the std lock after winning the model flag; cannot
+        /// contend, so try_lock only "fails" with poison.
+        fn take_data(&self) -> std::sync::MutexGuard<'_, T> {
+            match self.data.try_lock() {
+                Ok(g) => g,
+                Err(TryLockError::Poisoned(p)) => p.into_inner(),
+                Err(TryLockError::WouldBlock) => {
+                    unreachable!("chk Mutex: data locked without the model flag")
+                }
+            }
+        }
+    }
+
+    impl<T> Deref for MutexGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            self.inner.as_ref().expect("chk MutexGuard used after release")
+        }
+    }
+
+    impl<T> DerefMut for MutexGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            self.inner.as_mut().expect("chk MutexGuard used after release")
+        }
+    }
+
+    impl<T> Drop for MutexGuard<'_, T> {
+        fn drop(&mut self) {
+            let _ = self.inner.take();
+            if self.modeled {
+                self.lock.held.store(false, std::sync::atomic::Ordering::SeqCst);
+                if let Some((sess, me)) = session() {
+                    sess.unblock_all(self.lock.obj_id());
+                    // A scheduling point after release — but never
+                    // park while unwinding (deschedule no-ops then).
+                    sess.yield_op(me, "Mutex::unlock");
+                }
+            }
+        }
+    }
+
+    pub struct Condvar {
+        id: std::sync::atomic::AtomicU64,
+        inner: std::sync::Condvar,
+    }
+
+    impl Default for Condvar {
+        fn default() -> Condvar {
+            Condvar::new()
+        }
+    }
+
+    impl Condvar {
+        pub const fn new() -> Condvar {
+            Condvar { id: std::sync::atomic::AtomicU64::new(0), inner: std::sync::Condvar::new() }
+        }
+
+        fn obj_id(&self) -> u64 {
+            lazy_obj_id(&self.id)
+        }
+
+        pub fn notify_one(&self) {
+            match session() {
+                Some((sess, me)) => {
+                    sess.yield_op(me, "Condvar::notify_one");
+                    sess.unblock_one(self.obj_id());
+                }
+                None => self.inner.notify_one(),
+            }
+        }
+
+        pub fn notify_all(&self) {
+            match session() {
+                Some((sess, me)) => {
+                    sess.yield_op(me, "Condvar::notify_all");
+                    sess.unblock_all(self.obj_id());
+                }
+                None => self.inner.notify_all(),
+            }
+        }
+
+        pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+            Ok(self.wait_inner(guard, false).0)
+        }
+
+        pub fn wait_timeout<'a, T>(
+            &self,
+            guard: MutexGuard<'a, T>,
+            dur: Duration,
+        ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+            if guard.modeled {
+                // Modeled timeouts are logical: the controller fires
+                // one only when the system is otherwise quiescent, so
+                // the duration itself is irrelevant to the schedule.
+                let _ = dur;
+                let (g, fired) = self.wait_inner(guard, true);
+                return Ok((g, WaitTimeoutResult(fired)));
+            }
+            let lock = guard.lock;
+            let inner = Self::release_std(guard);
+            match self.inner.wait_timeout(inner, dur) {
+                Ok((g, r)) => Ok((
+                    MutexGuard { lock, inner: Some(g), modeled: false },
+                    WaitTimeoutResult(r.timed_out()),
+                )),
+                Err(p) => {
+                    let (g, r) = p.into_inner();
+                    Err(PoisonError::new((
+                        MutexGuard { lock, inner: Some(g), modeled: false },
+                        WaitTimeoutResult(r.timed_out()),
+                    )))
+                }
+            }
+        }
+
+        /// Shared wait path; returns (reacquired guard, timed_out).
+        fn wait_inner<'a, T>(&self, guard: MutexGuard<'a, T>, timed: bool) -> (MutexGuard<'a, T>, bool) {
+            if !guard.modeled {
+                let lock = guard.lock;
+                let inner = Self::release_std(guard);
+                let g = self.inner.wait(inner).unwrap_or_else(|e| e.into_inner());
+                return (MutexGuard { lock, inner: Some(g), modeled: false }, false);
+            }
+            let (sess, me) = session().expect("modeled MutexGuard waited outside its session");
+            let lock = guard.lock;
+            // Atomic release-and-park: drop the data guard, clear the
+            // model flag, wake lock waiters, and block on the condvar
+            // — all without an intervening scheduling point, so the
+            // model itself cannot miss a wakeup between them.
+            let mut guard = guard;
+            let _ = guard.inner.take();
+            lock.held.store(false, std::sync::atomic::Ordering::SeqCst);
+            sess.unblock_all(lock.obj_id());
+            std::mem::forget(guard);
+            let fired = sess.block_on(me, self.obj_id(), "Condvar::wait", timed);
+            // Reacquire the lock (a fresh modeled acquisition).
+            while lock.held.swap(true, std::sync::atomic::Ordering::SeqCst) {
+                sess.block_on(me, lock.obj_id(), "Mutex::relock", false);
+            }
+            (MutexGuard { lock, inner: Some(lock.take_data()), modeled: true }, fired)
+        }
+
+        /// Extract the std guard from an unmodeled wrapper without
+        /// running its Drop.
+        fn release_std<T>(mut guard: MutexGuard<'_, T>) -> std::sync::MutexGuard<'_, T> {
+            let inner = guard.inner.take().expect("guard already released");
+            std::mem::forget(guard);
+            inner
+        }
+    }
+
+    pub mod atomic {
+        pub use std::sync::atomic::Ordering;
+
+        use crate::util::chk::op_point;
+
+        macro_rules! chk_atomic_int {
+            ($Name:ident, $T:ty) => {
+                pub struct $Name(std::sync::atomic::$Name);
+
+                impl $Name {
+                    pub const fn new(v: $T) -> $Name {
+                        $Name(std::sync::atomic::$Name::new(v))
+                    }
+                    pub fn load(&self, o: Ordering) -> $T {
+                        op_point(concat!(stringify!($Name), "::load"));
+                        self.0.load(o)
+                    }
+                    pub fn store(&self, v: $T, o: Ordering) {
+                        op_point(concat!(stringify!($Name), "::store"));
+                        self.0.store(v, o)
+                    }
+                    pub fn swap(&self, v: $T, o: Ordering) -> $T {
+                        op_point(concat!(stringify!($Name), "::swap"));
+                        self.0.swap(v, o)
+                    }
+                    pub fn fetch_add(&self, v: $T, o: Ordering) -> $T {
+                        op_point(concat!(stringify!($Name), "::fetch_add"));
+                        self.0.fetch_add(v, o)
+                    }
+                    pub fn fetch_sub(&self, v: $T, o: Ordering) -> $T {
+                        op_point(concat!(stringify!($Name), "::fetch_sub"));
+                        self.0.fetch_sub(v, o)
+                    }
+                    pub fn fetch_max(&self, v: $T, o: Ordering) -> $T {
+                        op_point(concat!(stringify!($Name), "::fetch_max"));
+                        self.0.fetch_max(v, o)
+                    }
+                    pub fn fetch_update<F: FnMut($T) -> Option<$T>>(
+                        &self,
+                        set: Ordering,
+                        fetch: Ordering,
+                        f: F,
+                    ) -> Result<$T, $T> {
+                        op_point(concat!(stringify!($Name), "::fetch_update"));
+                        self.0.fetch_update(set, fetch, f)
+                    }
+                }
+
+                impl Default for $Name {
+                    fn default() -> $Name {
+                        $Name::new(0)
+                    }
+                }
+            };
+        }
+
+        chk_atomic_int!(AtomicU8, u8);
+        chk_atomic_int!(AtomicU64, u64);
+        chk_atomic_int!(AtomicUsize, usize);
+
+        pub struct AtomicBool(std::sync::atomic::AtomicBool);
+
+        impl AtomicBool {
+            pub const fn new(v: bool) -> AtomicBool {
+                AtomicBool(std::sync::atomic::AtomicBool::new(v))
+            }
+            pub fn load(&self, o: Ordering) -> bool {
+                op_point("AtomicBool::load");
+                self.0.load(o)
+            }
+            pub fn store(&self, v: bool, o: Ordering) {
+                op_point("AtomicBool::store");
+                self.0.store(v, o)
+            }
+            pub fn swap(&self, v: bool, o: Ordering) -> bool {
+                op_point("AtomicBool::swap");
+                self.0.swap(v, o)
+            }
+        }
+
+        impl Default for AtomicBool {
+            fn default() -> AtomicBool {
+                AtomicBool::new(false)
+            }
+        }
+    }
+
+    pub mod mpsc {
+        use std::collections::VecDeque;
+        use std::sync::Arc;
+
+        pub use std::sync::mpsc::{RecvError, SendError, TryRecvError, TrySendError};
+
+        use crate::util::chk::{fresh_obj, in_session, session, Session};
+
+        struct ChanSt<T> {
+            q: VecDeque<T>,
+            senders: usize,
+            rx_alive: bool,
+        }
+
+        struct Chan<T> {
+            id: u64,
+            /// None = unbounded (`channel`), Some = `sync_channel` cap.
+            cap: Option<usize>,
+            st: std::sync::Mutex<ChanSt<T>>,
+        }
+
+        impl<T> Chan<T> {
+            fn new(cap: Option<usize>) -> Arc<Chan<T>> {
+                Arc::new(Chan {
+                    id: fresh_obj(),
+                    cap,
+                    st: std::sync::Mutex::new(ChanSt {
+                        q: VecDeque::new(),
+                        senders: 1,
+                        rx_alive: true,
+                    }),
+                })
+            }
+
+            fn lock(&self) -> std::sync::MutexGuard<'_, ChanSt<T>> {
+                self.st.lock().unwrap_or_else(|e| e.into_inner())
+            }
+
+            fn ctx(&self) -> (Arc<Session>, usize) {
+                session().expect("chk channel endpoint used outside its model-check session")
+            }
+        }
+
+        enum Tx<T> {
+            Std(std::sync::mpsc::Sender<T>),
+            Chk(Arc<Chan<T>>),
+        }
+
+        /// Unbounded sender (`channel`).
+        pub struct Sender<T>(Tx<T>);
+
+        enum STx<T> {
+            Std(std::sync::mpsc::SyncSender<T>),
+            Chk(Arc<Chan<T>>),
+        }
+
+        /// Bounded sender (`sync_channel`).
+        pub struct SyncSender<T>(STx<T>);
+
+        enum Rx<T> {
+            Std(std::sync::mpsc::Receiver<T>),
+            Chk(Arc<Chan<T>>),
+        }
+
+        pub struct Receiver<T>(Rx<T>);
+
+        pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+            if in_session() {
+                let ch = Chan::new(None);
+                (Sender(Tx::Chk(Arc::clone(&ch))), Receiver(Rx::Chk(ch)))
+            } else {
+                let (t, r) = std::sync::mpsc::channel();
+                (Sender(Tx::Std(t)), Receiver(Rx::Std(r)))
+            }
+        }
+
+        pub fn sync_channel<T>(cap: usize) -> (SyncSender<T>, Receiver<T>) {
+            if in_session() {
+                let ch = Chan::new(Some(cap));
+                (SyncSender(STx::Chk(Arc::clone(&ch))), Receiver(Rx::Chk(ch)))
+            } else {
+                let (t, r) = std::sync::mpsc::sync_channel(cap);
+                (SyncSender(STx::Std(t)), Receiver(Rx::Std(r)))
+            }
+        }
+
+        impl<T> Sender<T> {
+            pub fn send(&self, t: T) -> Result<(), SendError<T>> {
+                match &self.0 {
+                    Tx::Std(s) => s.send(t),
+                    Tx::Chk(ch) => {
+                        let (sess, me) = ch.ctx();
+                        sess.yield_op(me, "mpsc::send");
+                        let mut st = ch.lock();
+                        if !st.rx_alive {
+                            return Err(SendError(t));
+                        }
+                        st.q.push_back(t);
+                        drop(st);
+                        sess.unblock_all(ch.id);
+                        Ok(())
+                    }
+                }
+            }
+        }
+
+        impl<T> Clone for Sender<T> {
+            fn clone(&self) -> Sender<T> {
+                match &self.0 {
+                    Tx::Std(s) => Sender(Tx::Std(s.clone())),
+                    Tx::Chk(ch) => {
+                        ch.lock().senders += 1;
+                        Sender(Tx::Chk(Arc::clone(ch)))
+                    }
+                }
+            }
+        }
+
+        impl<T> Drop for Sender<T> {
+            fn drop(&mut self) {
+                if let Tx::Chk(ch) = &self.0 {
+                    drop_sender(ch);
+                }
+            }
+        }
+
+        impl<T> SyncSender<T> {
+            pub fn send(&self, t: T) -> Result<(), SendError<T>> {
+                match &self.0 {
+                    STx::Std(s) => s.send(t),
+                    STx::Chk(ch) => {
+                        let (sess, me) = ch.ctx();
+                        sess.yield_op(me, "mpsc::send");
+                        // Rendezvous (cap 0) is modeled as capacity 1:
+                        // the repo only uses buffered channels.
+                        let cap = ch.cap.unwrap_or(usize::MAX).max(1);
+                        let item = t;
+                        loop {
+                            let mut st = ch.lock();
+                            if !st.rx_alive {
+                                return Err(SendError(item));
+                            }
+                            if st.q.len() < cap {
+                                st.q.push_back(item);
+                                drop(st);
+                                sess.unblock_all(ch.id);
+                                return Ok(());
+                            }
+                            drop(st);
+                            sess.block_on(me, ch.id, "mpsc::send (queue full)", false);
+                        }
+                    }
+                }
+            }
+        }
+
+        impl<T> Clone for SyncSender<T> {
+            fn clone(&self) -> SyncSender<T> {
+                match &self.0 {
+                    STx::Std(s) => SyncSender(STx::Std(s.clone())),
+                    STx::Chk(ch) => {
+                        ch.lock().senders += 1;
+                        SyncSender(STx::Chk(Arc::clone(ch)))
+                    }
+                }
+            }
+        }
+
+        impl<T> Drop for SyncSender<T> {
+            fn drop(&mut self) {
+                if let STx::Chk(ch) = &self.0 {
+                    drop_sender(ch);
+                }
+            }
+        }
+
+        /// Shared sender-drop bookkeeping: the last sender going away
+        /// wakes blocked receivers so they observe Disconnected. Never
+        /// parks (safe during unwinding).
+        fn drop_sender<T>(ch: &Arc<Chan<T>>) {
+            let mut st = ch.lock();
+            st.senders -= 1;
+            let last = st.senders == 0;
+            drop(st);
+            if last {
+                if let Some((sess, _)) = session() {
+                    sess.unblock_all(ch.id);
+                }
+            }
+        }
+
+        impl<T> Receiver<T> {
+            pub fn recv(&self) -> Result<T, RecvError> {
+                match &self.0 {
+                    Rx::Std(r) => r.recv(),
+                    Rx::Chk(ch) => {
+                        let (sess, me) = ch.ctx();
+                        sess.yield_op(me, "mpsc::recv");
+                        loop {
+                            let mut st = ch.lock();
+                            if let Some(v) = st.q.pop_front() {
+                                drop(st);
+                                sess.unblock_all(ch.id);
+                                return Ok(v);
+                            }
+                            if st.senders == 0 {
+                                return Err(RecvError);
+                            }
+                            drop(st);
+                            sess.block_on(me, ch.id, "mpsc::recv (queue empty)", false);
+                        }
+                    }
+                }
+            }
+
+            pub fn try_recv(&self) -> Result<T, TryRecvError> {
+                match &self.0 {
+                    Rx::Std(r) => r.try_recv(),
+                    Rx::Chk(ch) => {
+                        let (sess, me) = ch.ctx();
+                        sess.yield_op(me, "mpsc::try_recv");
+                        let mut st = ch.lock();
+                        if let Some(v) = st.q.pop_front() {
+                            drop(st);
+                            sess.unblock_all(ch.id);
+                            return Ok(v);
+                        }
+                        if st.senders == 0 {
+                            return Err(TryRecvError::Disconnected);
+                        }
+                        Err(TryRecvError::Empty)
+                    }
+                }
+            }
+        }
+
+        impl<T> Drop for Receiver<T> {
+            fn drop(&mut self) {
+                if let Rx::Chk(ch) = &self.0 {
+                    let mut st = ch.lock();
+                    st.rx_alive = false;
+                    st.q.clear();
+                    drop(st);
+                    // Wake blocked senders so they observe the
+                    // disconnect. Never parks (safe during unwinding).
+                    if let Some((sess, _)) = session() {
+                        sess.unblock_all(ch.id);
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tests: run in tier-1 (chk is always compiled)
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::prim::atomic::{AtomicUsize, Ordering};
+    use super::prim::{mpsc, Condvar, Mutex};
+    use super::{check, spawn, splitmix64, Config};
+
+    fn quick() -> Config {
+        Config { max_schedules: 5_000, random_schedules: 16, ..Config::default() }
+    }
+
+    #[test]
+    fn splitmix64_known_answer() {
+        // Reference values for seed 0 (Vigna's splitmix64 test vector).
+        let mut s = 0u64;
+        assert_eq!(splitmix64(&mut s), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(splitmix64(&mut s), 0x6E78_9E6A_A1B9_65F4);
+        assert_eq!(splitmix64(&mut s), 0x06C4_5D18_8009_454F);
+    }
+
+    #[test]
+    fn atomic_increment_is_race_free() {
+        let report = check(quick(), || {
+            let n = Arc::new(AtomicUsize::new(0));
+            let mut hs = Vec::new();
+            for _ in 0..2 {
+                let n2 = Arc::clone(&n);
+                hs.push(spawn(move || {
+                    n2.fetch_add(1, Ordering::SeqCst);
+                }));
+            }
+            for h in hs {
+                h.join();
+            }
+            assert_eq!(n.load(Ordering::SeqCst), 2);
+        });
+        report.assert_ok();
+        assert!(report.dfs_complete, "tiny protocol should be exhaustible");
+        assert!(report.schedules > 1, "more than one interleaving explored");
+    }
+
+    #[test]
+    fn finds_lost_update_race() {
+        // Classic read-modify-write race: load + store is not atomic.
+        let report = check(quick(), || {
+            let n = Arc::new(AtomicUsize::new(0));
+            let mut hs = Vec::new();
+            for _ in 0..2 {
+                let n2 = Arc::clone(&n);
+                hs.push(spawn(move || {
+                    let v = n2.load(Ordering::SeqCst);
+                    n2.store(v + 1, Ordering::SeqCst);
+                }));
+            }
+            for h in hs {
+                h.join();
+            }
+            assert_eq!(n.load(Ordering::SeqCst), 2);
+        });
+        let f = report.assert_fails();
+        assert!(f.message.contains("panicked"), "lost update surfaces as a failed assert: {}", f.message);
+    }
+
+    #[test]
+    fn mutex_protects_read_modify_write() {
+        let report = check(quick(), || {
+            let n = Arc::new(Mutex::new(0usize));
+            let mut hs = Vec::new();
+            for _ in 0..2 {
+                let n2 = Arc::clone(&n);
+                hs.push(spawn(move || {
+                    let mut g = n2.lock().unwrap();
+                    *g += 1;
+                }));
+            }
+            for h in hs {
+                h.join();
+            }
+            assert_eq!(*n.lock().unwrap(), 2);
+        });
+        report.assert_ok();
+    }
+
+    #[test]
+    fn finds_ab_ba_deadlock() {
+        let report = check(quick(), || {
+            let a = Arc::new(Mutex::new(()));
+            let b = Arc::new(Mutex::new(()));
+            let (a2, b2) = (Arc::clone(&a), Arc::clone(&b));
+            let h1 = spawn(move || {
+                let _ga = a2.lock().unwrap();
+                let _gb = b2.lock().unwrap();
+            });
+            let (a3, b3) = (Arc::clone(&a), Arc::clone(&b));
+            let h2 = spawn(move || {
+                let _gb = b3.lock().unwrap();
+                let _ga = a3.lock().unwrap();
+            });
+            h1.join();
+            h2.join();
+        });
+        let f = report.assert_fails();
+        assert!(f.message.contains("deadlock"), "{}", f.message);
+    }
+
+    #[test]
+    fn finds_lost_wakeup() {
+        // Broken flag protocol: the setter notifies *before* the waiter
+        // can be waiting, and the waiter re-checks nothing — under the
+        // schedule where the notify lands first, the wait never ends.
+        let report = check(quick(), || {
+            let m = Arc::new(Mutex::new(false));
+            let cv = Arc::new(Condvar::new());
+            let (m2, cv2) = (Arc::clone(&m), Arc::clone(&cv));
+            let h = spawn(move || {
+                *m2.lock().unwrap() = true;
+                cv2.notify_all();
+            });
+            {
+                let g = m.lock().unwrap();
+                if !*g {
+                    // BROKEN: no re-check loop around the wait.
+                    let _g = cv.wait(g).unwrap();
+                }
+            }
+            h.join();
+        });
+        let f = report.assert_fails();
+        assert!(f.message.contains("deadlock"), "{}", f.message);
+    }
+
+    #[test]
+    fn correct_condvar_protocol_passes() {
+        let report = check(quick(), || {
+            let m = Arc::new(Mutex::new(false));
+            let cv = Arc::new(Condvar::new());
+            let (m2, cv2) = (Arc::clone(&m), Arc::clone(&cv));
+            let h = spawn(move || {
+                *m2.lock().unwrap() = true;
+                cv2.notify_all();
+            });
+            {
+                let mut g = m.lock().unwrap();
+                while !*g {
+                    g = cv.wait(g).unwrap();
+                }
+            }
+            h.join();
+        });
+        report.assert_ok();
+        assert!(report.dfs_complete);
+    }
+
+    #[test]
+    fn timed_wait_escapes_missed_notify() {
+        // Same broken protocol as finds_lost_wakeup, but the waiter
+        // uses wait_timeout in a re-check loop: the modeled timeout
+        // fires once the system is quiescent and the waiter re-checks.
+        let report = check(quick(), || {
+            let m = Arc::new(Mutex::new(false));
+            let cv = Arc::new(Condvar::new());
+            let (m2, cv2) = (Arc::clone(&m), Arc::clone(&cv));
+            let h = spawn(move || {
+                *m2.lock().unwrap() = true;
+                cv2.notify_all();
+            });
+            {
+                let mut g = m.lock().unwrap();
+                while !*g {
+                    let (ng, _res) =
+                        cv.wait_timeout(g, std::time::Duration::from_millis(1)).unwrap();
+                    g = ng;
+                }
+            }
+            h.join();
+        });
+        report.assert_ok();
+    }
+
+    #[test]
+    fn channel_backpressure_roundtrip() {
+        let report = check(quick(), || {
+            let (tx, rx) = mpsc::sync_channel::<usize>(1);
+            let h = spawn(move || {
+                for i in 0..3 {
+                    tx.send(i).expect("receiver alive");
+                }
+            });
+            for want in 0..3 {
+                assert_eq!(rx.recv(), Ok(want));
+            }
+            assert!(rx.recv().is_err(), "sender dropped -> disconnected");
+            h.join();
+        });
+        report.assert_ok();
+    }
+
+    #[test]
+    fn channel_disconnect_unblocks_receiver() {
+        let report = check(quick(), || {
+            let (tx, rx) = mpsc::channel::<usize>();
+            let h = spawn(move || {
+                drop(tx);
+            });
+            // Must terminate in every schedule: either Empty-then-
+            // Disconnected or an immediate disconnect.
+            while rx.recv().is_ok() {}
+            h.join();
+        });
+        report.assert_ok();
+    }
+
+    #[test]
+    fn random_phase_is_reproducible() {
+        let run = || {
+            check(quick(), || {
+                let n = Arc::new(AtomicUsize::new(0));
+                let n2 = Arc::clone(&n);
+                let h = spawn(move || {
+                    n2.fetch_add(1, Ordering::SeqCst);
+                });
+                h.join();
+                assert_eq!(n.load(Ordering::SeqCst), 1);
+            })
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.schedules, b.schedules);
+        assert_eq!(a.failure.is_none(), b.failure.is_none());
+    }
+}

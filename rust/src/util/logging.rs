@@ -1,12 +1,13 @@
 //! Tiny leveled logger (no `log`/`env_logger` wiring needed): timestamps
 //! relative to process start, level filter via STLT_LOG env (error..trace).
 
-use std::sync::atomic::{AtomicU8, Ordering};
-use std::sync::OnceLock;
 use std::time::Instant;
 
+use crate::util::sync::atomic::{AtomicU8, Ordering};
+use crate::util::sync::{Once, OnceLock};
+
 static LEVEL: AtomicU8 = AtomicU8::new(2); // info
-static INIT: std::sync::Once = std::sync::Once::new();
+static INIT: Once = Once::new();
 static START: OnceLock<Instant> = OnceLock::new();
 
 #[derive(Clone, Copy, PartialEq, PartialOrd)]
@@ -30,6 +31,9 @@ pub fn init() {
                 "trace" => 4,
                 _ => 2,
             };
+            // ORDERING: Relaxed — LEVEL is an independent filter knob;
+            // a stale read only mis-filters a log line, never breaks
+            // an invariant, and `Once` already orders init itself.
             LEVEL.store(l, Ordering::Relaxed);
         }
     });
@@ -37,11 +41,14 @@ pub fn init() {
 
 pub fn set_level(l: Level) {
     init();
+    // ORDERING: Relaxed — see init(): no other memory is published via
+    // this flag, late observers just filter at the old level briefly.
     LEVEL.store(l as u8, Ordering::Relaxed);
 }
 
 pub fn enabled(l: Level) -> bool {
     init();
+    // ORDERING: Relaxed — pure filter read; no data is gated on it.
     (l as u8) <= LEVEL.load(Ordering::Relaxed)
 }
 

@@ -2,6 +2,7 @@
 //! clap/serde/rand/proptest — DESIGN.md §4 lists these as deliberate
 //! substrate builds).
 
+pub mod chk;
 pub mod cli;
 pub mod fft;
 pub mod json;
@@ -9,4 +10,5 @@ pub mod linalg;
 pub mod logging;
 pub mod prop;
 pub mod rng;
+pub mod sync;
 pub mod threadpool;

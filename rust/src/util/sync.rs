@@ -1,0 +1,29 @@
+//! Synchronization facade: the single import point for every sync
+//! primitive in the crate.
+//!
+//! In normal builds this is a pure `pub use` of `std::sync` — zero
+//! cost, identical codegen, nothing wrapped. Built with
+//! `RUSTFLAGS="--cfg model_check"`, the contended primitives (Mutex,
+//! Condvar, atomics, mpsc channels) instead come from
+//! [`crate::util::chk::prim`], whose operations become scheduling
+//! points when executed on a model-checker thread (and fall through to
+//! `std` everywhere else). That lets the model-check protocol tests in
+//! `util/threadpool.rs`, `coordinator/state.rs`, `net/worker.rs`, and
+//! `net/router.rs` drive the *production* types through exhaustive
+//! schedule exploration without a second implementation.
+//!
+//! The `stlt lint` gate forbids `std::sync` imports anywhere else in
+//! the crate, which keeps this seam honest: new concurrent code is
+//! model-checkable by construction.
+
+#[cfg(not(model_check))]
+pub use std::sync::{
+    atomic, mpsc, Arc, Condvar, LockResult, Mutex, MutexGuard, Once, OnceLock, PoisonError,
+    WaitTimeoutResult, Weak,
+};
+
+#[cfg(model_check)]
+pub use std::sync::{Arc, LockResult, Once, OnceLock, PoisonError, Weak};
+
+#[cfg(model_check)]
+pub use crate::util::chk::prim::{atomic, mpsc, Condvar, Mutex, MutexGuard, WaitTimeoutResult};

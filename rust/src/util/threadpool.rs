@@ -27,8 +27,9 @@
 use std::any::Any;
 use std::cell::Cell;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, OnceLock};
 use std::thread;
+
+use crate::util::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, OnceLock};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -395,7 +396,12 @@ where
             // `LatchWait` guard armed above), so the erased borrows
             // strictly outlive every job. `enqueued` is bumped only
             // after a successful send: a job that failed to enqueue is
-            // dropped inside the failed send and never waited on.
+            // dropped inside the failed send and never waited on. The
+            // count-up latch invariant this rests on ("wait(enqueued)
+            // returns only after every enqueued job body has fully
+            // run, panicking or not") is model-checked exhaustively in
+            // `model_check::scatter_latch_protocol_holds` below; the
+            // unsafe scope is exactly this lifetime-erasing transmute.
             let job: Job = unsafe {
                 std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Job>(job)
             };
@@ -417,10 +423,95 @@ where
     }
 }
 
+// Model-check port of the scatter_rows completion protocol — the seam
+// the crate's only `unsafe` (the lifetime-erasing transmute above)
+// depends on. Built and run with `RUSTFLAGS="--cfg model_check"`.
+#[cfg(all(test, model_check))]
+mod model_check {
+    use super::*;
+    use crate::util::chk;
+    use crate::util::sync::atomic::{AtomicUsize, Ordering};
+
+    /// The real `Latch`/`LatchWait` discipline, exercised under every
+    /// interleaving (bounded DFS + random): two "workers" run erased
+    /// job bodies and `done()`; the "caller" waits for exactly the
+    /// enqueued count. The assertion is the borrow-liveness invariant
+    /// scatter_rows erases lifetimes against: when `wait(target)`
+    /// returns, every job body has fully run (so no borrow can dangle)
+    /// and every panic message has been collected.
+    #[test]
+    fn scatter_latch_protocol_holds() {
+        let report = chk::check(chk::Config::default(), || {
+            let latch = Arc::new(Latch::new());
+            let bodies_run = Arc::new(AtomicUsize::new(0));
+            let mut handles = Vec::new();
+            for i in 0..2u32 {
+                let l = Arc::clone(&latch);
+                let b = Arc::clone(&bodies_run);
+                handles.push(chk::spawn(move || {
+                    // modeled job body (the borrow the transmute erased)
+                    b.fetch_add(1, Ordering::SeqCst);
+                    // worker 1 models a panicking job: its message is
+                    // collected, its completion still counted
+                    l.done(if i == 1 { Some("job exploded".to_string()) } else { None });
+                }));
+            }
+            let panics = latch.wait(2);
+            assert_eq!(
+                bodies_run.load(Ordering::SeqCst),
+                2,
+                "wait() returned while a job body (an erased borrow) was still live"
+            );
+            assert_eq!(panics, vec!["job exploded".to_string()]);
+            for h in handles {
+                h.join();
+            }
+        });
+        report.assert_ok();
+        assert!(report.dfs_complete, "latch protocol should be exhaustible at bound 2");
+    }
+
+    /// Mutant latch: `done()` bumps the count but never notifies —
+    /// the lost-wakeup bug the real `Latch::done` guards against. The
+    /// checker must find the schedule where the waiter blocks first
+    /// and report it as a deadlock (pins the checker itself).
+    struct SilentLatch {
+        state: Mutex<usize>,
+        cv: Condvar,
+    }
+
+    impl SilentLatch {
+        fn wait(&self, target: usize) {
+            let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+            while *st < target {
+                st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+        }
+
+        fn done(&self) {
+            *self.state.lock().unwrap_or_else(|e| e.into_inner()) += 1;
+            // MUTANT: missing self.cv.notify_all()
+        }
+    }
+
+    #[test]
+    fn checker_catches_latch_without_notify() {
+        let report = chk::check(chk::Config::default(), || {
+            let latch = Arc::new(SilentLatch { state: Mutex::new(0), cv: Condvar::new() });
+            let l = Arc::clone(&latch);
+            let h = chk::spawn(move || l.done());
+            latch.wait(1);
+            h.join();
+        });
+        let f = report.assert_fails();
+        assert!(f.message.contains("deadlock"), "expected a lost-wakeup deadlock: {}", f.message);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::{AtomicUsize, Ordering};
+    use crate::util::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
     fn runs_all_jobs() {
