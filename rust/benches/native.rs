@@ -490,6 +490,31 @@ fn bench_wire(smoke: bool, cfg: &ModelConfig, flat: &[f32], rows: &mut Rows) {
     }
 }
 
+/// Deep-lint row: wall time of the whole call-graph tier (parse,
+/// graph build, reachability passes, lock-order analysis) over the
+/// crate's own `src` tree — the price CI pays on every push, pinned so
+/// an analyzer blow-up (e.g. a resolver gone quadratic) is visible as
+/// a bench regression and not just a slower wall.
+fn bench_lint_deep(smoke: bool, rows: &mut Rows) {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let (src, allow) = (root.join("src"), root.join("lint_deep.allow"));
+    let iters = if smoke { 2usize } else { 5 };
+    let mut samples = Vec::with_capacity(iters);
+    let mut violations = 0usize;
+    for _ in 0..iters {
+        let t = Instant::now();
+        let v = stlt::lint::run_deep(&src, &allow, None).expect("deep lint over crate src");
+        samples.push(t.elapsed().as_secs_f64());
+        violations = v.len();
+    }
+    let r = wall_row("lint/deep crate-src analyze", &mut samples);
+    println!("{}   ({:.1} ms, {violations} violations)", r.row(), r.p50_s * 1e3);
+    rows.push(
+        r.clone(),
+        vec![("deep_ms", r.p50_s * 1e3), ("violations", violations as f64)],
+    );
+}
+
 fn main() {
     let smoke = std::env::var("STLT_BENCH_SMOKE")
         .map(|v| !v.is_empty() && v != "0")
@@ -617,6 +642,9 @@ fn main() {
     // sharded serving: router + N wire workers over loopback TCP,
     // decode scaling and live-migration latency
     bench_wire(smoke, &cfg, &flat, &mut rows);
+
+    // static analysis: the deep-lint tier's own wall time
+    bench_lint_deep(smoke, &mut rows);
 
     let path = std::env::var("STLT_BENCH_JSON").unwrap_or_else(|_| "BENCH_native.json".into());
     match std::fs::write(&path, rows.to_json()) {

@@ -60,6 +60,10 @@ impl Sampling {
         let logp = log_softmax(&scaled);
         // candidate set sorted by probability desc
         let mut order: Vec<usize> = (0..logp.len()).collect();
+        // PANIC-OK: `order` is a permutation of 0..logp.len(), so every
+        // index drawn from it is in bounds; log_softmax never yields
+        // NaN (inputs are finite after the temp clamp), so the
+        // comparator's unwrap cannot fire
         order.sort_by(|&a, &b| logp[b].partial_cmp(&logp[a]).unwrap());
         let mut keep = order.len();
         if let Some(k) = top_k {
@@ -69,6 +73,7 @@ impl Sampling {
             let mut acc = 0.0f32;
             let mut np = 0usize;
             for &i in order.iter().take(keep) {
+                // PANIC-OK: i comes from the 0..len permutation
                 acc += logp[i].exp();
                 np += 1;
                 if acc >= p {
@@ -77,7 +82,10 @@ impl Sampling {
             }
             keep = np.max(1);
         }
+        // PANIC-OK: keep <= order.len() by construction (min with len,
+        // then only ever reduced), and i is drawn from the permutation
         let probs: Vec<f64> = order[..keep].iter().map(|&i| logp[i].exp() as f64).collect();
+        // PANIC-OK: categorical returns an index < probs.len() = keep
         order[rng.categorical(&probs)]
     }
 }

@@ -298,6 +298,39 @@ impl Server {
             .and_then(|o| o.shape.first())
             .copied()
             .ok_or_else(|| anyhow!("malformed decode entry (no logits output)"))?;
+        // carry layout, validated once here: the feed wave indexes rows
+        // by these strides every iteration, so a malformed entry fails
+        // startup instead of a wave. `single_entry` is the per-session
+        // view (stream_batch carry shapes minus the batch dim), used
+        // for fresh-carry zeroing and import validation.
+        let mut single_entry = stream_entry.clone();
+        for idx in [1usize, 2] {
+            let inp = single_entry
+                .inputs
+                .get_mut(idx)
+                .ok_or_else(|| anyhow!("stream entry missing carry input {idx}"))?;
+            if inp.shape.is_empty() {
+                anyhow::bail!("stream entry carry input {idx} is scalar (no batch dim)");
+            }
+            inp.shape.remove(0);
+        }
+        let carry_input = |idx: usize| -> Result<(usize, Vec<usize>)> {
+            let single = single_entry
+                .inputs
+                .get(idx)
+                .ok_or_else(|| anyhow!("stream entry missing carry input {idx}"))?;
+            let full = stream_entry
+                .inputs
+                .get(idx)
+                .ok_or_else(|| anyhow!("stream entry missing carry input {idx}"))?;
+            let stride = single.numel();
+            if stride == 0 {
+                anyhow::bail!("stream entry carry input {idx} has zero-sized rows");
+            }
+            Ok((stride, full.shape.clone()))
+        };
+        let (l_stride, shape_l) = carry_input(1)?;
+        let (u_stride, shape_u) = carry_input(2)?;
 
         let queue = Arc::new(BoundedQueue::new(opts.queue_cap));
         let stats = Arc::new(ServerStats::default());
@@ -367,6 +400,11 @@ impl Server {
                     params,
                     stream_entry,
                     decode_entry,
+                    l_stride,
+                    u_stride,
+                    shape_l,
+                    shape_u,
+                    single_entry,
                     batched,
                     chunk,
                     b_srv,
@@ -376,6 +414,7 @@ impl Server {
                     feeds: Vec::new(),
                     gens: Vec::new(),
                     parked: VecDeque::new(),
+                    scratch: WaveScratch::default(),
                 };
                 mt.run(&queue);
             })
@@ -526,12 +565,45 @@ struct GenTask {
     cancelled: bool,
 }
 
+/// Reusable per-wave scratch. The wave loops run for the server's
+/// whole lifetime; everything here is allocated once and recycled so
+/// the steady-state scheduler stays off the allocator (`stlt lint
+/// --deep` enforces this — the tensor *inputs* still allocate because
+/// the runtime takes them by value; see rust/lint_deep.allow).
+#[derive(Default)]
+struct WaveScratch {
+    /// tokens consumed per feed-wave row
+    consumed: Vec<usize>,
+    /// sessions whose feed queues drained this wave
+    drained: Vec<u64>,
+    /// parked generations eligible for binding this decode wave
+    unblocked: Vec<u64>,
+    /// indices into `gens` of this decode wave's members
+    wave_idx: Vec<usize>,
+    /// last token per decode-wave row
+    tokens: Vec<i32>,
+    /// decode-wave members, moved out of `gens` for the step
+    wave: Vec<GenTask>,
+    /// decode-wave members that keep generating next wave
+    survivors: Vec<GenTask>,
+}
+
 struct ModelThread {
     rt: Runtime,
     /// weights pre-uploaded as a device buffer (§Perf L3-1)
     params: stlt_exec::ParamBuf,
     stream_entry: Entry,
     decode_entry: Entry,
+    /// per-row carry strides and full batched carry shapes of the
+    /// stream entry, validated once at startup so the feed wave does
+    /// no fallible entry-shape indexing per iteration
+    l_stride: usize,
+    u_stride: usize,
+    shape_l: Vec<usize>,
+    shape_u: Vec<usize>,
+    /// per-session view of the stream entry (carry shapes minus the
+    /// batch dim), prebuilt at startup
+    single_entry: Entry,
     /// Batched continuous-decode executable; None on backends without
     /// the `decode_batch` kind (per-row fallback).
     batched: Option<stlt_exec::BatchedDecodeStep>,
@@ -551,6 +623,7 @@ struct ModelThread {
     /// sessions reject admission), so retries always ride on a working
     /// iteration — no spin, no deadlock.
     parked: VecDeque<(Request, Instant)>,
+    scratch: WaveScratch,
 }
 
 /// Why a session's carry could not be acquired.
@@ -759,8 +832,7 @@ impl ModelThread {
                 // validate against this server's model before touching
                 // the pool: a snapshot from a different model geometry
                 // must fail loudly, not corrupt a wave later
-                let single = self.stream_entry_single();
-                let (l_stride, u_stride) = (single.inputs[1].numel(), single.inputs[2].numel());
+                let (l_stride, u_stride) = (self.l_stride, self.u_stride);
                 if snap.l.len() != l_stride || snap.u.len() != u_stride {
                     let _ = resp.send(Err(anyhow!(
                         "carry shape mismatch: snapshot is ({}, {}) f32s, this model wants \
@@ -775,8 +847,8 @@ impl ModelThread {
                 let carry = StreamCarry {
                     l: snap.l,
                     u: snap.u,
-                    l_shape: single.inputs[1].shape.clone(),
-                    u_shape: single.inputs[2].shape.clone(),
+                    l_shape: self.single_entry.inputs[1].shape.clone(),
+                    u_shape: self.single_entry.inputs[2].shape.clone(),
                 };
                 match self.pool.import(session, carry, snap.tokens_seen) {
                     Import::Ok => {
@@ -866,7 +938,7 @@ impl ModelThread {
         let fresh = !self.pool.contains(session);
         let mut evicted = None;
         if fresh {
-            let carry = StreamCarry::zeros(&self.stream_entry_single());
+            let carry = StreamCarry::zeros(&self.single_entry);
             match self.pool.admit(session, carry) {
                 Admit::Evicted(v) => {
                     self.stats.evictions.inc();
@@ -882,14 +954,6 @@ impl ModelThread {
         Ok((carry, evicted, fresh))
     }
 
-    /// Per-session carry shapes = stream_batch shapes minus batch dim.
-    fn stream_entry_single(&self) -> Entry {
-        let mut e = self.stream_entry.clone();
-        e.inputs[1].shape = self.stream_entry.inputs[1].shape[1..].to_vec();
-        e.inputs[2].shape = self.stream_entry.inputs[2].shape[1..].to_vec();
-        e
-    }
-
     /// Bind a parked generation once `session`'s feed queue has
     /// drained (or fail its stream if the state is gone).
     fn activate_waiting_gen(&mut self, session: u64) {
@@ -900,9 +964,14 @@ impl ModelThread {
         };
         match self.acquire(session) {
             Ok((carry, evicted, fresh)) => {
-                let g = &mut self.gens[pos];
-                g.carry = Some(carry);
-                let _ = g.tx.send(StreamItem::Start { evicted, fresh_carry: fresh });
+                // `pos` came from `position` on this same vec, so the
+                // lookup cannot miss; a None here would only mean the
+                // task vanished, in which case the carry returns to the
+                // pool at the next checkin
+                if let Some(g) = self.gens.get_mut(pos) {
+                    g.carry = Some(carry);
+                    let _ = g.tx.send(StreamItem::Start { evicted, fresh_carry: fresh });
+                }
             }
             // Capacity here is transient (the feed that just drained
             // released a slot another admission raced onto): leave the
@@ -918,37 +987,65 @@ impl ModelThread {
     /// One feed wave: advance up to b_srv feeding sessions by ONE chunk
     /// each through the `stream_batch` artifact, then rotate them
     /// behind any sessions that did not make this wave.
+    ///
+    /// F64-REDUCE: per-pending NLL/count totals accumulate in f64
+    /// (`p.nll`, `p.cnt`) so chunking never moves the reported loss.
     fn feed_wave(&mut self) {
         let _span = crate::obs::span("scheduler", "feed_wave");
         let b = self.b_srv;
         let c = self.chunk;
         let wave = self.feeds.len().min(b);
-        let single = self.stream_entry_single();
-        let l_stride = single.inputs[1].numel();
-        let u_stride = single.inputs[2].numel();
+        let (l_stride, u_stride) = (self.l_stride, self.u_stride);
+        // the tensor inputs below are moved into the runtime by value,
+        // so they allocate per wave (see rust/lint_deep.allow); the
+        // bookkeeping vectors are recycled through `self.scratch`
         let mut l_all = Vec::with_capacity(b * l_stride);
         let mut u_all = Vec::with_capacity(b * u_stride);
         let mut toks = vec![0i32; b * c];
         let mut tgts = vec![0i32; b * c];
         let mut mask = vec![0f32; b * c];
         let mut active = vec![0f32; b];
-        let mut consumed = vec![0usize; wave];
+        self.scratch.consumed.clear();
+        self.scratch.consumed.resize(wave, 0);
         let mut any = false;
-        for (i, ft) in self.feeds[..wave].iter().enumerate() {
-            let p = ft.queue.front().expect("feed task with empty queue");
-            let remaining = p.tokens.len().saturating_sub(p.off);
-            if remaining > 1 {
-                let take = remaining.min(c + 1); // need next-token targets
-                let slice = &p.tokens[p.off..p.off + take];
-                let n_in = take - 1;
-                for j in 0..n_in {
-                    toks[i * c + j] = slice[j];
-                    tgts[i * c + j] = slice[j + 1];
-                    mask[i * c + j] = if p.count_loss { 1.0 } else { 0.0 };
+        for ((((ft, cons), tok_row), tgt_row), (mask_row, act)) in self
+            .feeds
+            .iter()
+            .take(wave)
+            .zip(self.scratch.consumed.iter_mut())
+            .zip(toks.chunks_exact_mut(c))
+            .zip(tgts.chunks_exact_mut(c))
+            .zip(mask.chunks_exact_mut(c).zip(active.iter_mut()))
+        {
+            // intake never admits a task with an empty queue; a row
+            // that somehow lost its pending rides as inactive (its
+            // carry must still occupy the row so later rows stay
+            // aligned with their strided slots)
+            if let Some(p) = ft.queue.front() {
+                let remaining = p.tokens.len().saturating_sub(p.off);
+                if remaining > 1 {
+                    let take = remaining.min(c + 1); // need next-token targets
+                    // PANIC-OK: off <= tokens.len() and take <= remaining
+                    // = tokens.len() - off, by the arithmetic above
+                    let src = &p.tokens[p.off..p.off + take];
+                    let n_in = take - 1;
+                    let loss = if p.count_loss { 1.0 } else { 0.0 };
+                    // (token, next-token) pairs; the zip is bounded by
+                    // the row width c >= n_in since take <= c + 1
+                    for (((dst_t, dst_g), dst_m), (cur, nxt)) in tok_row
+                        .iter_mut()
+                        .zip(tgt_row.iter_mut())
+                        .zip(mask_row.iter_mut())
+                        .zip(src.iter().zip(src.iter().skip(1)))
+                    {
+                        *dst_t = *cur;
+                        *dst_g = *nxt;
+                        *dst_m = loss;
+                    }
+                    *act = 1.0;
+                    *cons = n_in;
+                    any = true;
                 }
-                active[i] = 1.0;
-                consumed[i] = n_in;
-                any = true;
             }
             l_all.extend_from_slice(&ft.carry.l);
             u_all.extend_from_slice(&ft.carry.u);
@@ -957,15 +1054,15 @@ impl ModelThread {
         l_all.resize(b * l_stride, 0.0);
         u_all.resize(b * u_stride, 0.0);
         if any {
-            let fill = consumed.iter().filter(|&&x| x > 0).count();
+            let fill = self.scratch.consumed.iter().filter(|&&x| x > 0).count();
             self.stats.record_wave(fill);
             let e = &self.stream_entry;
             let out = self.rt.run_with_param_buffer(
                 e,
                 self.params.buffer(),
                 &[
-                    Tensor::f32(l_all, &e.inputs[1].shape.clone()),
-                    Tensor::f32(u_all, &e.inputs[2].shape.clone()),
+                    Tensor::f32(l_all, &self.shape_l),
+                    Tensor::f32(u_all, &self.shape_u),
                     Tensor::i32(toks, &[b, c]),
                     Tensor::i32(tgts, &[b, c]),
                     Tensor::f32(mask, &[b, c]),
@@ -977,50 +1074,71 @@ impl ModelThread {
             let (l_new, u_new, nll, cnt) = match parsed {
                 Ok(t) => t,
                 Err(err) => {
-                    self.fail_feed_wave(wave, &format!("{err:#}"));
+                    let msg = format!("{err:#}");
+                    self.fail_feed_wave(wave, &msg);
                     return;
                 }
             };
-            for i in 0..wave {
-                if consumed[i] == 0 {
+            // scatter the step's outputs back row by row; every zip is
+            // bounded by parse_stream_batch_out's size check, so no row
+            // access here can go out of range
+            for ((ft, cons), ((l_row, u_row), (nll_i, cnt_i))) in self
+                .feeds
+                .iter_mut()
+                .take(wave)
+                .zip(self.scratch.consumed.iter())
+                .zip(
+                    l_new
+                        .chunks_exact(l_stride)
+                        .zip(u_new.chunks_exact(u_stride))
+                        .zip(nll.iter().zip(cnt.iter())),
+                )
+            {
+                if *cons == 0 {
                     continue;
                 }
-                let ft = &mut self.feeds[i];
                 ft.carry.l.clear();
-                ft.carry.l.extend_from_slice(&l_new[i * l_stride..(i + 1) * l_stride]);
+                ft.carry.l.extend_from_slice(l_row);
                 ft.carry.u.clear();
-                ft.carry.u.extend_from_slice(&u_new[i * u_stride..(i + 1) * u_stride]);
-                let p = ft.queue.front_mut().expect("feed task with empty queue");
-                p.nll += nll[i] as f64;
-                p.cnt += cnt[i] as f64;
-                p.off += consumed[i];
-                self.stats.tokens_streamed.add(consumed[i] as u64);
+                ft.carry.u.extend_from_slice(u_row);
+                let p = match ft.queue.front_mut() {
+                    Some(p) => p,
+                    None => continue,
+                };
+                p.nll += f64::from(*nll_i);
+                p.cnt += f64::from(*cnt_i);
+                p.off += *cons;
+                self.stats.tokens_streamed.add(*cons as u64);
             }
         }
         // completion sweep (reverse so removals keep indices valid):
         // finished pendings respond; tasks with drained queues check
         // their carry back in and unpark any waiting generation
         let mut removed = 0usize;
-        let mut drained_sessions = Vec::new();
+        self.scratch.drained.clear();
         for i in (0..wave).rev() {
-            let ft = &mut self.feeds[i];
-            let done = {
-                let p = ft.queue.front().expect("feed task with empty queue");
-                p.tokens.len().saturating_sub(p.off) <= 1
+            let ft = match self.feeds.get_mut(i) {
+                Some(ft) => ft,
+                None => continue,
+            };
+            let done = match ft.queue.front() {
+                Some(p) => p.tokens.len().saturating_sub(p.off) <= 1,
+                None => true,
             };
             if !done {
                 continue;
             }
-            let p = ft.queue.pop_front().unwrap();
-            ft.consumed_total += p.off as u64;
-            self.stats.feeds.inc();
-            self.stats.feed_latency.record(p.t0.elapsed().as_secs_f64());
-            let fr = FeedResult { nll_sum: p.nll, count: p.cnt, evicted: p.evicted };
-            let _ = p.resp.send(Ok(fr));
+            if let Some(p) = ft.queue.pop_front() {
+                ft.consumed_total += p.off as u64;
+                self.stats.feeds.inc();
+                self.stats.feed_latency.record(p.t0.elapsed().as_secs_f64());
+                let fr = FeedResult { nll_sum: p.nll, count: p.cnt, evicted: p.evicted };
+                let _ = p.resp.send(Ok(fr));
+            }
             if ft.queue.is_empty() {
                 let ft = self.feeds.remove(i);
                 self.pool.checkin(ft.session, ft.carry, ft.consumed_total);
-                drained_sessions.push(ft.session);
+                self.scratch.drained.push(ft.session);
                 removed += 1;
             }
         }
@@ -1029,9 +1147,12 @@ impl ModelThread {
         if still > 0 && self.feeds.len() > still {
             self.feeds.rotate_left(still);
         }
-        for s in drained_sessions {
+        // (take/restore: activate_waiting_gen needs &mut self)
+        let mut drained = std::mem::take(&mut self.scratch.drained);
+        for s in drained.drain(..) {
             self.activate_waiting_gen(s);
         }
+        self.scratch.drained = drained;
     }
 
     /// Parse (l', u', nll [b], count [b]) from a stream_batch output
@@ -1099,11 +1220,14 @@ impl ModelThread {
         // cancelled (or zero-budget) tasks finish at the wave boundary
         let mut i = 0;
         while i < self.gens.len() {
-            let g = &self.gens[i];
-            if g.cancelled {
+            let (cancelled, exhausted) = match self.gens.get(i) {
+                Some(g) => (g.cancelled, g.produced >= g.opts.max_tokens),
+                None => break,
+            };
+            if cancelled {
                 let g = self.gens.remove(i);
                 self.finish_gen(g, FinishReason::Cancelled);
-            } else if g.produced >= g.opts.max_tokens {
+            } else if exhausted {
                 let g = self.gens.remove(i);
                 self.finish_gen(g, FinishReason::MaxTokens);
             } else {
@@ -1113,36 +1237,43 @@ impl ModelThread {
         // bind any generation still parked without a feed in front of
         // it (covers the rare admission race on activation, and makes
         // a parked task never depend on a future request to progress)
-        let unblocked: Vec<u64> = self
-            .gens
-            .iter()
-            .filter(|g| g.carry.is_none())
-            .map(|g| g.session)
-            .filter(|s| !self.feeds.iter().any(|f| f.session == *s))
-            .collect();
-        for s in unblocked {
+        self.scratch.unblocked.clear();
+        let feeds = &self.feeds;
+        self.scratch.unblocked.extend(
+            self.gens
+                .iter()
+                .filter(|g| g.carry.is_none())
+                .map(|g| g.session)
+                .filter(|s| !feeds.iter().any(|f| f.session == *s)),
+        );
+        let mut unblocked = std::mem::take(&mut self.scratch.unblocked);
+        for &s in unblocked.iter() {
             self.activate_waiting_gen(s);
         }
+        self.scratch.unblocked = unblocked;
         // wave = the first b_srv tasks whose carry is bound
-        let mut wave_idx = Vec::new();
+        self.scratch.wave_idx.clear();
         for (i, g) in self.gens.iter().enumerate() {
             if g.carry.is_some() {
-                wave_idx.push(i);
-                if wave_idx.len() == self.b_srv {
+                self.scratch.wave_idx.push(i);
+                if self.scratch.wave_idx.len() == self.b_srv {
                     break;
                 }
             }
         }
-        if wave_idx.is_empty() {
+        if self.scratch.wave_idx.is_empty() {
             return;
         }
-        self.stats.record_wave(wave_idx.len());
-        let mut wave: Vec<GenTask> = Vec::with_capacity(wave_idx.len());
-        for &i in wave_idx.iter().rev() {
+        self.stats.record_wave(self.scratch.wave_idx.len());
+        let mut wave = std::mem::take(&mut self.scratch.wave);
+        wave.clear();
+        for &i in self.scratch.wave_idx.iter().rev() {
             wave.push(self.gens.remove(i));
         }
         wave.reverse();
-        let tokens: Vec<i32> = wave.iter().map(|g| g.token).collect();
+        let mut tokens = std::mem::take(&mut self.scratch.tokens);
+        tokens.clear();
+        tokens.extend(wave.iter().map(|g| g.token));
         // single-row waves take the plain decode_step (no batch padding
         // to gather for one session); multi-row waves are the batched
         // continuous-decode hot path. The two are bitwise identical per
@@ -1170,8 +1301,9 @@ impl ModelThread {
             }
             _ => self.decode_rows_sequential(&mut wave, &tokens),
         };
-        let mut survivors = Vec::new();
-        for (mut g, res) in wave.into_iter().zip(results) {
+        let mut survivors = std::mem::take(&mut self.scratch.survivors);
+        survivors.clear();
+        for (mut g, res) in wave.drain(..).zip(results) {
             let logits = match res {
                 Ok(l) => l,
                 Err(e) => {
@@ -1198,7 +1330,10 @@ impl ModelThread {
             }
         }
         // fairness rotation: survivors rejoin at the back
-        self.gens.extend(survivors);
+        self.gens.extend(survivors.drain(..));
+        self.scratch.survivors = survivors;
+        self.scratch.tokens = tokens;
+        self.scratch.wave = wave;
     }
 
     /// Per-row decode fallback for backends without the `decode_batch`

@@ -1,0 +1,849 @@
+//! Reachability rule passes for `stlt lint --deep`: the call-graph
+//! tier that enforces the invariants the paper's O(S)-per-token claim
+//! and the repo's bitwise tests rest on.
+//!
+//! **Hot-path purity.** From the declared roots — every
+//! `Mixer::token_step` impl, `decode_step_batch`, the scheduler's
+//! `feed_wave`/`decode_wave`, `wire::Frame::{encode,decode}` and
+//! `scatter_rows` — flag reachable heap allocation, blocking
+//! operations (facade lock acquisition, condvar/channel waits, file
+//! or socket I/O) and panic sites (`panic!`-family macros, asserts,
+//! and an `[`-after-ident slice-indexing heuristic scoped to `net/`
+//! and `coordinator/`, where index arithmetic runs on externally
+//! sized data). `.unwrap()`/`.expect(` are *not* re-flagged here: the
+//! shallow tier already bans them crate-wide.
+//!
+//! Two traversal policies keep the ledger honest without drowning it:
+//! edges into `src/obs/` are cut (observability has its own overhead
+//! budget and bench row), and the *alloc* rule cuts the wave roots
+//! (`feed_wave`/`decode_wave`) at the `runtime/` boundary — per-wave
+//! workspace inside the engine is covered by the `decode_step_batch`
+//! root directly, with its own rationale'd entries, while the wave
+//! roots police the scheduler tier where scratch must be reused.
+//!
+//! **Determinism.** From the same roots: no `HashMap`/`HashSet`
+//! iteration (hash order would feed numerics or wire bytes), and no
+//! `Instant::now`/`SystemTime` reads (wall clock reaching tensor
+//! math). Independently of reachability, any function tagged
+//! `// F64-REDUCE` must not `+=`-accumulate in f32 — the scheduler's
+//! NLL sums and trainer reductions pin their bits to f64 accumulation.
+//!
+//! **Panic escape hatch.** A `// PANIC-OK: <invariant>` comment on
+//! (or in the comment block above) a flagged line suppresses the
+//! panic finding — but only with a non-empty invariant argument; a
+//! bare marker is itself a finding.
+//!
+//! Everything else lands in `lint_deep.allow`, one
+//! `rule qual-suffix -- rationale` line per entry; entries are matched
+//! by (rule, function-qual suffix) — not line numbers, so refactors
+//! within a function do not churn the ledger — and stale entries fail.
+
+use std::collections::{BTreeSet, VecDeque};
+use std::fs;
+use std::path::Path;
+
+use super::graph::{self, CallGraph};
+use super::locks;
+use super::parse;
+use super::Violation;
+
+pub const RULE_HOT_ALLOC: &str = "hot-alloc";
+pub const RULE_HOT_BLOCK: &str = "hot-block";
+pub const RULE_HOT_PANIC: &str = "hot-panic";
+pub const RULE_DET_HASH: &str = "det-hash-iter";
+pub const RULE_DET_TIME: &str = "det-time";
+pub const RULE_DET_F32: &str = "det-f32-accum";
+pub const RULE_STALE_DEEP: &str = "stale-deep-allow";
+
+/// Heap-allocation sinks. `.clone()` deliberately includes `Arc`
+/// clones (an atomic RMW on the hot path is still worth a stated
+/// reason); `Arc::clone(` is the idiomatic spelling and is matched by
+/// its own pattern below.
+const ALLOC_SINKS: &[&str] = &[
+    "Vec::new(",
+    "Vec::with_capacity(",
+    "vec!",
+    ".to_vec()",
+    ".clone()",
+    "Arc::clone(",
+    "Box::new(",
+    "format!(",
+    "String::from(",
+    "String::new(",
+    "String::with_capacity(",
+    ".to_string()",
+    ".collect()",
+    ".collect::<",
+];
+
+/// Blocking sinks: facade lock/condvar/channel waits and file/socket
+/// I/O. `.send(`/`.read(`/`.write(` are excluded — the crate's
+/// bounded-queue sends are non-blocking by protocol and flagged
+/// instead by the lock acquisitions around them.
+const BLOCK_SINKS: &[&str] = &[
+    ".lock()",
+    ".wait(",
+    ".wait_timeout(",
+    ".wait_while(",
+    ".recv()",
+    ".recv_timeout(",
+    ".join()",
+    "TcpStream::",
+    "TcpListener::",
+    "UdpSocket::",
+    "File::",
+    "OpenOptions::",
+    "read_to_string(",
+    "println!(",
+    "eprintln!(",
+];
+
+/// Panic sinks; `debug_assert!` is excluded by the identifier-boundary
+/// check (compiled out of release builds), `.unwrap()`/`.expect(` by
+/// the shallow tier's crate-wide ban.
+const PANIC_SINKS: &[&str] = &[
+    "panic!(",
+    "unreachable!(",
+    "todo!(",
+    "unimplemented!(",
+    "assert!(",
+    "assert_eq!(",
+    "assert_ne!(",
+];
+
+const TIME_SINKS: &[&str] = &["Instant::now(", "SystemTime::"];
+
+/// Hash-iteration method suffixes checked against each file's
+/// `HashMap`/`HashSet`-declared idents.
+const HASH_ITER_SUFFIXES: &[&str] = &[
+    ".iter()",
+    ".iter_mut()",
+    ".into_iter()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".drain(",
+    ".retain(",
+];
+
+/// One pre-allowlist finding: the function qual is what allowlist
+/// entries match against.
+struct Finding {
+    qual: String,
+    v: Violation,
+}
+
+/// A declared hot-path root. `wave` roots cut the alloc traversal at
+/// the `runtime/` boundary (see module docs).
+struct Root {
+    node: usize,
+    wave: bool,
+}
+
+fn hot_roots(g: &CallGraph) -> Vec<Root> {
+    let mut out = Vec::new();
+    for n in 0..g.nodes.len() {
+        let it = g.item(n);
+        let is_root = match it.name.as_str() {
+            "token_step" => it.trait_name.as_deref() == Some("Mixer"),
+            "decode_step_batch" | "feed_wave" | "decode_wave" | "scatter_rows" => true,
+            "encode" | "decode" => it.self_ty.as_deref() == Some("Frame"),
+            _ => false,
+        };
+        if is_root {
+            let wave = matches!(it.name.as_str(), "feed_wave" | "decode_wave");
+            out.push(Root { node: n, wave });
+        }
+    }
+    out
+}
+
+/// Files the traversal never descends into: observability (own
+/// overhead budget, pinned by its bench row) and the model checker
+/// (compiled only under `--cfg model_check`).
+fn cut_file(rel: &str) -> bool {
+    rel.contains("/obs/") || rel.ends_with("util/chk.rs")
+}
+
+/// BFS bookkeeping: for each reached node, the root it was first
+/// reached from and its BFS parent (parent == node for roots).
+struct Reach {
+    info: std::collections::BTreeMap<usize, (usize, usize)>,
+    order: Vec<usize>,
+}
+
+fn bfs(g: &CallGraph, starts: &[usize], cut: &dyn Fn(&CallGraph, usize) -> bool) -> Reach {
+    let mut info = std::collections::BTreeMap::new();
+    let mut order = Vec::new();
+    let mut q = VecDeque::new();
+    for &r in starts {
+        if !info.contains_key(&r) {
+            info.insert(r, (r, r));
+            order.push(r);
+            q.push_back(r);
+        }
+    }
+    while let Some(u) = q.pop_front() {
+        let root = info[&u].0;
+        for &(v, _) in &g.edges[u] {
+            if info.contains_key(&v) || cut(g, v) {
+                continue;
+            }
+            info.insert(v, (root, u));
+            order.push(v);
+            q.push_back(v);
+        }
+    }
+    Reach { info, order }
+}
+
+/// Human-readable origin of a reached node: the root, or the BFS path
+/// from it (middle elided past 4 hops).
+fn origin(g: &CallGraph, reach: &Reach, n: usize) -> String {
+    let (root, _) = reach.info[&n];
+    if root == n {
+        return "a declared hot-path root".to_string();
+    }
+    let mut path = vec![n];
+    let mut cur = n;
+    while let Some(&(_, p)) = reach.info.get(&cur) {
+        if p == cur {
+            break;
+        }
+        path.push(p);
+        cur = p;
+    }
+    path.reverse();
+    let names: Vec<&str> = path.iter().map(|&x| g.item(x).qual.as_str()).collect();
+    let via = if names.len() <= 4 {
+        names.join(" -> ")
+    } else {
+        format!("{} -> {} -> ... -> {}", names[0], names[1], names[names.len() - 2])
+    };
+    format!("reachable from `{}` via {via}", g.item(root).qual)
+}
+
+/// `pat` occurs in `line` with an identifier boundary before it (so
+/// `debug_assert!(` never matches `assert!(`, `MyVec::new(` never
+/// matches `Vec::new(`).
+fn find_sink(line: &str, pat: &str) -> bool {
+    let first = match pat.chars().next() {
+        Some(c) => c,
+        None => return false,
+    };
+    let needs_boundary = first.is_alphanumeric() || first == '_';
+    let mut from = 0usize;
+    while let Some(p) = line[from..].find(pat) {
+        let at = from + p;
+        let bounded = !needs_boundary
+            || line[..at]
+                .chars()
+                .next_back()
+                .is_none_or(|c| !(c.is_alphanumeric() || c == '_'));
+        if bounded {
+            return true;
+        }
+        from = at + pat.len();
+    }
+    false
+}
+
+/// `[` directly after an identifier char, `)` or `]` — the slice
+/// indexing / range-slicing shapes that can panic at run time.
+fn has_indexing(line: &str) -> bool {
+    let mut prev = ' ';
+    for c in line.chars() {
+        if c == '['
+            && (prev.is_alphanumeric() || prev == '_' || prev == ')' || prev == ']')
+        {
+            return true;
+        }
+        prev = c;
+    }
+    false
+}
+
+/// Indexing is only flagged where index arithmetic runs on externally
+/// sized data; kernel code indexes its own workspaces pervasively and
+/// is covered by the shape checks at its entry points.
+fn indexing_in_scope(rel: &str) -> bool {
+    rel.contains("/net/") || rel.contains("/coordinator/")
+}
+
+/// `// PANIC-OK: <invariant>` on the line or in the contiguous comment
+/// block above. `Some(rationale)` when a marker is present (possibly
+/// empty — the caller flags that).
+fn panic_ok_rationale(raw: &[&str], i: usize) -> Option<String> {
+    let find = |l: &str| l.find("PANIC-OK:").map(|p| l[p + "PANIC-OK:".len()..].trim().to_string());
+    if let Some(r) = raw.get(i).and_then(|l| find(l)) {
+        return Some(r);
+    }
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let t = raw[j].trim_start();
+        if !t.starts_with("//") {
+            break;
+        }
+        if let Some(r) = find(t) {
+            return Some(r);
+        }
+    }
+    None
+}
+
+fn push_finding(out: &mut Vec<Finding>, g: &CallGraph, n: usize, line: usize, rule: &'static str, msg: String) {
+    out.push(Finding {
+        qual: g.item(n).qual.clone(),
+        v: Violation { file: g.file_of(n).rel.clone(), line: line + 1, rule, msg },
+    });
+}
+
+/// Hot-path purity: one full-rules traversal (block + panic), plus a
+/// per-root alloc traversal so wave roots can cut at `runtime/`.
+fn hot_pass(g: &CallGraph, out: &mut Vec<Finding>) {
+    let roots = hot_roots(g);
+    let all: Vec<usize> = roots.iter().map(|r| r.node).collect();
+    let full = bfs(g, &all, &|g, v| cut_file(&g.file_of(v).rel));
+    for &n in &full.order {
+        let o = origin(g, &full, n);
+        scan_hot_node(g, n, &o, false, true, out);
+    }
+    // alloc: per-root so the cut can depend on the root kind, first
+    // reach wins (deterministic: roots iterate in node order)
+    let mut alloc_seen: BTreeSet<usize> = BTreeSet::new();
+    for r in &roots {
+        let cut = |g: &CallGraph, v: usize| {
+            let rel = &g.file_of(v).rel;
+            cut_file(rel) || (r.wave && rel.contains("/runtime/"))
+        };
+        let reach = bfs(g, &[r.node], &cut);
+        for &n in &reach.order {
+            if !alloc_seen.insert(n) {
+                continue;
+            }
+            let o = origin(g, &reach, n);
+            scan_hot_node(g, n, &o, true, false, out);
+        }
+    }
+}
+
+/// Scan one reached node's body for hot-path sinks. `alloc` and
+/// `rest` (block + panic) are split because they ride different
+/// traversals.
+fn scan_hot_node(
+    g: &CallGraph,
+    n: usize,
+    origin: &str,
+    alloc: bool,
+    rest: bool,
+    out: &mut Vec<Finding>,
+) {
+    let f = g.file_of(n);
+    let it = g.item(n);
+    let code: Vec<&str> = f.scrubbed.lines().collect();
+    let raw: Vec<&str> = f.raw.lines().collect();
+    let idx_scope = indexing_in_scope(&f.rel);
+    let hi = it.end_line.min(code.len().saturating_sub(1));
+    for i in it.start_line..=hi {
+        let l = code[i];
+        if alloc {
+            if let Some(pat) = ALLOC_SINKS.iter().find(|p| find_sink(l, p)) {
+                let what = pat.trim_end_matches('(');
+                push_finding(
+                    out,
+                    g,
+                    n,
+                    i,
+                    RULE_HOT_ALLOC,
+                    format!("`{what}` allocates in `{}`, {origin}", it.qual),
+                );
+            }
+        }
+        if !rest {
+            continue;
+        }
+        if let Some(pat) = BLOCK_SINKS.iter().find(|p| find_sink(l, p)) {
+            let what = pat.trim_end_matches('(');
+            push_finding(
+                out,
+                g,
+                n,
+                i,
+                RULE_HOT_BLOCK,
+                format!("`{what}` can block in `{}`, {origin}", it.qual),
+            );
+        }
+        let panic_pat = PANIC_SINKS.iter().find(|p| find_sink(l, p));
+        let indexed = idx_scope && has_indexing(l) && i != it.start_line;
+        if panic_pat.is_some() || indexed {
+            match panic_ok_rationale(&raw, i) {
+                Some(r) if !r.is_empty() => {}
+                Some(_) => push_finding(
+                    out,
+                    g,
+                    n,
+                    i,
+                    RULE_HOT_PANIC,
+                    "`PANIC-OK` marker without an invariant argument — state why this \
+                     cannot panic"
+                        .to_string(),
+                ),
+                None => {
+                    let what = match panic_pat {
+                        Some(p) => format!("`{}`", p.trim_end_matches('(')),
+                        None => "slice indexing".to_string(),
+                    };
+                    push_finding(
+                        out,
+                        g,
+                        n,
+                        i,
+                        RULE_HOT_PANIC,
+                        format!(
+                            "{what} can panic in `{}`, {origin} — use checked access or \
+                             add `// PANIC-OK: <invariant>`",
+                            it.qual
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Determinism: hash-order iteration and wall-clock reads reachable
+/// from the hot roots.
+fn det_pass(g: &CallGraph, out: &mut Vec<Finding>) {
+    let roots: Vec<usize> = hot_roots(g).iter().map(|r| r.node).collect();
+    let reach = bfs(g, &roots, &|g, v| cut_file(&g.file_of(v).rel));
+    for &n in &reach.order {
+        let f = g.file_of(n);
+        let it = g.item(n);
+        let o = origin(g, &reach, n);
+        let code: Vec<&str> = f.scrubbed.lines().collect();
+        let hashes = &g.hash_idents[g.nodes[n].0];
+        let hi = it.end_line.min(code.len().saturating_sub(1));
+        for i in it.start_line..=hi {
+            let l = code[i];
+            if let Some(pat) = TIME_SINKS.iter().find(|p| find_sink(l, p)) {
+                let what = pat.trim_end_matches(['(', ':']);
+                push_finding(
+                    out,
+                    g,
+                    n,
+                    i,
+                    RULE_DET_TIME,
+                    format!(
+                        "`{what}` wall-clock read in `{}`, {o} — time must not feed \
+                         tensor math or wire bytes",
+                        it.qual
+                    ),
+                );
+            }
+            if let Some(h) = hashes.iter().find(|h| hash_iterated(l, h)) {
+                push_finding(
+                    out,
+                    g,
+                    n,
+                    i,
+                    RULE_DET_HASH,
+                    format!(
+                        "hash-order iteration over `{h}` in `{}`, {o} — order is \
+                         nondeterministic; use a BTreeMap/sorted keys",
+                        it.qual
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// `line` iterates the hash-typed ident `h`: `h.iter()`-style method
+/// suffixes or a `for … in … h` loop header.
+fn hash_iterated(line: &str, h: &str) -> bool {
+    for suf in HASH_ITER_SUFFIXES {
+        let pat = format!("{h}{suf}");
+        if find_sink(line, &pat) {
+            return true;
+        }
+    }
+    if let Some(p) = line.find("for ") {
+        if let Some(q) = line[p..].find(" in ") {
+            return super::has_word(&line[p + q + 4..], h);
+        }
+    }
+    false
+}
+
+/// `// F64-REDUCE` functions must not `+=`-accumulate in f32: flag
+/// `+=` lines whose left-hand ident is declared `f32` in the file or
+/// whose right side rounds through `as f32`.
+fn f64_reduce_pass(g: &CallGraph, out: &mut Vec<Finding>) {
+    for n in 0..g.nodes.len() {
+        let f = g.file_of(n);
+        let it = g.item(n);
+        let raw: Vec<&str> = f.raw.lines().collect();
+        let lo = it.start_line.saturating_sub(3);
+        let tagged = raw[lo..=it.start_line.min(raw.len().saturating_sub(1))]
+            .iter()
+            .any(|l| l.contains("F64-REDUCE"));
+        if !tagged {
+            continue;
+        }
+        let code: Vec<&str> = f.scrubbed.lines().collect();
+        let floats = &g.f32_idents[g.nodes[n].0];
+        let hi = it.end_line.min(code.len().saturating_sub(1));
+        for i in it.start_line..=hi {
+            let l = code[i];
+            let Some(p) = l.find("+=") else { continue };
+            let lhs: String = l[..p]
+                .trim_end()
+                .chars()
+                .rev()
+                .take_while(|c| c.is_alphanumeric() || *c == '_')
+                .collect::<String>()
+                .chars()
+                .rev()
+                .collect();
+            if l.contains(" as f32") || floats.contains(&lhs) {
+                push_finding(
+                    out,
+                    g,
+                    n,
+                    i,
+                    RULE_DET_F32,
+                    format!(
+                        "f32 `+=` accumulation in `{}`, a `// F64-REDUCE` function — \
+                         accumulate in f64 and round once at the edge",
+                        it.qual
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// One `lint_deep.allow` entry: suppress `rule` findings in functions
+/// whose qualified path ends with `path`. The rationale is mandatory.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DeepAllowEntry {
+    pub rule: String,
+    pub path: String,
+    pub rationale: String,
+    pub line: usize,
+}
+
+/// Parse `lint_deep.allow`: one `rule qual-suffix -- rationale` line
+/// per entry, `#` comments and blank lines skipped.
+pub fn parse_deep_allowlist(text: &str) -> Result<Vec<DeepAllowEntry>, String> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (head, rationale) = line.split_once(" -- ").ok_or_else(|| {
+            format!(
+                "lint_deep.allow:{}: expected `rule qual-suffix -- rationale`, got '{line}'",
+                i + 1
+            )
+        })?;
+        let rationale = rationale.trim();
+        if rationale.is_empty() {
+            return Err(format!("lint_deep.allow:{}: empty rationale", i + 1));
+        }
+        let mut it = head.split_whitespace();
+        match (it.next(), it.next(), it.next()) {
+            (Some(rule), Some(path), None) => out.push(DeepAllowEntry {
+                rule: rule.to_string(),
+                path: path.to_string(),
+                rationale: rationale.to_string(),
+                line: i + 1,
+            }),
+            _ => {
+                return Err(format!(
+                    "lint_deep.allow:{}: expected `rule qual-suffix -- rationale`, got '{line}'",
+                    i + 1
+                ))
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn qual_matches(qual: &str, path: &str) -> bool {
+    qual == path || qual.ends_with(&format!("::{path}"))
+}
+
+/// Run every deep pass over the `.rs` files under `src_root`, apply
+/// the allowlist at `allow_path` (absent file = empty), and — when
+/// `lock_graph_out` is given — write the lock-order graph JSON there.
+/// Stale allowlist entries are violations, mirroring the shallow tier.
+pub fn run_deep(
+    src_root: &Path,
+    allow_path: &Path,
+    lock_graph_out: Option<&Path>,
+) -> Result<Vec<Violation>, String> {
+    let allow = match fs::read_to_string(allow_path) {
+        Ok(text) => parse_deep_allowlist(&text)?,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+        Err(e) => return Err(format!("{}: {e}", allow_path.display())),
+    };
+    let mut paths = Vec::new();
+    super::rs_files(src_root, &mut paths).map_err(|e| format!("{}: {e}", src_root.display()))?;
+    let mut parsed = Vec::new();
+    for p in &paths {
+        let src = fs::read_to_string(p).map_err(|e| format!("{}: {e}", p.display()))?;
+        let rel = p.to_string_lossy().replace('\\', "/");
+        parsed.push(parse::parse_file(&rel, &src));
+    }
+    let g = graph::build(parsed);
+    let mut findings = Vec::new();
+    hot_pass(&g, &mut findings);
+    det_pass(&g, &mut findings);
+    f64_reduce_pass(&g, &mut findings);
+    let lg = locks::analyze(&g);
+    if let Some(out_path) = lock_graph_out {
+        fs::write(out_path, lg.to_json()).map_err(|e| format!("{}: {e}", out_path.display()))?;
+    }
+    findings.extend(lg.cycle_findings().into_iter().map(|(qual, v)| Finding { qual, v }));
+    let mut used = vec![false; allow.len()];
+    let mut out = Vec::new();
+    for f in findings {
+        let suppressed = allow.iter().enumerate().any(|(k, a)| {
+            let hit = a.rule == f.v.rule && qual_matches(&f.qual, &a.path);
+            if hit {
+                used[k] = true;
+            }
+            hit
+        });
+        if !suppressed {
+            out.push(f.v);
+        }
+    }
+    for (k, a) in allow.iter().enumerate() {
+        if !used[k] {
+            out.push(Violation {
+                file: allow_path.to_string_lossy().into_owned(),
+                line: a.line,
+                rule: RULE_STALE_DEEP,
+                msg: format!(
+                    "entry `{} {}` no longer suppresses anything — remove it",
+                    a.rule, a.path
+                ),
+            });
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parse::parse_file;
+    use super::*;
+
+    fn findings_of(sources: &[(&str, &str)]) -> Vec<(String, &'static str, String)> {
+        let g = graph::build(sources.iter().map(|(rel, src)| parse_file(rel, src)).collect());
+        let mut out = Vec::new();
+        hot_pass(&g, &mut out);
+        det_pass(&g, &mut out);
+        f64_reduce_pass(&g, &mut out);
+        out.into_iter().map(|f| (f.qual, f.v.rule, f.v.msg)).collect()
+    }
+
+    #[test]
+    fn alloc_reachable_from_root_is_flagged() {
+        let src = "\
+impl T {
+    pub fn feed_wave(&self) {
+        helper();
+    }
+}
+fn helper() {
+    let v = Vec::new();
+}
+";
+        let f = findings_of(&[("src/coordinator/server.rs", src)]);
+        let hit = f
+            .iter()
+            .find(|(q, r, _)| *r == RULE_HOT_ALLOC && q.ends_with("::helper"))
+            .expect("alloc finding");
+        assert!(hit.2.contains("feed_wave"), "origin chain named: {}", hit.2);
+    }
+
+    #[test]
+    fn unreachable_fns_are_not_scanned() {
+        let src = "\
+pub fn feed_wave() {}
+fn cold() {
+    let v = Vec::new();
+    let g = m.lock();
+}
+";
+        let f = findings_of(&[("src/coordinator/server.rs", src)]);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn wave_roots_cut_alloc_at_runtime_boundary() {
+        let sched = "\
+pub fn feed_wave() {
+    crate::runtime::exec::engine_step();
+}
+";
+        let engine = "\
+pub fn engine_step() {
+    let v = Vec::new();
+    let g = m.lock();
+}
+";
+        let f = findings_of(&[
+            ("src/coordinator/server.rs", sched),
+            ("src/runtime/exec.rs", engine),
+        ]);
+        // alloc is cut at the runtime/ boundary for wave roots…
+        assert!(
+            !f.iter().any(|(q, r, _)| *r == RULE_HOT_ALLOC && q.ends_with("engine_step")),
+            "{f:?}"
+        );
+        // …but blocking is still traversed through it
+        assert!(
+            f.iter().any(|(q, r, _)| *r == RULE_HOT_BLOCK && q.ends_with("engine_step")),
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn decode_step_batch_root_covers_engine_allocs() {
+        let engine = "\
+impl Engine {
+    pub fn decode_step_batch(&self) {
+        let mut x = vec![0.0f32; 8];
+    }
+}
+";
+        let f = findings_of(&[("src/runtime/native_stlt.rs", engine)]);
+        assert!(
+            f.iter().any(|(q, r, _)| *r == RULE_HOT_ALLOC && q.ends_with("decode_step_batch")),
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn obs_edges_are_cut() {
+        let sched = "\
+pub fn decode_wave() {
+    crate::obs::metrics::bump();
+}
+";
+        let obs = "\
+pub fn bump() {
+    let v = Vec::new();
+}
+";
+        let f = findings_of(&[("src/coordinator/server.rs", sched), ("src/obs/metrics.rs", obs)]);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn panic_sites_and_indexing_with_panic_ok_markers() {
+        let src = "\
+pub fn feed_wave(xs: &[f32], i: usize) {
+    let a = xs[i];
+    // PANIC-OK: i < xs.len() checked by the wave assembler
+    let b = xs[i];
+    // PANIC-OK:
+    let c = xs[i];
+    assert!(i < 4);
+}
+";
+        let f = findings_of(&[("src/coordinator/server.rs", src)]);
+        let panics: Vec<_> = f.iter().filter(|(_, r, _)| *r == RULE_HOT_PANIC).collect();
+        // line 2 indexing (unmarked), line 6 empty marker, line 7 assert
+        assert_eq!(panics.len(), 3, "{panics:?}");
+        assert!(panics.iter().any(|(_, _, m)| m.contains("slice indexing")));
+        assert!(panics.iter().any(|(_, _, m)| m.contains("without an invariant")));
+        assert!(panics.iter().any(|(_, _, m)| m.contains("`assert!`")));
+    }
+
+    #[test]
+    fn debug_assert_and_indexing_scope_are_exempt() {
+        let src = "\
+pub fn token_step(xs: &[f32], i: usize) {
+    debug_assert!(i < xs.len());
+    let a = xs[i];
+}
+";
+        // runtime/ file: indexing heuristic out of scope, debug_assert
+        // bounded away from assert!; the Mixer impl context makes
+        // token_step a root
+        let src2 = format!("pub trait Mixer {{}}\nimpl Mixer for R {{\n{src}}}\n");
+        let f = findings_of(&[("src/runtime/mixer.rs", &src2)]);
+        assert!(f.iter().all(|(_, r, _)| *r != RULE_HOT_PANIC), "{f:?}");
+    }
+
+    #[test]
+    fn det_rules_flag_time_and_hash_iteration() {
+        let src = "\
+use std::collections::HashMap;
+pub struct S { sessions: HashMap<u64, u32> }
+impl S {
+    pub fn decode_wave(&self) {
+        let t = Instant::now();
+        for (k, v) in self.sessions.iter() {
+        }
+    }
+}
+";
+        let f = findings_of(&[("src/coordinator/server.rs", src)]);
+        assert!(f.iter().any(|(_, r, _)| *r == RULE_DET_TIME), "{f:?}");
+        assert!(f.iter().any(|(_, r, m)| *r == RULE_DET_HASH && m.contains("sessions")), "{f:?}");
+    }
+
+    #[test]
+    fn f64_reduce_tag_bans_f32_accumulation() {
+        let src = "\
+// F64-REDUCE: per-session NLL sums are bit-pinned
+pub fn tally(xs: &[f32], acc: &mut f32) {
+    for x in xs {
+        *acc += x;
+    }
+}
+pub fn untagged(xs: &[f32], acc: &mut f32) {
+    for x in xs {
+        *acc += x;
+    }
+}
+";
+        let f = findings_of(&[("src/coordinator/server.rs", src)]);
+        let hits: Vec<_> = f.iter().filter(|(_, r, _)| *r == RULE_DET_F32).collect();
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert!(hits[0].0.ends_with("::tally"));
+    }
+
+    #[test]
+    fn deep_allowlist_parses_and_requires_rationale() {
+        let ok = parse_deep_allowlist(
+            "# ledger\nhot-alloc Engine::decode_step_batch -- per-wave workspace, amortized\n",
+        )
+        .unwrap();
+        assert_eq!(ok.len(), 1);
+        assert_eq!(ok[0].rule, "hot-alloc");
+        assert_eq!(ok[0].path, "Engine::decode_step_batch");
+        assert_eq!(ok[0].rationale, "per-wave workspace, amortized");
+        assert!(parse_deep_allowlist("hot-alloc Engine::step\n").is_err(), "missing rationale");
+        assert!(parse_deep_allowlist("hot-alloc Engine::step -- \n").is_err(), "empty rationale");
+        assert!(parse_deep_allowlist("one two three -- why\n").is_err(), "extra token");
+    }
+
+    #[test]
+    fn qual_suffix_matching() {
+        assert!(qual_matches("coordinator::server::ModelThread::feed_wave", "feed_wave"));
+        assert!(qual_matches(
+            "coordinator::server::ModelThread::feed_wave",
+            "ModelThread::feed_wave"
+        ));
+        assert!(!qual_matches("coordinator::server::ModelThread::feed_wave", "wave"));
+    }
+}

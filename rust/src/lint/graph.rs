@@ -1,0 +1,738 @@
+//! Crate-wide function-level call graph for the deep lint tier.
+//!
+//! Name resolution is heuristic but deliberately *over-approximate*:
+//! a call site may resolve to several candidate callees, and
+//! reachability unions them all — a false edge costs an allowlist
+//! entry with a stated reason, a missing edge costs an invariant. The
+//! rules, in resolution order:
+//!
+//! * `self.m(…)` — methods of the enclosing `impl` type (both its
+//!   inherent and trait impl blocks), then of the enclosing trait.
+//! * `recv.m(…)` — the receiver ident's declared types (a crate-wide
+//!   `ident: Type` scan, smart-pointer/cell wrappers unwrapped), then
+//!   every crate method named `m` unless `m` is on the deny list of
+//!   ubiquitous std names (`push`, `iter`, `get`, …) — those resolve
+//!   only through a typed receiver.
+//! * `Type::m(…)` / `Self::m(…)` — the impl-method index.
+//! * `path::f(…)` — free functions named `f`, filtered by module-path
+//!   suffix; bare `f(…)` prefers same-file, then same-module, then
+//!   every candidate.
+//! * `// LINT-EDGE: path::to::fn` — the escape hatch for calls the
+//!   scanner cannot see (dyn dispatch through erased closures, fn
+//!   pointers): adds an edge from the enclosing function to every fn
+//!   whose qualified path ends with the given suffix.
+//!
+//! Closures are part of their enclosing function (see [`super::parse`]),
+//! so a job body enqueued from `scatter_rows`'s *call site* is analyzed
+//! as part of that caller.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::parse::{FnItem, ParsedFile};
+
+/// Wrapper types unwrapped when recording an ident's declared type:
+/// `cache: Mutex<Option<Panels>>` declares `cache` as a `Panels`
+/// receiver for method resolution (and a `Mutex<HashMap<…>>` field
+/// still counts as a `HashMap` ident for the determinism pass).
+const WRAPPERS: [&str; 9] =
+    ["Arc", "Box", "Rc", "Mutex", "RwLock", "RefCell", "Cell", "Option", "MutexGuard"];
+
+/// Method names that are overwhelmingly std's when the receiver type
+/// is unknown. An untyped `x.push(…)` must not resolve to every crate
+/// method named `push`; typed receivers still resolve normally.
+const DENY_UNTYPED_METHODS: [&str; 77] = [
+    "recv", "recv_timeout", "try_recv",
+    "push", "pop", "len", "is_empty", "iter", "iter_mut", "into_iter", "get", "get_mut",
+    "insert", "remove", "contains", "contains_key", "clone", "next", "extend", "drain",
+    "clear", "take", "map", "and_then", "or_else", "unwrap", "expect", "unwrap_or",
+    "unwrap_or_else", "unwrap_or_default", "ok_or", "ok_or_else", "as_ref", "as_mut",
+    "as_str", "as_slice", "as_bytes", "to_string", "to_owned", "entry", "or_insert",
+    "or_insert_with", "keys", "values", "split", "trim", "parse", "join", "send", "min",
+    "max", "abs", "sqrt", "exp", "ln", "powi", "powf", "to_vec", "collect", "sum", "fold",
+    "rev", "enumerate", "zip", "chain", "filter", "any", "all", "find", "position",
+    "count", "last", "first", "copied", "cloned", "flatten", "into_inner", "front",
+];
+
+/// The crate call graph: flattened non-test fns plus per-call-site
+/// edges (`edges[n]` = `(callee node, 0-indexed call-site line)`).
+pub struct CallGraph {
+    pub files: Vec<ParsedFile>,
+    /// node → (file index, fn index within that file)
+    pub nodes: Vec<(usize, usize)>,
+    pub edges: Vec<Vec<(usize, usize)>>,
+    /// Per-file idents declared with a `HashMap`/`HashSet` type
+    /// (wrappers unwrapped) — the determinism pass's iteration targets.
+    pub hash_idents: Vec<BTreeSet<String>>,
+    /// Per-file idents declared `f32` — the `F64-REDUCE` pass's
+    /// accumulator candidates.
+    pub f32_idents: Vec<BTreeSet<String>>,
+}
+
+impl CallGraph {
+    pub fn item(&self, n: usize) -> &FnItem {
+        let (fi, ii) = self.nodes[n];
+        &self.files[fi].fns[ii]
+    }
+
+    pub fn file_of(&self, n: usize) -> &ParsedFile {
+        &self.files[self.nodes[n].0]
+    }
+
+    /// Nodes whose qualified path ends with `suffix` (`::`-aligned).
+    pub fn find_by_suffix(&self, suffix: &str) -> Vec<usize> {
+        let tail = format!("::{suffix}");
+        (0..self.nodes.len())
+            .filter(|&n| {
+                let q = &self.item(n).qual;
+                q == suffix || q.ends_with(&tail)
+            })
+            .collect()
+    }
+}
+
+/// Build the graph over already-parsed files.
+pub fn build(files: Vec<ParsedFile>) -> CallGraph {
+    let mut nodes: Vec<(usize, usize)> = Vec::new();
+    for (fi, f) in files.iter().enumerate() {
+        for (ii, it) in f.fns.iter().enumerate() {
+            if !it.is_test {
+                nodes.push((fi, ii));
+            }
+        }
+    }
+    let mut r = Resolver {
+        files: &files,
+        nodes: &nodes,
+        by_name: BTreeMap::new(),
+        by_ty_method: BTreeMap::new(),
+        by_method: BTreeMap::new(),
+        ty_of: BTreeMap::new(),
+    };
+    for (n, &(fi, ii)) in nodes.iter().enumerate() {
+        let it = &files[fi].fns[ii];
+        r.by_name.entry(it.name.clone()).or_default().push(n);
+        if it.self_ty.is_some() || it.trait_name.is_some() {
+            r.by_method.entry(it.name.clone()).or_default().push(n);
+        }
+        if let Some(t) = &it.self_ty {
+            r.by_ty_method.entry((t.clone(), it.name.clone())).or_default().push(n);
+        }
+        if let Some(t) = &it.trait_name {
+            r.by_ty_method.entry((t.clone(), it.name.clone())).or_default().push(n);
+        }
+    }
+    // -- declared-type scan ------------------------------------------
+    let mut hash_idents: Vec<BTreeSet<String>> = Vec::new();
+    let mut f32_idents: Vec<BTreeSet<String>> = Vec::new();
+    for f in &files {
+        let mut hashes = BTreeSet::new();
+        let mut floats = BTreeSet::new();
+        for line in f.scrubbed.lines() {
+            scan_decls(line, |ident, ty| {
+                if ty == "HashMap" || ty == "HashSet" {
+                    hashes.insert(ident.to_string());
+                }
+                if ty == "f32" {
+                    floats.insert(ident.to_string());
+                }
+                if ty.starts_with(|c: char| c.is_ascii_uppercase()) {
+                    r.ty_of.entry(ident.to_string()).or_default().insert(ty.to_string());
+                }
+            });
+        }
+        hash_idents.push(hashes);
+        f32_idents.push(floats);
+    }
+    // -- edges -------------------------------------------------------
+    let mut edges: Vec<Vec<(usize, usize)>> = Vec::with_capacity(nodes.len());
+    for (n, &(fi, ii)) in nodes.iter().enumerate() {
+        let f = &files[fi];
+        let it = &f.fns[ii];
+        let code: Vec<&str> = f.scrubbed.lines().collect();
+        let raw: Vec<&str> = f.raw.lines().collect();
+        let mut out: BTreeSet<(usize, usize)> = BTreeSet::new();
+        let hi = it.end_line.min(code.len().saturating_sub(1));
+        for line_no in it.start_line..=hi {
+            for call in find_calls(code[line_no]) {
+                // the fn's own signature (`fn name(…`) is not a call
+                if line_no == it.start_line
+                    && call.receiver.is_none()
+                    && call.segs.len() == 1
+                    && call.segs[0] == it.name
+                {
+                    continue;
+                }
+                for t in r.resolve(&call, it, fi) {
+                    if t != n {
+                        out.insert((t, line_no));
+                    }
+                }
+            }
+            // escape hatch: dyn / fn-pointer dispatch declared by hand
+            if let Some(p) = raw.get(line_no).and_then(|l| l.find("LINT-EDGE:")) {
+                let spec = &raw[line_no][p + "LINT-EDGE:".len()..];
+                for name in spec.split(',') {
+                    let name = name.trim();
+                    if name.is_empty() {
+                        continue;
+                    }
+                    let tail = format!("::{name}");
+                    for (t, &(tfi, tii)) in nodes.iter().enumerate() {
+                        let q = &files[tfi].fns[tii].qual;
+                        if (q == name || q.ends_with(&tail)) && t != n {
+                            out.insert((t, line_no));
+                        }
+                    }
+                }
+            }
+        }
+        edges.push(out.into_iter().collect());
+    }
+    CallGraph { files, nodes, edges, hash_idents, f32_idents }
+}
+
+struct Resolver<'a> {
+    files: &'a [ParsedFile],
+    nodes: &'a [(usize, usize)],
+    by_name: BTreeMap<String, Vec<usize>>,
+    by_ty_method: BTreeMap<(String, String), Vec<usize>>,
+    by_method: BTreeMap<String, Vec<usize>>,
+    ty_of: BTreeMap<String, BTreeSet<String>>,
+}
+
+impl Resolver<'_> {
+    fn module_of(&self, n: usize) -> &str {
+        &self.files[self.nodes[n].0].module
+    }
+
+    fn item_of(&self, n: usize) -> &FnItem {
+        let (fi, fj) = self.nodes[n];
+        &self.files[fi].fns[fj]
+    }
+
+    fn resolve(&self, call: &Call, it: &FnItem, fi: usize) -> Vec<usize> {
+        let last = match call.segs.last() {
+            Some(s) => s.as_str(),
+            None => return Vec::new(),
+        };
+        // -- method call ---------------------------------------------
+        if let Some(recv) = &call.receiver {
+            let mut tys: Vec<String> = Vec::new();
+            match recv.as_deref() {
+                Some("self") | Some("Self") => {
+                    tys.extend(it.self_ty.clone());
+                    tys.extend(it.trait_name.clone());
+                }
+                Some(ident) => {
+                    if let Some(set) = self.ty_of.get(ident) {
+                        tys.extend(set.iter().cloned());
+                    }
+                }
+                None => {}
+            }
+            let mut hits: BTreeSet<usize> = BTreeSet::new();
+            for t in &tys {
+                if let Some(v) = self.by_ty_method.get(&(t.clone(), last.to_string())) {
+                    hits.extend(v.iter().copied());
+                }
+            }
+            if !hits.is_empty() {
+                return hits.into_iter().collect();
+            }
+            if DENY_UNTYPED_METHODS.contains(&last) {
+                return Vec::new();
+            }
+            // untyped fallback: like bare calls, prefer same-file
+            // methods — `c.vec_i32()` inside `wire.rs` means the
+            // `Cursor` helper next to it, not a same-named method in
+            // another subsystem
+            let cands = self.by_method.get(last).cloned().unwrap_or_default();
+            let same_file: Vec<usize> =
+                cands.iter().copied().filter(|&t| self.nodes[t].0 == fi).collect();
+            if !same_file.is_empty() {
+                return same_file;
+            }
+            return cands;
+        }
+        // -- Type::m / Self::m / path::f -----------------------------
+        if call.segs.len() >= 2 {
+            let prev = &call.segs[call.segs.len() - 2];
+            let prev_ty: Option<String> = if prev == "Self" {
+                it.self_ty.clone().or_else(|| it.trait_name.clone())
+            } else if prev.starts_with(|c: char| c.is_ascii_uppercase()) {
+                Some(prev.clone())
+            } else {
+                None
+            };
+            if let Some(t) = prev_ty {
+                return self.by_ty_method.get(&(t, last.to_string())).cloned().unwrap_or_default();
+            }
+            let suffix: Vec<&str> = call.segs[..call.segs.len() - 1]
+                .iter()
+                .map(String::as_str)
+                .filter(|s| !matches!(*s, "crate" | "super" | "self" | "std"))
+                .collect();
+            let cands = self.by_name.get(last).cloned().unwrap_or_default();
+            if suffix.is_empty() {
+                return cands;
+            }
+            let suffix = suffix.join("::");
+            let tail = format!("::{suffix}");
+            return cands
+                .into_iter()
+                .filter(|&t| {
+                    let m = self.module_of(t);
+                    m == suffix || m.ends_with(&tail)
+                })
+                .collect();
+        }
+        // -- bare name: same file, then same module, then all --------
+        // Only free functions: a bare `next()` can never invoke a
+        // method (methods need `self.` / `Type::`), so a local closure
+        // shadowing a crate method name must not create an edge to it.
+        let mut cands = self.by_name.get(last).cloned().unwrap_or_default();
+        cands.retain(|&t| {
+            let item = self.item_of(t);
+            item.self_ty.is_none() && item.trait_name.is_none()
+        });
+        let same_file: Vec<usize> =
+            cands.iter().copied().filter(|&t| self.nodes[t].0 == fi).collect();
+        if !same_file.is_empty() {
+            return same_file;
+        }
+        let module = &self.files[fi].module;
+        let same_mod: Vec<usize> =
+            cands.iter().copied().filter(|&t| self.module_of(t) == module).collect();
+        if !same_mod.is_empty() {
+            return same_mod;
+        }
+        cands
+    }
+}
+
+/// One syntactic call site.
+#[derive(Debug, PartialEq, Eq)]
+pub struct Call {
+    /// `a::b::f(` → `["a", "b", "f"]`; `x.m(` → `["m"]`.
+    pub segs: Vec<String>,
+    /// `Some(Some(ident))` for `ident.m(` (last receiver ident:
+    /// `self.a.b.m(` → `b`), `Some(None)` for a temporary receiver
+    /// (`….m(` after `)` / `]`), `None` for non-method calls.
+    pub receiver: Option<Option<String>>,
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+fn read_ident_back(chars: &[char], end: usize) -> (usize, String) {
+    let mut s = end;
+    while s > 0 && is_ident_char(chars[s - 1]) {
+        s -= 1;
+    }
+    (s, chars[s..end].iter().collect())
+}
+
+/// Extract the call sites on one scrubbed line.
+pub fn find_calls(line: &str) -> Vec<Call> {
+    let chars: Vec<char> = line.chars().collect();
+    let mut out = Vec::new();
+    for p in 0..chars.len() {
+        if chars[p] != '(' || p == 0 {
+            continue;
+        }
+        let mut e = p;
+        if chars[e - 1] == '!' {
+            continue; // macro invocation — handled as a textual sink
+        }
+        // turbofish: `f::<T>(` — skip the generic args back to `::`
+        if chars[e - 1] == '>' {
+            let mut depth = 0usize;
+            let mut q = e;
+            let mut open = None;
+            while q > 0 {
+                q -= 1;
+                match chars[q] {
+                    '>' => depth += 1,
+                    '<' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            open = Some(q);
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            match open {
+                Some(q) if q >= 2 && chars[q - 1] == ':' && chars[q - 2] == ':' => e = q - 2,
+                _ => continue,
+            }
+        }
+        let (s0, seg0) = read_ident_back(&chars, e);
+        if seg0.is_empty() || seg0.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+            continue;
+        }
+        // `drop(x)` is always `std::mem::drop` — Rust forbids explicit
+        // `Drop::drop` calls — so resolving it to the crate's `fn drop`
+        // impls would wire every value-drop to every destructor. A
+        // destructor edge that matters is declared with `LINT-EDGE:`.
+        if matches!(
+            seg0.as_str(),
+            "if" | "while"
+                | "match"
+                | "for"
+                | "in"
+                | "return"
+                | "loop"
+                | "move"
+                | "fn"
+                | "as"
+                | "drop"
+        ) {
+            continue;
+        }
+        let mut segs = vec![seg0];
+        let mut q = s0;
+        while q >= 2 && chars[q - 1] == ':' && chars[q - 2] == ':' {
+            let (s, seg) = read_ident_back(&chars, q - 2);
+            if seg.is_empty() {
+                break;
+            }
+            segs.push(seg);
+            q = s;
+        }
+        segs.reverse();
+        let receiver = if q >= 1 && chars[q - 1] == '.' && segs.len() == 1 {
+            let before = q - 1;
+            if before > 0 && (chars[before - 1] == ')' || chars[before - 1] == ']') {
+                Some(None) // chained off a temporary
+            } else {
+                let (_, r) = read_ident_back(&chars, before);
+                if r.is_empty() {
+                    Some(None)
+                } else {
+                    Some(Some(r))
+                }
+            }
+        } else {
+            None
+        };
+        out.push(Call { segs, receiver });
+    }
+    out
+}
+
+/// Scan one scrubbed line for `ident: Type` declarations (struct
+/// fields, fn params, `let` annotations) and report
+/// `(ident, outermost-non-wrapper type segment)` pairs.
+fn scan_decls(line: &str, mut f: impl FnMut(&str, &str)) {
+    let chars: Vec<char> = line.chars().collect();
+    for p in 0..chars.len() {
+        if chars[p] != ':' {
+            continue;
+        }
+        // skip `::` paths
+        if p + 1 < chars.len() && chars[p + 1] == ':' {
+            continue;
+        }
+        if p > 0 && chars[p - 1] == ':' {
+            continue;
+        }
+        let (s, ident) = read_ident_back(&chars, p);
+        if ident.is_empty() || ident.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+            continue;
+        }
+        // the ident must start a token (not `foo.bar:` etc.)
+        if s > 0 && (chars[s - 1] == '.' || chars[s - 1] == '\'') {
+            continue;
+        }
+        let rest: String = chars[p + 1..].iter().collect();
+        if let Some(ty) = declared_type(&rest) {
+            f(&ident, &ty);
+        }
+    }
+}
+
+/// First type segment of a declaration tail, wrappers unwrapped:
+/// ` Mutex<HashMap<u64, X>>,` → `HashMap`.
+fn declared_type(s: &str) -> Option<String> {
+    let mut s = s.trim_start();
+    loop {
+        let t = s.trim_start_matches(['&', ' ']);
+        let t = t.strip_prefix("mut ").unwrap_or(t);
+        let t = t.strip_prefix("dyn ").unwrap_or(t);
+        let t = t.strip_prefix("'static ").unwrap_or(t);
+        if t == s {
+            break;
+        }
+        s = t;
+    }
+    // leading path: a::b::Seg — keep only the final segment
+    let mut seg = String::new();
+    let mut rest = s;
+    loop {
+        let this: String =
+            rest.chars().take_while(|c| c.is_alphanumeric() || *c == '_').collect();
+        if this.is_empty() {
+            break;
+        }
+        let after = &rest[this.len()..];
+        if let Some(stripped) = after.strip_prefix("::") {
+            rest = stripped;
+            continue;
+        }
+        seg = this;
+        rest = after;
+        break;
+    }
+    if seg.is_empty() || seg.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        return None;
+    }
+    if WRAPPERS.contains(&seg.as_str()) {
+        if let Some(inner) = rest.strip_prefix('<') {
+            return declared_type(inner);
+        }
+    }
+    Some(seg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parse::parse_file;
+    use super::*;
+
+    fn graph_of(sources: &[(&str, &str)]) -> CallGraph {
+        build(sources.iter().map(|(rel, src)| parse_file(rel, src)).collect())
+    }
+
+    fn node_named(g: &CallGraph, qual_suffix: &str) -> usize {
+        let v = g.find_by_suffix(qual_suffix);
+        assert_eq!(v.len(), 1, "ambiguous or missing {qual_suffix}: {v:?}");
+        v[0]
+    }
+
+    fn callees(g: &CallGraph, n: usize) -> Vec<String> {
+        g.edges[n].iter().map(|&(t, _)| g.item(t).qual.clone()).collect()
+    }
+
+    #[test]
+    fn free_and_module_path_calls_resolve() {
+        let g = graph_of(&[
+            (
+                "src/alpha.rs",
+                "pub fn entry() { helper(); crate::beta::helper(); }\nfn helper() {}\n",
+            ),
+            ("src/beta.rs", "pub fn helper() {}\n"),
+        ]);
+        let n = node_named(&g, "alpha::entry");
+        let c = callees(&g, n);
+        // bare `helper()` prefers the same file; the path call crosses
+        assert_eq!(c, vec!["alpha::helper".to_string(), "beta::helper".to_string()]);
+    }
+
+    #[test]
+    fn shadowed_names_prefer_locals_but_paths_disambiguate() {
+        let g = graph_of(&[
+            ("src/a.rs", "pub fn go() { work(); }\npub fn work() {}\n"),
+            ("src/b.rs", "pub fn work() {}\npub fn go2() { work(); a::work(); }\n"),
+        ]);
+        let c = callees(&g, node_named(&g, "b::go2"));
+        // edges sort by node index: a::work precedes b::work
+        assert_eq!(c, vec!["a::work".to_string(), "b::work".to_string()]);
+    }
+
+    #[test]
+    fn method_receiver_resolution_via_declared_types() {
+        let src = "\
+pub struct Engine { core: Core }
+pub struct Core;
+impl Core {
+    pub fn step(&self) {}
+}
+impl Engine {
+    pub fn tick(&self) {
+        self.core.step();
+        self.helper();
+    }
+    fn helper(&self) {}
+}
+";
+        let g = graph_of(&[("src/m.rs", src)]);
+        let c = callees(&g, node_named(&g, "Engine::tick"));
+        assert_eq!(c, vec!["m::Core::step".to_string(), "m::Engine::helper".to_string()]);
+    }
+
+    #[test]
+    fn trait_impls_index_under_both_names() {
+        let src = "\
+pub trait Mixer {
+    fn token_step(&self);
+}
+pub struct Rec;
+impl Mixer for Rec {
+    fn token_step(&self) {}
+}
+pub struct Holder { mixer: Box<dyn Mixer> }
+impl Holder {
+    pub fn go(&self) {
+        self.mixer.token_step();
+    }
+}
+";
+        let g = graph_of(&[("src/m.rs", src)]);
+        let c = callees(&g, node_named(&g, "Holder::go"));
+        assert_eq!(c, vec!["m::Rec::token_step".to_string()]);
+    }
+
+    #[test]
+    fn deny_list_blocks_untyped_std_names() {
+        let src = "\
+pub struct Q;
+impl Q {
+    pub fn push(&self) {}
+}
+pub fn go(v: &mut Vec<i32>) {
+    v.push(1);
+}
+";
+        let g = graph_of(&[("src/m.rs", src)]);
+        // `v` is declared Vec — no crate impl — and `push` is denied
+        // for the untyped fallback: no edge to Q::push
+        assert!(callees(&g, node_named(&g, "m::go")).is_empty());
+    }
+
+    #[test]
+    fn lint_edge_marker_adds_edges() {
+        let src = "\
+pub fn job_body() {}
+pub fn dispatch(f: fn()) {
+    f(); // LINT-EDGE: job_body
+}
+";
+        let g = graph_of(&[("src/m.rs", src)]);
+        let c = callees(&g, node_named(&g, "m::dispatch"));
+        assert_eq!(c, vec!["m::job_body".to_string()]);
+    }
+
+    #[test]
+    fn bare_calls_never_resolve_to_methods() {
+        let src = "\
+pub struct T;
+impl T {
+    pub fn next(&self) {}
+}
+pub fn go() {
+    let mut next = || 3;
+    next();
+}
+";
+        // a bare `next()` cannot invoke `T::next` (methods need a
+        // receiver), so a local closure shadowing a method name must
+        // not create an edge to it
+        let g = graph_of(&[("src/m.rs", src)]);
+        assert!(callees(&g, node_named(&g, "m::go")).is_empty());
+    }
+
+    #[test]
+    fn drop_calls_are_not_edges() {
+        let src = "\
+pub struct G;
+impl Drop for G {
+    fn drop(&mut self) {}
+}
+pub fn go(g: G) {
+    drop(g);
+}
+";
+        let g = graph_of(&[("src/m.rs", src)]);
+        assert!(callees(&g, node_named(&g, "m::go")).is_empty());
+    }
+
+    #[test]
+    fn untyped_methods_prefer_same_file() {
+        let wire = "\
+pub struct Cursor;
+impl Cursor {
+    pub fn vec_i32(&mut self) {}
+}
+pub fn decode() {
+    let mut cur = Cursor;
+    cur.vec_i32();
+}
+";
+        let prop = "\
+pub struct Gen;
+impl Gen {
+    pub fn vec_i32(&mut self) {}
+}
+";
+        // `cur` has no `ident: Type` declaration anywhere, so this is
+        // the untyped fallback: same-file candidates win
+        let g = graph_of(&[
+            ("src/net/wire.rs", wire),
+            ("src/util/prop.rs", prop),
+            ("src/other.rs", "pub fn kick(x: &mut Unknown) { x.vec_i32(); }\n"),
+        ]);
+        let c = callees(&g, node_named(&g, "wire::decode"));
+        assert_eq!(c, vec!["net::wire::Cursor::vec_i32".to_string()]);
+        // an untyped receiver in a third file still fans out to all
+        let c = callees(&g, node_named(&g, "other::kick"));
+        assert_eq!(c.len(), 2, "{c:?}");
+    }
+
+    #[test]
+    fn cfg_test_fns_are_excluded() {
+        let src = "\
+pub fn runtime() {}
+#[cfg(test)]
+mod tests {
+    pub fn fixture() { super::runtime(); }
+}
+";
+        let g = graph_of(&[("src/m.rs", src)]);
+        assert!(g.find_by_suffix("fixture").is_empty());
+    }
+
+    #[test]
+    fn hash_and_f32_idents_recorded() {
+        let src = "\
+use std::collections::HashMap;
+pub struct S {
+    sessions: crate::util::sync::Mutex<HashMap<u64, u32>>,
+    total: f32,
+}
+";
+        let g = graph_of(&[("src/m.rs", src)]);
+        assert!(g.hash_idents[0].contains("sessions"));
+        assert!(g.f32_idents[0].contains("total"));
+    }
+
+    #[test]
+    fn call_site_extraction_forms() {
+        let calls = find_calls("let x = a.b.m(1) + free(2) + path::f(3) + IT::new(4);");
+        let forms: Vec<(Vec<&str>, Option<Option<&str>>)> = calls
+            .iter()
+            .map(|c| {
+                (
+                    c.segs.iter().map(String::as_str).collect(),
+                    c.receiver.as_ref().map(|r| r.as_deref()),
+                )
+            })
+            .collect();
+        assert_eq!(
+            forms,
+            vec![
+                (vec!["m"], Some(Some("b"))),
+                (vec!["free"], None),
+                (vec!["path", "f"], None),
+                (vec!["IT", "new"], None),
+            ]
+        );
+        // macros and turbofish
+        assert!(find_calls("format!(\"x\")").is_empty());
+        let tf = find_calls("v.collect::<Vec<_>>()");
+        assert_eq!(tf.len(), 1);
+        assert_eq!(tf[0].segs, vec!["collect".to_string()]);
+    }
+}

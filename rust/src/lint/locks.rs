@@ -1,0 +1,610 @@
+//! Static lock-order graph over the `util::sync` facade — the static
+//! complement of the model checker in [`crate::util::chk`], which can
+//! only exercise protocols someone hand-ported.
+//!
+//! A lock is identified as `<file-stem>.<receiver-ident>`: the
+//! `self.state.lock()` in `util/threadpool.rs` is `threadpool.state`.
+//! An acquisition's *hold region* runs from the acquiring line to the
+//! first `drop(<guard>)` of its `let`-bound guard, or to the end of
+//! the enclosing block (brace depth), whichever comes first — an
+//! over-approximation, never an under-approximation, of the guard's
+//! lexical lifetime.
+//!
+//! Within a region of lock `A`, acquiring `B` directly adds the order
+//! edge `A -> B`; calling a function whose transitive lock set
+//! contains `B` adds the same edge (fixpoint over call edges). A
+//! guard-*returning* helper cannot be seen to acquire for its caller,
+//! so it declares itself with `// LINT-LOCK: <name>` next to its
+//! header: call sites are then treated as acquisitions of `<name>` in
+//! the caller, `let`-binding and all.
+//!
+//! Same-lock re-acquisition is *not* an edge (a second `.lock()` after
+//! an implicit guard drop is indistinguishable statically; reentrancy
+//! is the checker's job). The graph is emitted as deterministic JSON
+//! (`--lock-graph`), and any cycle is a `lock-cycle` finding whose
+//! qual is the sorted lock set joined with `+` — suppressible in
+//! `lint_deep.allow` only with a stated reason, like every other rule.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::graph::CallGraph;
+use super::Violation;
+
+pub const RULE_LOCK_CYCLE: &str = "lock-cycle";
+
+/// One order edge: while holding `from`, `to` is acquired at
+/// `file:line` — directly (`via` = the holding function) or through a
+/// call (`via` = the callee whose lock set contains `to`).
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct LockEdge {
+    pub from: String,
+    pub to: String,
+    pub via: String,
+    pub file: String,
+    /// 1-indexed.
+    pub line: usize,
+}
+
+/// The extracted lock-order graph.
+pub struct LockGraph {
+    pub locks: BTreeSet<String>,
+    pub edges: BTreeSet<LockEdge>,
+    /// Each cycle as a lock-name sequence (first element repeated at
+    /// the end is implied, not stored), canonicalized and deduped.
+    pub cycles: Vec<Vec<String>>,
+}
+
+/// One acquisition inside a function body.
+struct Acq {
+    lock: String,
+    /// 0-indexed line within the file.
+    line: usize,
+    /// Brace depth before the acquiring line (region ends when the
+    /// depth drops below this).
+    depth: usize,
+    guard: Option<String>,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+fn ident_before(chars: &[char], end: usize) -> String {
+    let mut s = end;
+    while s > 0 && is_ident(chars[s - 1]) {
+        s -= 1;
+    }
+    chars[s..end].iter().collect()
+}
+
+/// `path/to/threadpool.rs` → `threadpool`.
+fn file_stem(rel: &str) -> &str {
+    let base = rel.rsplit('/').next().unwrap_or(rel);
+    base.strip_suffix(".rs").unwrap_or(base)
+}
+
+/// `let g = …` / `let mut g = …` on the acquiring line binds the
+/// guard; anything else (expression statement, tuple pattern) has no
+/// nameable guard and the region runs to the end of the block.
+fn guard_binding(line: &str) -> Option<String> {
+    let t = line.trim_start();
+    let rest = t.strip_prefix("let ")?;
+    let rest = rest.strip_prefix("mut ").unwrap_or(rest);
+    let g: String = rest.chars().take_while(|c| is_ident(*c)).collect();
+    if g.is_empty() {
+        None
+    } else {
+        Some(g)
+    }
+}
+
+/// Direct `.lock()` acquisitions on one scrubbed line, named by their
+/// receiver ident.
+fn line_acquisitions(line: &str, stem: &str, depth: usize, line_no: usize) -> Vec<Acq> {
+    let chars: Vec<char> = line.chars().collect();
+    let mut out = Vec::new();
+    let pat: Vec<char> = ".lock()".chars().collect();
+    let mut i = 0usize;
+    while i + pat.len() <= chars.len() {
+        if chars[i..i + pat.len()] != pat[..] {
+            i += 1;
+            continue;
+        }
+        let recv = ident_before(&chars, i);
+        if !recv.is_empty() {
+            out.push(Acq {
+                lock: format!("{stem}.{recv}"),
+                line: line_no,
+                depth,
+                guard: guard_binding(line),
+            });
+        }
+        i += pat.len();
+    }
+    out
+}
+
+/// `// LINT-LOCK: name[, name…]` in the function's raw span (header
+/// comment block included): the locks a call to this function leaves
+/// held in its caller.
+fn declared_locks(raw: &[&str], start: usize, end: usize) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut scan = |l: &str| {
+        if let Some(p) = l.find("LINT-LOCK:") {
+            for name in l[p + "LINT-LOCK:".len()..].split(',') {
+                let name: String =
+                    name.trim().chars().take_while(|c| is_ident(*c) || *c == '.').collect();
+                if !name.is_empty() {
+                    out.push(name);
+                }
+            }
+        }
+    };
+    let mut j = start;
+    while j > 0 {
+        j -= 1;
+        let t = raw[j].trim_start();
+        if !t.starts_with("//") && !t.starts_with("#[") {
+            break;
+        }
+        scan(t);
+    }
+    for l in raw.iter().take(end.min(raw.len().saturating_sub(1)) + 1).skip(start) {
+        scan(l);
+    }
+    out
+}
+
+/// Build the lock-order graph over the whole call graph (test code is
+/// already excluded; `util/chk.rs` is skipped — it exists only under
+/// `--cfg model_check`).
+pub fn analyze(g: &CallGraph) -> LockGraph {
+    let skip = |n: usize| g.file_of(n).rel.ends_with("util/chk.rs");
+    // -- phase 1: per-node direct acquisitions + LINT-LOCK decls -----
+    let n_nodes = g.nodes.len();
+    let mut decls: Vec<Vec<String>> = vec![Vec::new(); n_nodes];
+    let mut direct: Vec<Vec<Acq>> = Vec::with_capacity(n_nodes);
+    for n in 0..n_nodes {
+        let f = g.file_of(n);
+        let it = g.item(n);
+        if skip(n) {
+            direct.push(Vec::new());
+            continue;
+        }
+        let code: Vec<&str> = f.scrubbed.lines().collect();
+        let raw: Vec<&str> = f.raw.lines().collect();
+        let stem = file_stem(&f.rel);
+        let hi = it.end_line.min(code.len().saturating_sub(1));
+        let mut acqs = Vec::new();
+        let mut depth = 0usize;
+        for i in it.start_line..=hi {
+            acqs.extend(line_acquisitions(code[i], stem, depth, i));
+            for c in code[i].chars() {
+                match c {
+                    '{' => depth += 1,
+                    '}' => depth = depth.saturating_sub(1),
+                    _ => {}
+                }
+            }
+        }
+        decls[n] = declared_locks(&raw, it.start_line, it.end_line);
+        direct.push(acqs);
+    }
+    // -- phase 2: transitive lock sets (fixpoint over call edges) ----
+    let mut locks_of: Vec<BTreeSet<String>> = (0..n_nodes)
+        .map(|n| {
+            direct[n]
+                .iter()
+                .map(|a| a.lock.clone())
+                .chain(decls[n].iter().cloned())
+                .collect()
+        })
+        .collect();
+    loop {
+        let mut changed = false;
+        for n in 0..n_nodes {
+            if skip(n) {
+                continue;
+            }
+            for &(t, _) in &g.edges[n] {
+                if skip(t) {
+                    continue;
+                }
+                let add: Vec<String> =
+                    locks_of[t].difference(&locks_of[n]).cloned().collect();
+                if !add.is_empty() {
+                    locks_of[n].extend(add);
+                    changed = true;
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    // -- phase 3: hold regions → order edges -------------------------
+    let mut locks: BTreeSet<String> = BTreeSet::new();
+    let mut edges: BTreeSet<LockEdge> = BTreeSet::new();
+    for n in 0..n_nodes {
+        if skip(n) {
+            continue;
+        }
+        let f = g.file_of(n);
+        let it = g.item(n);
+        let code: Vec<&str> = f.scrubbed.lines().collect();
+        let stem = file_stem(&f.rel);
+        let hi = it.end_line.min(code.len().saturating_sub(1));
+        // depth before each line, relative to the fn's first line
+        let mut depth_before: BTreeMap<usize, usize> = BTreeMap::new();
+        let mut d = 0usize;
+        for i in it.start_line..=hi {
+            depth_before.insert(i, d);
+            for c in code[i].chars() {
+                match c {
+                    '{' => d += 1,
+                    '}' => d = d.saturating_sub(1),
+                    _ => {}
+                }
+            }
+        }
+        // acquisitions seen by the caller: direct ones plus calls to
+        // LINT-LOCK helpers
+        let mut acqs: Vec<Acq> = Vec::new();
+        for a in &direct[n] {
+            locks.insert(a.lock.clone());
+            acqs.push(Acq {
+                lock: a.lock.clone(),
+                line: a.line,
+                depth: a.depth,
+                guard: a.guard.clone(),
+            });
+        }
+        for &(t, line) in &g.edges[n] {
+            for l in &decls[t] {
+                locks.insert(l.clone());
+                acqs.push(Acq {
+                    lock: l.clone(),
+                    line,
+                    depth: depth_before.get(&line).copied().unwrap_or(0),
+                    guard: code.get(line).copied().and_then(guard_binding),
+                });
+            }
+        }
+        acqs.sort_by_key(|a| a.line);
+        for a in &acqs {
+            // region end: drop(guard), or depth falling below the
+            // acquisition depth. An acquisition with no `let`-bound
+            // guard is a temporary: it dies with its statement (or,
+            // for an `if let`/`match` scrutinee, with that construct's
+            // block), so its region also ends as soon as the depth
+            // returns *to* the acquisition depth on a later line.
+            let mut end = hi;
+            for i in (a.line + 1)..=hi {
+                let d = depth_before.get(&i).copied().unwrap_or(0);
+                if d < a.depth || (a.guard.is_none() && d <= a.depth) {
+                    end = i.saturating_sub(1);
+                    break;
+                }
+                if let Some(gd) = &a.guard {
+                    if code[i].contains(&format!("drop({gd})")) {
+                        end = i;
+                        break;
+                    }
+                }
+            }
+            // later direct acquisitions inside the region
+            for b in &acqs {
+                if b.line > a.line && b.line <= end && b.lock != a.lock {
+                    edges.insert(LockEdge {
+                        from: a.lock.clone(),
+                        to: b.lock.clone(),
+                        via: it.qual.clone(),
+                        file: f.rel.clone(),
+                        line: b.line + 1,
+                    });
+                }
+            }
+            // calls inside the region whose transitive set locks more
+            for &(t, line) in &g.edges[n] {
+                if line <= a.line || line > end || skip(t) {
+                    continue;
+                }
+                for l in &locks_of[t] {
+                    if *l != a.lock {
+                        locks.insert(l.clone());
+                        edges.insert(LockEdge {
+                            from: a.lock.clone(),
+                            to: l.clone(),
+                            via: g.item(t).qual.clone(),
+                            file: f.rel.clone(),
+                            line: line + 1,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    let cycles = find_cycles(&locks, &edges);
+    LockGraph { locks, edges, cycles }
+}
+
+/// All elementary cycles reachable by DFS back edges, canonicalized
+/// (rotated to start at the smallest name) and deduped.
+fn find_cycles(locks: &BTreeSet<String>, edges: &BTreeSet<LockEdge>) -> Vec<Vec<String>> {
+    let mut adj: BTreeMap<&str, BTreeSet<&str>> = BTreeMap::new();
+    for e in edges {
+        adj.entry(&e.from).or_default().insert(&e.to);
+    }
+    let mut found: BTreeSet<Vec<String>> = BTreeSet::new();
+    for start in locks {
+        let mut on: Vec<&str> = vec![start];
+        dfs(start, &adj, &mut on, &mut found);
+    }
+    found.into_iter().collect()
+}
+
+fn dfs<'a>(
+    u: &'a str,
+    adj: &BTreeMap<&'a str, BTreeSet<&'a str>>,
+    on: &mut Vec<&'a str>,
+    found: &mut BTreeSet<Vec<String>>,
+) {
+    // bounded: lock sets are tiny (≤ tens), so a plain path-DFS is fine
+    let next: Vec<&str> = adj.get(u).map(|s| s.iter().copied().collect()).unwrap_or_default();
+    for v in next {
+        if let Some(pos) = on.iter().position(|&x| x == v) {
+            let cycle: Vec<String> = on[pos..].iter().map(|s| s.to_string()).collect();
+            found.insert(canonical(cycle));
+            continue;
+        }
+        on.push(v);
+        dfs(v, adj, on, found);
+        on.pop();
+    }
+}
+
+/// Rotate the cycle to start at its lexicographically smallest name.
+fn canonical(mut c: Vec<String>) -> Vec<String> {
+    if c.is_empty() {
+        return c;
+    }
+    let min = c.iter().enumerate().min_by_key(|(_, s)| s.as_str()).map(|(i, _)| i).unwrap_or(0);
+    c.rotate_left(min);
+    c
+}
+
+fn json_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+impl LockGraph {
+    /// Deterministic JSON artifact: sorted lock names, sorted edges,
+    /// canonicalized cycles.
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n  \"locks\": [");
+        for (i, l) in self.locks.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            json_str(l, &mut s);
+        }
+        s.push_str("],\n  \"edges\": [");
+        for (i, e) in self.edges.iter().enumerate() {
+            s.push_str(if i > 0 { ",\n    " } else { "\n    " });
+            s.push_str("{\"from\": ");
+            json_str(&e.from, &mut s);
+            s.push_str(", \"to\": ");
+            json_str(&e.to, &mut s);
+            s.push_str(", \"via\": ");
+            json_str(&e.via, &mut s);
+            s.push_str(", \"file\": ");
+            json_str(&e.file, &mut s);
+            s.push_str(&format!(", \"line\": {}}}", e.line));
+        }
+        if !self.edges.is_empty() {
+            s.push_str("\n  ");
+        }
+        s.push_str("],\n  \"cycles\": [");
+        for (i, c) in self.cycles.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            s.push('[');
+            for (j, l) in c.iter().enumerate() {
+                if j > 0 {
+                    s.push_str(", ");
+                }
+                json_str(l, &mut s);
+            }
+            s.push(']');
+        }
+        s.push_str("]\n}\n");
+        s
+    }
+
+    /// One `(qual, Violation)` per cycle. The qual (sorted lock set
+    /// joined with `+`) lets an allowlist entry name a cycle precisely
+    /// if suppression is ever justified; the file/line point at one
+    /// participating edge.
+    pub fn cycle_findings(&self) -> Vec<(String, Violation)> {
+        let mut out = Vec::new();
+        for c in &self.cycles {
+            let mut sorted = c.clone();
+            sorted.sort();
+            let qual = sorted.join("+");
+            let display = {
+                let mut d = c.clone();
+                d.push(c[0].clone());
+                d.join(" -> ")
+            };
+            let at = self
+                .edges
+                .iter()
+                .find(|e| c.contains(&e.from) && c.contains(&e.to))
+                .map(|e| (e.file.clone(), e.line))
+                .unwrap_or_else(|| ("<lock-order>".to_string(), 1));
+            out.push((
+                qual,
+                Violation {
+                    file: at.0,
+                    line: at.1,
+                    rule: RULE_LOCK_CYCLE,
+                    msg: format!(
+                        "lock-order cycle: {display} — two threads taking these in \
+                         different orders can deadlock; impose one global order"
+                    ),
+                },
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::graph::build;
+    use super::super::parse::parse_file;
+    use super::*;
+
+    fn graph_of(sources: &[(&str, &str)]) -> LockGraph {
+        analyze(&build(sources.iter().map(|(rel, src)| parse_file(rel, src)).collect()))
+    }
+
+    #[test]
+    fn cyclic_fixture_is_deterministically_caught() {
+        let src = "\
+impl S {
+    pub fn ab(&self) {
+        let g = self.alpha.lock();
+        let h = self.beta.lock();
+    }
+    pub fn ba(&self) {
+        let g = self.beta.lock();
+        let h = self.alpha.lock();
+    }
+}
+";
+        let lg = graph_of(&[("src/m.rs", src)]);
+        assert_eq!(lg.cycles.len(), 1, "{:?}", lg.cycles);
+        assert_eq!(lg.cycles[0], vec!["m.alpha".to_string(), "m.beta".to_string()]);
+        let f = lg.cycle_findings();
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].0, "m.alpha+m.beta");
+        assert_eq!(f[0].1.rule, RULE_LOCK_CYCLE);
+        // deterministic: same input, same JSON
+        assert_eq!(lg.to_json(), graph_of(&[("src/m.rs", src)]).to_json());
+    }
+
+    #[test]
+    fn transitive_edges_cross_calls() {
+        let src = "\
+impl S {
+    pub fn outer(&self) {
+        let g = self.a.lock();
+        self.inner();
+    }
+    fn inner(&self) {
+        let g = self.b.lock();
+    }
+}
+";
+        let lg = graph_of(&[("src/m.rs", src)]);
+        assert!(lg.cycles.is_empty());
+        let e: Vec<_> =
+            lg.edges.iter().map(|e| (e.from.as_str(), e.to.as_str(), e.via.as_str())).collect();
+        assert_eq!(e, vec![("m.a", "m.b", "m::S::inner")]);
+    }
+
+    #[test]
+    fn drop_and_block_scope_end_regions() {
+        let src = "\
+impl S {
+    pub fn dropped(&self) {
+        let g = self.a.lock();
+        drop(g);
+        let h = self.b.lock();
+    }
+    pub fn scoped(&self) {
+        {
+            let g = self.a.lock();
+        }
+        let h = self.c.lock();
+    }
+}
+";
+        let lg = graph_of(&[("src/m.rs", src)]);
+        assert!(lg.edges.is_empty(), "{:?}", lg.edges);
+    }
+
+    #[test]
+    fn temporary_guards_die_with_their_statement() {
+        // the Runtime::load shape: every guard is a temporary, so no
+        // region overlaps another acquisition and no edges are emitted
+        let src = "\
+impl S {
+    pub fn load(&self) {
+        if let Some(e) = self.cache.lock().get(k) {
+            return;
+        }
+        *self.compile_seconds.lock() += dt;
+        self.cache.lock().insert(k, v);
+    }
+}
+";
+        let lg = graph_of(&[("src/m.rs", src)]);
+        assert!(lg.edges.is_empty(), "{:?}", lg.edges);
+        assert!(lg.cycles.is_empty());
+    }
+
+    #[test]
+    fn lint_lock_helper_counts_as_caller_acquisition() {
+        let src = "\
+impl S {
+    // LINT-LOCK: m.state
+    fn lock_state(&self) -> Guard {
+        self.state.lock()
+    }
+    pub fn caller(&self) {
+        let st = self.lock_state();
+        let q = self.rx.lock();
+    }
+}
+";
+        let lg = graph_of(&[("src/m.rs", src)]);
+        assert!(
+            lg.edges
+                .iter()
+                .any(|e| e.from == "m.state" && e.to == "m.rx" && e.via.ends_with("caller")),
+            "{:?}",
+            lg.edges
+        );
+        assert!(lg.cycles.is_empty());
+    }
+
+    #[test]
+    fn json_shape() {
+        let src = "\
+impl S {
+    pub fn outer(&self) {
+        let g = self.a.lock();
+        let h = self.b.lock();
+    }
+}
+";
+        let j = graph_of(&[("src/m.rs", src)]).to_json();
+        assert!(j.contains("\"locks\": [\"m.a\", \"m.b\"]"), "{j}");
+        assert!(j.contains("\"from\": \"m.a\", \"to\": \"m.b\""), "{j}");
+        assert!(j.contains("\"cycles\": []"), "{j}");
+    }
+}

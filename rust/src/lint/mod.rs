@@ -29,6 +29,31 @@
 //! Suppressions come from an allowlist of `rule path` lines; unused
 //! entries are themselves errors (`stale-allow`), which keeps the debt
 //! ledger honest as call sites are burned down.
+//!
+//! The token-level rules above are the shallow tier. `stlt lint --deep`
+//! layers a call-graph-aware tier on top of the same scrubber:
+//!
+//! * [`parse`] — a dependency-free item parser (fn/impl/mod spans,
+//!   `cfg(test)` awareness) over scrubbed sources.
+//! * [`graph`] — a crate-wide function-level call graph (module-path +
+//!   method-receiver name resolution, `// LINT-EDGE:` escape hatch for
+//!   dyn/fn-pointer edges).
+//! * [`deep`] — reachability rule passes from the declared hot-path
+//!   roots: alloc-free / non-blocking / panic-free decode, and the
+//!   bitwise-determinism rules (no hash-order iteration, no f32
+//!   scalar reductions in `// F64-REDUCE` functions, no wall-clock
+//!   reads feeding tensor math). Ledger: `lint_deep.allow`.
+//! * [`locks`] — a static lock-order graph over the `util::sync`
+//!   facade (which locks are held across calls that acquire others),
+//!   emitted as JSON and failed on cycles — the static complement of
+//!   the model checker in [`crate::util::chk`].
+
+pub mod deep;
+pub mod graph;
+pub mod locks;
+pub mod parse;
+
+pub use deep::run_deep;
 
 use std::fmt;
 use std::fs;

@@ -1,0 +1,491 @@
+//! Dependency-free Rust item parser for the deep lint tier: extracts
+//! `fn` items with their spans, enclosing module path and `impl`
+//! context from a scrubbed source (no syn, no regex — a brace-depth
+//! scanner over the same scrubbed text the shallow rules match on).
+//!
+//! The parser only needs to be right about the constructs this crate
+//! uses: `mod` / `impl Type` / `impl Trait for Type` / `trait` scopes,
+//! attributes (`#[cfg(test)]` / `#[test]` mark an item and everything
+//! inside it as test code, excluded from analysis), and nested items.
+//! Closures are deliberately *not* items: their bodies stay part of
+//! the enclosing function, which is exactly what reachability wants
+//! (a `scatter_rows` job body is analyzed as part of its caller).
+
+use super::scrub;
+
+/// One `fn` item: where it is, what it is called, and the impl/trait
+/// context that method-receiver resolution needs.
+#[derive(Debug, Clone)]
+pub struct FnItem {
+    /// Bare function name (`feed_wave`).
+    pub name: String,
+    /// Module-qualified path (`coordinator::server::ModelThread::feed_wave`).
+    pub qual: String,
+    /// `impl Foo { … }` / `impl Trait for Foo { … }` → `Foo`.
+    pub self_ty: Option<String>,
+    /// `impl Trait for Foo { … }` or a `trait Trait { … }` default
+    /// method → `Trait`.
+    pub trait_name: Option<String>,
+    /// 0-indexed line where the item's header (attrs skipped,
+    /// signature included) begins.
+    pub start_line: usize,
+    /// 0-indexed line of the body's closing `}` (inclusive).
+    pub end_line: usize,
+    /// Under `#[cfg(test)]` / `#[test]` (directly or via an enclosing
+    /// scope): excluded from the call graph and every deep rule.
+    pub is_test: bool,
+}
+
+/// One parsed source file: the scrubbed text (for sink scans) plus the
+/// extracted items.
+#[derive(Debug)]
+pub struct ParsedFile {
+    /// Path as reported in findings (forward slashes).
+    pub rel: String,
+    /// Crate-relative module path (`net::worker`; empty for lib/main).
+    pub module: String,
+    /// Raw text — comments included, for `LINT-EDGE` / `PANIC-OK` /
+    /// `F64-REDUCE` / `LINT-LOCK` marker scans.
+    pub raw: String,
+    pub scrubbed: String,
+    pub fns: Vec<FnItem>,
+}
+
+/// Derive the crate-relative module path from a file path:
+/// `…/src/net/worker.rs` → `net::worker`, `…/src/lint/mod.rs` →
+/// `lint`, `…/src/lib.rs` → `` (crate root).
+pub fn module_path(rel: &str) -> String {
+    let rel = rel.replace('\\', "/");
+    let after = match rel.rfind("src/") {
+        Some(p) => &rel[p + 4..],
+        None => rel.as_str(),
+    };
+    let after = after.strip_suffix(".rs").unwrap_or(after);
+    let after = after.strip_suffix("/mod").unwrap_or(after);
+    if after == "lib" || after == "main" {
+        return String::new();
+    }
+    after.replace('/', "::")
+}
+
+/// Parse one file. `rel` is the reported path (also the module-path
+/// source); `src` is the raw text (scrubbed here, once).
+pub fn parse_file(rel: &str, src: &str) -> ParsedFile {
+    let scrubbed = scrub(src);
+    let module = module_path(rel);
+    let fns = parse_items(&scrubbed, &module);
+    ParsedFile { rel: rel.to_string(), module, raw: src.to_string(), scrubbed, fns }
+}
+
+enum Scope {
+    Mod { name: String, test: bool },
+    Impl { self_ty: Option<String>, trait_name: Option<String> },
+    Fn { idx: usize },
+    Other,
+}
+
+fn parse_items(scrubbed: &str, module: &str) -> Vec<FnItem> {
+    let mut fns: Vec<FnItem> = Vec::new();
+    let mut stack: Vec<Scope> = Vec::new();
+    // Everything since the last `;` / `{` / `}`, newlines flattened to
+    // spaces: when a `{` arrives, this is the item header (attributes
+    // included — which is how `#[cfg(test)]` is seen) that tells us
+    // what kind of scope just opened.
+    let mut header = String::new();
+    let mut header_line = 0usize;
+    let mut line = 0usize;
+    for c in scrubbed.chars() {
+        match c {
+            '\n' => {
+                line += 1;
+                header.push(' ');
+            }
+            ';' => header.clear(),
+            '}' => {
+                header.clear();
+                if let Some(Scope::Fn { idx }) = stack.pop() {
+                    fns[idx].end_line = line;
+                }
+            }
+            '{' => {
+                let scope =
+                    classify_header(header.trim(), header_line, &stack, module, &mut fns);
+                stack.push(scope);
+                header.clear();
+            }
+            _ => {
+                if header.trim().is_empty() && !c.is_whitespace() {
+                    header_line = line;
+                }
+                header.push(c);
+            }
+        }
+    }
+    fns
+}
+
+fn classify_header(
+    raw_header: &str,
+    header_line: usize,
+    stack: &[Scope],
+    module: &str,
+    fns: &mut Vec<FnItem>,
+) -> Scope {
+    let in_test = stack.iter().any(|s| match s {
+        Scope::Mod { test, .. } => *test,
+        Scope::Fn { idx } => fns[*idx].is_test,
+        _ => false,
+    });
+    let own_test = raw_header.contains("#[cfg(test)]")
+        || raw_header.contains("#[cfg(all(test")
+        || raw_header.contains("#[test]");
+    let h = strip_modifiers(strip_attrs(raw_header));
+    if let Some(name) = fn_name(h) {
+        let (self_ty, trait_name) = enclosing_impl(stack);
+        let mut qual = String::new();
+        if !module.is_empty() {
+            qual.push_str(module);
+            qual.push_str("::");
+        }
+        for s in stack {
+            if let Scope::Mod { name, .. } = s {
+                qual.push_str(name);
+                qual.push_str("::");
+            }
+        }
+        if let Some(t) = &self_ty {
+            qual.push_str(t);
+            qual.push_str("::");
+        } else if let Some(t) = &trait_name {
+            qual.push_str(t);
+            qual.push_str("::");
+        }
+        qual.push_str(&name);
+        fns.push(FnItem {
+            name,
+            qual,
+            self_ty,
+            trait_name,
+            start_line: header_line,
+            end_line: header_line,
+            is_test: in_test || own_test,
+        });
+        return Scope::Fn { idx: fns.len() - 1 };
+    }
+    if let Some(rest) = keyword_rest(h, "mod") {
+        return Scope::Mod { name: ident_prefix(rest), test: in_test || own_test };
+    }
+    if let Some(rest) = keyword_rest(h, "impl") {
+        let (self_ty, trait_name) = parse_impl_header(rest);
+        return Scope::Impl { self_ty, trait_name };
+    }
+    if let Some(rest) = keyword_rest(h, "trait") {
+        return Scope::Impl { self_ty: None, trait_name: Some(ident_prefix(rest)) };
+    }
+    Scope::Other
+}
+
+/// The innermost `impl` / `trait` scope, if any.
+fn enclosing_impl(stack: &[Scope]) -> (Option<String>, Option<String>) {
+    for s in stack.iter().rev() {
+        if let Scope::Impl { self_ty, trait_name } = s {
+            return (self_ty.clone(), trait_name.clone());
+        }
+    }
+    (None, None)
+}
+
+/// Skip leading attributes (`#[…]`, `#![…]`, possibly nested brackets).
+fn strip_attrs(mut s: &str) -> &str {
+    loop {
+        s = s.trim_start();
+        if !(s.starts_with("#[") || s.starts_with("#![")) {
+            return s;
+        }
+        let open = match s.find('[') {
+            Some(p) => p,
+            None => return s,
+        };
+        let mut depth = 0usize;
+        let mut end = None;
+        for (i, c) in s[open..].char_indices() {
+            match c {
+                '[' => depth += 1,
+                ']' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        end = Some(open + i + 1);
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        match end {
+            Some(e) => s = &s[e..],
+            None => return s,
+        }
+    }
+}
+
+/// Skip visibility/qualifier words (`pub`, `pub(crate)`, `unsafe`,
+/// `const`, `async`, `extern`, `default`) before the item keyword.
+fn strip_modifiers(mut s: &str) -> &str {
+    loop {
+        s = s.trim_start();
+        let w = s.split_whitespace().next().unwrap_or("");
+        let base = w.split('(').next().unwrap_or("");
+        match base {
+            "pub" | "unsafe" | "const" | "async" | "extern" | "default" if !w.is_empty() => {
+                s = &s[w.len()..];
+            }
+            _ => return s,
+        }
+    }
+}
+
+/// `kw` must open the header (after attrs/modifiers) as a whole word.
+fn keyword_rest<'a>(h: &'a str, kw: &str) -> Option<&'a str> {
+    let rest = h.strip_prefix(kw)?;
+    match rest.chars().next() {
+        None => Some(rest),
+        Some(c) if c.is_alphanumeric() || c == '_' => None,
+        Some(_) => Some(rest),
+    }
+}
+
+/// `fn name…` → `name`.
+fn fn_name(h: &str) -> Option<String> {
+    let rest = keyword_rest(h, "fn")?;
+    let name = ident_prefix(rest);
+    if name.is_empty() {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+/// Leading identifier of `s` (whitespace skipped).
+fn ident_prefix(s: &str) -> String {
+    s.trim_start()
+        .chars()
+        .take_while(|c| c.is_alphanumeric() || *c == '_')
+        .collect()
+}
+
+/// `…` after `impl`: `<'a> Cursor<'a>` → (Some("Cursor"), None);
+/// `Mixer for Recurrence` → (Some("Recurrence"), Some("Mixer")).
+fn parse_impl_header(rest: &str) -> (Option<String>, Option<String>) {
+    let rest = skip_generics(rest.trim_start());
+    // a ` where` clause never precedes the body-opening `{` we were
+    // called for, but cut defensively
+    let rest = match find_word(rest, "where") {
+        Some(p) => &rest[..p],
+        None => rest,
+    };
+    match find_word(rest, "for") {
+        Some(p) => {
+            let tr = last_type_segment(&rest[..p]);
+            let ty = last_type_segment(&rest[p + 3..]);
+            (ty, tr)
+        }
+        None => (last_type_segment(rest), None),
+    }
+}
+
+/// Skip a leading `<…>` generic-parameter list (angle depth counted).
+fn skip_generics(s: &str) -> &str {
+    if !s.starts_with('<') {
+        return s;
+    }
+    let mut depth = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '<' => depth += 1,
+            '>' => {
+                depth -= 1;
+                if depth == 0 {
+                    return &s[i + 1..];
+                }
+            }
+            _ => {}
+        }
+    }
+    s
+}
+
+/// Byte offset of `w` in `s` as a whole word, if present.
+fn find_word(s: &str, w: &str) -> Option<usize> {
+    let mut from = 0usize;
+    while let Some(p) = s[from..].find(w) {
+        let p = from + p;
+        let before_ok =
+            s[..p].chars().next_back().is_none_or(|c| !(c.is_alphanumeric() || c == '_'));
+        let after_ok = s[p + w.len()..]
+            .chars()
+            .next()
+            .is_none_or(|c| !(c.is_alphanumeric() || c == '_'));
+        if before_ok && after_ok {
+            return Some(p);
+        }
+        from = p + w.len();
+    }
+    None
+}
+
+/// The identifying segment of a type expression: strip `&`/`dyn`/`mut`
+/// and generics, take the last `::` path segment.
+/// `crate::wire::Frame<'a>` → `Frame`.
+pub fn last_type_segment(s: &str) -> Option<String> {
+    let mut s = s.trim();
+    loop {
+        let t = s.trim_start_matches(['&', ' ']);
+        let t = t.strip_prefix("mut ").unwrap_or(t);
+        let t = t.strip_prefix("dyn ").unwrap_or(t);
+        if t == s {
+            break;
+        }
+        s = t;
+    }
+    let head = match s.find('<') {
+        Some(p) => &s[..p],
+        None => s,
+    };
+    let seg = head.rsplit("::").next().unwrap_or("").trim();
+    let seg: String = seg.chars().take_while(|c| c.is_alphanumeric() || *c == '_').collect();
+    if seg.is_empty() {
+        None
+    } else {
+        Some(seg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOLDEN: &str = r#"
+pub struct Widget { n: usize }
+
+impl Widget {
+    pub fn poke(&self) -> usize { self.n }
+}
+
+impl std::fmt::Display for Widget {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.n)
+    }
+}
+
+mod inner {
+    pub fn helper() {}
+    mod deeper {
+        pub fn helper() {} // shadowed name, distinct qual
+    }
+}
+
+trait Gadget {
+    fn default_method(&self) -> usize {
+        1
+    }
+}
+
+fn free_standing(x: fn(usize) -> usize) -> usize {
+    let closure = |v: usize| { v + 1 };
+    x(closure(1))
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn a_test() {
+        fn nested_in_test() {}
+        nested_in_test();
+    }
+}
+"#;
+
+    fn names(p: &ParsedFile) -> Vec<(String, bool)> {
+        p.fns.iter().map(|f| (f.qual.clone(), f.is_test)).collect()
+    }
+
+    #[test]
+    fn golden_item_extraction() {
+        let p = parse_file("rust/src/gizmo/widget.rs", GOLDEN);
+        assert_eq!(p.module, "gizmo::widget");
+        let got = names(&p);
+        let want: Vec<(String, bool)> = [
+            ("gizmo::widget::Widget::poke", false),
+            ("gizmo::widget::Widget::fmt", false),
+            ("gizmo::widget::inner::helper", false),
+            ("gizmo::widget::inner::deeper::helper", false),
+            ("gizmo::widget::Gadget::default_method", false),
+            ("gizmo::widget::free_standing", false),
+            ("gizmo::widget::tests::a_test", true),
+            ("gizmo::widget::tests::nested_in_test", true),
+        ]
+        .iter()
+        .map(|(q, t)| (q.to_string(), *t))
+        .collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn impl_trait_for_records_both_sides() {
+        let p = parse_file("src/x.rs", GOLDEN);
+        let fmt = p.fns.iter().find(|f| f.name == "fmt").unwrap();
+        assert_eq!(fmt.self_ty.as_deref(), Some("Widget"));
+        assert_eq!(fmt.trait_name.as_deref(), Some("Display"));
+        let poke = p.fns.iter().find(|f| f.name == "poke").unwrap();
+        assert_eq!(poke.self_ty.as_deref(), Some("Widget"));
+        assert_eq!(poke.trait_name, None);
+        let dm = p.fns.iter().find(|f| f.name == "default_method").unwrap();
+        assert_eq!(dm.self_ty, None);
+        assert_eq!(dm.trait_name.as_deref(), Some("Gadget"));
+    }
+
+    #[test]
+    fn cfg_test_scopes_and_attrs_mark_tests() {
+        // a mid-file model_check module must not poison items after it
+        let src = "fn early() {}\n#[cfg(all(test, model_check))]\nmod model_check {\n    fn inside() {}\n}\nfn late() {}\n";
+        let p = parse_file("src/lib.rs", src);
+        let got = names(&p);
+        assert_eq!(
+            got,
+            vec![
+                ("early".to_string(), false),
+                ("model_check::inside".to_string(), true),
+                ("late".to_string(), false),
+            ]
+        );
+    }
+
+    #[test]
+    fn fn_spans_cover_bodies() {
+        let p = parse_file("src/x.rs", GOLDEN);
+        let free = p.fns.iter().find(|f| f.name == "free_standing").unwrap();
+        let lines: Vec<&str> = p.scrubbed.lines().collect();
+        let body = lines[free.start_line..=free.end_line].join("\n");
+        assert!(body.contains("closure(1)"), "{body}");
+    }
+
+    #[test]
+    fn module_paths() {
+        assert_eq!(module_path("rust/src/net/worker.rs"), "net::worker");
+        assert_eq!(module_path("src/lint/mod.rs"), "lint");
+        assert_eq!(module_path("src/lib.rs"), "");
+        assert_eq!(module_path("src/main.rs"), "");
+    }
+
+    #[test]
+    fn multiline_signatures_and_generics() {
+        let src = "impl<'a, T: Clone> Holder<'a, T> {\n    pub(crate) fn get(\n        &self,\n        k: usize,\n    ) -> &T {\n        &self.items[k]\n    }\n}\n";
+        let p = parse_file("src/x.rs", src);
+        assert_eq!(p.fns.len(), 1);
+        let f = &p.fns[0];
+        assert_eq!(f.name, "get");
+        assert_eq!(f.self_ty.as_deref(), Some("Holder"));
+        assert_eq!(f.start_line, 1, "span starts at the signature");
+        assert_eq!(f.end_line, 6);
+    }
+}

@@ -30,11 +30,17 @@
 //!           fetch a live metrics snapshot (exposition text) from a
 //!           worker or router over the wire protocol
 //!   inspect --artifact NAME [--ckpt PATH]               learned-parameter dump
-//!   lint    [--root DIR]
+//!   lint    [--root DIR] [--deep [--lock-graph FILE]]
 //!           concurrency-hygiene lint over DIR/src (default: `rust`
 //!           when run from the repo root): SAFETY/ORDERING comment
 //!           discipline, unwrap/static-mut bans, std::sync facade
-//!           enforcement — see `stlt::lint`. Exit 1 on violations.
+//!           enforcement — see `stlt::lint`. `--deep` adds the
+//!           call-graph tier: alloc-free / non-blocking / panic-free
+//!           hot paths from the declared roots, bitwise-determinism
+//!           rules, and the static lock-order graph (cycles fail;
+//!           `--lock-graph FILE` writes the graph JSON). Ledgers:
+//!           DIR/lint.allow and DIR/lint_deep.allow. Exit 1 on
+//!           violations.
 //!
 //! Observability: metrics are on by default (`STLT_METRICS=0` to
 //! disable); `--metrics-every N` logs a one-line digest every N seconds
@@ -79,7 +85,8 @@ fn usage() -> String {
      [--sampling greedy|temp:T|topk:K:T|topp:P:T] \
      [--connect ADDR] [--listen ADDR] [--workers ADDR,...] \
      [--max-sessions N] [--queue-cap N] \
-     [--metrics-every N] [--trace FILE]"
+     [--metrics-every N] [--trace FILE] \
+     [--root DIR] [--deep] [--lock-graph FILE]"
         .to_string()
 }
 
@@ -200,26 +207,44 @@ fn load_flat(manifest: &Manifest, artifact: &str, args: &Args) -> Result<Vec<f32
     stlt::runtime::exec::artifact_flat(manifest, artifact)
 }
 
-/// `stlt lint [--root DIR]`: scan DIR/src against the allowlist at
-/// DIR/lint.allow. Dispatched before the manifest loads — linting must
-/// work in a bare checkout with no artifacts.
+/// `stlt lint [--root DIR] [--deep [--lock-graph FILE]]`: scan
+/// DIR/src against the allowlist at DIR/lint.allow. With `--deep`,
+/// additionally run the call-graph tier (`stlt::lint::deep`) against
+/// DIR/lint_deep.allow, writing the lock-order graph JSON to
+/// `--lock-graph FILE` when given. Dispatched before the manifest
+/// loads — linting must work in a bare checkout with no artifacts.
 fn run_lint(args: &Args) -> Result<()> {
     let default_root = if std::path::Path::new("rust/src").is_dir() { "rust" } else { "." };
     let root = std::path::PathBuf::from(args.get_or("root", default_root));
-    let violations =
+    let mut violations =
         stlt::lint::run(&root.join("src"), &root.join("lint.allow")).map_err(|e| anyhow!(e))?;
+    if args.has_flag("deep") {
+        let lock_graph = args.get("lock-graph").map(std::path::PathBuf::from);
+        violations.extend(
+            stlt::lint::run_deep(
+                &root.join("src"),
+                &root.join("lint_deep.allow"),
+                lock_graph.as_deref(),
+            )
+            .map_err(|e| anyhow!(e))?,
+        );
+        if let Some(p) = &lock_graph {
+            println!("lint: lock-order graph written to {}", p.display());
+        }
+    }
     for v in &violations {
         eprintln!("{v}");
     }
     if !violations.is_empty() {
         return Err(anyhow!("lint: {} violation(s) in {}", violations.len(), root.display()));
     }
-    println!("lint: clean ({})", root.join("src").display());
+    let tier = if args.has_flag("deep") { "shallow+deep" } else { "shallow" };
+    println!("lint: clean ({}, {tier})", root.join("src").display());
     Ok(())
 }
 
 fn run() -> Result<()> {
-    let args = Args::from_env(&["verbose"]).map_err(|e| anyhow!(e))?;
+    let args = Args::from_env(&["verbose", "deep"]).map_err(|e| anyhow!(e))?;
     if args.has_flag("verbose") {
         stlt::util::logging::set_level(stlt::util::logging::Level::Debug);
     }

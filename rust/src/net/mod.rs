@@ -37,7 +37,10 @@ pub mod worker;
 
 pub use client::{Client, RemoteSession};
 pub use router::{Router, RouterSession};
-pub use wire::{read_frame, write_frame, EndOutcome, Frame, MAGIC, MAX_FRAME, PROTOCOL_VERSION};
+pub use wire::{
+    read_frame, write_frame, write_frame_buf, EndOutcome, Frame, MAGIC, MAX_FRAME,
+    PROTOCOL_VERSION,
+};
 pub use worker::{spawn_worker, WireServer};
 
 use std::io::{Read, Write};

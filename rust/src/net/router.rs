@@ -166,8 +166,8 @@ impl Router {
             return (0, ids.len());
         }
         let (mut moved, mut failed) = (0, 0);
-        for (i, id) in ids.iter().enumerate() {
-            match self.core.migrate(*id, targets[i % targets.len()]) {
+        for (id, &target) in ids.iter().zip(targets.iter().cycle()) {
+            match self.core.migrate(*id, target) {
                 Ok(()) => moved += 1,
                 Err(e) => {
                     crate::warnlog!("router", "drain: session {id} failed to move: {e:#}");
@@ -195,13 +195,14 @@ impl Router {
             }
             // alive.len() >= 2 here, but prove it to the compiler
             // rather than unwrapping
+            let load_of = |w: usize| loads.get(w).copied().unwrap_or(0);
             let (Some(&max_w), Some(&min_w)) = (
-                alive.iter().max_by_key(|&&w| loads[w]),
-                alive.iter().min_by_key(|&&w| loads[w]),
+                alive.iter().max_by_key(|&&w| load_of(w)),
+                alive.iter().min_by_key(|&&w| load_of(w)),
             ) else {
                 return moved;
             };
-            if loads[max_w] <= loads[min_w] + 1 {
+            if load_of(max_w) <= load_of(min_w) + 1 {
                 return moved;
             }
             let candidates = self.sessions_on(max_w);
@@ -238,7 +239,7 @@ impl RouterCore {
         let start = self.hash_worker(session);
         for i in 0..n {
             let w = (start + i) % n;
-            if self.workers[w].client.is_alive() {
+            if self.workers.get(w).is_some_and(|wk| wk.client.is_alive()) {
                 return Ok(w);
             }
         }
@@ -274,7 +275,12 @@ impl RouterCore {
             // open would be racy, so hold the map lock across it only
             // for explicit ids (allocated ids cannot collide)
         }
-        let remote = self.workers[worker].client.open(id)?;
+        let remote = self
+            .workers
+            .get(worker)
+            .ok_or_else(|| anyhow!("placement probe returned unknown worker {worker}"))?
+            .client
+            .open(id)?;
         let routed = Arc::new(Routed { place: Mutex::new(Placement { worker, remote }) });
         let mut sessions = self.sessions.lock().unwrap_or_else(|e| e.into_inner());
         if sessions.contains_key(&id) {
@@ -302,11 +308,9 @@ impl RouterCore {
     }
 
     fn migrate(&self, session: u64, to: usize) -> Result<()> {
-        if to >= self.workers.len() {
-            bail!("no such worker {to}");
-        }
-        if !self.workers[to].client.is_alive() {
-            bail!("worker {to} ({}) is down", self.workers[to].addr);
+        let dst = self.workers.get(to).ok_or_else(|| anyhow!("no such worker {to}"))?;
+        if !dst.client.is_alive() {
+            bail!("worker {to} ({}) is down", dst.addr);
         }
         let routed = self.routed(session)?;
         let mut place = routed.place.lock().unwrap_or_else(|e| e.into_inner());
@@ -326,7 +330,7 @@ impl RouterCore {
         // (rng_seed ^ session) is what keeps continuations bitwise.
         let mut fresh = {
             let _s = crate::obs::span("router", "migrate_open");
-            self.workers[to].client.open(session)?
+            dst.client.open(session)?
         };
         {
             let _s = crate::obs::span("router", "migrate_import");

@@ -358,14 +358,23 @@ impl Frame {
 /// Write one length-prefixed frame. The caller flushes (the worker's
 /// writer thread coalesces bursts into one flush).
 pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<()> {
-    let _span = crate::obs::span("wire", "frame_encode");
     let mut payload = Vec::with_capacity(64);
-    frame.encode(&mut payload);
+    write_frame_buf(w, frame, &mut payload)
+}
+
+/// [`write_frame`] with a caller-owned encode buffer: `payload` is
+/// cleared and refilled, so a long-lived writer (the worker's writer
+/// thread) pays for one buffer over the whole connection instead of
+/// one per frame.
+pub fn write_frame_buf<W: Write>(w: &mut W, frame: &Frame, payload: &mut Vec<u8>) -> Result<()> {
+    let _span = crate::obs::span("wire", "frame_encode");
+    payload.clear();
+    frame.encode(payload);
     if payload.len() > MAX_FRAME {
         bail!("frame {} exceeds MAX_FRAME ({} > {MAX_FRAME})", frame.name(), payload.len());
     }
     w.write_all(&(payload.len() as u32).to_le_bytes())?;
-    w.write_all(&payload)?;
+    w.write_all(payload)?;
     FRAMES_TX.inc();
     BYTES_TX.add(4 + payload.len() as u64);
     Ok(())
@@ -517,6 +526,8 @@ impl<'a> Cursor<'a> {
                 self.buf.len()
             );
         }
+        // PANIC-OK: the length check above guarantees
+        // off + n <= buf.len(), and off never exceeds buf.len()
         let s = &self.buf[self.off..self.off + n];
         self.off += n;
         Ok(s)

@@ -516,13 +516,17 @@ fn write_loop(stream: Stream, rx: mpsc::Receiver<Frame>) {
     use std::io::Write;
     let mut w = std::io::BufWriter::new(stream);
     let mut dead = false;
+    // one encode buffer for the connection's lifetime: token streams
+    // push a frame per generated token, so per-frame buffers would put
+    // the decode hot path back on the allocator
+    let mut payload: Vec<u8> = Vec::with_capacity(64);
     loop {
         let mut frame = match rx.recv() {
             Ok(f) => f,
             Err(_) => break, // all senders gone
         };
         loop {
-            if !dead && wire::write_frame(&mut w, &frame).is_err() {
+            if !dead && wire::write_frame_buf(&mut w, &frame, &mut payload).is_err() {
                 dead = true;
             }
             match rx.try_recv() {

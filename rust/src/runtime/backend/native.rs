@@ -131,9 +131,7 @@ impl Executable for NativeExec {
 impl NativeExec {
     /// `rest` holds the manifest inputs after the parameter vector.
     fn dispatch(&self, flat: Arc<Vec<f32>>, rest: &[Tensor]) -> Result<Vec<Tensor>> {
-        let model = self
-            .plan
-            .bind(flat)
+        let model = self.plan.bind(flat)
             .with_context(|| format!("binding params for {}", self.entry.name))?;
         match self.entry.kind.as_str() {
             "eval_step" => self.eval_step(model, rest),

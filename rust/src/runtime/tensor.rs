@@ -33,11 +33,15 @@ pub enum Tensor {
 
 impl Tensor {
     pub fn f32(data: Vec<f32>, shape: &[usize]) -> Tensor {
+        // PANIC-OK: constructor contract — a data/shape mismatch is a
+        // caller bug caught at the construction site, not downstream
         assert_eq!(data.len(), shape.iter().product::<usize>().max(1));
         Tensor::F32(data, shape.to_vec())
     }
 
     pub fn i32(data: Vec<i32>, shape: &[usize]) -> Tensor {
+        // PANIC-OK: constructor contract — a data/shape mismatch is a
+        // caller bug caught at the construction site, not downstream
         assert_eq!(data.len(), shape.iter().product::<usize>().max(1));
         Tensor::I32(data, shape.to_vec())
     }

@@ -100,6 +100,8 @@ pub struct BatchMetrics {
 /// `noise` is the step-level Gumbel relaxation (adaptive training);
 /// each row gets an independent stream by hashing its index into the
 /// seed, so the result is also independent of row scheduling.
+///
+/// F64-REDUCE: scalar reductions (nll/reg/s_eff) accumulate in f64.
 pub fn batch_loss_and_grad(
     model: &StltModel,
     tokens: &[i32],
@@ -136,13 +138,13 @@ pub fn batch_loss_and_grad(
     let mut grad: Option<Vec<f32>> = None;
     // all scalar reductions in f64 (satellite fix): f32 running sums
     // drift measurably once rows are 100k tokens long
-    let (mut nll, mut reg, mut s_eff) = (0.0f64, 0.0f64, 0.0f64);
+    let (mut nll, mut reg, mut s_eff_sum) = (0.0f64, 0.0f64, 0.0f64);
     let mut tape_peak = 0usize;
     for r in rows {
         let r = r?;
         nll += r.nll_sum;
         reg += r.reg as f64;
-        s_eff += r.s_eff as f64;
+        s_eff_sum += f64::from(r.s_eff);
         tape_peak = tape_peak.max(r.tape_bytes);
         match &mut grad {
             None => grad = Some(r.grad),
@@ -157,7 +159,7 @@ pub fn batch_loss_and_grad(
     let metrics = BatchMetrics {
         loss: (ce + reg * reg_scale as f64) as f32,
         ce: ce as f32,
-        s_eff: (s_eff * reg_scale as f64) as f32,
+        s_eff: (s_eff_sum * f64::from(reg_scale)) as f32,
         grad_norm: 0.0,
         tape_bytes: tape_peak,
     };

@@ -197,6 +197,9 @@ impl ThreadPool {
     /// form.
     pub fn join(&self) {
         if let Err(e) = self.try_join() {
+            // PANIC-OK: deliberate propagation — a worker already
+            // panicked; rethrowing on the coordinating thread is this
+            // method's documented contract (try_join is the fallible form)
             panic!("{e}");
         }
     }
@@ -262,6 +265,8 @@ where
     }
     pool.join();
     Arc::try_unwrap(results)
+        // PANIC-OK: join() drained every job, so this Arc is the last
+        // reference; a leak here means the pool broke its own contract
         .unwrap_or_else(|_| panic!("pool leak"))
         .into_inner()
         .unwrap()
@@ -347,6 +352,8 @@ pub fn scatter_rows<F>(n: usize, row_len: usize, out: &mut [f32], min_rows: usiz
 where
     F: Fn(usize, usize, &mut [f32]) + Send + Sync,
 {
+    // PANIC-OK: caller contract, checked once at entry so the chunk
+    // splitting below can never overrun `out`
     assert!(out.len() >= n * row_len, "scatter_rows: out too small");
     let threads = configured_threads();
     let pool = global();
@@ -419,6 +426,8 @@ where
     std::mem::forget(guard); // normal path: wait below, collecting panics
     let panics = latch.wait(enqueued.get());
     if !panics.is_empty() {
+        // PANIC-OK: deliberate propagation — a chunk job panicked on a
+        // worker; the unwind must surface on the calling thread
         panic!("{} scatter_rows job(s) panicked: {}", panics.len(), panics.join("; "));
     }
 }

@@ -1,0 +1,185 @@
+//! Integration tests for `stlt lint --deep` (src/lint/deep.rs).
+//!
+//! The first test is the repo's own gate: the committed tree must pass
+//! the deep passes with the committed `lint_deep.allow` ledger and
+//! zero stale entries — the same invariant CI enforces, kept here so
+//! `cargo test` catches a regression before the CI wall does.
+//!
+//! The rest exercise the lock-order pass end to end on synthetic
+//! crates written to a temp dir: a deterministic cycle report + JSON
+//! artifact for an injected ABBA pair, and the stale-ledger failure
+//! mode.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use stlt::lint::deep::{run_deep, RULE_STALE_DEEP};
+use stlt::lint::locks::RULE_LOCK_CYCLE;
+
+fn manifest_path(rel: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join(rel)
+}
+
+/// The committed repo passes its own deep lint: every finding is
+/// ledgered in `lint_deep.allow` with a rationale, and every ledger
+/// entry still suppresses something (no stale debt).
+#[test]
+fn committed_tree_is_clean_under_committed_ledger() {
+    let violations = run_deep(
+        &manifest_path("src"),
+        &manifest_path("lint_deep.allow"),
+        None,
+    )
+    .expect("deep lint ran");
+    assert!(
+        violations.is_empty(),
+        "deep lint found {} violation(s) not covered by lint_deep.allow:\n{}",
+        violations.len(),
+        violations.iter().map(|v| format!("  {v}")).collect::<Vec<_>>().join("\n")
+    );
+}
+
+/// Scratch crate layout for the synthetic tests. Unique per test so
+/// parallel test threads never share a directory.
+struct Fixture {
+    root: PathBuf,
+}
+
+impl Fixture {
+    fn new(tag: &str, files: &[(&str, &str)]) -> Fixture {
+        let root = std::env::temp_dir()
+            .join(format!("stlt_lint_deep_{}_{tag}", std::process::id()));
+        let _ = fs::remove_dir_all(&root);
+        for (rel, src) in files {
+            let p = root.join("src").join(rel);
+            fs::create_dir_all(p.parent().unwrap()).unwrap();
+            fs::write(p, src).unwrap();
+        }
+        Fixture { root }
+    }
+
+    fn src(&self) -> PathBuf {
+        self.root.join("src")
+    }
+}
+
+impl Drop for Fixture {
+    fn drop(&mut self) {
+        let _ = fs::remove_dir_all(&self.root);
+    }
+}
+
+/// Two functions taking the same pair of locks in opposite orders: the
+/// classic ABBA deadlock. The pass must report exactly one
+/// `lock-cycle` violation with the sorted `+`-joined qual, write the
+/// lock-order JSON artifact, and do both bit-identically across runs.
+#[test]
+fn injected_abba_cycle_is_reported_and_json_is_deterministic() {
+    let pair = "\
+pub struct S;
+impl S {
+    pub fn ab(&self) {
+        let a = self.alpha.lock();
+        let b = self.beta.lock();
+        drop(b);
+        drop(a);
+    }
+    pub fn ba(&self) {
+        let b = self.beta.lock();
+        let a = self.alpha.lock();
+        drop(a);
+        drop(b);
+    }
+}
+";
+    let fx = Fixture::new("abba", &[("pair.rs", pair)]);
+    let json_path = fx.root.join("lock_order.json");
+    let allow = fx.root.join("lint_deep.allow"); // absent = empty ledger
+
+    let violations = run_deep(&fx.src(), &allow, Some(&json_path)).expect("deep lint ran");
+    let cycles: Vec<_> = violations.iter().filter(|v| v.rule == RULE_LOCK_CYCLE).collect();
+    assert_eq!(cycles.len(), 1, "expected exactly one lock-cycle, got: {violations:?}");
+    assert!(
+        cycles[0].msg.contains("pair.alpha") && cycles[0].msg.contains("pair.beta"),
+        "cycle names both locks: {}",
+        cycles[0].msg
+    );
+    assert_eq!(
+        violations.len(),
+        1,
+        "the fixture must trip only the lock pass: {violations:?}"
+    );
+
+    let first = fs::read_to_string(&json_path).unwrap();
+    assert!(first.contains("\"locks\": [\"pair.alpha\", \"pair.beta\"]"), "{first}");
+    assert!(
+        first.contains("\"cycles\": [[\"pair.alpha\", \"pair.beta\"]]")
+            || first.contains("\"cycles\": [[\"pair.beta\", \"pair.alpha\"]]"),
+        "cycle missing from artifact: {first}"
+    );
+    assert!(first.contains("\"from\": \"pair.alpha\", \"to\": \"pair.beta\""), "{first}");
+    assert!(first.contains("\"from\": \"pair.beta\", \"to\": \"pair.alpha\""), "{first}");
+
+    // bitwise-deterministic artifact: a second run writes identical bytes
+    let violations2 = run_deep(&fx.src(), &allow, Some(&json_path)).expect("deep lint ran");
+    let second = fs::read_to_string(&json_path).unwrap();
+    assert_eq!(first, second, "lock-order JSON must be deterministic");
+    assert_eq!(
+        violations.len(),
+        violations2.len(),
+        "violation set must be deterministic"
+    );
+}
+
+/// A ledgered cycle is suppressed by its sorted `+`-joined qual — and
+/// only with a rationale; the ledger line must then be counted as
+/// used (no stale report).
+#[test]
+fn ledgered_cycle_is_suppressed_by_sorted_qual() {
+    let pair = "\
+pub fn ab(s: &S) {
+    let a = s.alpha.lock();
+    let b = s.beta.lock();
+}
+pub fn ba(s: &S) {
+    let b = s.beta.lock();
+    let a = s.alpha.lock();
+}
+";
+    let fx = Fixture::new("ledgered", &[("pair.rs", pair)]);
+    let allow = fx.root.join("lint_deep.allow");
+    fs::write(
+        &allow,
+        "lock-cycle pair.alpha+pair.beta -- fixture: order is enforced at the call site\n",
+    )
+    .unwrap();
+    let violations = run_deep(&fx.src(), &allow, None).expect("deep lint ran");
+    assert!(violations.is_empty(), "{violations:?}");
+}
+
+/// A ledger entry that no longer matches any finding fails the lint,
+/// pointing at the allow-file line — the mechanism that makes the
+/// committed ledger shrink-only.
+#[test]
+fn stale_ledger_entry_is_a_violation() {
+    let clean = "pub fn quiet() {}\n";
+    let fx = Fixture::new("stale", &[("quiet.rs", clean)]);
+    let allow = fx.root.join("lint_deep.allow");
+    fs::write(&allow, "# ledger\nhot-alloc Ghost::vanished -- was real in PR 9\n").unwrap();
+    let violations = run_deep(&fx.src(), &allow, None).expect("deep lint ran");
+    assert_eq!(violations.len(), 1, "{violations:?}");
+    assert_eq!(violations[0].rule, RULE_STALE_DEEP);
+    assert_eq!(violations[0].line, 2, "points at the stale ledger line");
+    assert!(violations[0].msg.contains("Ghost::vanished"), "{}", violations[0].msg);
+}
+
+/// A malformed ledger (entry without rationale) is a hard error, not a
+/// silently-ignored line.
+#[test]
+fn ledger_without_rationale_is_rejected() {
+    let fx = Fixture::new("badledger", &[("quiet.rs", "pub fn quiet() {}\n")]);
+    let allow = fx.root.join("lint_deep.allow");
+    fs::write(&allow, "hot-alloc Engine::step\n").unwrap();
+    let err = run_deep(&fx.src(), &allow, None).expect_err("missing rationale must fail");
+    assert!(err.contains("rule qual-suffix -- rationale"), "{err}");
+}
